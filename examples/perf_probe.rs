@@ -1,0 +1,36 @@
+//! §Perf probe: decode-step wall time vs the isolated KV host-upload cost
+//! (EXPERIMENTS.md §Perf item 4).
+use std::sync::Arc;
+use std::time::Instant;
+use dp_llm::evalharness::{build_session, Method};
+use dp_llm::model::{Manifest, ModelAssets};
+use dp_llm::runtime::decode::EstMode;
+use dp_llm::runtime::Runtime;
+
+fn main() {
+    let rt = Arc::new(Runtime::new().unwrap());
+    let assets = ModelAssets::load("dpl-tiny").unwrap();
+    let manifest = Manifest::load().unwrap();
+    let session = build_session(&rt, &assets, &manifest, 5,
+                                &Method::Dpllm { tag: "4.00".into() }).unwrap();
+    let mut kv = session.zero_kv();
+    let sel = session.selector_state();
+    // warm
+    for t in 0..3 {
+        kv = session.step(1, t, &kv, &sel.use_h_async, EstMode::Approx).unwrap().kv;
+    }
+    let n = 20;
+    let t0 = Instant::now();
+    for t in 0..n {
+        kv = session.step(1, t + 3, &kv, &sel.use_h_async, EstMode::Approx).unwrap().kv;
+    }
+    let step_ms = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
+    // isolate kv upload cost
+    let t1 = Instant::now();
+    for _ in 0..n {
+        let _ = rt.upload_f32(&session.cfg.kv_shape(), &kv).unwrap();
+    }
+    let up_ms = t1.elapsed().as_secs_f64() * 1e3 / n as f64;
+    println!("decode step: {step_ms:.2} ms | kv upload alone: {up_ms:.2} ms \
+              ({:.0}% of step, x2 for download side)", up_ms / step_ms * 100.0);
+}

@@ -1,0 +1,48 @@
+//! Precision sweep: the latency↔quality trade-off curve DP-LLM exposes —
+//! perplexity + measured TPOT + modeled Jetson TPOT at each target
+//! precision in the adaptation set, against the static HAWQ-V2 baseline.
+//!
+//!     cargo run --release --example precision_sweep
+
+use std::sync::Arc;
+
+use dp_llm::costmodel::{weight_bytes_at, JETSON_ORIN};
+use dp_llm::evalharness::{build_session, load_stream, perplexity, Method};
+use dp_llm::model::{artifacts_available, Manifest, ModelAssets};
+use dp_llm::runtime::decode::EstMode;
+use dp_llm::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_available() {
+        println!("artifacts not built — run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Arc::new(Runtime::new()?);
+    let assets = ModelAssets::load("dpl-tiny")?;
+    let manifest = Manifest::load()?;
+    let stream = load_stream("synthwiki")?;
+    let tokens: usize = std::env::var("DPLLM_EVAL_TOKENS")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(192);
+
+    println!("{:>7} {:>12} {:>12} {:>10} {:>12}",
+             "target", "dpllm ppl", "hawq ppl", "eff bits", "jetson tpot");
+    for t in [3.25f64, 3.5, 3.75, 4.0, 4.25, 4.5, 4.75] {
+        let dyn_m = Method::Dpllm { tag: format!("{t:.2}") };
+        let sta_m = Method::Static { method: "hawq_v2".into(), target: t };
+        let d = build_session(&rt, &assets, &manifest, 5, &dyn_m)
+            .and_then(|s| perplexity(&s, &stream, 96, tokens, EstMode::Approx));
+        let s = build_session(&rt, &assets, &manifest, 5, &sta_m)
+            .and_then(|s| perplexity(&s, &stream, 96, tokens, EstMode::Approx));
+        let jet = JETSON_ORIN.tpot_ms(weight_bytes_at(&assets.store, t));
+        match (d, s) {
+            (Ok(d), Ok(s)) => println!(
+                "{t:>7.2} {:>12.4} {:>12.4} {:>10.3} {:>10.2}ms",
+                d.ppl, s.ppl, d.effective_bits, jet
+            ),
+            _ => println!("{t:>7.2} (config missing)"),
+        }
+    }
+    println!("\n(dpllm ppl ≤ hawq ppl at each row is the paper's headline claim;");
+    println!(" 'jetson tpot' is the Table-5-fit device model applied to this model)");
+    Ok(())
+}

@@ -1,0 +1,350 @@
+"""AOT export: lower the L2 serving graphs to HLO *text* for the Rust L3.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Exported per model, into ``artifacts/hlo/<model>/``:
+
+  decode_step.hlo.txt     dual-precision DP-LLM decode step (§5, DESIGN §5)
+  prefill_<P>.hlo.txt     prompt ingestion for buckets P ∈ {64, 128, 256}
+  anyprec_gemv_<b>.hlo.txt   standalone L1 bitplane-GEMV kernel (b ∈ 3..6)
+  jl_estimate.hlo.txt     standalone L1 JL-projection estimator kernel
+
+Argument order is positional and recorded in ``artifacts/manifest.json``;
+the Rust runtime trusts that manifest, not guesswork.
+
+Usage: python -m compile.aot --model dpl-tiny
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import io_utils as io
+from .kernels.anyprec_gemv import anyprec_gemv
+from .kernels.estimator import K_PROJ, jl_estimate
+from .model import (ASYNC_GROUPS, GROUPS, ModelConfig, PRESETS,
+                    decode_step_dual, kv_shape, prefill)
+
+PREFILL_BUCKETS = (64, 128, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def u8(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Decode step.
+# ---------------------------------------------------------------------------
+
+
+def decode_arg_specs(cfg: ModelConfig) -> list[tuple[str, object]]:
+    """(name, spec) for every positional argument, in order."""
+    d, v = cfg.d_model, cfg.vocab
+    L = cfg.n_layers
+    hd2 = cfg.head_dim // 2
+    args: list[tuple[str, object]] = [
+        ("token", i32()), ("pos", i32()),
+        ("cos", f32(hd2)), ("sin", f32(hd2)),
+        ("kv", f32(*kv_shape(cfg))),
+        ("tok_emb", f32(v, d)), ("out_head", f32(v, d)),
+        ("final_norm", f32(d)), ("ln1", f32(L, d)), ("ln2", f32(L, d)),
+    ]
+    for pre in ("wl", "wh"):
+        for g in GROUPS:
+            o, i = cfg.group_shape(g)
+            args.append((f"{pre}_{g}", f32(L, o, i)))
+    for g in GROUPS:
+        o, i = cfg.group_shape(g)
+        args.append((f"G_{g}", f32(L, K_PROJ, i)))
+        args.append((f"lina_{g}", f32(L)))
+        args.append((f"linb_{g}", f32(L)))
+        args.append((f"uselin_{g}", f32(L)))
+        args.append((f"thr_{g}", f32(L)))
+    for g in ASYNC_GROUPS:
+        args.append((f"useh_{g}", f32(L)))
+    args.append(("mode_exact", f32()))
+    return args
+
+
+def decode_output_names() -> list[str]:
+    return (["logits", "kv"] + [f"est_{g}" for g in GROUPS]
+            + [f"useh_{g}" for g in GROUPS])
+
+
+def make_decode_fn(cfg: ModelConfig):
+    names = [n for n, _ in decode_arg_specs(cfg)]
+
+    def f(*args):
+        a = dict(zip(names, args))
+        nl = {k: a[k] for k in ("tok_emb", "out_head", "final_norm", "ln1", "ln2")}
+        wl = {g: a[f"wl_{g}"] for g in GROUPS}
+        wh = {g: a[f"wh_{g}"] for g in GROUPS}
+        est = {}
+        for g in GROUPS:
+            for field in ("G", "lina", "linb", "uselin", "thr"):
+                est[f"{field}_{g}"] = a[f"{field}_{g}"]
+        use_async = {g: a[f"useh_{g}"] for g in ASYNC_GROUPS}
+        logits, kv_new, ests, use_eff = decode_step_dual(
+            nl, wl, wh, est, cfg, a["token"], a["pos"], a["cos"], a["sin"],
+            a["kv"], use_async, a["mode_exact"])
+        return (logits, kv_new, *[ests[g] for g in GROUPS],
+                *[use_eff[g] for g in GROUPS])
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Prefill.
+# ---------------------------------------------------------------------------
+
+
+def prefill_arg_specs(cfg: ModelConfig, P: int) -> list[tuple[str, object]]:
+    d, v, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    hd2 = cfg.head_dim // 2
+    args = [
+        ("tokens", i32(P)), ("n_valid", i32()),
+        ("cos", f32(P, hd2)), ("sin", f32(P, hd2)),
+        ("tok_emb", f32(v, d)), ("out_head", f32(v, d)),
+        ("final_norm", f32(d)), ("ln1", f32(L, d)), ("ln2", f32(L, d)),
+    ]
+    for g in GROUPS:
+        o, i = cfg.group_shape(g)
+        args.append((f"w_{g}", f32(L, o, i)))
+    return args
+
+
+def make_prefill_fn(cfg: ModelConfig, P: int):
+    names = [n for n, _ in prefill_arg_specs(cfg, P)]
+
+    def f(*args):
+        a = dict(zip(names, args))
+        nl = {k: a[k] for k in ("tok_emb", "out_head", "final_norm", "ln1", "ln2")}
+        lin = {g: a[f"w_{g}"] for g in GROUPS}
+        return prefill(nl, lin, cfg, a["tokens"], a["n_valid"], a["cos"], a["sin"])
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Standalone kernel entry points (L1 microbench + faithful-memory path).
+# ---------------------------------------------------------------------------
+
+
+def kernel_specs(cfg: ModelConfig, bits: int):
+    # Exported at the model's attention-projection shape.
+    o, i = cfg.group_shape("wq")
+    return [("planes", u8(6, o, i // 8)), ("lut", f32(o, 2 ** bits)),
+            ("x", f32(i))]
+
+
+# ---------------------------------------------------------------------------
+# Golden vectors: the Rust runtime's integration test executes the HLO
+# artifact and compares against these jax-computed outputs byte-for-byte
+# (within float tolerance) — the cross-language L2→L3 contract.
+# ---------------------------------------------------------------------------
+
+
+def golden_decode_arrays(cfg: ModelConfig, params: dict, token: int = 3,
+                         pos: int = 5, seed: int = 7) -> dict:
+    """Build one decode-step input set (wl ≠ wh, active estimators and mixed
+    thresholds so the selection logic is exercised) + expected outputs."""
+    import numpy as np
+    from .model import extract_linears, nonlinear_params
+
+    rng = np.random.default_rng(seed)
+    nl = nonlinear_params(params)
+    lin = extract_linears(params)
+    hd = cfg.head_dim
+    inv = 1.0 / (10000.0 ** (np.arange(0, hd, 2) / hd))
+    vals = {
+        "token": np.int32(token), "pos": np.int32(pos),
+        "cos": np.cos(pos * inv).astype(np.float32),
+        "sin": np.sin(pos * inv).astype(np.float32),
+        "kv": rng.standard_normal(kv_shape(cfg)).astype(np.float32) * 0.01,
+        "tok_emb": np.asarray(nl["tok_emb"]),
+        "out_head": np.asarray(nl["out_head"]),
+        "final_norm": np.asarray(nl["final_norm"]),
+        "ln1": np.asarray(nl["ln1"]), "ln2": np.asarray(nl["ln2"]),
+        "mode_exact": np.float32(0.0),
+    }
+    L = cfg.n_layers
+    for g in GROUPS:
+        o, i = cfg.group_shape(g)
+        w = np.asarray(lin[g])
+        vals[f"wl_{g}"] = (w * 0.9).astype(np.float32)
+        vals[f"wh_{g}"] = w
+        vals[f"G_{g}"] = (rng.standard_normal((L, K_PROJ, i)) * 0.05
+                          ).astype(np.float32)
+        vals[f"lina_{g}"] = rng.random(L).astype(np.float32)
+        vals[f"linb_{g}"] = rng.random(L).astype(np.float32) * 0.1
+        vals[f"uselin_{g}"] = (rng.random(L) < 0.5).astype(np.float32)
+        vals[f"thr_{g}"] = (rng.random(L) * 0.5).astype(np.float32)
+    for g in ASYNC_GROUPS:
+        vals[f"useh_{g}"] = (rng.random(L) < 0.5).astype(np.float32)
+
+    names = [n for n, _ in decode_arg_specs(cfg)]
+    outs = jax.jit(make_decode_fn(cfg))(*[jnp.asarray(vals[n]) for n in names])
+    arrays = {f"in_{n}": vals[n] for n in names}
+    import numpy as _np
+    for name, o in zip(decode_output_names(), outs):
+        arrays[f"out_{name}"] = _np.asarray(o)
+    return arrays
+
+
+def golden_prefill_arrays(cfg: ModelConfig, params: dict, P: int = 64,
+                          n_valid: int = 9, seed: int = 11) -> dict:
+    import numpy as np
+    from .model import extract_linears, nonlinear_params, prefill
+
+    rng = np.random.default_rng(seed)
+    nl = nonlinear_params(params)
+    lin = extract_linears(params)
+    tokens = rng.integers(0, cfg.vocab, size=P).astype(np.int32)
+    hd = cfg.head_dim
+    inv = 1.0 / (10000.0 ** (np.arange(0, hd, 2) / hd))
+    ang = np.arange(P)[:, None] * inv[None, :]
+    vals = {"tokens": tokens, "n_valid": np.int32(n_valid),
+            "cos": np.cos(ang).astype(np.float32),
+            "sin": np.sin(ang).astype(np.float32),
+            "tok_emb": np.asarray(nl["tok_emb"]),
+            "out_head": np.asarray(nl["out_head"]),
+            "final_norm": np.asarray(nl["final_norm"]),
+            "ln1": np.asarray(nl["ln1"]), "ln2": np.asarray(nl["ln2"])}
+    for g in GROUPS:
+        vals[f"w_{g}"] = np.asarray(lin[g])
+    names = [n for n, _ in prefill_arg_specs(cfg, P)]
+    logits, kv = jax.jit(make_prefill_fn(cfg, P))(
+        *[jnp.asarray(vals[n]) for n in names])
+    arrays = {f"in_{n}": vals[n] for n in names}
+    arrays["out_logits_last"] = np.asarray(logits)
+    arrays["out_kv"] = np.asarray(kv)
+    return arrays
+
+
+def export_golden(name: str) -> None:
+    from . import io_utils as _io
+    cfg = PRESETS[name]
+    ckpt = io.load_npz(io.art("models", name, "ckpt.npz"))
+    params = {k: jnp.asarray(v) for k, v in ckpt.items()}
+    arrays = golden_decode_arrays(cfg, params)
+    _io.save_npz(io.art("hlo", name, "golden_decode.npz"), arrays)
+    _io.save_npz(io.art("hlo", name, "golden_prefill.npz"),
+                 golden_prefill_arrays(cfg, params))
+    print(f"[aot:{name}] golden vectors", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Export driver.
+# ---------------------------------------------------------------------------
+
+
+def export_model(name: str) -> dict:
+    cfg = PRESETS[name]
+    outdir = ("hlo", name)
+    entry: dict = {"model": name, "config": cfg.to_json(), "entries": {}}
+
+    # decode step
+    specs = decode_arg_specs(cfg)
+    lowered = jax.jit(make_decode_fn(cfg)).lower(*[s for _, s in specs])
+    path = io.art(*outdir, "decode_step.hlo.txt")
+    with open(path, "w") as fh:
+        fh.write(to_hlo_text(lowered))
+    entry["entries"]["decode_step"] = {
+        "path": os.path.relpath(path, io.ART),
+        "args": [n for n, _ in specs],
+        "outputs": decode_output_names(),
+        "k_proj": K_PROJ,
+    }
+    print(f"[aot:{name}] decode_step ({os.path.getsize(path) / 1e3:.0f} kB)",
+          flush=True)
+
+    # prefill buckets
+    for P in PREFILL_BUCKETS:
+        specs = prefill_arg_specs(cfg, P)
+        lowered = jax.jit(make_prefill_fn(cfg, P)).lower(*[s for _, s in specs])
+        path = io.art(*outdir, f"prefill_{P}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(to_hlo_text(lowered))
+        entry["entries"][f"prefill_{P}"] = {
+            "path": os.path.relpath(path, io.ART),
+            "args": [n for n, _ in specs],
+            "outputs": ["logits_last", "kv"],
+        }
+        print(f"[aot:{name}] prefill_{P}", flush=True)
+
+    # standalone kernels
+    for bits in (3, 4, 5, 6):
+        specs = kernel_specs(cfg, bits)
+        fn = lambda planes, lut, x, _b=bits: (anyprec_gemv(planes, lut, x, _b),)
+        lowered = jax.jit(fn).lower(*[s for _, s in specs])
+        path = io.art(*outdir, f"anyprec_gemv_{bits}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(to_hlo_text(lowered))
+        entry["entries"][f"anyprec_gemv_{bits}"] = {
+            "path": os.path.relpath(path, io.ART),
+            "args": [n for n, _ in specs],
+            "outputs": ["y"],
+            "bits": bits,
+        }
+    o, i = cfg.group_shape("wq")
+    fn = lambda G, x: (jl_estimate(G, x),)
+    lowered = jax.jit(fn).lower(f32(K_PROJ, i), f32(i))
+    path = io.art(*outdir, "jl_estimate.hlo.txt")
+    with open(path, "w") as fh:
+        fh.write(to_hlo_text(lowered))
+    entry["entries"]["jl_estimate"] = {
+        "path": os.path.relpath(path, io.ART),
+        "args": ["G", "x"],
+        "outputs": ["norm"],
+    }
+    print(f"[aot:{name}] kernels", flush=True)
+    if os.path.exists(io.art("models", name, "ckpt.npz")):
+        export_golden(name)
+        entry["entries"]["golden_decode"] = {
+            "path": os.path.join("hlo", name, "golden_decode.npz")}
+    return entry
+
+
+def update_manifest(entries: list[dict]) -> None:
+    path = io.art("manifest.json")
+    manifest = io.load_json(path) if os.path.exists(path) else {"models": {}}
+    for e in entries:
+        manifest["models"][e["model"]] = e
+    io.save_json(path, manifest)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="dpl-tiny")
+    ap.add_argument("--out", default="", help="(compat) unused")
+    args = ap.parse_args()
+    names = sorted(PRESETS) if args.model == "all" else [args.model]
+    update_manifest([export_model(n) for n in names])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,448 @@
+"""Synthetic corpus and downstream-task generators.
+
+The paper evaluates on WikiText2/C4 (perplexity) and GSM8K/MBPP/BBH/MATH
+(decoding-heavy downstream tasks).  None of those are downloadable in this
+sandbox, so we substitute deterministic generators that preserve the
+properties the experiments actually measure (see DESIGN.md §2):
+
+  * ``synthwiki`` — clean, encyclopedic, templated text with long-range
+    entity/attribute consistency (WikiText2 analog).
+  * ``synthweb``  — noisier, mixed-register text: reviews, forum posts,
+    how-tos, classifieds (C4 analog, distribution-shifted from synthwiki
+    so the Table-14 calibration-transfer study is meaningful).
+  * ``arith``     — one/two-step arithmetic word problems ending in
+    ``#### <n>`` (GSM8K analog, exact-match on the final number).
+  * ``listfn``    — tiny list-transformation programs (MBPP analog,
+    exact-match on the output list).
+  * ``dates``     — weekday/offset multiple-choice questions (BBH analog,
+    exact-match on the option letter).
+  * ``algebra``   — linear equations ``ax + b = c`` (MATH analog,
+    exact-match on the solution).
+  * ``instruct``  — instruction-following prompts with length-varied
+    responses (Alpaca analog, used only for the per-query QoS study).
+
+All generators are seeded and split train/eval disjointly (eval parameter
+tuples never appear in train).  Task data is mixed into pre-training so the
+tiny models genuinely acquire the tasks; quantization then degrades them
+gracefully, which is the gradient Tables 1/2 measure.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Vocabulary pools (all synthetic, deterministic).
+# ---------------------------------------------------------------------------
+
+_SYL_A = ["ka", "mo", "ri", "ta", "ve", "lu", "sa", "ne", "do", "pi", "ga", "zu"]
+_SYL_B = ["ran", "bel", "mir", "dor", "lin", "vas", "ker", "nol", "tis", "mar"]
+
+FIRST_NAMES = [
+    "Mara", "Jon", "Tessa", "Rafi", "Lena", "Theo", "Nadia", "Owen", "Priya",
+    "Carl", "Ines", "Bram", "Sofia", "Dmitri", "Hana", "Felix", "Ruth", "Omar",
+    "Greta", "Ivo", "June", "Kofi", "Lars", "Mina", "Nils", "Okto", "Pema",
+    "Quin", "Rosa", "Stig", "Tova", "Ugo", "Vera", "Wim", "Xena", "Yara", "Zeno",
+]
+
+OBJECTS = [
+    "plums", "coins", "marbles", "books", "apples", "stamps", "shells",
+    "pencils", "tokens", "cards", "stones", "beads", "tickets", "acorns",
+]
+
+PROFESSIONS = [
+    "cartographer", "glassblower", "archivist", "botanist", "ferry pilot",
+    "clockmaker", "surveyor", "printer", "weaver", "astronomer", "miller",
+    "engraver", "apiarist", "stonemason",
+]
+
+EXPORTS = [
+    "river salt", "blue ceramics", "pressed olives", "copper wire",
+    "dried figs", "woven flax", "cedar planks", "glass lenses",
+    "iron tools", "paper reels", "wool cloth", "honey wax",
+]
+
+REGIONS = [
+    "the northern plateau", "the delta lowlands", "the eastern foothills",
+    "the lake district", "the coastal terraces", "the inland basin",
+    "the southern ridge", "the high moor",
+]
+
+CLIMATES = [
+    "mild and wet", "dry and windy", "cold in winter and bright in summer",
+    "foggy for much of the year", "warm with short rains", "temperate",
+]
+
+LANDMARKS = [
+    "stone bridge", "tide mill", "old granary", "signal tower", "salt market",
+    "round library", "cliff stair", "river gate", "twin aqueduct", "sun dial",
+]
+
+ADJ_REVIEW = [
+    "sturdy", "flimsy", "bright", "quiet", "heavy", "compact", "reliable",
+    "awkward", "smooth", "rough", "cheap", "well made", "fragile", "fast",
+]
+
+PRODUCTS = [
+    "kettle", "lamp", "backpack", "keyboard", "bicycle pump", "thermos",
+    "notebook", "headset", "tripod", "wall clock", "door hinge", "rain coat",
+]
+
+WEEKDAYS = [
+    "Monday", "Tuesday", "Wednesday", "Thursday", "Friday", "Saturday", "Sunday",
+]
+
+_SPELLED = {
+    1: "one", 2: "two", 3: "three", 4: "four", 5: "five", 6: "six",
+}
+
+
+def _entity_name(rng: np.random.Generator) -> str:
+    """A synthetic proper noun like 'Kamodor' or 'Velumir'."""
+    n = rng.integers(1, 3)
+    name = "".join(rng.choice(_SYL_A) for _ in range(n)) + str(rng.choice(_SYL_B))
+    return name.capitalize()
+
+
+# ---------------------------------------------------------------------------
+# synthwiki — encyclopedic articles about towns with consistent facts.
+# ---------------------------------------------------------------------------
+
+
+def _town_article(rng: np.random.Generator) -> str:
+    name = _entity_name(rng)
+    region = rng.choice(REGIONS)
+    pop = int(rng.integers(2, 95)) * 1000
+    founded = int(rng.integers(1100, 1900))
+    export = rng.choice(EXPORTS)
+    climate = rng.choice(CLIMATES)
+    landmark = rng.choice(LANDMARKS)
+    prof = rng.choice(PROFESSIONS)
+    person = rng.choice(FIRST_NAMES)
+
+    s = []
+    s.append(
+        f"{name} is a town in {region} with a population of about {pop}."
+    )
+    s.append(f"It was founded in {founded} and is known for {export}.")
+    s.append(f"The climate of {name} is {climate}.")
+    s.append(
+        f"The best known landmark of {name} is the {landmark}, which stands "
+        f"near the centre of the town."
+    )
+    s.append(
+        f"Trade in {export} made {name} an important stop on the routes of "
+        f"{region}."
+    )
+    if rng.random() < 0.6:
+        s.append(
+            f"{person} the {prof}, born in {name} in {founded + int(rng.integers(30, 300))}, "
+            f"wrote an early account of the {landmark}."
+        )
+    if rng.random() < 0.5:
+        s.append(
+            f"Today the population of {name} is close to {pop}, and {export} "
+            f"remains the main trade."
+        )
+    rng.shuffle(s[2:])
+    return " ".join(s)
+
+
+def gen_synthwiki(rng: np.random.Generator, n_articles: int) -> str:
+    parts = [_town_article(rng) for _ in range(n_articles)]
+    return "\n\n".join(parts) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# synthweb — noisy mixed-register text.
+# ---------------------------------------------------------------------------
+
+
+def _review(rng: np.random.Generator) -> str:
+    prod = rng.choice(PRODUCTS)
+    adj1, adj2 = rng.choice(ADJ_REVIEW, size=2, replace=False)
+    stars = int(rng.integers(1, 6))
+    name = rng.choice(FIRST_NAMES)
+    t = [
+        f"{stars} stars. The {prod} is {adj1} but a bit {adj2}.",
+        f"review by {name}: bought this {prod} last month, it is {adj1}.",
+        f"would i buy the {prod} again? {'yes' if stars >= 3 else 'no'}, "
+        f"it is {adj1} and the price was fair.",
+    ]
+    return str(rng.choice(t))
+
+
+def _forum(rng: np.random.Generator) -> str:
+    a, b = rng.choice(FIRST_NAMES, size=2, replace=False)
+    prod = rng.choice(PRODUCTS)
+    k = int(rng.integers(2, 9))
+    return (
+        f"{a}: has anyone tried fixing a {prod} with tape?\n"
+        f"{b}: yes, mine held for {k} weeks. use two layers.\n"
+        f"{a}: thanks, will try that."
+    )
+
+
+def _howto(rng: np.random.Generator) -> str:
+    prod = rng.choice(PRODUCTS)
+    steps = int(rng.integers(3, 6))
+    lines = [f"how to clean a {prod} in {steps} steps:"]
+    verbs = ["rinse", "wipe", "dry", "check", "oil", "tighten", "dust"]
+    chosen = rng.choice(verbs, size=steps, replace=False)
+    for i in range(steps):
+        lines.append(f"step {i + 1}: {chosen[i]} the {prod} carefully.")
+    return "\n".join(lines)
+
+
+def _classified(rng: np.random.Generator) -> str:
+    prod = rng.choice(PRODUCTS)
+    price = int(rng.integers(3, 80))
+    name = rng.choice(FIRST_NAMES)
+    return (
+        f"for sale: used {prod}, {rng.choice(ADJ_REVIEW)}, {price} crowns. "
+        f"contact {name.lower()} after six."
+    )
+
+
+def gen_synthweb(rng: np.random.Generator, n_docs: int) -> str:
+    gens = [_review, _forum, _howto, _classified]
+    parts = []
+    for _ in range(n_docs):
+        g = gens[int(rng.integers(0, len(gens)))]
+        parts.append(g(rng))
+    return "\n\n".join(parts) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# Tasks.  Each generator returns (prompt, answer, full_text) where
+# full_text = prompt + answer is what goes into the training mix and the
+# eval harness checks `answer` via task-specific exact matching.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TaskSample:
+    task: str
+    prompt: str
+    answer: str
+
+    @property
+    def text(self) -> str:
+        return self.prompt + self.answer
+
+
+def _arith_sample(rng: np.random.Generator) -> TaskSample:
+    name = rng.choice(FIRST_NAMES)
+    other = rng.choice([n for n in FIRST_NAMES if n != name])
+    obj = rng.choice(OBJECTS)
+    a = int(rng.integers(2, 60))
+    b = int(rng.integers(2, 40))
+    kind = int(rng.integers(0, 3))
+    if kind == 0:
+        q = (
+            f"Question: {name} has {a} {obj}. {other} gives {name} {b} more. "
+            f"How many {obj} does {name} have?"
+        )
+        work = f"{a} + {b} = {a + b}."
+        ans = a + b
+    elif kind == 1:
+        a = max(a, b + 1)
+        q = (
+            f"Question: {name} has {a} {obj}. {name} gives {b} {obj} to {other}. "
+            f"How many {obj} are left?"
+        )
+        work = f"{a} - {b} = {a - b}."
+        ans = a - b
+    else:
+        c = int(rng.integers(2, 20))
+        q = (
+            f"Question: {name} has {a} {obj}. {other} gives {name} {b} more, "
+            f"then {name} loses {c}. How many {obj} does {name} have?"
+        )
+        work = f"{a} + {b} = {a + b}. {a + b} - {c} = {a + b - c}."
+        ans = a + b - c
+    prompt = q + "\nAnswer: "
+    answer = f"{work} #### {ans}"
+    return TaskSample("arith", prompt, answer)
+
+
+_LIST_OPS = ["add", "double", "reverse", "first", "last", "count"]
+
+
+def _listfn_sample(rng: np.random.Generator) -> TaskSample:
+    op = str(rng.choice(_LIST_OPS))
+    n = int(rng.integers(2, 5))
+    xs = [int(v) for v in rng.integers(1, 20, size=n)]
+    xs_s = " ".join(str(v) for v in xs)
+    if op == "add":
+        k = int(rng.integers(1, 6))
+        desc = f"add {k} to each item"
+        out = " ".join(str(v + k) for v in xs)
+    elif op == "double":
+        desc = "double each item"
+        out = " ".join(str(2 * v) for v in xs)
+    elif op == "reverse":
+        desc = "reverse the list"
+        out = " ".join(str(v) for v in reversed(xs))
+    elif op == "first":
+        desc = "take the first item"
+        out = str(xs[0])
+    elif op == "last":
+        desc = "take the last item"
+        out = str(xs[-1])
+    else:
+        desc = "count the items"
+        out = str(len(xs))
+    prompt = f"Task: {desc}. Input: {xs_s}. Output: "
+    return TaskSample("listfn", prompt, out)
+
+
+def _dates_sample(rng: np.random.Generator) -> TaskSample:
+    start = int(rng.integers(0, 7))
+    off = int(rng.integers(1, 7))
+    fwd = bool(rng.integers(0, 2))
+    correct = WEEKDAYS[(start + (off if fwd else -off)) % 7]
+    direction = "after" if fwd else "before"
+    off_word = _SPELLED[off]
+    # Three options, one correct, stable letters.
+    wrong = [d for d in WEEKDAYS if d != correct]
+    rng.shuffle(wrong)
+    opts = [correct, wrong[0], wrong[1]]
+    rng.shuffle(opts)
+    letters = ["A", "B", "C"]
+    right = letters[opts.index(correct)]
+    opt_s = " ".join(f"({letter}) {day}" for letter, day in zip(letters, opts))
+    prompt = (
+        f"Question: which day comes {off_word} days {direction} {WEEKDAYS[start]}? "
+        f"Options: {opt_s}. Answer: "
+    )
+    return TaskSample("dates", prompt, f"({right})")
+
+
+def _algebra_sample(rng: np.random.Generator) -> TaskSample:
+    a = int(rng.integers(1, 6))
+    x = int(rng.integers(1, 15))
+    b = int(rng.integers(0, 20))
+    c = a * x + b
+    if a == 1:
+        lhs = f"x + {b}" if b else "x"
+    else:
+        lhs = f"{a}x + {b}" if b else f"{a}x"
+    steps = []
+    if b:
+        steps.append(f"{a}x = {c} - {b} = {a * x}." if a != 1 else f"x = {c} - {b} = {x}.")
+    if a != 1:
+        steps.append(f"x = {a * x} / {a} = {x}.")
+    if not steps:
+        steps.append(f"x = {x}.")
+    prompt = f"Solve: {lhs} = {c}.\nSolution: "
+    answer = " ".join(steps) + f" x = {x}"
+    return TaskSample("algebra", prompt, answer)
+
+
+def _instruct_sample(rng: np.random.Generator) -> TaskSample:
+    kind = int(rng.integers(0, 4))
+    if kind == 0:
+        town = _entity_name(rng)
+        prompt = f"Instruction: describe the town of {town}.\nResponse: "
+        body = _town_article(rng).replace(town, town, 1)
+        answer = body
+    elif kind == 1:
+        prod = rng.choice(PRODUCTS)
+        prompt = f"Instruction: write a short review of a {prod}.\nResponse: "
+        answer = _review(rng)
+    elif kind == 2:
+        prod = rng.choice(PRODUCTS)
+        prompt = f"Instruction: explain how to clean a {prod}.\nResponse: "
+        answer = _howto(rng)
+    else:
+        obj = rng.choice(OBJECTS)
+        n = int(rng.integers(3, 8))
+        prompt = f"Instruction: list {n} uses for {obj}.\nResponse: "
+        uses = ["trading", "counting", "decorating", "sorting games",
+                "teaching sums", "marking paths", "weighing scales", "gifts"]
+        rng.shuffle(uses)
+        answer = " ".join(f"{i + 1}. {u}." for i, u in enumerate(uses[:n]))
+    return TaskSample("instruct", prompt, answer)
+
+
+_TASK_GENS = {
+    "arith": _arith_sample,
+    "listfn": _listfn_sample,
+    "dates": _dates_sample,
+    "algebra": _algebra_sample,
+    "instruct": _instruct_sample,
+}
+
+TASKS = tuple(t for t in _TASK_GENS if t != "instruct")
+
+
+def gen_task_samples(task: str, rng: np.random.Generator, n: int) -> list[TaskSample]:
+    g = _TASK_GENS[task]
+    return [g(rng) for _ in range(n)]
+
+
+def _dedup_key(s: TaskSample) -> str:
+    return hashlib.sha1(s.prompt.encode()).hexdigest()
+
+
+def gen_task_split(task: str, seed: int, n_train: int, n_eval: int):
+    """Disjoint train/eval task samples (eval prompts never seen in train)."""
+    rng = np.random.default_rng(seed)
+    train = gen_task_samples(task, rng, n_train)
+    seen = {_dedup_key(s) for s in train}
+    eval_s: list[TaskSample] = []
+    guard = 0
+    while len(eval_s) < n_eval and guard < 50 * n_eval:
+        s = _TASK_GENS[task](rng)
+        guard += 1
+        if _dedup_key(s) not in seen:
+            seen.add(_dedup_key(s))
+            eval_s.append(s)
+    return train, eval_s
+
+
+# ---------------------------------------------------------------------------
+# Full corpus assembly.
+# ---------------------------------------------------------------------------
+
+
+def build_corpus(seed: int = 0,
+                 wiki_articles: int = 9000,
+                 web_docs: int = 16000,
+                 task_train: int = 3000,
+                 task_eval: int = 200,
+                 instruct_train: int = 1500):
+    """Returns a dict of named text blobs and task splits.
+
+    Keys: 'train_text' (the pre-training mix), 'synthwiki_eval',
+    'synthweb_eval', 'tasks' -> {task: (train, eval)}.
+    """
+    rng = np.random.default_rng(seed)
+    wiki = gen_synthwiki(rng, wiki_articles)
+    web = gen_synthweb(rng, web_docs)
+    # Held-out eval text from *fresh* entity draws (different articles).
+    eval_rng = np.random.default_rng(seed + 104729)
+    wiki_eval = gen_synthwiki(eval_rng, max(200, wiki_articles // 12))
+    web_eval = gen_synthweb(eval_rng, max(400, web_docs // 12))
+
+    tasks = {}
+    task_texts = []
+    for i, task in enumerate(sorted(_TASK_GENS)):
+        n_tr = instruct_train if task == "instruct" else task_train
+        tr, ev = gen_task_split(task, seed + 31 * (i + 1), n_tr, task_eval)
+        tasks[task] = (tr, ev)
+        task_texts.extend(s.text for s in tr)
+
+    t_rng = np.random.default_rng(seed + 7)
+    t_rng.shuffle(task_texts)
+    train_text = wiki + "\n" + web + "\n" + "\n\n".join(task_texts) + "\n"
+    return {
+        "train_text": train_text,
+        "synthwiki_eval": wiki_eval,
+        "synthweb_eval": web_eval,
+        "tasks": tasks,
+    }

@@ -1,0 +1,70 @@
+"""Stage 0 of the build pipeline: corpus -> tokenizer -> token streams.
+
+Writes to artifacts/data/:
+    corpus_train.txt        (debug reference, also tokenizer training text)
+    tokenizer.json          byte-BPE merges (consumed by rust/src/tokenizer)
+    train.bin               uint16 token stream for pre-training
+    synthwiki_eval.bin      perplexity eval stream (WikiText2 analog)
+    synthweb_eval.bin       perplexity eval stream (C4 analog)
+    synthwiki_calib.bin     calibration stream (paper: C4-train calibration;
+    synthweb_calib.bin       Table 14 swaps the calibration source)
+    tasks/<task>_eval.jsonl downstream-task eval sets
+    tasks/instruct_eval.jsonl  QoS prompt set (Alpaca analog)
+
+Usage: python -m compile.dataprep [--seed 0]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+
+from . import corpus as C
+from . import io_utils as io
+from .tokenizer import Tokenizer, encode_to_bin, train_bpe
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--vocab", type=int, default=1024)
+    args = ap.parse_args()
+
+    print("[dataprep] generating corpus ...", flush=True)
+    blobs = C.build_corpus(seed=args.seed)
+    train_text = blobs["train_text"]
+    with open(io.art("data", "corpus_train.txt"), "w") as f:
+        f.write(train_text)
+
+    print(f"[dataprep] corpus: {len(train_text) / 1e6:.1f} MB train text; "
+          f"training byte-BPE vocab={args.vocab} ...", flush=True)
+    merges = train_bpe(train_text[: 2_000_000], vocab_size=args.vocab)
+    tok = Tokenizer(merges)
+    tok.save(io.art("data", "tokenizer.json"))
+
+    n = encode_to_bin(tok, train_text, io.art("data", "train.bin"))
+    print(f"[dataprep] train stream: {n / 1e6:.2f} M tokens", flush=True)
+    encode_to_bin(tok, blobs["synthwiki_eval"], io.art("data", "synthwiki_eval.bin"))
+    encode_to_bin(tok, blobs["synthweb_eval"], io.art("data", "synthweb_eval.bin"))
+
+    # Calibration streams: fresh draws, disjoint from train/eval by seed.
+    calib_rng = np.random.default_rng(args.seed + 900_001)
+    wiki_calib = C.gen_synthwiki(calib_rng, 400)
+    web_calib = C.gen_synthweb(calib_rng, 800)
+    encode_to_bin(tok, wiki_calib, io.art("data", "synthwiki_calib.bin"))
+    encode_to_bin(tok, web_calib, io.art("data", "synthweb_calib.bin"))
+
+    os.makedirs(io.art("data", "tasks", "x").rsplit("/", 1)[0], exist_ok=True)
+    for task, (tr, ev) in blobs["tasks"].items():
+        rows = [{"task": s.task, "prompt": s.prompt, "answer": s.answer}
+                for s in ev]
+        io.write_jsonl(io.art("data", "tasks", f"{task}_eval.jsonl"), rows)
+        print(f"[dataprep] task {task}: {len(tr)} train / {len(rows)} eval",
+              flush=True)
+    print("[dataprep] done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,232 @@
+"""Phase 2: layer-wise average-precision (p) fine-tuning (paper §4, Eq. 1).
+
+Every linear ``y = W x`` is substituted by the soft mix
+
+    y = r·W_l x + (1 - r)·W_h x,   l = ⌊p⌋, h = ⌈p⌉, r = 1 - (p - l)
+
+with one learnable scalar p per linear (the only trainable parameters,
+as in the paper).  The loss adds the regularizer
+
+    L' = L + α (Σ p_i·M_i / Σ M_i  -  b_targ)²
+
+which stops the p's from collapsing to the highest precision.  AdamW, a
+few epochs over the small calibration stream (paper Appendix B.1).
+
+Two mix modes:
+  * ``adjacent`` (default) — l/h track ⌊p⌋/⌈p⌉ as p moves (the paper's
+    scheme, Algorithm 1 Phase 2),
+  * ``fixed l h``          — l/h pinned for every layer, r = (h-p)/(h-l)
+    (the Table-13 ablation).
+
+Writes ``p`` (plus metadata) into
+``artifacts/calib/<model>/budget<b>/dpllm_<tag>.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import io_utils as io
+from .assign import BITS, dequant_linear, linear_index, targets_for_budget
+from .model import (GROUPS, ModelConfig, PRESETS, ce_from_logits, rmsnorm,
+                    apply_rope, rope_tables)
+from .quantize import calib_batches
+
+
+# ---------------------------------------------------------------------------
+# Quantized level stacks.
+# ---------------------------------------------------------------------------
+
+
+def load_level_stacks(name: str, cfg: ModelConfig) -> dict:
+    """{g: f32 [L, 4, out, in]} — dequantized weights at bits 3..6."""
+    anyprec = io.load_npz(io.art("models", name, "anyprec.npz"))
+    out = {}
+    for g in GROUPS:
+        L = cfg.n_layers
+        levels = np.stack([
+            np.stack([dequant_linear(anyprec, g, layer, b) for b in BITS])
+            for layer in range(L)
+        ])  # [L, 4, out, in]
+        out[g] = jnp.asarray(levels)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Soft-mix forward.
+# ---------------------------------------------------------------------------
+
+
+def mixed_forward(nl: dict, levels: dict, p: dict, cfg: ModelConfig,
+                  tokens: jnp.ndarray, fixed_lh=None) -> jnp.ndarray:
+    """Forward with every linear soft-mixed at its average precision p."""
+    B, S = tokens.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    x = nl["tok_emb"][tokens]
+    pos = jnp.arange(S)
+    cos, sin = rope_tables(cfg, pos)
+    cos = cos[None, :, None, :]
+    sin = sin[None, :, None, :]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+
+    def mixw(levels_l, p_i):
+        """levels_l [4, out, in], p_i scalar -> soft-mixed [out, in]."""
+        if fixed_lh is None:
+            l_f = jnp.floor(jax.lax.stop_gradient(p_i))
+            l_idx = jnp.clip(l_f.astype(jnp.int32) - 3, 0, 3)
+            h_idx = jnp.clip(l_idx + 1, 0, 3)
+            r = 1.0 - (p_i - l_f)
+            r = jnp.clip(r, 0.0, 1.0)
+        else:
+            lo, hi = fixed_lh
+            l_idx, h_idx = lo - 3, hi - 3
+            r = jnp.clip((hi - p_i) / (hi - lo), 0.0, 1.0)
+        wl = jax.lax.dynamic_index_in_dim(levels_l, l_idx, 0, keepdims=False)
+        wh = jax.lax.dynamic_index_in_dim(levels_l, h_idx, 0, keepdims=False)
+        return r * wl + (1.0 - r) * wh
+
+    def block(x, layer):
+        ln1, ln2, lv, pv = layer
+        h = rmsnorm(x, ln1)
+        wq = mixw(lv["wq"], pv["wq"])
+        wk = mixw(lv["wk"], pv["wk"])
+        wv_ = mixw(lv["wv"], pv["wv"])
+        q = (h @ wq.T).reshape(B, S, H, hd)
+        k = (h @ wk.T).reshape(B, S, H, hd)
+        v = (h @ wv_.T).reshape(B, S, H, hd)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+        att = jnp.where(mask[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B, S, H * hd)
+        x = x + o @ mixw(lv["wo"], pv["wo"]).T
+        h2 = rmsnorm(x, ln2)
+        gate = jax.nn.silu(h2 @ mixw(lv["wg"], pv["wg"]).T)
+        up = h2 @ mixw(lv["wu"], pv["wu"]).T
+        x = x + (gate * up) @ mixw(lv["wd"], pv["wd"]).T
+        return x, None
+
+    xs = (nl["ln1"], nl["ln2"], levels, p)
+    x, _ = jax.lax.scan(block, x, xs)
+    x = rmsnorm(x, nl["final_norm"])
+    return x @ nl["out_head"].T
+
+
+# ---------------------------------------------------------------------------
+# Fine-tuning loop.
+# ---------------------------------------------------------------------------
+
+
+def finetune_p(name: str, budget: int, target: float, alpha: float | None = None,
+               epochs: int = 3, lr: float = 0.03, calib_seqs: int = 24,
+               seq: int = 128, fixed_lh=None, calib_set: str = "synthweb",
+               tag: str | None = None) -> dict:
+    cfg = PRESETS[name]
+    nl_all = io.load_npz(io.art("models", name, "ckpt.npz"))
+    nl = {k: jnp.asarray(v) for k, v in nl_all.items() if k not in GROUPS}
+    levels = load_level_stacks(name, cfg)
+    maxprec = io.load_json(io.art("calib", name, f"budget{budget}",
+                                  "maxprec.json"))["bits"]
+    idx = linear_index(cfg)
+    M = np.asarray([cfg.group_params(g) for (_, g) in idx], np.float32)
+    Msum = float(M.sum())
+    M_g = {g: jnp.asarray([cfg.group_params(g)] * cfg.n_layers, jnp.float32)
+           for g in GROUPS}
+
+    # Per-linear bounds.
+    if fixed_lh is None:
+        lo_b = {g: jnp.full(cfg.n_layers, 3.0) for g in GROUPS}
+        hi_map = {(layer, g): float(maxprec[i]) for i, (layer, g) in enumerate(idx)}
+        hi_b = {g: jnp.asarray([hi_map[(layer, g)] for layer in range(cfg.n_layers)])
+                for g in GROUPS}
+    else:
+        lo, hi = fixed_lh
+        lo_b = {g: jnp.full(cfg.n_layers, float(lo)) for g in GROUPS}
+        hi_b = {g: jnp.full(cfg.n_layers, float(hi)) for g in GROUPS}
+
+    if alpha is None:
+        alpha = 10.0 if target <= 3.3 else 1.0
+
+    calib = calib_batches(io.art("data", f"{calib_set}_calib.bin"),
+                          calib_seqs, seq, seed=17)
+    p0 = {g: jnp.clip(jnp.full(cfg.n_layers, float(target)), lo_b[g], hi_b[g])
+          for g in GROUPS}
+
+    def loss(p, tokens):
+        logits = mixed_forward(nl, levels, p, cfg, tokens, fixed_lh=fixed_lh)
+        ce = ce_from_logits(logits, tokens)
+        avg = sum(jnp.sum(p[g] * M_g[g]) for g in GROUPS) / Msum
+        return ce + alpha * (avg - target) ** 2, ce
+
+    grad_fn = jax.jit(jax.value_and_grad(loss, has_aux=True))
+
+    # Adam on p only.
+    m = {g: jnp.zeros(cfg.n_layers) for g in GROUPS}
+    v = {g: jnp.zeros(cfg.n_layers) for g in GROUPS}
+    p = p0
+    t0 = time.time()
+    step = 0
+    batch = 4
+    last_ce = float("nan")
+    for ep in range(epochs):
+        for i in range(0, len(calib), batch):
+            tokens = jnp.asarray(calib[i:i + batch])
+            (tot, ce), g = grad_fn(p, tokens)
+            step += 1
+            for k in GROUPS:
+                m[k] = 0.9 * m[k] + 0.1 * g[k]
+                v[k] = 0.999 * v[k] + 0.001 * g[k] ** 2
+                mh = m[k] / (1 - 0.9 ** step)
+                vh = v[k] / (1 - 0.999 ** step)
+                p[k] = p[k] - lr * mh / (jnp.sqrt(vh) + 1e-8)
+                p[k] = jnp.clip(p[k], lo_b[k], hi_b[k])
+            last_ce = float(ce)
+        avg = float(sum(float(jnp.sum(p[g] * M_g[g])) for g in GROUPS) / Msum)
+        print(f"[finetune:{name}/b{budget}/t{target}] epoch {ep} ce {last_ce:.4f} "
+              f"avg_p {avg:.4f} ({time.time() - t0:.0f}s)", flush=True)
+
+    # Snap the tiny residual regularization error by uniform shift, then
+    # serialize per-linear p in canonical linear order.
+    avg = float(sum(float(jnp.sum(p[g] * M_g[g])) for g in GROUPS) / Msum)
+    shift = target - avg
+    p = {g: jnp.clip(p[g] + shift, lo_b[g], hi_b[g]) for g in GROUPS}
+    avg = float(sum(float(jnp.sum(p[g] * M_g[g])) for g in GROUPS) / Msum)
+
+    p_list = [float(p[g][layer]) for (layer, g) in idx]
+    out = {
+        "model": name, "budget": budget, "target": target, "alpha": alpha,
+        "calib_set": calib_set, "avg_p": avg,
+        "fixed_lh": list(fixed_lh) if fixed_lh else None,
+        "p": p_list,
+    }
+    tag = tag or f"{target:.2f}"
+    io.save_json(io.art("calib", name, f"budget{budget}", f"dpllm_p_{tag}.json"), out)
+    print(f"[finetune:{name}/b{budget}/t{target}] done avg_p {avg:.4f}", flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="dpl-tiny", choices=sorted(PRESETS))
+    ap.add_argument("--budget", type=int, default=5)
+    ap.add_argument("--target", type=float, default=0.0,
+                    help="0 = all targets for the budget")
+    ap.add_argument("--epochs", type=int, default=3)
+    ap.add_argument("--calib-set", default="synthweb",
+                    choices=("synthweb", "synthwiki"))
+    ap.add_argument("--tag", default="", help="output tag override")
+    args = ap.parse_args()
+    targets = [args.target] if args.target else targets_for_budget(args.budget)
+    for t in targets:
+        finetune_p(args.model, args.budget, t, epochs=args.epochs,
+                   calib_set=args.calib_set, tag=args.tag or None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Shared artifact paths and (de)serialization helpers for the build pipeline.
+
+Everything the Rust runtime consumes lives under ``artifacts/``:
+
+    artifacts/
+      data/               tokenizer.json, *.bin token streams, tasks/*.jsonl
+      models/<name>/      config.json, ckpt.npz, anyprec.npz, fisher.npz
+      calib/<name>/<budget>/<tag>/   dpllm.json, estimators.npz, ...
+      hlo/<name>/         decode_step.hlo.txt, prefill_<P>.hlo.txt, ...
+      manifest.json       index of everything above
+
+npz files are written uncompressed (faster for the Rust zip reader).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), "..", ".."))
+ART = os.path.join(REPO_ROOT, "artifacts")
+
+
+def art(*parts: str) -> str:
+    p = os.path.join(ART, *parts)
+    os.makedirs(os.path.dirname(p), exist_ok=True)
+    return p
+
+
+def save_npz(path: str, arrays: dict) -> None:
+    np.savez(path, **{k: np.asarray(v) for k, v in arrays.items()})
+
+
+def load_npz(path: str) -> dict:
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
+
+
+def save_json(path: str, obj) -> None:
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)
+
+
+def load_json(path: str):
+    with open(path) as f:
+        return json.load(f)
+
+
+def write_jsonl(path: str, rows: list[dict]) -> None:
+    with open(path, "w") as f:
+        for r in rows:
+            f.write(json.dumps(r) + "\n")
+
+
+def stale(out_paths, in_paths) -> bool:
+    """True if any output is missing or older than the newest input."""
+    outs = [out_paths] if isinstance(out_paths, str) else list(out_paths)
+    ins = [in_paths] if isinstance(in_paths, str) else list(in_paths)
+    if any(not os.path.exists(o) for o in outs):
+        return True
+    newest_in = max((os.path.getmtime(i) for i in ins if os.path.exists(i)),
+                    default=0.0)
+    return min(os.path.getmtime(o) for o in outs) < newest_in

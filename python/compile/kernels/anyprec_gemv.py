@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: any-precision bitplane dequant-GEMV.
+
+This is the paper's compute hot-spot: the batch-1 decode GEMV over
+bitplane-packed weights, where the *same* packed store serves every
+bitwidth 3..6 (Any-Precision LLM) and DP-LLM picks the bitwidth per layer
+per step.
+
+Hardware adaptation (DESIGN.md §3): the CUDA original streams bitplanes
+from HBM with one warp per output tile and the centroid LUT in shared
+memory.  Here `BlockSpec` expresses the same HBM→VMEM schedule: each grid
+step owns a `(TILE_OUT, in/8)` slab of the `bits` MSB planes plus the
+`(TILE_OUT, 2**bits)` LUT slice in VMEM, unpacks bits with VPU integer
+ops, gathers through the LUT and accumulates the dot product with `x`
+(resident in VMEM across the grid).
+
+`interpret=True` is required for CPU-PJRT execution (real TPU lowering
+emits Mosaic custom-calls the CPU plugin cannot run); the kernel structure
+(tiling, VMEM footprint) is what carries to hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(planes_ref, lut_ref, x_ref, o_ref, *, bits: int):
+    """One (TILE_OUT,) slice of y = W_b @ x.
+
+    planes_ref: u8  [bits, TILE_OUT, in/8]   MSB-first planes
+    lut_ref:    f32 [TILE_OUT, 2**bits]
+    x_ref:      f32 [in]
+    o_ref:      f32 [TILE_OUT]
+    """
+    planes = planes_ref[...]
+    t_out, n_bytes = planes.shape[1], planes.shape[2]
+    n_in = n_bytes * 8
+    # VPU bit unpack: u8 -> 8 bit lanes (little-bit order within a byte).
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits_t = (planes[..., None] >> shifts) & jnp.uint8(1)   # [b, T, in/8, 8]
+    bits_t = bits_t.reshape(bits, t_out, n_in).astype(jnp.int32)
+    # MSB-first nested code.
+    code = jnp.zeros((t_out, n_in), jnp.int32)
+    for p in range(bits):
+        code = (code << 1) | bits_t[p]
+    # Centroid gather (VMEM-local): w[o, i] = lut[o, code[o, i]].
+    w = jnp.take_along_axis(lut_ref[...], code, axis=1)
+    o_ref[...] = w @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "tile_out"))
+def anyprec_gemv(planes: jnp.ndarray, lut: jnp.ndarray, x: jnp.ndarray,
+                 bits: int, tile_out: int = 64) -> jnp.ndarray:
+    """y = W_b @ x from the packed any-precision store.
+
+    planes: u8 [6, out, in/8] (all six planes; only the top `bits` are
+            read — this mirrors the memory-traffic property the paper's
+            kernel gets on GPU: lower precision touches fewer planes).
+    lut:    f32 [out, 2**bits] centroids for this bitwidth.
+    x:      f32 [in].
+    """
+    n_planes, out_dim, n_bytes = planes.shape
+    assert n_planes == 6, "expect the full 6-plane store"
+    assert 3 <= bits <= 6
+    assert lut.shape == (out_dim, 2 ** bits)
+    tile_out = min(tile_out, out_dim)
+    while out_dim % tile_out:
+        tile_out //= 2  # e.g. out=96 -> tile 32
+    assert tile_out >= 1
+    grid = (out_dim // tile_out,)
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            # Only the top `bits` planes of the tile are brought into VMEM.
+            pl.BlockSpec((bits, tile_out, n_bytes), lambda i: (0, i, 0)),
+            pl.BlockSpec((tile_out, 2 ** bits), lambda i: (i, 0)),
+            pl.BlockSpec((x.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_out,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((out_dim,), jnp.float32),
+        interpret=True,
+    )(planes[:bits], lut, x)
+
+
+def vmem_bytes(bits: int, tile_out: int, n_in: int) -> int:
+    """Estimated VMEM footprint of one grid step (see DESIGN.md §Perf).
+
+    planes tile + lut tile + x + unpacked-code intermediate + output tile.
+    """
+    planes_b = bits * tile_out * (n_in // 8)
+    lut_b = tile_out * (2 ** bits) * 4
+    x_b = n_in * 4
+    code_b = tile_out * n_in * 4
+    w_b = tile_out * n_in * 4
+    out_b = tile_out * 4
+    return planes_b + lut_b + x_b + code_b + w_b + out_b

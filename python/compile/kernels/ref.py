@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: pytest/hypothesis sweeps the Pallas
+kernels against these for many shapes, and the quantizer uses
+``dequant_ref`` as the semantic definition of the bitplane format.
+
+Bitplane format (shared contract with ``quantize.py``, the kernels and
+``rust/src/anyprec``):
+
+  * every weight has a 6-bit *nested* code; the b-bit code is the MSB
+    prefix: ``code_b = code_6 >> (6 - b)``;
+  * ``planes`` is uint8, shape ``[6, out, in/8]``; plane 0 is the MSB.
+    Bit ``j`` of byte ``k`` in a row is weight column ``8*k + j``
+    (little-bit order);
+  * per-bitwidth centroid tables ``lut_b``: f32 ``[out, 2**b]``;
+    dequantized weight = ``lut_b[o, code_b[o, i]]``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def unpack_planes(planes: jnp.ndarray) -> jnp.ndarray:
+    """u8 [P, out, in/8] -> bit tensor [P, out, in] (values 0/1, int32)."""
+    p, o, w = planes.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (planes[..., None] >> shifts) & jnp.uint8(1)
+    return bits.reshape(p, o, w * 8).astype(jnp.int32)
+
+
+def codes_from_planes(planes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Top-`bits` planes -> integer codes [out, in]."""
+    b = unpack_planes(planes)  # [6, out, in]
+    code = jnp.zeros(b.shape[1:], jnp.int32)
+    for p in range(bits):
+        code = (code << 1) | b[p]
+    return code
+
+
+def dequant_ref(planes: jnp.ndarray, lut: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Reference dequantization: [out, in] f32 weights at `bits` precision."""
+    code = codes_from_planes(planes, bits)
+    return jnp.take_along_axis(lut, code, axis=1)
+
+
+def anyprec_gemv_ref(planes: jnp.ndarray, lut: jnp.ndarray, x: jnp.ndarray,
+                     bits: int) -> jnp.ndarray:
+    """y = W_b @ x with W_b dequantized from the bitplane store."""
+    return dequant_ref(planes, lut, bits) @ x
+
+
+def jl_norm_ref(G: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """‖Gx‖₂ — the JL relative-error estimate (scalar)."""
+    return jnp.linalg.norm(G @ x)
+
+
+# -- numpy twins used by the quantizer and its tests ------------------------
+
+
+def pack_codes_np(code6: np.ndarray) -> np.ndarray:
+    """6-bit codes [out, in] -> packed planes u8 [6, out, in/8]."""
+    out, n = code6.shape
+    assert n % 8 == 0, "in-dim must be a multiple of 8"
+    planes = np.zeros((6, out, n // 8), np.uint8)
+    for p in range(6):
+        bit = (code6 >> (5 - p)) & 1  # plane 0 = MSB
+        planes[p] = np.packbits(bit.astype(np.uint8), axis=1, bitorder="little")
+    return planes
+
+
+def dequant_np(planes: np.ndarray, lut: np.ndarray, bits: int) -> np.ndarray:
+    bitsarr = np.unpackbits(planes, axis=2, bitorder="little")  # [6, out, in]
+    code = np.zeros(bitsarr.shape[1:], np.int64)
+    for p in range(bits):
+        code = (code << 1) | bitsarr[p]
+    return np.take_along_axis(lut, code, axis=1)

@@ -1,0 +1,406 @@
+"""L2: LLaMA-style transformer in JAX.
+
+One functional model definition serves four consumers:
+
+  * ``train.py``          — batched forward + loss (fp32 weights),
+  * ``quantize.py`` etc.  — the same forward with the seven linear-weight
+    groups *overridden* (quantized / soft-mixed weights), via
+    ``forward_with_weights``,
+  * ``aot.py``            — the serving graphs: ``prefill`` and the
+    dual-precision ``decode_step_dual`` with in-graph relative-error
+    estimators and precision selection (DP-LLM's runtime mechanism),
+  * ``kernels/``          — the Pallas any-precision GEMV is exercised by a
+    separate AOT entry point (see aot.py) and validated against ref.py.
+
+Weights are stored **stacked per layer**: e.g. ``wq`` has shape
+``[L, D, D]`` — this makes ``jax.lax.scan`` over blocks natural and maps
+1:1 onto the grouped weight stacks the Rust coordinator feeds at runtime.
+
+Linear-group naming (7 groups, matching the paper's per-block linears):
+
+    wq wk wv wo  — attention projections  ([L, D, D])
+    wg wu        — SwiGLU gate/up         ([L, F, D])
+    wd           — SwiGLU down            ([L, D, F])
+
+Async-estimation groups (paper §5.2: layers fed directly by the residual
+stream): q, k, v, gate, up.  Sync groups (immediate input required): o,
+down.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GROUPS = ("wq", "wk", "wv", "wo", "wg", "wu", "wd")
+ASYNC_GROUPS = ("wq", "wk", "wv", "wg", "wu")
+SYNC_GROUPS = ("wo", "wd")
+
+
+@dataclasses.dataclass
+class ModelConfig:
+    name: str = "dpl-tiny"
+    vocab: int = 1024
+    d_model: int = 256
+    n_layers: int = 8
+    n_heads: int = 8
+    d_ff: int = 704
+    max_seq: int = 640
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def group_shape(self, g: str) -> tuple[int, int]:
+        d, f = self.d_model, self.d_ff
+        return {"wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+                "wg": (f, d), "wu": (f, d), "wd": (d, f)}[g]
+
+    def n_linear(self) -> int:
+        return self.n_layers * len(GROUPS)
+
+    def group_params(self, g: str) -> int:
+        o, i = self.group_shape(g)
+        return o * i
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+    @classmethod
+    def from_json(cls, s: str) -> "ModelConfig":
+        return cls(**json.loads(s))
+
+
+# Sizes are scaled to the sandbox (single CPU core — see DESIGN.md §2);
+# the *pairs* preserve the paper's role structure: two headline models and
+# two extra scale points for Table 12.
+PRESETS = {
+    # paper analog: Llama-3-8B  -> dpl-tiny   (~3 M params)
+    "dpl-tiny": ModelConfig("dpl-tiny", 1024, 192, 6, 6, 512),
+    # paper analog: Phi-3-Medium -> dpl-small (~7 M params)
+    "dpl-small": ModelConfig("dpl-small", 1024, 256, 8, 8, 704),
+    # paper analog (Table 12): Qwen2.5-3B -> dpl-nano, Qwen2.5-32B -> dpl-base
+    "dpl-nano": ModelConfig("dpl-nano", 1024, 96, 3, 4, 256),
+    "dpl-base": ModelConfig("dpl-base", 1024, 320, 10, 8, 896),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter init / manipulation.
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    d, f, L, v = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab
+
+    def nrm(*shape, scale=0.02):
+        return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+    resid_scale = 0.02 / np.sqrt(2 * L)
+    p = {
+        "tok_emb": nrm(v, d),
+        "out_head": nrm(v, d),
+        "final_norm": np.ones(d, np.float32),
+        "ln1": np.ones((L, d), np.float32),
+        "ln2": np.ones((L, d), np.float32),
+        "wq": nrm(L, d, d), "wk": nrm(L, d, d), "wv": nrm(L, d, d),
+        "wo": nrm(L, d, d, scale=resid_scale),
+        "wg": nrm(L, f, d), "wu": nrm(L, f, d),
+        "wd": nrm(L, d, f, scale=resid_scale),
+    }
+    return {k: jnp.asarray(v) for k, v in p.items()}
+
+
+def extract_linears(params: dict) -> dict:
+    return {g: params[g] for g in GROUPS}
+
+
+def nonlinear_params(params: dict) -> dict:
+    return {k: v for k, v in params.items() if k not in GROUPS}
+
+
+# ---------------------------------------------------------------------------
+# Building blocks.
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope_tables(cfg: ModelConfig, positions: jnp.ndarray):
+    """cos/sin tables [len(positions), head_dim/2]."""
+    hd = cfg.head_dim
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2) / hd))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x [..., H, hd]; cos/sin broadcastable against [..., H, hd/2]."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    return jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Training / evaluation forward (full sequence, batched).
+# ---------------------------------------------------------------------------
+
+
+def forward_with_weights(nl: dict, lin: dict, cfg: ModelConfig,
+                         tokens: jnp.ndarray) -> jnp.ndarray:
+    """Causal forward. tokens [B, S] -> logits [B, S, V].
+
+    ``nl`` holds the non-linear params, ``lin`` the 7 stacked linear groups
+    (possibly quantized / soft-mixed — whatever the caller supplies).
+    """
+    B, S = tokens.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    x = nl["tok_emb"][tokens]  # [B, S, D]
+    pos = jnp.arange(S)
+    cos, sin = rope_tables(cfg, pos)          # [S, hd/2]
+    cos = cos[None, :, None, :]
+    sin = sin[None, :, None, :]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+
+    def block(x, layer):
+        ln1, ln2, wq, wk, wv, wo, wg, wu, wd = layer
+        h = rmsnorm(x, ln1)
+        q = (h @ wq.T).reshape(B, S, H, hd)
+        k = (h @ wk.T).reshape(B, S, H, hd)
+        v = (h @ wv.T).reshape(B, S, H, hd)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+        att = jnp.where(mask[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B, S, H * hd)
+        x = x + o @ wo.T
+        h2 = rmsnorm(x, ln2)
+        gate = jax.nn.silu(h2 @ wg.T)
+        up = h2 @ wu.T
+        x = x + (gate * up) @ wd.T
+        return x, None
+
+    layers = (nl["ln1"], nl["ln2"], lin["wq"], lin["wk"], lin["wv"],
+              lin["wo"], lin["wg"], lin["wu"], lin["wd"])
+    x, _ = jax.lax.scan(block, x, layers)
+    x = rmsnorm(x, nl["final_norm"])
+    return x @ nl["out_head"].T
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    return forward_with_weights(nonlinear_params(params), extract_linears(params),
+                                cfg, tokens)
+
+
+def ce_from_logits(logits: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    tgt = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def loss_fn(params: dict, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Next-token cross entropy, tokens [B, S]."""
+    return ce_from_logits(forward(params, cfg, tokens), tokens)
+
+
+def ce_per_token(nl: dict, lin: dict, cfg: ModelConfig,
+                 tokens: jnp.ndarray) -> jnp.ndarray:
+    """Per-position NLL [B, S-1] — used by the sensitivity analysis (Fig. 3)."""
+    logits = forward_with_weights(nl, lin, cfg, tokens)
+    tgt = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    return -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# Serving graphs: prefill and the DP-LLM dual-precision decode step.
+# ---------------------------------------------------------------------------
+
+
+def kv_shape(cfg: ModelConfig) -> tuple[int, ...]:
+    return (cfg.n_layers, 2, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+
+
+def prefill(nl: dict, lin: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            n_valid: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """Prompt ingestion at (caller-chosen) fixed weights.
+
+    tokens [P] int32 (padded), n_valid scalar — number of real tokens.
+    cos/sin: RoPE tables [P, head_dim/2], passed as inputs for the same
+    xla_extension-0.5.1 reason as in ``decode_step_dual``.
+    Returns (logits_last [V], kv [L,2,H,Smax,hd]).
+    The paper runs prefill at each layer's highest available precision;
+    the Rust side passes max-precision-materialized stacks for ``lin``.
+    """
+    P = tokens.shape[0]
+    H, hd, S = cfg.n_heads, cfg.head_dim, cfg.max_seq
+    x = nl["tok_emb"][tokens]  # [P, D]
+    pos = jnp.arange(P)
+    cos_b = cos[:, None, :]
+    sin_b = sin[:, None, :]
+    valid = pos < n_valid
+    mask = (pos[None, :] <= pos[:, None]) & valid[None, :]
+
+    def block(x, layer):
+        ln1, ln2, wq, wk, wv, wo, wg, wu, wd = layer
+        h = rmsnorm(x, ln1)
+        q = (h @ wq.T).reshape(P, H, hd)
+        k = (h @ wk.T).reshape(P, H, hd)
+        v = (h @ wv.T).reshape(P, H, hd)
+        q = apply_rope(q, cos_b, sin_b)
+        k = apply_rope(k, cos_b, sin_b)
+        att = jnp.einsum("qhd,khd->hqk", q, k) / np.sqrt(hd)
+        att = jnp.where(mask[None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("hqk,khd->qhd", att, v).reshape(P, H * hd)
+        x = x + o @ wo.T
+        h2 = rmsnorm(x, ln2)
+        x = x + (jax.nn.silu(h2 @ wg.T) * (h2 @ wu.T)) @ wd.T
+        kv = jnp.zeros((2, H, S, hd), jnp.float32)
+        kv = kv.at[0, :, :P].set(jnp.transpose(k, (1, 0, 2)))
+        kv = kv.at[1, :, :P].set(jnp.transpose(v, (1, 0, 2)))
+        return x, kv
+
+    layers = (nl["ln1"], nl["ln2"], lin["wq"], lin["wk"], lin["wv"],
+              lin["wo"], lin["wg"], lin["wu"], lin["wd"])
+    x, kv = jax.lax.scan(block, x, layers)
+    x = rmsnorm(x, nl["final_norm"])
+    logits = x @ nl["out_head"].T      # [P, V]
+    last = logits[jnp.maximum(n_valid - 1, 0)]
+    return last, kv
+
+
+def _estimate(x, G, lin_a, lin_b, use_lin):
+    """Approximate relative error for one linear: ``a‖x‖+b`` or ``‖Gx‖``."""
+    xn = jnp.linalg.norm(x)
+    est_lin = lin_a * xn + lin_b
+    est_jl = jnp.linalg.norm(G @ x)
+    return jnp.where(use_lin > 0.5, est_lin, est_jl)
+
+
+def decode_step_dual(nl: dict, wl: dict, wh: dict, est: dict, cfg: ModelConfig,
+                     token: jnp.ndarray, pos: jnp.ndarray,
+                     cos: jnp.ndarray, sin: jnp.ndarray, kv: jnp.ndarray,
+                     use_h_async: dict, mode_exact: jnp.ndarray):
+    """One decoding step with DP-LLM dynamic per-linear precision.
+
+    Arguments
+    ---------
+    nl            non-linear params.
+    wl / wh       per-group low/high candidate weight stacks ([L, out, in]).
+    est           estimator parameters per group ``g``:
+                    ``G_<g>``     [L, K, in]  calibrated JL projections,
+                    ``lina_<g>``  [L], ``linb_<g>`` [L] linear-fit coefs,
+                    ``uselin_<g>`` [L] 0/1 — method select (R² ≥ R²_th),
+                    ``thr_<g>``   [L]  thresholds T_i.
+    token, pos    current token id / absolute position (scalars, int32).
+    cos, sin      RoPE tables for this position, [head_dim/2] each.  These
+                  are *inputs* (computed by the Rust coordinator from pos)
+                  rather than derived in-graph: xla_extension 0.5.1
+                  miscompiles the duplicated iota→pow→cos chain when it
+                  re-materializes the KV output (see DESIGN.md §7), and
+                  host-side cos/sin of a 16-element vector is free.
+    kv            KV cache [L, 2, H, Smax, hd].
+    use_h_async   {g: [L] float 0/1} — decisions for the *async* groups
+                  (q/k/v/gate/up), made by the Rust selector from the
+                  previous step's estimates (paper Fig. 6).
+    mode_exact    scalar f32 0/1.  1 → the exact estimator ‖W_h x − W_l x‖
+                  drives *all* selections in-graph (Table 3 upper bound);
+                  0 → hybrid approximate estimators; async groups honor
+                  ``use_h_async``.
+
+    Returns (logits [V], kv_new, ests {g:[L]}, use_h_eff {g:[L]}).
+    ``ests`` are this step's estimates (async groups consume them next
+    step); ``use_h_eff`` are the decisions actually applied (effective-
+    bitwidth accounting in the coordinator).
+    """
+    H, hd, S = cfg.n_heads, cfg.head_dim, cfg.max_seq
+    x0 = nl["tok_emb"][token]                    # [D]
+    cos = cos[None, :]                           # [1, hd/2]
+    sin = sin[None, :]
+    exact = mode_exact.astype(jnp.float32)
+
+    def sel_linear(x_in, wl_g, wh_g, epack, use_h_in, sync):
+        """Dual GEMV + selection for one linear. Returns (y, est, use_h)."""
+        G, la, lb, ul, thr = epack
+        yl = wl_g @ x_in
+        yh = wh_g @ x_in
+        e_exact = jnp.linalg.norm(yh - yl)
+        e_apx = _estimate(x_in, G, la, lb, ul)
+        e = exact * e_exact + (1.0 - exact) * e_apx
+        in_graph = jnp.maximum(exact, jnp.float32(1.0 if sync else 0.0))
+        decided = (e > thr).astype(jnp.float32)
+        use_h = in_graph * decided + (1.0 - in_graph) * use_h_in
+        y = use_h * yh + (1.0 - use_h) * yl
+        return y, e, use_h
+
+    def block(carry, layer):
+        (x,) = carry
+        (ln1, ln2, kv_l, w_l, w_h, ep, u_in) = layer
+        h = rmsnorm(x, ln1)
+        q, e_q, f_q = sel_linear(h, w_l["wq"], w_h["wq"], ep["wq"], u_in["wq"], False)
+        k, e_k, f_k = sel_linear(h, w_l["wk"], w_h["wk"], ep["wk"], u_in["wk"], False)
+        v, e_v, f_v = sel_linear(h, w_l["wv"], w_h["wv"], ep["wv"], u_in["wv"], False)
+        q = apply_rope(q.reshape(H, hd), cos, sin)
+        k = apply_rope(k.reshape(H, hd), cos, sin)
+        v = v.reshape(H, hd)
+        kv_l = jax.lax.dynamic_update_slice(
+            kv_l, jnp.stack([k, v])[:, :, None, :], (0, 0, pos, 0))
+        keys, vals = kv_l[0], kv_l[1]            # [H, Smax, hd]
+        att = jnp.einsum("hd,hsd->hs", q, keys) / np.sqrt(hd)
+        att = jnp.where(jnp.arange(S)[None, :] <= pos, att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o_in = jnp.einsum("hs,hsd->hd", att, vals).reshape(H * hd)
+        o, e_o, f_o = sel_linear(o_in, w_l["wo"], w_h["wo"], ep["wo"],
+                                 jnp.float32(0.0), True)
+        x = x + o
+        h2 = rmsnorm(x, ln2)
+        g, e_g, f_g = sel_linear(h2, w_l["wg"], w_h["wg"], ep["wg"], u_in["wg"], False)
+        u, e_u, f_u = sel_linear(h2, w_l["wu"], w_h["wu"], ep["wu"], u_in["wu"], False)
+        mid = jax.nn.silu(g) * u
+        dn, e_d, f_d = sel_linear(mid, w_l["wd"], w_h["wd"], ep["wd"],
+                                  jnp.float32(0.0), True)
+        x = x + dn
+        ests_l = jnp.stack([e_q, e_k, e_v, e_o, e_g, e_u, e_d])
+        use_l = jnp.stack([f_q, f_k, f_v, f_o, f_g, f_u, f_d])
+        return (x,), (kv_l, ests_l, use_l)
+
+    ep = {g: (est[f"G_{g}"], est[f"lina_{g}"], est[f"linb_{g}"],
+              est[f"uselin_{g}"], est[f"thr_{g}"]) for g in GROUPS}
+    u_async = {g: use_h_async.get(g, jnp.zeros(cfg.n_layers)) for g in GROUPS}
+    xs = (nl["ln1"], nl["ln2"], kv, wl, wh, ep, u_async)
+    (x,), (kv_new, ests, use_eff) = jax.lax.scan(block, (x0,), xs)
+    x = rmsnorm(x, nl["final_norm"])
+    logits = x @ nl["out_head"].T
+    ests_d = {g: ests[:, i] for i, g in enumerate(GROUPS)}
+    use_d = {g: use_eff[:, i] for i, g in enumerate(GROUPS)}
+    return logits, kv_new, ests_d, use_d
+
+
+# ---------------------------------------------------------------------------
+# Reference greedy decoding in pure JAX (used by tests to cross-check the
+# Rust decode loop end to end).
+# ---------------------------------------------------------------------------
+
+
+def greedy_decode_ref(params: dict, cfg: ModelConfig, prompt: list[int],
+                      n_new: int) -> list[int]:
+    toks = list(prompt)
+    for _ in range(n_new):
+        arr = jnp.asarray([toks], jnp.int32)
+        logits = forward(params, cfg, arr)
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return toks

@@ -1,0 +1,140 @@
+"""Build-pipeline orchestrator: data → train → quantize → calibrate → AOT.
+
+``make artifacts`` runs ``python -m compile.pipeline --scope core``; every
+stage is cached by output-vs-input mtimes (``io_utils.stale``), so the
+pipeline is a no-op when artifacts exist and inputs are unchanged.
+
+Scopes (single CPU core in this sandbox — see DESIGN.md §2):
+  core      dpl-tiny + dpl-small, 5-bit budget, all 7 targets, baselines,
+            AOT graphs, Fig-3 analysis.  Powers Tables 1-9 + figures.
+  extended  adds: 4-/6-bit budgets (Tables 10/11), dpl-nano + dpl-base
+            (Table 12), fixed-(l,h) ablation (Table 13), wikitext-calibrated
+            configs (Table 14).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+from . import io_utils as io
+from .assign import targets_for_budget
+
+PY = [sys.executable, "-m"]
+PYDIR = os.path.join(io.REPO_ROOT, "python")
+
+
+def run(mod: str, *args: str) -> None:
+    cmd = PY + [mod] + list(args)
+    t0 = time.time()
+    print(f"[pipeline] $ {' '.join(cmd[2:])}", flush=True)
+    subprocess.run(cmd, cwd=PYDIR, check=True)
+    print(f"[pipeline] done in {time.time() - t0:.0f}s", flush=True)
+
+
+def m(name: str, f: str) -> str:
+    return io.art("models", name, f)
+
+
+def c(name: str, budget: int, f: str) -> str:
+    return io.art("calib", name, f"budget{budget}", f)
+
+
+def ensure_data() -> None:
+    outs = [io.art("data", x) for x in
+            ("tokenizer.json", "train.bin", "synthwiki_eval.bin",
+             "synthweb_eval.bin", "synthwiki_calib.bin", "synthweb_calib.bin")]
+    ins = [os.path.join(PYDIR, "compile", x)
+           for x in ("corpus.py", "tokenizer.py", "dataprep.py")]
+    if io.stale(outs, ins):
+        run("compile.dataprep")
+
+
+def ensure_model(name: str) -> None:
+    if io.stale(m(name, "ckpt.npz"), io.art("data", "train.bin")):
+        run("compile.train", "--model", name)
+    if io.stale([m(name, "anyprec.npz"), m(name, "fisher.npz")],
+                m(name, "ckpt.npz")):
+        run("compile.quantize", "--model", name)
+
+
+def ensure_calib(name: str, budget: int, calib_set: str = "synthweb",
+                 tag_suffix: str = "", epochs: int = 2) -> None:
+    if io.stale(c(name, budget, "maxprec.json"), m(name, "anyprec.npz")):
+        run("compile.assign", "--model", name, "--budget", str(budget))
+    for t in targets_for_budget(budget):
+        tag = f"{t:.2f}{tag_suffix}"
+        if io.stale(c(name, budget, f"dpllm_p_{tag}.json"),
+                    c(name, budget, "maxprec.json")):
+            run("compile.finetune_p", "--model", name, "--budget", str(budget),
+                "--target", str(t), "--epochs", str(epochs),
+                "--calib-set", calib_set, *(
+                    ["--tag", tag] if tag_suffix else []))
+        if io.stale(c(name, budget, f"dpllm_{tag}.json"),
+                    c(name, budget, f"dpllm_p_{tag}.json")):
+            run("compile.thresholds", "--model", name, "--budget", str(budget),
+                "--tag", tag, "--calib-set", calib_set)
+
+
+def ensure_aot(name: str) -> None:
+    out = io.art("hlo", name, "decode_step.hlo.txt")
+    ins = [os.path.join(PYDIR, "compile", x)
+           for x in ("model.py", "aot.py", "kernels/anyprec_gemv.py",
+                     "kernels/estimator.py")]
+    if io.stale(out, ins):
+        run("compile.aot", "--model", name)
+
+
+def ensure_fig3(name: str) -> None:
+    if io.stale(io.art("analysis", f"fig3b_{name}.json"), m(name, "anyprec.npz")):
+        run("compile.sensitivity", "--model", name)
+
+
+def core() -> None:
+    ensure_data()
+    for name in ("dpl-tiny", "dpl-small"):
+        ensure_model(name)
+        ensure_calib(name, 5)
+        ensure_aot(name)
+    ensure_fig3("dpl-tiny")
+
+
+def extended() -> None:
+    # Tables 10/11: other memory budgets (headline model).
+    ensure_calib("dpl-tiny", 6)
+    ensure_calib("dpl-tiny", 4)
+    # Table 12: model scales.
+    for name in ("dpl-nano", "dpl-base"):
+        ensure_model(name)
+        ensure_calib(name, 5)
+        ensure_aot(name)
+    # Table 14: calibration-set transfer (synthwiki-calibrated configs).
+    ensure_calib("dpl-tiny", 5, calib_set="synthwiki", tag_suffix="w")
+    # Table 13: fixed (l,h) ablation at 4.5-bit target under 6-bit budget.
+    from .finetune_p import finetune_p
+    from .thresholds import calibrate
+    for (lo, hi) in ((3, 5), (3, 6), (4, 5), (4, 6)):
+        tag = f"hl{lo}{hi}"
+        if io.stale(c("dpl-tiny", 6, f"dpllm_{tag}.json"),
+                    c("dpl-tiny", 6, "maxprec.json")):
+            finetune_p("dpl-tiny", 6, 4.5, epochs=2, fixed_lh=(lo, hi), tag=tag)
+            calibrate("dpl-tiny", 6, tag, fixed_lh=(lo, hi))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scope", default="core", choices=("core", "extended", "all"))
+    args = ap.parse_args()
+    t0 = time.time()
+    if args.scope in ("core", "all"):
+        core()
+    if args.scope in ("extended", "all"):
+        extended()
+    print(f"[pipeline] all stages fresh ({time.time() - t0:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,223 @@
+"""Any-Precision quantization substrate (paper [1], built from scratch).
+
+Pipeline per model:
+
+  1. **Diagonal Fisher** — squared gradients of the CE loss over the
+     calibration stream, accumulated per weight (SqueezeLLM's sensitivity
+     proxy; also reused by Phase 1 and the HAWQ-V2 baseline).
+  2. **Seed quantization** — per *output channel*, Fisher-weighted 1-D
+     k-means with 2³ centroids (SqueezeLLM-style non-uniform), giving the
+     3-bit codes.
+  3. **Incremental upscaling** — every cluster is recursively split in two
+     (Fisher-weighted 2-means within the parent) up to 6 bits, so the b-bit
+     code of every weight is the MSB-prefix of its (b+1)-bit code.  This is
+     exactly Any-Precision LLM's nesting property: one 6-bit store serves
+     all bitwidths.
+  4. **Bitplane packing** — codes are stored MSB-first as packed bitplanes
+     (`kernels/ref.py` documents the layout) + per-bitwidth LUTs.
+
+Outputs ``artifacts/models/<name>/fisher.npz`` and ``anyprec.npz``.
+
+Usage: python -m compile.quantize --model dpl-tiny
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import io_utils as io
+from .kernels.ref import pack_codes_np
+from .model import GROUPS, ModelConfig, PRESETS, loss_fn
+
+
+# ---------------------------------------------------------------------------
+# Fisher information (diagonal).
+# ---------------------------------------------------------------------------
+
+
+def calib_batches(path: str, n_seqs: int, seq: int, seed: int = 0):
+    data = np.fromfile(path, dtype=np.uint16)
+    rng = np.random.default_rng(seed)
+    starts = rng.integers(0, len(data) - seq - 1, size=n_seqs)
+    return np.stack([data[s:s + seq] for s in starts]).astype(np.int32)
+
+
+def fisher_diag(params: dict, cfg: ModelConfig, calib: np.ndarray,
+                batch: int = 4) -> dict:
+    """Accumulated squared gradients (diag Fisher) for the 7 linear groups,
+    plus the mean signed gradients (``grad_<g>``) the LLM-MQ baseline uses."""
+    grad_fn = jax.jit(jax.grad(lambda prm, toks: loss_fn(prm, cfg, toks)))
+    acc = {g: jnp.zeros_like(params[g]) for g in GROUPS}
+    acc_g = {g: jnp.zeros_like(params[g]) for g in GROUPS}
+    n = 0
+    for i in range(0, len(calib), batch):
+        g = grad_fn(params, jnp.asarray(calib[i:i + batch]))
+        for k in GROUPS:
+            acc[k] = acc[k] + jnp.square(g[k])
+            acc_g[k] = acc_g[k] + g[k]
+        n += 1
+    out = {k: np.asarray(v / n) for k, v in acc.items()}
+    out.update({f"grad_{k}": np.asarray(v / n) for k, v in acc_g.items()})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fisher-weighted nested k-means (vectorized over rows).
+# ---------------------------------------------------------------------------
+
+
+def _weighted_kmeans_rows(v: np.ndarray, w: np.ndarray, k: int,
+                          iters: int = 18) -> tuple[np.ndarray, np.ndarray]:
+    """1-D weighted k-means run independently per row.
+
+    v, w: [R, N]; returns (codes [R, N] int, centroids [R, k]).
+    Centroids are kept sorted so codes are monotone in value.
+    """
+    R, N = v.shape
+    qs = (np.arange(k) + 0.5) / k
+    order = np.argsort(v, axis=1)
+    v_sorted = np.take_along_axis(v, order, axis=1)
+    w_sorted = np.take_along_axis(w, order, axis=1)
+    cw = np.cumsum(w_sorted, axis=1)
+    tot = cw[:, -1:] + 1e-12
+    cw = cw / tot
+    # Initialize at weighted quantiles.
+    cent = np.empty((R, k), np.float32)
+    for j, q in enumerate(qs):
+        idx = np.argmax(cw >= q, axis=1)
+        cent[:, j] = np.take_along_axis(v_sorted, idx[:, None], axis=1)[:, 0]
+    for _ in range(iters):
+        # Assignment by nearest centroid (1-D: threshold at midpoints).
+        mids = 0.5 * (cent[:, 1:] + cent[:, :-1])              # [R, k-1]
+        codes = np.zeros((R, N), np.int64)
+        for j in range(k - 1):
+            codes += (v > mids[:, j:j + 1]).astype(np.int64)
+        # Update: weighted means per cluster.
+        new_cent = cent.copy()
+        for j in range(k):
+            m = codes == j
+            wm = w * m
+            sw = wm.sum(axis=1)
+            sv = (wm * v).sum(axis=1)
+            has = sw > 0
+            new_cent[has, j] = (sv[has] / sw[has]).astype(np.float32)
+        new_cent = np.sort(new_cent, axis=1)
+        if np.allclose(new_cent, cent, atol=1e-7):
+            cent = new_cent
+            break
+        cent = new_cent
+    mids = 0.5 * (cent[:, 1:] + cent[:, :-1])
+    codes = np.zeros((R, N), np.int64)
+    for j in range(k - 1):
+        codes += (v > mids[:, j:j + 1]).astype(np.int64)
+    return codes, cent
+
+
+def _split_clusters(v: np.ndarray, w: np.ndarray, codes: np.ndarray,
+                    cent: np.ndarray, iters: int = 8):
+    """One incremental-upscale level: split every cluster in two.
+
+    v, w: [R, N]; codes: [R, N] in [0, K); cent: [R, K].
+    Returns (codes2 [R, N] in [0, 2K), cent2 [R, 2K]).
+    child code = parent*2 + side, so the nesting (MSB-prefix) property
+    holds by construction.
+    """
+    R, N = v.shape
+    K = cent.shape[1]
+    cent2 = np.empty((R, 2 * K), np.float32)
+    codes2 = np.zeros((R, N), np.int64)
+    for p in range(K):
+        m = codes == p
+        wm = (w * m).astype(np.float64)
+        sw = wm.sum(axis=1) + 1e-20
+        mu = (wm * v).sum(axis=1) / sw
+        var = (wm * (v - mu[:, None]) ** 2).sum(axis=1) / sw
+        sd = np.sqrt(var) + 1e-12
+        c0 = (mu - 0.6 * sd).astype(np.float32)
+        c1 = (mu + 0.6 * sd).astype(np.float32)
+        for _ in range(iters):
+            thr = 0.5 * (c0 + c1)
+            right = m & (v > thr[:, None])
+            left = m & ~right
+            wl = (w * left).sum(axis=1)
+            wr = (w * right).sum(axis=1)
+            vl = (w * left * v).sum(axis=1)
+            vr = (w * right * v).sum(axis=1)
+            hl = wl > 0
+            hr = wr > 0
+            nc0 = c0.copy()
+            nc1 = c1.copy()
+            nc0[hl] = (vl[hl] / wl[hl]).astype(np.float32)
+            nc1[hr] = (vr[hr] / wr[hr]).astype(np.float32)
+            c0, c1 = np.minimum(nc0, nc1), np.maximum(nc0, nc1)
+        thr = 0.5 * (c0 + c1)
+        side = (v > thr[:, None]) & m
+        codes2[m] = 2 * p
+        codes2[side] = 2 * p + 1
+        cent2[:, 2 * p] = c0
+        cent2[:, 2 * p + 1] = c1
+    return codes2, cent2
+
+
+def quantize_group(w: np.ndarray, fisher: np.ndarray):
+    """Nested-quantize one stacked group [L, out, in].
+
+    Returns (planes u8 [L, 6, out, in/8], luts {b: [L, out, 2**b]}).
+    """
+    L, out, n_in = w.shape
+    v = w.reshape(L * out, n_in).astype(np.float32)
+    f = fisher.reshape(L * out, n_in).astype(np.float32)
+    # Guard degenerate rows (all-zero fisher -> uniform weights).
+    f = f + f.mean(axis=1, keepdims=True) * 1e-3 + 1e-12
+    codes, cent = _weighted_kmeans_rows(v, f, 8)
+    luts = {3: cent.reshape(L, out, 8)}
+    for b in (4, 5, 6):
+        codes, cent = _split_clusters(v, f, codes, cent)
+        luts[b] = cent.reshape(L, out, 2 ** b)
+    planes = np.stack([
+        pack_codes_np(codes[i * out:(i + 1) * out].astype(np.int64))
+        for i in range(L)
+    ])  # [L, 6, out, in/8]
+    return planes, luts
+
+
+def quantize_model(name: str, calib_seqs: int = 24, seq: int = 128) -> None:
+    cfg = PRESETS[name]
+    params = {k: jnp.asarray(v) for k, v in
+              io.load_npz(io.art("models", name, "ckpt.npz")).items()}
+    calib = calib_batches(io.art("data", "synthweb_calib.bin"), calib_seqs, seq)
+
+    t0 = time.time()
+    print(f"[quantize:{name}] fisher over {calib_seqs}x{seq} tokens ...", flush=True)
+    fisher = fisher_diag(params, cfg, calib)
+    io.save_npz(io.art("models", name, "fisher.npz"), fisher)
+    print(f"[quantize:{name}] fisher done ({time.time() - t0:.1f}s)", flush=True)
+
+    out = {}
+    for g in GROUPS:
+        t1 = time.time()
+        planes, luts = quantize_group(np.asarray(params[g]), fisher[g])
+        out[f"planes_{g}"] = planes
+        for b, lut in luts.items():
+            out[f"lut{b}_{g}"] = lut
+        print(f"[quantize:{name}] group {g} {tuple(params[g].shape)} "
+              f"({time.time() - t1:.1f}s)", flush=True)
+    io.save_npz(io.art("models", name, "anyprec.npz"), out)
+    print(f"[quantize:{name}] total {time.time() - t0:.1f}s", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="dpl-tiny", choices=sorted(PRESETS))
+    ap.add_argument("--calib-seqs", type=int, default=24)
+    args = ap.parse_args()
+    quantize_model(args.model, args.calib_seqs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+"""Fig. 3 analysis: dynamic layer-wise sensitivity across decoding steps.
+
+(a) For one held-out sample, per transformer block j and decoding step t:
+    sensitivity(j, t) = NLL_{all-3bit}(t) − NLL_{block-j-at-4bit}(t)
+    (the paper's definition: perplexity decrease from applying 4-bit to
+    that layer while the rest stay at 3-bit).  L+1 teacher-forced
+    forwards.
+
+(b) Perplexity *trend* of three schemes on the same sample, via true
+    step-by-step decoding with a per-step per-block bit mask:
+      - oracle dynamic: at each step the top-20% blocks by (a)'s
+        sensitivity at that step run at 4-bit,
+      - static: the top-20% blocks by mean sensitivity run at 4-bit,
+      - uniform 3-bit.
+    The oracle is impractical at runtime (it peeks at the answer) — it is
+    the paper's indicator of the headroom DP-LLM goes after.
+
+Writes ``artifacts/analysis/fig3a.json`` and ``fig3b.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import io_utils as io
+from .finetune_p import load_level_stacks
+from .kernels.estimator import K_PROJ
+from .model import (ASYNC_GROUPS, GROUPS, ModelConfig, PRESETS, ce_per_token,
+                    decode_step_dual, kv_shape)
+
+
+def _nl(name: str) -> dict:
+    ckpt = io.load_npz(io.art("models", name, "ckpt.npz"))
+    return {k: jnp.asarray(v) for k, v in ckpt.items() if k not in GROUPS}
+
+
+def _lin_at_bits(levels: dict, bits_per_block: np.ndarray) -> dict:
+    """Materialize stacked linears with per-block bit choices (3..6)."""
+    out = {}
+    for g in GROUPS:
+        lv = levels[g]  # [L, 4, out, in]
+        idx = jnp.asarray(bits_per_block - 3, jnp.int32)
+        out[g] = jax.vmap(lambda l, i: l[i])(lv, idx)
+    return out
+
+
+def per_step_sensitivity(name: str, seq_len: int = 96):
+    cfg = PRESETS[name]
+    nl = _nl(name)
+    levels = load_level_stacks(name, cfg)
+    data = np.fromfile(io.art("data", "synthwiki_eval.bin"), np.uint16)
+    tokens = jnp.asarray(data[:seq_len + 1][None].astype(np.int32))
+
+    nll = jax.jit(lambda lin: ce_per_token(nl, lin, cfg, tokens))
+    base_bits = np.full(cfg.n_layers, 3)
+    base = np.asarray(nll(_lin_at_bits(levels, base_bits))[0])  # [S]
+    sens = np.zeros((cfg.n_layers, seq_len))
+    for j in range(cfg.n_layers):
+        bits = base_bits.copy()
+        bits[j] = 4
+        cur = np.asarray(nll(_lin_at_bits(levels, bits))[0])
+        sens[j] = base - cur
+    return sens, base
+
+
+def decode_with_mask_series(name: str, masks: np.ndarray, tokens: np.ndarray):
+    """Teacher-forced stepwise decode with per-step per-block 4-bit masks.
+
+    masks [S, L] in {0,1}: 1 -> block runs at 4-bit this step, else 3-bit.
+    Returns per-step NLL [S].
+    Implemented on the same dual-precision graph the runtime uses:
+    wl = 3-bit stacks, wh = 4-bit stacks; async groups take the mask via
+    use_h_async, sync groups via ±inf thresholds.
+    """
+    cfg = PRESETS[name]
+    nl = _nl(name)
+    levels = load_level_stacks(name, cfg)
+    wl = _lin_at_bits(levels, np.full(cfg.n_layers, 3))
+    wh = _lin_at_bits(levels, np.full(cfg.n_layers, 4))
+    est = {}
+    for g in GROUPS:
+        o, i = cfg.group_shape(g)
+        L = cfg.n_layers
+        est[f"G_{g}"] = jnp.zeros((L, K_PROJ, i))
+        est[f"lina_{g}"] = jnp.zeros(L)
+        est[f"linb_{g}"] = jnp.zeros(L)
+        est[f"uselin_{g}"] = jnp.ones(L)
+        # thr filled per step below
+
+    hd = cfg.head_dim
+    inv = 1.0 / (10000.0 ** (np.arange(0, hd, 2) / hd))
+
+    @jax.jit
+    def step(token, pos, cos, sin, kv, mask):
+        e = dict(est)
+        for g in GROUPS:
+            # est = lin_b = 0; thr<0 -> use high, thr>0 -> use low.
+            e[f"thr_{g}"] = jnp.where(mask > 0.5, -1e30, 1e30)
+        use_async = {g: mask for g in ASYNC_GROUPS}
+        logits, kv, _, _ = decode_step_dual(
+            nl, wl, wh, e, cfg, token, pos, cos, sin, kv, use_async,
+            jnp.float32(0.0))
+        return jax.nn.log_softmax(logits), kv
+
+    S = masks.shape[0]
+    kv = jnp.zeros(kv_shape(cfg))
+    nlls = []
+    for t in range(S):
+        cos = jnp.asarray(np.cos(t * inv), jnp.float32)
+        sin = jnp.asarray(np.sin(t * inv), jnp.float32)
+        lp, kv = step(jnp.int32(tokens[t]), jnp.int32(t), cos, sin, kv,
+                      jnp.asarray(masks[t], jnp.float32))
+        nlls.append(float(-lp[tokens[t + 1]]))
+    return np.asarray(nlls)
+
+
+def run(name: str, seq_len: int = 96, top_frac: float = 0.2):
+    cfg = PRESETS[name]
+    sens, base_nll = per_step_sensitivity(name, seq_len)
+    k = max(1, int(round(top_frac * cfg.n_layers)))
+
+    # Fig 3a: top-k mask per step.
+    order = np.argsort(-sens, axis=0)
+    topmask = np.zeros_like(sens, dtype=int)
+    for t in range(sens.shape[1]):
+        topmask[order[:k, t], t] = 1
+    io.save_json(io.art("analysis", f"fig3a_{name}.json"), {
+        "model": name, "top_frac": top_frac, "seq_len": seq_len,
+        "sensitivity": [[round(float(x), 6) for x in row] for row in sens],
+        "top_mask": topmask.tolist(),
+    })
+
+    data = np.fromfile(io.art("data", "synthwiki_eval.bin"), np.uint16)
+    tokens = data[:seq_len + 1].astype(np.int64)
+
+    # Oracle dynamic vs static vs uniform-3bit.
+    masks_dyn = topmask.T.astype(np.float64)                 # [S, L]
+    mean_sens = sens.mean(axis=1)
+    static_idx = np.argsort(-mean_sens)[:k]
+    masks_sta = np.zeros((seq_len, cfg.n_layers))
+    masks_sta[:, static_idx] = 1.0
+    masks_uni = np.zeros((seq_len, cfg.n_layers))
+
+    out = {"model": name, "steps": seq_len, "k": k}
+    for key, masks in (("dynamic_oracle", masks_dyn), ("static", masks_sta),
+                       ("uniform3", masks_uni)):
+        nll = decode_with_mask_series(name, masks, tokens)
+        trend = np.exp(np.cumsum(nll) / (np.arange(seq_len) + 1))
+        out[key] = {
+            "ppl_trend": [round(float(x), 4) for x in trend],
+            "final_ppl": float(trend[-1]),
+        }
+        print(f"[fig3:{name}] {key}: ppl {trend[-1]:.3f}", flush=True)
+    io.save_json(io.art("analysis", f"fig3b_{name}.json"), out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="dpl-tiny")
+    ap.add_argument("--steps", type=int, default=96)
+    args = ap.parse_args()
+    run(args.model, args.steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,258 @@
+"""Phase 3: average-precision → threshold translation + estimator fitting.
+
+For each linear with candidate set (l, h) and fine-tuned average precision
+p (from Phase 2):
+
+  * run the calibration stream through the soft-mixed model and record,
+    per token: the exact relative error  e = ‖ΔW x‖  (ΔW = W_h − W_l),
+    the input norm ‖x‖, and the *uncalibrated* JL projection ‖G₀x‖ with
+    G₀ = AΔW, A ~ N(0, 1/k), k = 64  (paper §5.1);
+  * threshold  T = r-quantile of the e distribution, r = 1 − (p − l)
+    (paper Algorithm 1 Phase 3);
+  * hybrid estimator selection: fit e ≈ a‖x‖ + b; if R² ≥ R²_th (0.9) the
+    layer uses the linear estimator, else the JL estimator with the
+    per-layer scale calibration  c = Σ(e·‖G₀x‖)/Σ‖G₀x‖²,  G = c·G₀
+    (the paper's "tune G to match the input distribution").
+
+Writes ``dpllm_<tag>.json`` (runtime selector config consumed by
+rust/src/selector) and ``estimators_<tag>.npz`` (calibrated G stacks).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import io_utils as io
+from .assign import linear_index, targets_for_budget
+from .finetune_p import load_level_stacks, mixed_forward
+from .model import (GROUPS, ModelConfig, PRESETS, apply_rope, rmsnorm,
+                    rope_tables)
+from .quantize import calib_batches
+
+R2_TH = 0.9
+K_PROJ = 64
+
+
+# ---------------------------------------------------------------------------
+# Collector forward: soft-mixed activations + per-linear statistics.
+# ---------------------------------------------------------------------------
+
+
+def collect_stats(nl: dict, levels: dict, p: dict, dw: dict, g0: dict,
+                  cfg: ModelConfig, tokens: jnp.ndarray):
+    """Returns {g: (e, xn, gn)} with shapes [B, S, L] each.
+
+    e  = ‖ΔW x‖ exact relative error per token,
+    xn = ‖x‖ input norm, gn = ‖G₀ x‖ raw JL estimate.
+    Activations flow through the soft-mixed weights (the runtime stream is
+    the hard-switched version; the soft mix is its expectation).
+    """
+    B, S = tokens.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    x = nl["tok_emb"][tokens]
+    pos = jnp.arange(S)
+    cos, sin = rope_tables(cfg, pos)
+    cos = cos[None, :, None, :]
+    sin = sin[None, :, None, :]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+
+    def mixw(levels_l, p_i):
+        l_f = jnp.floor(p_i)
+        l_idx = jnp.clip(l_f.astype(jnp.int32) - 3, 0, 3)
+        h_idx = jnp.clip(l_idx + 1, 0, 3)
+        r = jnp.clip(1.0 - (p_i - l_f), 0.0, 1.0)
+        wl = jax.lax.dynamic_index_in_dim(levels_l, l_idx, 0, keepdims=False)
+        wh = jax.lax.dynamic_index_in_dim(levels_l, h_idx, 0, keepdims=False)
+        return r * wl + (1.0 - r) * wh
+
+    def stats(x_in, dw_l, g0_l):
+        """x_in [B,S,n] -> (e, xn, gn) each [B,S]."""
+        e = jnp.linalg.norm(x_in @ dw_l.T, axis=-1)
+        xn = jnp.linalg.norm(x_in, axis=-1)
+        gn = jnp.linalg.norm(x_in @ g0_l.T, axis=-1)
+        return jnp.stack([e, xn, gn], -1)  # [B,S,3]
+
+    def block(x, layer):
+        ln1, ln2, lv, pv, dwl, g0l = layer
+        h = rmsnorm(x, ln1)
+        st = {}
+        for g in ("wq", "wk", "wv"):
+            st[g] = stats(h, dwl[g], g0l[g])
+        q = (h @ mixw(lv["wq"], pv["wq"]).T).reshape(B, S, H, hd)
+        k = (h @ mixw(lv["wk"], pv["wk"]).T).reshape(B, S, H, hd)
+        v = (h @ mixw(lv["wv"], pv["wv"]).T).reshape(B, S, H, hd)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+        att = jnp.where(mask[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o_in = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B, S, H * hd)
+        st["wo"] = stats(o_in, dwl["wo"], g0l["wo"])
+        x = x + o_in @ mixw(lv["wo"], pv["wo"]).T
+        h2 = rmsnorm(x, ln2)
+        st["wg"] = stats(h2, dwl["wg"], g0l["wg"])
+        st["wu"] = stats(h2, dwl["wu"], g0l["wu"])
+        gate = jax.nn.silu(h2 @ mixw(lv["wg"], pv["wg"]).T)
+        up = h2 @ mixw(lv["wu"], pv["wu"]).T
+        mid = gate * up
+        st["wd"] = stats(mid, dwl["wd"], g0l["wd"])
+        x = x + mid @ mixw(lv["wd"], pv["wd"]).T
+        out = jnp.stack([st[g] for g in GROUPS], 0)  # [7, B, S, 3]
+        return x, out
+
+    xs = (nl["ln1"], nl["ln2"], levels, p, dw, g0)
+    _, per_layer = jax.lax.scan(block, x, xs)  # [L, 7, B, S, 3]
+    return per_layer
+
+
+# ---------------------------------------------------------------------------
+# Candidate pairs + ΔW / G₀ construction.
+# ---------------------------------------------------------------------------
+
+
+def candidate_pair(p_i: float, fixed_lh=None) -> tuple[int, int]:
+    if fixed_lh is not None:
+        return int(fixed_lh[0]), int(fixed_lh[1])
+    l = int(np.floor(p_i))
+    h = int(np.ceil(p_i))
+    return l, max(h, l)
+
+
+def build_dw_g0(levels: dict, p: dict, cfg: ModelConfig, seed: int,
+                fixed_lh=None):
+    """ΔW = W_h − W_l and G₀ = AΔW stacks per group (numpy)."""
+    rng = np.random.default_rng(seed)
+    dw, g0, pairs = {}, {}, {}
+    for g in GROUPS:
+        out_d, in_d = cfg.group_shape(g)
+        L = cfg.n_layers
+        dw_g = np.zeros((L, out_d, in_d), np.float32)
+        g0_g = np.zeros((L, K_PROJ, in_d), np.float32)
+        pr = []
+        lv = np.asarray(levels[g])
+        for layer in range(L):
+            l, h = candidate_pair(float(p[g][layer]), fixed_lh)
+            pr.append((l, h))
+            if h > l:
+                d = lv[layer, h - 3] - lv[layer, l - 3]
+                dw_g[layer] = d
+                A = rng.standard_normal((K_PROJ, out_d)).astype(np.float32)
+                A /= np.sqrt(K_PROJ)
+                g0_g[layer] = A @ d
+        dw[g] = jnp.asarray(dw_g)
+        g0[g] = jnp.asarray(g0_g)
+        pairs[g] = pr
+    return dw, g0, pairs
+
+
+# ---------------------------------------------------------------------------
+# Main calibration.
+# ---------------------------------------------------------------------------
+
+
+def calibrate(name: str, budget: int, tag: str, calib_seqs: int = 24,
+              seq: int = 128, calib_set: str = "synthweb",
+              fixed_lh=None) -> None:
+    cfg = PRESETS[name]
+    base = ("calib", name, f"budget{budget}")
+    pconf = io.load_json(io.art(*base, f"dpllm_p_{tag}.json"))
+    idx = linear_index(cfg)
+    p_list = pconf["p"]
+    p = {g: jnp.asarray([p_list[i] for i, (layer, gg) in enumerate(idx)
+                         if gg == g]) for g in GROUPS}
+
+    nl_all = io.load_npz(io.art("models", name, "ckpt.npz"))
+    nl = {k: jnp.asarray(v) for k, v in nl_all.items() if k not in GROUPS}
+    levels = load_level_stacks(name, cfg)
+    dw, g0, pairs = build_dw_g0(levels, p, cfg, seed=1234, fixed_lh=fixed_lh)
+
+    calib = calib_batches(io.art("data", f"{calib_set}_calib.bin"),
+                          calib_seqs, seq, seed=29)
+    coll = jax.jit(lambda toks: collect_stats(nl, levels, p, dw, g0, cfg, toks))
+    chunks = []
+    bsz = 4
+    for i in range(0, len(calib), bsz):
+        st = coll(jnp.asarray(calib[i:i + bsz]))      # [L, 7, B, S, 3]
+        chunks.append(np.asarray(st))
+    st = np.concatenate(chunks, axis=2)               # [L, 7, ΣB, S, 3]
+    L = cfg.n_layers
+
+    cal_g = {}
+    records = []
+    n_lin_est, n_jl_est = 0, 0
+    for li, (layer, g) in enumerate(idx):
+        gi = GROUPS.index(g)
+        e = st[layer, gi, :, :, 0].ravel()
+        xn = st[layer, gi, :, :, 1].ravel()
+        gn = st[layer, gi, :, :, 2].ravel()
+        l, h = pairs[g][layer]
+        p_i = float(p_list[li])
+        r = 1.0 - (p_i - l) if h > l else 1.0
+        if h == l or e.max() <= 1e-12:
+            rec = {"l": l, "h": h, "p": p_i, "thr": float("1e30"),
+                   "use_lin": 1, "lin_a": 0.0, "lin_b": 0.0,
+                   "r2": 1.0, "g_scale": 0.0}
+            cal_g.setdefault(g, np.zeros((L, K_PROJ, cfg.group_shape(g)[1]),
+                                         np.float32))
+            records.append(rec)
+            continue
+        # Threshold = r-quantile of the relative-error distribution.
+        if r >= 1.0 - 1e-9:
+            thr = float(e.max() * 1.0001)
+        elif r <= 1e-9:
+            thr = 0.0
+        else:
+            thr = float(np.quantile(e, r))
+        # Linear fit e ≈ a‖x‖+b.
+        a, b = np.polyfit(xn, e, 1)
+        pred = a * xn + b
+        ss_res = float(((e - pred) ** 2).sum())
+        ss_tot = float(((e - e.mean()) ** 2).sum()) + 1e-20
+        r2 = 1.0 - ss_res / ss_tot
+        use_lin = bool(r2 >= R2_TH)
+        # JL scale calibration.
+        c = float((e * gn).sum() / ((gn * gn).sum() + 1e-20))
+        arr = cal_g.setdefault(g, np.zeros((L, K_PROJ, cfg.group_shape(g)[1]),
+                                           np.float32))
+        arr[layer] = c * np.asarray(g0[g][layer])
+        if use_lin:
+            n_lin_est += 1
+        else:
+            n_jl_est += 1
+        records.append({"l": l, "h": h, "p": p_i, "thr": thr,
+                        "use_lin": int(use_lin), "lin_a": float(a),
+                        "lin_b": float(b), "r2": float(r2), "g_scale": c})
+
+    out = {
+        "model": name, "budget": budget, "tag": tag,
+        "target": pconf["target"], "calib_set": calib_set,
+        "r2_threshold": R2_TH, "k_proj": K_PROJ,
+        "n_linear_estimators": n_lin_est, "n_jl_estimators": n_jl_est,
+        "linears": records,
+    }
+    io.save_json(io.art(*base, f"dpllm_{tag}.json"), out)
+    io.save_npz(io.art(*base, f"estimators_{tag}.npz"),
+                {f"G_{g}": cal_g[g] for g in GROUPS})
+    print(f"[thresholds:{name}/b{budget}/{tag}] {n_lin_est} linear / "
+          f"{n_jl_est} JL estimators", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="dpl-tiny", choices=sorted(PRESETS))
+    ap.add_argument("--budget", type=int, default=5)
+    ap.add_argument("--tag", default="", help="empty = all targets")
+    ap.add_argument("--calib-set", default="synthweb")
+    args = ap.parse_args()
+    tags = ([args.tag] if args.tag
+            else [f"{t:.2f}" for t in targets_for_budget(args.budget)])
+    for t in tags:
+        calibrate(args.model, args.budget, t, calib_set=args.calib_set)
+
+
+if __name__ == "__main__":
+    main()

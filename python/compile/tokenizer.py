@@ -1,0 +1,146 @@
+"""Byte-level BPE tokenizer: trainer and encoder.
+
+Build-time only; the runtime encoder/decoder lives in ``rust/src/tokenizer``
+and consumes the ``tokenizer.json`` this module writes.  The scheme is a
+small GPT-2-style byte BPE:
+
+  * base vocabulary = 256 byte tokens (+ <pad>=256, <bos>=257, <eos>=258),
+  * pre-tokenization splits on whitespace, keeping a leading space attached
+    to the following word (so ``" the"`` is one pre-token),
+  * merges are learned on word-type frequencies (fast, corpus-size
+    independent after the counting pass),
+  * encoding applies merges greedily by rank within each pre-token.
+
+Vocab ids: 0..255 bytes, 256..258 specials, 259.. merge results.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from collections import Counter
+
+import numpy as np
+
+PAD_ID = 256
+BOS_ID = 257
+EOS_ID = 258
+N_SPECIAL = 3
+
+_PRETOK = re.compile(rb" ?[^\s]+|\s+")
+
+
+def pretokenize(data: bytes) -> list[bytes]:
+    return _PRETOK.findall(data)
+
+
+def train_bpe(text: str, vocab_size: int = 1024, max_word_types: int = 60000):
+    """Learn merge rules. Returns list of (left_id, right_id) in rank order."""
+    data = text.encode("utf-8")
+    words = Counter(pretokenize(data))
+    if len(words) > max_word_types:
+        words = Counter(dict(words.most_common(max_word_types)))
+
+    # Each word is a tuple of token ids, starting as raw bytes.
+    seqs: dict[tuple[int, ...], int] = {
+        tuple(w): c for w, c in words.items()
+    }
+    merges: list[tuple[int, int]] = []
+    next_id = 256 + N_SPECIAL
+    target_merges = vocab_size - next_id
+    for _ in range(target_merges):
+        pair_counts: Counter = Counter()
+        for seq, c in seqs.items():
+            for a, b in zip(seq, seq[1:]):
+                pair_counts[(a, b)] += c
+        if not pair_counts:
+            break
+        (a, b), cnt = pair_counts.most_common(1)[0]
+        if cnt < 2:
+            break
+        merges.append((a, b))
+        new_seqs: dict[tuple[int, ...], int] = {}
+        for seq, c in seqs.items():
+            out = []
+            i = 0
+            while i < len(seq):
+                if i + 1 < len(seq) and seq[i] == a and seq[i + 1] == b:
+                    out.append(next_id)
+                    i += 2
+                else:
+                    out.append(seq[i])
+                    i += 1
+            t = tuple(out)
+            new_seqs[t] = new_seqs.get(t, 0) + c
+        seqs = new_seqs
+        next_id += 1
+    return merges
+
+
+class Tokenizer:
+    def __init__(self, merges: list[tuple[int, int]]):
+        self.merges = merges
+        self.ranks = {pair: i for i, pair in enumerate(merges)}
+        self.vocab_size = 256 + N_SPECIAL + len(merges)
+        # id -> byte string, for decoding
+        self._pieces: list[bytes] = [bytes([i]) for i in range(256)]
+        self._pieces += [b"<pad>", b"<bos>", b"<eos>"]
+        for a, b in merges:
+            self._pieces.append(self._pieces[a] + self._pieces[b])
+
+    # -- encoding ---------------------------------------------------------
+    def _bpe_word(self, word: bytes) -> list[int]:
+        seq = list(word)
+        if len(seq) < 2:
+            return seq
+        while True:
+            best_rank = None
+            best_i = -1
+            for i in range(len(seq) - 1):
+                r = self.ranks.get((seq[i], seq[i + 1]))
+                if r is not None and (best_rank is None or r < best_rank):
+                    best_rank, best_i = r, i
+            if best_rank is None:
+                return seq
+            seq[best_i:best_i + 2] = [256 + N_SPECIAL + best_rank]
+
+    def encode(self, text: str, bos: bool = False, eos: bool = False) -> list[int]:
+        ids: list[int] = [BOS_ID] if bos else []
+        for w in pretokenize(text.encode("utf-8")):
+            ids.extend(self._bpe_word(w))
+        if eos:
+            ids.append(EOS_ID)
+        return ids
+
+    def decode(self, ids) -> str:
+        out = b"".join(
+            self._pieces[i] for i in ids
+            if 0 <= i < len(self._pieces) and i not in (PAD_ID, BOS_ID, EOS_ID)
+        )
+        return out.decode("utf-8", errors="replace")
+
+    # -- serialization ----------------------------------------------------
+    def save(self, path: str) -> None:
+        obj = {
+            "type": "byte_bpe",
+            "vocab_size": self.vocab_size,
+            "specials": {"pad": PAD_ID, "bos": BOS_ID, "eos": EOS_ID},
+            "merges": [[a, b] for a, b in self.merges],
+        }
+        with open(path, "w") as f:
+            json.dump(obj, f)
+
+    @classmethod
+    def load(cls, path: str) -> "Tokenizer":
+        with open(path) as f:
+            obj = json.load(f)
+        assert obj["type"] == "byte_bpe"
+        return cls([tuple(m) for m in obj["merges"]])
+
+
+def encode_to_bin(tok: Tokenizer, text: str, path: str) -> int:
+    """Tokenize `text` and write a little-endian uint16 binary file."""
+    ids = tok.encode(text)
+    arr = np.asarray(ids, dtype=np.uint16)
+    arr.tofile(path)
+    return len(ids)

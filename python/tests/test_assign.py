@@ -1,0 +1,68 @@
+"""Phase-1 / baseline assignment solver invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.assign import BITS, solve_assignment
+
+
+def _rand_problem(rng, n=24):
+    # Convex-ish decreasing costs in bits, like real quantization error.
+    base = rng.random(n) * 10 + 0.1
+    omega = np.stack([base * (0.5 ** bi) for bi in range(len(BITS))], axis=1)
+    M = rng.integers(1, 5, size=n).astype(float) * 1000
+    return omega, M
+
+
+def _avg(bits, M):
+    return float((bits * M).sum() / M.sum())
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       target=st.sampled_from([3.25, 3.5, 4.0, 4.5, 5.0, 5.5]))
+def test_budget_respected_and_tight(seed, target):
+    rng = np.random.default_rng(seed)
+    omega, M = _rand_problem(rng)
+    bits = solve_assignment(omega, M, target)
+    avg = _avg(bits, M)
+    assert avg <= target + 0.006
+    # With convex costs the solver should get close to the target from below
+    # (paper matches within 0.005 bits; granularity here is 1 bit / layer).
+    assert avg >= target - 1.0 / len(M) * 4 - 0.05
+
+
+def test_caps_respected():
+    rng = np.random.default_rng(0)
+    omega, M = _rand_problem(rng)
+    caps = np.full(len(M), 4)
+    caps[:5] = 6
+    bits = solve_assignment(omega, M, 4.0, max_bits=caps)
+    assert np.all(bits <= caps)
+
+
+def test_monotone_in_budget():
+    rng = np.random.default_rng(1)
+    omega, M = _rand_problem(rng)
+    lo = solve_assignment(omega, M, 3.5)
+    hi = solve_assignment(omega, M, 5.0)
+    assert _avg(lo, M) < _avg(hi, M)
+
+
+def test_sensitive_layers_get_more_bits():
+    """A layer whose error decays much faster with bits should win bits."""
+    n = 10
+    omega = np.ones((n, 4))
+    # layer 0: huge benefit from bits; others: none.
+    omega[0] = [100.0, 1.0, 0.01, 0.0001]
+    M = np.ones(n) * 1000
+    bits = solve_assignment(omega, M, 3.3)
+    assert bits[0] == max(bits)
+
+
+def test_uniform_costs_give_near_uniform_bits():
+    n = 8
+    omega = np.tile([8.0, 4.0, 2.0, 1.0], (n, 1)).astype(float)
+    M = np.ones(n)
+    bits = solve_assignment(omega, M, 4.0)
+    assert abs(_avg(bits, M) - 4.0) < 0.51

@@ -1,0 +1,101 @@
+"""Corpus/task generators: determinism, split disjointness, answer formats."""
+
+import re
+
+import numpy as np
+
+from compile import corpus as C
+
+
+def test_determinism():
+    a = C.gen_synthwiki(np.random.default_rng(5), 20)
+    b = C.gen_synthwiki(np.random.default_rng(5), 20)
+    assert a == b
+
+
+def test_wiki_web_distinct_registers():
+    wiki = C.gen_synthwiki(np.random.default_rng(0), 50)
+    web = C.gen_synthweb(np.random.default_rng(0), 100)
+    assert "population" in wiki and "population" not in web
+    assert "stars" in web
+
+
+def test_task_split_disjoint():
+    for task in C.TASKS:
+        tr, ev = C.gen_task_split(task, seed=3, n_train=300, n_eval=60)
+        assert len(ev) == 60
+        tr_prompts = {s.prompt for s in tr}
+        assert not tr_prompts.intersection({s.prompt for s in ev})
+
+
+def test_arith_answers_consistent():
+    rng = np.random.default_rng(1)
+    for s in C.gen_task_samples("arith", rng, 200):
+        m = re.search(r"#### (-?\d+)$", s.answer)
+        assert m, s.answer
+        # Answer must equal the last computed value in the work.
+        nums = re.findall(r"= (-?\d+)", s.answer)
+        assert nums and nums[-1] == m.group(1)
+
+
+def test_listfn_answers_consistent():
+    rng = np.random.default_rng(2)
+    for s in C.gen_task_samples("listfn", rng, 200):
+        m = re.match(r"Task: (.+)\. Input: (.+)\. Output: ", s.prompt)
+        assert m
+        desc, xs_s = m.group(1), m.group(2)
+        xs = [int(v) for v in xs_s.split()]
+        if desc.startswith("add "):
+            k = int(desc.split()[1])
+            want = " ".join(str(v + k) for v in xs)
+        elif desc == "double each item":
+            want = " ".join(str(2 * v) for v in xs)
+        elif desc == "reverse the list":
+            want = " ".join(str(v) for v in reversed(xs))
+        elif desc == "take the first item":
+            want = str(xs[0])
+        elif desc == "take the last item":
+            want = str(xs[-1])
+        else:
+            want = str(len(xs))
+        assert s.answer == want
+
+
+def test_dates_answers_consistent():
+    rng = np.random.default_rng(3)
+    for s in C.gen_task_samples("dates", rng, 200):
+        m = re.match(
+            r"Question: which day comes (\w+) days (after|before) (\w+)\? "
+            r"Options: (.+)\. Answer: ", s.prompt)
+        assert m, s.prompt
+        words = {v: k for k, v in C._SPELLED.items()}
+        off = words[m.group(1)]
+        sign = 1 if m.group(2) == "after" else -1
+        start = C.WEEKDAYS.index(m.group(3))
+        want_day = C.WEEKDAYS[(start + sign * off) % 7]
+        opts = dict(re.findall(r"\((\w)\) (\w+)", m.group(4)))
+        letter = s.answer.strip("()")
+        assert opts[letter] == want_day
+
+
+def test_algebra_answers_consistent():
+    rng = np.random.default_rng(4)
+    for s in C.gen_task_samples("algebra", rng, 200):
+        m = re.match(r"Solve: (?:(\d+)x|x)(?: \+ (\d+))? = (\d+)\.", s.prompt)
+        assert m, s.prompt
+        a = int(m.group(1) or 1)
+        b = int(m.group(2) or 0)
+        c = int(m.group(3))
+        x = (c - b) // a
+        assert a * x + b == c
+        assert s.answer.endswith(f"x = {x}")
+
+
+def test_build_corpus_structure():
+    blobs = C.build_corpus(seed=1, wiki_articles=30, web_docs=50,
+                           task_train=20, task_eval=8, instruct_train=10)
+    assert len(blobs["train_text"]) > 10_000
+    assert set(blobs["tasks"]) == {"algebra", "arith", "dates", "instruct",
+                                   "listfn"}
+    for task, (tr, ev) in blobs["tasks"].items():
+        assert len(ev) <= 8 and len(ev) > 0

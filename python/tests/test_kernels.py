@@ -1,0 +1,118 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/bitwidths; assert_allclose against ref.py is the
+core correctness signal of the kernel layer.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.anyprec_gemv import anyprec_gemv, vmem_bytes
+from compile.kernels.estimator import jl_estimate
+
+
+def random_store(rng, out_dim: int, n_in: int):
+    """A random-but-valid bitplane store + nested LUT family."""
+    code6 = rng.integers(0, 64, size=(out_dim, n_in), dtype=np.int64)
+    planes = ref.pack_codes_np(code6)
+    luts = {}
+    for b in range(3, 7):
+        luts[b] = rng.standard_normal((out_dim, 2 ** b)).astype(np.float32)
+    return planes, luts
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    out_tiles=st.integers(1, 3),
+    in_bytes=st.sampled_from([2, 4, 8, 24]),
+    bits=st.integers(3, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_anyprec_gemv_matches_ref(out_tiles, in_bytes, bits, seed):
+    rng = np.random.default_rng(seed)
+    tile = 16
+    out_dim, n_in = out_tiles * tile, in_bytes * 8
+    planes, luts = random_store(rng, out_dim, n_in)
+    x = rng.standard_normal(n_in).astype(np.float32)
+    got = anyprec_gemv(jnp.asarray(planes), jnp.asarray(luts[bits]),
+                       jnp.asarray(x), bits, tile_out=tile)
+    want = ref.anyprec_gemv_ref(jnp.asarray(planes), jnp.asarray(luts[bits]),
+                                jnp.asarray(x), bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_anyprec_gemv_model_shapes():
+    """The exact shapes the dpl models use."""
+    rng = np.random.default_rng(0)
+    for out_dim, n_in in [(192, 192), (512, 192), (192, 512), (256, 256)]:
+        planes, luts = random_store(rng, out_dim, n_in)
+        x = rng.standard_normal(n_in).astype(np.float32)
+        for bits in (3, 6):
+            got = anyprec_gemv(jnp.asarray(planes), jnp.asarray(luts[bits]),
+                               jnp.asarray(x), bits)
+            want = ref.anyprec_gemv_ref(jnp.asarray(planes),
+                                        jnp.asarray(luts[bits]),
+                                        jnp.asarray(x), bits)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-4, atol=1e-4)
+
+
+def test_prefix_nesting_of_codes():
+    """code_b must be the MSB prefix of code_{b+1} by format definition."""
+    rng = np.random.default_rng(1)
+    planes, _ = random_store(rng, 32, 64)
+    p = jnp.asarray(planes)
+    for b in range(3, 6):
+        cb = ref.codes_from_planes(p, b)
+        cb1 = ref.codes_from_planes(p, b + 1)
+        np.testing.assert_array_equal(np.asarray(cb), np.asarray(cb1) >> 1)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    k=st.sampled_from([8, 64]),
+    n=st.sampled_from([64, 192, 704]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_jl_estimator_matches_ref(k, n, seed):
+    rng = np.random.default_rng(seed)
+    G = rng.standard_normal((k, n)).astype(np.float32)
+    x = rng.standard_normal(n).astype(np.float32)
+    got = float(jl_estimate(jnp.asarray(G), jnp.asarray(x))[0])
+    want = float(ref.jl_norm_ref(jnp.asarray(G), jnp.asarray(x)))
+    assert got == pytest.approx(want, rel=1e-5)
+
+
+def test_jl_concentration():
+    """JL property: ‖Ax‖ concentrates around ‖x‖ for A ~ N(0,1/k)."""
+    rng = np.random.default_rng(7)
+    k, n = 64, 512
+    hits = 0
+    trials = 50
+    for _ in range(trials):
+        A = (rng.standard_normal((k, n)) / np.sqrt(k)).astype(np.float32)
+        x = rng.standard_normal(n).astype(np.float32)
+        est = float(jl_estimate(jnp.asarray(A), jnp.asarray(x))[0])
+        if abs(est - np.linalg.norm(x)) / np.linalg.norm(x) < 0.25:
+            hits += 1
+    assert hits >= trials * 0.85, f"only {hits}/{trials} within 25%"
+
+
+def test_vmem_budget():
+    """Default tiling keeps one grid step well under a 16 MB VMEM budget."""
+    for bits in (3, 6):
+        assert vmem_bytes(bits, 64, 1024) < 16 * 2**20
+
+
+def test_unpack_bit_order():
+    """Byte k bit j maps to weight column 8k + j (little-bit order)."""
+    planes = np.zeros((6, 1, 2), np.uint8)
+    planes[0, 0, 0] = 0b00000010  # MSB plane, column 1
+    planes[5, 0, 1] = 0b00000001  # LSB plane, column 8
+    bits = np.asarray(ref.unpack_planes(jnp.asarray(planes)))
+    assert bits[0, 0, 1] == 1 and bits[0, 0, 0] == 0
+    assert bits[5, 0, 8] == 1

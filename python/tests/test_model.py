@@ -1,0 +1,160 @@
+"""L2 model correctness: causality, serving-graph vs training-forward parity."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.estimator import K_PROJ
+from compile.model import (ASYNC_GROUPS, GROUPS, ModelConfig, decode_step_dual,
+                           extract_linears, forward, init_params, kv_shape,
+                           nonlinear_params, prefill)
+
+CFG = ModelConfig("test", vocab=64, d_model=32, n_layers=2, n_heads=2,
+                  d_ff=48, max_seq=24)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, seed=0)
+
+
+def _rope(pos):
+    hd = CFG.head_dim
+    inv = 1.0 / (CFG.rope_theta ** (np.arange(0, hd, 2) / hd))
+    return (jnp.asarray(np.cos(pos * inv), jnp.float32),
+            jnp.asarray(np.sin(pos * inv), jnp.float32))
+
+
+def _rope_seq(P):
+    hd = CFG.head_dim
+    inv = 1.0 / (CFG.rope_theta ** (np.arange(0, hd, 2) / hd))
+    ang = np.arange(P)[:, None] * inv[None, :]
+    return (jnp.asarray(np.cos(ang), jnp.float32),
+            jnp.asarray(np.sin(ang), jnp.float32))
+
+
+def _zero_est(cfg, thr_val=1e30):
+    est = {}
+    for g in GROUPS:
+        o, i = cfg.group_shape(g)
+        L = cfg.n_layers
+        est[f"G_{g}"] = jnp.zeros((L, K_PROJ, i))
+        est[f"lina_{g}"] = jnp.zeros(L)
+        est[f"linb_{g}"] = jnp.zeros(L)
+        est[f"uselin_{g}"] = jnp.ones(L)
+        est[f"thr_{g}"] = jnp.full(L, thr_val)
+    return est
+
+
+def test_forward_shapes(params):
+    toks = jnp.zeros((2, 10), jnp.int32)
+    logits = forward(params, CFG, toks)
+    assert logits.shape == (2, 10, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_causality(params):
+    """Changing a future token must not change past logits."""
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, CFG.vocab, size=(1, 12)).astype(np.int32)
+    b = a.copy()
+    b[0, 8:] = (b[0, 8:] + 7) % CFG.vocab
+    la = np.asarray(forward(params, CFG, jnp.asarray(a)))
+    lb = np.asarray(forward(params, CFG, jnp.asarray(b)))
+    np.testing.assert_allclose(la[0, :8], lb[0, :8], rtol=2e-4, atol=2e-5)
+    assert np.abs(la[0, 8:] - lb[0, 8:]).max() > 1e-4
+
+
+def test_decode_step_matches_forward(params):
+    """Teacher-forced stepwise decode through the dual graph (wl == wh ==
+    fp weights) must reproduce the training forward's logits."""
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, CFG.vocab, size=14).astype(np.int32)
+    ref_logits = np.asarray(forward(params, CFG, jnp.asarray(toks[None])))[0]
+
+    nl = nonlinear_params(params)
+    lin = extract_linears(params)
+    est = _zero_est(CFG)
+    use_async = {g: jnp.zeros(CFG.n_layers) for g in ASYNC_GROUPS}
+    kv = jnp.zeros(kv_shape(CFG))
+    for t, tok in enumerate(toks):
+        logits, kv, ests, use_eff = decode_step_dual(
+            nl, lin, lin, est, CFG, jnp.int32(tok), jnp.int32(t), *_rope(t), kv,
+            use_async, jnp.float32(0.0))
+        np.testing.assert_allclose(np.asarray(logits), ref_logits[t],
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_decode_selection_switches_weights(params):
+    """use_h flags must actually switch the multiplied weights."""
+    nl = nonlinear_params(params)
+    wl = extract_linears(params)
+    wh = {g: wl[g] * 2.0 for g in GROUPS}  # distinct high weights
+    est = _zero_est(CFG)
+    kv = jnp.zeros(kv_shape(CFG))
+    zeros = {g: jnp.zeros(CFG.n_layers) for g in ASYNC_GROUPS}
+    ones = {g: jnp.ones(CFG.n_layers) for g in ASYNC_GROUPS}
+    lo, _, _, use_lo = decode_step_dual(nl, wl, wh, est, CFG, jnp.int32(3),
+                                        jnp.int32(0), *_rope(0), kv, zeros, jnp.float32(0.0))
+    hi, _, _, use_hi = decode_step_dual(nl, wl, wh, est, CFG, jnp.int32(3),
+                                        jnp.int32(0), *_rope(0), kv, ones, jnp.float32(0.0))
+    assert float(jnp.abs(lo - hi).max()) > 1e-3
+    for g in ASYNC_GROUPS:
+        assert float(use_lo[g].sum()) == 0.0
+        assert float(use_hi[g].sum()) == CFG.n_layers
+
+
+def test_decode_exact_mode_thresholds(params):
+    """mode_exact=1: sync+async selection in-graph from ‖W_h x − W_l x‖."""
+    nl = nonlinear_params(params)
+    wl = extract_linears(params)
+    wh = {g: wl[g] * 1.5 for g in GROUPS}
+    kv = jnp.zeros(kv_shape(CFG))
+    zeros = {g: jnp.zeros(CFG.n_layers) for g in ASYNC_GROUPS}
+    # thr = 0 -> every exact error > 0 -> everything selects high.
+    est = _zero_est(CFG, thr_val=0.0)
+    _, _, ests, use_eff = decode_step_dual(nl, wl, wh, est, CFG, jnp.int32(5),
+                                           jnp.int32(0), *_rope(0), kv, zeros,
+                                           jnp.float32(1.0))
+    for g in GROUPS:
+        assert float(use_eff[g].min()) == 1.0, g
+        assert float(ests[g].min()) > 0.0
+    # thr = +inf -> everything selects low.
+    est = _zero_est(CFG, thr_val=1e30)
+    _, _, _, use_eff = decode_step_dual(nl, wl, wh, est, CFG, jnp.int32(5),
+                                        jnp.int32(0), *_rope(0), kv, zeros, jnp.float32(1.0))
+    for g in GROUPS:
+        assert float(use_eff[g].max()) == 0.0, g
+
+
+def test_prefill_matches_forward(params):
+    rng = np.random.default_rng(2)
+    P, n_valid = 16, 11
+    toks = rng.integers(0, CFG.vocab, size=P).astype(np.int32)
+    ref_logits = np.asarray(
+        forward(params, CFG, jnp.asarray(toks[None, :n_valid])))[0]
+    nl = nonlinear_params(params)
+    lin = extract_linears(params)
+    last, kv = prefill(nl, lin, CFG, jnp.asarray(toks), jnp.int32(n_valid), *_rope_seq(P))
+    np.testing.assert_allclose(np.asarray(last), ref_logits[-1],
+                               rtol=2e-3, atol=2e-4)
+    assert kv.shape == kv_shape(CFG)
+
+
+def test_prefill_then_decode_continues(params):
+    """KV from prefill must be usable by the decode step (position P)."""
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, CFG.vocab, size=9).astype(np.int32)
+    ref = np.asarray(forward(params, CFG, jnp.asarray(toks[None])))[0]
+
+    nl = nonlinear_params(params)
+    lin = extract_linears(params)
+    pad = np.zeros(16, np.int32)
+    pad[:8] = toks[:8]
+    _, kv = prefill(nl, lin, CFG, jnp.asarray(pad), jnp.int32(8), *_rope_seq(16))
+    est = _zero_est(CFG)
+    use_async = {g: jnp.zeros(CFG.n_layers) for g in ASYNC_GROUPS}
+    logits, _, _, _ = decode_step_dual(nl, lin, lin, est, CFG,
+                                       jnp.int32(toks[8]), jnp.int32(8), *_rope(8), kv,
+                                       use_async, jnp.float32(0.0))
+    np.testing.assert_allclose(np.asarray(logits), ref[8], rtol=2e-3, atol=2e-4)

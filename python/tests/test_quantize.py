@@ -1,0 +1,97 @@
+"""Quantizer invariants: nesting, monotone error, Fisher weighting."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.quantize import (_split_clusters, _weighted_kmeans_rows,
+                              quantize_group)
+
+
+def _rand_group(rng, L=2, out=16, n_in=32):
+    w = rng.standard_normal((L, out, n_in)).astype(np.float32) * 0.05
+    f = rng.random((L, out, n_in)).astype(np.float32) + 0.1
+    return w, f
+
+
+def test_kmeans_rows_basic():
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal((4, 200)).astype(np.float32)
+    w = np.ones_like(v)
+    codes, cent = _weighted_kmeans_rows(v, w, 8)
+    assert codes.shape == v.shape and cent.shape == (4, 8)
+    assert codes.min() >= 0 and codes.max() < 8
+    # Centroids sorted; codes monotone in value.
+    assert np.all(np.diff(cent, axis=1) >= -1e-6)
+    for r in range(4):
+        order = np.argsort(v[r])
+        assert np.all(np.diff(codes[r][order]) >= 0)
+
+
+def test_kmeans_respects_weights():
+    """Columns with huge Fisher weight should land nearer their centroid."""
+    rng = np.random.default_rng(1)
+    v = rng.standard_normal((1, 400)).astype(np.float32)
+    w_uni = np.ones_like(v)
+    w_spiky = np.ones_like(v)
+    heavy = slice(0, 20)
+    w_spiky[0, heavy] = 1000.0
+    _, cent_u = _weighted_kmeans_rows(v, w_uni, 8)
+    codes_s, cent_s = _weighted_kmeans_rows(v, w_spiky, 8)
+    err_heavy_s = np.abs(v[0, heavy] - cent_s[0, codes_s[0, heavy]]).mean()
+    codes_u, _ = _weighted_kmeans_rows(v, w_uni, 8)
+    err_heavy_u = np.abs(v[0, heavy] - cent_u[0, codes_u[0, heavy]]).mean()
+    assert err_heavy_s <= err_heavy_u + 1e-6
+
+
+def test_split_preserves_parent_prefix():
+    rng = np.random.default_rng(2)
+    v = rng.standard_normal((3, 100)).astype(np.float32)
+    w = np.ones_like(v)
+    codes, cent = _weighted_kmeans_rows(v, w, 8)
+    codes2, cent2 = _split_clusters(v, w, codes, cent)
+    assert cent2.shape == (3, 16)
+    np.testing.assert_array_equal(codes2 >> 1, codes)
+
+
+def test_quantize_group_contract():
+    rng = np.random.default_rng(3)
+    w, f = _rand_group(rng)
+    planes, luts = quantize_group(w, f)
+    L, out, n_in = w.shape
+    assert planes.shape == (L, 6, out, n_in // 8)
+    for b in range(3, 7):
+        assert luts[b].shape == (L, out, 2 ** b)
+
+
+def test_quantize_error_monotone_in_bits():
+    """More bits -> lower weighted reconstruction error (the property the
+    whole adaptation-set idea rests on)."""
+    rng = np.random.default_rng(4)
+    w, f = _rand_group(rng, L=1, out=24, n_in=64)
+    planes, luts = quantize_group(w, f)
+    errs = []
+    for b in range(3, 7):
+        deq = ref.dequant_np(planes[0], luts[b][0], b)
+        errs.append(float((f[0] * (deq - w[0]) ** 2).sum()))
+    assert errs[0] > errs[1] > errs[2] > errs[3], errs
+
+
+def test_quantize_6bit_is_accurate():
+    rng = np.random.default_rng(5)
+    w, f = _rand_group(rng, L=1, out=16, n_in=64)
+    planes, luts = quantize_group(w, f)
+    deq = ref.dequant_np(planes[0], luts[6][0], 6)
+    rel = np.abs(deq - w[0]).mean() / np.abs(w[0]).mean()
+    assert rel < 0.08, rel
+
+
+def test_dequant_np_matches_jnp_ref():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(6)
+    code6 = rng.integers(0, 64, size=(8, 32), dtype=np.int64)
+    planes = ref.pack_codes_np(code6)
+    lut = rng.standard_normal((8, 16)).astype(np.float32)
+    a = ref.dequant_np(planes, lut, 4)
+    b = np.asarray(ref.dequant_ref(jnp.asarray(planes), jnp.asarray(lut), 4))
+    np.testing.assert_allclose(a, b, rtol=1e-6)

@@ -1,0 +1,69 @@
+"""Byte-BPE tokenizer: roundtrips, determinism, serialization."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.tokenizer import (BOS_ID, EOS_ID, Tokenizer, encode_to_bin,
+                               train_bpe)
+
+SAMPLE = (
+    "the quick brown fox jumps over the lazy dog. "
+    "the town of Kamodor is known for river salt. "
+    "Question: Mara has 23 coins. Answer: 23 + 18 = 41. #### 41\n"
+) * 30
+
+
+def _tok():
+    return Tokenizer(train_bpe(SAMPLE, vocab_size=320))
+
+
+def test_train_produces_merges():
+    tok = _tok()
+    assert tok.vocab_size > 259
+    assert tok.vocab_size <= 320
+
+
+def test_roundtrip_training_text():
+    tok = _tok()
+    ids = tok.encode(SAMPLE)
+    assert tok.decode(ids) == SAMPLE
+    # BPE must compress repetitive text.
+    assert len(ids) < len(SAMPLE.encode()) * 0.6
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.text(min_size=0, max_size=200))
+def test_roundtrip_arbitrary_unicode(s):
+    tok = _tok()
+    assert tok.decode(tok.encode(s)) == s
+
+
+def test_specials():
+    tok = _tok()
+    ids = tok.encode("hi", bos=True, eos=True)
+    assert ids[0] == BOS_ID and ids[-1] == EOS_ID
+    assert tok.decode(ids) == "hi"
+
+
+def test_save_load(tmp_path):
+    tok = _tok()
+    p = str(tmp_path / "tok.json")
+    tok.save(p)
+    tok2 = Tokenizer.load(p)
+    s = "the quick brown fox. #### 41"
+    assert tok.encode(s) == tok2.encode(s)
+
+
+def test_encode_to_bin(tmp_path):
+    tok = _tok()
+    p = str(tmp_path / "x.bin")
+    n = encode_to_bin(tok, SAMPLE, p)
+    arr = np.fromfile(p, np.uint16)
+    assert len(arr) == n
+    assert tok.decode(arr.tolist()) == SAMPLE
+
+
+def test_determinism():
+    a = train_bpe(SAMPLE, vocab_size=300)
+    b = train_bpe(SAMPLE, vocab_size=300)
+    assert a == b

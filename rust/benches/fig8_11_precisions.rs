@@ -1,0 +1,40 @@
+//! Figs. 8-11: distribution of fine-tuned average precisions p across
+//! linears, for targets 3.5 and 4.0 under the 5-bit budget.  Expected
+//! shape (paper Appendix B.3): p spreads over the available range rather
+//! than collapsing to the extremes.
+
+use dp_llm::bench_support as bs;
+use dp_llm::model::calib::DpllmConfig;
+
+fn main() {
+    if !bs::require_artifacts("fig8_11") {
+        return;
+    }
+    for model in bs::headline_models() {
+        for t in [3.5f64, 4.0] {
+            let dp = match DpllmConfig::load(model, 5, &format!("{t:.2}")) {
+                Ok(d) => d,
+                Err(_) => continue,
+            };
+            let ps: Vec<f64> = dp.linears.iter().map(|r| r.p).collect();
+            // Histogram over [3, 6] in 0.25 bins.
+            let mut hist = vec![0usize; 13];
+            for &p in &ps {
+                let b = (((p - 3.0) / 0.25).floor() as usize).min(12);
+                hist[b] += 1;
+            }
+            let mut rows = Vec::new();
+            for (i, &c) in hist.iter().enumerate() {
+                let lo = 3.0 + 0.25 * i as f64;
+                rows.push(vec![format!("[{lo:.2},{:.2})", lo + 0.25),
+                               "#".repeat(c), c.to_string()]);
+            }
+            let spread = ps.iter().cloned().fold(f64::INFINITY, f64::min)
+                ..ps.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            bs::emit(&format!("fig_p_{model}_{t:.2}"),
+                     &format!("Figs 8-11 — p distribution, {model} target {t} \
+                               (range {:.2}..{:.2})", spread.start, spread.end),
+                     &["p bin", "hist", "count"], &rows);
+        }
+    }
+}

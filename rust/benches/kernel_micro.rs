@@ -1,0 +1,61 @@
+//! L1 kernel microbenchmarks: the any-precision bitplane GEMV (per
+//! bitwidth) and the JL estimator, both as standalone AOT executables,
+//! plus the Rust-native dequant for reference.  Feeds the §Perf log.
+
+use dp_llm::bench_support as bs;
+use dp_llm::model::ModelAssets;
+use dp_llm::runtime::Runtime;
+use dp_llm::util::stats::bench;
+
+fn main() {
+    if !bs::require_artifacts("kernel_micro") {
+        return;
+    }
+    let (rt, manifest) = bs::setup().unwrap();
+    let model = "dpl-tiny";
+    let assets = ModelAssets::load(model).unwrap();
+    let store = assets.store.group("wq").unwrap();
+    let (out_d, in_d) = (store.out_dim, store.in_dim);
+    let x: Vec<f32> = (0..in_d).map(|i| (i as f32).sin()).collect();
+
+    let mut rows = Vec::new();
+    for bits in [3u8, 4, 5, 6] {
+        let entry = manifest.entry(model, &format!("anyprec_gemv_{bits}")).unwrap();
+        let exe = rt.load(&entry).unwrap();
+        let planes = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8, &[6, out_d, in_d / 8],
+            &store.planes[..6 * out_d * in_d / 8]).unwrap();
+        let lut = xla::Literal::vec1(&store.luts[&bits][..out_d * (1 << bits)])
+            .reshape(&[out_d as i64, 1i64 << bits]).unwrap();
+        let xl = xla::Literal::vec1(&x);
+        let r = bench(&format!("anyprec_gemv_{bits} (pallas/hlo)"), 8, 20.0, || {
+            let _ = exe.run_literals(&[&planes, &lut, &xl]).unwrap();
+        });
+        println!("{}", r.report());
+        rows.push(vec![format!("anyprec_gemv b={bits}"),
+                       format!("{:.0}", r.median_ns / 1e3)]);
+    }
+
+    // JL estimator executable.
+    let entry = manifest.entry(model, "jl_estimate").unwrap();
+    let exe = rt.load(&entry).unwrap();
+    let g: Vec<f32> = (0..64 * in_d).map(|i| ((i % 13) as f32 - 6.0) * 0.01).collect();
+    let gl = xla::Literal::vec1(&g).reshape(&[64, in_d as i64]).unwrap();
+    let xl = xla::Literal::vec1(&x);
+    let r = bench("jl_estimate k=64 (pallas/hlo)", 8, 20.0, || {
+        let _ = exe.run_literals(&[&gl, &xl]).unwrap();
+    });
+    println!("{}", r.report());
+    rows.push(vec!["jl_estimate k=64".into(), format!("{:.0}", r.median_ns / 1e3)]);
+
+    // Rust-native dequant (config-time path), for context.
+    let r = bench("rust dequant layer (b=4)", 8, 20.0, || {
+        let _ = store.dequant(0, 4).unwrap();
+    });
+    println!("{}", r.report());
+    rows.push(vec!["rust dequant (config-time)".into(),
+                   format!("{:.0}", r.median_ns / 1e3)]);
+
+    bs::emit("kernel_micro", "L1 kernel microbench (µs/op, PJRT CPU interpret path)",
+             &["kernel", "µs/op"], &rows);
+}

@@ -1,0 +1,47 @@
+//! Tables 10/11: perplexity under the 6-bit and 4-bit memory budgets
+//! (dpl-tiny; requires `make artifacts-extended`).
+
+use dp_llm::bench_support as bs;
+use dp_llm::evalharness::load_stream;
+use dp_llm::model::calib::load_maxprec;
+use dp_llm::model::ModelAssets;
+use dp_llm::runtime::decode::EstMode;
+
+fn main() {
+    if !bs::require_artifacts("table10_11") {
+        return;
+    }
+    let (rt, manifest) = bs::setup().unwrap();
+    let model = "dpl-tiny";
+    let assets = ModelAssets::load(model).unwrap();
+
+    for budget in [6u32, 4] {
+        if load_maxprec(model, budget).is_err() {
+            bs::note_missing("table10_11", &format!("budget-{budget} calibration"));
+            continue;
+        }
+        let targets = bs::targets_for_budget(budget);
+        for dataset in ["synthwiki", "synthweb"] {
+            let stream = load_stream(dataset).unwrap();
+            let mut rows = Vec::new();
+            for method_i in 0..3 {
+                let mut row = vec![String::new()];
+                for &t in &targets {
+                    let m = &bs::methods_for_target(t)[method_i];
+                    row[0] = m.label().split('@').next().unwrap().to_string();
+                    let cell = bs::ppl_cell(&rt, &assets, &manifest, budget, m,
+                                            &stream, EstMode::Approx);
+                    row.push(bs::fmt_ppl(cell.as_ref()));
+                }
+                rows.push(row);
+            }
+            let tstr: Vec<String> = targets.iter().map(|t| format!("{t:.2}")).collect();
+            let mut header = vec!["method"];
+            header.extend(tstr.iter().map(String::as_str));
+            let tno = if budget == 6 { 10 } else { 11 };
+            bs::emit(&format!("table{tno}_{dataset}"),
+                     &format!("Table {tno} — ppl on {dataset}, {budget}-bit budget ({model})"),
+                     &header, &rows);
+        }
+    }
+}

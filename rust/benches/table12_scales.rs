@@ -1,0 +1,44 @@
+//! Table 12: model-scale study — dpl-nano / dpl-base (Qwen2.5-3B/32B
+//! analogs) under the 5-bit budget (requires `make artifacts-extended`).
+
+use dp_llm::bench_support as bs;
+use dp_llm::evalharness::load_stream;
+use dp_llm::model::ModelAssets;
+use dp_llm::runtime::decode::EstMode;
+
+fn main() {
+    if !bs::require_artifacts("table12") {
+        return;
+    }
+    let (rt, manifest) = bs::setup().unwrap();
+    let targets = bs::targets_for_budget(5);
+
+    for dataset in ["synthwiki", "synthweb"] {
+        let stream = load_stream(dataset).unwrap();
+        let mut rows = Vec::new();
+        for model in ["dpl-nano", "dpl-base"] {
+            if !bs::model_available(model) {
+                bs::note_missing("table12", model);
+                continue;
+            }
+            let assets = ModelAssets::load(model).unwrap();
+            for method_i in 0..3 {
+                let mut row = vec![model.to_string(), String::new()];
+                for &t in &targets {
+                    let m = &bs::methods_for_target(t)[method_i];
+                    row[1] = m.label().split('@').next().unwrap().to_string();
+                    let cell = bs::ppl_cell(&rt, &assets, &manifest, 5, m,
+                                            &stream, EstMode::Approx);
+                    row.push(bs::fmt_ppl(cell.as_ref()));
+                }
+                rows.push(row);
+            }
+        }
+        let tstr: Vec<String> = targets.iter().map(|t| format!("{t:.2}")).collect();
+        let mut header = vec!["model", "method"];
+        header.extend(tstr.iter().map(String::as_str));
+        bs::emit(&format!("table12_{dataset}"),
+                 &format!("Table 12 — model-scale study on {dataset}"),
+                 &header, &rows);
+    }
+}

@@ -1,0 +1,39 @@
+//! Table 13: (l, h) candidate-pair ablation at target 4.5 under the 6-bit
+//! budget — (3,5), (3,6), (4,5), (4,6) forced for every layer (requires
+//! `make artifacts-extended`).  Expected: pairs adjacent to the target win.
+
+use dp_llm::bench_support as bs;
+use dp_llm::evalharness::{load_stream, Method};
+use dp_llm::model::ModelAssets;
+use dp_llm::runtime::decode::EstMode;
+
+fn main() {
+    if !bs::require_artifacts("table13") {
+        return;
+    }
+    let (rt, manifest) = bs::setup().unwrap();
+    let model = "dpl-tiny";
+    let assets = ModelAssets::load(model).unwrap();
+    let pairs = [(3, 5), (3, 6), (4, 5), (4, 6)];
+
+    let mut rows = Vec::new();
+    for (l, h) in pairs {
+        let m = Method::Dpllm { tag: format!("hl{l}{h}") };
+        let mut row = vec![format!("{l} & {h}")];
+        let mut any = false;
+        for dataset in ["synthwiki", "synthweb"] {
+            let stream = load_stream(dataset).unwrap();
+            let cell = bs::ppl_cell(&rt, &assets, &manifest, 6, &m, &stream,
+                                    EstMode::Approx);
+            any |= cell.is_some();
+            row.push(bs::fmt_ppl(cell.as_ref()));
+        }
+        if !any {
+            bs::note_missing("table13", &format!("hl{l}{h} config"));
+        }
+        rows.push(row);
+    }
+    bs::emit("table13",
+             "Table 13 — (l,h) ablation at 4.5-bit target, 6-bit budget (dpl-tiny)",
+             &["l & h", "synthwiki", "synthweb"], &rows);
+}

@@ -1,0 +1,48 @@
+//! Table 14: calibration-set sensitivity — DP-LLM configs calibrated on
+//! synthwiki (tag suffix "w") vs synthweb (default, the C4-train analog),
+//! evaluated on both datasets (requires `make artifacts-extended` for the
+//! synthwiki-calibrated configs).
+
+use dp_llm::bench_support as bs;
+use dp_llm::evalharness::{load_stream, Method};
+use dp_llm::model::ModelAssets;
+use dp_llm::runtime::decode::EstMode;
+
+fn main() {
+    if !bs::require_artifacts("table14") {
+        return;
+    }
+    let (rt, manifest) = bs::setup().unwrap();
+    let model = "dpl-tiny";
+    let assets = ModelAssets::load(model).unwrap();
+    let targets = bs::targets_for_budget(5);
+
+    for dataset in ["synthwiki", "synthweb"] {
+        let stream = load_stream(dataset).unwrap();
+        let mut rows = Vec::new();
+        for (label, suffix) in [("synthwiki-calib", "w"), ("synthweb-calib", "")] {
+            let mut row = vec![label.to_string()];
+            let mut any = false;
+            for &t in &targets {
+                let m = Method::Dpllm { tag: format!("{t:.2}{suffix}") };
+                let cell = bs::ppl_cell(&rt, &assets, &manifest, 5, &m, &stream,
+                                        EstMode::Approx);
+                any |= cell.is_some();
+                row.push(bs::fmt_ppl(cell.as_ref()));
+            }
+            if !any && !suffix.is_empty() {
+                continue;
+            }
+            if !any {
+                bs::note_missing("table14", label);
+            }
+            rows.push(row);
+        }
+        let tstr: Vec<String> = targets.iter().map(|t| format!("{t:.2}")).collect();
+        let mut header = vec!["calibration set"];
+        header.extend(tstr.iter().map(String::as_str));
+        bs::emit(&format!("table14_{dataset}"),
+                 &format!("Table 14 — calibration-set transfer, eval on {dataset}"),
+                 &header, &rows);
+    }
+}

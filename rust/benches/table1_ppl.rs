@@ -1,0 +1,48 @@
+//! Table 1: perplexity under the 5-bit memory budget — 2 models × 2
+//! datasets × targets 3.25..4.75 × {LLM-MQ, HAWQ-V2, DP-LLM}.
+//!
+//! Expected shape (paper): DP-LLM ≤ HAWQ-V2 ≤ LLM-MQ at every target, gaps
+//! shrinking as the target approaches the budget.
+
+use dp_llm::bench_support as bs;
+use dp_llm::evalharness::load_stream;
+use dp_llm::model::ModelAssets;
+use dp_llm::runtime::decode::EstMode;
+
+fn main() {
+    if !bs::require_artifacts("table1") {
+        return;
+    }
+    let (rt, manifest) = bs::setup().unwrap();
+    let budget = 5;
+    let targets = bs::targets_for_budget(budget);
+
+    for dataset in ["synthwiki", "synthweb"] {
+        let stream = load_stream(dataset).unwrap();
+        let mut rows = Vec::new();
+        for model in bs::headline_models() {
+            if !bs::model_available(model) {
+                bs::note_missing("table1", model);
+                continue;
+            }
+            let assets = ModelAssets::load(model).unwrap();
+            for method_i in 0..3 {
+                let mut row = vec![model.to_string(), String::new()];
+                for &t in &targets {
+                    let m = &bs::methods_for_target(t)[method_i];
+                    row[1] = m.label().split('@').next().unwrap().to_string();
+                    let cell = bs::ppl_cell(&rt, &assets, &manifest, budget, m,
+                                            &stream, EstMode::Approx);
+                    row.push(bs::fmt_ppl(cell.as_ref()));
+                }
+                rows.push(row);
+            }
+        }
+        let tstr: Vec<String> = targets.iter().map(|t| format!("{t:.2}")).collect();
+        let mut header = vec!["model", "method"];
+        header.extend(tstr.iter().map(String::as_str));
+        bs::emit(&format!("table1_{dataset}"),
+                 &format!("Table 1 — perplexity on {dataset} (5-bit budget)"),
+                 &header, &rows);
+    }
+}

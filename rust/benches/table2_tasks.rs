@@ -1,0 +1,56 @@
+//! Table 2: downstream-task exact-match — arith (GSM8K analog), listfn
+//! (MBPP), dates (BBH), algebra (MATH) across targets and methods.
+
+use dp_llm::bench_support as bs;
+use dp_llm::evalharness::{build_session, tasks};
+use dp_llm::model::{art, ModelAssets};
+use dp_llm::runtime::decode::EstMode;
+use dp_llm::tokenizer::Tokenizer;
+
+fn main() {
+    if !bs::require_artifacts("table2") {
+        return;
+    }
+    let (rt, manifest) = bs::setup().unwrap();
+    let tok = Tokenizer::load(&art(&["data", "tokenizer.json"])).unwrap();
+    let budget = 5;
+    // Downstream decode is ~50 steps/sample; keep the grid affordable on
+    // one core (overridable: DPLLM_TASK_SAMPLES / DPLLM_TASK_TARGETS).
+    let targets: Vec<f64> = std::env::var("DPLLM_TASK_TARGETS")
+        .map(|s| s.split(',').filter_map(|t| t.parse().ok()).collect())
+        .unwrap_or_else(|_| vec![3.5, 4.5]);
+    let limit = tasks::task_eval_limit();
+
+    for task in ["arith", "listfn", "dates", "algebra"] {
+        let mut rows = Vec::new();
+        for model in bs::headline_models() {
+            if !bs::model_available(model) {
+                continue;
+            }
+            let assets = ModelAssets::load(model).unwrap();
+            for method_i in 0..3 {
+                let mut row = vec![model.to_string(), String::new()];
+                for &t in &targets {
+                    let m = &bs::methods_for_target(t)[method_i];
+                    row[1] = m.label().split('@').next().unwrap().to_string();
+                    let cell = build_session(&rt, &assets, &manifest, budget, m)
+                        .ok()
+                        .and_then(|s| {
+                            tasks::eval_task(&s, &tok, task, limit, EstMode::Approx).ok()
+                        });
+                    row.push(match cell {
+                        Some(r) => format!("{:.1}", r.accuracy),
+                        None => "-".into(),
+                    });
+                }
+                rows.push(row);
+            }
+        }
+        let tstr: Vec<String> = targets.iter().map(|t| format!("{t:.2}")).collect();
+        let mut header = vec!["model", "method"];
+        header.extend(tstr.iter().map(String::as_str));
+        bs::emit(&format!("table2_{task}"),
+                 &format!("Table 2 — {task} exact-match %, 5-bit budget"),
+                 &header, &rows);
+    }
+}

@@ -1,0 +1,86 @@
+//! Table 4: latency overhead of the runtime estimator, normalized to the
+//! static baseline at the same effective bitwidth.
+//!
+//! Two views: (a) the Jetson-Orin / RTX-4060Ti device cost models fit to
+//! the paper's own Table 5 (DESIGN.md §2), applied to our models' real
+//! byte counts; (b) measured PJRT-CPU wall clock of the DP-LLM decode step
+//! vs the static decode step.
+
+use dp_llm::bench_support as bs;
+use dp_llm::costmodel::{overhead_frac, EstScheme, JETSON_ORIN, RTX_4060TI};
+use dp_llm::coordinator::service::measure_tpot;
+use dp_llm::evalharness::{build_session, Method};
+use dp_llm::model::calib::DpllmConfig;
+use dp_llm::model::ModelAssets;
+use dp_llm::util::stats::geomean;
+
+fn main() {
+    if !bs::require_artifacts("table4") {
+        return;
+    }
+    let (rt, manifest) = bs::setup().unwrap();
+    let budget = 5;
+    let targets = bs::targets_for_budget(budget);
+
+    for model in bs::headline_models() {
+        if !bs::model_available(model) {
+            continue;
+        }
+        let assets = ModelAssets::load(model).unwrap();
+        let mut rows = Vec::new();
+        for profile in [&JETSON_ORIN, &RTX_4060TI] {
+            let mut row = vec![profile.name.to_string()];
+            let mut fracs = Vec::new();
+            for &t in &targets {
+                let dp = match DpllmConfig::load(model, budget, &format!("{t:.2}")) {
+                    Ok(d) => d,
+                    Err(_) => {
+                        row.push("-".into());
+                        continue;
+                    }
+                };
+                let f = overhead_frac(profile, &assets.cfg, &assets.store, &dp, t,
+                                      EstScheme::HybridAsync);
+                fracs.push(f);
+                row.push(format!("{:.2}%", f * 100.0));
+            }
+            row.push(format!("{:.2}%", geomean(&fracs) * 100.0));
+            rows.push(row);
+        }
+
+        // Measured on this machine: DP-LLM step vs static step wall clock.
+        let mut row = vec!["pjrt-cpu (measured)".to_string()];
+        let mut fracs = Vec::new();
+        let steps = 8;
+        for &t in &targets {
+            let dyn_m = Method::Dpllm { tag: format!("{t:.2}") };
+            let sta_m = Method::Static { method: "hawq_v2".into(), target: t };
+            let cell = (|| -> anyhow::Result<f64> {
+                let sd = build_session(&rt, &assets, &manifest, budget, &dyn_m)?;
+                let ss = build_session(&rt, &assets, &manifest, budget, &sta_m)?;
+                let td = measure_tpot(&sd, steps)?;
+                let ts = measure_tpot(&ss, steps)?;
+                Ok(td / ts - 1.0)
+            })();
+            match cell {
+                Ok(f) => {
+                    fracs.push(f.max(0.0));
+                    row.push(format!("{:+.2}%", f * 100.0));
+                }
+                Err(_) => row.push("-".into()),
+            }
+        }
+        if !fracs.is_empty() {
+            row.push(format!("{:.2}%", geomean(&fracs) * 100.0));
+        }
+        rows.push(row);
+
+        let tstr: Vec<String> = targets.iter().map(|t| format!("{t:.2}")).collect();
+        let mut header = vec!["device"];
+        header.extend(tstr.iter().map(String::as_str));
+        header.push("geomean");
+        bs::emit(&format!("table4_{model}"),
+                 &format!("Table 4 — estimator overhead vs static ({model})"),
+                 &header, &rows);
+    }
+}

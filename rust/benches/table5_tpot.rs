@@ -1,0 +1,73 @@
+//! Table 5: TPOT per effective bitwidth — device cost models applied to
+//! our models' real packed-store byte counts, plus measured PJRT-CPU
+//! decode latency, plus the FP16 row.
+//!
+//! Expected shape: affine in effective bits; FP16 ≫ quantized.
+
+use dp_llm::bench_support as bs;
+use dp_llm::coordinator::service::measure_tpot;
+use dp_llm::costmodel::{weight_bytes_at, JETSON_ORIN, RTX_4060TI};
+use dp_llm::evalharness::{build_session, Method};
+use dp_llm::model::ModelAssets;
+
+fn main() {
+    if !bs::require_artifacts("table5") {
+        return;
+    }
+    let (rt, manifest) = bs::setup().unwrap();
+    let budget = 5;
+    let targets = bs::targets_for_budget(budget);
+
+    for model in bs::headline_models() {
+        if !bs::model_available(model) {
+            continue;
+        }
+        let assets = ModelAssets::load(model).unwrap();
+        let n_params: f64 = assets.cfg.total_linear_params() as f64;
+        // Role-model parameter counts: the paper's Table 5 rows are for
+        // Llama-3-8B / Phi-3-Medium; applying the fitted profiles at that
+        // scale reproduces the paper's own cells (the unit-tested fit).
+        // At sandbox scale (3-7 MB of weights) device TPOT is overhead-
+        // dominated, so the per-bit slope only shows at paper scale.
+        let paper_params: f64 = if model == "dpl-small" { 14.0e9 } else { 8.03e9 };
+        let mut rows = Vec::new();
+        for profile in [&JETSON_ORIN, &RTX_4060TI] {
+            let mut row = vec![format!("{} @paper-scale", profile.name)];
+            for &t in &targets {
+                row.push(format!("{:.2}ms", profile.tpot_ms(paper_params * t / 8.0)));
+            }
+            row.push(format!("{:.2}ms", profile.tpot_fp16_ms(paper_params)));
+            rows.push(row);
+        }
+        for profile in [&JETSON_ORIN, &RTX_4060TI] {
+            let mut row = vec![format!("{} @this-model", profile.name)];
+            for &t in &targets {
+                let b = weight_bytes_at(&assets.store, t);
+                row.push(format!("{:.3}ms", profile.tpot_ms(b)));
+            }
+            row.push(format!("{:.3}ms", profile.tpot_fp16_ms(n_params)));
+            rows.push(row);
+        }
+        // Measured CPU decode TPOT per target (dynamic configuration).
+        let mut row = vec!["pjrt-cpu (measured)".to_string()];
+        for &t in &targets {
+            let m = Method::Dpllm { tag: format!("{t:.2}") };
+            let cell = build_session(&rt, &assets, &manifest, budget, &m)
+                .ok()
+                .and_then(|s| measure_tpot(&s, 6).ok());
+            row.push(match cell {
+                Some(ms) => format!("{ms:.1}ms"),
+                None => "-".into(),
+            });
+        }
+        row.push("n/a".into());
+        rows.push(row);
+
+        let tstr: Vec<String> = targets.iter().map(|t| format!("{t:.2}")).collect();
+        let mut header = vec!["device"];
+        header.extend(tstr.iter().map(String::as_str));
+        header.push("FP16");
+        bs::emit(&format!("table5_{model}"),
+                 &format!("Table 5 — TPOT ({model})"), &header, &rows);
+    }
+}

@@ -1,0 +1,47 @@
+//! Table 6: latency-overhead ablation of the estimation techniques —
+//! random-projection-only vs hybrid vs hybrid+async (paper §6.2).
+//! Expected shape: RP-only > Hybrid > Hybrid+Async on every cell.
+
+use dp_llm::bench_support as bs;
+use dp_llm::costmodel::{overhead_frac, EstScheme, JETSON_ORIN, RTX_4060TI};
+use dp_llm::model::calib::DpllmConfig;
+use dp_llm::model::ModelAssets;
+
+fn main() {
+    if !bs::require_artifacts("table6") {
+        return;
+    }
+    let model = "dpl-tiny"; // paper uses Llama-3-8B here
+    if !bs::model_available(model) {
+        return;
+    }
+    let assets = ModelAssets::load(model).unwrap();
+    let targets = [3.5, 4.0, 4.5];
+    let schemes = [
+        ("Random Projection Based", EstScheme::RandomProjOnly),
+        ("Hybrid", EstScheme::Hybrid),
+        ("Hybrid+Async", EstScheme::HybridAsync),
+    ];
+
+    let mut rows = Vec::new();
+    for (label, scheme) in schemes {
+        let mut row = vec![label.to_string()];
+        for profile in [&JETSON_ORIN, &RTX_4060TI] {
+            for &t in &targets {
+                match DpllmConfig::load(model, 5, &format!("{t:.2}")) {
+                    Ok(dp) => {
+                        let f = overhead_frac(profile, &assets.cfg, &assets.store,
+                                              &dp, t, scheme);
+                        row.push(format!("{:.2}%", f * 100.0));
+                    }
+                    Err(_) => row.push("-".into()),
+                }
+            }
+        }
+        rows.push(row);
+    }
+    bs::emit("table6",
+             "Table 6 — estimator-technique overhead (jetson 3.5/4.0/4.5 | 4060ti 3.5/4.0/4.5)",
+             &["technique", "j3.5", "j4.0", "j4.5", "r3.5", "r4.0", "r4.5"],
+             &rows);
+}

@@ -1,0 +1,42 @@
+//! Table 8: number of layers assigned to each relative-error estimation
+//! method (linear regression vs JL projection) per (l, h) candidate pair.
+
+use std::collections::BTreeMap;
+
+use dp_llm::bench_support as bs;
+use dp_llm::model::calib::DpllmConfig;
+
+fn main() {
+    if !bs::require_artifacts("table8") {
+        return;
+    }
+    let mut rows = Vec::new();
+    for model in bs::headline_models() {
+        // Count across all 5-bit-budget targets, bucketed by (l, h).
+        let mut counts: BTreeMap<(u8, u8), (usize, usize)> = BTreeMap::new();
+        for t in bs::targets_for_budget(5) {
+            let dp = match DpllmConfig::load(model, 5, &format!("{t:.2}")) {
+                Ok(d) => d,
+                Err(_) => continue,
+            };
+            for r in &dp.linears {
+                if r.h == r.l {
+                    continue;
+                }
+                let e = counts.entry((r.l, r.h)).or_insert((0, 0));
+                if r.use_lin {
+                    e.0 += 1;
+                } else {
+                    e.1 += 1;
+                }
+            }
+        }
+        for ((l, h), (lin, jl)) in counts {
+            rows.push(vec![model.to_string(), format!("({l},{h})"),
+                           lin.to_string(), jl.to_string()]);
+        }
+    }
+    bs::emit("table8",
+             "Table 8 — #linears per estimation method (summed over 5-bit-budget targets)",
+             &["model", "(l,h)", "linear", "JL"], &rows);
+}

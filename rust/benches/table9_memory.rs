@@ -1,0 +1,46 @@
+//! Table 9: memory overhead of DP-LLM's estimators — total estimator
+//! capacity (JL G matrices + linear-fit scalars) across all supported
+//! target precisions, relative to the quantized model capacity at the
+//! 5-bit budget.  Expected: low single-digit percent.
+
+use dp_llm::bench_support as bs;
+use dp_llm::model::calib::DpllmConfig;
+use dp_llm::model::ModelAssets;
+
+fn main() {
+    if !bs::require_artifacts("table9") {
+        return;
+    }
+    let mut rows = Vec::new();
+    for model in bs::headline_models() {
+        if !bs::model_available(model) {
+            continue;
+        }
+        let assets = ModelAssets::load(model).unwrap();
+        let model_bytes = assets.store.capacity_bytes(5) as f64;
+        let mut total = 0usize;
+        let mut per_target = Vec::new();
+        for t in bs::targets_for_budget(5) {
+            if let Ok(dp) = DpllmConfig::load(model, 5, &format!("{t:.2}")) {
+                let b = dp.estimator_bytes(&assets.cfg);
+                per_target.push(b);
+                total += b;
+            }
+        }
+        if per_target.is_empty() {
+            continue;
+        }
+        let avg = per_target.iter().sum::<usize>() as f64 / per_target.len() as f64;
+        rows.push(vec![
+            model.to_string(),
+            format!("{:.2} MB", model_bytes / 1e6),
+            format!("{:.3} MB", avg / 1e6),
+            format!("{:.3} MB", total as f64 / 1e6),
+            format!("{:.2}%", total as f64 / model_bytes * 100.0),
+        ]);
+    }
+    bs::emit("table9", "Table 9 — estimator memory overhead (5-bit budget)",
+             &["model", "quantized capacity", "avg estimator/target",
+               "total estimators", "overhead"],
+             &rows);
+}

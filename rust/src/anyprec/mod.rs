@@ -1,0 +1,248 @@
+//! Any-precision weight store: bitplane-packed nested codes + per-bitwidth
+//! centroid tables (the Rust twin of the format defined in
+//! `python/compile/kernels/ref.py` and produced by `quantize.py`).
+//!
+//! The store holds ONE copy of the 6-bit codes; every bitwidth 3..6 is a
+//! view over the top-b planes — this is the memory-overlay property of
+//! Any-Precision LLM that makes runtime adaptation feasible on-device.
+//! The coordinator uses this module to *materialize* per-configuration
+//! `W_l` / `W_h` stacks at model-load time (config switch, not request
+//! path), and to account memory for Table 9.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::npz::{load_npz, NpyArray};
+
+pub const GROUPS: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
+pub const MIN_BITS: u8 = 3;
+pub const MAX_BITS: u8 = 6;
+
+/// Packed planes + LUTs for one linear group (stacked over layers).
+pub struct GroupStore {
+    /// u8 planes `[L, 6, out, in/8]` (plane 0 = MSB).
+    pub planes: Vec<u8>,
+    pub n_layers: usize,
+    pub out_dim: usize,
+    pub in_dim: usize,
+    /// LUT per bitwidth b (3..=6): f32 `[L, out, 2^b]`.
+    pub luts: BTreeMap<u8, Vec<f32>>,
+}
+
+impl GroupStore {
+    fn plane_stride(&self) -> (usize, usize, usize) {
+        let bytes_in = self.in_dim / 8;
+        // strides for [L, 6, out, in/8]
+        (6 * self.out_dim * bytes_in, self.out_dim * bytes_in, bytes_in)
+    }
+
+    /// Dequantize one layer at `bits` into a `[out, in]` tensor.
+    pub fn dequant(&self, layer: usize, bits: u8) -> Result<Tensor> {
+        if !(MIN_BITS..=MAX_BITS).contains(&bits) {
+            bail!("bits {bits} out of range");
+        }
+        if layer >= self.n_layers {
+            bail!("layer {layer} out of range ({})", self.n_layers);
+        }
+        let (sl, sp, so) = self.plane_stride();
+        let bytes_in = self.in_dim / 8;
+        let lut = self
+            .luts
+            .get(&bits)
+            .ok_or_else(|| anyhow!("missing lut for {bits} bits"))?;
+        let lut_w = 1usize << bits;
+        let lut_base = layer * self.out_dim * lut_w;
+        let mut out = vec![0f32; self.out_dim * self.in_dim];
+        for o in 0..self.out_dim {
+            let row_lut = &lut[lut_base + o * lut_w..lut_base + (o + 1) * lut_w];
+            let dst = &mut out[o * self.in_dim..(o + 1) * self.in_dim];
+            for byte in 0..bytes_in {
+                // gather the byte of each of the top `bits` planes
+                let mut plane_bytes = [0u8; 6];
+                for (p, pb) in plane_bytes.iter_mut().enumerate().take(bits as usize) {
+                    *pb = self.planes[layer * sl + p * sp + o * so + byte];
+                }
+                for j in 0..8 {
+                    let mut code = 0usize;
+                    for pb in plane_bytes.iter().take(bits as usize) {
+                        code = (code << 1) | ((pb >> j) & 1) as usize;
+                    }
+                    dst[byte * 8 + j] = row_lut[code];
+                }
+            }
+        }
+        Tensor::new(vec![self.out_dim, self.in_dim], out)
+    }
+
+    /// Materialize the full `[L, out, in]` stack at per-layer bitwidths.
+    pub fn dequant_stack(&self, bits_per_layer: &[u8]) -> Result<Tensor> {
+        if bits_per_layer.len() != self.n_layers {
+            bail!("need {} bit entries, got {}", self.n_layers, bits_per_layer.len());
+        }
+        let mut data = Vec::with_capacity(self.n_layers * self.out_dim * self.in_dim);
+        for (layer, &b) in bits_per_layer.iter().enumerate() {
+            data.extend_from_slice(&self.dequant(layer, b)?.data);
+        }
+        Tensor::new(vec![self.n_layers, self.out_dim, self.in_dim], data)
+    }
+
+    /// Bytes of packed storage actually touched at bitwidth `bits`
+    /// (planes + LUT) — the memory-traffic model behind Tables 5/9.
+    pub fn bytes_at(&self, bits: u8) -> usize {
+        let planes = self.n_layers * bits as usize * self.out_dim * self.in_dim / 8;
+        let lut = self.n_layers * self.out_dim * (1 << bits) * 4;
+        planes + lut
+    }
+}
+
+/// The full any-precision model store (7 groups).
+pub struct AnyPrecStore {
+    pub groups: BTreeMap<String, GroupStore>,
+}
+
+impl AnyPrecStore {
+    pub fn load(path: &str) -> Result<AnyPrecStore> {
+        let arrays = load_npz(path)?;
+        let mut groups = BTreeMap::new();
+        for g in GROUPS {
+            let planes = arrays
+                .get(&format!("planes_{g}"))
+                .ok_or_else(|| anyhow!("missing planes_{g} in {path}"))?;
+            let shape = &planes.shape; // [L, 6, out, in/8]
+            if shape.len() != 4 || shape[1] != 6 {
+                bail!("planes_{g}: unexpected shape {:?}", shape);
+            }
+            let (n_layers, out_dim, in_dim) = (shape[0], shape[2], shape[3] * 8);
+            let mut luts = BTreeMap::new();
+            for b in MIN_BITS..=MAX_BITS {
+                let lut: &NpyArray = arrays
+                    .get(&format!("lut{b}_{g}"))
+                    .ok_or_else(|| anyhow!("missing lut{b}_{g}"))?;
+                if lut.shape != vec![n_layers, out_dim, 1 << b] {
+                    bail!("lut{b}_{g}: unexpected shape {:?}", lut.shape);
+                }
+                luts.insert(b, lut.to_f32());
+            }
+            groups.insert(
+                g.to_string(),
+                GroupStore {
+                    planes: planes.as_u8().context(format!("planes_{g}"))?.to_vec(),
+                    n_layers,
+                    out_dim,
+                    in_dim,
+                    luts,
+                },
+            );
+        }
+        Ok(AnyPrecStore { groups })
+    }
+
+    pub fn group(&self, g: &str) -> Result<&GroupStore> {
+        self.groups.get(g).ok_or_else(|| anyhow!("unknown group {g}"))
+    }
+
+    /// Total packed capacity at the given budget bitwidth (Table 9 rows).
+    pub fn capacity_bytes(&self, bits: u8) -> usize {
+        self.groups.values().map(|g| g.bytes_at(bits)).sum()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.groups.values().next().map(|g| g.n_layers).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a tiny store by hand and check dequant against the format spec.
+    fn toy_store() -> GroupStore {
+        // 1 layer, 2 out rows, 8 in cols; code6 of (o=0) = col index*8+o... keep simple:
+        // col j in row o has 6-bit code = (j + o) % 64.
+        let (l, out, n_in) = (1usize, 2usize, 16usize);
+        let mut planes = vec![0u8; l * 6 * out * (n_in / 8)];
+        let code = |o: usize, j: usize| -> u8 { ((j * 4 + o) % 64) as u8 };
+        for o in 0..out {
+            for j in 0..n_in {
+                let c = code(o, j);
+                for p in 0..6 {
+                    let bit = (c >> (5 - p)) & 1;
+                    if bit == 1 {
+                        let idx = p * out * (n_in / 8) + o * (n_in / 8) + j / 8;
+                        planes[idx] |= 1 << (j % 8);
+                    }
+                }
+            }
+        }
+        let mut luts = BTreeMap::new();
+        for b in MIN_BITS..=MAX_BITS {
+            let w = 1usize << b;
+            // lut[o][c] = c as f32 + o*100
+            let mut lut = vec![0f32; l * out * w];
+            for o in 0..out {
+                for c in 0..w {
+                    lut[o * w + c] = c as f32 + o as f32 * 100.0;
+                }
+            }
+            luts.insert(b, lut);
+        }
+        GroupStore { planes, n_layers: l, out_dim: out, in_dim: n_in, luts }
+    }
+
+    #[test]
+    fn dequant_matches_spec() {
+        let s = toy_store();
+        for bits in 3..=6u8 {
+            let t = s.dequant(0, bits).unwrap();
+            for o in 0..2 {
+                for j in 0..16 {
+                    let code6 = ((j * 4 + o) % 64) as usize;
+                    let code_b = code6 >> (6 - bits as usize);
+                    let want = code_b as f32 + o as f32 * 100.0;
+                    assert_eq!(t.at(&[o, j]), want, "bits={bits} o={o} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nested_prefix_property() {
+        // dequant at b and b+1 must agree on the *cluster hierarchy*:
+        // code_b == code_{b+1} >> 1 (checked via the identity LUT above).
+        let s = toy_store();
+        let t5 = s.dequant(0, 5).unwrap();
+        let t6 = s.dequant(0, 6).unwrap();
+        for o in 0..2 {
+            for j in 0..16 {
+                let c6 = (t6.at(&[o, j]) - o as f32 * 100.0) as usize;
+                let c5 = (t5.at(&[o, j]) - o as f32 * 100.0) as usize;
+                assert_eq!(c5, c6 >> 1);
+            }
+        }
+    }
+
+    #[test]
+    fn memory_accounting_monotone() {
+        let s = toy_store();
+        assert!(s.bytes_at(3) < s.bytes_at(4));
+        assert!(s.bytes_at(5) < s.bytes_at(6));
+    }
+
+    #[test]
+    fn dequant_stack_shapes() {
+        let s = toy_store();
+        let t = s.dequant_stack(&[4]).unwrap();
+        assert_eq!(t.shape, vec![1, 2, 16]);
+    }
+
+    #[test]
+    fn bad_inputs_rejected() {
+        let s = toy_store();
+        assert!(s.dequant(0, 2).is_err());
+        assert!(s.dequant(0, 7).is_err());
+        assert!(s.dequant(3, 4).is_err());
+        assert!(s.dequant_stack(&[4, 4]).is_err());
+    }
+}

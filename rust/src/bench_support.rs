@@ -1,0 +1,90 @@
+//! Shared plumbing for the table/figure bench harnesses (criterion is not
+//! in the offline cache; each bench is a `harness = false` binary that
+//! prints the paper-style rows and writes them under `results/`).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::evalharness::{self, Method, PplResult};
+use crate::model::{artifacts_available, Manifest, ModelAssets};
+use crate::runtime::decode::EstMode;
+use crate::runtime::Runtime;
+use crate::util::stats::format_table;
+
+/// Paper-table method lineup, in row order.
+pub fn methods_for_target(target: f64) -> Vec<Method> {
+    vec![
+        Method::Static { method: "llm_mq".into(), target },
+        Method::Static { method: "hawq_v2".into(), target },
+        Method::Dpllm { tag: format!("{target:.2}") },
+    ]
+}
+
+pub fn targets_for_budget(budget: u32) -> Vec<f64> {
+    match budget {
+        b if b >= 6 => vec![3.5, 4.0, 4.5, 5.0, 5.5],
+        5 => vec![3.25, 3.5, 3.75, 4.0, 4.25, 4.5, 4.75],
+        _ => vec![3.25, 3.5, 3.75],
+    }
+}
+
+/// Abort politely when `make artifacts` hasn't run (benches must never
+/// fail the build on a fresh checkout).
+pub fn require_artifacts(bench: &str) -> bool {
+    if artifacts_available() {
+        return true;
+    }
+    println!("[{bench}] artifacts not built — run `make artifacts` first; skipping");
+    false
+}
+
+pub fn note_missing(bench: &str, what: &str) {
+    println!("[{bench}] {what} not found — run `make artifacts-extended`; skipping");
+}
+
+/// One perplexity cell, or None when that config's artifacts are missing.
+pub fn ppl_cell(rt: &Arc<Runtime>, assets: &ModelAssets, manifest: &Manifest,
+                budget: u32, method: &Method, stream: &[u16], mode: EstMode)
+                -> Option<PplResult> {
+    let session = evalharness::build_session(rt, assets, manifest, budget, method).ok()?;
+    evalharness::perplexity(
+        &session, stream, evalharness::eval_chunk_default(),
+        evalharness::eval_tokens_default(), mode)
+        .ok()
+}
+
+/// Write a rendered table to stdout and `results/<name>.txt`.
+pub fn emit(name: &str, title: &str, header: &[&str], rows: &[Vec<String>]) {
+    let table = format_table(header, rows);
+    println!("== {title} ==\n{table}");
+    let _ = std::fs::create_dir_all("results");
+    let _ = std::fs::write(format!("results/{name}.txt"),
+                           format!("{title}\n{table}"));
+}
+
+/// Standard harness preamble: runtime + manifest.
+pub fn setup() -> Result<(Arc<Runtime>, Manifest)> {
+    let rt = Arc::new(Runtime::new().context("PJRT runtime")?);
+    let manifest = Manifest::load()?;
+    Ok((rt, manifest))
+}
+
+pub fn fmt_ppl(p: Option<&PplResult>) -> String {
+    match p {
+        // 4 decimals: at sandbox scale the per-channel-quantized tiny
+        // models lose only ~1-2% ppl at 3 bits, so the inter-method gaps
+        // sit in the 3rd-4th decimal (see EXPERIMENTS.md — Table 1 note).
+        Some(r) => format!("{:.4}", r.ppl),
+        None => "-".into(),
+    }
+}
+
+/// The two headline models (paper: Llama-3-8B / Phi-3-Medium analogs).
+pub fn headline_models() -> Vec<&'static str> {
+    vec!["dpl-tiny", "dpl-small"]
+}
+
+pub fn model_available(name: &str) -> bool {
+    ModelAssets::load(name).is_ok()
+}

@@ -1,0 +1,210 @@
+//! `dpllm` CLI subcommands.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::qos::{QosBudget, UtilizationSim};
+use crate::coordinator::sched::{Request, SchedPolicy};
+use crate::coordinator::service::{make_queue, ServingEngine};
+use crate::evalharness::{self, tasks, Method};
+use crate::model::{art, Manifest, ModelAssets};
+use crate::runtime::decode::EstMode;
+use crate::runtime::Runtime;
+use crate::server::Server;
+use crate::tokenizer::Tokenizer;
+use crate::util::cli::Args;
+
+const HELP: &str = "\
+dpllm — DP-LLM coordinator (NeurIPS 2025 reproduction)
+
+USAGE: dpllm <subcommand> [--flags]
+
+  generate   --model M --target T --prompt P [--max-new N] [--budget B]
+  serve      --model M [--addr HOST:PORT] [--targets 3.50,4.00,4.50] [--budget B]
+  eval-ppl   --model M --method dpllm|hawq_v2|llm_mq|uniform --target T
+             [--dataset synthwiki|synthweb] [--budget B] [--tokens N] [--exact]
+  eval-task  --model M --task arith|listfn|dates|algebra --target T [--budget B]
+  qos-sim    --model M [--requests N] [--budget B] [--util-max F]
+  reassign   --model M --target T [--cap B]   (re-solve a static assignment
+             from the Fisher sensitivities, Rust-side — no Python round trip)
+  info       (artifact inventory)
+";
+
+pub fn run(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = Args::parse(&args[1.min(args.len())..]);
+    match cmd {
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "generate" => generate(&rest),
+        "serve" => serve(&rest),
+        "eval-ppl" => eval_ppl(&rest),
+        "eval-task" => eval_task(&rest),
+        "qos-sim" => qos_sim(&rest),
+        "reassign" => reassign(&rest),
+        "info" => info(),
+        other => bail!("unknown subcommand '{other}' (try 'help')"),
+    }
+}
+
+fn method_from(args: &Args) -> Result<Method> {
+    let target = args.f64_or("target", 4.0);
+    Ok(match args.get_or("method", "dpllm").as_str() {
+        "dpllm" => Method::Dpllm { tag: format!("{target:.2}") },
+        "uniform" => Method::Uniform { bits: target as u8 },
+        m @ ("hawq_v2" | "llm_mq") => {
+            Method::Static { method: m.to_string(), target }
+        }
+        other => bail!("unknown method {other}"),
+    })
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "dpl-tiny");
+    let budget = args.usize_or("budget", 5) as u32;
+    let target = args.f64_or("target", 4.0);
+    let prompt = args.req("prompt")?.to_string();
+    let rt = Arc::new(Runtime::new()?);
+    let assets = ModelAssets::load(&model)?;
+    let manifest = Manifest::load()?;
+    let m = Method::Dpllm { tag: format!("{target:.2}") };
+    let session = evalharness::build_session(&rt, &assets, &manifest, budget, &m)?;
+    let tok = Tokenizer::load(&art(&["data", "tokenizer.json"]))?;
+    let (text, bits) = tasks::generate(&session, &tok, &prompt,
+                                       args.usize_or("max-new", 48),
+                                       EstMode::Approx)?;
+    println!("{text}");
+    eprintln!("[target {target} | effective bits {bits:.3}]");
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "dpl-tiny");
+    let budget = args.usize_or("budget", 5) as u32;
+    let addr = args.get_or("addr", "127.0.0.1:8077");
+    let targets_s = args.get_or("targets", "3.25,3.50,4.00,4.50,4.75");
+    let tags: Vec<String> = targets_s
+        .split(',')
+        .map(|t| format!("{:.2}", t.trim().parse::<f64>().unwrap_or(4.0)))
+        .collect();
+    let tag_refs: Vec<&str> = tags.iter().map(String::as_str).collect();
+    let rt = Arc::new(Runtime::new()?);
+    let engine = ServingEngine::load(&rt, &model, budget, &tag_refs)?;
+    eprintln!("[serve] adaptation set: {:?}", engine.targets());
+    let server = Server::new(engine, UtilizationSim::new(7, 0.5));
+    server.serve(&addr)
+}
+
+fn eval_ppl(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "dpl-tiny");
+    let budget = args.usize_or("budget", 5) as u32;
+    let dataset = args.get_or("dataset", "synthwiki");
+    let method = method_from(args)?;
+    let rt = Arc::new(Runtime::new()?);
+    let assets = ModelAssets::load(&model)?;
+    let manifest = Manifest::load()?;
+    let session = evalharness::build_session(&rt, &assets, &manifest, budget, &method)?;
+    let stream = evalharness::load_stream(&dataset)?;
+    let mode = if args.has("exact") { EstMode::Exact } else { EstMode::Approx };
+    let res = evalharness::perplexity(
+        &session, &stream, evalharness::eval_chunk_default(),
+        args.usize_or("tokens", evalharness::eval_tokens_default()), mode)?;
+    println!(
+        "{} {} {}: ppl {:.4} (eff bits {:.3}, {:.1} ms/tok, {} tokens)",
+        model, dataset, method.label(), res.ppl, res.effective_bits,
+        res.ms_per_token, res.tokens
+    );
+    Ok(())
+}
+
+fn eval_task(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "dpl-tiny");
+    let budget = args.usize_or("budget", 5) as u32;
+    let task = args.get_or("task", "arith");
+    let method = method_from(args)?;
+    let rt = Arc::new(Runtime::new()?);
+    let assets = ModelAssets::load(&model)?;
+    let manifest = Manifest::load()?;
+    let session = evalharness::build_session(&rt, &assets, &manifest, budget, &method)?;
+    let tok = Tokenizer::load(&art(&["data", "tokenizer.json"]))?;
+    let res = tasks::eval_task(&session, &tok, &task,
+                               args.usize_or("samples", tasks::task_eval_limit()),
+                               EstMode::Approx)?;
+    println!(
+        "{} {} {}: {:.1}% ({} samples, eff bits {:.3})",
+        model, task, method.label(), res.accuracy, res.n, res.effective_bits
+    );
+    Ok(())
+}
+
+fn qos_sim(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "dpl-tiny");
+    let budget = args.usize_or("budget", 5) as u32;
+    let n = args.usize_or("requests", 12);
+    let rt = Arc::new(Runtime::new()?);
+    let engine = ServingEngine::load(&rt, &model, budget,
+                                     &["3.25", "3.50", "4.00", "4.50", "4.75"])?;
+    let mut util = UtilizationSim::new(11, args.f64_or("util-max", 0.6));
+    let prompts = tasks::load_task("instruct")?;
+    let mut rngi = 0usize;
+    let reqs = (0..n).map(|i| {
+        let p = &prompts[i % prompts.len()];
+        rngi += 1;
+        let qos = if i % 3 == 0 {
+            QosBudget::best_effort()
+        } else {
+            QosBudget::tight(30.0 + (i % 5) as f64 * 40.0)
+        };
+        Request::new(i as u64, p.prompt.clone(), 32, qos)
+    });
+    let mut queue = make_queue(SchedPolicy::Edf, reqs);
+    let outcomes = engine.run_queue(&mut queue, &mut util)?;
+    for o in &outcomes {
+        println!(
+            "req {:>3}: target {:.2} eff {:.3} tpot {:.1} ms  {} toks",
+            o.id, o.target_precision, o.effective_bits,
+            o.decode_ms / o.output_tokens.max(1) as f64, o.output_tokens
+        );
+    }
+    println!("{}", engine.metrics.summary().report());
+    Ok(())
+}
+
+/// Runtime adaptation-set reconfiguration: re-solve the static
+/// mixed-precision assignment in Rust from the exported sensitivities
+/// (used when the device's memory budget changes while serving).
+fn reassign(args: &Args) -> Result<()> {
+    use crate::selector::assign::problem_from_artifacts;
+    let model = args.get_or("model", "dpl-tiny");
+    let target = args.f64_or("target", 4.0);
+    let cap = args.get("cap").and_then(|s| s.parse::<u8>().ok());
+    let problem = problem_from_artifacts(&model)?;
+    let caps = cap.map(|c| vec![c; problem.m.len()]);
+    let bits = problem.solve(target, caps.as_deref())?;
+    let avg: f64 = bits.iter().zip(&problem.m)
+        .map(|(&b, &m)| b as f64 * m).sum::<f64>()
+        / problem.m.iter().sum::<f64>();
+    println!("reassigned {model} to avg {avg:.3} bits (target {target}):");
+    for (i, chunk) in bits.chunks(7).enumerate() {
+        println!("  block {i:>2}: {chunk:?}");
+    }
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    let manifest = Manifest::load()?;
+    println!("artifacts root: {}", crate::model::artifacts_root().display());
+    for m in manifest.models() {
+        let assets = ModelAssets::load(&m)?;
+        println!(
+            "  {m}: d={} L={} vocab={} | anyprec capacity 3b={:.1}MB 6b={:.1}MB",
+            assets.cfg.d_model, assets.cfg.n_layers, assets.cfg.vocab,
+            assets.store.capacity_bytes(3) as f64 / 1e6,
+            assets.store.capacity_bytes(6) as f64 / 1e6,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! Serving metrics: per-request records + percentile summaries
+//! (powers the §6.3 per-query QoS study and the e2e example's report).
+
+use std::sync::Mutex;
+
+use crate::util::stats::{mean, percentile};
+
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub target_precision: f64,
+    pub effective_bits: f64,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+    pub queue_ms: f64,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+}
+
+impl RequestRecord {
+    pub fn tpot_ms(&self) -> f64 {
+        self.decode_ms / self.output_tokens.max(1) as f64
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.queue_ms + self.prefill_ms + self.decode_ms
+    }
+}
+
+#[derive(Default)]
+pub struct MetricsRegistry {
+    records: Mutex<Vec<RequestRecord>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean_tpot_ms: f64,
+    pub p50_total_ms: f64,
+    pub p90_total_ms: f64,
+    pub p99_total_ms: f64,
+    pub mean_eff_bits: f64,
+    pub p90_eff_bits: f64,
+    pub p99_eff_bits: f64,
+    pub throughput_tok_s: f64,
+    pub total_output_tokens: usize,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, r: RequestRecord) {
+        self.records.lock().unwrap().push(r);
+    }
+
+    pub fn records(&self) -> Vec<RequestRecord> {
+        self.records.lock().unwrap().clone()
+    }
+
+    pub fn summary(&self) -> Summary {
+        let rs = self.records.lock().unwrap();
+        let tpot: Vec<f64> = rs.iter().map(|r| r.tpot_ms()).collect();
+        let total: Vec<f64> = rs.iter().map(|r| r.total_ms()).collect();
+        let bits: Vec<f64> = rs.iter().map(|r| r.effective_bits).collect();
+        let out_tokens: usize = rs.iter().map(|r| r.output_tokens).sum();
+        let busy_s: f64 = rs.iter().map(|r| (r.prefill_ms + r.decode_ms) / 1e3).sum();
+        Summary {
+            n: rs.len(),
+            mean_tpot_ms: mean(&tpot),
+            p50_total_ms: percentile(&total, 50.0),
+            p90_total_ms: percentile(&total, 90.0),
+            p99_total_ms: percentile(&total, 99.0),
+            mean_eff_bits: mean(&bits),
+            p90_eff_bits: percentile(&bits, 90.0),
+            p99_eff_bits: percentile(&bits, 99.0),
+            throughput_tok_s: if busy_s > 0.0 { out_tokens as f64 / busy_s } else { 0.0 },
+            total_output_tokens: out_tokens,
+        }
+    }
+}
+
+impl Summary {
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens={} tpot={:.2}ms p50/p90/p99 latency={:.0}/{:.0}/{:.0}ms \
+             eff-bits mean/p90/p99={:.3}/{:.3}/{:.3} throughput={:.1} tok/s",
+            self.n, self.total_output_tokens, self.mean_tpot_ms,
+            self.p50_total_ms, self.p90_total_ms, self.p99_total_ms,
+            self.mean_eff_bits, self.p90_eff_bits, self.p99_eff_bits,
+            self.throughput_tok_s,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, decode_ms: f64, out: usize, bits: f64) -> RequestRecord {
+        RequestRecord {
+            id, target_precision: 4.0, effective_bits: bits,
+            prompt_tokens: 8, output_tokens: out,
+            queue_ms: 1.0, prefill_ms: 2.0, decode_ms,
+        }
+    }
+
+    #[test]
+    fn summary_math() {
+        let m = MetricsRegistry::new();
+        m.record(rec(0, 100.0, 10, 4.0));
+        m.record(rec(1, 200.0, 10, 4.2));
+        let s = m.summary();
+        assert_eq!(s.n, 2);
+        assert!((s.mean_tpot_ms - 15.0).abs() < 1e-9);
+        assert!((s.mean_eff_bits - 4.1).abs() < 1e-9);
+        assert_eq!(s.total_output_tokens, 20);
+        assert!(s.throughput_tok_s > 0.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = MetricsRegistry::new();
+        for i in 0..100 {
+            m.record(rec(i, i as f64, 10, 3.0 + i as f64 * 0.01));
+        }
+        let s = m.summary();
+        assert!(s.p50_total_ms <= s.p90_total_ms);
+        assert!(s.p90_total_ms <= s.p99_total_ms);
+        assert!(s.p90_eff_bits <= s.p99_eff_bits);
+    }
+}

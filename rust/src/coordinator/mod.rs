@@ -1,0 +1,19 @@
+//! L3 coordinator: the runtime-adaptation loop of Fig. 1.
+//!
+//! A query arrives with a QoS budget (a per-token latency target); system
+//! utilization fluctuates; the *slack* that remains decides which member
+//! of the adaptation set (target precisions 3.25..4.75 under the memory
+//! budget) serves the query.  DP-LLM's contribution is that every member
+//! is a *dynamic* configuration — per-layer precision keeps being chosen
+//! token by token by the relative-error selector.
+
+pub mod metrics;
+pub mod sampler;
+pub mod qos;
+pub mod sched;
+pub mod workload;
+pub mod service;
+
+pub use qos::{AdaptationPolicy, QosBudget, UtilizationSim};
+pub use sched::{Request, RequestQueue, SchedPolicy};
+pub use service::{ServeOutcome, ServingEngine};

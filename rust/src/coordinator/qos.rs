@@ -1,0 +1,144 @@
+//! QoS budgets, the fluctuating-utilization simulator and the
+//! slack → target-precision adaptation policy (paper Fig. 1).
+
+use crate::util::rng::Rng;
+
+/// Per-query quality-of-service budget.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QosBudget {
+    /// Latency target per output token, ms (∞ = best effort).
+    pub ms_per_token: f64,
+}
+
+impl QosBudget {
+    pub fn best_effort() -> QosBudget {
+        QosBudget { ms_per_token: f64::INFINITY }
+    }
+
+    pub fn tight(ms: f64) -> QosBudget {
+        QosBudget { ms_per_token: ms }
+    }
+}
+
+/// Background system utilization: a bounded random walk in [0, max_util],
+/// standing in for the "fluctuating system utilization" of Fig. 1 (other
+/// apps competing for the device on an edge platform).
+#[derive(Debug, Clone)]
+pub struct UtilizationSim {
+    rng: Rng,
+    level: f64,
+    max_util: f64,
+    step: f64,
+}
+
+impl UtilizationSim {
+    pub fn new(seed: u64, max_util: f64) -> UtilizationSim {
+        UtilizationSim { rng: Rng::new(seed), level: max_util / 2.0,
+                         max_util, step: 0.08 }
+    }
+
+    /// Constant utilization (for controlled experiments).
+    pub fn constant(level: f64) -> UtilizationSim {
+        UtilizationSim { rng: Rng::new(0), level, max_util: level, step: 0.0 }
+    }
+
+    /// Advance the walk and return the current utilization in [0, max].
+    pub fn tick(&mut self) -> f64 {
+        if self.step > 0.0 {
+            self.level += (self.rng.f64() - 0.5) * 2.0 * self.step;
+            self.level = self.level.clamp(0.0, self.max_util);
+        }
+        self.level
+    }
+
+    pub fn current(&self) -> f64 {
+        self.level
+    }
+}
+
+/// Maps (QoS budget, utilization) to a member of the adaptation set.
+///
+/// `tpot_at(target)` — predicted per-token latency of each configuration
+/// (from the device cost model or live measurements); the policy picks the
+/// highest-precision target whose predicted TPOT fits the slack
+///     slack = budget · (1 − utilization)
+/// falling back to the fastest configuration when nothing fits (the
+/// best-effort semantics of the paper's §6.3 QoS study).
+#[derive(Debug, Clone)]
+pub struct AdaptationPolicy {
+    /// (target_precision, predicted_tpot_ms), sorted by target ascending.
+    pub options: Vec<(f64, f64)>,
+}
+
+impl AdaptationPolicy {
+    pub fn new(mut options: Vec<(f64, f64)>) -> AdaptationPolicy {
+        options.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        AdaptationPolicy { options }
+    }
+
+    pub fn select(&self, budget: QosBudget, utilization: f64) -> f64 {
+        let slack = budget.ms_per_token * (1.0 - utilization.clamp(0.0, 0.99));
+        let mut chosen = self.options.first().map(|o| o.0).unwrap_or(4.0);
+        for &(target, tpot) in &self.options {
+            if tpot <= slack {
+                chosen = target; // options sorted ascending: keep the largest fit
+            }
+        }
+        chosen
+    }
+
+    pub fn targets(&self) -> Vec<f64> {
+        self.options.iter().map(|o| o.0).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> AdaptationPolicy {
+        // TPOT grows with precision (affine, like Table 5).
+        AdaptationPolicy::new(vec![
+            (3.25, 10.0), (3.5, 11.0), (4.0, 13.0), (4.5, 15.0), (4.75, 16.0),
+        ])
+    }
+
+    #[test]
+    fn relaxed_budget_low_util_prefers_high_precision() {
+        let p = policy();
+        assert_eq!(p.select(QosBudget::tight(100.0), 0.0), 4.75);
+        assert_eq!(p.select(QosBudget::best_effort(), 0.9), 4.75);
+    }
+
+    #[test]
+    fn tight_budget_or_high_util_degrades_precision() {
+        let p = policy();
+        assert_eq!(p.select(QosBudget::tight(13.5), 0.0), 4.0);
+        // same budget but 30% util -> slack 9.45ms -> nothing fits -> fastest
+        assert_eq!(p.select(QosBudget::tight(13.5), 0.3), 3.25);
+        assert_eq!(p.select(QosBudget::tight(11.5), 0.0), 3.5);
+    }
+
+    #[test]
+    fn fallback_is_fastest() {
+        let p = policy();
+        assert_eq!(p.select(QosBudget::tight(1.0), 0.0), 3.25);
+    }
+
+    #[test]
+    fn utilization_walk_bounded() {
+        let mut u = UtilizationSim::new(3, 0.6);
+        for _ in 0..1000 {
+            let v = u.tick();
+            assert!((0.0..=0.6).contains(&v));
+        }
+    }
+
+    #[test]
+    fn utilization_walk_moves() {
+        let mut u = UtilizationSim::new(4, 0.8);
+        let first = u.tick();
+        let any_diff = (0..100).any(|_| (u.tick() - first).abs() > 0.05);
+        assert!(any_diff);
+    }
+}

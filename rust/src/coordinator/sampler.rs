@@ -1,0 +1,98 @@
+//! Token samplers for the decode loop: greedy, temperature, top-k.
+//! (The eval harnesses use greedy for determinism; the serving path can
+//! request sampled generation per query.)
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampling {
+    Greedy,
+    /// Softmax sampling at `temperature` over the top `k` logits
+    /// (k = 0 means no top-k truncation).
+    TopK { k: usize, temperature: f64 },
+}
+
+impl Sampling {
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u32 {
+        match *self {
+            Sampling::Greedy => argmax(logits),
+            Sampling::TopK { k, temperature } => top_k(logits, k, temperature, rng),
+        }
+    }
+}
+
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+fn top_k(logits: &[f32], k: usize, temperature: f64, rng: &mut Rng) -> u32 {
+    let temperature = temperature.max(1e-4);
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    let k = if k == 0 { logits.len() } else { k.min(logits.len()) };
+    let cand = &idx[..k];
+    let max = logits[cand[0]] as f64;
+    let weights: Vec<f64> = cand
+        .iter()
+        .map(|&i| ((logits[i] as f64 - max) / temperature).exp())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut draw = rng.f64() * total;
+    for (w, &i) in weights.iter().zip(cand) {
+        draw -= w;
+        if draw <= 0.0 {
+            return i as u32;
+        }
+    }
+    cand[k - 1] as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::for_each_seed;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let logits = vec![0.1, 3.0, -1.0, 2.9];
+        let mut rng = Rng::new(0);
+        assert_eq!(Sampling::Greedy.sample(&logits, &mut rng), 1);
+    }
+
+    #[test]
+    fn low_temperature_converges_to_greedy() {
+        let logits = vec![0.0, 5.0, 1.0, 4.9];
+        for_each_seed(20, |rng| {
+            let s = Sampling::TopK { k: 4, temperature: 1e-3 };
+            assert_eq!(s.sample(&logits, rng), 1);
+        });
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let logits = vec![10.0, 9.0, -50.0, -60.0];
+        for_each_seed(30, |rng| {
+            let s = Sampling::TopK { k: 2, temperature: 2.0 };
+            let t = s.sample(&logits, rng);
+            assert!(t == 0 || t == 1, "sampled outside top-2: {t}");
+        });
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let logits = vec![1.0, 0.9, 0.8, 0.7];
+        let mut rng = Rng::new(42);
+        let s = Sampling::TopK { k: 0, temperature: 10.0 };
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..200 {
+            seen.insert(s.sample(&logits, &mut rng));
+        }
+        assert!(seen.len() >= 3, "only saw {seen:?}");
+    }
+}

@@ -1,0 +1,177 @@
+//! Request queue + scheduling policies.
+//!
+//! On-device serving decodes one request at a time (batch-1 GEMV is the
+//! whole premise of weight-only quantization), so the scheduler's job is
+//! admission order: FIFO for throughput studies, EDF (earliest deadline
+//! first) when QoS deadlines differ across queries.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::qos::QosBudget;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new: usize,
+    pub qos: QosBudget,
+    /// Absolute deadline for first token (EDF key); None = best effort.
+    pub deadline_ms: Option<f64>,
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: impl Into<String>, max_new: usize,
+               qos: QosBudget) -> Request {
+        Request {
+            id,
+            prompt: prompt.into(),
+            max_new,
+            qos,
+            deadline_ms: None,
+            arrival: Instant::now(),
+        }
+    }
+
+    pub fn with_deadline(mut self, ms_from_now: f64) -> Request {
+        self.deadline_ms = Some(ms_from_now);
+        self
+    }
+
+    fn deadline_key(&self, now: Instant) -> f64 {
+        match self.deadline_ms {
+            Some(d) => d - now.duration_since(self.arrival).as_secs_f64() * 1e3,
+            None => f64::INFINITY,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    Fifo,
+    /// Earliest deadline first; best-effort requests run after all
+    /// deadlined ones, FIFO among themselves.
+    Edf,
+}
+
+/// Admission queue.  Not thread-safe by itself — the serving engine wraps
+/// it in a mutex; this keeps the policy logic testable in isolation.
+#[derive(Debug)]
+pub struct RequestQueue {
+    policy: SchedPolicy,
+    items: VecDeque<Request>,
+}
+
+impl RequestQueue {
+    pub fn new(policy: SchedPolicy) -> RequestQueue {
+        RequestQueue { policy, items: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, r: Request) {
+        self.items.push_back(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Next request according to the policy.
+    pub fn pop(&mut self) -> Option<Request> {
+        match self.policy {
+            SchedPolicy::Fifo => self.items.pop_front(),
+            SchedPolicy::Edf => {
+                let now = Instant::now();
+                let best = self
+                    .items
+                    .iter()
+                    .enumerate()
+                    .min_by(|(ia, a), (ib, b)| {
+                        a.deadline_key(now)
+                            .partial_cmp(&b.deadline_key(now))
+                            .unwrap()
+                            .then(ia.cmp(ib)) // FIFO tie-break
+                    })
+                    .map(|(i, _)| i)?;
+                self.items.remove(best)
+            }
+        }
+    }
+
+    /// Queueing delay of the oldest waiting request, ms.
+    pub fn oldest_wait_ms(&self) -> f64 {
+        self.items
+            .iter()
+            .map(|r| r.arrival.elapsed().as_secs_f64() * 1e3)
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::for_each_seed;
+
+    fn req(id: u64, deadline: Option<f64>) -> Request {
+        let r = Request::new(id, "x", 8, QosBudget::best_effort());
+        match deadline {
+            Some(d) => r.with_deadline(d),
+            None => r,
+        }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut q = RequestQueue::new(SchedPolicy::Fifo);
+        for i in 0..5 {
+            q.push(req(i, None));
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn edf_prefers_tight_deadlines() {
+        let mut q = RequestQueue::new(SchedPolicy::Edf);
+        q.push(req(0, None));
+        q.push(req(1, Some(500.0)));
+        q.push(req(2, Some(100.0)));
+        q.push(req(3, Some(300.0)));
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+        assert_eq!(order, vec![2, 3, 1, 0]);
+    }
+
+    #[test]
+    fn edf_besteffort_fifo_among_themselves() {
+        let mut q = RequestQueue::new(SchedPolicy::Edf);
+        q.push(req(10, None));
+        q.push(req(11, None));
+        q.push(req(12, None));
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+        assert_eq!(order, vec![10, 11, 12]);
+    }
+
+    /// Property: every pushed request is popped exactly once (no loss, no
+    /// duplication) under both policies.
+    #[test]
+    fn no_request_lost_property() {
+        for_each_seed(30, |rng| {
+            let policy = if rng.bool(0.5) { SchedPolicy::Fifo } else { SchedPolicy::Edf };
+            let mut q = RequestQueue::new(policy);
+            let n = rng.range(1, 40);
+            let mut expect: Vec<u64> = (0..n as u64).collect();
+            for i in 0..n as u64 {
+                let dl = if rng.bool(0.5) { Some(rng.f64() * 1000.0) } else { None };
+                q.push(req(i, dl));
+            }
+            let mut got: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+            got.sort_unstable();
+            expect.sort_unstable();
+            assert_eq!(got, expect);
+        });
+    }
+}

@@ -1,0 +1,189 @@
+//! The serving engine: an adaptation set of DP-LLM configurations bound to
+//! one model, a QoS policy choosing among them per query, and the decode
+//! loop that runs requests end to end (tokenize → admit → prefill at max
+//! precision → dynamic-precision decode → detokenize).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::{MetricsRegistry, RequestRecord};
+use super::qos::{AdaptationPolicy, UtilizationSim};
+use super::sched::{Request, RequestQueue, SchedPolicy};
+use crate::evalharness::{build_session, Method};
+use crate::model::{art, Manifest, ModelAssets};
+use crate::runtime::decode::{DecodeSession, EstMode};
+use crate::runtime::Runtime;
+use crate::tokenizer::Tokenizer;
+
+pub struct ServeOutcome {
+    pub id: u64,
+    pub text: String,
+    pub target_precision: f64,
+    pub effective_bits: f64,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+    pub output_tokens: usize,
+}
+
+/// One model + its adaptation set, ready to serve.
+pub struct ServingEngine {
+    pub tokenizer: Tokenizer,
+    /// target precision -> session (dynamic DP-LLM configs).
+    sessions: BTreeMap<String, DecodeSession>,
+    targets: Vec<(f64, String)>,
+    pub policy: AdaptationPolicy,
+    pub metrics: MetricsRegistry,
+    pub est_mode: EstMode,
+}
+
+impl ServingEngine {
+    /// Load DP-LLM configurations for every `tags` entry (e.g. "3.50").
+    pub fn load(rt: &Arc<Runtime>, model: &str, budget: u32,
+                tags: &[&str]) -> Result<ServingEngine> {
+        let assets = ModelAssets::load(model)?;
+        let manifest = Manifest::load()?;
+        let tokenizer = Tokenizer::load(&art(&["data", "tokenizer.json"]))?;
+        let mut sessions = BTreeMap::new();
+        let mut targets = Vec::new();
+        for tag in tags {
+            let m = Method::Dpllm { tag: tag.to_string() };
+            let s = build_session(rt, &assets, &manifest, budget, &m)?;
+            targets.push((s.ec.target, tag.to_string()));
+            sessions.insert(tag.to_string(), s);
+        }
+        if sessions.is_empty() {
+            return Err(anyhow!("no configurations loaded"));
+        }
+        // Calibrate the adaptation policy with measured TPOTs.
+        let mut options = Vec::new();
+        for (target, tag) in &targets {
+            let s = &sessions[tag];
+            let tpot = measure_tpot(s, 3)?;
+            options.push((*target, tpot));
+        }
+        Ok(ServingEngine {
+            tokenizer,
+            sessions,
+            targets,
+            policy: AdaptationPolicy::new(options),
+            metrics: MetricsRegistry::new(),
+            est_mode: EstMode::Approx,
+        })
+    }
+
+    pub fn session_for_target(&self, target: f64) -> &DecodeSession {
+        let tag = self
+            .targets
+            .iter()
+            .min_by(|a, b| {
+                (a.0 - target).abs().partial_cmp(&(b.0 - target).abs()).unwrap()
+            })
+            .map(|(_, tag)| tag.clone())
+            .expect("nonempty");
+        &self.sessions[&tag]
+    }
+
+    pub fn targets(&self) -> Vec<f64> {
+        self.targets.iter().map(|(t, _)| *t).collect()
+    }
+
+    /// Serve one request at the target chosen by the QoS policy.
+    pub fn handle(&self, req: &Request, utilization: f64) -> Result<ServeOutcome> {
+        let target = self.policy.select(req.qos, utilization);
+        self.handle_at(req, target)
+    }
+
+    /// Serve one request pinned to a specific target precision.
+    pub fn handle_at(&self, req: &Request, target: f64) -> Result<ServeOutcome> {
+        let session = self.session_for_target(target);
+        let queue_ms = req.arrival.elapsed().as_secs_f64() * 1e3;
+        let prompt_ids = self.tokenizer.encode(&req.prompt);
+        if prompt_ids.is_empty() {
+            return Err(anyhow!("empty prompt"));
+        }
+
+        let t0 = Instant::now();
+        let pre = session.prefill(&prompt_ids)?;
+        let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let t1 = Instant::now();
+        let mut kv = pre.kv;
+        let mut sel = session.selector_state();
+        let mut next = DecodeSession::argmax(&pre.logits);
+        let mut out_ids = vec![next];
+        let mut pos = prompt_ids.len();
+        for _ in 1..req.max_new {
+            if pos + 1 >= session.cfg.max_seq {
+                break;
+            }
+            let step = session.step(next, pos, &kv, &sel.use_h_async, self.est_mode)?;
+            sel.observe(&step.ests, &step.use_eff);
+            kv = step.kv;
+            next = DecodeSession::argmax(&step.logits);
+            out_ids.push(next);
+            pos += 1;
+        }
+        let decode_ms = t1.elapsed().as_secs_f64() * 1e3;
+        let eff = sel.effective_bits();
+
+        self.metrics.record(RequestRecord {
+            id: req.id,
+            target_precision: target,
+            effective_bits: eff,
+            prompt_tokens: prompt_ids.len(),
+            output_tokens: out_ids.len(),
+            queue_ms,
+            prefill_ms,
+            decode_ms,
+        });
+        Ok(ServeOutcome {
+            id: req.id,
+            text: self.tokenizer.decode(&out_ids),
+            target_precision: target,
+            effective_bits: eff,
+            prefill_ms,
+            decode_ms,
+            output_tokens: out_ids.len(),
+        })
+    }
+
+    /// Drain a queue sequentially (batch-1 on-device serving), with the
+    /// utilization simulator advancing per request.
+    pub fn run_queue(&self, queue: &mut RequestQueue, util: &mut UtilizationSim)
+                     -> Result<Vec<ServeOutcome>> {
+        let mut out = Vec::new();
+        while let Some(req) = queue.pop() {
+            let u = util.tick();
+            out.push(self.handle(&req, u)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Measure mean decode-step latency over `n` steps (policy calibration).
+pub fn measure_tpot(session: &DecodeSession, n: usize) -> Result<f64> {
+    let mut kv = session.zero_kv();
+    let sel = session.selector_state();
+    // Warm-up step (compile caches, allocator).
+    let w = session.step(1, 0, &kv, &sel.use_h_async, EstMode::Approx)?;
+    kv = w.kv;
+    let t0 = Instant::now();
+    for i in 0..n {
+        let s = session.step(1, i + 1, &kv, &sel.use_h_async, EstMode::Approx)?;
+        kv = s.kv;
+    }
+    Ok(t0.elapsed().as_secs_f64() * 1e3 / n as f64)
+}
+
+/// Build a FIFO/EDF queue from (prompt, qos) pairs — workload-gen helper.
+pub fn make_queue(policy: SchedPolicy,
+                  reqs: impl IntoIterator<Item = Request>) -> RequestQueue {
+    let mut q = RequestQueue::new(policy);
+    for r in reqs {
+        q.push(r);
+    }
+    q
+}

@@ -1,0 +1,138 @@
+//! Workload generation for the serving experiments: Poisson arrivals,
+//! mixed QoS classes, prompt sampling from the instruct set — the
+//! controllable analog of the paper's §6.3 query stream.
+
+use super::qos::QosBudget;
+use super::sched::Request;
+use crate::util::rng::Rng;
+
+/// A QoS class with its share of traffic.
+#[derive(Debug, Clone, Copy)]
+pub struct QosClass {
+    pub share: f64,
+    pub budget: QosBudget,
+    /// Optional first-token deadline (ms from arrival) for EDF.
+    pub deadline_ms: Option<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Mean arrival rate (requests/second) for inter-arrival spacing.
+    pub rate_per_s: f64,
+    pub max_new: usize,
+    pub classes: Vec<QosClass>,
+}
+
+impl WorkloadSpec {
+    /// The default mixed-QoS workload used by the examples/benches:
+    /// 1/3 best-effort, 1/3 relaxed, 1/3 tight with deadlines.
+    pub fn mixed(rate_per_s: f64, max_new: usize) -> WorkloadSpec {
+        WorkloadSpec {
+            rate_per_s,
+            max_new,
+            classes: vec![
+                QosClass { share: 1.0 / 3.0, budget: QosBudget::best_effort(),
+                           deadline_ms: None },
+                QosClass { share: 1.0 / 3.0, budget: QosBudget::tight(250.0),
+                           deadline_ms: None },
+                QosClass { share: 1.0 / 3.0, budget: QosBudget::tight(60.0),
+                           deadline_ms: Some(2_000.0) },
+            ],
+        }
+    }
+
+    fn pick_class(&self, rng: &mut Rng) -> &QosClass {
+        let mut draw = rng.f64() * self.classes.iter().map(|c| c.share).sum::<f64>();
+        for c in &self.classes {
+            draw -= c.share;
+            if draw <= 0.0 {
+                return c;
+            }
+        }
+        self.classes.last().expect("nonempty classes")
+    }
+
+    /// Generate `n` requests over `prompts` with Poisson inter-arrival
+    /// offsets (returned alongside, in ms, for trace-driven replay).
+    pub fn generate(&self, prompts: &[String], n: usize, seed: u64)
+                    -> Vec<(f64, Request)> {
+        let mut rng = Rng::new(seed);
+        let mut t_ms = 0.0;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            t_ms += rng.exp(self.rate_per_s) * 1e3;
+            let class = *self.pick_class(&mut rng);
+            let prompt = prompts[rng.range(0, prompts.len())].clone();
+            let mut r = Request::new(i as u64, prompt, self.max_new, class.budget);
+            if let Some(d) = class.deadline_ms {
+                r = r.with_deadline(d);
+            }
+            out.push((t_ms, r));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::for_each_seed;
+
+    fn prompts() -> Vec<String> {
+        vec!["a".into(), "b".into(), "c".into()]
+    }
+
+    #[test]
+    fn generates_n_requests_with_increasing_arrivals() {
+        let w = WorkloadSpec::mixed(10.0, 16);
+        let reqs = w.generate(&prompts(), 50, 1);
+        assert_eq!(reqs.len(), 50);
+        for win in reqs.windows(2) {
+            assert!(win[1].0 >= win[0].0);
+        }
+    }
+
+    #[test]
+    fn arrival_rate_roughly_matches() {
+        let w = WorkloadSpec::mixed(20.0, 8);
+        let reqs = w.generate(&prompts(), 400, 2);
+        let span_s = reqs.last().unwrap().0 / 1e3;
+        let rate = reqs.len() as f64 / span_s;
+        assert!((rate - 20.0).abs() < 4.0, "rate {rate}");
+    }
+
+    #[test]
+    fn class_mix_respected() {
+        let w = WorkloadSpec::mixed(10.0, 8);
+        let reqs = w.generate(&prompts(), 600, 3);
+        let best_effort = reqs.iter()
+            .filter(|(_, r)| r.qos.ms_per_token.is_infinite()).count();
+        let frac = best_effort as f64 / reqs.len() as f64;
+        assert!((frac - 1.0 / 3.0).abs() < 0.08, "share {frac}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let w = WorkloadSpec::mixed(5.0, 8);
+        let a = w.generate(&prompts(), 20, 9);
+        let b = w.generate(&prompts(), 20, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.1.prompt, y.1.prompt);
+            assert_eq!(x.0, y.0);
+        }
+    }
+
+    /// Property: shares always sum to ~1 and every request gets a prompt
+    /// from the pool.
+    #[test]
+    fn prompts_from_pool_property() {
+        for_each_seed(10, |rng| {
+            let w = WorkloadSpec::mixed(1.0 + rng.f64() * 30.0, 8);
+            let ps = prompts();
+            let reqs = w.generate(&ps, rng.range(1, 40), rng.next_u64());
+            for (_, r) in reqs {
+                assert!(ps.contains(&r.prompt));
+            }
+        });
+    }
+}

@@ -1,0 +1,235 @@
+//! Device cost models for the latency studies (Tables 4/5/6).
+//!
+//! The paper measures TPOT on an NVIDIA Jetson Orin AGX and an RTX 4060 Ti.
+//! Neither exists in this sandbox, so we model what those tables actually
+//! demonstrate: weight-only-quantized batch-1 decode is **memory-bandwidth
+//! bound**, hence TPOT is affine in the effective bitwidth
+//! (paper Table 5 rows are affine with R² > 0.999), and the selector adds
+//! a small, scheme-dependent overhead (Tables 4/6).
+//!
+//! ```text
+//! TPOT(b) ≈ overhead_ms + weight_bytes(b) / (BW · eff)
+//! ```
+//!
+//! Profiles are fit to the paper's own Table 5 numbers and then *scaled to
+//! our models' real byte counts* from the any-precision store; the CPU
+//! profile is fit at runtime from measured decode steps, so the relative
+//! overhead claims are additionally validated on real hardware (see
+//! `benches/table4_overhead.rs`).
+
+use crate::anyprec::AnyPrecStore;
+use crate::model::calib::DpllmConfig;
+use crate::model::ModelConfig;
+
+/// Estimator scheme for the ablation in Table 6.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EstScheme {
+    /// Every layer uses the JL random projection, synchronously.
+    RandomProjOnly,
+    /// Hybrid linear/JL selection (paper §5.1), synchronous.
+    Hybrid,
+    /// Hybrid + asynchronous estimation for q/k/v/gate/up (paper §5.2).
+    HybridAsync,
+}
+
+/// A modeled device.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Effective memory bandwidth in GB/s.
+    pub mem_bw_gbps: f64,
+    /// Fraction of peak bandwidth the *quantized dequant-GEMV* kernels
+    /// achieve (> 1.0 means L2-cache reuse beyond DRAM bandwidth, as the
+    /// paper's 4060 Ti numbers imply — 32 MB L2 holding the LUTs).
+    pub efficiency: f64,
+    /// Fraction of peak bandwidth dense fp16 GEMV achieves.
+    pub fp16_efficiency: f64,
+    /// Fixed per-token overhead (attention, activations, launches), ms.
+    pub overhead_ms: f64,
+    /// Per-selector-invocation overhead on the critical path, µs
+    /// (kernel-launch-ish cost of the tiny estimator GEMV + compare).
+    pub launch_us: f64,
+}
+
+/// Fit to paper Table 5 row "L3-8B Jetson": slope 6.03 ms/bit and
+/// intercept 9.18 ms imply 166.5 GB/s effective (81% of the 204.8 GB/s
+/// spec); the fp16 row (86.36 ms) implies ~full spec bandwidth for dense
+/// GEMV.  The unit tests below pin the fit against the paper's own cells.
+pub const JETSON_ORIN: DeviceProfile = DeviceProfile {
+    name: "jetson-orin-agx",
+    mem_bw_gbps: 204.8,
+    efficiency: 0.813,
+    fp16_efficiency: 1.0,
+    overhead_ms: 9.18,
+    launch_us: 28.0,
+};
+
+/// Fit to "L3-8B 4060Ti": slope 3.29 ms/bit implies 305 GB/s effective —
+/// above the 288 GB/s DRAM spec, consistent with the 32 MB L2 serving the
+/// centroid tables; intercept 4.86 ms.
+pub const RTX_4060TI: DeviceProfile = DeviceProfile {
+    name: "rtx-4060ti",
+    mem_bw_gbps: 288.0,
+    efficiency: 1.06,
+    fp16_efficiency: 1.0,
+    overhead_ms: 4.86,
+    launch_us: 7.0,
+};
+
+/// Fit at runtime from measured PJRT-CPU decode steps.
+pub fn cpu_profile(measured_ms_per_bit: f64, measured_overhead_ms: f64) -> DeviceProfile {
+    DeviceProfile {
+        name: "pjrt-cpu",
+        mem_bw_gbps: 1.0 / measured_ms_per_bit.max(1e-9) * 1e-6,
+        efficiency: 1.0,
+        fp16_efficiency: 1.0,
+        overhead_ms: measured_overhead_ms,
+        launch_us: 0.0,
+    }
+}
+
+impl DeviceProfile {
+    /// ms to stream `bytes` at effective bandwidth.
+    pub fn stream_ms(&self, bytes: f64) -> f64 {
+        bytes / (self.mem_bw_gbps * self.efficiency * 1e9) * 1e3
+    }
+
+    /// TPOT for a model whose quantized weights occupy `weight_bytes` at
+    /// the chosen effective bitwidth.
+    pub fn tpot_ms(&self, weight_bytes: f64) -> f64 {
+        self.overhead_ms + self.stream_ms(weight_bytes)
+    }
+
+    /// TPOT for an fp16 (unquantized) variant of the same model.
+    pub fn tpot_fp16_ms(&self, n_params: f64) -> f64 {
+        let bytes = n_params * 2.0;
+        self.overhead_ms + bytes / (self.mem_bw_gbps * self.fp16_efficiency * 1e9) * 1e3
+    }
+}
+
+/// Weight bytes actually streamed per token at effective bitwidth `b_eff`
+/// for our models (packed planes + LUT rows, from the real store layout).
+pub fn weight_bytes_at(store: &AnyPrecStore, b_eff: f64) -> f64 {
+    let lo = (b_eff.floor() as u8).clamp(3, 6);
+    let hi = (b_eff.ceil() as u8).clamp(3, 6);
+    let frac = b_eff - lo as f64;
+    let lo_b = store.capacity_bytes(lo) as f64;
+    let hi_b = store.capacity_bytes(hi) as f64;
+    lo_b + (hi_b - lo_b) * frac
+}
+
+/// Per-token estimator cost (bytes on the critical path + launches) for a
+/// DP-LLM config under the given scheme — drives Tables 4 and 6.
+pub fn estimator_critical_bytes(cfg: &ModelConfig, dp: &DpllmConfig,
+                                scheme: EstScheme) -> (f64, usize) {
+    let idx = cfg.linear_index();
+    let async_groups = ["wq", "wk", "wv", "wg", "wu"];
+    let mut bytes = 0.0;
+    let mut invocations = 0usize;
+    for (li, (_, g)) in idx.iter().enumerate() {
+        let r = &dp.linears[li];
+        if r.h == r.l {
+            continue; // single-precision candidate set: no selector
+        }
+        let is_async = async_groups.contains(g);
+        let (_, in_d) = cfg.group_shape(g);
+        let jl_bytes = (dp.k_proj * in_d * 4) as f64;
+        let (layer_bytes, on_path) = match scheme {
+            EstScheme::RandomProjOnly => (jl_bytes, true),
+            EstScheme::Hybrid => {
+                if r.use_lin {
+                    (0.0, true) // norm reduction ~ free
+                } else {
+                    (jl_bytes, true)
+                }
+            }
+            EstScheme::HybridAsync => {
+                if r.use_lin {
+                    (0.0, !is_async)
+                } else {
+                    (jl_bytes, !is_async)
+                }
+            }
+        };
+        if on_path {
+            bytes += layer_bytes;
+            invocations += 1;
+        }
+    }
+    (bytes, invocations)
+}
+
+/// Relative selector overhead vs. the static baseline (Table 4/6 cells).
+pub fn overhead_frac(profile: &DeviceProfile, cfg: &ModelConfig,
+                     store: &AnyPrecStore, dp: &DpllmConfig, b_eff: f64,
+                     scheme: EstScheme) -> f64 {
+    let base = profile.tpot_ms(weight_bytes_at(store, b_eff));
+    let (est_bytes, invocations) = estimator_critical_bytes(cfg, dp, scheme);
+    let extra = profile.stream_ms(est_bytes)
+        + invocations as f64 * profile.launch_us / 1e3;
+    extra / base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The Jetson profile applied to the paper's Llama-3-8B reproduces the
+    /// paper's own Table 5 slope/intercept within tolerance — the fit the
+    /// whole cost model rests on.
+    #[test]
+    fn jetson_profile_matches_paper_llama() {
+        let n_params = 8.03e9f64; // Llama-3-8B
+        let tp = |b: f64| JETSON_ORIN.tpot_ms(n_params * b / 8.0);
+        // paper: 28.77 ms @ 3.25 eff bits, 37.81 ms @ 4.75 eff bits
+        assert!((tp(3.25) - 28.77).abs() / 28.77 < 0.08, "{}", tp(3.25));
+        assert!((tp(4.75) - 37.81).abs() / 37.81 < 0.08, "{}", tp(4.75));
+        // fp16 row: 86.36 ms
+        let fp = JETSON_ORIN.tpot_fp16_ms(n_params);
+        assert!((fp - 86.36).abs() / 86.36 < 0.15, "{fp}");
+    }
+
+    #[test]
+    fn rtx_profile_matches_paper_llama() {
+        let n_params = 8.03e9f64;
+        let tp = |b: f64| RTX_4060TI.tpot_ms(n_params * b / 8.0);
+        assert!((tp(3.25) - 15.54).abs() / 15.54 < 0.08, "{}", tp(3.25));
+        assert!((tp(4.75) - 20.47).abs() / 20.47 < 0.08, "{}", tp(4.75));
+    }
+
+    #[test]
+    fn tpot_affine_in_bits() {
+        let n = 8e9f64;
+        let t35 = JETSON_ORIN.tpot_ms(n * 3.5 / 8.0);
+        let t40 = JETSON_ORIN.tpot_ms(n * 4.0 / 8.0);
+        let t45 = JETSON_ORIN.tpot_ms(n * 4.5 / 8.0);
+        assert!(((t45 - t40) - (t40 - t35)).abs() < 1e-9);
+        assert!(t35 < t40 && t40 < t45);
+    }
+
+    #[test]
+    fn scheme_overheads_ordered() {
+        // With any mix of linear/JL estimators, the critical-path cost must
+        // satisfy RP-only >= Hybrid >= Hybrid+Async (the Table 6 shape).
+        use crate::model::calib::LinearCalib;
+        let cfg = ModelConfig {
+            name: "t".into(), vocab: 8, d_model: 16, n_layers: 2,
+            n_heads: 2, d_ff: 24, max_seq: 8, rope_theta: 10000.0,
+        };
+        let linears: Vec<LinearCalib> = (0..cfg.n_linear())
+            .map(|i| LinearCalib {
+                l: 3, h: 4, p: 3.5, thr: 1.0,
+                use_lin: i % 2 == 0, lin_a: 0.1, lin_b: 0.0, r2: 0.95,
+            })
+            .collect();
+        let dp = DpllmConfig {
+            model: "t".into(), budget: 5, tag: "3.50".into(), target: 3.5,
+            k_proj: 64, linears, n_linear_estimators: 7, n_jl_estimators: 7,
+        };
+        let (rp, _) = estimator_critical_bytes(&cfg, &dp, EstScheme::RandomProjOnly);
+        let (hy, _) = estimator_critical_bytes(&cfg, &dp, EstScheme::Hybrid);
+        let (ha, _) = estimator_critical_bytes(&cfg, &dp, EstScheme::HybridAsync);
+        assert!(rp >= hy && hy >= ha);
+        assert!(rp > 0.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! Evaluation harnesses: teacher-forced perplexity and downstream-task
+//! exact-match, both running through the full L3→PJRT request path (the
+//! same decode graph that serves traffic — not a Python shortcut).
+
+pub mod tasks;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::calib::{load_maxprec, DpllmConfig, StaticConfig};
+use crate::model::{art, Manifest, ModelAssets};
+use crate::runtime::decode::{DecodeSession, EstMode};
+use crate::runtime::Runtime;
+use crate::selector::EngineConfig;
+use crate::util::npz::load_u16_bin;
+
+/// Which precision-assignment method to evaluate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Method {
+    Dpllm { tag: String },
+    Static { method: String, target: f64 },
+    Uniform { bits: u8 },
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::Dpllm { tag } => format!("DP-LLM@{tag}"),
+            Method::Static { method, target } => format!("{method}@{target:.2}"),
+            Method::Uniform { bits } => format!("uniform@{bits}"),
+        }
+    }
+}
+
+/// Build a servable session for (model, budget, method).
+pub fn build_session(rt: &Arc<Runtime>, assets: &ModelAssets,
+                     manifest: &Manifest, budget: u32, method: &Method)
+                     -> Result<DecodeSession> {
+    let maxprec = load_maxprec(&assets.cfg.name, budget)?;
+    let ec = match method {
+        Method::Dpllm { tag } => {
+            let dp = DpllmConfig::load(&assets.cfg.name, budget, tag)
+                .with_context(|| format!("dpllm config {tag}"))?;
+            EngineConfig::from_dpllm(&assets.cfg, &dp, &maxprec)?
+        }
+        Method::Static { method, target } => {
+            let st = StaticConfig::load(&assets.cfg.name, budget, method, *target)?;
+            EngineConfig::from_static(&assets.cfg, &st, &maxprec)?
+        }
+        Method::Uniform { bits } => {
+            let st = StaticConfig::uniform(&assets.cfg, *bits);
+            EngineConfig::from_static(&assets.cfg, &st, &maxprec)?
+        }
+    };
+    DecodeSession::new(rt.clone(), assets, manifest, ec)
+}
+
+/// Result of one perplexity run.
+#[derive(Debug, Clone)]
+pub struct PplResult {
+    pub ppl: f64,
+    pub tokens: usize,
+    pub effective_bits: f64,
+    pub ms_per_token: f64,
+}
+
+/// Teacher-forced perplexity over a tokenized stream, decoding step by
+/// step through the serving graph with live dynamic precision selection.
+pub fn perplexity(session: &DecodeSession, stream: &[u16], chunk: usize,
+                  max_tokens: usize, mode: EstMode) -> Result<PplResult> {
+    if stream.len() < chunk + 1 {
+        bail!("stream too short");
+    }
+    let n_chunks = (max_tokens / chunk).max(1);
+    let mut nll_sum = 0.0;
+    let mut count = 0usize;
+    let mut eff_sum = 0.0;
+    let t0 = std::time::Instant::now();
+    for c in 0..n_chunks {
+        let base = c * (chunk + 1);
+        if base + chunk + 1 > stream.len() {
+            break;
+        }
+        let toks = &stream[base..base + chunk + 1];
+        let mut kv = session.zero_kv();
+        let mut sel = session.selector_state();
+        for t in 0..chunk {
+            let out = session.step(toks[t] as u32, t, &kv,
+                                   &sel.use_h_async, mode)?;
+            sel.observe(&out.ests, &out.use_eff);
+            kv = out.kv;
+            nll_sum += nll_of(&out.logits, toks[t + 1] as usize);
+            count += 1;
+        }
+        eff_sum += sel.effective_bits();
+    }
+    let chunks_done = (count / chunk).max(1);
+    Ok(PplResult {
+        ppl: (nll_sum / count as f64).exp(),
+        tokens: count,
+        effective_bits: eff_sum / chunks_done as f64,
+        ms_per_token: t0.elapsed().as_secs_f64() * 1e3 / count as f64,
+    })
+}
+
+/// -log softmax(logits)[target]
+pub fn nll_of(logits: &[f32], target: usize) -> f64 {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse: f64 = logits.iter().map(|&v| ((v as f64) - max).exp()).sum::<f64>().ln() + max;
+    lse - logits[target] as f64
+}
+
+/// Load one of the eval token streams by short name.
+pub fn load_stream(name: &str) -> Result<Vec<u16>> {
+    let file = match name {
+        "synthwiki" => "synthwiki_eval.bin",
+        "synthweb" => "synthweb_eval.bin",
+        other => bail!("unknown stream {other}"),
+    };
+    load_u16_bin(&art(&["data", file]))
+}
+
+/// Eval-size knobs (env-overridable so benches scale to the machine).
+pub fn eval_tokens_default() -> usize {
+    std::env::var("DPLLM_EVAL_TOKENS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+pub fn eval_chunk_default() -> usize {
+    std::env::var("DPLLM_EVAL_CHUNK")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nll_matches_manual_softmax() {
+        let logits = vec![1.0f32, 2.0, 3.0];
+        let p: Vec<f64> = {
+            let z: f64 = logits.iter().map(|&v| (v as f64).exp()).sum();
+            logits.iter().map(|&v| (v as f64).exp() / z).collect()
+        };
+        for (i, pi) in p.iter().enumerate() {
+            assert!((nll_of(&logits, i) - (-pi.ln())).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn nll_stable_for_large_logits() {
+        let logits = vec![1000.0f32, 999.0];
+        let v = nll_of(&logits, 0);
+        assert!(v.is_finite() && v > 0.0 && v < 1.0);
+    }
+
+    #[test]
+    fn method_labels() {
+        assert_eq!(Method::Uniform { bits: 4 }.label(), "uniform@4");
+        assert_eq!(
+            Method::Static { method: "hawq_v2".into(), target: 4.0 }.label(),
+            "hawq_v2@4.00"
+        );
+    }
+}

@@ -1,0 +1,217 @@
+//! Downstream-task evaluation (Table 2): prefill the prompt at max
+//! precision, greedy-decode with dynamic per-layer precision, extract the
+//! answer with task-specific exact matching (the GSM8K `#### n` /
+//! MBPP-list / BBH-option / MATH-solution analogs).
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::art;
+use crate::runtime::decode::{DecodeSession, EstMode};
+use crate::tokenizer::Tokenizer;
+use crate::util::json::parse_jsonl;
+
+#[derive(Debug, Clone)]
+pub struct TaskSample {
+    pub task: String,
+    pub prompt: String,
+    pub answer: String,
+}
+
+pub fn load_task(task: &str) -> Result<Vec<TaskSample>> {
+    let path = art(&["data", "tasks", &format!("{task}_eval.jsonl")]);
+    parse_jsonl(&path)?
+        .iter()
+        .map(|j| {
+            Ok(TaskSample {
+                task: j.str_of("task")?,
+                prompt: j.str_of("prompt")?,
+                answer: j.str_of("answer")?,
+            })
+        })
+        .collect()
+}
+
+/// Greedy generation through the serving path.
+pub fn generate(session: &DecodeSession, tok: &Tokenizer, prompt: &str,
+                max_new: usize, mode: EstMode) -> Result<(String, f64)> {
+    let prompt_ids = tok.encode(prompt);
+    if prompt_ids.is_empty() {
+        bail!("empty prompt");
+    }
+    let bucket = session.prefill_bucket(prompt_ids.len())
+        .context("prompt too long")?;
+    let _ = bucket;
+    let pre = session.prefill(&prompt_ids)?;
+    let mut kv = pre.kv;
+    let mut sel = session.selector_state();
+    let mut next = DecodeSession::argmax(&pre.logits);
+    let mut out_ids = vec![next];
+    let mut pos = prompt_ids.len();
+    for _ in 1..max_new {
+        let step = session.step(next, pos, &kv, &sel.use_h_async, mode)?;
+        sel.observe(&step.ests, &step.use_eff);
+        kv = step.kv;
+        next = DecodeSession::argmax(&step.logits);
+        out_ids.push(next);
+        pos += 1;
+        if pos + 1 >= session.cfg.max_seq {
+            break;
+        }
+        let text = tok.decode(&out_ids);
+        if stop_condition(&text) {
+            break;
+        }
+    }
+    Ok((tok.decode(&out_ids), sel.effective_bits()))
+}
+
+fn stop_condition(text: &str) -> bool {
+    // All task formats terminate at a newline or a final answer marker.
+    text.contains('\n')
+        || text.contains("####")
+            && text.rfind("####").map(|i| text.len() > i + 6).unwrap_or(false)
+}
+
+/// Extract the comparable answer string from a generation, per task.
+pub fn extract_answer(task: &str, text: &str) -> Option<String> {
+    let text = text.trim_end();
+    match task {
+        "arith" => {
+            let at = text.find("####")?;
+            let rest = text[at + 4..].trim_start();
+            let num: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_digit() || *c == '-')
+                .collect();
+            (!num.is_empty()).then_some(num)
+        }
+        "listfn" => {
+            let line = text.lines().next()?.trim();
+            (!line.is_empty()).then(|| line.to_string())
+        }
+        "dates" => {
+            let open = text.find('(')?;
+            let close = text[open..].find(')')? + open;
+            Some(text[open..=close].to_string())
+        }
+        "algebra" => {
+            let at = text.rfind("x = ")?;
+            let rest = &text[at + 4..];
+            let num: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_digit() || *c == '-')
+                .collect();
+            (!num.is_empty()).then_some(num)
+        }
+        _ => None,
+    }
+}
+
+/// Gold answers go through the same extractor so the match is symmetric.
+pub fn gold_answer(task: &str, answer: &str) -> Option<String> {
+    match task {
+        "listfn" => Some(answer.trim().to_string()),
+        _ => extract_answer(task, answer),
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub task: String,
+    pub accuracy: f64,
+    pub n: usize,
+    pub effective_bits: f64,
+}
+
+/// Exact-match accuracy of `session` on a task eval set.
+pub fn eval_task(session: &DecodeSession, tok: &Tokenizer, task: &str,
+                 limit: usize, mode: EstMode) -> Result<TaskResult> {
+    let samples = load_task(task)?;
+    let n = samples.len().min(limit);
+    let mut correct = 0usize;
+    let mut eff = 0.0;
+    let mut evaluated = 0usize;
+    for s in samples.iter().take(n) {
+        let gold = match gold_answer(&s.task, &s.answer) {
+            Some(g) => g,
+            None => continue,
+        };
+        let max_new = match task {
+            "arith" | "algebra" => 48,
+            _ => 24,
+        };
+        let (text, bits) = match generate(session, tok, &s.prompt, max_new, mode) {
+            Ok(r) => r,
+            Err(_) => continue, // long prompt: skip (bucketed prefill)
+        };
+        evaluated += 1;
+        eff += bits;
+        if extract_answer(&s.task, &text).as_deref() == Some(gold.as_str()) {
+            correct += 1;
+        }
+    }
+    if evaluated == 0 {
+        bail!("no samples evaluated for {task}");
+    }
+    Ok(TaskResult {
+        task: task.to_string(),
+        accuracy: correct as f64 / evaluated as f64 * 100.0,
+        n: evaluated,
+        effective_bits: eff / evaluated as f64,
+    })
+}
+
+pub fn task_eval_limit() -> usize {
+    std::env::var("DPLLM_TASK_SAMPLES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extract_arith() {
+        assert_eq!(extract_answer("arith", "23 + 18 = 41. #### 41"),
+                   Some("41".into()));
+        assert_eq!(extract_answer("arith", "#### -7 junk"), Some("-7".into()));
+        assert_eq!(extract_answer("arith", "no marker"), None);
+    }
+
+    #[test]
+    fn extract_listfn_first_line() {
+        assert_eq!(extract_answer("listfn", "7 10 5\nTask: junk"),
+                   Some("7 10 5".into()));
+    }
+
+    #[test]
+    fn extract_dates_option() {
+        assert_eq!(extract_answer("dates", "(B) maybe more"), Some("(B)".into()));
+        assert_eq!(extract_answer("dates", "none"), None);
+    }
+
+    #[test]
+    fn extract_algebra() {
+        assert_eq!(extract_answer("algebra", "3x = 9. x = 3"), Some("3".into()));
+        assert_eq!(
+            extract_answer("algebra", "x = 12 / 4 = 3. x = 3"),
+            Some("3".into())
+        );
+    }
+
+    #[test]
+    fn gold_matches_generation_format() {
+        let gold = gold_answer("arith", "23 + 18 = 41. #### 41").unwrap();
+        let gen = extract_answer("arith", "23 + 18 = 41. #### 41").unwrap();
+        assert_eq!(gold, gen);
+    }
+
+    #[test]
+    fn stop_conditions() {
+        assert!(stop_condition("answer\nmore"));
+        assert!(stop_condition("x #### 12345"));
+        assert!(!stop_condition("still going"));
+    }
+}

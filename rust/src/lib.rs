@@ -1,0 +1,34 @@
+//! DP-LLM: Runtime Model Adaptation with Dynamic Layer-wise Precision
+//! Assignment (NeurIPS 2025) — the L3 Rust coordinator of the three-layer
+//! Rust + JAX + Pallas reproduction.
+//!
+//! Layer map (see DESIGN.md):
+//! - L1: Pallas kernels (`python/compile/kernels/`), build-time.
+//! - L2: JAX model + serving graphs (`python/compile/model.py`), AOT-lowered
+//!   to HLO text by `python/compile/aot.py`.
+//! - L3: this crate — loads the HLO artifacts via PJRT ([`runtime`]), owns
+//!   the request path: tokenization ([`tokenizer`]), dynamic per-layer
+//!   precision selection ([`selector`]), QoS adaptation and scheduling
+//!   ([`coordinator`]), serving ([`server`]), evaluation harnesses
+//!   ([`evalharness`]) and device cost models ([`costmodel`]).
+
+pub mod anyprec;
+pub mod bench_support;
+pub mod cli;
+pub mod coordinator;
+pub mod costmodel;
+pub mod evalharness;
+pub mod model;
+pub mod runtime;
+pub mod selector;
+pub mod server;
+pub mod tensor;
+pub mod tokenizer;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};
+
+/// CLI dispatcher (`dpllm <subcommand>`).
+pub fn cli_main(args: &[String]) -> Result<()> {
+    cli::run(args)
+}

@@ -1,0 +1,14 @@
+//! `dpllm` — CLI entry point for the DP-LLM coordinator.
+//!
+//! Subcommands are registered in `cli::run`; run `dpllm help` for the list.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(match dp_llm::cli_main(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    });
+}

@@ -1,0 +1,274 @@
+//! Model artifacts: configs, checkpoints, calibration outputs, manifest.
+//!
+//! Everything the Python build pipeline wrote under `artifacts/` is loaded
+//! through this module; nothing here runs Python — the artifacts are plain
+//! npz / JSON / HLO-text files (DESIGN.md §5).
+
+pub mod calib;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::anyprec::{AnyPrecStore, GROUPS};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::npz::load_npz;
+
+/// Resolve the artifacts root: `$DPLLM_ARTIFACTS` or `<repo>/artifacts`.
+pub fn artifacts_root() -> PathBuf {
+    if let Ok(p) = std::env::var("DPLLM_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // Walk up from cwd looking for artifacts/manifest.json (works from
+    // target/, benches, examples).
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() || cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+pub fn art(parts: &[&str]) -> String {
+    let mut p = artifacts_root();
+    for part in parts {
+        p.push(part);
+    }
+    p.to_string_lossy().into_owned()
+}
+
+/// Mirror of python `ModelConfig`.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: j.str_of("name")?,
+            vocab: j.usize_of("vocab")?,
+            d_model: j.usize_of("d_model")?,
+            n_layers: j.usize_of("n_layers")?,
+            n_heads: j.usize_of("n_heads")?,
+            d_ff: j.usize_of("d_ff")?,
+            max_seq: j.usize_of("max_seq")?,
+            rope_theta: j.get("rope_theta").and_then(|v| v.as_f64().ok())
+                .unwrap_or(10000.0),
+        })
+    }
+
+    /// RoPE cos/sin tables for one absolute position ([head_dim/2] each).
+    /// Computed host-side and passed to the decode graph as inputs — see
+    /// the `decode_step_dual` docstring / DESIGN.md §7 for why.
+    pub fn rope_tables(&self, pos: usize) -> (Vec<f32>, Vec<f32>) {
+        let hd = self.head_dim();
+        let half = hd / 2;
+        let mut cos = Vec::with_capacity(half);
+        let mut sin = Vec::with_capacity(half);
+        for j in 0..half {
+            let inv = 1.0 / self.rope_theta.powf(2.0 * j as f64 / hd as f64);
+            let ang = pos as f64 * inv;
+            cos.push(ang.cos() as f32);
+            sin.push(ang.sin() as f32);
+        }
+        (cos, sin)
+    }
+
+    pub fn load(name: &str) -> Result<ModelConfig> {
+        let path = art(&["models", name, "config.json"]);
+        ModelConfig::from_json(&Json::parse_file(&path)?)
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn group_shape(&self, g: &str) -> (usize, usize) {
+        let (d, f) = (self.d_model, self.d_ff);
+        match g {
+            "wq" | "wk" | "wv" | "wo" => (d, d),
+            "wg" | "wu" => (f, d),
+            "wd" => (d, f),
+            _ => panic!("unknown group {g}"),
+        }
+    }
+
+    pub fn n_linear(&self) -> usize {
+        self.n_layers * GROUPS.len()
+    }
+
+    pub fn group_params(&self, g: &str) -> usize {
+        let (o, i) = self.group_shape(g);
+        o * i
+    }
+
+    /// Canonical linear enumeration: index = layer * 7 + group_pos
+    /// (shared with python `assign.linear_index`).
+    pub fn linear_index(&self) -> Vec<(usize, &'static str)> {
+        let mut out = Vec::with_capacity(self.n_linear());
+        for layer in 0..self.n_layers {
+            for g in GROUPS {
+                out.push((layer, g));
+            }
+        }
+        out
+    }
+
+    pub fn kv_shape(&self) -> Vec<usize> {
+        vec![self.n_layers, 2, self.n_heads, self.max_seq, self.head_dim()]
+    }
+
+    /// Total linear-weight parameter count (the `M` of Eq. 1).
+    pub fn total_linear_params(&self) -> usize {
+        GROUPS.iter().map(|g| self.n_layers * self.group_params(g)).sum()
+    }
+}
+
+/// Non-linear (fp32) parameters of a model checkpoint.
+pub struct NonLinearParams {
+    pub tok_emb: Tensor,
+    pub out_head: Tensor,
+    pub final_norm: Tensor,
+    pub ln1: Tensor,
+    pub ln2: Tensor,
+}
+
+impl NonLinearParams {
+    pub fn load(name: &str, cfg: &ModelConfig) -> Result<NonLinearParams> {
+        let arrays = load_npz(&art(&["models", name, "ckpt.npz"]))?;
+        let get = |key: &str, shape: Vec<usize>| -> Result<Tensor> {
+            let a = arrays.get(key).ok_or_else(|| anyhow!("ckpt missing {key}"))?;
+            if a.shape != shape {
+                bail!("{key}: shape {:?}, expected {:?}", a.shape, shape);
+            }
+            Tensor::new(shape, a.to_f32())
+        };
+        Ok(NonLinearParams {
+            tok_emb: get("tok_emb", vec![cfg.vocab, cfg.d_model])?,
+            out_head: get("out_head", vec![cfg.vocab, cfg.d_model])?,
+            final_norm: get("final_norm", vec![cfg.d_model])?,
+            ln1: get("ln1", vec![cfg.n_layers, cfg.d_model])?,
+            ln2: get("ln2", vec![cfg.n_layers, cfg.d_model])?,
+        })
+    }
+}
+
+/// Manifest entry describing one AOT-compiled graph.
+#[derive(Debug, Clone)]
+pub struct HloEntry {
+    pub path: String,
+    pub args: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+pub struct Manifest {
+    json: Json,
+}
+
+impl Manifest {
+    pub fn load() -> Result<Manifest> {
+        let path = art(&["manifest.json"]);
+        Ok(Manifest { json: Json::parse_file(&path).context("manifest")? })
+    }
+
+    pub fn entry(&self, model: &str, name: &str) -> Result<HloEntry> {
+        let e = self
+            .json
+            .req("models")?
+            .req(model)
+            .with_context(|| format!("model {model} not in manifest"))?
+            .req("entries")?
+            .req(name)
+            .with_context(|| format!("entry {name}"))?;
+        let strs = |key: &str| -> Result<Vec<String>> {
+            Ok(match e.get(key) {
+                Some(Json::Arr(a)) => a
+                    .iter()
+                    .map(|v| v.as_str().map(str::to_string))
+                    .collect::<Result<_>>()?,
+                _ => vec![],
+            })
+        };
+        Ok(HloEntry {
+            path: art(&[&e.str_of("path")?]),
+            args: strs("args")?,
+            outputs: strs("outputs")?,
+        })
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        self.json
+            .req("models")
+            .and_then(|m| m.as_obj().map(|o| o.keys().cloned().collect()))
+            .unwrap_or_default()
+    }
+}
+
+/// Everything needed to instantiate a serving engine for one model.
+pub struct ModelAssets {
+    pub cfg: ModelConfig,
+    pub nl: NonLinearParams,
+    pub store: AnyPrecStore,
+}
+
+impl ModelAssets {
+    pub fn load(name: &str) -> Result<ModelAssets> {
+        let cfg = ModelConfig::load(name)?;
+        let nl = NonLinearParams::load(name, &cfg)?;
+        let store = AnyPrecStore::load(&art(&["models", name, "anyprec.npz"]))?;
+        if store.n_layers() != cfg.n_layers {
+            bail!("anyprec store layers {} != config {}", store.n_layers(),
+                  cfg.n_layers);
+        }
+        Ok(ModelAssets { cfg, nl, store })
+    }
+}
+
+pub fn artifacts_available() -> bool {
+    Path::new(&art(&["manifest.json"])).exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_shapes() {
+        let cfg = ModelConfig {
+            name: "t".into(), vocab: 64, d_model: 32, n_layers: 2,
+            n_heads: 2, d_ff: 48, max_seq: 16, rope_theta: 10000.0,
+        };
+        assert_eq!(cfg.group_shape("wq"), (32, 32));
+        assert_eq!(cfg.group_shape("wg"), (48, 32));
+        assert_eq!(cfg.group_shape("wd"), (32, 48));
+        assert_eq!(cfg.n_linear(), 14);
+        assert_eq!(cfg.linear_index()[8], (1, "wk"));
+        assert_eq!(cfg.kv_shape(), vec![2, 2, 2, 16, 16]);
+    }
+
+    #[test]
+    fn config_json_parse() {
+        let j = Json::parse(
+            r#"{"name":"x","vocab":1024,"d_model":192,"n_layers":6,
+                "n_heads":6,"d_ff":512,"max_seq":640,"rope_theta":10000.0}"#,
+        )
+        .unwrap();
+        let cfg = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.head_dim(), 32);
+        assert_eq!(cfg.total_linear_params(),
+                   6 * (4 * 192 * 192 + 2 * 512 * 192 + 192 * 512));
+    }
+}

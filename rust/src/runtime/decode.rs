@@ -1,0 +1,281 @@
+//! Decode session: one (model, engine-config) pair bound to the PJRT
+//! executables, with weights resident on the device.
+//!
+//! Request path per token:
+//!   1. upload ~(5·L + 3) small host values (token, pos, async flags),
+//!   2. `execute_b` the decode graph,
+//!   3. read back logits + per-linear estimates (+ carry the KV cache),
+//!   4. [`SelectorState::observe`] turns estimates into next-step flags.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::PjRtBuffer;
+
+use crate::anyprec::GROUPS;
+use crate::model::{Manifest, ModelAssets, ModelConfig};
+use crate::runtime::{wrap, Exe, Outputs, Runtime};
+use crate::selector::{EngineConfig, SelectorState, ASYNC_GROUPS};
+
+/// Estimator source for a step (Table 3 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EstMode {
+    /// Hybrid approximate estimators + async selection (production path).
+    Approx,
+    /// Exact ‖W_h x − W_l x‖ for every selection, fully synchronous.
+    Exact,
+}
+
+pub struct StepOut {
+    pub logits: Vec<f32>,
+    /// KV cache to feed into the next step (host copy; see DESIGN §Perf).
+    pub kv: Vec<f32>,
+    pub ests: BTreeMap<String, Vec<f32>>,
+    pub use_eff: BTreeMap<String, Vec<f32>>,
+}
+
+pub struct PrefillOut {
+    pub logits: Vec<f32>,
+    pub kv: Vec<f32>,
+}
+
+/// A servable model: compiled graphs + device-resident weight stacks.
+pub struct DecodeSession {
+    rt: Arc<Runtime>,
+    pub cfg: ModelConfig,
+    pub ec: EngineConfig,
+    decode: Arc<Exe>,
+    decode_args: Vec<String>,
+    /// (bucket_size, exe, arg names)
+    prefills: Vec<(usize, Arc<Exe>, Vec<String>)>,
+    static_bufs: HashMap<String, PjRtBuffer>,
+    prefill_bufs: HashMap<String, PjRtBuffer>,
+    kv_zero: Vec<f32>,
+}
+
+impl DecodeSession {
+    pub fn new(rt: Arc<Runtime>, assets: &ModelAssets, manifest: &Manifest,
+               ec: EngineConfig) -> Result<DecodeSession> {
+        let cfg = assets.cfg.clone();
+        let decode_entry = manifest.entry(&cfg.name, "decode_step")?;
+        let decode = rt.load(&decode_entry)?;
+
+        let mut prefills = Vec::new();
+        for p in [64usize, 128, 256] {
+            if let Ok(e) = manifest.entry(&cfg.name, &format!("prefill_{p}")) {
+                let exe = rt.load(&e)?;
+                prefills.push((p, exe, e.args.clone()));
+            }
+        }
+        if prefills.is_empty() {
+            bail!("no prefill entries for {}", cfg.name);
+        }
+
+        // ---- static decode args -------------------------------------------
+        let mut static_bufs = HashMap::new();
+        let nl = &assets.nl;
+        for (name, t) in [
+            ("tok_emb", &nl.tok_emb), ("out_head", &nl.out_head),
+            ("final_norm", &nl.final_norm), ("ln1", &nl.ln1), ("ln2", &nl.ln2),
+        ] {
+            static_bufs.insert(name.to_string(), rt.upload_tensor(t)?);
+        }
+        for g in GROUPS {
+            let store = assets.store.group(g)?;
+            let (lb, hb) = ec.group_bits(&cfg, g);
+            let wl = store.dequant_stack(&lb)?;
+            static_bufs.insert(format!("wl_{g}"), rt.upload_tensor(&wl)?);
+            let wh = store.dequant_stack(&hb)?;
+            static_bufs.insert(format!("wh_{g}"), rt.upload_tensor(&wh)?);
+            let sel = &ec.groups[g];
+            static_bufs.insert(
+                format!("G_{g}"),
+                rt.upload_f32(&sel.g_shape, &sel.g_proj)?,
+            );
+            let l = cfg.n_layers;
+            static_bufs.insert(format!("lina_{g}"), rt.upload_f32(&[l], &sel.lin_a)?);
+            static_bufs.insert(format!("linb_{g}"), rt.upload_f32(&[l], &sel.lin_b)?);
+            static_bufs.insert(format!("uselin_{g}"), rt.upload_f32(&[l], &sel.use_lin)?);
+            static_bufs.insert(format!("thr_{g}"), rt.upload_f32(&[l], &sel.thr)?);
+        }
+
+        // ---- prefill weights (paper: highest available precision) ---------
+        let mut prefill_bufs = HashMap::new();
+        for (name, t) in [
+            ("tok_emb", &nl.tok_emb), ("out_head", &nl.out_head),
+            ("final_norm", &nl.final_norm), ("ln1", &nl.ln1), ("ln2", &nl.ln2),
+        ] {
+            prefill_bufs.insert(name.to_string(), rt.upload_tensor(t)?);
+        }
+        let idx = cfg.linear_index();
+        for g in GROUPS {
+            let store = assets.store.group(g)?;
+            let bits: Vec<u8> = idx
+                .iter()
+                .enumerate()
+                .filter(|(_, (_, gg))| *gg == g)
+                .map(|(li, _)| ec.prefill_bits[li])
+                .collect();
+            let w = store.dequant_stack(&bits)?;
+            prefill_bufs.insert(format!("w_{g}"), rt.upload_tensor(&w)?);
+        }
+
+        let kv_len: usize = cfg.kv_shape().iter().product();
+        Ok(DecodeSession {
+            rt,
+            decode_args: decode_entry.args.clone(),
+            cfg,
+            ec,
+            decode,
+            prefills,
+            static_bufs,
+            prefill_bufs,
+            kv_zero: vec![0.0; kv_len],
+        })
+    }
+
+    pub fn selector_state(&self) -> SelectorState<'_> {
+        SelectorState::new(&self.cfg, &self.ec)
+    }
+
+    pub fn zero_kv(&self) -> Vec<f32> {
+        self.kv_zero.clone()
+    }
+
+    /// Smallest prefill bucket that fits `n` tokens.
+    pub fn prefill_bucket(&self, n: usize) -> Result<usize> {
+        self.prefills
+            .iter()
+            .map(|(p, _, _)| *p)
+            .filter(|&p| p >= n)
+            .min()
+            .ok_or_else(|| anyhow!("prompt of {n} tokens exceeds largest bucket"))
+    }
+
+    /// Run prefill at the highest available precision.
+    pub fn prefill(&self, prompt: &[u32]) -> Result<PrefillOut> {
+        let bucket = self.prefill_bucket(prompt.len())?;
+        let (_, exe, args) = self
+            .prefills
+            .iter()
+            .find(|(p, _, _)| *p == bucket)
+            .expect("bucket exists");
+        let mut padded: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
+        padded.resize(bucket, 0);
+        let tok_buf = self.rt.upload_i32(&[bucket], &padded)?;
+        let nv_buf = self.rt.scalar_i32(prompt.len() as i32)?;
+        let half = self.cfg.head_dim() / 2;
+        let mut cos = Vec::with_capacity(bucket * half);
+        let mut sin = Vec::with_capacity(bucket * half);
+        for p in 0..bucket {
+            let (c, s) = self.cfg.rope_tables(p);
+            cos.extend_from_slice(&c);
+            sin.extend_from_slice(&s);
+        }
+        let cos_buf = self.rt.upload_f32(&[bucket, half], &cos)?;
+        let sin_buf = self.rt.upload_f32(&[bucket, half], &sin)?;
+        let mut arg_bufs: Vec<&PjRtBuffer> = Vec::with_capacity(args.len());
+        for name in args {
+            arg_bufs.push(match name.as_str() {
+                "tokens" => &tok_buf,
+                "n_valid" => &nv_buf,
+                "cos" => &cos_buf,
+                "sin" => &sin_buf,
+                other => self
+                    .prefill_bufs
+                    .get(other)
+                    .ok_or_else(|| anyhow!("missing prefill arg {other}"))?,
+            });
+        }
+        let out = exe.run(&arg_bufs)?;
+        Ok(PrefillOut {
+            logits: out.f32_vec("logits_last")?,
+            kv: out.f32_vec("kv")?,
+        })
+    }
+
+    /// One decode step.  `use_h_async` comes from [`SelectorState`].
+    pub fn step(&self, token: u32, pos: usize, kv: &[f32],
+                use_h_async: &BTreeMap<String, Vec<f32>>, mode: EstMode)
+                -> Result<StepOut> {
+        let tok_buf = self.rt.scalar_i32(token as i32)?;
+        let pos_buf = self.rt.scalar_i32(pos as i32)?;
+        let (cos, sin) = self.cfg.rope_tables(pos);
+        let cos_buf = self.rt.upload_f32(&[cos.len()], &cos)?;
+        let sin_buf = self.rt.upload_f32(&[sin.len()], &sin)?;
+        let kv_buf = self.rt.upload_f32(&self.cfg.kv_shape(), kv)?;
+        let mode_buf = self
+            .rt
+            .scalar_f32(if mode == EstMode::Exact { 1.0 } else { 0.0 })?;
+        let mut flag_bufs: HashMap<String, PjRtBuffer> = HashMap::new();
+        for g in ASYNC_GROUPS {
+            let flags = use_h_async
+                .get(g)
+                .ok_or_else(|| anyhow!("missing async flags for {g}"))?;
+            flag_bufs.insert(
+                format!("useh_{g}"),
+                self.rt.upload_f32(&[self.cfg.n_layers], flags)?,
+            );
+        }
+
+        let mut arg_bufs: Vec<&PjRtBuffer> = Vec::with_capacity(self.decode_args.len());
+        for name in &self.decode_args {
+            arg_bufs.push(match name.as_str() {
+                "token" => &tok_buf,
+                "pos" => &pos_buf,
+                "cos" => &cos_buf,
+                "sin" => &sin_buf,
+                "kv" => &kv_buf,
+                "mode_exact" => &mode_buf,
+                other => flag_bufs
+                    .get(other)
+                    .or_else(|| self.static_bufs.get(other))
+                    .ok_or_else(|| anyhow!("missing decode arg {other}"))?,
+            });
+        }
+        let out = self.decode.run(&arg_bufs).context("decode step")?;
+        self.unpack_step(out)
+    }
+
+    fn unpack_step(&self, out: Outputs) -> Result<StepOut> {
+        let mut ests = BTreeMap::new();
+        let mut use_eff = BTreeMap::new();
+        for g in GROUPS {
+            ests.insert(g.to_string(), out.f32_vec(&format!("est_{g}"))?);
+            use_eff.insert(g.to_string(), out.f32_vec(&format!("useh_{g}"))?);
+        }
+        Ok(StepOut {
+            logits: out.f32_vec("logits")?,
+            kv: out.f32_vec("kv")?,
+            ests,
+            use_eff,
+        })
+    }
+
+    /// Convenience: greedy argmax over logits.
+    pub fn argmax(logits: &[f32]) -> u32 {
+        let mut best = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        best as u32
+    }
+
+    /// Host-visible device memory of the uploaded weight stacks (bytes) —
+    /// used by the Table 9 memory-accounting bench.
+    pub fn weight_bytes(&self) -> usize {
+        let mut total = 0usize;
+        for g in GROUPS {
+            let (o, i) = self.cfg.group_shape(g);
+            total += 2 * self.cfg.n_layers * o * i * 4; // wl + wh stacks
+        }
+        total
+    }
+}
+
+pub fn wrap_err(e: impl std::fmt::Display) -> anyhow::Error {
+    wrap(e)
+}

@@ -1,0 +1,177 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! This is the only place the `xla` crate is touched.  Key properties:
+//!
+//! * HLO **text** is the interchange format (`HloModuleProto::from_text_file`)
+//!   — serialized protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1
+//!   (64-bit instruction ids), text re-parses cleanly.
+//! * Model weights are uploaded to the device **once** per configuration
+//!   ([`DeviceArgs`]), and per-step inputs are a few KB of scalars/vectors —
+//!   nothing Python ever runs on the request path.
+//! * Executables are cached per (model, entry) in [`Runtime`].
+
+pub mod decode;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::model::HloEntry;
+use crate::tensor::Tensor;
+
+/// Process-wide PJRT CPU client + executable cache.
+pub struct Runtime {
+    pub client: PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Exe>>>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        let client = PjRtClient::cpu().map_err(wrap)?;
+        Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Load + compile an HLO-text entry (cached by path).
+    pub fn load(&self, entry: &HloEntry) -> Result<std::sync::Arc<Exe>> {
+        if let Some(e) = self.cache.lock().unwrap().get(&entry.path) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&entry.path)
+            .map_err(wrap)
+            .with_context(|| format!("parsing {}", entry.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(wrap)
+            .with_context(|| format!("compiling {}", entry.path))?;
+        let arc = std::sync::Arc::new(Exe { exe, entry: entry.clone() });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(entry.path.clone(), arc.clone());
+        Ok(arc)
+    }
+
+    // ---- host -> device upload helpers ------------------------------------
+    pub fn upload_f32(&self, shape: &[usize], data: &[f32]) -> Result<PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, shape, None).map_err(wrap)
+    }
+
+    pub fn upload_tensor(&self, t: &Tensor) -> Result<PjRtBuffer> {
+        self.upload_f32(&t.shape, &t.data)
+    }
+
+    pub fn upload_i32(&self, shape: &[usize], data: &[i32]) -> Result<PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, shape, None).map_err(wrap)
+    }
+
+    pub fn upload_u8(&self, shape: &[usize], data: &[u8]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_raw_bytes(ElementType::U8, data, shape, None)
+            .map_err(wrap)
+    }
+
+    pub fn scalar_i32(&self, v: i32) -> Result<PjRtBuffer> {
+        self.upload_i32(&[], &[v])
+    }
+
+    pub fn scalar_f32(&self, v: f32) -> Result<PjRtBuffer> {
+        self.upload_f32(&[], &[v])
+    }
+}
+
+/// A compiled executable + its manifest signature.
+pub struct Exe {
+    exe: PjRtLoadedExecutable,
+    pub entry: HloEntry,
+}
+
+impl Exe {
+    /// Execute with device-resident args; returns the output buffers.
+    ///
+    /// The AOT graphs are lowered with `return_tuple=True`, so PJRT hands
+    /// back a single tuple buffer; [`Outputs`] wraps the host-side literal
+    /// decomposition.
+    pub fn run(&self, args: &[&PjRtBuffer]) -> Result<Outputs> {
+        let mut res = self.exe.execute_b(args).map_err(wrap)?;
+        let replica = res
+            .pop()
+            .ok_or_else(|| anyhow!("no replica outputs"))?;
+        outputs_from(replica, &self.entry)
+    }
+
+    /// Execute with host literals (tests / one-shot calls).
+    pub fn run_literals<L: std::borrow::Borrow<Literal>>(&self, args: &[L]) -> Result<Outputs> {
+        let mut res = self.exe.execute(args).map_err(wrap)?;
+        let replica = res.pop().ok_or_else(|| anyhow!("no replica outputs"))?;
+        outputs_from(replica, &self.entry)
+    }
+}
+
+fn outputs_from(replica: Vec<PjRtBuffer>, entry: &HloEntry) -> Result<Outputs> {
+    if replica.is_empty() {
+        bail!("executable returned no buffers");
+    }
+    let lit = if replica.len() == 1 {
+        let l = replica[0].to_literal_sync().map_err(wrap)?;
+        drop(replica);
+        l
+    } else {
+        // Untupled multi-output: wrap as tuple for uniform handling.
+        let lits: Vec<Literal> = replica
+            .iter()
+            .map(|b| b.to_literal_sync().map_err(wrap))
+            .collect::<Result<_>>()?;
+        Literal::tuple(lits)
+    };
+    let parts = lit.to_tuple().map_err(wrap)?;
+    Ok(Outputs { parts, names: entry.outputs.clone() })
+}
+
+/// Decomposed outputs of one execution, addressable by manifest name.
+pub struct Outputs {
+    parts: Vec<Literal>,
+    names: Vec<String>,
+}
+
+impl Outputs {
+    pub fn len(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parts.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Literal> {
+        let i = self
+            .names
+            .iter()
+            .position(|n| n == name)
+            .ok_or_else(|| anyhow!("no output named '{name}' (have {:?})", self.names))?;
+        self.parts
+            .get(i)
+            .ok_or_else(|| anyhow!("output arity {} < index {i}", self.parts.len()))
+    }
+
+    pub fn f32_vec(&self, name: &str) -> Result<Vec<f32>> {
+        self.get(name)?.to_vec::<f32>().map_err(wrap)
+    }
+
+    pub fn by_index(&self, i: usize) -> Result<&Literal> {
+        self.parts.get(i).ok_or_else(|| anyhow!("no output index {i}"))
+    }
+}
+
+/// xla::Error -> anyhow::Error bridge.
+pub fn wrap(e: impl std::fmt::Display) -> anyhow::Error {
+    anyhow!("{e}")
+}
+
+/// Literal -> host f32 vec (convenience used across eval harnesses).
+pub fn literal_f32(l: &Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(wrap)
+}

@@ -1,0 +1,219 @@
+//! Runtime adaptation-set reconfiguration: the multiple-choice-knapsack
+//! assignment solver (paper Appendix A / B.2) in Rust.
+//!
+//! The offline pipeline solves this in Python; the Rust twin lets the
+//! coordinator *re-fit* a static assignment at runtime when the memory
+//! budget changes (e.g., another app claims RAM on the device) without a
+//! Python round trip: load the per-layer sensitivity table exported by the
+//! quantizer and re-solve.  Semantics match `python/compile/assign.py`
+//! (Lagrangian bisection + greedy refinement; exact up to the budget
+//! granularity for separable convex costs).
+
+use anyhow::{bail, Result};
+
+pub const BITS: [u8; 4] = [3, 4, 5, 6];
+
+/// Per-layer costs: `omega[i][b_idx]` = loss perturbation when layer i is
+/// quantized to `BITS[b_idx]`; `m[i]` = parameter count.
+pub struct AssignProblem {
+    pub omega: Vec<[f64; 4]>,
+    pub m: Vec<f64>,
+}
+
+impl AssignProblem {
+    pub fn new(omega: Vec<[f64; 4]>, m: Vec<f64>) -> Result<AssignProblem> {
+        if omega.len() != m.len() || omega.is_empty() {
+            bail!("omega/m length mismatch");
+        }
+        Ok(AssignProblem { omega, m })
+    }
+
+    fn avg_bits(&self, choice: &[usize]) -> f64 {
+        let num: f64 = choice.iter().zip(&self.m)
+            .map(|(&c, &m)| BITS[c] as f64 * m).sum();
+        num / self.m.iter().sum::<f64>()
+    }
+
+    fn choose(&self, lambda: f64, caps: &[usize]) -> Vec<usize> {
+        self.omega.iter().zip(&self.m).zip(caps)
+            .map(|((o, &m), &cap)| {
+                let mut best = 0;
+                let mut best_v = f64::INFINITY;
+                for (bi, &b) in BITS.iter().enumerate().take(cap + 1) {
+                    let v = o[bi] + lambda * b as f64 * m;
+                    if v < best_v {
+                        best_v = v;
+                        best = bi;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    /// Solve for per-layer bits at average precision ≈ `target`, with an
+    /// optional per-layer cap (Phase-1 maximum precisions).
+    pub fn solve(&self, target: f64, max_bits: Option<&[u8]>) -> Result<Vec<u8>> {
+        let caps: Vec<usize> = match max_bits {
+            Some(mb) => {
+                if mb.len() != self.m.len() {
+                    bail!("cap length mismatch");
+                }
+                mb.iter()
+                    .map(|&b| BITS.iter().position(|&x| x == b.clamp(3, 6)).unwrap())
+                    .collect()
+            }
+            None => vec![BITS.len() - 1; self.m.len()],
+        };
+        // Lagrangian bisection (higher lambda -> cheaper bits).
+        let mut lo = 0.0f64;
+        let mut hi = 1.0f64;
+        while self.avg_bits(&self.choose(hi, &caps)) > target && hi < 1e12 {
+            hi *= 4.0;
+        }
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if self.avg_bits(&self.choose(mid, &caps)) > target {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let mut choice = self.choose(hi, &caps);
+
+        // Greedy refinement toward the target from below.
+        let m_sum: f64 = self.m.iter().sum();
+        let budget = target * m_sum;
+        let mut total: f64 = choice.iter().zip(&self.m)
+            .map(|(&c, &m)| BITS[c] as f64 * m).sum();
+        loop {
+            let mut best: Option<(f64, usize)> = None;
+            for i in 0..choice.len() {
+                let c = choice[i];
+                if c + 1 > caps[i] || c + 1 >= BITS.len() {
+                    continue;
+                }
+                let dbits = (BITS[c + 1] - BITS[c]) as f64 * self.m[i];
+                if total + dbits > budget + 0.005 * m_sum {
+                    continue;
+                }
+                let gain = (self.omega[i][c] - self.omega[i][c + 1]) / dbits;
+                if best.map_or(true, |(g, _)| gain > g) {
+                    best = Some((gain, i));
+                }
+            }
+            match best {
+                Some((_, i)) => {
+                    total += (BITS[choice[i] + 1] - BITS[choice[i]]) as f64 * self.m[i];
+                    choice[i] += 1;
+                }
+                None => break,
+            }
+        }
+        Ok(choice.into_iter().map(|c| BITS[c]).collect())
+    }
+}
+
+/// Build a problem from the Fisher-weighted quantization errors of the
+/// any-precision store (HAWQ-V2-style second-order sensitivity: the
+/// fisher npz holds diag-F; error uses the store's own dequant residuals
+/// against the fp checkpoint).
+pub fn problem_from_artifacts(model: &str) -> Result<AssignProblem> {
+    use crate::anyprec::GROUPS;
+    use crate::model::{art, ModelAssets};
+    use crate::util::npz::load_npz;
+
+    let assets = ModelAssets::load(model)?;
+    let fisher = load_npz(&art(&["models", model, "fisher.npz"]))?;
+    let ckpt = load_npz(&art(&["models", model, "ckpt.npz"]))?;
+    let mut omega = Vec::new();
+    let mut m = Vec::new();
+    for layer in 0..assets.cfg.n_layers {
+        for g in GROUPS {
+            let store = assets.store.group(g)?;
+            let w = ckpt[g].to_f32();
+            let f = fisher[g].to_f32();
+            let n = store.out_dim * store.in_dim;
+            let w_l = &w[layer * n..(layer + 1) * n];
+            let f_l = &f[layer * n..(layer + 1) * n];
+            let mut row = [0f64; 4];
+            for (bi, &b) in BITS.iter().enumerate() {
+                let dq = store.dequant(layer, b)?;
+                row[bi] = w_l.iter().zip(&dq.data).zip(f_l)
+                    .map(|((&wv, &qv), &fv)| {
+                        let d = (wv - qv) as f64;
+                        fv as f64 * d * d
+                    })
+                    .sum();
+            }
+            omega.push(row);
+            m.push(n as f64);
+        }
+    }
+    AssignProblem::new(omega, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::for_each_seed;
+
+    fn toy(n: usize, seed: u64) -> AssignProblem {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let omega = (0..n)
+            .map(|_| {
+                let base = rng.f64() * 10.0 + 0.1;
+                [base, base * 0.5, base * 0.25, base * 0.125]
+            })
+            .collect();
+        let m = (0..n).map(|_| (rng.range(1, 5) * 1000) as f64).collect();
+        AssignProblem::new(omega, m).unwrap()
+    }
+
+    #[test]
+    fn budget_respected_property() {
+        for_each_seed(25, |rng| {
+            let p = toy(rng.range(4, 40), rng.next_u64());
+            let target = 3.25 + rng.f64() * 2.5;
+            let bits = p.solve(target, None).unwrap();
+            let choice: Vec<usize> = bits.iter()
+                .map(|&b| BITS.iter().position(|&x| x == b).unwrap()).collect();
+            let avg = p.avg_bits(&choice);
+            assert!(avg <= target + 0.006, "avg {avg} target {target}");
+        });
+    }
+
+    #[test]
+    fn caps_respected() {
+        let p = toy(12, 7);
+        let caps = vec![4u8; 12];
+        let bits = p.solve(5.0, Some(&caps)).unwrap();
+        assert!(bits.iter().all(|&b| b <= 4));
+    }
+
+    #[test]
+    fn sensitive_layer_wins_bits() {
+        let mut p = toy(8, 3);
+        p.omega[0] = [1000.0, 1.0, 0.01, 0.001]; // huge benefit from 3->4
+        let bits = p.solve(3.4, None).unwrap();
+        // The knapsack must spend budget on the layer with the dominant
+        // marginal gain before anything else.
+        assert!(bits[0] >= 4, "{bits:?}");
+    }
+
+    #[test]
+    fn matches_python_solver_semantics() {
+        // Fixed instance with a known optimum (mirrors test_assign.py).
+        let omega = vec![
+            [8.0, 4.0, 2.0, 1.0],
+            [8.0, 4.0, 2.0, 1.0],
+            [8.0, 4.0, 2.0, 1.0],
+            [8.0, 4.0, 2.0, 1.0],
+        ];
+        let m = vec![1.0, 1.0, 1.0, 1.0];
+        let p = AssignProblem::new(omega, m).unwrap();
+        let bits = p.solve(4.0, None).unwrap();
+        let avg: f64 = bits.iter().map(|&b| b as f64).sum::<f64>() / 4.0;
+        assert!((avg - 4.0).abs() < 0.51);
+    }
+}

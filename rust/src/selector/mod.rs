@@ -1,0 +1,321 @@
+//! DP-LLM's runtime precision selector (paper §3-5) — L3 side.
+//!
+//! The AOT decode graph computes, per linear layer, a relative-error
+//! estimate (hybrid: linear fit on ‖x‖ or calibrated JL projection ‖Gx‖)
+//! and applies in-graph selection for the *sync* groups (o/down).  This
+//! module owns the other half of the mechanism:
+//!
+//! * the **asynchronous** decisions for q/k/v/gate/up: compare the
+//!   *previous* step's estimates against the per-layer thresholds T and
+//!   feed `use_h` flags into the next step (paper Fig. 6, off the
+//!   critical path),
+//! * per-query **effective-bitwidth accounting** (Σ bits·Mᵢ / ΣMᵢ), which
+//!   the QoS study (Table 7) and the adaptation controller consume,
+//! * assembling per-group parameter stacks for upload.
+
+pub mod assign;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::anyprec::GROUPS;
+use crate::model::calib::{DpllmConfig, LinearCalib, StaticConfig};
+use crate::model::ModelConfig;
+
+pub const ASYNC_GROUPS: [&str; 5] = ["wq", "wk", "wv", "wg", "wu"];
+
+/// JL projection dimension (paper §5.1: k = 64 bounds the estimation error
+/// within 15% at 91% confidence).  Must match `kernels/estimator.K_PROJ`.
+pub const K_PROJ: usize = 64;
+
+/// Per-group selector parameters in upload-ready (layer-stacked) form.
+#[derive(Debug, Clone)]
+pub struct GroupSelector {
+    pub thr: Vec<f32>,
+    pub lin_a: Vec<f32>,
+    pub lin_b: Vec<f32>,
+    pub use_lin: Vec<f32>,
+    /// Calibrated JL stack, flattened [L, k, in]; zeros when unused.
+    pub g_proj: Vec<f32>,
+    pub g_shape: Vec<usize>,
+}
+
+/// A loaded engine configuration: candidate weights + selector params.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Human tag, e.g. "dpllm@4.00" or "hawq_v2@4.00" or "uniform@4".
+    pub tag: String,
+    /// Per-linear candidate bits, canonical order (l == h for static).
+    pub wl_bits: Vec<u8>,
+    pub wh_bits: Vec<u8>,
+    /// Per-linear max precision used by the prefill stacks.
+    pub prefill_bits: Vec<u8>,
+    pub groups: BTreeMap<String, GroupSelector>,
+    /// Nominal target precision of this configuration.
+    pub target: f64,
+    pub dynamic: bool,
+}
+
+impl EngineConfig {
+    /// Build from a DP-LLM calibration config (dynamic selection active).
+    pub fn from_dpllm(cfg: &ModelConfig, dp: &DpllmConfig,
+                      maxprec: &[u8]) -> Result<EngineConfig> {
+        let n = cfg.n_linear();
+        if dp.linears.len() != n {
+            bail!("calib has {} linears, model wants {n}", dp.linears.len());
+        }
+        let idx = cfg.linear_index();
+        let mut wl = vec![0u8; n];
+        let mut wh = vec![0u8; n];
+        let mut groups = BTreeMap::new();
+        let ests = dp.load_estimators()?;
+        let gmap: BTreeMap<String, (Vec<usize>, Vec<f32>)> = ests
+            .into_iter()
+            .map(|(g, shape, data)| (g, (shape, data)))
+            .collect();
+        for g in GROUPS {
+            let lay: Vec<(usize, &LinearCalib)> = idx
+                .iter()
+                .enumerate()
+                .filter(|(_, (_, gg))| *gg == g)
+                .map(|(li, _)| (li, &dp.linears[li]))
+                .collect();
+            let (shape, data) = gmap
+                .get(g)
+                .cloned()
+                .unwrap_or((vec![cfg.n_layers, dp.k_proj, cfg.group_shape(g).1],
+                            vec![0.0; cfg.n_layers * dp.k_proj * cfg.group_shape(g).1]));
+            groups.insert(g.to_string(), GroupSelector {
+                thr: lay.iter().map(|(_, r)| r.thr).collect(),
+                lin_a: lay.iter().map(|(_, r)| r.lin_a).collect(),
+                lin_b: lay.iter().map(|(_, r)| r.lin_b).collect(),
+                use_lin: lay.iter().map(|(_, r)| r.use_lin as u8 as f32).collect(),
+                g_proj: data,
+                g_shape: shape,
+            });
+            for (li, r) in lay {
+                wl[li] = r.l;
+                wh[li] = r.h;
+            }
+        }
+        Ok(EngineConfig {
+            tag: format!("dpllm@{}", dp.tag),
+            wl_bits: wl,
+            wh_bits: wh,
+            prefill_bits: maxprec.to_vec(),
+            groups,
+            target: dp.target,
+            dynamic: true,
+        })
+    }
+
+    /// Build from a static assignment (LLM-MQ / HAWQ-V2 / uniform):
+    /// wl == wh == assigned bits, selection disabled via +inf thresholds.
+    pub fn from_static(cfg: &ModelConfig, st: &StaticConfig,
+                       maxprec: &[u8]) -> Result<EngineConfig> {
+        let n = cfg.n_linear();
+        if st.bits.len() != n {
+            bail!("static config has {} linears, model wants {n}", st.bits.len());
+        }
+        let mut groups = BTreeMap::new();
+        for g in GROUPS {
+            let l = cfg.n_layers;
+            let (_, in_d) = cfg.group_shape(g);
+            groups.insert(g.to_string(), GroupSelector {
+                thr: vec![1e30; l],
+                lin_a: vec![0.0; l],
+                lin_b: vec![0.0; l],
+                use_lin: vec![1.0; l],
+                g_proj: vec![0.0; l * K_PROJ * in_d],
+                g_shape: vec![l, K_PROJ, in_d],
+            });
+        }
+        Ok(EngineConfig {
+            tag: format!("{}@{:.2}", st.method, st.target),
+            wl_bits: st.bits.clone(),
+            wh_bits: st.bits.clone(),
+            prefill_bits: maxprec.to_vec(),
+            groups,
+            target: st.target,
+            dynamic: false,
+        })
+    }
+
+    /// Candidate bits of one group as per-layer vectors.
+    pub fn group_bits(&self, cfg: &ModelConfig, g: &str) -> (Vec<u8>, Vec<u8>) {
+        let idx = cfg.linear_index();
+        let mut l = Vec::with_capacity(cfg.n_layers);
+        let mut h = Vec::with_capacity(cfg.n_layers);
+        for (li, (_, gg)) in idx.iter().enumerate() {
+            if *gg == g {
+                l.push(self.wl_bits[li]);
+                h.push(self.wh_bits[li]);
+            }
+        }
+        (l, h)
+    }
+}
+
+/// Mutable per-request selector state: async decisions + eff-bit stats.
+pub struct SelectorState<'a> {
+    cfg: &'a ModelConfig,
+    ec: &'a EngineConfig,
+    /// use_h flags for async groups, fed into the *next* decode step.
+    pub use_h_async: BTreeMap<String, Vec<f32>>,
+    /// accumulated per-step effective bits (weighted by layer size).
+    bits_accum: f64,
+    steps: usize,
+    m_total: f64,
+}
+
+impl<'a> SelectorState<'a> {
+    pub fn new(cfg: &'a ModelConfig, ec: &'a EngineConfig) -> SelectorState<'a> {
+        let use_h_async = ASYNC_GROUPS
+            .iter()
+            .map(|g| (g.to_string(), vec![0.0; cfg.n_layers]))
+            .collect();
+        SelectorState {
+            cfg,
+            ec,
+            use_h_async,
+            bits_accum: 0.0,
+            steps: 0,
+            m_total: cfg.total_linear_params() as f64,
+        }
+    }
+
+    /// Consume one step's outputs: update async decisions from this step's
+    /// estimates (used next step — the paper's asynchronous estimation) and
+    /// accumulate the effective bitwidth actually applied this step.
+    ///
+    /// `ests`/`use_eff` are per-group `[L]` vectors keyed canonically.
+    pub fn observe(&mut self, ests: &BTreeMap<String, Vec<f32>>,
+                   use_eff: &BTreeMap<String, Vec<f32>>) {
+        for g in ASYNC_GROUPS {
+            let sel = &self.ec.groups[g];
+            let e = &ests[g];
+            let flags = self
+                .use_h_async
+                .get_mut(g)
+                .expect("async group present");
+            for layer in 0..self.cfg.n_layers {
+                flags[layer] = if e[layer] > sel.thr[layer] { 1.0 } else { 0.0 };
+            }
+        }
+        // Effective bits this step.
+        let idx = self.cfg.linear_index();
+        let mut step_bits = 0.0;
+        for (li, (layer, g)) in idx.iter().enumerate() {
+            let m = self.cfg.group_params(g) as f64;
+            let used_h = use_eff[*g][*layer] > 0.5;
+            let b = if used_h { self.ec.wh_bits[li] } else { self.ec.wl_bits[li] };
+            step_bits += b as f64 * m;
+        }
+        self.bits_accum += step_bits / self.m_total;
+        self.steps += 1;
+    }
+
+    /// Mean effective bitwidth over the observed decode steps.
+    pub fn effective_bits(&self) -> f64 {
+        if self.steps == 0 {
+            return f64::NAN;
+        }
+        self.bits_accum / self.steps as f64
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.bits_accum = 0.0;
+        self.steps = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(), vocab: 8, d_model: 16, n_layers: 2,
+            n_heads: 2, d_ff: 24, max_seq: 8, rope_theta: 10000.0,
+        }
+    }
+
+    fn toy_engine(cfg: &ModelConfig) -> EngineConfig {
+        let st = StaticConfig::uniform(cfg, 4);
+        let mut ec = EngineConfig::from_static(cfg, &st, &vec![5; cfg.n_linear()]).unwrap();
+        // make it dynamic with candidate (3,4) everywhere, thr = 1.0
+        ec.wl_bits = vec![3; cfg.n_linear()];
+        ec.wh_bits = vec![4; cfg.n_linear()];
+        for g in GROUPS {
+            ec.groups.get_mut(g).unwrap().thr = vec![1.0; cfg.n_layers];
+        }
+        ec.dynamic = true;
+        ec
+    }
+
+    fn maps(cfg: &ModelConfig, val: f32) -> BTreeMap<String, Vec<f32>> {
+        GROUPS
+            .iter()
+            .map(|g| (g.to_string(), vec![val; cfg.n_layers]))
+            .collect()
+    }
+
+    #[test]
+    fn async_decisions_follow_thresholds() {
+        let cfg = toy_cfg();
+        let ec = toy_engine(&cfg);
+        let mut st = SelectorState::new(&cfg, &ec);
+        // estimates above thr=1.0 -> all async groups flip to high.
+        st.observe(&maps(&cfg, 2.0), &maps(&cfg, 0.0));
+        for g in ASYNC_GROUPS {
+            assert!(st.use_h_async[g].iter().all(|&f| f == 1.0), "{g}");
+        }
+        st.observe(&maps(&cfg, 0.5), &maps(&cfg, 0.0));
+        for g in ASYNC_GROUPS {
+            assert!(st.use_h_async[g].iter().all(|&f| f == 0.0), "{g}");
+        }
+    }
+
+    #[test]
+    fn effective_bits_bounds() {
+        let cfg = toy_cfg();
+        let ec = toy_engine(&cfg);
+        let mut st = SelectorState::new(&cfg, &ec);
+        st.observe(&maps(&cfg, 0.0), &maps(&cfg, 0.0)); // all low
+        assert!((st.effective_bits() - 3.0).abs() < 1e-9);
+        st.observe(&maps(&cfg, 0.0), &maps(&cfg, 1.0)); // all high
+        assert!((st.effective_bits() - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn effective_bits_weighted_mix() {
+        let cfg = toy_cfg();
+        let ec = toy_engine(&cfg);
+        let mut st = SelectorState::new(&cfg, &ec);
+        // only wq at high
+        let mut use_eff = maps(&cfg, 0.0);
+        use_eff.insert("wq".into(), vec![1.0; cfg.n_layers]);
+        st.observe(&maps(&cfg, 0.0), &use_eff);
+        let m_q = (2 * 16 * 16) as f64;
+        let m_tot = cfg.total_linear_params() as f64;
+        let want = 3.0 + m_q / m_tot;
+        assert!((st.effective_bits() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn static_config_disables_selection() {
+        let cfg = toy_cfg();
+        let st = StaticConfig::uniform(&cfg, 4);
+        let ec = EngineConfig::from_static(&cfg, &st, &vec![6; cfg.n_linear()]).unwrap();
+        assert!(!ec.dynamic);
+        assert!(ec.groups["wq"].thr.iter().all(|&t| t > 1e29));
+        let (l, h) = ec.group_bits(&cfg, "wd");
+        assert_eq!(l, vec![4, 4]);
+        assert_eq!(h, vec![4, 4]);
+    }
+}

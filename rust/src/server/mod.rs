@@ -1,0 +1,309 @@
+//! HTTP-lite serving front-end on std::net (tokio is unavailable in the
+//! offline sandbox; a hand-rolled HTTP/1.1 subset keeps the request path
+//! entirely in Rust).
+//!
+//! Threading model: PJRT handles are `!Send` (FFI pointers), so the
+//! [`ServingEngine`] lives on ONE executor thread; per-connection I/O
+//! threads parse HTTP and exchange plain strings with the executor over
+//! channels.  Model execution is serialized anyway — single device,
+//! batch-1 decode — so this costs no throughput.
+//!
+//! Endpoints:
+//!   POST /generate  {"prompt": str, "max_new"?: int, "qos_ms_per_token"?: f,
+//!                    "target"?: f}  -> {"text", "target", "effective_bits",
+//!                                       "tpot_ms", "output_tokens"}
+//!   GET  /health    -> {"status": "ok", "targets": [...]}
+//!   GET  /metrics   -> summary JSON
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::qos::{QosBudget, UtilizationSim};
+use crate::coordinator::sched::Request;
+use crate::coordinator::service::ServingEngine;
+use crate::util::json::Json;
+
+/// One parsed HTTP request handed to the executor thread.
+struct Work {
+    method: String,
+    path: String,
+    body: String,
+    reply: Sender<String>,
+}
+
+pub struct Server {
+    engine: ServingEngine,
+    util: UtilizationSim,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn new(engine: ServingEngine, util: UtilizationSim) -> Server {
+        Server { engine, util, stop: Arc::new(AtomicBool::new(false)) }
+    }
+
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Serve until the stop flag flips.
+    pub fn serve(mut self, addr: &str) -> Result<()> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        listener.set_nonblocking(true)?;
+        eprintln!("[server] listening on {addr}");
+        let (tx, rx) = channel::<Work>();
+        let stop = self.stop.clone();
+
+        // Acceptor thread: sockets + HTTP parsing only (Send-safe).
+        let acceptor = std::thread::spawn(move || {
+            let mut next_id = 0u64;
+            loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        next_id += 1;
+                        let tx = tx.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(stream, tx);
+                        });
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            drop(tx);
+            let _ = next_id;
+        });
+
+        // Executor loop: owns the engine (and all !Send PJRT handles).
+        let mut req_id = 0u64;
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                break;
+            }
+            match rx.recv_timeout(std::time::Duration::from_millis(50)) {
+                Ok(work) => {
+                    req_id += 1;
+                    let resp = self.dispatch(req_id, &work);
+                    let _ = work.reply.send(resp);
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let _ = acceptor.join();
+        Ok(())
+    }
+
+    fn dispatch(&mut self, id: u64, work: &Work) -> String {
+        match (work.method.as_str(), work.path.as_str()) {
+            ("GET", "/health") => {
+                let mut j = Json::obj();
+                j.set("status", "ok");
+                j.set("targets", Json::Arr(
+                    self.engine.targets().iter().map(|&t| Json::Num(t)).collect()));
+                ok_json(&j)
+            }
+            ("GET", "/metrics") => {
+                let s = self.engine.metrics.summary();
+                let mut j = Json::obj();
+                j.set("requests", s.n)
+                    .set("mean_tpot_ms", s.mean_tpot_ms)
+                    .set("p90_total_ms", s.p90_total_ms)
+                    .set("p99_total_ms", s.p99_total_ms)
+                    .set("mean_eff_bits", s.mean_eff_bits)
+                    .set("p90_eff_bits", s.p90_eff_bits)
+                    .set("p99_eff_bits", s.p99_eff_bits)
+                    .set("throughput_tok_s", s.throughput_tok_s);
+                ok_json(&j)
+            }
+            ("POST", "/generate") => match self.generate(id, &work.body) {
+                Ok(j) => ok_json(&j),
+                Err(e) => error_json(400, &format!("{e:#}")),
+            },
+            _ => error_json(404, "not found"),
+        }
+    }
+
+    fn generate(&mut self, id: u64, body: &str) -> Result<Json> {
+        let req_j = Json::parse(body).context("request body")?;
+        let prompt = req_j.str_of("prompt")?;
+        let max_new = req_j.get("max_new").and_then(|v| v.as_usize().ok()).unwrap_or(48);
+        let qos = req_j
+            .get("qos_ms_per_token")
+            .and_then(|v| v.as_f64().ok())
+            .map(QosBudget::tight)
+            .unwrap_or_else(QosBudget::best_effort);
+        let target = req_j.get("target").and_then(|v| v.as_f64().ok());
+        let request = Request::new(id, prompt, max_new, qos);
+        let u = self.util.tick();
+        let outcome = match target {
+            Some(t) => self.engine.handle_at(&request, t)?,
+            None => self.engine.handle(&request, u)?,
+        };
+        let mut j = Json::obj();
+        j.set("id", outcome.id as i64)
+            .set("text", outcome.text.as_str())
+            .set("target", outcome.target_precision)
+            .set("effective_bits", outcome.effective_bits)
+            .set("utilization", u)
+            .set("prefill_ms", outcome.prefill_ms)
+            .set("tpot_ms", outcome.decode_ms / outcome.output_tokens.max(1) as f64)
+            .set("output_tokens", outcome.output_tokens);
+        Ok(j)
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, tx: Sender<Work>) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    let (method, path, body) = read_request(&mut stream)?;
+    let (reply_tx, reply_rx) = channel();
+    tx.send(Work { method, path, body, reply: reply_tx })
+        .map_err(|_| anyhow::anyhow!("executor gone"))?;
+    let resp = reply_rx
+        .recv()
+        .unwrap_or_else(|_| error_json(500, "executor dropped"));
+    stream.write_all(resp.as_bytes())?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Minimal HTTP/1.1 plumbing.
+// ---------------------------------------------------------------------------
+
+fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        bail!("malformed request line: {line:?}");
+    }
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let t = h.trim();
+        if t.is_empty() {
+            break;
+        }
+        if let Some(v) = t.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_len = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    if content_len > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok((method, path, String::from_utf8_lossy(&body).into_owned()))
+}
+
+fn http_response(code: u32, reason: &str, body: &str) -> String {
+    format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+fn ok_json(j: &Json) -> String {
+    http_response(200, "OK", &j.dump())
+}
+
+fn error_json(code: u32, msg: &str) -> String {
+    let mut j = Json::obj();
+    j.set("error", msg);
+    http_response(code, "Error", &j.dump())
+}
+
+/// Tiny blocking HTTP client for examples / integration tests.
+pub fn http_post(addr: &str, path: &str, body: &str) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    read_response(stream)
+}
+
+pub fn http_get(addr: &str, path: &str) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes())?;
+    read_response(stream)
+}
+
+fn read_response(stream: TcpStream) -> Result<Json> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        if h.trim().is_empty() {
+            break;
+        }
+        if let Some(v) = h.trim().to_ascii_lowercase().strip_prefix("content-length:") {
+            content_len = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body)?;
+    Json::parse(&String::from_utf8_lossy(&body)).context("response body")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn http_response_format() {
+        let r = http_response(200, "OK", "{}");
+        assert!(r.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(r.ends_with("\r\n\r\n{}"));
+        assert!(r.contains("Content-Length: 2"));
+    }
+
+    #[test]
+    fn error_body_is_json() {
+        let r = error_json(404, "not found");
+        let body = r.split("\r\n\r\n").nth(1).unwrap();
+        let j = Json::parse(body).unwrap();
+        assert_eq!(j.str_of("error").unwrap(), "not found");
+    }
+
+    #[test]
+    fn request_parse_roundtrip() {
+        // Exercise read_request via a local socketpair.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(
+                b"POST /generate HTTP/1.1\r\nContent-Length: 13\r\n\r\n{\"prompt\":\"x\"}",
+            )
+            .unwrap();
+            s
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        let (m, p, b) = read_request(&mut stream).unwrap();
+        assert_eq!(m, "POST");
+        assert_eq!(p, "/generate");
+        assert_eq!(b, "{\"prompt\":\"x\""); // 13 bytes of the 14-byte body
+        let _ = t.join();
+    }
+}

@@ -1,0 +1,128 @@
+//! Minimal dense f32 tensor — just enough shape-checked storage for weight
+//! materialization, estimator math and eval bookkeeping on the host side.
+//! (The heavy math runs inside the AOT-compiled XLA executables; this type
+//! mostly ferries data into [`crate::runtime`].)
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let s = self.strides();
+        let off: usize = idx.iter().zip(&s).map(|(i, st)| i * st).sum();
+        self.data[off]
+    }
+
+    /// Borrow a contiguous sub-tensor along the leading axis.
+    pub fn slice0(&self, i: usize) -> &[f32] {
+        let step: usize = self.shape[1..].iter().product();
+        &self.data[i * step..(i + 1) * step]
+    }
+
+    /// y = W @ x for W `[out, in]` (row-major GEMV, host-side reference).
+    pub fn gemv(&self, x: &[f32]) -> Result<Vec<f32>> {
+        if self.rank() != 2 || self.shape[1] != x.len() {
+            bail!("gemv shape mismatch {:?} vs {}", self.shape, x.len());
+        }
+        let (out, n) = (self.shape[0], self.shape[1]);
+        let mut y = vec![0f32; out];
+        for o in 0..out {
+            let row = &self.data[o * n..(o + 1) * n];
+            let mut acc = 0f32;
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            y[o] = acc;
+        }
+        Ok(y)
+    }
+
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+}
+
+pub fn l2(xs: &[f32]) -> f32 {
+    xs.iter().map(|v| v * v).sum::<f32>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn strides_and_at() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        assert_eq!(t.strides(), vec![3, 1]);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+        assert_eq!(t.slice0(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn gemv_identity() {
+        let eye = Tensor::new(vec![3, 3],
+                              vec![1., 0., 0., 0., 1., 0., 0., 0., 1.]).unwrap();
+        let y = eye.gemv(&[2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(y, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn norm_l2() {
+        assert!((l2(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,184 @@
+//! Byte-level BPE tokenizer — the runtime twin of
+//! `python/compile/tokenizer.py`.  Loads the merge table from
+//! `artifacts/data/tokenizer.json` and performs greedy rank-ordered merges;
+//! byte-exact round-trip parity with the Python encoder is covered by an
+//! integration test against tokenized `.bin` streams.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+pub const PAD_ID: u32 = 256;
+pub const BOS_ID: u32 = 257;
+pub const EOS_ID: u32 = 258;
+const N_SPECIAL: u32 = 3;
+
+pub struct Tokenizer {
+    ranks: HashMap<(u32, u32), u32>,
+    pieces: Vec<Vec<u8>>,
+}
+
+impl Tokenizer {
+    pub fn load(path: &str) -> Result<Tokenizer> {
+        let j = Json::parse_file(path)?;
+        if j.str_of("type")? != "byte_bpe" {
+            bail!("unsupported tokenizer type");
+        }
+        let merges = j.req("merges")?.as_arr()?;
+        let mut ranks = HashMap::with_capacity(merges.len());
+        let mut pieces: Vec<Vec<u8>> = (0..256u32).map(|b| vec![b as u8]).collect();
+        pieces.push(b"<pad>".to_vec());
+        pieces.push(b"<bos>".to_vec());
+        pieces.push(b"<eos>".to_vec());
+        for (rank, m) in merges.iter().enumerate() {
+            let pair = m.as_arr().context("merge entry")?;
+            let a = pair[0].as_usize()? as u32;
+            let b = pair[1].as_usize()? as u32;
+            ranks.insert((a, b), rank as u32);
+            let mut piece = pieces[a as usize].clone();
+            piece.extend_from_slice(&pieces[b as usize]);
+            pieces.push(piece);
+        }
+        Ok(Tokenizer { ranks, pieces })
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.pieces.len()
+    }
+
+    /// Pre-tokenize with the exact semantics of Python's
+    /// `re.findall(rb" ?[^\s]+|\s+", data)`:
+    /// a *single* space directly before a word joins that word; any other
+    /// whitespace is consumed greedily as one run (including a trailing
+    /// space before the next word — greedy `\s+` eats it).
+    fn pretokenize(data: &[u8]) -> Vec<&[u8]> {
+        let ws = |b: u8| b.is_ascii_whitespace();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < data.len() {
+            let start = i;
+            if data[i] == b' ' && i + 1 < data.len() && !ws(data[i + 1]) {
+                i += 1;
+                while i < data.len() && !ws(data[i]) {
+                    i += 1;
+                }
+            } else if ws(data[i]) {
+                while i < data.len() && ws(data[i]) {
+                    i += 1;
+                }
+            } else {
+                while i < data.len() && !ws(data[i]) {
+                    i += 1;
+                }
+            }
+            out.push(&data[start..i]);
+        }
+        out
+    }
+
+    fn bpe_word(&self, word: &[u8]) -> Vec<u32> {
+        let mut seq: Vec<u32> = word.iter().map(|&b| b as u32).collect();
+        if seq.len() < 2 {
+            return seq;
+        }
+        loop {
+            let mut best: Option<(u32, usize)> = None;
+            for i in 0..seq.len() - 1 {
+                if let Some(&r) = self.ranks.get(&(seq[i], seq[i + 1])) {
+                    if best.map_or(true, |(br, _)| r < br) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            match best {
+                Some((r, i)) => {
+                    seq[i] = 256 + N_SPECIAL + r;
+                    seq.remove(i + 1);
+                }
+                None => return seq,
+            }
+        }
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids = Vec::new();
+        for w in Self::pretokenize(text.as_bytes()) {
+            ids.extend(self.bpe_word(w));
+        }
+        ids
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if id == PAD_ID || id == BOS_ID || id == EOS_ID {
+                continue;
+            }
+            if let Some(p) = self.pieces.get(id as usize) {
+                bytes.extend_from_slice(p);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Decode a single token id (streaming output).
+    pub fn decode_one(&self, id: u32) -> String {
+        self.decode(&[id])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Tokenizer {
+        // merges: (116,104)->th(259), (259,101)->the(260), (32,260)->" the"(261)
+        let j = r#"{"type":"byte_bpe","vocab_size":262,
+                    "specials":{"pad":256,"bos":257,"eos":258},
+                    "merges":[[116,104],[259,101],[32,260]]}"#;
+        let tmp = std::env::temp_dir().join("dpllm_tok_test.json");
+        std::fs::write(&tmp, j).unwrap();
+        Tokenizer::load(tmp.to_str().unwrap()).unwrap()
+    }
+
+    #[test]
+    fn encode_applies_merges_in_rank_order() {
+        let t = toy();
+        assert_eq!(t.encode("the"), vec![260]);
+        assert_eq!(t.encode("a the"), vec![b'a' as u32, 261]);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = toy();
+        for s in ["the cat", "  the  the ", "héllo the", "", "a"] {
+            assert_eq!(t.decode(&t.encode(s)), s, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn pretokenize_matches_python_regex() {
+        // Oracles generated with re.findall(rb" ?[^\s]+|\s+", ...).
+        let cases: &[(&[u8], &[&str])] = &[
+            (b"ab cd  ef", &["ab", " cd", "  ", "ef"]),
+            (b"a\n b  c", &["a", "\n ", "b", "  ", "c"]),
+            (b" x", &[" x"]),
+            (b"  x", &["  ", "x"]),
+            (b"x ", &["x", " "]),
+        ];
+        for (input, want) in cases {
+            let toks = Tokenizer::pretokenize(input);
+            let got: Vec<&str> = toks.iter()
+                .map(|b| std::str::from_utf8(b).unwrap()).collect();
+            assert_eq!(&got, want, "{:?}", String::from_utf8_lossy(input));
+        }
+    }
+
+    #[test]
+    fn specials_skipped_in_decode() {
+        let t = toy();
+        assert_eq!(t.decode(&[BOS_ID, b'h' as u32, EOS_ID]), "h");
+    }
+}

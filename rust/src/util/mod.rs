@@ -1,0 +1,11 @@
+//! Support utilities hand-rolled for the offline sandbox (no serde / clap /
+//! criterion in the crate cache): JSON, npz/npy, CLI parsing, stats, PRNG,
+//! a micro-bench harness and a tiny logger.
+
+pub mod cli;
+pub mod json;
+pub mod npz;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;

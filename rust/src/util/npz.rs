@@ -1,0 +1,281 @@
+//! npz / npy reading (and npy writing) for artifact tensors.
+//!
+//! The Python build pipeline stores checkpoints / quantized weights /
+//! estimator stacks as uncompressed-or-deflated `.npz` (a zip of `.npy`
+//! members).  This module parses the npy header dialect numpy actually
+//! emits (v1.0/2.0, C-order) for the dtypes the pipeline uses: f32, f64,
+//! i64, i32, u16, u8, bool.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A loaded array: shape + flat data in one of the supported dtypes.
+#[derive(Debug, Clone)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: NpyData,
+}
+
+#[derive(Debug, Clone)]
+pub enum NpyData {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I64(Vec<i64>),
+    I32(Vec<i32>),
+    U16(Vec<u16>),
+    U8(Vec<u8>),
+    Bool(Vec<bool>),
+}
+
+impl NpyArray {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Convert to f32 regardless of stored dtype (lossy for i64/f64).
+    pub fn to_f32(&self) -> Vec<f32> {
+        match &self.data {
+            NpyData::F32(v) => v.clone(),
+            NpyData::F64(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::I64(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::I32(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::U16(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::U8(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::Bool(v) => v.iter().map(|&x| x as u8 as f32).collect(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            NpyData::F32(v) => Ok(v),
+            other => bail!("expected f32 array, got {:?}", dtype_name(other)),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match &self.data {
+            NpyData::U8(v) => Ok(v),
+            other => bail!("expected u8 array, got {:?}", dtype_name(other)),
+        }
+    }
+
+    pub fn as_u16(&self) -> Result<&[u16]> {
+        match &self.data {
+            NpyData::U16(v) => Ok(v),
+            other => bail!("expected u16 array, got {:?}", dtype_name(other)),
+        }
+    }
+
+    pub fn to_i64(&self) -> Vec<i64> {
+        match &self.data {
+            NpyData::I64(v) => v.clone(),
+            NpyData::I32(v) => v.iter().map(|&x| x as i64).collect(),
+            NpyData::U16(v) => v.iter().map(|&x| x as i64).collect(),
+            NpyData::U8(v) => v.iter().map(|&x| x as i64).collect(),
+            NpyData::F64(v) => v.iter().map(|&x| x as i64).collect(),
+            NpyData::F32(v) => v.iter().map(|&x| x as i64).collect(),
+            NpyData::Bool(v) => v.iter().map(|&x| x as i64).collect(),
+        }
+    }
+}
+
+fn dtype_name(d: &NpyData) -> &'static str {
+    match d {
+        NpyData::F32(_) => "f32",
+        NpyData::F64(_) => "f64",
+        NpyData::I64(_) => "i64",
+        NpyData::I32(_) => "i32",
+        NpyData::U16(_) => "u16",
+        NpyData::U8(_) => "u8",
+        NpyData::Bool(_) => "bool",
+    }
+}
+
+/// Parse a `.npy` byte buffer.
+pub fn parse_npy(bytes: &[u8]) -> Result<NpyArray> {
+    if bytes.len() < 10 || &bytes[..6] != b"\x93NUMPY" {
+        bail!("not an npy file");
+    }
+    let major = bytes[6];
+    let (header_len, data_off) = match major {
+        1 => {
+            let n = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+            (n, 10 + n)
+        }
+        2 | 3 => {
+            let n = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
+            (n, 12 + n)
+        }
+        v => bail!("unsupported npy version {v}"),
+    };
+    let header = std::str::from_utf8(&bytes[data_off - header_len..data_off])
+        .context("npy header not utf-8")?;
+    let descr = dict_field(header, "descr")?;
+    let fortran = dict_field(header, "fortran_order")?;
+    if fortran.trim() != "False" {
+        bail!("fortran-order npy not supported");
+    }
+    let shape_s = dict_field(header, "shape")?;
+    let shape: Vec<usize> = shape_s
+        .trim()
+        .trim_start_matches('(')
+        .trim_end_matches(')')
+        .split(',')
+        .map(|t| t.trim())
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<usize>().map_err(|e| anyhow!("bad shape '{t}': {e}")))
+        .collect::<Result<_>>()?;
+    let n: usize = shape.iter().product();
+    let raw = &bytes[data_off..];
+    let descr = descr.trim().trim_matches(|c| c == '\'' || c == '"');
+    let data = match descr {
+        "<f4" => NpyData::F32(read_le::<4, f32>(raw, n, f32::from_le_bytes)?),
+        "<f8" => NpyData::F64(read_le::<8, f64>(raw, n, f64::from_le_bytes)?),
+        "<i8" => NpyData::I64(read_le::<8, i64>(raw, n, i64::from_le_bytes)?),
+        "<i4" => NpyData::I32(read_le::<4, i32>(raw, n, i32::from_le_bytes)?),
+        "<u2" => NpyData::U16(read_le::<2, u16>(raw, n, u16::from_le_bytes)?),
+        "|u1" | "<u1" => NpyData::U8(raw.get(..n).ok_or_else(|| anyhow!("short npy"))?.to_vec()),
+        "|b1" => NpyData::Bool(
+            raw.get(..n)
+                .ok_or_else(|| anyhow!("short npy"))?
+                .iter()
+                .map(|&b| b != 0)
+                .collect(),
+        ),
+        d => bail!("unsupported npy dtype '{d}'"),
+    };
+    Ok(NpyArray { shape, data })
+}
+
+fn read_le<const W: usize, T>(raw: &[u8], n: usize, f: fn([u8; W]) -> T) -> Result<Vec<T>> {
+    if raw.len() < n * W {
+        bail!("npy data too short: want {} bytes, have {}", n * W, raw.len());
+    }
+    Ok(raw[..n * W]
+        .chunks_exact(W)
+        .map(|c| f(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Pull `'key': value` out of the python-dict-literal npy header.
+fn dict_field<'a>(header: &'a str, key: &str) -> Result<&'a str> {
+    let pat = format!("'{key}':");
+    let at = header
+        .find(&pat)
+        .ok_or_else(|| anyhow!("npy header missing '{key}'"))?;
+    let rest = &header[at + pat.len()..];
+    // Value ends at the next top-level ',' (parens may nest for shape).
+    let mut depth = 0usize;
+    for (i, c) in rest.char_indices() {
+        match c {
+            '(' | '[' => depth += 1,
+            ')' | ']' => {
+                if depth == 0 {
+                    return Ok(&rest[..i]);
+                }
+                depth -= 1;
+            }
+            ',' if depth == 0 => return Ok(&rest[..i]),
+            '}' if depth == 0 => return Ok(&rest[..i]),
+            _ => {}
+        }
+    }
+    Ok(rest)
+}
+
+/// Read every member of an `.npz` (zip) file.
+pub fn load_npz(path: &str) -> Result<BTreeMap<String, NpyArray>> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {path}"))?;
+    let mut zip = zip::ZipArchive::new(f).with_context(|| format!("reading zip {path}"))?;
+    let mut out = BTreeMap::new();
+    for i in 0..zip.len() {
+        let mut member = zip.by_index(i)?;
+        let name = member
+            .name()
+            .trim_end_matches(".npy")
+            .to_string();
+        let mut buf = Vec::with_capacity(member.size() as usize);
+        member.read_to_end(&mut buf)?;
+        let arr = parse_npy(&buf).with_context(|| format!("member '{name}' of {path}"))?;
+        out.insert(name, arr);
+    }
+    Ok(out)
+}
+
+/// Write a single f32 `.npy` file (used by tests and debug dumps).
+pub fn write_npy_f32(path: &str, shape: &[usize], data: &[f32]) -> Result<()> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let shape_s = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_s}, }}"
+    );
+    let total = 10 + header.len() + 1;
+    let pad = (64 - total % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+    let mut bytes = Vec::with_capacity(10 + header.len() + data.len() * 4);
+    bytes.extend_from_slice(b"\x93NUMPY\x01\x00");
+    bytes.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    bytes.extend_from_slice(header.as_bytes());
+    for x in data {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {path}"))
+}
+
+/// Load a raw little-endian uint16 token stream (`.bin` files from dataprep).
+pub fn load_u16_bin(path: &str) -> Result<Vec<u16>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    if bytes.len() % 2 != 0 {
+        bail!("{path}: odd byte count for u16 stream");
+    }
+    Ok(bytes
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn npy_roundtrip() {
+        let tmp = std::env::temp_dir().join("dpllm_npz_test.npy");
+        let path = tmp.to_str().unwrap();
+        let data: Vec<f32> = (0..24).map(|i| i as f32 * 0.5).collect();
+        write_npy_f32(path, &[2, 3, 4], &data).unwrap();
+        let arr = parse_npy(&std::fs::read(path).unwrap()).unwrap();
+        assert_eq!(arr.shape, vec![2, 3, 4]);
+        assert_eq!(arr.as_f32().unwrap(), &data[..]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn npy_scalar_and_1d() {
+        let tmp = std::env::temp_dir().join("dpllm_npz_test2.npy");
+        let path = tmp.to_str().unwrap();
+        write_npy_f32(path, &[5], &[1., 2., 3., 4., 5.]).unwrap();
+        let arr = parse_npy(&std::fs::read(path).unwrap()).unwrap();
+        assert_eq!(arr.shape, vec![5]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_non_npy() {
+        assert!(parse_npy(b"hello world, not npy").is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! Summary statistics + a micro-benchmark harness (criterion substitute).
+
+use std::time::Instant;
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Geometric mean (paper reports geomeans of overheads).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.max(1e-300).ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// q-quantile with linear interpolation (q in [0,1]); matches numpy's
+/// default 'linear' method, which Phase-3 threshold translation relies on.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Percentile helper (p in [0,100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    quantile(xs, p / 100.0)
+}
+
+/// Median absolute deviation — robust spread for bench reporting.
+pub fn mad(xs: &[f64]) -> f64 {
+    let med = quantile(xs, 0.5);
+    let dev: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
+    quantile(&dev, 0.5)
+}
+
+/// Ordinary least squares fit y ≈ a·x + b; returns (a, b, r²).
+/// Used by the linear-regression relative-error estimator check on the
+/// Rust side and by the device cost-model fitting.
+pub fn linfit(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    let mx = mean(x);
+    let my = mean(y);
+    let sxy: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let sxx: f64 = x.iter().map(|a| (a - mx) * (a - mx)).sum();
+    let syy: f64 = y.iter().map(|b| (b - my) * (b - my)).sum();
+    if sxx == 0.0 || n < 2.0 {
+        return (0.0, my, 0.0);
+    }
+    let a = sxy / sxx;
+    let b = my - a * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    (a, b, r2)
+}
+
+/// Timing sample from [`bench`].
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// median ns per iteration
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub samples: usize,
+    pub iters_per_sample: usize,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>12.0} ns/iter (±{:.0} MAD, {} samples × {} iters)",
+            self.name, self.median_ns, self.mad_ns, self.samples, self.iters_per_sample
+        )
+    }
+}
+
+/// Micro-benchmark: warm up, auto-calibrate iterations per sample to
+/// ~`target_sample_ms`, collect `samples` medians. criterion-lite.
+pub fn bench(name: &str, samples: usize, target_sample_ms: f64, mut f: impl FnMut()) -> BenchResult {
+    // Warmup + calibration.
+    f();
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_sample_ms / 1e3 / once).ceil() as usize).clamp(1, 1_000_000);
+    let mut per_iter = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_iter.push(t.elapsed().as_secs_f64() * 1e9 / iters as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        median_ns: quantile(&per_iter, 0.5),
+        mad_ns: mad(&per_iter),
+        samples,
+        iters_per_sample: iters,
+    }
+}
+
+/// Render an aligned text table (the bench harness prints paper-style rows).
+pub fn format_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut width: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.iter().enumerate().take(ncol) {
+            width[i] = width[i].max(c.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: Vec<String>| {
+        for (i, c) in cells.iter().enumerate().take(ncol) {
+            if i > 0 {
+                out.push_str("  ");
+            }
+            out.push_str(&format!("{:<w$}", c, w = width[i]));
+        }
+        out.push('\n');
+    };
+    line(&mut out, header.iter().map(|s| s.to_string()).collect());
+    line(
+        &mut out,
+        width.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>(),
+    );
+    for r in rows {
+        line(&mut out, r.clone());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_matches_numpy_linear() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+        assert!((quantile(&xs, 0.25) - 1.75).abs() < 1e-12);
+        assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((quantile(&xs, 1.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linfit_exact_line() {
+        let x: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 * v - 7.0).collect();
+        let (a, b, r2) = linfit(&x, &y);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b + 7.0).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linfit_no_correlation() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [5.0, 5.0, 5.0, 5.0];
+        let (a, _b, r2) = linfit(&x, &y);
+        assert_eq!(a, 0.0);
+        assert!((r2 - 1.0).abs() < 1e-9); // flat y: syy == 0 treated as perfect fit
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_formatting() {
+        let t = format_table(
+            &["a", "bbbb"],
+            &[vec!["x".into(), "1".into()], vec!["yyyy".into(), "2".into()]],
+        );
+        assert!(t.contains("a     bbbb"));
+    }
+}

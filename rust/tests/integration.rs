@@ -1,0 +1,240 @@
+//! Integration tests over the real artifacts (skipped when `make artifacts`
+//! has not run yet).  These are the cross-language contract checks:
+//! the Rust loader executing the AOT HLO must reproduce jax's numerics.
+
+use std::sync::Arc;
+
+use dp_llm::anyprec::GROUPS;
+use dp_llm::evalharness::{build_session, perplexity, Method};
+use dp_llm::model::{art, artifacts_available, Manifest, ModelAssets};
+use dp_llm::runtime::decode::EstMode;
+use dp_llm::runtime::Runtime;
+use dp_llm::tokenizer::Tokenizer;
+use dp_llm::util::npz::{load_npz, load_u16_bin};
+
+const MODEL: &str = "dpl-tiny";
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// The golden decode-step vectors produced by jax must be reproduced by the
+/// PJRT execution of the HLO-text artifact — logits, KV, estimates, flags.
+#[test]
+fn golden_decode_roundtrip() {
+    require_artifacts!();
+    let manifest = Manifest::load().unwrap();
+    let entry = manifest.entry(MODEL, "decode_step").unwrap();
+    let rt = Runtime::new().unwrap();
+    let exe = rt.load(&entry).unwrap();
+    let golden = load_npz(&art(&["hlo", MODEL, "golden_decode.npz"])).unwrap();
+
+    let mut literals = Vec::new();
+    for name in &entry.args {
+        let arr = golden
+            .get(&format!("in_{name}"))
+            .unwrap_or_else(|| panic!("golden missing in_{name}"));
+        let dims: Vec<i64> = arr.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &arr.data {
+            dp_llm::util::npz::NpyData::I32(v) => {
+                xla::Literal::vec1(v).reshape(&dims).unwrap()
+            }
+            _ => {
+                let v = arr.to_f32();
+                xla::Literal::vec1(&v).reshape(&dims).unwrap()
+            }
+        };
+        literals.push(lit);
+    }
+    let out = exe.run_literals(&literals).unwrap();
+
+    for name in ["logits", "kv"] {
+        let want = golden[&format!("out_{name}")].to_f32();
+        let got = out.f32_vec(name).unwrap();
+        assert_eq!(want.len(), got.len(), "{name} length");
+        let d = max_abs_diff(&want, &got);
+        assert!(d < 2e-3, "{name} max diff {d}");
+    }
+    for g in GROUPS {
+        for prefix in ["est", "useh"] {
+            let key = format!("{prefix}_{g}");
+            let want = golden[&format!("out_{key}")].to_f32();
+            let got = out.f32_vec(&key).unwrap();
+            let d = max_abs_diff(&want, &got);
+            assert!(d < 2e-3, "{key} max diff {d}");
+        }
+    }
+}
+
+/// Same contract for the prefill graph (static positions, full-prompt KV).
+#[test]
+fn golden_prefill_roundtrip() {
+    require_artifacts!();
+    let manifest = Manifest::load().unwrap();
+    let entry = manifest.entry(MODEL, "prefill_64").unwrap();
+    let rt = Runtime::new().unwrap();
+    let exe = rt.load(&entry).unwrap();
+    let golden = load_npz(&art(&["hlo", MODEL, "golden_prefill.npz"])).unwrap();
+    let mut literals = Vec::new();
+    for name in &entry.args {
+        let arr = &golden[&format!("in_{name}")];
+        let dims: Vec<i64> = arr.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &arr.data {
+            dp_llm::util::npz::NpyData::I32(v) => {
+                xla::Literal::vec1(v).reshape(&dims).unwrap()
+            }
+            _ => xla::Literal::vec1(&arr.to_f32()).reshape(&dims).unwrap(),
+        };
+        literals.push(lit);
+    }
+    let out = exe.run_literals(&literals).unwrap();
+    for name in ["logits_last", "kv"] {
+        let want = golden[&format!("out_{name}")].to_f32();
+        let got = out.f32_vec(name).unwrap();
+        let d = max_abs_diff(&want, &got);
+        assert!(d < 2e-3, "{name} max diff {d}");
+    }
+}
+
+/// The standalone Pallas bitplane-GEMV kernel (L1, via HLO) must agree with
+/// the Rust-native dequantizer (L3 substrate) on the real quantized store.
+#[test]
+fn anyprec_kernel_matches_rust_dequant() {
+    require_artifacts!();
+    let manifest = Manifest::load().unwrap();
+    let assets = ModelAssets::load(MODEL).unwrap();
+    let store = assets.store.group("wq").unwrap();
+    let rt = Runtime::new().unwrap();
+
+    for bits in [3u8, 4, 5, 6] {
+        let entry = manifest
+            .entry(MODEL, &format!("anyprec_gemv_{bits}"))
+            .unwrap();
+        let exe = rt.load(&entry).unwrap();
+        // layer 0 planes as [6, out, in/8] u8 literal + lut + x
+        let (out_d, in_d) = (store.out_dim, store.in_dim);
+        let bytes_in = in_d / 8;
+        let layer_planes = &store.planes[..6 * out_d * bytes_in];
+        let planes_lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            &[6, out_d, bytes_in],
+            layer_planes,
+        )
+        .unwrap();
+        let lut = &store.luts[&bits][..out_d * (1 << bits)];
+        let lut_lit = xla::Literal::vec1(lut)
+            .reshape(&[out_d as i64, 1i64 << bits])
+            .unwrap();
+        let x: Vec<f32> = (0..in_d).map(|i| ((i * 37 % 17) as f32 - 8.0) * 0.1).collect();
+        let x_lit = xla::Literal::vec1(&x);
+
+        let out = exe.run_literals(&[planes_lit, lut_lit, x_lit]).unwrap();
+        let got = out.f32_vec("y").unwrap();
+
+        let w = store.dequant(0, bits).unwrap();
+        let want = w.gemv(&x).unwrap();
+        let d = max_abs_diff(&want, &got);
+        assert!(d < 1e-3, "bits={bits} max diff {d}");
+    }
+}
+
+/// Rust tokenizer parity with the Python encoder: re-encoding the decoded
+/// prefix of a build-time-tokenized stream reproduces the exact ids.
+#[test]
+fn tokenizer_parity_with_python_stream() {
+    require_artifacts!();
+    let tok = Tokenizer::load(&art(&["data", "tokenizer.json"])).unwrap();
+    let ids = load_u16_bin(&art(&["data", "synthwiki_eval.bin"])).unwrap();
+    let n = ids.len().min(4000);
+    let prefix: Vec<u32> = ids[..n].iter().map(|&i| i as u32).collect();
+    let text = tok.decode(&prefix);
+    let re: Vec<u32> = tok.encode(&text);
+    // A trailing partial word may differ; everything before it must match.
+    let check = re.len().min(prefix.len()).saturating_sub(8);
+    assert!(check > 3000);
+    assert_eq!(&re[..check], &prefix[..check]);
+}
+
+/// End-to-end decode through a DP-LLM configuration: finite logits, live
+/// precision switching, effective bits within the candidate range.
+#[test]
+fn dpllm_session_decodes() {
+    require_artifacts!();
+    let rt = Arc::new(Runtime::new().unwrap());
+    let assets = ModelAssets::load(MODEL).unwrap();
+    let manifest = Manifest::load().unwrap();
+    let m = Method::Dpllm { tag: "4.00".into() };
+    let session = build_session(&rt, &assets, &manifest, 5, &m).unwrap();
+
+    let mut kv = session.zero_kv();
+    let mut sel = session.selector_state();
+    let mut tokv = 12u32;
+    for t in 0..6 {
+        let out = session
+            .step(tokv, t, &kv, &sel.use_h_async, EstMode::Approx)
+            .unwrap();
+        assert_eq!(out.logits.len(), session.cfg.vocab);
+        assert!(out.logits.iter().all(|v| v.is_finite()));
+        for g in GROUPS {
+            assert!(out.ests[g].iter().all(|v| v.is_finite() && *v >= 0.0));
+        }
+        sel.observe(&out.ests, &out.use_eff);
+        kv = out.kv;
+        tokv = dp_llm::runtime::decode::DecodeSession::argmax(&out.logits);
+    }
+    let eff = sel.effective_bits();
+    assert!(eff >= 3.0 && eff <= 6.0, "effective bits {eff}");
+}
+
+/// Perplexity ordering sanity: 6-bit uniform must beat 3-bit uniform, and a
+/// DP-LLM config at 4.0 must land between (or beat) them.
+#[test]
+fn ppl_ordering_uniform() {
+    require_artifacts!();
+    let rt = Arc::new(Runtime::new().unwrap());
+    let assets = ModelAssets::load(MODEL).unwrap();
+    let manifest = Manifest::load().unwrap();
+    let stream = load_u16_bin(&art(&["data", "synthwiki_eval.bin"])).unwrap();
+
+    let eval = |m: &Method| {
+        let s = build_session(&rt, &assets, &manifest, 5, m).unwrap();
+        perplexity(&s, &stream, 64, 256, EstMode::Approx).unwrap().ppl
+    };
+    let p3 = eval(&Method::Uniform { bits: 3 });
+    let p6 = eval(&Method::Uniform { bits: 6 });
+    assert!(p6 < p3, "uniform6 {p6} !< uniform3 {p3}");
+    let pd = eval(&Method::Dpllm { tag: "4.00".into() });
+    assert!(pd < p3 * 1.02, "dpllm@4 {pd} vs uniform3 {p3}");
+    assert!(pd > p6 * 0.9, "dpllm@4 {pd} suspiciously below uniform6 {p6}");
+}
+
+/// Prefill + decode continuation through the serving path.
+#[test]
+fn prefill_then_decode() {
+    require_artifacts!();
+    let rt = Arc::new(Runtime::new().unwrap());
+    let assets = ModelAssets::load(MODEL).unwrap();
+    let manifest = Manifest::load().unwrap();
+    let m = Method::Uniform { bits: 6 };
+    let session = build_session(&rt, &assets, &manifest, 5, &m).unwrap();
+    let tok = Tokenizer::load(&art(&["data", "tokenizer.json"])).unwrap();
+
+    let prompt = tok.encode("The town of");
+    let pre = session.prefill(&prompt).unwrap();
+    assert_eq!(pre.logits.len(), session.cfg.vocab);
+    let sel = session.selector_state();
+    let next = dp_llm::runtime::decode::DecodeSession::argmax(&pre.logits);
+    let out = session
+        .step(next, prompt.len(), &pre.kv, &sel.use_h_async, EstMode::Approx)
+        .unwrap();
+    assert!(out.logits.iter().all(|v| v.is_finite()));
+}
