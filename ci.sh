@@ -1,0 +1,10 @@
+#!/usr/bin/env sh
+# Tier-1 verification, mirroring .github/workflows/ci.yml:
+#   sh ci.sh
+# Artifact-backed integration tests run only when DPLLM_ARTIFACTS points at
+# a `make artifacts` output tree; unset they skip, keeping this hermetic.
+set -eu
+cd "$(dirname "$0")/rust"
+cargo fmt --check
+cargo build --release
+cargo test -q

@@ -1,5 +1,8 @@
-//! §Perf probe: decode-step wall time vs the isolated KV host-upload cost
-//! (EXPERIMENTS.md §Perf item 4).
+//! §Perf probe: decode-step wall time under the device-resident GenState
+//! path, vs the isolated KV host-upload cost the old per-step round trip
+//! paid (DESIGN.md §Perf).  Also prints the measured per-step host→device
+//! traffic, which must be O(1) in KV size (a few scalar/flag buffers),
+//! not O(kv_bytes).
 use std::sync::Arc;
 use std::time::Instant;
 use dp_llm::evalharness::{build_session, Method};
@@ -13,24 +16,34 @@ fn main() {
     let manifest = Manifest::load().unwrap();
     let session = build_session(&rt, &assets, &manifest, 5,
                                 &Method::Dpllm { tag: "4.00".into() }).unwrap();
-    let mut kv = session.zero_kv();
-    let sel = session.selector_state();
-    // warm
-    for t in 0..3 {
-        kv = session.step(1, t, &kv, &sel.use_h_async, EstMode::Approx).unwrap().kv;
+    let mut gen = session.begin_empty().unwrap();
+    // warm (compile caches, rope/scalar device caches)
+    for _ in 0..3 {
+        session.advance(&mut gen, 1, EstMode::Approx).unwrap();
     }
     let n = 20;
+    let before = rt.transfers().snapshot();
     let t0 = Instant::now();
-    for t in 0..n {
-        kv = session.step(1, t + 3, &kv, &sel.use_h_async, EstMode::Approx).unwrap().kv;
+    for _ in 0..n {
+        session.advance(&mut gen, 1, EstMode::Approx).unwrap();
     }
     let step_ms = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
-    // isolate kv upload cost
+    let after = rt.transfers().snapshot();
+    let per_step_bytes = after.upload_bytes_since(&before) as f64 / n as f64;
+    // isolate what one kv upload would have cost (the old per-step tax)
+    let kv = session.zero_kv();
     let t1 = Instant::now();
     for _ in 0..n {
         let _ = rt.upload_f32(&session.cfg.kv_shape(), &kv).unwrap();
     }
     let up_ms = t1.elapsed().as_secs_f64() * 1e3 / n as f64;
-    println!("decode step: {step_ms:.2} ms | kv upload alone: {up_ms:.2} ms \
-              ({:.0}% of step, x2 for download side)", up_ms / step_ms * 100.0);
+    println!(
+        "decode step: {step_ms:.2} ms | kv resident on device: {} | \
+         host->device per step: {per_step_bytes:.0} B (kv would be {} B) | \
+         avoided kv upload: {up_ms:.2} ms/step ({:.0}% of step, x2 with the \
+         old download side)",
+        gen.kv_on_device(),
+        session.kv_bytes(),
+        up_ms / step_ms * 100.0
+    );
 }

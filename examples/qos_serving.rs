@@ -46,13 +46,18 @@ fn main() -> anyhow::Result<()> {
     let mut queue = make_queue(SchedPolicy::Edf, reqs);
     let mut util = UtilizationSim::new(23, 0.6);
 
+    // Token-interleaved EDF: requests are admitted mid-flight, decode steps
+    // are deadline-ordered per token, and each generation's target
+    // precision is re-selected mid-stream as utilization fluctuates.
     let outcomes = engine.run_queue(&mut queue, &mut util)?;
-    println!("\nper-query outcomes:");
+    println!("\nper-query outcomes (interleaved decode):");
     for o in &outcomes {
         println!(
-            "  req {:>2}  target {:.2}  eff-bits {:.3}  tpot {:>6.1} ms  {} toks",
+            "  req {:>2}  target {:.2}  eff-bits {:.3}  tpot {:>6.1} ms  \
+             ttft {:>6.0} ms  retargets {}  {} toks",
             o.id, o.target_precision, o.effective_bits,
-            o.decode_ms / o.output_tokens.max(1) as f64, o.output_tokens
+            o.decode_ms / o.output_tokens.max(1) as f64,
+            o.ttft_ms, o.retargets, o.output_tokens
         );
     }
     println!("\n{}", engine.metrics.summary().report());

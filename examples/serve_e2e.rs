@@ -1,18 +1,25 @@
 //! End-to-end serving driver (the DESIGN.md mandated validation run):
-//! boots the HTTP server on a real socket with the full adaptation set,
-//! fires a batch of concurrent client requests with mixed QoS budgets and
-//! pinned-target requests, and reports latency / throughput / effective
-//! bitwidth — proving L1 (Pallas kernels in the decode graph), L2 (AOT
-//! HLO), and L3 (coordinator/server) compose on the request path with no
-//! Python anywhere.
+//!
+//! Phase 1 drives the token-interleaved [`ServingCore`] directly: several
+//! mixed-QoS requests are admitted mid-flight and stream their tokens
+//! through the callback while the core round-robins / EDF-orders decode
+//! steps across them — the interleaving is visible in the event log.
+//!
+//! Phase 2 boots the HTTP server on a real socket with the full adaptation
+//! set, fires a batch of concurrent client requests with mixed QoS budgets
+//! and pinned-target requests, and reports latency / throughput /
+//! effective bitwidth — proving L1 (Pallas kernels in the decode graph),
+//! L2 (AOT HLO), and L3 (coordinator/server) compose on the request path
+//! with no Python anywhere.
 //!
 //!     make artifacts && cargo run --release --example serve_e2e
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
-use dp_llm::coordinator::qos::UtilizationSim;
-use dp_llm::coordinator::service::ServingEngine;
+use dp_llm::coordinator::qos::{QosBudget, UtilizationSim};
+use dp_llm::coordinator::sched::{Request, RequestQueue, SchedPolicy};
+use dp_llm::coordinator::service::{CoreEvent, ServingCore, ServingEngine};
 use dp_llm::evalharness::tasks;
 use dp_llm::model::artifacts_available;
 use dp_llm::runtime::Runtime;
@@ -29,17 +36,54 @@ fn main() -> anyhow::Result<()> {
     let n_requests: usize = std::env::var("DPLLM_E2E_REQUESTS")
         .ok().and_then(|s| s.parse().ok()).unwrap_or(12);
 
-    // --- server side (owns the engine; PJRT handles are !Send) ----------
     let rt = Arc::new(Runtime::new()?);
     let engine = ServingEngine::load(&rt, "dpl-tiny", 5,
                                      &["3.25", "3.50", "4.00", "4.50", "4.75"])?;
     println!("[e2e] adaptation set: {:?}", engine.targets());
+    let prompts: Vec<String> = tasks::load_task("instruct")?
+        .into_iter().map(|s| s.prompt).collect();
+
+    // --- phase 1: token-interleaved streaming through ServingCore -------
+    println!("[e2e] phase 1: interleaved streaming (EDF, 3 concurrent)");
+    let mut queue = RequestQueue::new(SchedPolicy::Edf);
+    for i in 0..3usize {
+        let r = Request::new(100 + i as u64, prompts[i % prompts.len()].clone(),
+                             12, if i == 2 { QosBudget::tight(120.0) }
+                                 else { QosBudget::best_effort() });
+        queue.push(if i == 2 { r.with_deadline(500.0) } else { r });
+    }
+    let mut util = UtilizationSim::constant(0.3);
+    let mut stream_log: Vec<(u64, usize)> = Vec::new();
+    let outcomes = ServingCore::new(&engine, SchedPolicy::Edf)
+        .run(&mut queue, &mut util, &mut |ev| {
+            if let CoreEvent::Token { id, index, piece, .. } = ev {
+                stream_log.push((*id, *index));
+                if *index < 4 {
+                    println!("[e2e]   stream req {id} tok#{index}: {piece:?}");
+                }
+            }
+        })?;
+    let interleaved = stream_log
+        .windows(2)
+        .filter(|w| w[0].0 != w[1].0)
+        .count();
+    println!(
+        "[e2e] phase 1 done: {} requests, {} stream events, {} request \
+         switches at token granularity",
+        outcomes.len(), stream_log.len(), interleaved
+    );
+    for o in &outcomes {
+        println!(
+            "[e2e]   req {} target {:.2} eff {:.3} ttft {:.0}ms retargets {}",
+            o.id, o.target_precision, o.effective_bits, o.ttft_ms, o.retargets
+        );
+    }
+
+    // --- phase 2: the HTTP front-end over the same engine ----------------
     let server = Server::new(engine, UtilizationSim::new(5, 0.5));
     let stop = server.stop_handle();
 
     // Client load runs on worker threads; the server loop runs here.
-    let prompts: Vec<String> = tasks::load_task("instruct")?
-        .into_iter().map(|s| s.prompt).collect();
     let client = std::thread::spawn(move || -> anyhow::Result<Vec<Json>> {
         // wait for the listener
         for _ in 0..100 {
@@ -58,7 +102,8 @@ fn main() -> anyhow::Result<()> {
                 body.set("prompt", prompt.as_str()).set("max_new", 24usize);
                 match i % 3 {
                     0 => {}                                    // best effort
-                    1 => { body.set("qos_ms_per_token", 120.0); }
+                    1 => { body.set("qos_ms_per_token", 120.0)
+                               .set("deadline_ms", 2_000.0); } // EDF-admitted
                     _ => { body.set("target", 3.5); }          // pinned target
                 }
                 let t0 = std::time::Instant::now();

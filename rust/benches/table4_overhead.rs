@@ -12,6 +12,7 @@ use dp_llm::coordinator::service::measure_tpot;
 use dp_llm::evalharness::{build_session, Method};
 use dp_llm::model::calib::DpllmConfig;
 use dp_llm::model::ModelAssets;
+use dp_llm::runtime::decode::EstMode;
 use dp_llm::util::stats::geomean;
 
 fn main() {
@@ -48,32 +49,55 @@ fn main() {
             rows.push(row);
         }
 
-        // Measured on this machine: DP-LLM step vs static step wall clock.
+        // Measured on this machine: DP-LLM step vs static step wall clock,
+        // both on the device-resident GenState path (KV never crosses the
+        // host boundary — DESIGN.md §Perf), plus the per-step host→device
+        // traffic that path actually pays.
         let mut row = vec!["pjrt-cpu (measured)".to_string()];
+        let mut traffic_row = vec!["host→device B/step".to_string()];
         let mut fracs = Vec::new();
         let steps = 8;
         for &t in &targets {
             let dyn_m = Method::Dpllm { tag: format!("{t:.2}") };
             let sta_m = Method::Static { method: "hawq_v2".into(), target: t };
-            let cell = (|| -> anyhow::Result<f64> {
+            let cell = (|| -> anyhow::Result<(f64, f64)> {
                 let sd = build_session(&rt, &assets, &manifest, budget, &dyn_m)?;
                 let ss = build_session(&rt, &assets, &manifest, budget, &sta_m)?;
                 let td = measure_tpot(&sd, steps)?;
                 let ts = measure_tpot(&ss, steps)?;
-                Ok(td / ts - 1.0)
+                // Steady-state traffic: meter warmed steps only, so the
+                // one-time zero-KV upload of begin_empty stays out of the
+                // per-step figure.
+                let mut gen = sd.begin_empty()?;
+                sd.advance(&mut gen, 1, EstMode::Approx)?;
+                sd.advance(&mut gen, 2, EstMode::Approx)?;
+                let before = rt.transfers().snapshot();
+                for t in 0..steps as u32 {
+                    sd.advance(&mut gen, t % 7 + 1, EstMode::Approx)?;
+                }
+                let after = rt.transfers().snapshot();
+                let per_step =
+                    after.upload_bytes_since(&before) as f64 / steps as f64;
+                Ok((td / ts - 1.0, per_step))
             })();
             match cell {
-                Ok(f) => {
+                Ok((f, traffic)) => {
                     fracs.push(f.max(0.0));
                     row.push(format!("{:+.2}%", f * 100.0));
+                    traffic_row.push(format!("{traffic:.0}B"));
                 }
-                Err(_) => row.push("-".into()),
+                Err(_) => {
+                    row.push("-".into());
+                    traffic_row.push("-".into());
+                }
             }
         }
         if !fracs.is_empty() {
             row.push(format!("{:.2}%", geomean(&fracs) * 100.0));
         }
+        traffic_row.push("(kv stays on device)".into());
         rows.push(row);
+        rows.push(traffic_row);
 
         let tstr: Vec<String> = targets.iter().map(|t| format!("{t:.2}")).collect();
         let mut header = vec!["device"];

@@ -21,14 +21,12 @@ impl Sampling {
     }
 }
 
+/// NaN-safe greedy argmax — single implementation lives in
+/// [`DecodeSession::argmax`]; this infallible wrapper keeps the sampler
+/// signature (empty/all-NaN logits cannot occur on the sampling path,
+/// where the decode step has already validated them).
 pub fn argmax(logits: &[f32]) -> u32 {
-    let mut best = 0usize;
-    for (i, &v) in logits.iter().enumerate() {
-        if v > logits[best] {
-            best = i;
-        }
-    }
-    best as u32
+    crate::runtime::decode::DecodeSession::argmax(logits).unwrap_or(0)
 }
 
 fn top_k(logits: &[f32], k: usize, temperature: f64, rng: &mut Rng) -> u32 {

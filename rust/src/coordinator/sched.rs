@@ -1,12 +1,15 @@
 //! Request queue + scheduling policies.
 //!
-//! On-device serving decodes one request at a time (batch-1 GEMV is the
-//! whole premise of weight-only quantization), so the scheduler's job is
-//! admission order: FIFO for throughput studies, EDF (earliest deadline
-//! first) when QoS deadlines differ across queries.
+//! The serving core interleaves active generations at token granularity
+//! (see `service::ServingCore`), so the queue's job is *admission* order:
+//! FIFO for throughput studies, EDF (earliest deadline first) when QoS
+//! deadlines differ across queries.  EDF is a binary heap keyed on the
+//! absolute deadline instant with a FIFO tie-break sequence — `pop` is
+//! O(log n), not the linear scan + `VecDeque::remove` it used to be.
 
-use std::collections::VecDeque;
-use std::time::Instant;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+use std::time::{Duration, Instant};
 
 use super::qos::QosBudget;
 
@@ -16,7 +19,7 @@ pub struct Request {
     pub prompt: String,
     pub max_new: usize,
     pub qos: QosBudget,
-    /// Absolute deadline for first token (EDF key); None = best effort.
+    /// Deadline for first token, ms from arrival (EDF key); None = best effort.
     pub deadline_ms: Option<f64>,
     pub arrival: Instant,
 }
@@ -39,11 +42,11 @@ impl Request {
         self
     }
 
-    fn deadline_key(&self, now: Instant) -> f64 {
-        match self.deadline_ms {
-            Some(d) => d - now.duration_since(self.arrival).as_secs_f64() * 1e3,
-            None => f64::INFINITY,
-        }
+    /// Absolute deadline instant; None = best effort (sorts last).
+    pub fn deadline_instant(&self) -> Option<Instant> {
+        self.deadline_ms.map(|ms| {
+            self.arrival + Duration::from_secs_f64(ms.max(0.0) / 1e3)
+        })
     }
 }
 
@@ -55,59 +58,121 @@ pub enum SchedPolicy {
     Edf,
 }
 
+/// EDF heap key: absolute deadline (None = +inf, i.e. best effort, runs
+/// after every deadlined request), then the push sequence number so equal
+/// deadlines — and all best-effort requests — pop FIFO.
+#[derive(Debug)]
+struct EdfEntry {
+    deadline: Option<Instant>,
+    seq: u64,
+    req: Request,
+}
+
+impl EdfEntry {
+    /// (is_best_effort, deadline, seq): best-effort sorts after any
+    /// deadline; ties break on push order.
+    fn key(&self) -> (bool, Option<Instant>, u64) {
+        (self.deadline.is_none(), self.deadline, self.seq)
+    }
+}
+
+impl PartialEq for EdfEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+impl Eq for EdfEntry {}
+impl PartialOrd for EdfEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for EdfEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key().cmp(&other.key())
+    }
+}
+
 /// Admission queue.  Not thread-safe by itself — the serving engine wraps
 /// it in a mutex; this keeps the policy logic testable in isolation.
 #[derive(Debug)]
 pub struct RequestQueue {
     policy: SchedPolicy,
-    items: VecDeque<Request>,
+    fifo: VecDeque<Request>,
+    edf: BinaryHeap<Reverse<EdfEntry>>,
+    seq: u64,
 }
 
 impl RequestQueue {
     pub fn new(policy: SchedPolicy) -> RequestQueue {
-        RequestQueue { policy, items: VecDeque::new() }
+        RequestQueue {
+            policy,
+            fifo: VecDeque::new(),
+            edf: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn policy(&self) -> SchedPolicy {
+        self.policy
     }
 
     pub fn push(&mut self, r: Request) {
-        self.items.push_back(r);
+        match self.policy {
+            SchedPolicy::Fifo => self.fifo.push_back(r),
+            SchedPolicy::Edf => {
+                let entry = EdfEntry {
+                    deadline: r.deadline_instant(),
+                    seq: self.seq,
+                    req: r,
+                };
+                self.seq += 1;
+                self.edf.push(Reverse(entry));
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.items.len()
+        match self.policy {
+            SchedPolicy::Fifo => self.fifo.len(),
+            SchedPolicy::Edf => self.edf.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.items.is_empty()
+        self.len() == 0
     }
 
-    /// Next request according to the policy.
+    /// Next request according to the policy.  O(1) for FIFO, O(log n) for
+    /// EDF.
     pub fn pop(&mut self) -> Option<Request> {
         match self.policy {
-            SchedPolicy::Fifo => self.items.pop_front(),
+            SchedPolicy::Fifo => self.fifo.pop_front(),
+            SchedPolicy::Edf => self.edf.pop().map(|Reverse(e)| e.req),
+        }
+    }
+
+    /// Earliest pending deadline, if any request has one.
+    pub fn earliest_deadline(&self) -> Option<Instant> {
+        match self.policy {
+            SchedPolicy::Fifo => {
+                self.fifo.iter().filter_map(|r| r.deadline_instant()).min()
+            }
             SchedPolicy::Edf => {
-                let now = Instant::now();
-                let best = self
-                    .items
-                    .iter()
-                    .enumerate()
-                    .min_by(|(ia, a), (ib, b)| {
-                        a.deadline_key(now)
-                            .partial_cmp(&b.deadline_key(now))
-                            .unwrap()
-                            .then(ia.cmp(ib)) // FIFO tie-break
-                    })
-                    .map(|(i, _)| i)?;
-                self.items.remove(best)
+                self.edf.peek().and_then(|Reverse(e)| e.deadline)
             }
         }
     }
 
     /// Queueing delay of the oldest waiting request, ms.
     pub fn oldest_wait_ms(&self) -> f64 {
-        self.items
-            .iter()
-            .map(|r| r.arrival.elapsed().as_secs_f64() * 1e3)
-            .fold(0.0, f64::max)
+        let waits = |r: &Request| r.arrival.elapsed().as_secs_f64() * 1e3;
+        match self.policy {
+            SchedPolicy::Fifo => self.fifo.iter().map(waits).fold(0.0, f64::max),
+            SchedPolicy::Edf => {
+                self.edf.iter().map(|Reverse(e)| waits(&e.req)).fold(0.0, f64::max)
+            }
+        }
     }
 }
 
@@ -155,6 +220,24 @@ mod tests {
         assert_eq!(order, vec![10, 11, 12]);
     }
 
+    /// Equal deadlines must pop in push order (the FIFO tie-break the old
+    /// linear scan guaranteed via index ordering; the heap guarantees it
+    /// via the sequence number).
+    #[test]
+    fn edf_equal_deadlines_fifo_tiebreak() {
+        let mut q = RequestQueue::new(SchedPolicy::Edf);
+        // Share one Request template so the arrival instants (and thus the
+        // absolute deadlines) are identical.
+        let base = req(0, Some(250.0));
+        for id in 0..6 {
+            let mut r = base.clone();
+            r.id = id;
+            q.push(r);
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5]);
+    }
+
     /// Property: every pushed request is popped exactly once (no loss, no
     /// duplication) under both policies.
     #[test]
@@ -172,6 +255,36 @@ mod tests {
             got.sort_unstable();
             expect.sort_unstable();
             assert_eq!(got, expect);
+        });
+    }
+
+    /// Property: EDF pops in non-decreasing deadline order, best-effort
+    /// strictly after all deadlined requests.
+    #[test]
+    fn edf_order_property() {
+        for_each_seed(20, |rng| {
+            let mut q = RequestQueue::new(SchedPolicy::Edf);
+            let n = rng.range(2, 50);
+            for i in 0..n as u64 {
+                let dl = if rng.bool(0.3) { None } else { Some(rng.f64() * 5000.0) };
+                q.push(req(i, dl));
+            }
+            let popped: Vec<Option<Instant>> =
+                std::iter::from_fn(|| q.pop()).map(|r| r.deadline_instant()).collect();
+            let mut seen_best_effort = false;
+            let mut last: Option<Instant> = None;
+            for d in popped {
+                match d {
+                    None => seen_best_effort = true,
+                    Some(t) => {
+                        assert!(!seen_best_effort, "deadlined after best-effort");
+                        if let Some(prev) = last {
+                            assert!(t >= prev, "deadline order violated");
+                        }
+                        last = Some(t);
+                    }
+                }
+            }
         });
     }
 }

@@ -1,7 +1,15 @@
-//! The serving engine: an adaptation set of DP-LLM configurations bound to
-//! one model, a QoS policy choosing among them per query, and the decode
-//! loop that runs requests end to end (tokenize → admit → prefill at max
-//! precision → dynamic-precision decode → detokenize).
+//! The serving engine + token-interleaved serving core.
+//!
+//! [`ServingEngine`] binds one model's adaptation set (DP-LLM configurations
+//! at several target precisions) to the PJRT runtime.  [`ServingCore`] is
+//! the decode loop around it: it admits requests mid-flight from the
+//! [`RequestQueue`], keeps every active generation's KV cache device-resident
+//! ([`GenState`]), round-robins (FIFO) or deadline-orders (EDF) **per
+//! token** across the active set, re-selects each request's target
+//! precision mid-stream when utilization moves, and streams token events to
+//! the caller.  One decode step serves one token of one request — a tight
+//! deadline admitted mid-generation preempts best-effort traffic at the
+//! next token boundary instead of waiting a whole generation.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -14,9 +22,17 @@ use super::qos::{AdaptationPolicy, UtilizationSim};
 use super::sched::{Request, RequestQueue, SchedPolicy};
 use crate::evalharness::{build_session, Method};
 use crate::model::{art, Manifest, ModelAssets};
-use crate::runtime::decode::{DecodeSession, EstMode};
+use crate::runtime::decode::{DecodeSession, EstMode, GenState};
 use crate::runtime::Runtime;
 use crate::tokenizer::Tokenizer;
+
+/// Tokens between utilization ticks / mid-stream target re-selection in the
+/// interleaved loop.
+pub const RESELECT_EVERY: u64 = 8;
+
+/// Default cap on concurrently-interleaved generations (KV caches resident
+/// on the device at once).
+pub const DEFAULT_MAX_ACTIVE: usize = 4;
 
 pub struct ServeOutcome {
     pub id: u64,
@@ -25,7 +41,32 @@ pub struct ServeOutcome {
     pub effective_bits: f64,
     pub prefill_ms: f64,
     pub decode_ms: f64,
+    /// Request arrival → first streamed token (includes queue wait,
+    /// prefill, and any interleaving delay before the first step).
+    pub ttft_ms: f64,
     pub output_tokens: usize,
+    /// Mid-stream target re-selections applied to this request.
+    pub retargets: usize,
+}
+
+/// One event from a [`ServingCore::step`] call.
+pub enum CoreEvent {
+    /// A token was produced for request `id` (streaming callback payload).
+    Token {
+        id: u64,
+        /// 0-based index within the request's output.
+        index: usize,
+        token: u32,
+        /// Detokenized piece (may be empty for byte-partial tokens).
+        piece: String,
+        /// Target precision the token was decoded at.
+        target: f64,
+    },
+    /// Request finished; terminal stats.
+    Done(ServeOutcome),
+    /// Request aborted on a decode error; the generation was evicted so
+    /// the rest of the active set keeps serving.
+    Failed { id: u64, error: String },
 }
 
 /// One model + its adaptation set, ready to serve.
@@ -92,88 +133,368 @@ impl ServingEngine {
 
     /// Serve one request at the target chosen by the QoS policy.
     pub fn handle(&self, req: &Request, utilization: f64) -> Result<ServeOutcome> {
-        let target = self.policy.select(req.qos, utilization);
-        self.handle_at(req, target)
+        let mut core = ServingCore::new(self, SchedPolicy::Fifo);
+        core.admit(req.clone(), utilization)?;
+        drain_single(core)
     }
 
-    /// Serve one request pinned to a specific target precision.
+    /// Serve one request pinned to a specific target precision (no
+    /// mid-stream re-selection).
     pub fn handle_at(&self, req: &Request, target: f64) -> Result<ServeOutcome> {
-        let session = self.session_for_target(target);
+        let mut core = ServingCore::new(self, SchedPolicy::Fifo);
+        core.admit_pinned(req.clone(), target)?;
+        drain_single(core)
+    }
+
+    /// Drain a queue through the token-interleaved core: admission happens
+    /// mid-flight as slots free up, decode steps round-robin / EDF across
+    /// the active set, and the utilization simulator advances on the
+    /// re-selection cadence.
+    pub fn run_queue(&self, queue: &mut RequestQueue, util: &mut UtilizationSim)
+                     -> Result<Vec<ServeOutcome>> {
+        self.run_queue_streaming(queue, util, &mut |_| {})
+    }
+
+    /// [`ServingEngine::run_queue`] with a streaming event callback.
+    pub fn run_queue_streaming(&self, queue: &mut RequestQueue,
+                               util: &mut UtilizationSim,
+                               on_event: &mut dyn FnMut(&CoreEvent))
+                               -> Result<Vec<ServeOutcome>> {
+        ServingCore::new(self, queue.policy()).run(queue, util, on_event)
+    }
+}
+
+fn drain_single(mut core: ServingCore<'_>) -> Result<ServeOutcome> {
+    let mut failure: Option<String> = None;
+    let mut outcomes = core.drain(&mut |ev| {
+        if let CoreEvent::Failed { error, .. } = ev {
+            failure = Some(error.clone());
+        }
+    })?;
+    match outcomes.pop() {
+        Some(o) => Ok(o),
+        None => Err(anyhow!(
+            failure.unwrap_or_else(|| "request produced no outcome".into())
+        )),
+    }
+}
+
+/// Pure next-step selection over the active set, factored out so the
+/// fairness / preemption properties are unit-testable without a device.
+///
+/// `items` carries, per active generation, its admission sequence number
+/// and its absolute deadline (None = best effort).  FIFO round-robins via
+/// `rr_cursor`; EDF picks the earliest deadline (best-effort last), with
+/// the admission sequence as the FIFO tie-break.
+pub fn pick_next(policy: SchedPolicy, rr_cursor: usize,
+                 items: &[(u64, Option<Instant>)]) -> Option<usize> {
+    if items.is_empty() {
+        return None;
+    }
+    match policy {
+        SchedPolicy::Fifo => Some(rr_cursor % items.len()),
+        SchedPolicy::Edf => items
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, (seq, dl))| (dl.is_none(), *dl, *seq))
+            .map(|(i, _)| i),
+    }
+}
+
+/// One in-flight generation inside the core.
+struct Generation<'e> {
+    req: Request,
+    session: &'e DecodeSession,
+    gen: GenState<'e>,
+    target: f64,
+    pinned: bool,
+    seq: u64,
+    next_token: u32,
+    out_ids: Vec<u32>,
+    queue_ms: f64,
+    prefill_ms: f64,
+    decode_ms: f64,
+    ttft_ms: f64,
+}
+
+impl Generation<'_> {
+    fn finished(&self) -> bool {
+        self.out_ids.len() >= self.req.max_new
+            || self.gen.pos + 1 >= self.session.cfg.max_seq
+    }
+}
+
+/// Token-interleaved decode loop over one [`ServingEngine`].
+pub struct ServingCore<'e> {
+    engine: &'e ServingEngine,
+    policy: SchedPolicy,
+    active: Vec<Generation<'e>>,
+    rr_cursor: usize,
+    next_seq: u64,
+    max_active: usize,
+    token_clock: u64,
+}
+
+impl<'e> ServingCore<'e> {
+    pub fn new(engine: &'e ServingEngine, policy: SchedPolicy) -> ServingCore<'e> {
+        ServingCore {
+            engine,
+            policy,
+            active: Vec::new(),
+            rr_cursor: 0,
+            next_seq: 0,
+            max_active: DEFAULT_MAX_ACTIVE,
+            token_clock: 0,
+        }
+    }
+
+    pub fn with_max_active(mut self, n: usize) -> ServingCore<'e> {
+        self.max_active = n.max(1);
+        self
+    }
+
+    pub fn has_active(&self) -> bool {
+        !self.active.is_empty()
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn has_capacity(&self) -> bool {
+        self.active.len() < self.max_active
+    }
+
+    /// Decode steps taken since construction (drives the re-selection
+    /// cadence).
+    pub fn token_clock(&self) -> u64 {
+        self.token_clock
+    }
+
+    /// Admit one request at the QoS-policy target for `utilization`.
+    /// Runs prefill immediately (max precision), so the request's first
+    /// token is ready before the next [`ServingCore::step`].
+    pub fn admit(&mut self, req: Request, utilization: f64) -> Result<u64> {
+        let target = self.engine.policy.select(req.qos, utilization);
+        self.admit_inner(req, target, false)
+    }
+
+    /// Admit pinned to a target precision; never re-selected mid-stream.
+    pub fn admit_pinned(&mut self, req: Request, target: f64) -> Result<u64> {
+        self.admit_inner(req, target, true)
+    }
+
+    /// Pull requests from the queue while there is capacity.
+    pub fn admit_from(&mut self, queue: &mut RequestQueue, utilization: f64)
+                      -> Result<usize> {
+        let mut admitted = 0;
+        while self.has_capacity() {
+            match queue.pop() {
+                Some(r) => {
+                    self.admit(r, utilization)?;
+                    admitted += 1;
+                }
+                None => break,
+            }
+        }
+        Ok(admitted)
+    }
+
+    fn admit_inner(&mut self, req: Request, target: f64, pinned: bool)
+                   -> Result<u64> {
+        if !self.has_capacity() {
+            return Err(anyhow!("core at capacity ({})", self.max_active));
+        }
+        let session = self.engine.session_for_target(target);
         let queue_ms = req.arrival.elapsed().as_secs_f64() * 1e3;
-        let prompt_ids = self.tokenizer.encode(&req.prompt);
+        let prompt_ids = self.engine.tokenizer.encode(&req.prompt);
         if prompt_ids.is_empty() {
             return Err(anyhow!("empty prompt"));
         }
-
         let t0 = Instant::now();
-        let pre = session.prefill(&prompt_ids)?;
+        let (gen, logits) = session.begin(&prompt_ids)?;
         let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
-
-        let t1 = Instant::now();
-        let mut kv = pre.kv;
-        let mut sel = session.selector_state();
-        let mut next = DecodeSession::argmax(&pre.logits);
-        let mut out_ids = vec![next];
-        let mut pos = prompt_ids.len();
-        for _ in 1..req.max_new {
-            if pos + 1 >= session.cfg.max_seq {
-                break;
-            }
-            let step = session.step(next, pos, &kv, &sel.use_h_async, self.est_mode)?;
-            sel.observe(&step.ests, &step.use_eff);
-            kv = step.kv;
-            next = DecodeSession::argmax(&step.logits);
-            out_ids.push(next);
-            pos += 1;
-        }
-        let decode_ms = t1.elapsed().as_secs_f64() * 1e3;
-        let eff = sel.effective_bits();
-
-        self.metrics.record(RequestRecord {
-            id: req.id,
-            target_precision: target,
-            effective_bits: eff,
-            prompt_tokens: prompt_ids.len(),
-            output_tokens: out_ids.len(),
+        let first = DecodeSession::argmax(&logits)?;
+        let id = req.id;
+        self.active.push(Generation {
+            req,
+            session,
+            gen,
+            target: session.ec.target,
+            pinned,
+            seq: self.next_seq,
+            next_token: first,
+            out_ids: vec![first],
             queue_ms,
             prefill_ms,
-            decode_ms,
+            decode_ms: 0.0,
+            // Finalized when the first token actually streams; under load
+            // that is later than admission+prefill (the generation may wait
+            // behind deadlined traffic before its first step).
+            ttft_ms: queue_ms + prefill_ms,
         });
-        Ok(ServeOutcome {
-            id: req.id,
-            text: self.tokenizer.decode(&out_ids),
-            target_precision: target,
-            effective_bits: eff,
-            prefill_ms,
-            decode_ms,
-            output_tokens: out_ids.len(),
-        })
+        self.next_seq += 1;
+        Ok(id)
     }
 
-    /// Drain a queue sequentially (batch-1 on-device serving), with the
-    /// utilization simulator advancing per request.
-    pub fn run_queue(&self, queue: &mut RequestQueue, util: &mut UtilizationSim)
-                     -> Result<Vec<ServeOutcome>> {
-        let mut out = Vec::new();
-        while let Some(req) = queue.pop() {
-            let u = util.tick();
-            out.push(self.handle(&req, u)?);
+    /// Re-select the target precision of every non-pinned active
+    /// generation for the current utilization.  A retargeted generation
+    /// keeps its device-resident KV cache and effective-bit statistics;
+    /// the new session adopts the state ([`DecodeSession::adopt`]).
+    pub fn reselect(&mut self, utilization: f64) -> usize {
+        let mut switched = 0;
+        for g in &mut self.active {
+            if g.pinned || g.finished() {
+                continue;
+            }
+            let want = self.engine.policy.select(g.req.qos, utilization);
+            let session = self.engine.session_for_target(want);
+            if !std::ptr::eq(session, g.session) {
+                g.session = session;
+                session.adopt(&mut g.gen);
+                g.target = session.ec.target;
+                switched += 1;
+            }
         }
-        Ok(out)
+        switched
+    }
+
+    /// Advance ONE generation by ONE token (policy-chosen), emitting the
+    /// streamed token event and, on completion, the terminal outcome.
+    /// The first call for a request emits its prefill-produced token 0.
+    pub fn step(&mut self) -> Result<Vec<CoreEvent>> {
+        let items: Vec<(u64, Option<Instant>)> = self
+            .active
+            .iter()
+            .map(|g| (g.seq, g.req.deadline_instant()))
+            .collect();
+        let Some(idx) = pick_next(self.policy, self.rr_cursor, &items) else {
+            return Ok(Vec::new());
+        };
+        self.rr_cursor = self.rr_cursor.wrapping_add(1);
+        self.token_clock += 1;
+        let mut events = Vec::new();
+
+        let g = &mut self.active[idx];
+        // Token 0 (from prefill) streams on the generation's first step;
+        // TTFT is measured to *here*, not to admission.
+        if g.gen.steps == 0 {
+            g.ttft_ms = g.req.arrival.elapsed().as_secs_f64() * 1e3;
+            events.push(CoreEvent::Token {
+                id: g.req.id,
+                index: 0,
+                token: g.next_token,
+                piece: self.engine.tokenizer.decode_one(g.next_token),
+                target: g.target,
+            });
+        }
+        if !g.finished() {
+            let t0 = Instant::now();
+            let stepped = g
+                .session
+                .advance(&mut g.gen, g.next_token, self.engine.est_mode)
+                .and_then(|out| DecodeSession::argmax(&out.logits));
+            g.decode_ms += t0.elapsed().as_secs_f64() * 1e3;
+            let next = match stepped {
+                Ok(n) => n,
+                Err(e) => {
+                    // Evict the broken generation; the rest of the active
+                    // set keeps interleaving.
+                    let g = self.active.remove(idx);
+                    events.push(CoreEvent::Failed {
+                        id: g.req.id,
+                        error: format!("{e:#}"),
+                    });
+                    return Ok(events);
+                }
+            };
+            g.next_token = next;
+            g.out_ids.push(next);
+            events.push(CoreEvent::Token {
+                id: g.req.id,
+                index: g.out_ids.len() - 1,
+                token: next,
+                piece: self.engine.tokenizer.decode_one(next),
+                target: g.target,
+            });
+        }
+        if g.finished() {
+            let g = self.active.remove(idx);
+            events.push(CoreEvent::Done(self.complete(g)));
+        }
+        Ok(events)
+    }
+
+    /// Run everything to completion: admit from `queue` as capacity frees
+    /// up, tick `util` on the re-selection cadence, stream events.
+    pub fn run(mut self, queue: &mut RequestQueue, util: &mut UtilizationSim,
+               on_event: &mut dyn FnMut(&CoreEvent)) -> Result<Vec<ServeOutcome>> {
+        let mut done = Vec::new();
+        while self.has_active() || !queue.is_empty() {
+            self.admit_from(queue, util.current())?;
+            if self.token_clock % RESELECT_EVERY == 0 {
+                let u = util.tick();
+                self.reselect(u);
+            }
+            for ev in self.step()? {
+                on_event(&ev);
+                if let CoreEvent::Done(o) = ev {
+                    done.push(o);
+                }
+            }
+        }
+        Ok(done)
+    }
+
+    /// Finish all currently-active generations (no further admission).
+    pub fn drain(&mut self, on_event: &mut dyn FnMut(&CoreEvent))
+                 -> Result<Vec<ServeOutcome>> {
+        let mut done = Vec::new();
+        while self.has_active() {
+            for ev in self.step()? {
+                on_event(&ev);
+                if let CoreEvent::Done(o) = ev {
+                    done.push(o);
+                }
+            }
+        }
+        Ok(done)
+    }
+
+    fn complete(&self, g: Generation<'e>) -> ServeOutcome {
+        let eff = g.gen.sel.effective_bits();
+        self.engine.metrics.record(RequestRecord {
+            id: g.req.id,
+            target_precision: g.target,
+            effective_bits: eff,
+            prompt_tokens: g.gen.pos - g.out_ids.len() + 1,
+            output_tokens: g.out_ids.len(),
+            queue_ms: g.queue_ms,
+            prefill_ms: g.prefill_ms,
+            decode_ms: g.decode_ms,
+        });
+        ServeOutcome {
+            id: g.req.id,
+            text: self.engine.tokenizer.decode(&g.out_ids),
+            target_precision: g.target,
+            effective_bits: eff,
+            prefill_ms: g.prefill_ms,
+            decode_ms: g.decode_ms,
+            ttft_ms: g.ttft_ms,
+            output_tokens: g.out_ids.len(),
+            retargets: g.gen.retargets,
+        }
     }
 }
 
 /// Measure mean decode-step latency over `n` steps (policy calibration).
 pub fn measure_tpot(session: &DecodeSession, n: usize) -> Result<f64> {
-    let mut kv = session.zero_kv();
-    let sel = session.selector_state();
-    // Warm-up step (compile caches, allocator).
-    let w = session.step(1, 0, &kv, &sel.use_h_async, EstMode::Approx)?;
-    kv = w.kv;
+    let mut gen = session.begin_empty()?;
+    // Warm-up step (compile caches, allocator, rope/scalar buffers).
+    session.advance(&mut gen, 1, EstMode::Approx)?;
     let t0 = Instant::now();
-    for i in 0..n {
-        let s = session.step(1, i + 1, &kv, &sel.use_h_async, EstMode::Approx)?;
-        kv = s.kv;
+    for _ in 0..n {
+        session.advance(&mut gen, 1, EstMode::Approx)?;
     }
     Ok(t0.elapsed().as_secs_f64() * 1e3 / n as f64)
 }
@@ -186,4 +507,70 @@ pub fn make_queue(policy: SchedPolicy,
         q.push(r);
     }
     q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn now_plus(ms: u64) -> Option<Instant> {
+        Some(Instant::now() + Duration::from_millis(ms))
+    }
+
+    /// FIFO interleaving fairness: with two active generations, each must
+    /// advance within any 2-token window.
+    #[test]
+    fn fifo_round_robin_two_way_fairness() {
+        let items = vec![(0u64, None), (1u64, None)];
+        let mut picks = Vec::new();
+        for cursor in 0..10 {
+            picks.push(pick_next(SchedPolicy::Fifo, cursor, &items).unwrap());
+        }
+        for w in picks.windows(2) {
+            assert_ne!(w[0], w[1], "a generation starved in a 2-token window");
+        }
+        assert!(picks.contains(&0) && picks.contains(&1));
+    }
+
+    /// FIFO cursor sweeps all active generations before repeating.
+    #[test]
+    fn fifo_round_robin_covers_all() {
+        let items: Vec<(u64, Option<Instant>)> =
+            (0..5u64).map(|s| (s, None)).collect();
+        let picked: Vec<usize> = (0..5)
+            .map(|c| pick_next(SchedPolicy::Fifo, c, &items).unwrap())
+            .collect();
+        let mut sorted = picked.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4]);
+    }
+
+    /// EDF at token granularity: the tightest deadline is stepped first,
+    /// regardless of admission order; best-effort runs last; admission
+    /// sequence breaks ties.
+    #[test]
+    fn edf_token_granularity_preemption() {
+        let items = vec![
+            (0u64, None),            // admitted first, best effort
+            (1u64, now_plus(5000)),  // loose deadline
+            (2u64, now_plus(50)),    // tight deadline, admitted last
+        ];
+        assert_eq!(pick_next(SchedPolicy::Edf, 0, &items), Some(2));
+
+        // Tie on deadline -> FIFO by admission seq.
+        let t = now_plus(300);
+        let tied = vec![(7u64, t), (3u64, t)];
+        assert_eq!(pick_next(SchedPolicy::Edf, 0, &tied), Some(1));
+
+        // All best-effort -> earliest admission.
+        let be = vec![(9u64, None), (4u64, None), (6u64, None)];
+        assert_eq!(pick_next(SchedPolicy::Edf, 0, &be), Some(1));
+    }
+
+    #[test]
+    fn pick_next_empty_is_none() {
+        assert_eq!(pick_next(SchedPolicy::Fifo, 3, &[]), None);
+        assert_eq!(pick_next(SchedPolicy::Edf, 0, &[]), None);
+    }
 }

@@ -67,6 +67,8 @@ pub struct PplResult {
 
 /// Teacher-forced perplexity over a tokenized stream, decoding step by
 /// step through the serving graph with live dynamic precision selection.
+/// Each chunk runs through a fresh [`GenState`] whose KV cache stays on
+/// the device for the whole chunk (the serving hot path, not a shortcut).
 pub fn perplexity(session: &DecodeSession, stream: &[u16], chunk: usize,
                   max_tokens: usize, mode: EstMode) -> Result<PplResult> {
     if stream.len() < chunk + 1 {
@@ -83,17 +85,13 @@ pub fn perplexity(session: &DecodeSession, stream: &[u16], chunk: usize,
             break;
         }
         let toks = &stream[base..base + chunk + 1];
-        let mut kv = session.zero_kv();
-        let mut sel = session.selector_state();
+        let mut gen = session.begin_empty()?;
         for t in 0..chunk {
-            let out = session.step(toks[t] as u32, t, &kv,
-                                   &sel.use_h_async, mode)?;
-            sel.observe(&out.ests, &out.use_eff);
-            kv = out.kv;
+            let out = session.advance(&mut gen, toks[t] as u32, mode)?;
             nll_sum += nll_of(&out.logits, toks[t + 1] as usize);
             count += 1;
         }
-        eff_sum += sel.effective_bits();
+        eff_sum += gen.sel.effective_bits();
     }
     let chunks_done = (count / chunk).max(1);
     Ok(PplResult {

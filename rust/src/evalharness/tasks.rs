@@ -31,38 +31,31 @@ pub fn load_task(task: &str) -> Result<Vec<TaskSample>> {
         .collect()
 }
 
-/// Greedy generation through the serving path.
+/// Greedy generation through the serving path: prefill into a
+/// device-resident [`GenState`], then advance token by token.
 pub fn generate(session: &DecodeSession, tok: &Tokenizer, prompt: &str,
                 max_new: usize, mode: EstMode) -> Result<(String, f64)> {
     let prompt_ids = tok.encode(prompt);
     if prompt_ids.is_empty() {
         bail!("empty prompt");
     }
-    let bucket = session.prefill_bucket(prompt_ids.len())
-        .context("prompt too long")?;
-    let _ = bucket;
-    let pre = session.prefill(&prompt_ids)?;
-    let mut kv = pre.kv;
-    let mut sel = session.selector_state();
-    let mut next = DecodeSession::argmax(&pre.logits);
+    session.prefill_bucket(prompt_ids.len()).context("prompt too long")?;
+    let (mut gen, logits) = session.begin(&prompt_ids)?;
+    let mut next = DecodeSession::argmax(&logits)?;
     let mut out_ids = vec![next];
-    let mut pos = prompt_ids.len();
     for _ in 1..max_new {
-        let step = session.step(next, pos, &kv, &sel.use_h_async, mode)?;
-        sel.observe(&step.ests, &step.use_eff);
-        kv = step.kv;
-        next = DecodeSession::argmax(&step.logits);
-        out_ids.push(next);
-        pos += 1;
-        if pos + 1 >= session.cfg.max_seq {
+        if gen.pos + 1 >= session.cfg.max_seq {
             break;
         }
+        let step = session.advance(&mut gen, next, mode)?;
+        next = DecodeSession::argmax(&step.logits)?;
+        out_ids.push(next);
         let text = tok.decode(&out_ids);
         if stop_condition(&text) {
             break;
         }
     }
-    Ok((tok.decode(&out_ids), sel.effective_bits()))
+    Ok((tok.decode(&out_ids), gen.sel.effective_bits()))
 }
 
 fn stop_condition(text: &str) -> bool {

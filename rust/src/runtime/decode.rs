@@ -1,13 +1,23 @@
-//! Decode session: one (model, engine-config) pair bound to the PJRT
-//! executables, with weights resident on the device.
+//! Decode session + device-resident generation state.
 //!
-//! Request path per token:
-//!   1. upload ~(5·L + 3) small host values (token, pos, async flags),
-//!   2. `execute_b` the decode graph,
-//!   3. read back logits + per-linear estimates (+ carry the KV cache),
+//! Request path per token (DESIGN.md §Perf):
+//!   1. look up the token/pos scalars, rope tables and async-flag vectors in
+//!      the device-buffer caches (upload only on miss / flag change),
+//!   2. `execute_b` the decode graph with the **device-resident** KV cache
+//!      from the previous step,
+//!   3. read back only the small outputs (logits + per-linear estimates);
+//!      the new KV buffer replaces the old one *on the device*,
 //!   4. [`SelectorState::observe`] turns estimates into next-step flags.
+//!
+//! The KV cache — the only O(model · seq) tensor in the loop — never
+//! crosses the host boundary after prefill, so per-token host↔device
+//! traffic is O(1) in KV size.  When an AOT graph was lowered as a single
+//! tuple (older artifacts), [`GenState`] degrades to a host round-trip and
+//! reports it via [`GenState::kv_on_device`].
 
+use std::cell::{Cell, RefCell};
 use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -15,7 +25,7 @@ use xla::PjRtBuffer;
 
 use crate::anyprec::GROUPS;
 use crate::model::{Manifest, ModelAssets, ModelConfig};
-use crate::runtime::{wrap, Exe, Outputs, Runtime};
+use crate::runtime::{buffer_f32, wrap, Exe, Runtime};
 use crate::selector::{EngineConfig, SelectorState, ASYNC_GROUPS};
 
 /// Estimator source for a step (Table 3 ablation).
@@ -27,17 +37,56 @@ pub enum EstMode {
     Exact,
 }
 
+/// Host-visible results of one decode step.  The KV cache is *not* here —
+/// it stays on the device inside [`GenState`].
 pub struct StepOut {
     pub logits: Vec<f32>,
-    /// KV cache to feed into the next step (host copy; see DESIGN §Perf).
-    pub kv: Vec<f32>,
     pub ests: BTreeMap<String, Vec<f32>>,
     pub use_eff: BTreeMap<String, Vec<f32>>,
 }
 
-pub struct PrefillOut {
-    pub logits: Vec<f32>,
-    pub kv: Vec<f32>,
+/// Where a generation's KV cache currently lives.
+enum KvResidence {
+    /// On the device; fed straight back into the next `execute_b`.
+    Device(PjRtBuffer),
+    /// Host fallback (tuple-lowered graph): re-uploaded each step.
+    Host(Vec<f32>),
+}
+
+/// Per-request device-resident generation handle.
+///
+/// Created by [`DecodeSession::begin`] (prefill) or
+/// [`DecodeSession::begin_empty`] (zero KV, teacher-forcing/benches) and
+/// advanced one token at a time by [`DecodeSession::advance`].  Owns:
+///
+/// * the KV cache as a device buffer carried across steps,
+/// * the [`SelectorState`] (async precision decisions + eff-bit stats),
+/// * the uploaded async-flag buffers, re-uploaded only when the selector
+///   actually changes a flag vector.
+pub struct GenState<'s> {
+    pub sel: SelectorState<'s>,
+    kv: KvResidence,
+    /// Next absolute position to decode (== tokens processed so far).
+    pub pos: usize,
+    /// Per-group (flags at upload time, device buffer).
+    flag_bufs: HashMap<String, (Vec<f32>, PjRtBuffer)>,
+    /// Decode steps taken through this state.
+    pub steps: usize,
+    /// Mid-stream target re-selections applied (ServingCore).
+    pub retargets: usize,
+}
+
+impl<'s> GenState<'s> {
+    /// True while the KV cache is device-resident (the O(1)-traffic path).
+    pub fn kv_on_device(&self) -> bool {
+        matches!(self.kv, KvResidence::Device(_))
+    }
+
+    /// Drop cached flag buffers so the next step re-uploads them (used
+    /// after a rebind to a session with different thresholds/weights).
+    fn invalidate_flags(&mut self) {
+        self.flag_bufs.clear();
+    }
 }
 
 /// A servable model: compiled graphs + device-resident weight stacks.
@@ -52,6 +101,14 @@ pub struct DecodeSession {
     static_bufs: HashMap<String, PjRtBuffer>,
     prefill_bufs: HashMap<String, PjRtBuffer>,
     kv_zero: Vec<f32>,
+    // ---- per-step input caches (device buffers reused across steps and
+    // across concurrent generations; the session lives on one executor
+    // thread — PJRT handles are !Send — so RefCell suffices) -------------
+    rope_bufs: RefCell<HashMap<usize, Rc<(PjRtBuffer, PjRtBuffer)>>>,
+    scalar_bufs: RefCell<HashMap<i32, Rc<PjRtBuffer>>>,
+    mode_bufs: RefCell<HashMap<bool, Rc<PjRtBuffer>>>,
+    rope_hits: Cell<u64>,
+    rope_misses: Cell<u64>,
 }
 
 impl DecodeSession {
@@ -132,6 +189,11 @@ impl DecodeSession {
             static_bufs,
             prefill_bufs,
             kv_zero: vec![0.0; kv_len],
+            rope_bufs: RefCell::new(HashMap::new()),
+            scalar_bufs: RefCell::new(HashMap::new()),
+            mode_bufs: RefCell::new(HashMap::new()),
+            rope_hits: Cell::new(0),
+            rope_misses: Cell::new(0),
         })
     }
 
@@ -141,6 +203,11 @@ impl DecodeSession {
 
     pub fn zero_kv(&self) -> Vec<f32> {
         self.kv_zero.clone()
+    }
+
+    /// (hits, misses) of the per-position rope-table device cache.
+    pub fn rope_cache_stats(&self) -> (u64, u64) {
+        (self.rope_hits.get(), self.rope_misses.get())
     }
 
     /// Smallest prefill bucket that fits `n` tokens.
@@ -153,8 +220,77 @@ impl DecodeSession {
             .ok_or_else(|| anyhow!("prompt of {n} tokens exceeds largest bucket"))
     }
 
-    /// Run prefill at the highest available precision.
-    pub fn prefill(&self, prompt: &[u32]) -> Result<PrefillOut> {
+    // ---- cached per-step input buffers -----------------------------------
+
+    fn rope_buffers(&self, pos: usize) -> Result<Rc<(PjRtBuffer, PjRtBuffer)>> {
+        if let Some(r) = self.rope_bufs.borrow().get(&pos) {
+            self.rope_hits.set(self.rope_hits.get() + 1);
+            return Ok(r.clone());
+        }
+        self.rope_misses.set(self.rope_misses.get() + 1);
+        let (cos, sin) = self.cfg.rope_tables(pos);
+        let cos_buf = self.rt.upload_f32(&[cos.len()], &cos)?;
+        let sin_buf = self.rt.upload_f32(&[sin.len()], &sin)?;
+        let rc = Rc::new((cos_buf, sin_buf));
+        self.rope_bufs.borrow_mut().insert(pos, rc.clone());
+        Ok(rc)
+    }
+
+    fn scalar_buffer(&self, v: i32) -> Result<Rc<PjRtBuffer>> {
+        // Positions are bounded by max_seq, but token ids range over the
+        // whole vocabulary — cap the cache so a long-lived session holds at
+        // most max(max_seq, 1024) tiny device buffers, not one per vocab
+        // entry ever sampled.  Past the cap, uncached values upload fresh
+        // (a 4-byte transfer).
+        if let Some(b) = self.scalar_bufs.borrow().get(&v) {
+            return Ok(b.clone());
+        }
+        let rc = Rc::new(self.rt.scalar_i32(v)?);
+        let cap = self.cfg.max_seq.max(1024);
+        let mut cache = self.scalar_bufs.borrow_mut();
+        if cache.len() < cap {
+            cache.insert(v, rc.clone());
+        }
+        Ok(rc)
+    }
+
+    fn mode_buffer(&self, exact: bool) -> Result<Rc<PjRtBuffer>> {
+        if let Some(b) = self.mode_bufs.borrow().get(&exact) {
+            return Ok(b.clone());
+        }
+        let rc = Rc::new(self.rt.scalar_f32(if exact { 1.0 } else { 0.0 })?);
+        self.mode_bufs.borrow_mut().insert(exact, rc.clone());
+        Ok(rc)
+    }
+
+    /// Upload async flags for groups whose vectors changed since the last
+    /// upload (the selector flips layers rarely, so most steps re-use all
+    /// five buffers untouched).
+    fn refresh_flags(&self, gen: &mut GenState<'_>) -> Result<()> {
+        for g in ASYNC_GROUPS {
+            let want = gen
+                .sel
+                .use_h_async
+                .get(g)
+                .ok_or_else(|| anyhow!("missing async flags for {g}"))?;
+            let stale = match gen.flag_bufs.get(g) {
+                Some((uploaded, _)) => uploaded != want,
+                None => true,
+            };
+            if stale {
+                let buf = self.rt.upload_f32(&[self.cfg.n_layers], want)?;
+                gen.flag_bufs.insert(g.to_string(), (want.clone(), buf));
+            }
+        }
+        Ok(())
+    }
+
+    // ---- generation lifecycle --------------------------------------------
+
+    /// Start a generation from a prompt: prefill at the highest available
+    /// precision, keep the produced KV cache on the device, and return the
+    /// handle plus the last-position logits (caller samples token 1).
+    pub fn begin(&self, prompt: &[u32]) -> Result<(GenState<'_>, Vec<f32>)> {
         let bucket = self.prefill_bucket(prompt.len())?;
         let (_, exe, args) = self
             .prefills
@@ -188,80 +324,162 @@ impl DecodeSession {
                     .ok_or_else(|| anyhow!("missing prefill arg {other}"))?,
             });
         }
-        let out = exe.run(&arg_bufs)?;
-        Ok(PrefillOut {
-            logits: out.f32_vec("logits_last")?,
-            kv: out.f32_vec("kv")?,
+        let replica = exe.run_buffers(&arg_bufs).context("prefill")?;
+        let (kv, logits) = if exe.untupled(&replica) {
+            let li = exe.output_index("logits_last")?;
+            let ki = exe.output_index("kv")?;
+            self.rt.transfers().count_download();
+            let logits = buffer_f32(&replica[li])?;
+            let mut kv = None;
+            for (i, b) in replica.into_iter().enumerate() {
+                if i == ki {
+                    kv = Some(b);
+                }
+            }
+            (KvResidence::Device(kv.expect("kv index in range")), logits)
+        } else {
+            let out = exe.outputs(replica)?;
+            (KvResidence::Host(out.f32_vec("kv")?), out.f32_vec("logits_last")?)
+        };
+        Ok((
+            GenState {
+                sel: self.selector_state(),
+                kv,
+                pos: prompt.len(),
+                flag_bufs: HashMap::new(),
+                steps: 0,
+                retargets: 0,
+            },
+            logits,
+        ))
+    }
+
+    /// Start a generation from an empty (zeroed) KV cache at position 0 —
+    /// teacher-forced perplexity and TPOT measurement.
+    pub fn begin_empty(&self) -> Result<GenState<'_>> {
+        let kv_buf = self.rt.upload_f32(&self.cfg.kv_shape(), &self.kv_zero)?;
+        Ok(GenState {
+            sel: self.selector_state(),
+            kv: KvResidence::Device(kv_buf),
+            pos: 0,
+            flag_bufs: HashMap::new(),
+            steps: 0,
+            retargets: 0,
         })
     }
 
-    /// One decode step.  `use_h_async` comes from [`SelectorState`].
-    pub fn step(&self, token: u32, pos: usize, kv: &[f32],
-                use_h_async: &BTreeMap<String, Vec<f32>>, mode: EstMode)
-                -> Result<StepOut> {
-        let tok_buf = self.rt.scalar_i32(token as i32)?;
-        let pos_buf = self.rt.scalar_i32(pos as i32)?;
-        let (cos, sin) = self.cfg.rope_tables(pos);
-        let cos_buf = self.rt.upload_f32(&[cos.len()], &cos)?;
-        let sin_buf = self.rt.upload_f32(&[sin.len()], &sin)?;
-        let kv_buf = self.rt.upload_f32(&self.cfg.kv_shape(), kv)?;
-        let mode_buf = self
-            .rt
-            .scalar_f32(if mode == EstMode::Exact { 1.0 } else { 0.0 })?;
-        let mut flag_bufs: HashMap<String, PjRtBuffer> = HashMap::new();
-        for g in ASYNC_GROUPS {
-            let flags = use_h_async
-                .get(g)
-                .ok_or_else(|| anyhow!("missing async flags for {g}"))?;
-            flag_bufs.insert(
-                format!("useh_{g}"),
-                self.rt.upload_f32(&[self.cfg.n_layers], flags)?,
-            );
+    /// Take over a generation started on a sibling session of the same
+    /// model (mid-stream target re-selection).  The device KV cache and
+    /// accumulated statistics carry over; the selector re-binds to this
+    /// session's thresholds and the flag buffers are re-uploaded next step.
+    pub fn adopt<'s>(&'s self, gen: &mut GenState<'s>) {
+        gen.sel.rebind(&self.cfg, &self.ec);
+        gen.invalidate_flags();
+        gen.retargets += 1;
+    }
+
+    /// One decode step: feed `token` at `gen.pos`, advance the state.
+    /// Updates the selector (async flags + effective-bit accounting)
+    /// internally; the returned [`StepOut`] carries only host-readable
+    /// per-step outputs.
+    pub fn advance(&self, gen: &mut GenState<'_>, token: u32, mode: EstMode)
+                   -> Result<StepOut> {
+        if gen.pos + 1 >= self.cfg.max_seq {
+            bail!("position {} at max_seq {}", gen.pos, self.cfg.max_seq);
         }
+        let tok_buf = self.scalar_buffer(token as i32)?;
+        let pos_buf = self.scalar_buffer(gen.pos as i32)?;
+        let rope = self.rope_buffers(gen.pos)?;
+        let mode_buf = self.mode_buffer(mode == EstMode::Exact)?;
+        self.refresh_flags(gen)?;
+        // Host-KV fallback: upload for this step only (tuple-lowered graph).
+        let kv_upload = match &gen.kv {
+            KvResidence::Device(_) => None,
+            KvResidence::Host(v) => Some(self.rt.upload_f32(&self.cfg.kv_shape(), v)?),
+        };
 
         let mut arg_bufs: Vec<&PjRtBuffer> = Vec::with_capacity(self.decode_args.len());
         for name in &self.decode_args {
             arg_bufs.push(match name.as_str() {
-                "token" => &tok_buf,
-                "pos" => &pos_buf,
-                "cos" => &cos_buf,
-                "sin" => &sin_buf,
-                "kv" => &kv_buf,
-                "mode_exact" => &mode_buf,
-                other => flag_bufs
-                    .get(other)
+                "token" => &*tok_buf,
+                "pos" => &*pos_buf,
+                "cos" => &rope.0,
+                "sin" => &rope.1,
+                "kv" => match (&gen.kv, &kv_upload) {
+                    (KvResidence::Device(b), _) => b,
+                    (_, Some(b)) => b,
+                    _ => unreachable!("host kv uploaded above"),
+                },
+                "mode_exact" => &*mode_buf,
+                other => gen
+                    .flag_bufs
+                    .get(other.strip_prefix("useh_").unwrap_or(other))
+                    .map(|(_, b)| b)
                     .or_else(|| self.static_bufs.get(other))
                     .ok_or_else(|| anyhow!("missing decode arg {other}"))?,
             });
         }
-        let out = self.decode.run(&arg_bufs).context("decode step")?;
-        self.unpack_step(out)
+        let replica = self.decode.run_buffers(&arg_bufs).context("decode step")?;
+
+        let out = if self.decode.untupled(&replica) {
+            // Device-resident path: read only the small outputs, keep KV on
+            // the device for the next step.
+            let mut ests = BTreeMap::new();
+            let mut use_eff = BTreeMap::new();
+            for g in GROUPS {
+                let ei = self.decode.output_index(&format!("est_{g}"))?;
+                let ui = self.decode.output_index(&format!("useh_{g}"))?;
+                ests.insert(g.to_string(), buffer_f32(&replica[ei])?);
+                use_eff.insert(g.to_string(), buffer_f32(&replica[ui])?);
+            }
+            let li = self.decode.output_index("logits")?;
+            let logits = buffer_f32(&replica[li])?;
+            self.rt.transfers().count_download();
+            let ki = self.decode.output_index("kv")?;
+            for (i, b) in replica.into_iter().enumerate() {
+                if i == ki {
+                    gen.kv = KvResidence::Device(b);
+                }
+            }
+            StepOut { logits, ests, use_eff }
+        } else {
+            // Tuple fallback: full host decomposition (legacy artifacts).
+            let parts = self.decode.outputs(replica)?;
+            let mut ests = BTreeMap::new();
+            let mut use_eff = BTreeMap::new();
+            for g in GROUPS {
+                ests.insert(g.to_string(), parts.f32_vec(&format!("est_{g}"))?);
+                use_eff.insert(g.to_string(), parts.f32_vec(&format!("useh_{g}"))?);
+            }
+            gen.kv = KvResidence::Host(parts.f32_vec("kv")?);
+            StepOut { logits: parts.f32_vec("logits")?, ests, use_eff }
+        };
+
+        gen.sel.observe(&out.ests, &out.use_eff);
+        gen.pos += 1;
+        gen.steps += 1;
+        Ok(out)
     }
 
-    fn unpack_step(&self, out: Outputs) -> Result<StepOut> {
-        let mut ests = BTreeMap::new();
-        let mut use_eff = BTreeMap::new();
-        for g in GROUPS {
-            ests.insert(g.to_string(), out.f32_vec(&format!("est_{g}"))?);
-            use_eff.insert(g.to_string(), out.f32_vec(&format!("useh_{g}"))?);
+    /// Greedy argmax over logits.  NaN entries are skipped; empty or
+    /// all-NaN logits are an error — silently emitting token 0 (the old
+    /// behavior) corrupted generations downstream.
+    pub fn argmax(logits: &[f32]) -> Result<u32> {
+        if logits.is_empty() {
+            bail!("argmax over empty logits");
         }
-        Ok(StepOut {
-            logits: out.f32_vec("logits")?,
-            kv: out.f32_vec("kv")?,
-            ests,
-            use_eff,
-        })
-    }
-
-    /// Convenience: greedy argmax over logits.
-    pub fn argmax(logits: &[f32]) -> u32 {
-        let mut best = 0usize;
+        let mut best: Option<usize> = None;
         for (i, &v) in logits.iter().enumerate() {
-            if v > logits[best] {
-                best = i;
+            if v.is_nan() {
+                continue;
+            }
+            match best {
+                Some(b) if v <= logits[b] => {}
+                _ => best = Some(i),
             }
         }
-        best as u32
+        best.map(|b| b as u32)
+            .ok_or_else(|| anyhow!("argmax over all-NaN logits"))
     }
 
     /// Host-visible device memory of the uploaded weight stacks (bytes) —
@@ -274,8 +492,50 @@ impl DecodeSession {
         }
         total
     }
+
+    /// Bytes of one KV cache at this model's shape — the per-step traffic
+    /// the device-resident path eliminates.
+    pub fn kv_bytes(&self) -> usize {
+        self.kv_zero.len() * 4
+    }
 }
 
 pub fn wrap_err(e: impl std::fmt::Display) -> anyhow::Error {
     wrap(e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(DecodeSession::argmax(&[0.1, 3.0, -1.0, 2.9]).unwrap(), 1);
+        assert_eq!(DecodeSession::argmax(&[-5.0]).unwrap(), 0);
+    }
+
+    #[test]
+    fn argmax_skips_nan() {
+        assert_eq!(
+            DecodeSession::argmax(&[f32::NAN, 1.0, 2.0, f32::NAN]).unwrap(),
+            2
+        );
+        // NaN in first position must not poison the comparison chain.
+        assert_eq!(DecodeSession::argmax(&[f32::NAN, -1.0]).unwrap(), 1);
+    }
+
+    #[test]
+    fn argmax_rejects_empty_and_all_nan() {
+        assert!(DecodeSession::argmax(&[]).is_err());
+        assert!(DecodeSession::argmax(&[f32::NAN, f32::NAN]).is_err());
+    }
+
+    #[test]
+    fn argmax_handles_neg_infinity() {
+        assert_eq!(
+            DecodeSession::argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY, -1.0])
+                .unwrap(),
+            2
+        );
+    }
 }

@@ -9,10 +9,14 @@
 //!   ([`DeviceArgs`]), and per-step inputs are a few KB of scalars/vectors —
 //!   nothing Python ever runs on the request path.
 //! * Executables are cached per (model, entry) in [`Runtime`].
+//! * Host↔device traffic is metered ([`Runtime::transfers`]): the decode
+//!   hot path must stay O(1) in KV-cache size (DESIGN.md §Perf), and the
+//!   GenState tests assert it through these counters.
 
 pub mod decode;
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -21,16 +25,69 @@ use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 use crate::model::HloEntry;
 use crate::tensor::Tensor;
 
+/// Running totals of host→device uploads (count + bytes) and device→host
+/// literal reads.  Cheap atomics; benches and the GenState residency tests
+/// read deltas around a decode step.
+#[derive(Default)]
+pub struct TransferStats {
+    uploads: AtomicU64,
+    upload_bytes: AtomicU64,
+    downloads: AtomicU64,
+}
+
+/// A point-in-time copy of [`TransferStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransferSnapshot {
+    pub uploads: u64,
+    pub upload_bytes: u64,
+    pub downloads: u64,
+}
+
+impl TransferStats {
+    fn count_upload(&self, bytes: usize) {
+        self.uploads.fetch_add(1, Ordering::Relaxed);
+        self.upload_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn count_download(&self) {
+        self.downloads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> TransferSnapshot {
+        TransferSnapshot {
+            uploads: self.uploads.load(Ordering::Relaxed),
+            upload_bytes: self.upload_bytes.load(Ordering::Relaxed),
+            downloads: self.downloads.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl TransferSnapshot {
+    /// Bytes uploaded since `earlier`.
+    pub fn upload_bytes_since(&self, earlier: &TransferSnapshot) -> u64 {
+        self.upload_bytes.saturating_sub(earlier.upload_bytes)
+    }
+
+    pub fn uploads_since(&self, earlier: &TransferSnapshot) -> u64 {
+        self.uploads.saturating_sub(earlier.uploads)
+    }
+}
+
 /// Process-wide PJRT CPU client + executable cache.
 pub struct Runtime {
     pub client: PjRtClient,
     cache: Mutex<HashMap<String, std::sync::Arc<Exe>>>,
+    transfers: TransferStats,
 }
 
 impl Runtime {
     pub fn new() -> Result<Runtime> {
         let client = PjRtClient::cpu().map_err(wrap)?;
-        Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
+        Ok(Runtime {
+            client,
+            cache: Mutex::new(HashMap::new()),
+            transfers: TransferStats::default(),
+        })
     }
 
     /// Load + compile an HLO-text entry (cached by path).
@@ -55,8 +112,14 @@ impl Runtime {
         Ok(arc)
     }
 
+    /// Host↔device transfer meters (uploads through the helpers below).
+    pub fn transfers(&self) -> &TransferStats {
+        &self.transfers
+    }
+
     // ---- host -> device upload helpers ------------------------------------
     pub fn upload_f32(&self, shape: &[usize], data: &[f32]) -> Result<PjRtBuffer> {
+        self.transfers.count_upload(data.len() * 4);
         self.client.buffer_from_host_buffer(data, shape, None).map_err(wrap)
     }
 
@@ -65,10 +128,12 @@ impl Runtime {
     }
 
     pub fn upload_i32(&self, shape: &[usize], data: &[i32]) -> Result<PjRtBuffer> {
+        self.transfers.count_upload(data.len() * 4);
         self.client.buffer_from_host_buffer(data, shape, None).map_err(wrap)
     }
 
     pub fn upload_u8(&self, shape: &[usize], data: &[u8]) -> Result<PjRtBuffer> {
+        self.transfers.count_upload(data.len());
         self.client
             .buffer_from_host_raw_bytes(ElementType::U8, data, shape, None)
             .map_err(wrap)
@@ -90,17 +155,28 @@ pub struct Exe {
 }
 
 impl Exe {
-    /// Execute with device-resident args; returns the output buffers.
+    /// Execute with device-resident args; returns host-side [`Outputs`].
     ///
-    /// The AOT graphs are lowered with `return_tuple=True`, so PJRT hands
-    /// back a single tuple buffer; [`Outputs`] wraps the host-side literal
-    /// decomposition.
+    /// Convenience wrapper over [`Exe::run_buffers`] for callers that want
+    /// every output on the host.  The decode hot path uses `run_buffers`
+    /// directly so the KV cache never leaves the device.
     pub fn run(&self, args: &[&PjRtBuffer]) -> Result<Outputs> {
-        let mut res = self.exe.execute_b(args).map_err(wrap)?;
-        let replica = res
-            .pop()
-            .ok_or_else(|| anyhow!("no replica outputs"))?;
+        let replica = self.run_buffers(args)?;
         outputs_from(replica, &self.entry)
+    }
+
+    /// Execute and return the raw per-replica output buffers, still on the
+    /// device.  When the AOT graph was lowered untupled (one leaf buffer
+    /// per manifest output) the caller can keep any of them device-resident
+    /// and feed them back as inputs to the next execution — the mechanism
+    /// behind [`decode::GenState`]'s O(1) per-token host traffic.
+    pub fn run_buffers(&self, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        let mut res = self.exe.execute_b(args).map_err(wrap)?;
+        let replica = res.pop().ok_or_else(|| anyhow!("no replica outputs"))?;
+        if replica.is_empty() {
+            bail!("executable returned no buffers");
+        }
+        Ok(replica)
     }
 
     /// Execute with host literals (tests / one-shot calls).
@@ -108,6 +184,31 @@ impl Exe {
         let mut res = self.exe.execute(args).map_err(wrap)?;
         let replica = res.pop().ok_or_else(|| anyhow!("no replica outputs"))?;
         outputs_from(replica, &self.entry)
+    }
+
+    /// Decompose an already-executed replica into host-side [`Outputs`]
+    /// (the fallback path when the graph was lowered as a single tuple and
+    /// device residency is impossible).
+    pub fn outputs(&self, replica: Vec<PjRtBuffer>) -> Result<Outputs> {
+        outputs_from(replica, &self.entry)
+    }
+
+    /// Position of a named output among the graph's result leaves.
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.entry
+            .outputs
+            .iter()
+            .position(|n| n == name)
+            .ok_or_else(|| {
+                anyhow!("no output named '{name}' (have {:?})", self.entry.outputs)
+            })
+    }
+
+    /// True when this executable hands back one device buffer per manifest
+    /// output (untupled lowering) — the precondition for keeping outputs
+    /// device-resident across steps.
+    pub fn untupled(&self, replica: &[PjRtBuffer]) -> bool {
+        replica.len() == self.entry.outputs.len() && replica.len() > 1
     }
 }
 
@@ -174,4 +275,27 @@ pub fn wrap(e: impl std::fmt::Display) -> anyhow::Error {
 /// Literal -> host f32 vec (convenience used across eval harnesses).
 pub fn literal_f32(l: &Literal) -> Result<Vec<f32>> {
     l.to_vec::<f32>().map_err(wrap)
+}
+
+/// Device buffer -> host f32 vec (small per-step outputs: logits, estimates).
+pub fn buffer_f32(b: &PjRtBuffer) -> Result<Vec<f32>> {
+    b.to_literal_sync().map_err(wrap)?.to_vec::<f32>().map_err(wrap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_snapshot_deltas() {
+        let t = TransferStats::default();
+        let a = t.snapshot();
+        t.count_upload(128);
+        t.count_upload(64);
+        t.count_download();
+        let b = t.snapshot();
+        assert_eq!(b.uploads_since(&a), 2);
+        assert_eq!(b.upload_bytes_since(&a), 192);
+        assert_eq!(b.downloads - a.downloads, 1);
+    }
 }

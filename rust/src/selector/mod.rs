@@ -216,6 +216,19 @@ impl<'a> SelectorState<'a> {
         self.steps += 1;
     }
 
+    /// Re-bind this state to a different engine configuration of the same
+    /// model (mid-stream target re-selection, ServingCore).  Accumulated
+    /// effective-bit statistics and the pending async flags carry over —
+    /// the flags are per-layer booleans whose meaning ("run this layer's
+    /// async groups at the high candidate next step") is config-independent;
+    /// the next [`SelectorState::observe`] re-derives them against the new
+    /// thresholds.
+    pub fn rebind(&mut self, cfg: &'a ModelConfig, ec: &'a EngineConfig) {
+        debug_assert_eq!(cfg.n_layers, self.cfg.n_layers, "rebind across models");
+        self.cfg = cfg;
+        self.ec = ec;
+    }
+
     /// Mean effective bitwidth over the observed decode steps.
     pub fn effective_bits(&self) -> f64 {
         if self.steps == 0 {

@@ -5,28 +5,43 @@
 //! Threading model: PJRT handles are `!Send` (FFI pointers), so the
 //! [`ServingEngine`] lives on ONE executor thread; per-connection I/O
 //! threads parse HTTP and exchange plain strings with the executor over
-//! channels.  Model execution is serialized anyway — single device,
-//! batch-1 decode — so this costs no throughput.
+//! channels.  The executor runs a [`ServingCore`]: concurrent `/generate`
+//! requests are admitted mid-flight and interleaved **per token** (EDF
+//! when a `deadline_ms` is given, FIFO tie-break otherwise), so a tight-
+//! deadline request no longer waits behind a whole best-effort generation.
 //!
 //! Endpoints:
 //!   POST /generate  {"prompt": str, "max_new"?: int, "qos_ms_per_token"?: f,
-//!                    "target"?: f}  -> {"text", "target", "effective_bits",
-//!                                       "tpot_ms", "output_tokens"}
+//!                    "deadline_ms"?: f, "target"?: f}
+//!                   -> {"text", "target", "effective_bits", "tpot_ms",
+//!                       "ttft_ms", "retargets", "output_tokens"}
 //!   GET  /health    -> {"status": "ok", "targets": [...]}
 //!   GET  /metrics   -> summary JSON
+//!
+//! Hardening: request bodies are capped at [`MAX_BODY_BYTES`]; a POST
+//! without a parseable `Content-Length`, or with one over the cap, is
+//! rejected with 413 *before* any allocation; wrong-method on a known
+//! path returns 405 with an `Allow` header (404 is reserved for unknown
+//! paths).
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::coordinator::qos::{QosBudget, UtilizationSim};
-use crate::coordinator::sched::Request;
-use crate::coordinator::service::ServingEngine;
+use crate::coordinator::sched::{Request, RequestQueue, SchedPolicy};
+use crate::coordinator::service::{CoreEvent, ServingCore, ServingEngine,
+                                  RESELECT_EVERY};
 use crate::util::json::Json;
+
+/// Hard cap on request-body size; larger Content-Lengths are rejected with
+/// 413 before any buffer is allocated.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
 
 /// One parsed HTTP request handed to the executor thread.
 struct Work {
@@ -34,6 +49,15 @@ struct Work {
     path: String,
     body: String,
     reply: Sender<String>,
+}
+
+/// What a generate request is waiting on inside the executor.
+struct Pending {
+    reply: Sender<String>,
+    utilization: f64,
+    /// Target precision pinned by the client (bypasses the QoS policy and
+    /// mid-stream re-selection).
+    pinned: Option<f64>,
 }
 
 pub struct Server {
@@ -52,23 +76,22 @@ impl Server {
     }
 
     /// Serve until the stop flag flips.
-    pub fn serve(mut self, addr: &str) -> Result<()> {
+    pub fn serve(self, addr: &str) -> Result<()> {
+        let Server { engine, mut util, stop } = self;
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         listener.set_nonblocking(true)?;
         eprintln!("[server] listening on {addr}");
         let (tx, rx) = channel::<Work>();
-        let stop = self.stop.clone();
+        let acceptor_stop = stop.clone();
 
         // Acceptor thread: sockets + HTTP parsing only (Send-safe).
         let acceptor = std::thread::spawn(move || {
-            let mut next_id = 0u64;
             loop {
-                if stop.load(Ordering::Relaxed) {
+                if acceptor_stop.load(Ordering::Relaxed) {
                     break;
                 }
                 match listener.accept() {
                     Ok((stream, _)) => {
-                        next_id += 1;
                         let tx = tx.clone();
                         std::thread::spawn(move || {
                             let _ = handle_conn(stream, tx);
@@ -81,91 +104,225 @@ impl Server {
                 }
             }
             drop(tx);
-            let _ = next_id;
         });
 
-        // Executor loop: owns the engine (and all !Send PJRT handles).
+        // Executor loop: owns the engine (and all !Send PJRT handles) and a
+        // token-interleaved ServingCore.  EDF so deadlined requests preempt
+        // at token boundaries; best-effort requests FIFO among themselves.
+        let mut core = ServingCore::new(&engine, SchedPolicy::Edf);
+        let mut queue = RequestQueue::new(SchedPolicy::Edf);
+        let mut pending: HashMap<u64, Pending> = HashMap::new();
         let mut req_id = 0u64;
         loop {
-            if self.stop.load(Ordering::Relaxed) {
+            if stop.load(Ordering::Relaxed) {
                 break;
             }
-            match rx.recv_timeout(std::time::Duration::from_millis(50)) {
-                Ok(work) => {
-                    req_id += 1;
-                    let resp = self.dispatch(req_id, &work);
-                    let _ = work.reply.send(resp);
+            // Ingest: block briefly when idle, otherwise drain non-blocking
+            // so decode steps keep flowing between arrivals.
+            let idle = !core.has_active() && queue.is_empty();
+            if idle {
+                match rx.recv_timeout(std::time::Duration::from_millis(50)) {
+                    Ok(work) => {
+                        req_id += 1;
+                        ingest(&engine, &core, &mut queue, &mut pending,
+                               &mut util, req_id, work);
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
                 }
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            drain_rx(&rx, &engine, &core, &mut queue, &mut pending, &mut util,
+                     &mut req_id);
+
+            // Admission: pull from the queue while slots are free.
+            while core.has_capacity() && !queue.is_empty() {
+                let Some(r) = queue.pop() else { break };
+                let id = r.id;
+                let u = util.tick();
+                let mut pinned = None;
+                if let Some(p) = pending.get_mut(&id) {
+                    p.utilization = u;
+                    pinned = p.pinned;
+                }
+                let admitted = match pinned {
+                    Some(t) => core.admit_pinned(r, t),
+                    None => core.admit(r, u),
+                };
+                if let Err(e) = admitted {
+                    // Client-side validity was checked at ingest; a failure
+                    // here (prefill/runtime) is a server fault.
+                    respond(&mut pending, id, error_json(500, &format!("{e:#}")));
+                }
+            }
+            // Mid-stream target re-selection on the token cadence.
+            if core.token_clock() % RESELECT_EVERY == 0 {
+                let u = util.tick();
+                core.reselect(u);
+            }
+            // One token of one generation.
+            match core.step() {
+                Ok(events) => {
+                    for ev in events {
+                        match ev {
+                            CoreEvent::Done(o) => {
+                                let u = pending
+                                    .get(&o.id)
+                                    .map(|p| p.utilization)
+                                    .unwrap_or(0.0);
+                                let body = ok_json(&outcome_json(&o, u));
+                                respond(&mut pending, o.id, body);
+                            }
+                            CoreEvent::Failed { id, error } => {
+                                respond(&mut pending, id, error_json(500, &error));
+                            }
+                            CoreEvent::Token { .. } => {}
+                        }
+                    }
+                }
+                Err(e) => eprintln!("[server] core step error: {e:#}"),
             }
         }
         let _ = acceptor.join();
         Ok(())
     }
+}
 
-    fn dispatch(&mut self, id: u64, work: &Work) -> String {
-        match (work.method.as_str(), work.path.as_str()) {
-            ("GET", "/health") => {
-                let mut j = Json::obj();
-                j.set("status", "ok");
-                j.set("targets", Json::Arr(
-                    self.engine.targets().iter().map(|&t| Json::Num(t)).collect()));
-                ok_json(&j)
-            }
-            ("GET", "/metrics") => {
-                let s = self.engine.metrics.summary();
-                let mut j = Json::obj();
-                j.set("requests", s.n)
-                    .set("mean_tpot_ms", s.mean_tpot_ms)
-                    .set("p90_total_ms", s.p90_total_ms)
-                    .set("p99_total_ms", s.p99_total_ms)
-                    .set("mean_eff_bits", s.mean_eff_bits)
-                    .set("p90_eff_bits", s.p90_eff_bits)
-                    .set("p99_eff_bits", s.p99_eff_bits)
-                    .set("throughput_tok_s", s.throughput_tok_s);
-                ok_json(&j)
-            }
-            ("POST", "/generate") => match self.generate(id, &work.body) {
-                Ok(j) => ok_json(&j),
-                Err(e) => error_json(400, &format!("{e:#}")),
-            },
-            _ => error_json(404, "not found"),
-        }
+fn drain_rx(rx: &Receiver<Work>, engine: &ServingEngine, core: &ServingCore<'_>,
+            queue: &mut RequestQueue, pending: &mut HashMap<u64, Pending>,
+            util: &mut UtilizationSim, req_id: &mut u64) {
+    while let Ok(work) = rx.try_recv() {
+        *req_id += 1;
+        ingest(engine, core, queue, pending, util, *req_id, work);
     }
+}
 
-    fn generate(&mut self, id: u64, body: &str) -> Result<Json> {
-        let req_j = Json::parse(body).context("request body")?;
-        let prompt = req_j.str_of("prompt")?;
-        let max_new = req_j.get("max_new").and_then(|v| v.as_usize().ok()).unwrap_or(48);
-        let qos = req_j
-            .get("qos_ms_per_token")
-            .and_then(|v| v.as_f64().ok())
-            .map(QosBudget::tight)
-            .unwrap_or_else(QosBudget::best_effort);
-        let target = req_j.get("target").and_then(|v| v.as_f64().ok());
-        let request = Request::new(id, prompt, max_new, qos);
-        let u = self.util.tick();
-        let outcome = match target {
-            Some(t) => self.engine.handle_at(&request, t)?,
-            None => self.engine.handle(&request, u)?,
-        };
-        let mut j = Json::obj();
-        j.set("id", outcome.id as i64)
-            .set("text", outcome.text.as_str())
-            .set("target", outcome.target_precision)
-            .set("effective_bits", outcome.effective_bits)
-            .set("utilization", u)
-            .set("prefill_ms", outcome.prefill_ms)
-            .set("tpot_ms", outcome.decode_ms / outcome.output_tokens.max(1) as f64)
-            .set("output_tokens", outcome.output_tokens);
-        Ok(j)
+/// Classify one parsed request: answer immediate endpoints inline, enqueue
+/// generate work, reject everything else with the right status code.
+fn ingest(engine: &ServingEngine, core: &ServingCore<'_>,
+          queue: &mut RequestQueue, pending: &mut HashMap<u64, Pending>,
+          util: &mut UtilizationSim, id: u64, work: Work) {
+    let resp = match route(&work.method, &work.path) {
+        Route::Health => {
+            let mut j = Json::obj();
+            j.set("status", "ok");
+            j.set("targets", Json::Arr(
+                engine.targets().iter().map(|&t| Json::Num(t)).collect()));
+            j.set("active", core.active_len() as i64)
+                .set("queued", queue.len() as i64);
+            ok_json(&j)
+        }
+        Route::Metrics => {
+            let s = engine.metrics.summary();
+            let mut j = Json::obj();
+            j.set("requests", s.n)
+                .set("mean_tpot_ms", s.mean_tpot_ms)
+                .set("p90_total_ms", s.p90_total_ms)
+                .set("p99_total_ms", s.p99_total_ms)
+                .set("mean_eff_bits", s.mean_eff_bits)
+                .set("p90_eff_bits", s.p90_eff_bits)
+                .set("p99_eff_bits", s.p99_eff_bits)
+                .set("throughput_tok_s", s.throughput_tok_s);
+            ok_json(&j)
+        }
+        Route::Generate => match parse_generate(id, &work.body) {
+            // Validate the prompt here so admission failures later can be
+            // classified as server faults (500), not client errors.
+            Ok((request, _)) if engine.tokenizer.encode(&request.prompt)
+                .is_empty() => error_json(400, "empty prompt"),
+            Ok((request, pinned)) => {
+                pending.insert(id, Pending {
+                    reply: work.reply,
+                    utilization: util.current(),
+                    pinned,
+                });
+                queue.push(request);
+                return; // replied later, from the core events
+            }
+            Err(e) => error_json(400, &format!("{e:#}")),
+        },
+        Route::WrongMethod(allow) => {
+            error_json_with(405, "Method Not Allowed",
+                            &format!("method {} not allowed", work.method),
+                            &[("Allow", allow)])
+        }
+        Route::NotFound => error_json(404, "not found"),
+    };
+    let _ = work.reply.send(resp);
+}
+
+fn respond(pending: &mut HashMap<u64, Pending>, id: u64, body: String) {
+    if let Some(p) = pending.remove(&id) {
+        let _ = p.reply.send(body);
+    }
+}
+
+fn parse_generate(id: u64, body: &str) -> Result<(Request, Option<f64>)> {
+    let req_j = Json::parse(body).context("request body")?;
+    let prompt = req_j.str_of("prompt")?;
+    let max_new = req_j.get("max_new").and_then(|v| v.as_usize().ok()).unwrap_or(48);
+    let qos = req_j
+        .get("qos_ms_per_token")
+        .and_then(|v| v.as_f64().ok())
+        .map(QosBudget::tight)
+        .unwrap_or_else(QosBudget::best_effort);
+    let target = req_j.get("target").and_then(|v| v.as_f64().ok());
+    let mut request = Request::new(id, prompt, max_new, qos);
+    if let Some(d) = req_j.get("deadline_ms").and_then(|v| v.as_f64().ok()) {
+        request = request.with_deadline(d);
+    }
+    Ok((request, target))
+}
+
+fn outcome_json(o: &crate::coordinator::service::ServeOutcome, u: f64) -> Json {
+    let mut j = Json::obj();
+    j.set("id", o.id as i64)
+        .set("text", o.text.as_str())
+        .set("target", o.target_precision)
+        .set("effective_bits", o.effective_bits)
+        .set("utilization", u)
+        .set("prefill_ms", o.prefill_ms)
+        .set("ttft_ms", o.ttft_ms)
+        .set("tpot_ms", o.decode_ms / o.output_tokens.max(1) as f64)
+        .set("retargets", o.retargets as i64)
+        .set("output_tokens", o.output_tokens);
+    j
+}
+
+// ---------------------------------------------------------------------------
+// Routing.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Route {
+    Health,
+    Metrics,
+    Generate,
+    /// Known path, wrong method; payload = value for the `Allow` header.
+    WrongMethod(&'static str),
+    NotFound,
+}
+
+fn route(method: &str, path: &str) -> Route {
+    match (method, path) {
+        ("GET", "/health") => Route::Health,
+        ("GET", "/metrics") => Route::Metrics,
+        ("POST", "/generate") => Route::Generate,
+        (_, "/health") | (_, "/metrics") => Route::WrongMethod("GET"),
+        (_, "/generate") => Route::WrongMethod("POST"),
+        _ => Route::NotFound,
     }
 }
 
 fn handle_conn(mut stream: TcpStream, tx: Sender<Work>) -> Result<()> {
     stream.set_nonblocking(false)?;
-    let (method, path, body) = read_request(&mut stream)?;
+    let (method, path, body) = match read_request(&mut stream)? {
+        Parsed::Req { method, path, body } => (method, path, body),
+        Parsed::Reject { code, reason, msg } => {
+            let resp = error_json_with(code, reason, &msg, &[]);
+            stream.write_all(resp.as_bytes())?;
+            return Ok(());
+        }
+    };
     let (reply_tx, reply_rx) = channel();
     tx.send(Work { method, path, body, reply: reply_tx })
         .map_err(|_| anyhow::anyhow!("executor gone"))?;
@@ -180,7 +337,15 @@ fn handle_conn(mut stream: TcpStream, tx: Sender<Work>) -> Result<()> {
 // Minimal HTTP/1.1 plumbing.
 // ---------------------------------------------------------------------------
 
-fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
+/// Outcome of parsing one request off the wire.
+enum Parsed {
+    Req { method: String, path: String, body: String },
+    /// Reject before touching the executor (and before allocating a body
+    /// buffer): malformed line, missing/oversized Content-Length.
+    Reject { code: u32, reason: &'static str, msg: String },
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<Parsed> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut line = String::new();
     reader.read_line(&mut line)?;
@@ -188,9 +353,13 @@ fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("").to_string();
     if method.is_empty() || path.is_empty() {
-        bail!("malformed request line: {line:?}");
+        return Ok(Parsed::Reject {
+            code: 400,
+            reason: "Bad Request",
+            msg: format!("malformed request line: {line:?}"),
+        });
     }
-    let mut content_len = 0usize;
+    let mut content_len: Option<usize> = None;
     loop {
         let mut h = String::new();
         reader.read_line(&mut h)?;
@@ -199,20 +368,54 @@ fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
             break;
         }
         if let Some(v) = t.to_ascii_lowercase().strip_prefix("content-length:") {
-            content_len = v.trim().parse().unwrap_or(0);
+            content_len = v.trim().parse().ok();
         }
     }
+    let content_len = match (method.as_str(), content_len) {
+        // Bodyless methods may omit the header entirely.
+        ("GET", None) | ("HEAD", None) | ("DELETE", None) => 0,
+        // A body-bearing request MUST declare a parseable length — we
+        // never allocate from an unbounded/undeclared body.
+        (_, None) => {
+            return Ok(Parsed::Reject {
+                code: 413,
+                reason: "Payload Too Large",
+                msg: "missing or unparseable Content-Length".into(),
+            })
+        }
+        (_, Some(n)) if n > MAX_BODY_BYTES => {
+            return Ok(Parsed::Reject {
+                code: 413,
+                reason: "Payload Too Large",
+                msg: format!("Content-Length {n} exceeds cap {MAX_BODY_BYTES}"),
+            })
+        }
+        (_, Some(n)) => n,
+    };
     let mut body = vec![0u8; content_len];
     if content_len > 0 {
         reader.read_exact(&mut body)?;
     }
-    Ok((method, path, String::from_utf8_lossy(&body).into_owned()))
+    Ok(Parsed::Req {
+        method,
+        path,
+        body: String::from_utf8_lossy(&body).into_owned(),
+    })
 }
 
 fn http_response(code: u32, reason: &str, body: &str) -> String {
+    http_response_with(code, reason, body, &[])
+}
+
+fn http_response_with(code: u32, reason: &str, body: &str,
+                      extra_headers: &[(&str, &str)]) -> String {
+    let mut headers = String::new();
+    for (k, v) in extra_headers {
+        headers.push_str(&format!("{k}: {v}\r\n"));
+    }
     format!(
         "HTTP/1.1 {code} {reason}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+         {headers}Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     )
 }
@@ -222,9 +425,14 @@ fn ok_json(j: &Json) -> String {
 }
 
 fn error_json(code: u32, msg: &str) -> String {
+    error_json_with(code, "Error", msg, &[])
+}
+
+fn error_json_with(code: u32, reason: &str, msg: &str,
+                   extra_headers: &[(&str, &str)]) -> String {
     let mut j = Json::obj();
     j.set("error", msg);
-    http_response(code, "Error", &j.dump())
+    http_response_with(code, reason, &j.dump(), extra_headers)
 }
 
 /// Tiny blocking HTTP client for examples / integration tests.
@@ -287,23 +495,97 @@ mod tests {
     }
 
     #[test]
-    fn request_parse_roundtrip() {
-        // Exercise read_request via a local socketpair.
+    fn routing_known_paths_and_methods() {
+        assert_eq!(route("GET", "/health"), Route::Health);
+        assert_eq!(route("GET", "/metrics"), Route::Metrics);
+        assert_eq!(route("POST", "/generate"), Route::Generate);
+        // Wrong method on a known path -> 405 with the right Allow value.
+        assert_eq!(route("POST", "/health"), Route::WrongMethod("GET"));
+        assert_eq!(route("DELETE", "/metrics"), Route::WrongMethod("GET"));
+        assert_eq!(route("GET", "/generate"), Route::WrongMethod("POST"));
+        // Unknown path -> 404.
+        assert_eq!(route("GET", "/nope"), Route::NotFound);
+        assert_eq!(route("POST", "/admin"), Route::NotFound);
+    }
+
+    #[test]
+    fn wrong_method_response_carries_allow_header() {
+        let r = error_json_with(405, "Method Not Allowed", "nope",
+                                &[("Allow", "POST")]);
+        assert!(r.starts_with("HTTP/1.1 405 Method Not Allowed\r\n"));
+        assert!(r.contains("Allow: POST\r\n"));
+    }
+
+    fn roundtrip(raw: &[u8]) -> Parsed {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
+        let raw = raw.to_vec();
         let t = std::thread::spawn(move || {
             let mut s = TcpStream::connect(addr).unwrap();
-            s.write_all(
-                b"POST /generate HTTP/1.1\r\nContent-Length: 13\r\n\r\n{\"prompt\":\"x\"}",
-            )
-            .unwrap();
+            s.write_all(&raw).unwrap();
             s
         });
         let (mut stream, _) = listener.accept().unwrap();
-        let (m, p, b) = read_request(&mut stream).unwrap();
-        assert_eq!(m, "POST");
-        assert_eq!(p, "/generate");
-        assert_eq!(b, "{\"prompt\":\"x\""); // 13 bytes of the 14-byte body
+        let p = read_request(&mut stream).unwrap();
         let _ = t.join();
+        p
+    }
+
+    #[test]
+    fn request_parse_roundtrip() {
+        match roundtrip(
+            b"POST /generate HTTP/1.1\r\nContent-Length: 13\r\n\r\n{\"prompt\":\"x\"}",
+        ) {
+            Parsed::Req { method, path, body } => {
+                assert_eq!(method, "POST");
+                assert_eq!(path, "/generate");
+                assert_eq!(body, "{\"prompt\":\"x\""); // 13 of the 14 bytes
+            }
+            Parsed::Reject { .. } => panic!("expected parse"),
+        }
+    }
+
+    #[test]
+    fn post_without_content_length_is_413() {
+        match roundtrip(b"POST /generate HTTP/1.1\r\n\r\n") {
+            Parsed::Reject { code, .. } => assert_eq!(code, 413),
+            Parsed::Req { .. } => panic!("expected reject"),
+        }
+    }
+
+    #[test]
+    fn oversized_content_length_is_413_without_allocating() {
+        // 8 GiB declared; must reject from the header alone.
+        let raw = format!(
+            "POST /generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            8usize << 30
+        );
+        match roundtrip(raw.as_bytes()) {
+            Parsed::Reject { code, msg, .. } => {
+                assert_eq!(code, 413);
+                assert!(msg.contains("exceeds cap"));
+            }
+            Parsed::Req { .. } => panic!("expected reject"),
+        }
+    }
+
+    #[test]
+    fn get_without_content_length_still_parses() {
+        match roundtrip(b"GET /health HTTP/1.1\r\n\r\n") {
+            Parsed::Req { method, path, body } => {
+                assert_eq!(method, "GET");
+                assert_eq!(path, "/health");
+                assert!(body.is_empty());
+            }
+            Parsed::Reject { .. } => panic!("expected parse"),
+        }
+    }
+
+    #[test]
+    fn malformed_request_line_is_400() {
+        match roundtrip(b"\r\n\r\n") {
+            Parsed::Reject { code, .. } => assert_eq!(code, 400),
+            Parsed::Req { .. } => panic!("expected reject"),
+        }
     }
 }
