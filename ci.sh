@@ -6,5 +6,6 @@
 set -eu
 cd "$(dirname "$0")/rust"
 cargo fmt --check
+cargo clippy --all-targets -- -D warnings
 cargo build --release
 cargo test -q

@@ -21,8 +21,8 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
     let rt = Arc::new(Runtime::new()?);
-    let engine = ServingEngine::load(&rt, "dpl-tiny", 5,
-                                     &["3.25", "3.50", "4.00", "4.50", "4.75"])?;
+    let mut engine = ServingEngine::load(&rt, "dpl-tiny", 5,
+                                         &["3.25", "3.50", "4.00", "4.50", "4.75"])?;
     println!("adaptation set (target precision -> measured TPOT):");
     for (t, ms) in &engine.policy.options {
         println!("  {t:.2} bits -> {ms:.1} ms/token");
@@ -61,5 +61,33 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\n{}", engine.metrics.summary().report());
+
+    // The memory envelope tightens (another app claimed RAM): swap the
+    // adaptation set for a leaner one.  Retired sessions are rebound in
+    // place via the delta-materialization path — only layers whose bits
+    // differ re-dequantize and re-upload (DESIGN.md §Perf).
+    let rep = engine.reconfigure(&["3.25", "3.50", "3.75"])?;
+    let ws = engine.weight_cache_stats();
+    println!(
+        "\nreconfigured adaptation set -> [3.25, 3.50, 3.75]: \
+         {} stacks rebuilt, {} layers re-materialized; weight cache \
+         {} hits / {} misses / {:.1} MB dequantized",
+        rep.stacks_rebuilt, rep.layers_changed, ws.hits, ws.misses,
+        ws.bytes_dequantized as f64 / 1e6
+    );
+    let mut tail = make_queue(
+        SchedPolicy::Edf,
+        (0..3usize).map(|i| {
+            Request::new(1000 + i as u64, prompts[i % prompts.len()].prompt.clone(),
+                         16, QosBudget::tight(120.0))
+        }),
+    );
+    let mut util2 = UtilizationSim::new(29, 0.4);
+    let outcomes = engine.run_queue(&mut tail, &mut util2)?;
+    println!("post-reconfigure outcomes:");
+    for o in &outcomes {
+        println!("  req {:>4}  target {:.2}  eff-bits {:.3}  {} toks",
+                 o.id, o.target_precision, o.effective_bits, o.output_tokens);
+    }
     Ok(())
 }

@@ -1,0 +1,280 @@
+//! Byte-budgeted LRU cache of materialized weight slabs.
+//!
+//! DP-LLM changes per-layer precision at runtime; every change used to pay
+//! a full re-dequantization and re-upload of all 7 × L × {wl, wh} stacks
+//! even when one layer flipped bits.  This cache makes precision switching
+//! incremental: one entry per (group, layer, bits) holds the host f32 slab
+//! AND the device buffer it was uploaded to, so a rebind touches only the
+//! layers whose assignment actually changed (DESIGN.md §Perf, delta-rebind
+//! protocol).  The type is generic over the device-buffer payload `B` so
+//! the LRU/accounting logic is unit-testable without a PJRT device
+//! (`B = ()`); the runtime instantiates it with `B = PjRtBuffer`.
+//!
+//! Budget semantics: `budget_bytes` caps the **host** slab bytes resident
+//! in the cache (the device mirrors are 1:1, so device residency is
+//! bounded by the same figure).  Eviction is strict LRU.  A single slab
+//! larger than the whole budget is still admitted — the materializer must
+//! be able to serve it — leaving the cache transiently over budget until
+//! the next insert evicts it.
+//!
+//! Counters (hits / misses / evictions / bytes dequantized) are exposed
+//! via [`MaterializeCache::snapshot`] next to the host↔device meters of
+//! `Runtime::transfers()`; the O(k)-rebind tests assert through both.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+/// One (group, layer, bits) materialization.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct MatKey {
+    pub group: String,
+    pub layer: usize,
+    pub bits: u8,
+}
+
+struct MatEntry<B> {
+    host: Rc<Vec<f32>>,
+    device: Rc<B>,
+    bytes: usize,
+    stamp: u64,
+}
+
+/// Point-in-time counters of a [`MaterializeCache`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MatSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Host bytes produced by dequantization (misses only).
+    pub bytes_dequantized: u64,
+    /// Host bytes currently resident.
+    pub resident_bytes: usize,
+    pub entries: usize,
+}
+
+pub struct MaterializeCache<B> {
+    map: HashMap<MatKey, MatEntry<B>>,
+    budget: usize,
+    resident: usize,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    bytes_dequantized: u64,
+}
+
+impl<B> MaterializeCache<B> {
+    pub fn new(budget_bytes: usize) -> MaterializeCache<B> {
+        MaterializeCache {
+            map: HashMap::new(),
+            budget: budget_bytes,
+            resident: 0,
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            bytes_dequantized: 0,
+        }
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    pub fn contains(&self, key: &MatKey) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Look up `key`; on miss, run `make` (dequantize + upload) and admit
+    /// the result, evicting LRU entries past the byte budget.  Returns the
+    /// host slab and device buffer — `Rc`s, so an evicted-but-still-in-use
+    /// slab stays alive for its holder and frees when the last user drops.
+    pub fn get_or_materialize(
+        &mut self,
+        key: &MatKey,
+        make: impl FnOnce(&MatKey) -> Result<(Vec<f32>, B)>,
+    ) -> Result<(Rc<Vec<f32>>, Rc<B>)> {
+        self.clock += 1;
+        if let Some(e) = self.map.get_mut(key) {
+            e.stamp = self.clock;
+            self.hits += 1;
+            return Ok((e.host.clone(), e.device.clone()));
+        }
+        let (host, device) = make(key)?;
+        let bytes = host.len() * 4;
+        self.misses += 1;
+        self.bytes_dequantized += bytes as u64;
+        self.evict_to_fit(bytes);
+        let entry = MatEntry {
+            host: Rc::new(host),
+            device: Rc::new(device),
+            bytes,
+            stamp: self.clock,
+        };
+        let out = (entry.host.clone(), entry.device.clone());
+        self.resident += bytes;
+        self.map.insert(key.clone(), entry);
+        Ok(out)
+    }
+
+    fn evict_to_fit(&mut self, incoming: usize) {
+        while self.resident + incoming > self.budget && !self.map.is_empty() {
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| k.clone())
+                .expect("nonempty map has a minimum");
+            let e = self.map.remove(&victim).expect("victim present");
+            self.resident -= e.bytes;
+            self.evictions += 1;
+        }
+    }
+
+    pub fn snapshot(&self) -> MatSnapshot {
+        MatSnapshot {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            bytes_dequantized: self.bytes_dequantized,
+            resident_bytes: self.resident,
+            entries: self.map.len(),
+        }
+    }
+}
+
+/// Indices where two per-layer bit assignments differ — the layers a
+/// delta rebind must re-materialize.
+pub fn changed_layers(old: &[u8], new: &[u8]) -> Vec<usize> {
+    old.iter()
+        .zip(new)
+        .enumerate()
+        .filter(|(_, (a, b))| a != b)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SLAB: usize = 64; // f32 elements per test slab (256 bytes)
+
+    fn key(layer: usize, bits: u8) -> MatKey {
+        MatKey { group: "wq".into(), layer, bits }
+    }
+
+    fn fill(c: &mut MaterializeCache<()>, layer: usize, bits: u8) {
+        c.get_or_materialize(&key(layer, bits), |_| Ok((vec![0f32; SLAB], ())))
+            .unwrap();
+    }
+
+    #[test]
+    fn hit_on_unchanged_key_skips_materialization() {
+        let mut c = MaterializeCache::<()>::new(1 << 20);
+        fill(&mut c, 0, 4);
+        let (host, _) = c
+            .get_or_materialize(&key(0, 4), |_| {
+                panic!("cache hit must not re-materialize")
+            })
+            .unwrap();
+        assert_eq!(host.len(), SLAB);
+        let s = c.snapshot();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.bytes_dequantized, (SLAB * 4) as u64);
+    }
+
+    #[test]
+    fn same_layer_different_bits_is_a_distinct_entry() {
+        let mut c = MaterializeCache::<()>::new(1 << 20);
+        fill(&mut c, 0, 3);
+        fill(&mut c, 0, 4);
+        let s = c.snapshot();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 2, 2));
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget() {
+        let bytes = SLAB * 4;
+        let mut c = MaterializeCache::<()>::new(3 * bytes);
+        fill(&mut c, 0, 4);
+        fill(&mut c, 1, 4);
+        fill(&mut c, 2, 4);
+        assert_eq!(c.snapshot().entries, 3);
+        // Touch layer 0 so layer 1 becomes LRU, then overflow.
+        fill(&mut c, 0, 4);
+        fill(&mut c, 3, 4);
+        let s = c.snapshot();
+        assert!(s.resident_bytes <= c.budget_bytes(), "over budget: {s:?}");
+        assert_eq!(s.entries, 3);
+        assert_eq!(s.evictions, 1);
+        assert!(c.contains(&key(0, 4)), "recently-touched entry evicted");
+        assert!(!c.contains(&key(1, 4)), "LRU entry survived");
+        assert!(c.contains(&key(2, 4)) && c.contains(&key(3, 4)));
+    }
+
+    #[test]
+    fn oversized_slab_still_admitted() {
+        let mut c = MaterializeCache::<()>::new(8); // budget below one slab
+        fill(&mut c, 0, 4);
+        assert_eq!(c.snapshot().entries, 1, "materializer must still serve");
+        fill(&mut c, 1, 4);
+        let s = c.snapshot();
+        assert_eq!(s.entries, 1, "previous oversized entry must be evicted");
+        assert_eq!(s.evictions, 1);
+    }
+
+    /// The counter-based delta-rebind property: re-materializing a stack
+    /// after k of L layers changed bits runs the dequantizer for exactly
+    /// the k changed layers — everything else is a cache hit, i.e. O(k)
+    /// work and O(k) fresh uploads, not O(L).
+    #[test]
+    fn delta_rebind_rematerializes_exactly_changed_layers() {
+        let l = 12usize;
+        let old_bits = vec![4u8; l];
+        let mut new_bits = old_bits.clone();
+        new_bits[2] = 5;
+        new_bits[7] = 3;
+        new_bits[11] = 6;
+        let k = changed_layers(&old_bits, &new_bits).len();
+        assert_eq!(k, 3);
+
+        let mut c = MaterializeCache::<()>::new(1 << 20);
+        let mut materializations = 0usize;
+        let mut stack = |cache: &mut MaterializeCache<()>, bits: &[u8],
+                         count: &mut usize| {
+            for (layer, &b) in bits.iter().enumerate() {
+                cache
+                    .get_or_materialize(&key(layer, b), |_| {
+                        *count += 1;
+                        Ok((vec![0f32; SLAB], ()))
+                    })
+                    .unwrap();
+            }
+        };
+        stack(&mut c, &old_bits, &mut materializations);
+        assert_eq!(materializations, l);
+        let before = c.snapshot();
+
+        // The rebind: only the 3 changed layers materialize afresh.
+        stack(&mut c, &new_bits, &mut materializations);
+        let after = c.snapshot();
+        assert_eq!(materializations, l + k, "re-dequantized an unchanged layer");
+        assert_eq!(after.misses - before.misses, k as u64);
+        assert_eq!(after.hits - before.hits, (l - k) as u64);
+        assert_eq!(
+            after.bytes_dequantized - before.bytes_dequantized,
+            (k * SLAB * 4) as u64,
+            "rebind dequantized O(L), not O(k), bytes"
+        );
+    }
+
+    #[test]
+    fn changed_layers_diff() {
+        assert_eq!(changed_layers(&[3, 4, 5], &[3, 4, 5]), Vec::<usize>::new());
+        assert_eq!(changed_layers(&[3, 4, 5], &[4, 4, 6]), vec![0, 2]);
+        assert_eq!(changed_layers(&[], &[]), Vec::<usize>::new());
+    }
+}

@@ -6,8 +6,25 @@
 //! view over the top-b planes — this is the memory-overlay property of
 //! Any-Precision LLM that makes runtime adaptation feasible on-device.
 //! The coordinator uses this module to *materialize* per-configuration
-//! `W_l` / `W_h` stacks at model-load time (config switch, not request
-//! path), and to account memory for Table 9.
+//! `W_l` / `W_h` stacks at model-load time and on precision rebinds
+//! (config switch, not request path), and to account memory for Table 9.
+//!
+//! Materialization is the config-switch hot path (DESIGN.md §Perf), so the
+//! dequantizer comes in three speeds:
+//!
+//! * [`GroupStore::dequant_into`] — the **word-level kernel**: each packed
+//!   byte of each plane is spread across the 8 byte-lanes of a `u64` via a
+//!   precomputed 256-entry table ([`SPREAD`]), so 8 codes materialize with
+//!   `bits` table lookups + shifts instead of `8 × bits` single-bit
+//!   extractions, with `std::thread::scope` row-parallelism for large
+//!   slabs and no per-layer allocation;
+//! * [`GroupStore::refine_codes_into`] — the **incremental path**: the
+//!   nested-prefix property (`code_{b+1} = code_b << 1 | bit_b`) turns a
+//!   b→b+1 re-materialization into a single-plane walk;
+//! * [`GroupStore::dequant_reference`] — the original naive per-bit loop,
+//!   retained as the differential-test oracle and bench baseline.
+
+pub mod materialize;
 
 use std::collections::BTreeMap;
 
@@ -19,6 +36,45 @@ use crate::util::npz::{load_npz, NpyArray};
 pub const GROUPS: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
 pub const MIN_BITS: u8 = 3;
 pub const MAX_BITS: u8 = 6;
+
+/// Slabs below this element count dequantize on the calling thread; the
+/// scoped-thread fan-out only pays off once the rows amortize spawn cost.
+const PAR_MIN_ELEMS: usize = 1 << 16;
+
+/// Byte → bit-spread table: byte lane `j` of `SPREAD[v]` holds bit `j` of
+/// `v`.  ORing shifted spreads of the top `b` plane bytes assembles the 8
+/// codes of one packed byte in `b` lookups; lanes never carry into each
+/// other because codes stay < 2^6 < 2^7.
+static SPREAD: [u64; 256] = build_spread();
+
+const fn build_spread() -> [u64; 256] {
+    let mut table = [0u64; 256];
+    let mut v = 0usize;
+    while v < 256 {
+        let mut j = 0;
+        let mut acc = 0u64;
+        while j < 8 {
+            acc |= (((v >> j) & 1) as u64) << (8 * j);
+            j += 1;
+        }
+        table[v] = acc;
+        v += 1;
+    }
+    table
+}
+
+/// Assemble the 8 codes of packed-byte column `byte` from MSB-first plane
+/// rows: lane `j` of the result is the code of element `byte*8 + j`.  The
+/// single word-assembly step shared by the dequant and codes paths — keep
+/// the packing convention in exactly one place.
+#[inline(always)]
+fn gather_codes(prows: &[&[u8]], byte: usize) -> u64 {
+    let mut codes = 0u64;
+    for prow in prows {
+        codes = (codes << 1) | SPREAD[prow[byte] as usize];
+    }
+    codes
+}
 
 /// Packed planes + LUTs for one linear group (stacked over layers).
 pub struct GroupStore {
@@ -38,20 +94,155 @@ impl GroupStore {
         (6 * self.out_dim * bytes_in, self.out_dim * bytes_in, bytes_in)
     }
 
-    /// Dequantize one layer at `bits` into a `[out, in]` tensor.
-    pub fn dequant(&self, layer: usize, bits: u8) -> Result<Tensor> {
+    /// Structural invariants every dequant path assumes.  Run once at
+    /// [`AnyPrecStore::load`] so a malformed npz fails loudly at load time
+    /// instead of truncating or panicking mid-request.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_layers == 0 || self.out_dim == 0 || self.in_dim == 0 {
+            bail!(
+                "degenerate store shape [L={}, out={}, in={}]",
+                self.n_layers, self.out_dim, self.in_dim
+            );
+        }
+        if self.in_dim % 8 != 0 {
+            bail!("in_dim {} not a multiple of 8 (bitplane packing)", self.in_dim);
+        }
+        let want_planes = self.n_layers * 6 * self.out_dim * self.in_dim / 8;
+        if self.planes.len() != want_planes {
+            bail!(
+                "plane buffer holds {} bytes, shape [L={}, 6, out={}, in/8={}] wants {}",
+                self.planes.len(), self.n_layers, self.out_dim, self.in_dim / 8,
+                want_planes
+            );
+        }
+        for b in MIN_BITS..=MAX_BITS {
+            let lut = self
+                .luts
+                .get(&b)
+                .ok_or_else(|| anyhow!("missing lut for {b} bits"))?;
+            let want = self.n_layers * self.out_dim * (1 << b);
+            if lut.len() != want {
+                bail!("lut{} holds {} entries, wants {}", b, lut.len(), want);
+            }
+        }
+        Ok(())
+    }
+
+    fn check_layer_bits(&self, layer: usize, bits: u8) -> Result<&[f32]> {
         if !(MIN_BITS..=MAX_BITS).contains(&bits) {
             bail!("bits {bits} out of range");
         }
         if layer >= self.n_layers {
             bail!("layer {layer} out of range ({})", self.n_layers);
         }
+        self.luts
+            .get(&bits)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow!("missing lut for {bits} bits"))
+    }
+
+    /// Word-level kernel core over rows `[row0, row0 + dst.len()/in_dim)`
+    /// of one layer.  Preconditions (layer/bits/lut/length) are validated
+    /// by the public entry points.  Dispatches to a bit-count-monomorphized
+    /// body so the per-plane loop fully unrolls and the `lut_w - 1` mask
+    /// provably bounds the LUT index (no per-element bounds check).
+    fn dequant_rows(&self, layer: usize, bits: u8, lut: &[f32], row0: usize,
+                    dst: &mut [f32]) {
+        match bits {
+            3 => self.dequant_rows_n::<3>(layer, lut, row0, dst),
+            4 => self.dequant_rows_n::<4>(layer, lut, row0, dst),
+            5 => self.dequant_rows_n::<5>(layer, lut, row0, dst),
+            _ => self.dequant_rows_n::<6>(layer, lut, row0, dst),
+        }
+    }
+
+    fn dequant_rows_n<const NB: usize>(&self, layer: usize, lut: &[f32],
+                                       row0: usize, dst: &mut [f32]) {
+        if self.in_dim == 0 {
+            return; // degenerate hand-built store; load-time validate rejects
+        }
         let (sl, sp, so) = self.plane_stride();
         let bytes_in = self.in_dim / 8;
-        let lut = self
-            .luts
-            .get(&bits)
-            .ok_or_else(|| anyhow!("missing lut for {bits} bits"))?;
+        let lut_w = 1usize << NB;
+        let lut_base = layer * self.out_dim * lut_w;
+        let mask = lut_w - 1;
+        let nrows = dst.len() / self.in_dim;
+        for r in 0..nrows {
+            let o = row0 + r;
+            let row_lut = &lut[lut_base + o * lut_w..lut_base + (o + 1) * lut_w];
+            let row_dst = &mut dst[r * self.in_dim..(r + 1) * self.in_dim];
+            let base = layer * sl + o * so;
+            let prows: [&[u8]; NB] = std::array::from_fn(|p| {
+                &self.planes[base + p * sp..base + p * sp + bytes_in]
+            });
+            for byte in 0..bytes_in {
+                let codes = gather_codes(&prows, byte);
+                let cell = &mut row_dst[byte * 8..byte * 8 + 8];
+                for (j, c) in cell.iter_mut().enumerate() {
+                    *c = row_lut[(codes >> (8 * j)) as usize & mask];
+                }
+            }
+        }
+    }
+
+    /// Shared precondition check of the `dequant_into*` entry points:
+    /// layer/bits in range, LUT present, destination exactly one slab.
+    fn checked_lut(&self, layer: usize, bits: u8, out_len: usize) -> Result<&[f32]> {
+        let lut = self.check_layer_bits(layer, bits)?;
+        if out_len != self.out_dim * self.in_dim {
+            bail!(
+                "dequant_into buffer holds {} elements, layer wants {}",
+                out_len, self.out_dim * self.in_dim
+            );
+        }
+        Ok(lut)
+    }
+
+    /// Dequantize one layer at `bits` into caller-owned storage (the
+    /// allocation-free variant) — word-level, single-threaded.
+    pub fn dequant_into_serial(&self, layer: usize, bits: u8,
+                               out: &mut [f32]) -> Result<()> {
+        let lut = self.checked_lut(layer, bits, out.len())?;
+        self.dequant_rows(layer, bits, lut, 0, out);
+        Ok(())
+    }
+
+    /// [`GroupStore::dequant_into_serial`] with scoped-thread parallelism
+    /// over `out_dim` rows for large slabs (no extra dependencies; small
+    /// slabs stay on the calling thread).
+    pub fn dequant_into(&self, layer: usize, bits: u8, out: &mut [f32]) -> Result<()> {
+        let lut = self.checked_lut(layer, bits, out.len())?;
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(self.out_dim);
+        if threads <= 1 || out.len() < PAR_MIN_ELEMS {
+            self.dequant_rows(layer, bits, lut, 0, out);
+            return Ok(());
+        }
+        let rows_per = (self.out_dim + threads - 1) / threads;
+        std::thread::scope(|s| {
+            for (ci, chunk) in out.chunks_mut(rows_per * self.in_dim).enumerate() {
+                s.spawn(move || self.dequant_rows(layer, bits, lut, ci * rows_per, chunk));
+            }
+        });
+        Ok(())
+    }
+
+    /// Dequantize one layer at `bits` into a fresh `[out, in]` tensor.
+    pub fn dequant(&self, layer: usize, bits: u8) -> Result<Tensor> {
+        let mut out = vec![0f32; self.out_dim * self.in_dim];
+        self.dequant_into(layer, bits, &mut out)?;
+        Tensor::new(vec![self.out_dim, self.in_dim], out)
+    }
+
+    /// The original per-bit dequantizer, retained as the reference oracle
+    /// for the differential property tests and the bench baseline.  Same
+    /// semantics as [`GroupStore::dequant`], ~an order of magnitude slower.
+    pub fn dequant_reference(&self, layer: usize, bits: u8) -> Result<Tensor> {
+        let lut = self.check_layer_bits(layer, bits)?;
+        let (sl, sp, so) = self.plane_stride();
+        let bytes_in = self.in_dim / 8;
         let lut_w = 1usize << bits;
         let lut_base = layer * self.out_dim * lut_w;
         let mut out = vec![0f32; self.out_dim * self.in_dim];
@@ -76,14 +267,115 @@ impl GroupStore {
         Tensor::new(vec![self.out_dim, self.in_dim], out)
     }
 
-    /// Materialize the full `[L, out, in]` stack at per-layer bitwidths.
+    /// Materialize one layer's **codes** (not centroid values) at `bits`,
+    /// word-level.  The codes buffer is the refinement state for
+    /// [`GroupStore::refine_codes_into`].
+    pub fn dequant_codes_into(&self, layer: usize, bits: u8,
+                              codes: &mut [u8]) -> Result<()> {
+        self.check_layer_bits(layer, bits)?;
+        if codes.len() != self.out_dim * self.in_dim {
+            bail!(
+                "codes buffer holds {} elements, layer wants {}",
+                codes.len(), self.out_dim * self.in_dim
+            );
+        }
+        let (sl, sp, so) = self.plane_stride();
+        let bytes_in = self.in_dim / 8;
+        let nb = bits as usize;
+        let empty: &[u8] = &[];
+        for o in 0..self.out_dim {
+            let row = &mut codes[o * self.in_dim..(o + 1) * self.in_dim];
+            let base = layer * sl + o * so;
+            let mut prows: [&[u8]; 6] = [empty; 6];
+            for (p, slot) in prows.iter_mut().enumerate().take(nb) {
+                *slot = &self.planes[base + p * sp..base + p * sp + bytes_in];
+            }
+            for byte in 0..bytes_in {
+                let w = gather_codes(&prows[..nb], byte);
+                let cell = &mut row[byte * 8..byte * 8 + 8];
+                for (j, c) in cell.iter_mut().enumerate() {
+                    *c = ((w >> (8 * j)) & 0x3f) as u8;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Incremental refinement `from_bits → from_bits + 1`: append the next
+    /// plane's bit to every code (`code_{b+1} = code_b << 1 | bit_b`).
+    /// Reads exactly ONE plane instead of re-walking all `b+1`, which is
+    /// what makes sweeping 3→4→5→6 (calibration, candidate probing) cost
+    /// one full dequant plus three single-plane passes.
+    pub fn refine_codes_into(&self, layer: usize, from_bits: u8,
+                             codes: &mut [u8]) -> Result<()> {
+        if !(MIN_BITS..MAX_BITS).contains(&from_bits) {
+            bail!("refine from {from_bits} bits: need {MIN_BITS}..{}", MAX_BITS - 1);
+        }
+        if layer >= self.n_layers {
+            bail!("layer {layer} out of range ({})", self.n_layers);
+        }
+        if codes.len() != self.out_dim * self.in_dim {
+            bail!(
+                "codes buffer holds {} elements, layer wants {}",
+                codes.len(), self.out_dim * self.in_dim
+            );
+        }
+        let (sl, sp, so) = self.plane_stride();
+        let bytes_in = self.in_dim / 8;
+        let p = from_bits as usize; // planes 0..from_bits gave the prefix
+        for o in 0..self.out_dim {
+            let row = &mut codes[o * self.in_dim..(o + 1) * self.in_dim];
+            let base = layer * sl + p * sp + o * so;
+            for byte in 0..bytes_in {
+                let pb = self.planes[base + byte];
+                let cell = &mut row[byte * 8..byte * 8 + 8];
+                for (j, c) in cell.iter_mut().enumerate() {
+                    *c = (*c << 1) | ((pb >> j) & 1);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Map a codes buffer at `bits` through the layer's LUT.  Codes must
+    /// have been produced at exactly `bits` (dequant_codes_into / refined
+    /// to it).  Mismatches are NOT detectable here: codes at *higher*
+    /// bitwidths index past the LUT row and panic, but codes at *lower*
+    /// bitwidths index in-bounds and silently yield wrong weights — the
+    /// caller owns tracking the codes' current bitwidth.
+    pub fn lut_map_into(&self, layer: usize, bits: u8, codes: &[u8],
+                        out: &mut [f32]) -> Result<()> {
+        let lut = self.check_layer_bits(layer, bits)?;
+        let n = self.out_dim * self.in_dim;
+        if codes.len() != n || out.len() != n {
+            bail!("lut_map buffers hold {}/{} elements, layer wants {n}",
+                  codes.len(), out.len());
+        }
+        let lut_w = 1usize << bits;
+        let lut_base = layer * self.out_dim * lut_w;
+        for o in 0..self.out_dim {
+            let row_lut = &lut[lut_base + o * lut_w..lut_base + (o + 1) * lut_w];
+            let src = &codes[o * self.in_dim..(o + 1) * self.in_dim];
+            let dst = &mut out[o * self.in_dim..(o + 1) * self.in_dim];
+            for (d, &c) in dst.iter_mut().zip(src) {
+                *d = row_lut[c as usize];
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize the full `[L, out, in]` stack at per-layer bitwidths
+    /// into one allocation (word-level per layer).
     pub fn dequant_stack(&self, bits_per_layer: &[u8]) -> Result<Tensor> {
         if bits_per_layer.len() != self.n_layers {
             bail!("need {} bit entries, got {}", self.n_layers, bits_per_layer.len());
         }
-        let mut data = Vec::with_capacity(self.n_layers * self.out_dim * self.in_dim);
-        for (layer, &b) in bits_per_layer.iter().enumerate() {
-            data.extend_from_slice(&self.dequant(layer, b)?.data);
+        let n = self.out_dim * self.in_dim;
+        let mut data = vec![0f32; self.n_layers * n];
+        for ((layer, &b), chunk) in
+            bits_per_layer.iter().enumerate().zip(data.chunks_mut(n))
+        {
+            self.dequant_into(layer, b, chunk)?;
         }
         Tensor::new(vec![self.n_layers, self.out_dim, self.in_dim], data)
     }
@@ -94,6 +386,11 @@ impl GroupStore {
         let planes = self.n_layers * bits as usize * self.out_dim * self.in_dim / 8;
         let lut = self.n_layers * self.out_dim * (1 << bits) * 4;
         planes + lut
+    }
+
+    /// Host bytes of one materialized layer slab (`[out, in]` f32).
+    pub fn layer_slab_bytes(&self) -> usize {
+        self.out_dim * self.in_dim * 4
     }
 }
 
@@ -125,16 +422,17 @@ impl AnyPrecStore {
                 }
                 luts.insert(b, lut.to_f32());
             }
-            groups.insert(
-                g.to_string(),
-                GroupStore {
-                    planes: planes.as_u8().context(format!("planes_{g}"))?.to_vec(),
-                    n_layers,
-                    out_dim,
-                    in_dim,
-                    luts,
-                },
-            );
+            let store = GroupStore {
+                planes: planes.as_u8().context(format!("planes_{g}"))?.to_vec(),
+                n_layers,
+                out_dim,
+                in_dim,
+                luts,
+            };
+            store
+                .validate()
+                .with_context(|| format!("planes_{g} in {path}"))?;
+            groups.insert(g.to_string(), store);
         }
         Ok(AnyPrecStore { groups })
     }
@@ -156,6 +454,7 @@ impl AnyPrecStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::{for_each_seed, Rng};
 
     /// Build a tiny store by hand and check dequant against the format spec.
     fn toy_store() -> GroupStore {
@@ -186,6 +485,25 @@ mod tests {
                     lut[o * w + c] = c as f32 + o as f32 * 100.0;
                 }
             }
+            luts.insert(b, lut);
+        }
+        GroupStore { planes, n_layers: l, out_dim: out, in_dim: n_in, luts }
+    }
+
+    /// Random store with arbitrary codes and LUT values (dims vary).
+    fn random_store(rng: &mut Rng) -> GroupStore {
+        let l = rng.range(1, 4);
+        let out = rng.range(1, 6);
+        let n_in = 8 * rng.range(1, 5);
+        let mut planes = vec![0u8; l * 6 * out * (n_in / 8)];
+        for b in planes.iter_mut() {
+            *b = rng.next_u64() as u8;
+        }
+        let mut luts = BTreeMap::new();
+        for b in MIN_BITS..=MAX_BITS {
+            let w = 1usize << b;
+            let lut: Vec<f32> =
+                (0..l * out * w).map(|_| rng.f32() * 2.0 - 1.0).collect();
             luts.insert(b, lut);
         }
         GroupStore { planes, n_layers: l, out_dim: out, in_dim: n_in, luts }
@@ -223,6 +541,75 @@ mod tests {
         }
     }
 
+    /// Differential property: the word-level kernel (both entry points)
+    /// must be bit-exact against the retained naive reference on random
+    /// stores across every (L, out, in, bits).
+    #[test]
+    fn word_kernel_matches_reference_property() {
+        for_each_seed(40, |rng| {
+            let s = random_store(rng);
+            for layer in 0..s.n_layers {
+                for bits in MIN_BITS..=MAX_BITS {
+                    let reference = s.dequant_reference(layer, bits).unwrap();
+                    let fast = s.dequant(layer, bits).unwrap();
+                    assert_eq!(reference.data, fast.data, "bits={bits} layer={layer}");
+                    let mut into = vec![0f32; s.out_dim * s.in_dim];
+                    s.dequant_into_serial(layer, bits, &mut into).unwrap();
+                    assert_eq!(reference.data, into, "serial bits={bits}");
+                }
+            }
+        });
+    }
+
+    /// Differential property for the incremental path: codes at 3 bits,
+    /// refined one plane at a time, must reproduce the reference at every
+    /// intermediate bitwidth.
+    #[test]
+    fn refine_path_matches_reference_property() {
+        for_each_seed(40, |rng| {
+            let s = random_store(rng);
+            for layer in 0..s.n_layers {
+                let n = s.out_dim * s.in_dim;
+                let mut codes = vec![0u8; n];
+                let mut out = vec![0f32; n];
+                s.dequant_codes_into(layer, MIN_BITS, &mut codes).unwrap();
+                for bits in MIN_BITS..=MAX_BITS {
+                    if bits > MIN_BITS {
+                        s.refine_codes_into(layer, bits - 1, &mut codes).unwrap();
+                    }
+                    s.lut_map_into(layer, bits, &codes, &mut out).unwrap();
+                    let reference = s.dequant_reference(layer, bits).unwrap();
+                    assert_eq!(reference.data, out, "bits={bits} layer={layer}");
+                }
+            }
+        });
+    }
+
+    /// A slab big enough to cross the parallel threshold must agree with
+    /// the reference through the scoped-thread path too.
+    #[test]
+    fn parallel_rows_match_reference() {
+        let mut rng = Rng::new(0xA11CE);
+        let (l, out, n_in) = (1usize, 48usize, 2048usize);
+        let mut planes = vec![0u8; l * 6 * out * (n_in / 8)];
+        for b in planes.iter_mut() {
+            *b = rng.next_u64() as u8;
+        }
+        let mut luts = BTreeMap::new();
+        for b in MIN_BITS..=MAX_BITS {
+            let w = 1usize << b;
+            luts.insert(b, (0..l * out * w).map(|_| rng.f32()).collect());
+        }
+        let s = GroupStore { planes, n_layers: l, out_dim: out, in_dim: n_in, luts };
+        assert!(out * n_in >= super::PAR_MIN_ELEMS);
+        for bits in [3u8, 5] {
+            let reference = s.dequant_reference(0, bits).unwrap();
+            let mut fast = vec![0f32; out * n_in];
+            s.dequant_into(0, bits, &mut fast).unwrap();
+            assert_eq!(reference.data, fast, "bits={bits}");
+        }
+    }
+
     #[test]
     fn memory_accounting_monotone() {
         let s = toy_store();
@@ -244,5 +631,33 @@ mod tests {
         assert!(s.dequant(0, 7).is_err());
         assert!(s.dequant(3, 4).is_err());
         assert!(s.dequant_stack(&[4, 4]).is_err());
+        let mut short = vec![0f32; 3];
+        assert!(s.dequant_into(0, 4, &mut short).is_err());
+        let mut codes = vec![0u8; 2 * 16];
+        assert!(s.refine_codes_into(0, 6, &mut codes).is_err());
+        assert!(s.refine_codes_into(0, 2, &mut codes).is_err());
+        assert!(s.refine_codes_into(9, 4, &mut codes).is_err());
+    }
+
+    #[test]
+    fn validate_catches_malformed_stores() {
+        let s = toy_store();
+        assert!(s.validate().is_ok());
+
+        let mut truncated = toy_store();
+        truncated.planes.pop();
+        assert!(truncated.validate().is_err(), "short plane buffer accepted");
+
+        let mut ragged_in = toy_store();
+        ragged_in.in_dim = 12; // not a byte multiple
+        assert!(ragged_in.validate().is_err(), "in_dim % 8 != 0 accepted");
+
+        let mut bad_lut = toy_store();
+        bad_lut.luts.get_mut(&4).unwrap().pop();
+        assert!(bad_lut.validate().is_err(), "short lut accepted");
+
+        let mut missing_lut = toy_store();
+        missing_lut.luts.remove(&5);
+        assert!(missing_lut.validate().is_err(), "missing lut accepted");
     }
 }

@@ -20,10 +20,12 @@ use anyhow::{anyhow, Result};
 use super::metrics::{MetricsRegistry, RequestRecord};
 use super::qos::{AdaptationPolicy, UtilizationSim};
 use super::sched::{Request, RequestQueue, SchedPolicy};
-use crate::evalharness::{build_session, Method};
+use crate::anyprec::materialize::MatSnapshot;
+use crate::evalharness::{build_session_with_cache, engine_config_for, Method};
 use crate::model::{art, Manifest, ModelAssets};
-use crate::runtime::decode::{DecodeSession, EstMode, GenState};
+use crate::runtime::decode::{DecodeSession, EstMode, GenState, SwapReport, WeightCache};
 use crate::runtime::Runtime;
+use crate::selector::EngineConfig;
 use crate::tokenizer::Tokenizer;
 
 /// Tokens between utilization ticks / mid-stream target re-selection in the
@@ -78,6 +80,18 @@ pub struct ServingEngine {
     pub policy: AdaptationPolicy,
     pub metrics: MetricsRegistry,
     pub est_mode: EstMode,
+    /// Weight materialization cache shared by every session of the
+    /// adaptation set: each (group, layer, bits) slab dequantizes and
+    /// uploads once no matter how many targets use it, and
+    /// [`ServingEngine::reconfigure`] rebinds are delta-materialized.
+    weights: WeightCache,
+    rt: Arc<Runtime>,
+    /// Retained so [`ServingEngine::reconfigure`] rebinds without
+    /// re-reading the packed store from disk (the store itself is an
+    /// `Arc` already shared with every session).
+    assets: ModelAssets,
+    manifest: Manifest,
+    budget: u32,
 }
 
 impl ServingEngine {
@@ -87,11 +101,13 @@ impl ServingEngine {
         let assets = ModelAssets::load(model)?;
         let manifest = Manifest::load()?;
         let tokenizer = Tokenizer::load(&art(&["data", "tokenizer.json"]))?;
+        let weights = DecodeSession::fresh_weight_cache();
         let mut sessions = BTreeMap::new();
         let mut targets = Vec::new();
         for tag in tags {
             let m = Method::Dpllm { tag: tag.to_string() };
-            let s = build_session(rt, &assets, &manifest, budget, &m)?;
+            let s = build_session_with_cache(rt, &assets, &manifest, budget, &m,
+                                             weights.clone())?;
             targets.push((s.ec.target, tag.to_string()));
             sessions.insert(tag.to_string(), s);
         }
@@ -112,7 +128,140 @@ impl ServingEngine {
             policy: AdaptationPolicy::new(options),
             metrics: MetricsRegistry::new(),
             est_mode: EstMode::Approx,
+            weights,
+            rt: rt.clone(),
+            assets,
+            manifest,
+            budget,
         })
+    }
+
+    /// Counters of the shared weight materialization cache (companion to
+    /// `Runtime::transfers()` for the §Perf config-switch contract).
+    pub fn weight_cache_stats(&self) -> MatSnapshot {
+        self.weights.borrow().snapshot()
+    }
+
+    /// Swap the adaptation set at runtime (FlexQuant's scenario: the
+    /// memory/latency envelope moved, so the coordinator re-selects which
+    /// target precisions to keep resident).  Sessions for retained tags
+    /// are untouched; a retired session is **rebound in place** to the
+    /// first missing tag via [`DecodeSession::swap_bits`] (re-uploading
+    /// only layers whose bits differ), and only when no retired session
+    /// is available does a tag build fresh — through the shared cache, so
+    /// even that re-uploads only slabs never materialized before.
+    /// Requires exclusive access: call between [`ServingCore`] runs.
+    ///
+    /// Error semantics: config resolution failures (unknown tag, missing
+    /// calib) happen before any state changes — the old set stays fully
+    /// active.  A device-level failure mid-swap returns `Err` with the
+    /// engine still **consistent and serviceable**, but the resident set
+    /// may mix new and old tags; inspect [`ServingEngine::targets`] to
+    /// see what is actually loaded before retrying.
+    pub fn reconfigure(&mut self, tags: &[&str]) -> Result<SwapReport> {
+        if tags.is_empty() {
+            return Err(anyhow!("reconfigure to an empty adaptation set"));
+        }
+        let keep: Vec<String> = tags.iter().map(|t| t.to_string()).collect();
+        // Resolve every missing tag's config BEFORE touching engine state,
+        // so the common failure (unknown tag / missing calib) leaves the
+        // current adaptation set fully intact.
+        let mut pending: Vec<(String, EngineConfig)> = Vec::new();
+        for tag in &keep {
+            if self.sessions.contains_key(tag)
+                || pending.iter().any(|(t, _)| t == tag)
+            {
+                continue;
+            }
+            let m = Method::Dpllm { tag: tag.clone() };
+            pending.push((tag.clone(), engine_config_for(&self.assets, self.budget, &m)?));
+        }
+        let mut retired: Vec<(String, DecodeSession)> = Vec::new();
+        let current: Vec<String> = self.sessions.keys().cloned().collect();
+        for tag in current {
+            if !keep.contains(&tag) {
+                let s = self.sessions.remove(&tag).expect("listed key");
+                retired.push((tag, s));
+            }
+        }
+        let mut rep = SwapReport::default();
+        let mut failure = None;
+        for (tag, ec) in pending {
+            let s = match retired.pop() {
+                // swap_bits is atomic: on error the session is still fully
+                // on its old configuration, so it goes back under its old
+                // tag below.
+                Some((old_tag, mut s)) => match s.swap_bits(ec) {
+                    Ok(r) => {
+                        rep.absorb(r);
+                        s
+                    }
+                    Err(e) => {
+                        failure = Some(e);
+                        retired.push((old_tag, s));
+                        break;
+                    }
+                },
+                None => match DecodeSession::new_shared(
+                    self.rt.clone(), &self.assets, &self.manifest, ec,
+                    self.weights.clone())
+                {
+                    Ok(s) => s,
+                    Err(e) => {
+                        failure = Some(e);
+                        break;
+                    }
+                },
+            };
+            self.sessions.insert(tag, s);
+        }
+        if failure.is_some() {
+            // Device-level failure mid-swap: restore the unconsumed retired
+            // sessions so the engine never serves from an empty set.
+            for (tag, s) in retired {
+                self.sessions.insert(tag, s);
+            }
+        }
+        // Targets always derive from the sessions actually resident.
+        self.targets = self
+            .sessions
+            .iter()
+            .map(|(tag, s)| (s.ec.target, tag.clone()))
+            .collect();
+        // Re-calibrate the adaptation policy for the new set.  A probe
+        // failure falls back to the previous calibration's nearest
+        // estimate so policy and targets never diverge — and never masks
+        // an earlier swap failure.
+        let mut options = Vec::new();
+        for (target, tag) in &self.targets {
+            let tpot = match measure_tpot(&self.sessions[tag], 3) {
+                Ok(ms) => ms,
+                Err(e) => {
+                    let fallback = self
+                        .policy
+                        .options
+                        .iter()
+                        .min_by(|a, b| {
+                            (a.0 - *target)
+                                .abs()
+                                .partial_cmp(&(b.0 - *target).abs())
+                                .unwrap()
+                        })
+                        .map(|(_, ms)| *ms)
+                        .unwrap_or(1.0);
+                    if failure.is_none() {
+                        failure = Some(e);
+                    }
+                    fallback
+                }
+            };
+            options.push((*target, tpot));
+        }
+        self.policy = AdaptationPolicy::new(options);
+        match failure {
+            Some(e) => Err(e),
+            None => Ok(rep),
+        }
     }
 
     pub fn session_for_target(&self, target: f64) -> &DecodeSession {

@@ -10,7 +10,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::model::calib::{load_maxprec, DpllmConfig, StaticConfig};
 use crate::model::{art, Manifest, ModelAssets};
-use crate::runtime::decode::{DecodeSession, EstMode};
+use crate::runtime::decode::{DecodeSession, EstMode, WeightCache};
 use crate::runtime::Runtime;
 use crate::selector::EngineConfig;
 use crate::util::npz::load_u16_bin;
@@ -33,27 +33,46 @@ impl Method {
     }
 }
 
+/// Resolve (model, budget, method) to an [`EngineConfig`] without building
+/// a session — also the input to [`DecodeSession::swap_bits`] rebinds.
+pub fn engine_config_for(assets: &ModelAssets, budget: u32,
+                         method: &Method) -> Result<EngineConfig> {
+    let maxprec = load_maxprec(&assets.cfg.name, budget)?;
+    match method {
+        Method::Dpllm { tag } => {
+            let dp = DpllmConfig::load(&assets.cfg.name, budget, tag)
+                .with_context(|| format!("dpllm config {tag}"))?;
+            EngineConfig::from_dpllm(&assets.cfg, &dp, &maxprec)
+        }
+        Method::Static { method, target } => {
+            let st = StaticConfig::load(&assets.cfg.name, budget, method, *target)?;
+            EngineConfig::from_static(&assets.cfg, &st, &maxprec)
+        }
+        Method::Uniform { bits } => {
+            let st = StaticConfig::uniform(&assets.cfg, *bits);
+            EngineConfig::from_static(&assets.cfg, &st, &maxprec)
+        }
+    }
+}
+
 /// Build a servable session for (model, budget, method).
 pub fn build_session(rt: &Arc<Runtime>, assets: &ModelAssets,
                      manifest: &Manifest, budget: u32, method: &Method)
                      -> Result<DecodeSession> {
-    let maxprec = load_maxprec(&assets.cfg.name, budget)?;
-    let ec = match method {
-        Method::Dpllm { tag } => {
-            let dp = DpllmConfig::load(&assets.cfg.name, budget, tag)
-                .with_context(|| format!("dpllm config {tag}"))?;
-            EngineConfig::from_dpllm(&assets.cfg, &dp, &maxprec)?
-        }
-        Method::Static { method, target } => {
-            let st = StaticConfig::load(&assets.cfg.name, budget, method, *target)?;
-            EngineConfig::from_static(&assets.cfg, &st, &maxprec)?
-        }
-        Method::Uniform { bits } => {
-            let st = StaticConfig::uniform(&assets.cfg, *bits);
-            EngineConfig::from_static(&assets.cfg, &st, &maxprec)?
-        }
-    };
+    let ec = engine_config_for(assets, budget, method)?;
     DecodeSession::new(rt.clone(), assets, manifest, ec)
+}
+
+/// [`build_session`] materializing through a shared weight cache, so
+/// sibling configurations of one model dedupe their (group, layer, bits)
+/// dequantizations and uploads (delta materialization across a whole
+/// adaptation set).
+pub fn build_session_with_cache(rt: &Arc<Runtime>, assets: &ModelAssets,
+                                manifest: &Manifest, budget: u32,
+                                method: &Method, weights: WeightCache)
+                                -> Result<DecodeSession> {
+    let ec = engine_config_for(assets, budget, method)?;
+    DecodeSession::new_shared(rt.clone(), assets, manifest, ec, weights)
 }
 
 /// Result of one perplexity run.

@@ -7,6 +7,7 @@
 pub mod calib;
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -221,7 +222,10 @@ impl Manifest {
 pub struct ModelAssets {
     pub cfg: ModelConfig,
     pub nl: NonLinearParams,
-    pub store: AnyPrecStore,
+    /// Shared with every [`crate::runtime::decode::DecodeSession`] built
+    /// from these assets — precision rebinds re-dequantize from it long
+    /// after the assets themselves are dropped.
+    pub store: Arc<AnyPrecStore>,
 }
 
 impl ModelAssets {
@@ -233,7 +237,7 @@ impl ModelAssets {
             bail!("anyprec store layers {} != config {}", store.n_layers(),
                   cfg.n_layers);
         }
-        Ok(ModelAssets { cfg, nl, store })
+        Ok(ModelAssets { cfg, nl, store: Arc::new(store) })
     }
 }
 

@@ -23,10 +23,25 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Context, Result};
 use xla::PjRtBuffer;
 
-use crate::anyprec::GROUPS;
+use crate::anyprec::materialize::{changed_layers, MatKey, MatSnapshot, MaterializeCache};
+use crate::anyprec::{AnyPrecStore, GroupStore, GROUPS};
 use crate::model::{Manifest, ModelAssets, ModelConfig};
+use crate::runtime::stack::Stacker;
 use crate::runtime::{buffer_f32, wrap, Exe, Runtime};
 use crate::selector::{EngineConfig, SelectorState, ASYNC_GROUPS};
+
+/// Default byte budget for the host slabs held by a weight
+/// materialization cache (the device mirrors are bounded by the same
+/// figure; see `anyprec::materialize`).
+pub const DEFAULT_WEIGHT_CACHE_BYTES: usize = 256 << 20;
+
+/// The per-(group, layer, bits) weight materialization cache, shareable
+/// across every [`DecodeSession`] of one model on one executor thread
+/// (PJRT handles are `!Send`, hence `Rc<RefCell<..>>`).  The device
+/// mirror is `None` when the entry was materialized while the
+/// device-side stack-concat path was unavailable — those entries carry
+/// only the host slab and stacks assemble through the host fallback.
+pub type WeightCache = Rc<RefCell<MaterializeCache<Option<PjRtBuffer>>>>;
 
 /// Estimator source for a step (Table 3 ablation).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -89,11 +104,37 @@ impl<'s> GenState<'s> {
     }
 }
 
+/// What a [`DecodeSession::swap_bits`] rebind actually did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SwapReport {
+    /// Group stacks re-assembled (wl / wh / prefill count separately).
+    pub stacks_rebuilt: usize,
+    /// Layer-level bit-assignment changes across all rebuilt stacks.
+    pub layers_changed: usize,
+    /// Small selector-parameter buffers re-uploaded.
+    pub selector_uploads: usize,
+}
+
+impl SwapReport {
+    pub fn absorb(&mut self, other: SwapReport) {
+        self.stacks_rebuilt += other.stacks_rebuilt;
+        self.layers_changed += other.layers_changed;
+        self.selector_uploads += other.selector_uploads;
+    }
+}
+
 /// A servable model: compiled graphs + device-resident weight stacks.
 pub struct DecodeSession {
     rt: Arc<Runtime>,
     pub cfg: ModelConfig,
     pub ec: EngineConfig,
+    /// The packed store the stacks were materialized from; retained so
+    /// [`DecodeSession::swap_bits`] can re-dequantize changed layers.
+    store: Arc<AnyPrecStore>,
+    /// Per-(group, layer, bits) host slabs + uploaded per-layer buffers.
+    weights: WeightCache,
+    /// Device-side `[1,out,in] × L → [L,out,in]` stack assembler.
+    stacker: Stacker,
     decode: Arc<Exe>,
     decode_args: Vec<String>,
     /// (bucket_size, exe, arg names)
@@ -111,9 +152,86 @@ pub struct DecodeSession {
     rope_misses: Cell<u64>,
 }
 
+/// Per-layer bits of one group under a per-linear assignment (canonical
+/// `linear_index` order).
+fn group_layer_bits(cfg: &ModelConfig, per_linear: &[u8], g: &str) -> Vec<u8> {
+    cfg.linear_index()
+        .iter()
+        .enumerate()
+        .filter(|(_, (_, gg))| *gg == g)
+        .map(|(li, _)| per_linear[li])
+        .collect()
+}
+
+/// Materialize one group's `[L, out, in]` stack through the weight cache:
+/// per-layer slabs dequantize (+ upload, when the device-side concat is
+/// available for this shape) only on cache miss, then the stack assembles
+/// device-side — or from the host slabs in one upload when it isn't
+/// ([`Stacker::stack`]).  Gating the per-layer uploads on
+/// [`Stacker::device_side`] keeps the fallback path at exactly one
+/// O(stack) upload instead of paying both.
+fn materialize_stack(rt: &Arc<Runtime>, stacker: &Stacker,
+                     cache: &WeightCache, store: &GroupStore, g: &str,
+                     bits: &[u8]) -> Result<PjRtBuffer> {
+    let (o, i) = (store.out_dim, store.in_dim);
+    let dims = (bits.len(), o, i);
+    let device = stacker.device_side(dims);
+    let mut dev = Vec::with_capacity(bits.len());
+    let mut host = Vec::with_capacity(bits.len());
+    {
+        let mut cache = cache.borrow_mut();
+        for (layer, &b) in bits.iter().enumerate() {
+            let key = MatKey { group: g.to_string(), layer, bits: b };
+            let (h, d) = cache.get_or_materialize(&key, |k| {
+                let mut slab = vec![0f32; o * i];
+                store.dequant_into(k.layer, k.bits, &mut slab)?;
+                let buf = if device {
+                    Some(rt.upload_f32(&[1, o, i], &slab)?)
+                } else {
+                    None
+                };
+                Ok((slab, buf))
+            })?;
+            host.push(h);
+            dev.push(d);
+        }
+    }
+    // The device path needs every layer's mirror; entries cached while it
+    // was unavailable lack one, and then the host path takes over.
+    let dev_refs: Vec<&PjRtBuffer> =
+        dev.iter().filter_map(|b| Option::as_ref(b)).collect();
+    let dev_refs = if dev_refs.len() == bits.len() { dev_refs } else { Vec::new() };
+    let host_refs: Vec<&[f32]> = host.iter().map(|h| h.as_slice()).collect();
+    stacker.stack(dims, &dev_refs, &host_refs)
+}
+
 impl DecodeSession {
+    /// Fresh weight cache at the default byte budget — share one across
+    /// every session of a model so configurations at different targets
+    /// materialize each (group, layer, bits) slab once, and so rebinds
+    /// ([`DecodeSession::swap_bits`]) stay O(changed layers).
+    pub fn fresh_weight_cache() -> WeightCache {
+        Rc::new(RefCell::new(MaterializeCache::new(DEFAULT_WEIGHT_CACHE_BYTES)))
+    }
+
+    /// One-shot construction (benches, eval sweeps).  Materializes through
+    /// a **zero-budget** cache: nothing is retained beyond the stack being
+    /// assembled, so memory residency matches the pre-cache design (one
+    /// stacked copy per group).  Long-lived serving paths that rebind
+    /// should use [`DecodeSession::new_shared`] with a retaining cache
+    /// ([`DecodeSession::fresh_weight_cache`]) — `ServingEngine` does.
     pub fn new(rt: Arc<Runtime>, assets: &ModelAssets, manifest: &Manifest,
                ec: EngineConfig) -> Result<DecodeSession> {
+        Self::new_shared(rt, assets, manifest, ec,
+                         Rc::new(RefCell::new(MaterializeCache::new(0))))
+    }
+
+    /// [`DecodeSession::new`] materializing through a caller-provided
+    /// (typically shared) weight cache: layers whose (group, layer, bits)
+    /// slab is already cached are neither re-dequantized nor re-uploaded.
+    pub fn new_shared(rt: Arc<Runtime>, assets: &ModelAssets, manifest: &Manifest,
+                      ec: EngineConfig, weights: WeightCache)
+                      -> Result<DecodeSession> {
         let cfg = assets.cfg.clone();
         let decode_entry = manifest.entry(&cfg.name, "decode_step")?;
         let decode = rt.load(&decode_entry)?;
@@ -129,6 +247,8 @@ impl DecodeSession {
             bail!("no prefill entries for {}", cfg.name);
         }
 
+        let stacker = Stacker::new(rt.clone());
+
         // ---- static decode args -------------------------------------------
         let mut static_bufs = HashMap::new();
         let nl = &assets.nl;
@@ -141,10 +261,10 @@ impl DecodeSession {
         for g in GROUPS {
             let store = assets.store.group(g)?;
             let (lb, hb) = ec.group_bits(&cfg, g);
-            let wl = store.dequant_stack(&lb)?;
-            static_bufs.insert(format!("wl_{g}"), rt.upload_tensor(&wl)?);
-            let wh = store.dequant_stack(&hb)?;
-            static_bufs.insert(format!("wh_{g}"), rt.upload_tensor(&wh)?);
+            let wl = materialize_stack(&rt, &stacker, &weights, store, g, &lb)?;
+            static_bufs.insert(format!("wl_{g}"), wl);
+            let wh = materialize_stack(&rt, &stacker, &weights, store, g, &hb)?;
+            static_bufs.insert(format!("wh_{g}"), wh);
             let sel = &ec.groups[g];
             static_bufs.insert(
                 format!("G_{g}"),
@@ -165,17 +285,11 @@ impl DecodeSession {
         ] {
             prefill_bufs.insert(name.to_string(), rt.upload_tensor(t)?);
         }
-        let idx = cfg.linear_index();
         for g in GROUPS {
             let store = assets.store.group(g)?;
-            let bits: Vec<u8> = idx
-                .iter()
-                .enumerate()
-                .filter(|(_, (_, gg))| *gg == g)
-                .map(|(li, _)| ec.prefill_bits[li])
-                .collect();
-            let w = store.dequant_stack(&bits)?;
-            prefill_bufs.insert(format!("w_{g}"), rt.upload_tensor(&w)?);
+            let bits = group_layer_bits(&cfg, &ec.prefill_bits, g);
+            let w = materialize_stack(&rt, &stacker, &weights, store, g, &bits)?;
+            prefill_bufs.insert(format!("w_{g}"), w);
         }
 
         let kv_len: usize = cfg.kv_shape().iter().product();
@@ -184,6 +298,9 @@ impl DecodeSession {
             decode_args: decode_entry.args.clone(),
             cfg,
             ec,
+            store: assets.store.clone(),
+            weights,
+            stacker,
             decode,
             prefills,
             static_bufs,
@@ -195,6 +312,112 @@ impl DecodeSession {
             rope_hits: Cell::new(0),
             rope_misses: Cell::new(0),
         })
+    }
+
+    /// In-place engine-configuration rebind with **delta materialization**:
+    /// only groups whose per-layer (low, high, prefill) bit assignments
+    /// changed re-assemble their stacks, and within a rebuilt stack only
+    /// the changed layers dequantize + upload — unchanged layers come out
+    /// of the weight cache and the stack re-assembles device-side.  A
+    /// rebind that changes k of L layers therefore uploads O(k), not O(L),
+    /// weight bytes (asserted by the integration tests through
+    /// [`Runtime::transfers`] and [`DecodeSession::materialize_stats`]),
+    /// **provided** the session's weight cache retains the unchanged
+    /// slabs — sessions built with [`DecodeSession::new`] use a
+    /// zero-retention cache and re-materialize everything.
+    ///
+    /// The selector parameter vectors (thresholds, linear fits, JL stack)
+    /// re-upload only when their values differ.  Requires exclusive access:
+    /// no [`GenState`] may be borrowed from this session across the call
+    /// (enforced by the borrow checker); live generations on *other*
+    /// sessions are unaffected.
+    pub fn swap_bits(&mut self, ec: EngineConfig) -> Result<SwapReport> {
+        if ec.wl_bits.len() != self.ec.wl_bits.len()
+            || ec.wh_bits.len() != self.ec.wh_bits.len()
+            || ec.prefill_bits.len() != self.ec.prefill_bits.len()
+        {
+            bail!(
+                "swap_bits across model shapes: {} vs {} linears",
+                ec.wl_bits.len(), self.ec.wl_bits.len()
+            );
+        }
+        let mut rep = SwapReport::default();
+        // Stage every new buffer first, commit only after all of them
+        // materialized: a mid-rebind failure (upload, device) leaves the
+        // session fully on the OLD configuration instead of a mix whose
+        // next diff against self.ec would be wrong.
+        let mut staged_stacks: Vec<(String, bool, PjRtBuffer)> = Vec::new();
+        let mut staged_small: Vec<(String, PjRtBuffer)> = Vec::new();
+        for g in GROUPS {
+            let store = self.store.group(g)?;
+            let (old_l, old_h) = self.ec.group_bits(&self.cfg, g);
+            let (new_l, new_h) = ec.group_bits(&self.cfg, g);
+            let old_p = group_layer_bits(&self.cfg, &self.ec.prefill_bits, g);
+            let new_p = group_layer_bits(&self.cfg, &ec.prefill_bits, g);
+            for (name, is_prefill, old, new) in [
+                (format!("wl_{g}"), false, &old_l, &new_l),
+                (format!("wh_{g}"), false, &old_h, &new_h),
+                (format!("w_{g}"), true, &old_p, &new_p),
+            ] {
+                let changed = changed_layers(old, new);
+                if changed.is_empty() {
+                    continue;
+                }
+                rep.layers_changed += changed.len();
+                rep.stacks_rebuilt += 1;
+                let buf = materialize_stack(
+                    &self.rt, &self.stacker, &self.weights, store, g, new)?;
+                staged_stacks.push((name, is_prefill, buf));
+            }
+            let old_sel = &self.ec.groups[g];
+            let new_sel = &ec.groups[g];
+            if old_sel.g_proj != new_sel.g_proj || old_sel.g_shape != new_sel.g_shape {
+                staged_small.push((
+                    format!("G_{g}"),
+                    self.rt.upload_f32(&new_sel.g_shape, &new_sel.g_proj)?,
+                ));
+                rep.selector_uploads += 1;
+            }
+            let l = self.cfg.n_layers;
+            for (name, old_v, new_v) in [
+                ("lina", &old_sel.lin_a, &new_sel.lin_a),
+                ("linb", &old_sel.lin_b, &new_sel.lin_b),
+                ("uselin", &old_sel.use_lin, &new_sel.use_lin),
+                ("thr", &old_sel.thr, &new_sel.thr),
+            ] {
+                if old_v != new_v {
+                    staged_small.push((
+                        format!("{name}_{g}"),
+                        self.rt.upload_f32(&[l], new_v)?,
+                    ));
+                    rep.selector_uploads += 1;
+                }
+            }
+        }
+        // Commit phase: infallible.
+        for (name, is_prefill, buf) in staged_stacks {
+            if is_prefill {
+                self.prefill_bufs.insert(name, buf);
+            } else {
+                self.static_bufs.insert(name, buf);
+            }
+        }
+        for (name, buf) in staged_small {
+            self.static_bufs.insert(name, buf);
+        }
+        self.ec = ec;
+        Ok(rep)
+    }
+
+    /// Counters of the weight materialization cache this session
+    /// dequantizes through (companion to [`Runtime::transfers`]).
+    pub fn materialize_stats(&self) -> MatSnapshot {
+        self.weights.borrow().snapshot()
+    }
+
+    /// The weight cache handle (to share with sibling sessions).
+    pub fn weight_cache(&self) -> WeightCache {
+        self.weights.clone()
     }
 
     pub fn selector_state(&self) -> SelectorState<'_> {

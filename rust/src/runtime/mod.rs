@@ -14,6 +14,7 @@
 //!   GenState tests assert it through these counters.
 
 pub mod decode;
+pub mod stack;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -33,6 +34,7 @@ pub struct TransferStats {
     uploads: AtomicU64,
     upload_bytes: AtomicU64,
     downloads: AtomicU64,
+    assemblies: AtomicU64,
 }
 
 /// A point-in-time copy of [`TransferStats`].
@@ -41,6 +43,10 @@ pub struct TransferSnapshot {
     pub uploads: u64,
     pub upload_bytes: u64,
     pub downloads: u64,
+    /// Device-side weight-stack assemblies ([`stack::Stacker`]): stacks
+    /// concatenated from cached per-layer buffers *on the device*, i.e.
+    /// rebinds that did NOT pay an O(stack) host→device upload.
+    pub assemblies: u64,
 }
 
 impl TransferStats {
@@ -53,11 +59,16 @@ impl TransferStats {
         self.downloads.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn count_assembly(&self) {
+        self.assemblies.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> TransferSnapshot {
         TransferSnapshot {
             uploads: self.uploads.load(Ordering::Relaxed),
             upload_bytes: self.upload_bytes.load(Ordering::Relaxed),
             downloads: self.downloads.load(Ordering::Relaxed),
+            assemblies: self.assemblies.load(Ordering::Relaxed),
         }
     }
 }
@@ -77,6 +88,11 @@ impl TransferSnapshot {
 pub struct Runtime {
     pub client: PjRtClient,
     cache: Mutex<HashMap<String, std::sync::Arc<Exe>>>,
+    /// Compiled weight-stack concat graphs keyed by shape (`None` =
+    /// compilation failed once; don't retry).  Lives here, not in the
+    /// per-session [`stack::Stacker`], so sibling sessions share one
+    /// compile per shape — see `stack.rs`.
+    stack_exes: Mutex<HashMap<(usize, usize, usize), Option<std::sync::Arc<Exe>>>>,
     transfers: TransferStats,
 }
 
@@ -86,6 +102,7 @@ impl Runtime {
         Ok(Runtime {
             client,
             cache: Mutex::new(HashMap::new()),
+            stack_exes: Mutex::new(HashMap::new()),
             transfers: TransferStats::default(),
         })
     }
@@ -293,9 +310,11 @@ mod tests {
         t.count_upload(128);
         t.count_upload(64);
         t.count_download();
+        t.count_assembly();
         let b = t.snapshot();
         assert_eq!(b.uploads_since(&a), 2);
         assert_eq!(b.upload_bytes_since(&a), 192);
         assert_eq!(b.downloads - a.downloads, 1);
+        assert_eq!(b.assemblies - a.assemblies, 1);
     }
 }

@@ -1,0 +1,189 @@
+//! Device-side assembly of per-layer weight slabs into the `[L, out, in]`
+//! stacked inputs the decode/prefill graphs expect.
+//!
+//! The AOT graphs take each group's weight stack as ONE parameter, but the
+//! materialization cache (`anyprec::materialize`) holds *per-layer*
+//! buffers so a precision rebind re-uploads only the changed layers.  The
+//! bridge is a trivial concat graph, generated here as HLO **text** (the
+//! repo's interchange format, DESIGN.md §5) and compiled through the same
+//! `Runtime::load` path as the real artifacts: L parameters of shape
+//! `[1, out, in]`, one `concatenate` on dim 0.  Executing it is a
+//! device-to-device copy — no host traffic — so a rebind that changes k of
+//! L layers uploads O(k) weight bytes (`TransferStats::assemblies` counts
+//! these device-side rebuilds).
+//!
+//! Degradation: if HLO generation, compilation, or execution fails (or
+//! `DPLLM_NO_DEVICE_STACK` is set), the stack is assembled on the host
+//! from the cached slabs and uploaded whole — correct, but O(L) upload —
+//! and the failing shape is remembered so it is not retried.
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+use xla::PjRtBuffer;
+
+use crate::model::HloEntry;
+use crate::runtime::{wrap, Exe, Runtime};
+
+pub struct Stacker {
+    rt: Arc<Runtime>,
+}
+
+impl Stacker {
+    pub fn new(rt: Arc<Runtime>) -> Stacker {
+        Stacker { rt }
+    }
+
+    /// Assemble a `[l, out, in]` stack, in layer order.  With `layers`
+    /// holding `l` device buffers of shape `[1, out, in]`, assembly is a
+    /// device-side concat; with `layers` empty (the caller skipped
+    /// per-layer uploads because the device path is unavailable), the
+    /// `hosts` slabs are concatenated on the host and uploaded whole.
+    pub fn stack(&self, dims: (usize, usize, usize), layers: &[&PjRtBuffer],
+                 hosts: &[&[f32]]) -> Result<PjRtBuffer> {
+        let (l, out, inn) = dims;
+        if l == 0 || hosts.len() != l || (layers.len() != l && !layers.is_empty()) {
+            bail!("stack arity: {} buffers / {} slabs for L={l}",
+                  layers.len(), hosts.len());
+        }
+        if layers.len() == l {
+            if let Some(exe) = self.exe_for(l, out, inn) {
+                // Device path: a run failure (e.g. donated/poisoned buffer)
+                // falls through to the host assembly rather than aborting
+                // the rebind.
+                if let Ok(mut replica) = exe.run_buffers(layers) {
+                    if replica.len() == 1 {
+                        self.rt.transfers().count_assembly();
+                        return Ok(replica.pop().expect("one output"));
+                    }
+                }
+            }
+        }
+        let mut data = Vec::with_capacity(l * out * inn);
+        for h in hosts {
+            if h.len() != out * inn {
+                bail!("host slab holds {} elements, wants {}", h.len(), out * inn);
+            }
+            data.extend_from_slice(h);
+        }
+        self.rt.upload_f32(&[l, out, inn], &data)
+    }
+
+    /// True when the device-side concat graph for `dims` is compiled and
+    /// ready (compiles on first ask).  Callers use this to decide whether
+    /// per-layer device mirrors are worth uploading at all.
+    pub fn device_side(&self, dims: (usize, usize, usize)) -> bool {
+        self.exe_for(dims.0, dims.1, dims.2).is_some()
+    }
+
+    fn exe_for(&self, l: usize, out: usize, inn: usize) -> Option<Arc<Exe>> {
+        if std::env::var_os("DPLLM_NO_DEVICE_STACK").is_some() {
+            return None;
+        }
+        // Shape-keyed, process-wide (lives on Runtime): sibling sessions
+        // share one compile per shape, and a failed build is remembered so
+        // the host fallback isn't preceded by a doomed compile each time.
+        let mut cache = self.rt.stack_exes.lock().unwrap();
+        if let Some(e) = cache.get(&(l, out, inn)) {
+            return e.clone();
+        }
+        let built = self.build_exe(l, out, inn).ok();
+        cache.insert((l, out, inn), built.clone());
+        built
+    }
+
+    /// Parse + compile the concat graph directly against the PJRT client.
+    /// Deliberately NOT routed through `Runtime::load`: that cache is
+    /// keyed by path forever, and these temp paths are process-unique —
+    /// caching them there would grow the runtime cache without bound as
+    /// sessions come and go.  The compiled Exe goes into Runtime's
+    /// shape-keyed `stack_exes` map instead (one entry per distinct
+    /// shape, process-wide).
+    fn build_exe(&self, l: usize, out: usize, inn: usize) -> Result<Arc<Exe>> {
+        // Process-unique sequence on top of the pid: concurrent Stackers
+        // (parallel test threads, sibling sessions) must never share a
+        // path — a mid-parse rewrite or removal by a sibling would fail
+        // this compile and permanently disable the O(k) device path for
+        // the shape.
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        let text = stack_hlo_text(l, out, inn);
+        let path = std::env::temp_dir().join(format!(
+            "dpllm_stack_{l}x{out}x{inn}_{}_{seq}.hlo",
+            std::process::id()
+        ));
+        std::fs::write(&path, text)
+            .with_context(|| format!("writing {}", path.display()))?;
+        let entry = HloEntry {
+            path: path.to_string_lossy().into_owned(),
+            args: (0..l).map(|p| format!("p{p}")).collect(),
+            outputs: vec!["stack".into()],
+        };
+        let compiled = (|| -> Result<Arc<Exe>> {
+            let proto = xla::HloModuleProto::from_text_file(&entry.path)
+                .map_err(wrap)
+                .with_context(|| format!("parsing {}", entry.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .rt
+                .client
+                .compile(&comp)
+                .map_err(wrap)
+                .with_context(|| format!("compiling {}", entry.path))?;
+            Ok(Arc::new(Exe { exe, entry: entry.clone() }))
+        })();
+        // The text only feeds the one-shot parse; don't litter temp_dir.
+        let _ = std::fs::remove_file(&path);
+        compiled
+    }
+}
+
+/// HLO text of the concat graph: L params `f32[1,out,in]` → `[L,out,in]`.
+fn stack_hlo_text(l: usize, out: usize, inn: usize) -> String {
+    let part = format!("f32[1,{out},{inn}]{{2,1,0}}");
+    let mut s = String::new();
+    let _ = writeln!(s, "HloModule stack_{l}x{out}x{inn}\n");
+    let _ = writeln!(s, "ENTRY %main {{");
+    for p in 0..l {
+        let _ = writeln!(s, "  %p{p} = {part} parameter({p})");
+    }
+    if l == 1 {
+        let _ = writeln!(s, "  ROOT %stack = {part} copy({part} %p0)");
+    } else {
+        let operands: Vec<String> =
+            (0..l).map(|p| format!("{part} %p{p}")).collect();
+        let _ = writeln!(
+            s,
+            "  ROOT %stack = f32[{l},{out},{inn}]{{2,1,0}} concatenate({}), dimensions={{0}}",
+            operands.join(", ")
+        );
+    }
+    let _ = writeln!(s, "}}");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hlo_text_shape() {
+        let t = stack_hlo_text(2, 4, 8);
+        assert!(t.contains("HloModule stack_2x4x8"));
+        assert!(t.contains("%p0 = f32[1,4,8]{2,1,0} parameter(0)"));
+        assert!(t.contains("%p1 = f32[1,4,8]{2,1,0} parameter(1)"));
+        assert!(t.contains(
+            "ROOT %stack = f32[2,4,8]{2,1,0} concatenate(f32[1,4,8]{2,1,0} %p0, \
+             f32[1,4,8]{2,1,0} %p1), dimensions={0}"
+        ));
+    }
+
+    #[test]
+    fn hlo_text_single_layer_is_copy() {
+        let t = stack_hlo_text(1, 3, 16);
+        assert!(t.contains("ROOT %stack = f32[1,3,16]{2,1,0} copy("));
+        assert!(!t.contains("concatenate"));
+    }
+}

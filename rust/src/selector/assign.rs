@@ -118,6 +118,12 @@ impl AssignProblem {
 /// any-precision store (HAWQ-V2-style second-order sensitivity: the
 /// fisher npz holds diag-F; error uses the store's own dequant residuals
 /// against the fp checkpoint).
+///
+/// Candidate probing rides the incremental dequant path: each (layer,
+/// group) materializes its codes once at 3 bits, then refines 3→4→5→6 one
+/// plane at a time (`code_{b+1} = code_b << 1 | bit_b`) instead of
+/// re-walking all planes per candidate — the 4-candidate sweep costs one
+/// full dequant plus three single-plane passes.
 pub fn problem_from_artifacts(model: &str) -> Result<AssignProblem> {
     use crate::anyprec::GROUPS;
     use crate::model::{art, ModelAssets};
@@ -128,6 +134,8 @@ pub fn problem_from_artifacts(model: &str) -> Result<AssignProblem> {
     let ckpt = load_npz(&art(&["models", model, "ckpt.npz"]))?;
     let mut omega = Vec::new();
     let mut m = Vec::new();
+    let mut codes: Vec<u8> = Vec::new();
+    let mut dq: Vec<f32> = Vec::new();
     for layer in 0..assets.cfg.n_layers {
         for g in GROUPS {
             let store = assets.store.group(g)?;
@@ -136,10 +144,16 @@ pub fn problem_from_artifacts(model: &str) -> Result<AssignProblem> {
             let n = store.out_dim * store.in_dim;
             let w_l = &w[layer * n..(layer + 1) * n];
             let f_l = &f[layer * n..(layer + 1) * n];
+            codes.resize(n, 0);
+            dq.resize(n, 0.0);
+            store.dequant_codes_into(layer, BITS[0], &mut codes)?;
             let mut row = [0f64; 4];
             for (bi, &b) in BITS.iter().enumerate() {
-                let dq = store.dequant(layer, b)?;
-                row[bi] = w_l.iter().zip(&dq.data).zip(f_l)
+                if b > BITS[0] {
+                    store.refine_codes_into(layer, b - 1, &mut codes)?;
+                }
+                store.lut_map_into(layer, b, &codes, &mut dq)?;
+                row[bi] = w_l.iter().zip(&dq).zip(f_l)
                     .map(|((&wv, &qv), &fv)| {
                         let d = (wv - qv) as f64;
                         fv as f64 * d * d

@@ -13,7 +13,7 @@ use dp_llm::anyprec::GROUPS;
 use dp_llm::coordinator::qos::{QosBudget, UtilizationSim};
 use dp_llm::coordinator::sched::{Request, RequestQueue, SchedPolicy};
 use dp_llm::coordinator::service::{CoreEvent, ServingCore, ServingEngine};
-use dp_llm::evalharness::{build_session, perplexity, Method};
+use dp_llm::evalharness::{build_session, build_session_with_cache, perplexity, Method};
 use dp_llm::model::{art, artifacts_available, Manifest, ModelAssets};
 use dp_llm::runtime::decode::{DecodeSession, EstMode};
 use dp_llm::runtime::Runtime;
@@ -308,6 +308,95 @@ fn serving_core_interleaves_two_requests_fifo() {
     for w in both_active.windows(2) {
         assert_ne!(w[0], w[1], "token stream not interleaved: {token_owners:?}");
     }
+}
+
+/// A precision rebind that changes k of L layers must re-upload O(k) — not
+/// O(L·groups) — weight bytes: unchanged layers come out of the weight
+/// materialization cache and the stacks re-assemble device-side
+/// (DESIGN.md §Perf, delta-rebind protocol).
+#[test]
+fn swap_bits_delta_materialization_uploads_o_k() {
+    require_artifacts!();
+    let rt = Arc::new(Runtime::new().unwrap());
+    let assets = ModelAssets::load(MODEL).unwrap();
+    let manifest = Manifest::load().unwrap();
+    let m = Method::Dpllm { tag: "4.00".into() };
+    // A *retaining* cache (the serving-engine configuration) — sessions
+    // built with plain build_session use a zero-retention cache and
+    // re-materialize whole stacks on rebind by design.
+    let mut session = build_session_with_cache(
+        &rt, &assets, &manifest, 5, &m, DecodeSession::fresh_weight_cache())
+        .unwrap();
+
+    // Flip the low candidate of wq in the first (up to) two layers.
+    let mut ec = session.ec.clone();
+    let flips: Vec<usize> = (0..session.cfg.n_layers.min(2))
+        .map(|layer| layer * GROUPS.len()) // linear index of (layer, "wq")
+        .collect();
+    let k = flips.len();
+    for &li in &flips {
+        ec.wl_bits[li] = if ec.wl_bits[li] < 6 { ec.wl_bits[li] + 1 } else { 3 };
+    }
+    let layer_bytes = assets.store.group("wq").unwrap().layer_slab_bytes() as u64;
+
+    let before = rt.transfers().snapshot();
+    let mat_before = session.materialize_stats();
+    let report = session.swap_bits(ec).unwrap();
+    let after = rt.transfers().snapshot();
+    let mat_after = session.materialize_stats();
+
+    assert_eq!(report.layers_changed, k);
+    assert_eq!(report.stacks_rebuilt, 1, "only wl_wq may rebuild");
+    assert_eq!(report.selector_uploads, 0, "selector params were unchanged");
+    // At most the k changed layers dequantize afresh (the cache may even
+    // hold their new bitwidths already, from wh/prefill materialization).
+    assert!(
+        mat_after.misses - mat_before.misses <= k as u64,
+        "rebind re-dequantized more than the changed layers: {mat_before:?} -> {mat_after:?}"
+    );
+    let uploaded = after.upload_bytes_since(&before);
+    if after.assemblies > before.assemblies {
+        // Device-side assembly: only changed layers crossed the bus.
+        assert!(
+            uploaded <= k as u64 * layer_bytes,
+            "rebind uploaded {uploaded}B for k={k} layers of {layer_bytes}B"
+        );
+    } else {
+        // Host-fallback assembly: one full wq stack — still one group, far
+        // from the 21-stack full rebuild the seed paid.
+        let l = session.cfg.n_layers as u64;
+        assert!(
+            uploaded <= (l + k as u64) * layer_bytes,
+            "host-fallback rebind uploaded {uploaded}B"
+        );
+    }
+
+    // The swapped session must still decode.
+    let mut gen = session.begin_empty().unwrap();
+    let out = session.advance(&mut gen, 7, EstMode::Approx).unwrap();
+    assert!(out.logits.iter().all(|v| v.is_finite()));
+}
+
+/// Sessions built through one shared weight cache dedupe materialization:
+/// an identical second configuration re-dequantizes nothing.
+#[test]
+fn shared_cache_dedupes_across_configs() {
+    require_artifacts!();
+    let rt = Arc::new(Runtime::new().unwrap());
+    let assets = ModelAssets::load(MODEL).unwrap();
+    let manifest = Manifest::load().unwrap();
+    let cache = DecodeSession::fresh_weight_cache();
+    let m = Method::Uniform { bits: 4 };
+    let s1 = build_session_with_cache(&rt, &assets, &manifest, 5, &m,
+                                      cache.clone()).unwrap();
+    let snap1 = s1.materialize_stats();
+    assert!(snap1.misses > 0);
+    let s2 = build_session_with_cache(&rt, &assets, &manifest, 5, &m,
+                                      cache.clone()).unwrap();
+    let snap2 = s2.materialize_stats();
+    assert_eq!(snap2.misses, snap1.misses,
+               "identical config re-dequantized through the shared cache");
+    assert!(snap2.hits > snap1.hits);
 }
 
 /// Perplexity ordering sanity: 6-bit uniform must beat 3-bit uniform, and a
