@@ -9,3 +9,6 @@ cargo fmt --check
 cargo clippy --all-targets -- -D warnings
 cargo build --release
 cargo test -q
+# Rustdoc gate: the public API docs (crate + module + item docs, incl.
+# intra-doc links) must keep compiling warning-free.
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet

@@ -61,6 +61,13 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\n{}", engine.metrics.summary().report());
+    let ts = rt.transfers().snapshot();
+    println!(
+        "batching: {} batched dispatches, mean occupancy {:.2} \
+         (dispatch amortization across same-target queries)",
+        ts.batched_steps,
+        ts.batch_occupancy as f64 / ts.batched_steps.max(1) as f64
+    );
 
     // The memory envelope tightens (another app claimed RAM): swap the
     // adaptation set for a leaner one.  Retired sessions are rebound in

@@ -8,6 +8,13 @@ reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
 Exported per model, into ``artifacts/hlo/<model>/``:
 
   decode_step.hlo.txt     dual-precision DP-LLM decode step (§5, DESIGN §5)
+  decode_step_b<B>.hlo.txt   batched decode step for B ∈ {2, 4, 8} slots
+                          (continuous batching — DESIGN §Batching); KV
+                          caches stay per-slot graph parameters/outputs
+                          (``kv0``..``kv<B-1>``) so each request's cache
+                          remains an independent device buffer across
+                          steps, while tokens/positions/rope/selector
+                          flags carry a leading batch dim
   prefill_<P>.hlo.txt     prompt ingestion for buckets P ∈ {64, 128, 256}
   anyprec_gemv_<b>.hlo.txt   standalone L1 bitplane-GEMV kernel (b ∈ 3..6)
   jl_estimate.hlo.txt     standalone L1 JL-projection estimator kernel
@@ -31,9 +38,11 @@ from . import io_utils as io
 from .kernels.anyprec_gemv import anyprec_gemv
 from .kernels.estimator import K_PROJ, jl_estimate
 from .model import (ASYNC_GROUPS, GROUPS, ModelConfig, PRESETS,
-                    decode_step_dual, kv_shape, prefill)
+                    decode_step_dual, decode_step_dual_batched, kv_shape,
+                    prefill)
 
 PREFILL_BUCKETS = (64, 128, 256)
+BATCH_BUCKETS = (2, 4, 8)
 
 
 def to_hlo_text(lowered) -> str:
@@ -61,15 +70,15 @@ def u8(*shape):
 # ---------------------------------------------------------------------------
 
 
-def decode_arg_specs(cfg: ModelConfig) -> list[tuple[str, object]]:
-    """(name, spec) for every positional argument, in order."""
+def shared_weight_specs(cfg: ModelConfig) -> list[tuple[str, object]]:
+    """The batch-invariant argument tail shared by the single-step and
+    batched decode graphs: non-linear params, wl/wh candidate stacks and
+    estimator parameters.  One source of truth — schema drift between
+    `decode_arg_specs` and `batched_decode_arg_specs` would otherwise
+    only surface at Rust artifact-load time."""
     d, v = cfg.d_model, cfg.vocab
     L = cfg.n_layers
-    hd2 = cfg.head_dim // 2
     args: list[tuple[str, object]] = [
-        ("token", i32()), ("pos", i32()),
-        ("cos", f32(hd2)), ("sin", f32(hd2)),
-        ("kv", f32(*kv_shape(cfg))),
         ("tok_emb", f32(v, d)), ("out_head", f32(v, d)),
         ("final_norm", f32(d)), ("ln1", f32(L, d)), ("ln2", f32(L, d)),
     ]
@@ -84,6 +93,19 @@ def decode_arg_specs(cfg: ModelConfig) -> list[tuple[str, object]]:
         args.append((f"linb_{g}", f32(L)))
         args.append((f"uselin_{g}", f32(L)))
         args.append((f"thr_{g}", f32(L)))
+    return args
+
+
+def decode_arg_specs(cfg: ModelConfig) -> list[tuple[str, object]]:
+    """(name, spec) for every positional argument, in order."""
+    L = cfg.n_layers
+    hd2 = cfg.head_dim // 2
+    args: list[tuple[str, object]] = [
+        ("token", i32()), ("pos", i32()),
+        ("cos", f32(hd2)), ("sin", f32(hd2)),
+        ("kv", f32(*kv_shape(cfg))),
+    ]
+    args += shared_weight_specs(cfg)
     for g in ASYNC_GROUPS:
         args.append((f"useh_{g}", f32(L)))
     args.append(("mode_exact", f32()))
@@ -113,6 +135,67 @@ def make_decode_fn(cfg: ModelConfig):
             a["kv"], use_async, a["mode_exact"])
         return (logits, kv_new, *[ests[g] for g in GROUPS],
                 *[use_eff[g] for g in GROUPS])
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Batched decode step (continuous batching across concurrent requests).
+# ---------------------------------------------------------------------------
+
+
+def batched_decode_arg_specs(cfg: ModelConfig, B: int) -> list[tuple[str, object]]:
+    """(name, spec) per positional argument of the B-slot batched decode.
+
+    Per-slot inputs carry a leading batch dim (``tokens``/``poss`` [B],
+    ``cos``/``sin`` [B, hd/2], ``useh_<g>`` [B, L]) — EXCEPT the KV
+    caches, which stay B separate ``kv<i>`` parameters of the single-step
+    shape: the Rust runtime keeps one device buffer per request and feeds
+    each straight back as ``kv<i>`` of the next batched call, so batch
+    membership can change between steps without gathering or scattering
+    KV state through a combined buffer.  Weights/estimator params are the
+    same shared arguments as ``decode_arg_specs``
+    (``shared_weight_specs``).
+    """
+    L = cfg.n_layers
+    hd2 = cfg.head_dim // 2
+    args: list[tuple[str, object]] = [
+        ("tokens", i32(B)), ("poss", i32(B)),
+        ("cos", f32(B, hd2)), ("sin", f32(B, hd2)),
+    ]
+    for i in range(B):
+        args.append((f"kv{i}", f32(*kv_shape(cfg))))
+    args += shared_weight_specs(cfg)
+    for g in ASYNC_GROUPS:
+        args.append((f"useh_{g}", f32(B, L)))
+    args.append(("mode_exact", f32()))
+    return args
+
+
+def batched_decode_output_names(B: int) -> list[str]:
+    return (["logits"] + [f"kv{i}" for i in range(B)]
+            + [f"est_{g}" for g in GROUPS] + [f"useh_{g}" for g in GROUPS])
+
+
+def make_batched_decode_fn(cfg: ModelConfig, B: int):
+    names = [n for n, _ in batched_decode_arg_specs(cfg, B)]
+
+    def f(*args):
+        a = dict(zip(names, args))
+        nl = {k: a[k] for k in ("tok_emb", "out_head", "final_norm", "ln1", "ln2")}
+        wl = {g: a[f"wl_{g}"] for g in GROUPS}
+        wh = {g: a[f"wh_{g}"] for g in GROUPS}
+        est = {}
+        for g in GROUPS:
+            for field in ("G", "lina", "linb", "uselin", "thr"):
+                est[f"{field}_{g}"] = a[f"{field}_{g}"]
+        kv = jnp.stack([a[f"kv{i}"] for i in range(B)])
+        use_async = {g: a[f"useh_{g}"] for g in ASYNC_GROUPS}
+        logits, kv_new, ests, use_eff = decode_step_dual_batched(
+            nl, wl, wh, est, cfg, a["tokens"], a["poss"], a["cos"], a["sin"],
+            kv, use_async, a["mode_exact"])
+        return (logits, *[kv_new[i] for i in range(B)],
+                *[ests[g] for g in GROUPS], *[use_eff[g] for g in GROUPS])
 
     return f
 
@@ -281,6 +364,23 @@ def export_model(name: str) -> dict:
     }
     print(f"[aot:{name}] decode_step ({os.path.getsize(path) / 1e3:.0f} kB)",
           flush=True)
+
+    # batched decode steps (continuous batching buckets)
+    for B in BATCH_BUCKETS:
+        specs = batched_decode_arg_specs(cfg, B)
+        lowered = jax.jit(make_batched_decode_fn(cfg, B)).lower(
+            *[s for _, s in specs])
+        path = io.art(*outdir, f"decode_step_b{B}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(to_hlo_text(lowered))
+        entry["entries"][f"decode_step_b{B}"] = {
+            "path": os.path.relpath(path, io.ART),
+            "args": [n for n, _ in specs],
+            "outputs": batched_decode_output_names(B),
+            "batch": B,
+        }
+        print(f"[aot:{name}] decode_step_b{B} "
+              f"({os.path.getsize(path) / 1e3:.0f} kB)", flush=True)
 
     # prefill buckets
     for P in PREFILL_BUCKETS:

@@ -390,6 +390,34 @@ def decode_step_dual(nl: dict, wl: dict, wh: dict, est: dict, cfg: ModelConfig,
     return logits, kv_new, ests_d, use_d
 
 
+def decode_step_dual_batched(nl, wl, wh, est, cfg: ModelConfig,
+                             tokens: jnp.ndarray, poss: jnp.ndarray,
+                             cos: jnp.ndarray, sin: jnp.ndarray,
+                             kv: jnp.ndarray, use_h_async: dict,
+                             mode_exact: jnp.ndarray):
+    """Batched ``decode_step_dual``: one device call decodes one token for
+    each of B concurrent requests (continuous batching across requests).
+
+    Leading batch dim on the per-request inputs: ``tokens``/``poss`` [B],
+    ``cos``/``sin`` [B, hd/2], ``kv`` [B, L, 2, H, Smax, hd], and each
+    ``use_h_async`` leaf [B, L] — every slot carries its own selector
+    flags, so one batched graph serves requests sitting at different
+    effective bitwidths.  Weight stacks, estimator parameters and
+    ``mode_exact`` are shared across the batch (one adaptation-set member
+    per batched graph; the Rust scheduler only packs requests whose target
+    stacks are the same device buffers).
+
+    Returns ``(logits [B, V], kv_new [B, ...], ests {g: [B, L]},
+    use_h_eff {g: [B, L]})``.
+    """
+
+    def single(token, pos, cos_1, sin_1, kv_1, use_1):
+        return decode_step_dual(nl, wl, wh, est, cfg, token, pos,
+                                cos_1, sin_1, kv_1, use_1, mode_exact)
+
+    return jax.vmap(single)(tokens, poss, cos, sin, kv, use_h_async)
+
+
 # ---------------------------------------------------------------------------
 # Reference greedy decoding in pure JAX (used by tests to cross-check the
 # Rust decode loop end to end).

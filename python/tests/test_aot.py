@@ -11,9 +11,10 @@ import numpy as np
 import pytest
 from jax._src.lib import xla_client as xc
 
-from compile.aot import (decode_arg_specs, decode_output_names, f32,
-                         make_decode_fn, make_prefill_fn, prefill_arg_specs,
-                         to_hlo_text)
+from compile.aot import (batched_decode_arg_specs, batched_decode_output_names,
+                         decode_arg_specs, decode_output_names, f32,
+                         make_batched_decode_fn, make_decode_fn,
+                         make_prefill_fn, prefill_arg_specs, to_hlo_text)
 from compile.kernels.estimator import K_PROJ
 from compile.model import (ASYNC_GROUPS, GROUPS, ModelConfig, extract_linears,
                            init_params, kv_shape, nonlinear_params)
@@ -99,3 +100,111 @@ def test_arg_spec_names_unique():
     names = [n for n, _ in decode_arg_specs(CFG)]
     assert len(names) == len(set(names))
     assert names[0] == "token" and names[-1] == "mode_exact"
+
+
+# ---------------------------------------------------------------------------
+# Batched decode (continuous batching buckets).
+# ---------------------------------------------------------------------------
+
+
+def _batched_args(cfg, params, B, seed=3):
+    """Random-but-deterministic inputs for the B-slot batched decode,
+    exercising distinct per-slot tokens/positions/KV/selector flags."""
+    nl = nonlinear_params(params)
+    lin = extract_linears(params)
+    rng = np.random.default_rng(seed)
+    L = cfg.n_layers
+    poss = rng.integers(0, cfg.max_seq - 2, size=B).astype(np.int32)
+    hd = cfg.head_dim
+    inv = 1.0 / (10000.0 ** (np.arange(0, hd, 2) / hd))
+    vals = {
+        "tokens": rng.integers(0, cfg.vocab, size=B).astype(np.int32),
+        "poss": poss,
+        "cos": np.stack([np.cos(p * inv) for p in poss]).astype(np.float32),
+        "sin": np.stack([np.sin(p * inv) for p in poss]).astype(np.float32),
+        "tok_emb": nl["tok_emb"], "out_head": nl["out_head"],
+        "final_norm": nl["final_norm"], "ln1": nl["ln1"], "ln2": nl["ln2"],
+        "mode_exact": np.float32(0.0),
+    }
+    for i in range(B):
+        vals[f"kv{i}"] = (rng.standard_normal(kv_shape(cfg)) * 0.01
+                          ).astype(np.float32)
+    for g in GROUPS:
+        o, i = cfg.group_shape(g)
+        w = np.asarray(lin[g])
+        vals[f"wl_{g}"] = (w * 0.9).astype(np.float32)
+        vals[f"wh_{g}"] = w
+        vals[f"G_{g}"] = (rng.standard_normal((L, K_PROJ, i)) * 0.05
+                          ).astype(np.float32)
+        vals[f"lina_{g}"] = rng.random(L).astype(np.float32)
+        vals[f"linb_{g}"] = rng.random(L).astype(np.float32) * 0.1
+        vals[f"uselin_{g}"] = (rng.random(L) < 0.5).astype(np.float32)
+        vals[f"thr_{g}"] = (rng.random(L) * 0.5).astype(np.float32)
+    for g in ASYNC_GROUPS:
+        vals[f"useh_{g}"] = (rng.random((B, L)) < 0.5).astype(np.float32)
+    return vals
+
+
+def test_batched_arg_spec_names_unique_and_ordered():
+    for B in (2, 4):
+        names = [n for n, _ in batched_decode_arg_specs(CFG, B)]
+        assert len(names) == len(set(names))
+        assert names[0] == "tokens" and names[-1] == "mode_exact"
+        assert [f"kv{i}" in names for i in range(B)] == [True] * B
+        outs = batched_decode_output_names(B)
+        assert outs[0] == "logits" and f"kv{B - 1}" in outs
+
+
+def test_batched_decode_matches_per_slot_single_step():
+    """Each slot of the batched graph must reproduce the single-step graph
+    on that slot's (token, pos, kv, flags) — the contract the Rust
+    `advance_batch` fast path relies on to be a drop-in replacement for
+    per-request `advance` calls."""
+    B = 2
+    params = init_params(CFG, seed=0)
+    vals = _batched_args(CFG, params, B)
+    bnames = [n for n, _ in batched_decode_arg_specs(CFG, B)]
+    bout = jax.jit(make_batched_decode_fn(CFG, B))(
+        *[jnp.asarray(vals[n]) for n in bnames])
+    bmap = dict(zip(batched_decode_output_names(B), bout))
+
+    snames = [n for n, _ in decode_arg_specs(CFG)]
+    single = jax.jit(make_decode_fn(CFG))
+    sonames = decode_output_names()
+    for slot in range(B):
+        sv = dict(vals)
+        sv["token"] = vals["tokens"][slot]
+        sv["pos"] = vals["poss"][slot]
+        sv["cos"] = vals["cos"][slot]
+        sv["sin"] = vals["sin"][slot]
+        sv["kv"] = vals[f"kv{slot}"]
+        for g in ASYNC_GROUPS:
+            sv[f"useh_{g}"] = vals[f"useh_{g}"][slot]
+        sout = single(*[jnp.asarray(sv[n]) for n in snames])
+        smap = dict(zip(sonames, sout))
+        np.testing.assert_allclose(np.asarray(bmap["logits"])[slot],
+                                   np.asarray(smap["logits"]),
+                                   rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(bmap[f"kv{slot}"]),
+                                   np.asarray(smap["kv"]),
+                                   rtol=2e-4, atol=2e-5)
+        for g in GROUPS:
+            np.testing.assert_allclose(np.asarray(bmap[f"est_{g}"])[slot],
+                                       np.asarray(smap[f"est_{g}"]),
+                                       rtol=2e-4, atol=2e-5)
+            # Effective decisions are 0/1 floats — must match exactly.
+            np.testing.assert_array_equal(np.asarray(bmap[f"useh_{g}"])[slot],
+                                          np.asarray(smap[f"useh_{g}"]))
+
+
+def test_batched_lowering_parses_back():
+    B = 2
+    specs = batched_decode_arg_specs(CFG, B)
+    lowered = jax.jit(make_batched_decode_fn(CFG, B)).lower(
+        *[s for _, s in specs])
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert text.count("parameter(") >= len(specs)
+    mod = xc._xla.hlo_module_from_text(text)
+    assert mod is not None
+    assert len(mod.as_serialized_hlo_module_proto()) > 1000

@@ -1,0 +1,212 @@
+//! Continuous-batching microbench (DESIGN.md §Batching).
+//!
+//! Part 1 (artifact-free): drives the real [`pick_batch`] scheduler over a
+//! synthetic request trace (16 requests × 32 tokens, one shape bucket) at
+//! B ∈ {1, 2, 4, 8} and reports dispatch-calls-per-token plus the pure
+//! scheduling overhead — the dispatch-amortization curve the batched AOT
+//! graphs exist to exploit, measurable on a fresh checkout.
+//!
+//! Part 2 (artifact-gated): serves B concurrent pinned-target requests
+//! through a real [`ServingCore`] at each batch cap and reports measured
+//! tokens/s and dispatch-calls/token from the
+//! `batched_steps`/`batch_occupancy` counters.
+//!
+//! Results land in `results/BENCH_batch.json` (see the README bench
+//! table); the acceptance bar — ≤ 0.35 dispatches/token at 4 concurrent
+//! same-target requests — is enforced by the
+//! `dispatch_calls_per_token_bounded_with_four_concurrent` integration
+//! test.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+use dp_llm::bench_support as bs;
+use dp_llm::coordinator::qos::QosBudget;
+use dp_llm::coordinator::sched::{Request, SchedPolicy};
+use dp_llm::coordinator::service::{pick_batch, BatchItem, CoreEvent,
+                                   ServingCore, ServingEngine};
+use dp_llm::evalharness::{build_session, perplexity, perplexity_batched,
+                          Method};
+use dp_llm::model::{art, Manifest, ModelAssets};
+use dp_llm::runtime::decode::EstMode;
+use dp_llm::runtime::Runtime;
+use dp_llm::util::json::Json;
+use dp_llm::util::npz::load_u16_bin;
+
+const SIM_REQUESTS: usize = 16;
+const SIM_TOKENS: usize = 32;
+
+/// Run the scheduling loop (admission → pick_batch → decrement) without a
+/// device; returns (dispatches, tokens decoded).
+fn simulate(max_batch: usize) -> (u64, u64) {
+    let mut queue: VecDeque<u64> = (0..SIM_REQUESTS as u64).collect();
+    // (admission seq, tokens remaining)
+    let mut active: Vec<(u64, usize)> = Vec::new();
+    let mut cursor = 0usize;
+    let mut dispatches = 0u64;
+    let mut tokens = 0u64;
+    while !active.is_empty() || !queue.is_empty() {
+        while active.len() < max_batch {
+            match queue.pop_front() {
+                Some(seq) => active.push((seq, SIM_TOKENS)),
+                None => break,
+            }
+        }
+        let items: Vec<BatchItem> = active
+            .iter()
+            .map(|&(seq, _)| BatchItem { seq, deadline: None, key: 0 })
+            .collect();
+        let picked = pick_batch(SchedPolicy::Fifo, cursor, &items, max_batch);
+        cursor += 1;
+        if picked.is_empty() {
+            break;
+        }
+        dispatches += 1;
+        tokens += picked.len() as u64;
+        for &i in &picked {
+            active[i].1 -= 1;
+        }
+        active.retain(|&(_, remaining)| remaining > 0);
+    }
+    (dispatches, tokens)
+}
+
+fn main() {
+    let mut rows = Vec::new();
+    let mut sim_rows = Vec::new();
+
+    // ---- Part 1: scheduling simulation (no artifacts needed) --------------
+    for b in [1usize, 2, 4, 8] {
+        let t0 = Instant::now();
+        let (dispatches, tokens) = simulate(b);
+        let sched_ns = t0.elapsed().as_nanos() as f64 / tokens.max(1) as f64;
+        let per_token = dispatches as f64 / tokens.max(1) as f64;
+        println!(
+            "sim B={b}: {dispatches} dispatches / {tokens} tokens \
+             = {per_token:.3} dispatch/token ({sched_ns:.0} ns/token scheduling)"
+        );
+        let mut o = Json::obj();
+        o.set("batch", b);
+        o.set("dispatch_calls_per_token", per_token);
+        o.set("tokens", tokens as f64);
+        o.set("scheduling_ns_per_token", sched_ns);
+        sim_rows.push(o);
+        rows.push(vec![
+            format!("sim B={b} dispatch/token"),
+            format!("{per_token:.3}"),
+        ]);
+    }
+
+    // ---- Part 2: real serving core (artifact-gated) -----------------------
+    let mut serving_rows = Vec::new();
+    if bs::require_artifacts("batch_micro") {
+        let rt = Arc::new(Runtime::new().unwrap());
+        match ServingEngine::load(&rt, "dpl-tiny", 5, &["4.00"]) {
+            Ok(engine) => {
+                let max = engine.session_for_target(4.0).max_batch();
+                for b in [1usize, 2, 4, 8] {
+                    if b > 1 && b > max {
+                        println!("serving B={b}: no batched artifact; skipping");
+                        continue;
+                    }
+                    let mut core = ServingCore::new(&engine, SchedPolicy::Fifo)
+                        .with_max_active(b)
+                        .with_max_batch(b);
+                    for id in 0..b as u64 {
+                        core.admit_pinned(
+                            Request::new(id, "The town of", 17,
+                                         QosBudget::best_effort()),
+                            4.0,
+                        )
+                        .unwrap();
+                    }
+                    let before = rt.transfers().snapshot();
+                    let t0 = Instant::now();
+                    let mut decoded = 0u64;
+                    core.drain(&mut |ev| {
+                        if let CoreEvent::Token { index, .. } = ev {
+                            if *index > 0 {
+                                decoded += 1;
+                            }
+                        }
+                    })
+                    .unwrap();
+                    let secs = t0.elapsed().as_secs_f64();
+                    let after = rt.transfers().snapshot();
+                    let batched = after.batched_steps - before.batched_steps;
+                    let occupancy =
+                        after.batch_occupancy - before.batch_occupancy;
+                    let singles = decoded.saturating_sub(occupancy);
+                    let per_token =
+                        (batched + singles) as f64 / decoded.max(1) as f64;
+                    let tok_s = decoded as f64 / secs.max(1e-9);
+                    println!(
+                        "serving B={b}: {tok_s:.1} tok/s, \
+                         {per_token:.3} dispatch/token \
+                         ({batched} batched, occupancy {occupancy})"
+                    );
+                    let mut o = Json::obj();
+                    o.set("batch", b);
+                    o.set("tokens_per_s", tok_s);
+                    o.set("dispatch_calls_per_token", per_token);
+                    o.set("mean_occupancy",
+                          occupancy as f64 / batched.max(1) as f64);
+                    serving_rows.push(o);
+                    rows.push(vec![
+                        format!("serving B={b} tok/s | dispatch/token"),
+                        format!("{tok_s:.1} | {per_token:.3}"),
+                    ]);
+                }
+            }
+            Err(e) => println!("[batch_micro] engine load failed ({e:#}); \
+                                serving part skipped"),
+        }
+
+        // Teacher-forced eval through the batched fast path: perplexity
+        // must match the single-step path while ms/token drops.
+        if let (Ok(assets), Ok(manifest), Ok(stream)) = (
+            ModelAssets::load("dpl-tiny"),
+            Manifest::load(),
+            load_u16_bin(&art(&["data", "synthwiki_eval.bin"])),
+        ) {
+            let m = Method::Dpllm { tag: "4.00".into() };
+            match build_session(&rt, &assets, &manifest, 5, &m) {
+                Ok(session) => {
+                    let single = perplexity(&session, &stream, 32, 128,
+                                            EstMode::Approx)
+                        .unwrap();
+                    let batched = perplexity_batched(&session, &stream, 32,
+                                                     128, EstMode::Approx, 4)
+                        .unwrap();
+                    println!(
+                        "eval ppl single {:.4} ({:.2} ms/tok) vs batched \
+                         {:.4} ({:.2} ms/tok)",
+                        single.ppl, single.ms_per_token,
+                        batched.ppl, batched.ms_per_token
+                    );
+                    rows.push(vec![
+                        "eval ms/token single | batched(B=4)".into(),
+                        format!("{:.2} | {:.2}", single.ms_per_token,
+                                batched.ms_per_token),
+                    ]);
+                }
+                Err(e) => println!("[batch_micro] eval session failed ({e:#})"),
+            }
+        }
+    }
+
+    let mut j = Json::obj();
+    j.set("bench", "batch");
+    j.set("sim_requests", SIM_REQUESTS);
+    j.set("sim_tokens_per_request", SIM_TOKENS);
+    j.set("sim", Json::Arr(sim_rows));
+    j.set("serving", Json::Arr(serving_rows));
+    let _ = std::fs::create_dir_all("results");
+    let _ = std::fs::write("results/BENCH_batch.json", j.dump());
+    println!("wrote results/BENCH_batch.json");
+
+    bs::emit("batch_micro",
+             "Continuous batching (dispatch amortization at B ∈ {1,2,4,8})",
+             &["case", "value"], &rows);
+}

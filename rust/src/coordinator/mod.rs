@@ -16,4 +16,4 @@ pub mod service;
 
 pub use qos::{AdaptationPolicy, QosBudget, UtilizationSim};
 pub use sched::{Request, RequestQueue, SchedPolicy};
-pub use service::{CoreEvent, ServeOutcome, ServingCore, ServingEngine};
+pub use service::{BatchItem, CoreEvent, ServeOutcome, ServingCore, ServingEngine};

@@ -1,11 +1,15 @@
 //! Request queue + scheduling policies.
 //!
 //! The serving core interleaves active generations at token granularity
-//! (see `service::ServingCore`), so the queue's job is *admission* order:
-//! FIFO for throughput studies, EDF (earliest deadline first) when QoS
-//! deadlines differ across queries.  EDF is a binary heap keyed on the
-//! absolute deadline instant with a FIFO tie-break sequence — `pop` is
-//! O(log n), not the linear scan + `VecDeque::remove` it used to be.
+//! and batches compatible ones into shared device dispatches (see
+//! `service::ServingCore` / `service::pick_batch`), so the queue's job is
+//! *admission* order: FIFO for throughput studies, EDF (earliest deadline
+//! first) when QoS deadlines differ across queries.  EDF is a binary heap
+//! keyed on the absolute deadline instant with a FIFO tie-break sequence —
+//! `pop` is O(log n), not the linear scan + `VecDeque::remove` it used to
+//! be.  Admission re-runs before every dispatch, so a batch slot freed
+//! by a request finishing mid-batch is refilled in time for the next
+//! batched step — see `ServingCore::run` and the server executor.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};

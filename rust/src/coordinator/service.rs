@@ -7,9 +7,21 @@
 //! ([`GenState`]), round-robins (FIFO) or deadline-orders (EDF) **per
 //! token** across the active set, re-selects each request's target
 //! precision mid-stream when utilization moves, and streams token events to
-//! the caller.  One decode step serves one token of one request — a tight
-//! deadline admitted mid-generation preempts best-effort traffic at the
-//! next token boundary instead of waiting a whole generation.
+//! the caller.  A tight deadline admitted mid-generation preempts
+//! best-effort traffic at the next token boundary instead of waiting a
+//! whole generation.
+//!
+//! Each scheduling step serves one token of the policy-chosen request —
+//! and, when the batched decode artifacts are available, one token of
+//! every *batch-compatible* runnable request alongside it in the SAME
+//! device dispatch: [`pick_batch`] groups the active set by target
+//! session (same weight-stack device buffers, same KV shape bucket) and
+//! [`DecodeSession::advance_batch`] packs the group into one
+//! `decode_step_b{2,4,8}` call, preserving FIFO/EDF semantics (the lead
+//! is always exactly [`pick_next`]'s choice) while cutting device
+//! dispatches per generated token from 1.0 toward 1/B — DESIGN.md
+//! §Batching.  When no batch forms (mixed targets, B = 1 artifacts,
+//! `DPLLM_NO_BATCH`) every step degenerates to the per-request path.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -350,6 +362,81 @@ pub fn pick_next(policy: SchedPolicy, rr_cursor: usize,
     }
 }
 
+/// One active generation as seen by [`pick_batch`]: admission sequence,
+/// absolute deadline (None = best effort), and an opaque
+/// batch-compatibility key.  Two generations may share a device dispatch
+/// only when their keys are equal; the serving core keys on the target
+/// [`DecodeSession`] pointer, which subsumes "same weight-stack `Arc`"
+/// and "compatible KV shape bucket" (one session = one model config =
+/// one `[L, 2, H, Smax, hd]` KV bucket).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchItem {
+    pub seq: u64,
+    pub deadline: Option<Instant>,
+    pub key: usize,
+}
+
+/// Select up to `max_batch` active generations to advance in ONE device
+/// dispatch.  Pure, so the grouping/fairness properties are unit-testable
+/// without a device.  Contract:
+///
+/// * the scheduling *lead* is exactly [`pick_next`]'s choice — batching
+///   never changes who is served next, only who rides along for free;
+/// * only items sharing the lead's `key` join the batch;
+/// * FIFO: membership is a circular window starting at the lead (so the
+///   `rr_cursor` rotation stays fair when more than `max_batch`
+///   compatible generations are runnable); the returned order is
+///   admission order, i.e. stable slot/event order across steps;
+/// * EDF: membership and order are earliest-deadline-first with the
+///   admission sequence as tie-break and best-effort last — deadline
+///   priority is preserved *within* the batch;
+/// * `max_batch <= 1` degenerates to `vec![pick_next(..)]`.
+pub fn pick_batch(policy: SchedPolicy, rr_cursor: usize, items: &[BatchItem],
+                  max_batch: usize) -> Vec<usize> {
+    let pairs: Vec<(u64, Option<Instant>)> =
+        items.iter().map(|it| (it.seq, it.deadline)).collect();
+    let Some(lead) = pick_next(policy, rr_cursor, &pairs) else {
+        return Vec::new();
+    };
+    pick_batch_with_lead(policy, lead, items, max_batch)
+}
+
+/// [`pick_batch`] with the scheduling lead already computed: the serving
+/// core calls [`pick_next`] once to derive the batch cap from the lead's
+/// session, then reuses that pick here — one policy scan per step and a
+/// single source of truth for the "lead == pick_next's choice" contract.
+fn pick_batch_with_lead(policy: SchedPolicy, lead: usize, items: &[BatchItem],
+                        max_batch: usize) -> Vec<usize> {
+    let key = items[lead].key;
+    let cap = max_batch.max(1);
+    let mut sel = vec![lead];
+    match policy {
+        SchedPolicy::Fifo => {
+            for off in 1..items.len() {
+                if sel.len() >= cap {
+                    break;
+                }
+                let i = (lead + off) % items.len();
+                if items[i].key == key {
+                    sel.push(i);
+                }
+            }
+            sel.sort_by_key(|&i| items[i].seq);
+        }
+        SchedPolicy::Edf => {
+            let mut rest: Vec<usize> = (0..items.len())
+                .filter(|&i| i != lead && items[i].key == key)
+                .collect();
+            rest.sort_by_key(|&i| {
+                (items[i].deadline.is_none(), items[i].deadline, items[i].seq)
+            });
+            rest.truncate(cap - 1);
+            sel.extend(rest);
+        }
+    }
+    sel
+}
+
 /// One in-flight generation inside the core.
 struct Generation<'e> {
     req: Request,
@@ -373,7 +460,10 @@ impl Generation<'_> {
     }
 }
 
-/// Token-interleaved decode loop over one [`ServingEngine`].
+/// Token-interleaved decode loop over one [`ServingEngine`], with a
+/// batched fast path: every scheduling step advances the policy-chosen
+/// generation AND any batch-compatible runnable generations in a single
+/// device dispatch (see [`pick_batch`] / DESIGN.md §Batching).
 pub struct ServingCore<'e> {
     engine: &'e ServingEngine,
     policy: SchedPolicy,
@@ -381,11 +471,28 @@ pub struct ServingCore<'e> {
     rr_cursor: usize,
     next_seq: u64,
     max_active: usize,
+    /// Cap on generations sharing one device dispatch (further capped by
+    /// the lead session's largest `decode_step_b*` bucket).  1 disables
+    /// batching entirely.
+    max_batch: usize,
+    /// Batched dispatches that failed and fell back to per-request
+    /// advances (see [`ServingCore::batch_errors`]).
+    batch_errors: u64,
     token_clock: u64,
+    /// Last `token_clock / RESELECT_EVERY` epoch a re-selection ran for
+    /// (see [`ServingCore::reselect_due`]).
+    reselect_epoch: Option<u64>,
 }
 
 impl<'e> ServingCore<'e> {
     pub fn new(engine: &'e ServingEngine, policy: SchedPolicy) -> ServingCore<'e> {
+        // Escape hatch for perf comparisons and misbehaving batched
+        // artifacts: DPLLM_NO_BATCH forces per-request dispatch.
+        let max_batch = if std::env::var_os("DPLLM_NO_BATCH").is_some() {
+            1
+        } else {
+            usize::MAX
+        };
         ServingCore {
             engine,
             policy,
@@ -393,12 +500,22 @@ impl<'e> ServingCore<'e> {
             rr_cursor: 0,
             next_seq: 0,
             max_active: DEFAULT_MAX_ACTIVE,
+            max_batch,
+            batch_errors: 0,
             token_clock: 0,
+            reselect_epoch: None,
         }
     }
 
     pub fn with_max_active(mut self, n: usize) -> ServingCore<'e> {
         self.max_active = n.max(1);
+        self
+    }
+
+    /// Cap the number of generations packed into one device dispatch
+    /// (1 = per-request dispatch, the pre-batching behavior).
+    pub fn with_max_batch(mut self, n: usize) -> ServingCore<'e> {
+        self.max_batch = n.max(1);
         self
     }
 
@@ -414,10 +531,34 @@ impl<'e> ServingCore<'e> {
         self.active.len() < self.max_active
     }
 
-    /// Decode steps taken since construction (drives the re-selection
-    /// cadence).
+    /// Tokens decoded since construction (drives the re-selection
+    /// cadence).  A batched step advances this by its occupancy, so it
+    /// counts tokens, not device dispatches.
     pub fn token_clock(&self) -> u64 {
         self.token_clock
+    }
+
+    /// Batched dispatches that failed and fell back to per-request
+    /// advances.  Non-zero with a growing trend means the
+    /// `decode_step_b*` artifacts are broken and every step is paying a
+    /// doomed dispatch — regenerate them or set `DPLLM_NO_BATCH=1`.
+    pub fn batch_errors(&self) -> u64 {
+        self.batch_errors
+    }
+
+    /// True when a utilization tick + mid-stream re-selection is due:
+    /// once per [`RESELECT_EVERY`]-token epoch, and on the first call.
+    /// Epoch-based rather than `token_clock % RESELECT_EVERY == 0`
+    /// because a batched step can move the clock across a multiple
+    /// without ever landing on it.
+    pub fn reselect_due(&mut self) -> bool {
+        let epoch = self.token_clock / RESELECT_EVERY;
+        if self.reselect_epoch == Some(epoch) {
+            false
+        } else {
+            self.reselect_epoch = Some(epoch);
+            true
+        }
     }
 
     /// Admit one request at the QoS-policy target for `utilization`.
@@ -508,68 +649,182 @@ impl<'e> ServingCore<'e> {
         switched
     }
 
-    /// Advance ONE generation by ONE token (policy-chosen), emitting the
-    /// streamed token event and, on completion, the terminal outcome.
-    /// The first call for a request emits its prefill-produced token 0.
+    /// Advance the policy-chosen generation by ONE token — together with
+    /// every batch-compatible runnable generation in the same device
+    /// dispatch when the batched artifacts are available ([`pick_batch`]
+    /// + [`DecodeSession::advance_batch`]).  Emits the streamed token
+    /// events (a generation's first pick also emits its prefill-produced
+    /// token 0) and, on completion, the terminal outcomes.  A failed
+    /// batched dispatch falls back to per-request advances so one broken
+    /// generation is evicted without poisoning its batch mates.
     pub fn step(&mut self) -> Result<Vec<CoreEvent>> {
-        let items: Vec<(u64, Option<Instant>)> = self
+        let pairs: Vec<(u64, Option<Instant>)> = self
             .active
             .iter()
             .map(|g| (g.seq, g.req.deadline_instant()))
             .collect();
-        let Some(idx) = pick_next(self.policy, self.rr_cursor, &items) else {
+        let Some(lead) = pick_next(self.policy, self.rr_cursor, &pairs) else {
             return Ok(Vec::new());
         };
+        let session: &'e DecodeSession = self.active[lead].session;
+        let cap = self.max_batch.min(session.max_batch()).max(1);
+        let picked = if cap > 1 {
+            let items: Vec<BatchItem> = self
+                .active
+                .iter()
+                .map(|g| BatchItem {
+                    seq: g.seq,
+                    deadline: g.req.deadline_instant(),
+                    key: g.session as *const DecodeSession as usize,
+                })
+                .collect();
+            pick_batch_with_lead(self.policy, lead, &items, cap)
+        } else {
+            vec![lead]
+        };
         self.rr_cursor = self.rr_cursor.wrapping_add(1);
-        self.token_clock += 1;
+        let picked_ids: Vec<u64> =
+            picked.iter().map(|&i| self.active[i].req.id).collect();
         let mut events = Vec::new();
 
-        let g = &mut self.active[idx];
-        // Token 0 (from prefill) streams on the generation's first step;
+        // Token 0 (from prefill) streams on the generation's first pick;
         // TTFT is measured to *here*, not to admission.
-        if g.gen.steps == 0 {
-            g.ttft_ms = g.req.arrival.elapsed().as_secs_f64() * 1e3;
-            events.push(CoreEvent::Token {
-                id: g.req.id,
-                index: 0,
-                token: g.next_token,
-                piece: self.engine.tokenizer.decode_one(g.next_token),
-                target: g.target,
-            });
+        for &i in &picked {
+            let g = &mut self.active[i];
+            if g.gen.steps == 0 {
+                g.ttft_ms = g.req.arrival.elapsed().as_secs_f64() * 1e3;
+                events.push(CoreEvent::Token {
+                    id: g.req.id,
+                    index: 0,
+                    token: g.next_token,
+                    piece: self.engine.tokenizer.decode_one(g.next_token),
+                    target: g.target,
+                });
+            }
         }
-        if !g.finished() {
+
+        // Advance the non-finished picked generations: one batched
+        // dispatch when ≥ 2 share the lead's session, else per request.
+        let to_advance: Vec<usize> = picked
+            .iter()
+            .copied()
+            .filter(|&i| !self.active[i].finished())
+            .collect();
+        let est_mode = self.engine.est_mode;
+        let mut advanced: Vec<u64> = Vec::new();
+        let mut failures: Vec<(u64, String)> = Vec::new();
+        let advance_one = |g: &mut Generation<'e>,
+                               advanced: &mut Vec<u64>,
+                               failures: &mut Vec<(u64, String)>| {
             let t0 = Instant::now();
             let stepped = g
                 .session
-                .advance(&mut g.gen, g.next_token, self.engine.est_mode)
+                .advance(&mut g.gen, g.next_token, est_mode)
                 .and_then(|out| DecodeSession::argmax(&out.logits));
             g.decode_ms += t0.elapsed().as_secs_f64() * 1e3;
-            let next = match stepped {
-                Ok(n) => n,
-                Err(e) => {
-                    // Evict the broken generation; the rest of the active
-                    // set keeps interleaving.
-                    let g = self.active.remove(idx);
-                    events.push(CoreEvent::Failed {
-                        id: g.req.id,
-                        error: format!("{e:#}"),
-                    });
-                    return Ok(events);
+            match stepped {
+                Ok(next) => {
+                    g.next_token = next;
+                    g.out_ids.push(next);
+                    advanced.push(g.req.id);
                 }
+                Err(e) => failures.push((g.req.id, format!("{e:#}"))),
+            }
+        };
+        if to_advance.len() >= 2 {
+            let t0 = Instant::now();
+            let mut gens: Vec<&mut Generation<'e>> = self
+                .active
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| to_advance.contains(i))
+                .map(|(_, g)| g)
+                .collect();
+            let batch_result = {
+                let mut slots: Vec<(&mut GenState<'e>, u32)> = gens
+                    .iter_mut()
+                    .map(|g| {
+                        let tok = g.next_token;
+                        (&mut g.gen, tok)
+                    })
+                    .collect();
+                session.advance_batch(&mut slots, est_mode)
             };
-            g.next_token = next;
-            g.out_ids.push(next);
-            events.push(CoreEvent::Token {
-                id: g.req.id,
-                index: g.out_ids.len() - 1,
-                token: next,
-                piece: self.engine.tokenizer.decode_one(next),
-                target: g.target,
-            });
+            match batch_result {
+                Ok(outs) => {
+                    // One dispatch served outs.len() tokens; attribute the
+                    // wall time evenly across the slots.
+                    let per_ms = t0.elapsed().as_secs_f64() * 1e3
+                        / outs.len().max(1) as f64;
+                    for (g, out) in gens.iter_mut().zip(outs) {
+                        g.decode_ms += per_ms;
+                        match DecodeSession::argmax(&out.logits) {
+                            Ok(next) => {
+                                g.next_token = next;
+                                g.out_ids.push(next);
+                                advanced.push(g.req.id);
+                            }
+                            Err(e) => {
+                                failures.push((g.req.id, format!("{e:#}")))
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    // advance_batch mutates nothing on failure, so every
+                    // slot can be retried individually — the broken one
+                    // is evicted alone.  Surface the error (first
+                    // occurrence loudly): a persistently failing batched
+                    // artifact would otherwise silently pay a doomed
+                    // dispatch per token forever.
+                    self.batch_errors += 1;
+                    if self.batch_errors == 1 {
+                        eprintln!(
+                            "[core] batched dispatch failed, falling back to \
+                             per-request steps (set DPLLM_NO_BATCH=1 or fix \
+                             the decode_step_b* artifacts if this persists): \
+                             {e:#}"
+                        );
+                    }
+                    for g in gens.iter_mut() {
+                        advance_one(&mut **g, &mut advanced, &mut failures);
+                    }
+                }
+            }
+        } else if let Some(&i) = to_advance.first() {
+            advance_one(&mut self.active[i], &mut advanced, &mut failures);
         }
-        if g.finished() {
-            let g = self.active.remove(idx);
-            events.push(CoreEvent::Done(self.complete(g)));
+        self.token_clock += advanced.len() as u64;
+
+        // Stream the decoded tokens in pack order (EDF: deadline order;
+        // FIFO: admission order).
+        for &i in &picked {
+            let g = &self.active[i];
+            if advanced.contains(&g.req.id) {
+                events.push(CoreEvent::Token {
+                    id: g.req.id,
+                    index: g.out_ids.len() - 1,
+                    token: g.next_token,
+                    piece: self.engine.tokenizer.decode_one(g.next_token),
+                    target: g.target,
+                });
+            }
+        }
+        // Evict broken generations; the rest of the set keeps serving.
+        for (id, error) in failures {
+            if let Some(pos) = self.active.iter().position(|g| g.req.id == id) {
+                self.active.remove(pos);
+            }
+            events.push(CoreEvent::Failed { id, error });
+        }
+        // Completions (indices may have shifted — resolve by id).
+        for id in picked_ids {
+            if let Some(pos) = self.active.iter().position(|g| g.req.id == id) {
+                if self.active[pos].finished() {
+                    let g = self.active.remove(pos);
+                    events.push(CoreEvent::Done(self.complete(g)));
+                }
+            }
         }
         Ok(events)
     }
@@ -580,8 +835,14 @@ impl<'e> ServingCore<'e> {
                on_event: &mut dyn FnMut(&CoreEvent)) -> Result<Vec<ServeOutcome>> {
         let mut done = Vec::new();
         while self.has_active() || !queue.is_empty() {
+            // Admission runs before EVERY dispatch — in particular
+            // immediately after a step in which a request finished
+            // mid-batch, so the freed slot is refilled in time to join
+            // the very next batched dispatch (regression-tested by
+            // admission_refills_freed_batch_slot_mid_flight; keep this
+            // at the loop head, before reselect/step).
             self.admit_from(queue, util.current())?;
-            if self.token_clock % RESELECT_EVERY == 0 {
+            if self.reselect_due() {
                 let u = util.tick();
                 self.reselect(u);
             }
@@ -721,5 +982,104 @@ mod tests {
     fn pick_next_empty_is_none() {
         assert_eq!(pick_next(SchedPolicy::Fifo, 3, &[]), None);
         assert_eq!(pick_next(SchedPolicy::Edf, 0, &[]), None);
+    }
+
+    fn bi(seq: u64, deadline: Option<Instant>, key: usize) -> BatchItem {
+        BatchItem { seq, deadline, key }
+    }
+
+    /// Only generations sharing the lead's compatibility key (same target
+    /// session / shape bucket) may join its dispatch.
+    #[test]
+    fn pick_batch_groups_by_key() {
+        let items = vec![
+            bi(0, None, 7),
+            bi(1, None, 7),
+            bi(2, None, 9), // different target stacks — must not join
+            bi(3, None, 7),
+        ];
+        let sel = pick_batch(SchedPolicy::Fifo, 0, &items, 8);
+        assert_eq!(sel, vec![0, 1, 3]);
+        // Lead rotated onto the incompatible item: it runs alone-keyed,
+        // batching with nothing but its own key.
+        let sel = pick_batch(SchedPolicy::Fifo, 2, &items, 8);
+        assert_eq!(sel, vec![2]);
+    }
+
+    /// EDF ordering is preserved within a batch: earliest deadline first,
+    /// admission sequence as tie-break, best-effort last — and the lead
+    /// is exactly pick_next's choice.
+    #[test]
+    fn pick_batch_edf_order_within_batch() {
+        let t = |ms| now_plus(ms);
+        let items = vec![
+            bi(0, t(300), 1),
+            bi(1, t(50), 1),
+            bi(2, None, 1),
+            bi(3, t(100), 1),
+        ];
+        let pairs: Vec<(u64, Option<Instant>)> =
+            items.iter().map(|it| (it.seq, it.deadline)).collect();
+        let lead = pick_next(SchedPolicy::Edf, 0, &pairs).unwrap();
+        let sel = pick_batch(SchedPolicy::Edf, 0, &items, 8);
+        assert_eq!(sel, vec![1, 3, 0, 2]);
+        assert_eq!(sel[0], lead);
+        // Capacity 2 keeps only the two tightest deadlines.
+        assert_eq!(pick_batch(SchedPolicy::Edf, 0, &items, 2), vec![1, 3]);
+    }
+
+    /// max_batch == 1 degenerates to pick_next under both policies — the
+    /// B = 1 fallback is byte-for-byte the pre-batching schedule.
+    #[test]
+    fn pick_batch_b1_matches_pick_next() {
+        let items = vec![
+            bi(0, None, 1),
+            bi(1, now_plus(100), 1),
+            bi(2, now_plus(40), 2),
+        ];
+        let pairs: Vec<(u64, Option<Instant>)> =
+            items.iter().map(|it| (it.seq, it.deadline)).collect();
+        for cursor in 0..7 {
+            for policy in [SchedPolicy::Fifo, SchedPolicy::Edf] {
+                assert_eq!(
+                    pick_batch(policy, cursor, &items, 1),
+                    vec![pick_next(policy, cursor, &pairs).unwrap()],
+                    "policy {policy:?} cursor {cursor}"
+                );
+            }
+        }
+        assert!(pick_batch(SchedPolicy::Fifo, 0, &[], 4).is_empty());
+    }
+
+    /// FIFO with more runnable generations than batch slots: the cursor
+    /// rotates the membership window so every generation is served, and
+    /// the returned order is admission order (stable slot order).
+    #[test]
+    fn pick_batch_fifo_rotation_is_fair_and_stable() {
+        let items: Vec<BatchItem> = (0..5).map(|s| bi(s, None, 3)).collect();
+        let mut served = [0usize; 5];
+        for cursor in 0..10 {
+            let sel = pick_batch(SchedPolicy::Fifo, cursor, &items, 2);
+            assert_eq!(sel.len(), 2);
+            let mut sorted = sel.clone();
+            sorted.sort_unstable();
+            assert_eq!(sel, sorted, "batch order must be admission order");
+            for i in sel {
+                served[i] += 1;
+            }
+        }
+        assert!(served.iter().all(|&n| n >= 2),
+                "rotation starved a generation: {served:?}");
+    }
+
+    /// When everything fits in one batch the slot order is identical
+    /// every step, so event streams stay strictly interleaved.
+    #[test]
+    fn pick_batch_fifo_full_fit_is_stable_across_cursors() {
+        let items: Vec<BatchItem> = (0..3).map(|s| bi(s, None, 1)).collect();
+        for cursor in 0..6 {
+            assert_eq!(pick_batch(SchedPolicy::Fifo, cursor, &items, 4),
+                       vec![0, 1, 2]);
+        }
     }
 }

@@ -10,7 +10,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::model::calib::{load_maxprec, DpllmConfig, StaticConfig};
 use crate::model::{art, Manifest, ModelAssets};
-use crate::runtime::decode::{DecodeSession, EstMode, WeightCache};
+use crate::runtime::decode::{DecodeSession, EstMode, GenState, WeightCache};
 use crate::runtime::Runtime;
 use crate::selector::EngineConfig;
 use crate::util::npz::load_u16_bin;
@@ -121,7 +121,64 @@ pub fn perplexity(session: &DecodeSession, stream: &[u16], chunk: usize,
     })
 }
 
-/// -log softmax(logits)[target]
+/// [`perplexity`] through the batched decode fast path: up to `batch`
+/// independent chunks advance in lockstep via
+/// [`DecodeSession::advance_batch`], cutting device dispatches per token
+/// by ~the batch factor while preserving per-chunk numerics (each chunk
+/// still owns its [`GenState`] + selector state; `batch` is clamped to
+/// the session's largest batched bucket, and `batch == 1` — or artifacts
+/// without batched entries — reproduces [`perplexity`]'s per-step path).
+pub fn perplexity_batched(session: &DecodeSession, stream: &[u16],
+                          chunk: usize, max_tokens: usize, mode: EstMode,
+                          batch: usize) -> Result<PplResult> {
+    if stream.len() < chunk + 1 {
+        bail!("stream too short");
+    }
+    let batch = batch.clamp(1, session.max_batch());
+    let n_chunks = (max_tokens / chunk).max(1);
+    let bases: Vec<usize> = (0..n_chunks)
+        .map(|c| c * (chunk + 1))
+        .filter(|b| b + chunk + 1 <= stream.len())
+        .collect();
+    if bases.is_empty() {
+        bail!("stream too short for chunk size {chunk}");
+    }
+    let mut nll_sum = 0.0;
+    let mut count = 0usize;
+    let mut eff_sum = 0.0;
+    let mut chunks_done = 0usize;
+    let t0 = std::time::Instant::now();
+    for group in bases.chunks(batch) {
+        let mut gens: Vec<GenState<'_>> = group
+            .iter()
+            .map(|_| session.begin_empty())
+            .collect::<Result<_>>()?;
+        for t in 0..chunk {
+            let mut slots: Vec<(&mut GenState<'_>, u32)> = gens
+                .iter_mut()
+                .zip(group.iter())
+                .map(|(g, &base)| (g, stream[base + t] as u32))
+                .collect();
+            let outs = session.advance_batch(&mut slots, mode)?;
+            for (out, &base) in outs.iter().zip(group.iter()) {
+                nll_sum += nll_of(&out.logits, stream[base + t + 1] as usize);
+                count += 1;
+            }
+        }
+        for g in &gens {
+            eff_sum += g.sel.effective_bits();
+            chunks_done += 1;
+        }
+    }
+    Ok(PplResult {
+        ppl: (nll_sum / count as f64).exp(),
+        tokens: count,
+        effective_bits: eff_sum / chunks_done.max(1) as f64,
+        ms_per_token: t0.elapsed().as_secs_f64() * 1e3 / count.max(1) as f64,
+    })
+}
+
+/// -log softmax(logits)`[target]`
 pub fn nll_of(logits: &[f32], target: usize) -> f64 {
     let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
     let lse: f64 = logits.iter().map(|&v| ((v as f64) - max).exp()).sum::<f64>().ln() + max;

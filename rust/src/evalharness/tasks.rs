@@ -32,7 +32,8 @@ pub fn load_task(task: &str) -> Result<Vec<TaskSample>> {
 }
 
 /// Greedy generation through the serving path: prefill into a
-/// device-resident [`GenState`], then advance token by token.
+/// device-resident [`GenState`](crate::runtime::decode::GenState), then
+/// advance token by token.
 pub fn generate(session: &DecodeSession, tok: &Tokenizer, prompt: &str,
                 max_new: usize, mode: EstMode) -> Result<(String, f64)> {
     let prompt_ids = tok.encode(prompt);

@@ -1,16 +1,18 @@
 //! DP-LLM: Runtime Model Adaptation with Dynamic Layer-wise Precision
 //! Assignment (NeurIPS 2025) — the L3 Rust coordinator of the three-layer
-//! Rust + JAX + Pallas reproduction.
+//! Rust + JAX + Pallas reproduction (see README.md for the quickstart).
 //!
 //! Layer map (see DESIGN.md):
 //! - L1: Pallas kernels (`python/compile/kernels/`), build-time.
 //! - L2: JAX model + serving graphs (`python/compile/model.py`), AOT-lowered
-//!   to HLO text by `python/compile/aot.py`.
+//!   to HLO text by `python/compile/aot.py` — including the batched
+//!   `decode_step_b{2,4,8}` entries behind continuous batching
+//!   (DESIGN.md §Batching).
 //! - L3: this crate — loads the HLO artifacts via PJRT ([`runtime`]), owns
 //!   the request path: tokenization ([`tokenizer`]), dynamic per-layer
-//!   precision selection ([`selector`]), QoS adaptation and scheduling
-//!   ([`coordinator`]), serving ([`server`]), evaluation harnesses
-//!   ([`evalharness`]) and device cost models ([`costmodel`]).
+//!   precision selection ([`selector`]), QoS adaptation, scheduling and
+//!   batched dispatch ([`coordinator`]), serving ([`server`]), evaluation
+//!   harnesses ([`evalharness`]) and device cost models ([`costmodel`]).
 
 pub mod anyprec;
 pub mod bench_support;

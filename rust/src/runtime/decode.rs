@@ -14,6 +14,13 @@
 //! traffic is O(1) in KV size.  When an AOT graph was lowered as a single
 //! tuple (older artifacts), [`GenState`] degrades to a host round-trip and
 //! reports it via [`GenState::kv_on_device`].
+//!
+//! Concurrent requests additionally share device *dispatches*:
+//! [`DecodeSession::advance_batch`] packs up to `max_batch` generations
+//! into one `decode_step_b{2,4,8}` graph call (leading batch dim on the
+//! per-request inputs, per-slot `kv<i>` parameters/outputs so each KV
+//! cache stays an independent device buffer), cutting dispatch calls per
+//! generated token from 1.0 to ~1/B — DESIGN.md §Batching.
 
 use std::cell::{Cell, RefCell};
 use std::collections::{BTreeMap, HashMap};
@@ -137,6 +144,15 @@ pub struct DecodeSession {
     stacker: Stacker,
     decode: Arc<Exe>,
     decode_args: Vec<String>,
+    /// Batched decode entries, ascending bucket size: (B, exe, arg names).
+    /// Empty when the artifacts predate the batched AOT export — every
+    /// caller then falls back to per-request [`DecodeSession::advance`].
+    batched: Vec<(usize, Arc<Exe>, Vec<String>)>,
+    /// Zero KV cache backing the masked padding slots of a partially
+    /// filled batch (uploaded lazily, shared by all pad slots of all
+    /// batched steps — inputs are not donated, so aliasing one buffer
+    /// across several `kv<i>` parameters is safe).
+    pad_kv: RefCell<Option<Rc<PjRtBuffer>>>,
     /// (bucket_size, exe, arg names)
     prefills: Vec<(usize, Arc<Exe>, Vec<String>)>,
     static_bufs: HashMap<String, PjRtBuffer>,
@@ -236,6 +252,17 @@ impl DecodeSession {
         let decode_entry = manifest.entry(&cfg.name, "decode_step")?;
         let decode = rt.load(&decode_entry)?;
 
+        // Batched buckets are optional (older manifests lack them); a
+        // *present-but-broken* batched artifact fails loudly rather than
+        // silently degrading the serving path to per-request dispatch.
+        let mut batched = Vec::new();
+        for b in [2usize, 4, 8] {
+            if let Ok(e) = manifest.entry(&cfg.name, &format!("decode_step_b{b}")) {
+                let exe = rt.load(&e)?;
+                batched.push((b, exe, e.args.clone()));
+            }
+        }
+
         let mut prefills = Vec::new();
         for p in [64usize, 128, 256] {
             if let Ok(e) = manifest.entry(&cfg.name, &format!("prefill_{p}")) {
@@ -302,6 +329,8 @@ impl DecodeSession {
             weights,
             stacker,
             decode,
+            batched,
+            pad_kv: RefCell::new(None),
             prefills,
             static_bufs,
             prefill_bufs,
@@ -682,6 +711,223 @@ impl DecodeSession {
         gen.pos += 1;
         gen.steps += 1;
         Ok(out)
+    }
+
+    /// Largest batched-decode bucket this session's artifacts provide
+    /// (1 when the manifest has no `decode_step_b*` entries — callers
+    /// then keep dispatching per request).
+    pub fn max_batch(&self) -> usize {
+        self.batched.last().map(|(b, _, _)| *b).unwrap_or(1)
+    }
+
+    /// The available batched bucket sizes, ascending (empty without
+    /// batched artifacts).
+    pub fn batch_buckets(&self) -> Vec<usize> {
+        self.batched.iter().map(|(b, _, _)| *b).collect()
+    }
+
+    /// Zero-KV device buffer backing masked padding slots (lazy, shared).
+    fn pad_kv_buffer(&self) -> Result<Rc<PjRtBuffer>> {
+        if let Some(b) = self.pad_kv.borrow().as_ref() {
+            return Ok(b.clone());
+        }
+        let rc = Rc::new(self.rt.upload_f32(&self.cfg.kv_shape(), &self.kv_zero)?);
+        *self.pad_kv.borrow_mut() = Some(rc.clone());
+        Ok(rc)
+    }
+
+    /// One decode step for up to `max_batch` generations in a SINGLE
+    /// device dispatch: the batched fast path behind the serving core's
+    /// `pick_batch` (DESIGN.md §Batching).
+    ///
+    /// Each `slots` entry is a generation of **this** session plus the
+    /// token to feed it.  Per-slot inputs (token, position, rope tables,
+    /// async selector flags) pack into leading-batch-dim arrays; the
+    /// weight stacks are the session's shared device buffers; each slot's
+    /// KV cache is passed as its own `kv<i>` graph parameter and comes
+    /// back as its own output leaf, so KV residency is exactly the
+    /// per-request [`DecodeSession::advance`] contract.  When fewer slots
+    /// than the chosen bucket are supplied, the tail slots are masked
+    /// no-op requests (token 0 at position 0 over a shared zero KV
+    /// buffer) whose outputs are discarded.
+    ///
+    /// Failure atomicity: every validation and the device call happen
+    /// before ANY generation is mutated — on `Err` all slots are exactly
+    /// as they were, so the caller can retry them through per-request
+    /// [`DecodeSession::advance`] (which is also the n == 1 fast path
+    /// here).  Counters: each successful call adds one to
+    /// `batched_steps` and `slots.len()` to `batch_occupancy` on
+    /// [`Runtime::transfers`].
+    pub fn advance_batch(&self, slots: &mut [(&mut GenState<'_>, u32)],
+                         mode: EstMode) -> Result<Vec<StepOut>> {
+        let n = slots.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        if n == 1 {
+            let (gen, token) = slots.first_mut().expect("n == 1");
+            let tok = *token;
+            return Ok(vec![self.advance(&mut **gen, tok, mode)?]);
+        }
+        let (bucket, exe, args) = self
+            .batched
+            .iter()
+            .find(|(b, _, _)| *b >= n)
+            .ok_or_else(|| {
+                anyhow!("no batched decode bucket fits {n} slots (max {})",
+                        self.max_batch())
+            })?;
+        let b = *bucket;
+        // ---- validate everything up front (atomicity on failure) ---------
+        for (gen, _) in slots.iter() {
+            if gen.pos + 1 >= self.cfg.max_seq {
+                bail!("position {} at max_seq {}", gen.pos, self.cfg.max_seq);
+            }
+            if !gen.kv_on_device() {
+                bail!("batched decode requires device-resident KV \
+                       (tuple-lowered artifacts fall back to per-request steps)");
+            }
+        }
+        // ---- pack per-slot inputs with a leading batch dim ---------------
+        let l = self.cfg.n_layers;
+        let half = self.cfg.head_dim() / 2;
+        let mut tokens = vec![0i32; b];
+        let mut poss = vec![0i32; b];
+        let mut cos = vec![0f32; b * half];
+        let mut sin = vec![0f32; b * half];
+        let mut flags: HashMap<&str, Vec<f32>> = ASYNC_GROUPS
+            .iter()
+            .map(|g| (*g, vec![0f32; b * l]))
+            .collect();
+        for (i, (gen, token)) in slots.iter().enumerate() {
+            tokens[i] = *token as i32;
+            poss[i] = gen.pos as i32;
+            let (c, s) = self.cfg.rope_tables(gen.pos);
+            cos[i * half..(i + 1) * half].copy_from_slice(&c);
+            sin[i * half..(i + 1) * half].copy_from_slice(&s);
+            for g in ASYNC_GROUPS {
+                let want = gen
+                    .sel
+                    .use_h_async
+                    .get(g)
+                    .ok_or_else(|| anyhow!("missing async flags for {g}"))?;
+                flags.get_mut(g).expect("known group")[i * l..(i + 1) * l]
+                    .copy_from_slice(want);
+            }
+        }
+        // Pad slots keep token/pos 0 and zero flags: position 0 masks the
+        // attention to a single (zeroed) KV entry, so the no-op slot can
+        // never produce NaNs that XLA might propagate across the batch.
+        let tok_buf = self.rt.upload_i32(&[b], &tokens)?;
+        let pos_buf = self.rt.upload_i32(&[b], &poss)?;
+        let cos_buf = self.rt.upload_f32(&[b, half], &cos)?;
+        let sin_buf = self.rt.upload_f32(&[b, half], &sin)?;
+        let mode_buf = self.mode_buffer(mode == EstMode::Exact)?;
+        let mut flag_bufs: HashMap<&str, PjRtBuffer> = HashMap::new();
+        for g in ASYNC_GROUPS {
+            flag_bufs.insert(g, self.rt.upload_f32(&[b, l], &flags[g])?);
+        }
+        let pad = if n < b { Some(self.pad_kv_buffer()?) } else { None };
+
+        let replica = {
+            let mut arg_bufs: Vec<&PjRtBuffer> = Vec::with_capacity(args.len());
+            for name in args {
+                let buf: &PjRtBuffer = if let Some(i) = name
+                    .strip_prefix("kv")
+                    .and_then(|s| s.parse::<usize>().ok())
+                {
+                    if i < n {
+                        match &slots[i].0.kv {
+                            KvResidence::Device(kb) => kb,
+                            KvResidence::Host(_) => {
+                                unreachable!("validated device-resident above")
+                            }
+                        }
+                    } else {
+                        pad.as_ref().expect("pad buffer uploaded").as_ref()
+                    }
+                } else {
+                    match name.as_str() {
+                        "tokens" => &tok_buf,
+                        "poss" => &pos_buf,
+                        "cos" => &cos_buf,
+                        "sin" => &sin_buf,
+                        "mode_exact" => &*mode_buf,
+                        other => flag_bufs
+                            .get(other.strip_prefix("useh_").unwrap_or(other))
+                            .or_else(|| self.static_bufs.get(other))
+                            .ok_or_else(|| {
+                                anyhow!("missing batched decode arg {other}")
+                            })?,
+                    }
+                };
+                arg_bufs.push(buf);
+            }
+            exe.run_buffers(&arg_bufs).context("batched decode step")?
+        };
+        if !exe.untupled(&replica) {
+            bail!("batched graph lowered as a tuple — per-slot KV residency \
+                   impossible; falling back to per-request steps");
+        }
+        // ---- read the small outputs, locate the per-slot KV leaves -------
+        let v = self.cfg.vocab;
+        let li = exe.output_index("logits")?;
+        let logits_all = buffer_f32(&replica[li])?;
+        self.rt.transfers().count_download();
+        if logits_all.len() != b * v {
+            bail!("batched logits: {} values for B={b} V={v}", logits_all.len());
+        }
+        let mut ests_all = BTreeMap::new();
+        let mut use_all = BTreeMap::new();
+        for g in GROUPS {
+            let ei = exe.output_index(&format!("est_{g}"))?;
+            let ui = exe.output_index(&format!("useh_{g}"))?;
+            let e = buffer_f32(&replica[ei])?;
+            let u = buffer_f32(&replica[ui])?;
+            if e.len() != b * l || u.len() != b * l {
+                bail!("batched {g} outputs: {}/{} values for B={b} L={l}",
+                      e.len(), u.len());
+            }
+            ests_all.insert(g, e);
+            use_all.insert(g, u);
+        }
+        let mut kv_slot_of = HashMap::new();
+        for i in 0..n {
+            kv_slot_of.insert(exe.output_index(&format!("kv{i}"))?, i);
+        }
+        let mut new_kvs: Vec<Option<PjRtBuffer>> = (0..n).map(|_| None).collect();
+        for (oi, buf) in replica.into_iter().enumerate() {
+            if let Some(&slot) = kv_slot_of.get(&oi) {
+                new_kvs[slot] = Some(buf);
+            }
+        }
+        if new_kvs.iter().any(|k| k.is_none()) {
+            bail!("batched decode returned fewer KV leaves than slots");
+        }
+        // ---- commit: scatter outputs back to their generations -----------
+        let mut outs = Vec::with_capacity(n);
+        for (i, (gen, _)) in slots.iter_mut().enumerate() {
+            let mut ests = BTreeMap::new();
+            let mut use_eff = BTreeMap::new();
+            for g in GROUPS {
+                ests.insert(g.to_string(),
+                            ests_all[g][i * l..(i + 1) * l].to_vec());
+                use_eff.insert(g.to_string(),
+                               use_all[g][i * l..(i + 1) * l].to_vec());
+            }
+            let out = StepOut {
+                logits: logits_all[i * v..(i + 1) * v].to_vec(),
+                ests,
+                use_eff,
+            };
+            gen.kv = KvResidence::Device(new_kvs[i].take().expect("checked above"));
+            gen.sel.observe(&out.ests, &out.use_eff);
+            gen.pos += 1;
+            gen.steps += 1;
+            outs.push(out);
+        }
+        self.rt.transfers().count_batched_step(n as u64);
+        Ok(outs)
     }
 
     /// Greedy argmax over logits.  NaN entries are skipped; empty or

@@ -6,8 +6,9 @@
 //!   — serialized protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1
 //!   (64-bit instruction ids), text re-parses cleanly.
 //! * Model weights are uploaded to the device **once** per configuration
-//!   ([`DeviceArgs`]), and per-step inputs are a few KB of scalars/vectors —
-//!   nothing Python ever runs on the request path.
+//!   (the weight stacks cached by [`decode::DecodeSession`]), and per-step
+//!   inputs are a few KB of scalars/vectors — nothing Python ever runs on
+//!   the request path.
 //! * Executables are cached per (model, entry) in [`Runtime`].
 //! * Host↔device traffic is metered ([`Runtime::transfers`]): the decode
 //!   hot path must stay O(1) in KV-cache size (DESIGN.md §Perf), and the
@@ -26,15 +27,18 @@ use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 use crate::model::HloEntry;
 use crate::tensor::Tensor;
 
-/// Running totals of host→device uploads (count + bytes) and device→host
-/// literal reads.  Cheap atomics; benches and the GenState residency tests
-/// read deltas around a decode step.
+/// Running totals of host→device uploads (count + bytes), device→host
+/// literal reads, device-side stack assemblies, and batched decode
+/// dispatches.  Cheap atomics; benches and the GenState residency /
+/// batching tests read deltas around a decode step.
 #[derive(Default)]
 pub struct TransferStats {
     uploads: AtomicU64,
     upload_bytes: AtomicU64,
     downloads: AtomicU64,
     assemblies: AtomicU64,
+    batched_steps: AtomicU64,
+    batch_occupancy: AtomicU64,
 }
 
 /// A point-in-time copy of [`TransferStats`].
@@ -47,6 +51,19 @@ pub struct TransferSnapshot {
     /// concatenated from cached per-layer buffers *on the device*, i.e.
     /// rebinds that did NOT pay an O(stack) host→device upload.
     pub assemblies: u64,
+    /// Batched decode dispatches (`DecodeSession::advance_batch`): device
+    /// calls that decoded one token for ≥ 2 requests at once.  Together
+    /// with [`TransferSnapshot::batch_occupancy`] this is the counter
+    /// pair the batching tests and `batch_micro` assert against —
+    /// dispatch calls per generated token is
+    /// `(batched_steps + single_steps) / tokens`, and single-call steps
+    /// are derivable as `tokens - batch_occupancy` (DESIGN.md §Batching).
+    pub batched_steps: u64,
+    /// Total *real* (non-padding) slots served across all batched
+    /// dispatches; `batch_occupancy / batched_steps` is the mean batch
+    /// occupancy.  Padded no-op slots of a partially filled bucket are
+    /// not counted.
+    pub batch_occupancy: u64,
 }
 
 impl TransferStats {
@@ -63,12 +80,21 @@ impl TransferStats {
         self.assemblies.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one batched decode dispatch serving `occupancy` real
+    /// (non-padding) request slots.
+    pub fn count_batched_step(&self, occupancy: u64) {
+        self.batched_steps.fetch_add(1, Ordering::Relaxed);
+        self.batch_occupancy.fetch_add(occupancy, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> TransferSnapshot {
         TransferSnapshot {
             uploads: self.uploads.load(Ordering::Relaxed),
             upload_bytes: self.upload_bytes.load(Ordering::Relaxed),
             downloads: self.downloads.load(Ordering::Relaxed),
             assemblies: self.assemblies.load(Ordering::Relaxed),
+            batched_steps: self.batched_steps.load(Ordering::Relaxed),
+            batch_occupancy: self.batch_occupancy.load(Ordering::Relaxed),
         }
     }
 }
@@ -311,10 +337,14 @@ mod tests {
         t.count_upload(64);
         t.count_download();
         t.count_assembly();
+        t.count_batched_step(4);
+        t.count_batched_step(2);
         let b = t.snapshot();
         assert_eq!(b.uploads_since(&a), 2);
         assert_eq!(b.upload_bytes_since(&a), 192);
         assert_eq!(b.downloads - a.downloads, 1);
         assert_eq!(b.assemblies - a.assemblies, 1);
+        assert_eq!(b.batched_steps - a.batched_steps, 2);
+        assert_eq!(b.batch_occupancy - a.batch_occupancy, 6);
     }
 }

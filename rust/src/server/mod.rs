@@ -8,7 +8,10 @@
 //! channels.  The executor runs a [`ServingCore`]: concurrent `/generate`
 //! requests are admitted mid-flight and interleaved **per token** (EDF
 //! when a `deadline_ms` is given, FIFO tie-break otherwise), so a tight-
-//! deadline request no longer waits behind a whole best-effort generation.
+//! deadline request no longer waits behind a whole best-effort generation
+//! — and requests decoding at the same target share batched device
+//! dispatches (DESIGN.md §Batching), so concurrency costs ~1/B dispatch
+//! overhead instead of scaling it linearly.
 //!
 //! Endpoints:
 //!   POST /generate  {"prompt": str, "max_new"?: int, "qos_ms_per_token"?: f,
@@ -35,8 +38,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::qos::{QosBudget, UtilizationSim};
 use crate::coordinator::sched::{Request, RequestQueue, SchedPolicy};
-use crate::coordinator::service::{CoreEvent, ServingCore, ServingEngine,
-                                  RESELECT_EVERY};
+use crate::coordinator::service::{CoreEvent, ServingCore, ServingEngine};
 use crate::util::json::Json;
 
 /// Hard cap on request-body size; larger Content-Lengths are rejected with
@@ -109,6 +111,8 @@ impl Server {
         // Executor loop: owns the engine (and all !Send PJRT handles) and a
         // token-interleaved ServingCore.  EDF so deadlined requests preempt
         // at token boundaries; best-effort requests FIFO among themselves.
+        // Concurrent same-target requests share batched decode dispatches
+        // (DESIGN.md §Batching).
         let mut core = ServingCore::new(&engine, SchedPolicy::Edf);
         let mut queue = RequestQueue::new(SchedPolicy::Edf);
         let mut pending: HashMap<u64, Pending> = HashMap::new();
@@ -134,32 +138,21 @@ impl Server {
             drain_rx(&rx, &engine, &core, &mut queue, &mut pending, &mut util,
                      &mut req_id);
 
-            // Admission: pull from the queue while slots are free.
-            while core.has_capacity() && !queue.is_empty() {
-                let Some(r) = queue.pop() else { break };
-                let id = r.id;
-                let u = util.tick();
-                let mut pinned = None;
-                if let Some(p) = pending.get_mut(&id) {
-                    p.utilization = u;
-                    pinned = p.pinned;
-                }
-                let admitted = match pinned {
-                    Some(t) => core.admit_pinned(r, t),
-                    None => core.admit(r, u),
-                };
-                if let Err(e) = admitted {
-                    // Client-side validity was checked at ingest; a failure
-                    // here (prefill/runtime) is a server fault.
-                    respond(&mut pending, id, error_json(500, &format!("{e:#}")));
-                }
-            }
-            // Mid-stream target re-selection on the token cadence.
-            if core.token_clock() % RESELECT_EVERY == 0 {
+            // Admission: pull from the queue while slots are free.  Runs
+            // before EVERY dispatch — in particular right after a step in
+            // which a request finished mid-batch, so a freed slot is
+            // refilled (from already-parsed arrivals drained above) in
+            // time for the very next batched dispatch.
+            admit_ready(&mut core, &mut queue, &mut pending, &mut util);
+            // Mid-stream target re-selection on the token cadence
+            // (epoch-based: a batched step advances the clock by its
+            // occupancy, so exact multiples can be skipped over).
+            if core.reselect_due() {
                 let u = util.tick();
                 core.reselect(u);
             }
-            // One token of one generation.
+            // One scheduling step: one token of every batch-compatible
+            // runnable generation in a single dispatch.
             match core.step() {
                 Ok(events) => {
                     for ev in events {
@@ -184,6 +177,30 @@ impl Server {
         }
         let _ = acceptor.join();
         Ok(())
+    }
+}
+
+/// Pull queued requests into the core while it has free slots (pinned
+/// targets bypass the QoS policy).  An admission failure after ingest
+/// validation is a server fault → 500 to the waiting connection.
+fn admit_ready(core: &mut ServingCore<'_>, queue: &mut RequestQueue,
+               pending: &mut HashMap<u64, Pending>, util: &mut UtilizationSim) {
+    while core.has_capacity() && !queue.is_empty() {
+        let Some(r) = queue.pop() else { break };
+        let id = r.id;
+        let u = util.tick();
+        let mut pinned = None;
+        if let Some(p) = pending.get_mut(&id) {
+            p.utilization = u;
+            pinned = p.pinned;
+        }
+        let admitted = match pinned {
+            Some(t) => core.admit_pinned(r, t),
+            None => core.admit(r, u),
+        };
+        if let Err(e) = admitted {
+            respond(pending, id, error_json(500, &format!("{e:#}")));
+        }
     }
 }
 

@@ -91,7 +91,7 @@ impl Json {
         }
     }
 
-    /// `[1.5, 2, 3]` -> Vec<f64> (convenience for numeric config arrays).
+    /// `[1.5, 2, 3]` -> `Vec<f64>` (convenience for numeric config arrays).
     pub fn as_f64_vec(&self) -> Result<Vec<f64>> {
         self.as_arr()?.iter().map(|v| v.as_f64()).collect()
     }
