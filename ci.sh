@@ -4,7 +4,8 @@
 # Artifact-backed integration tests run only when DPLLM_ARTIFACTS points at
 # a `make artifacts` output tree; unset they skip, keeping this hermetic.
 set -eu
-cd "$(dirname "$0")/rust"
+ROOT="$(cd "$(dirname "$0")" && pwd)"
+cd "$ROOT/rust"
 cargo fmt --check
 cargo clippy --all-targets -- -D warnings
 cargo build --release
@@ -12,3 +13,13 @@ cargo test -q
 # Rustdoc gate: the public API docs (crate + module + item docs, incl.
 # intra-doc links) must keep compiling warning-free.
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+# Python L2 gate: the jax-level parity tests (incl. the speculative
+# verify_step_g* vs sequential-decode contract) run whenever a python
+# with jax + pytest is available; a cargo-only environment skips them so
+# tier-1 stays hermetic.
+if command -v python3 >/dev/null 2>&1 \
+    && python3 -c "import jax, pytest" >/dev/null 2>&1; then
+  (cd "$ROOT/python" && python3 -m pytest tests -q)
+else
+  echo "[ci] python/jax unavailable — skipping the L2 pytest gate"
+fi

@@ -61,27 +61,21 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\n{}", engine.metrics.summary().report());
-    let ts = rt.transfers().snapshot();
-    println!(
-        "batching: {} batched dispatches, mean occupancy {:.2} \
-         (dispatch amortization across same-target queries)",
-        ts.batched_steps,
-        ts.batch_occupancy as f64 / ts.batched_steps.max(1) as f64
-    );
+    // One serialized counter snapshot (transfers + weight cache +
+    // batching + speculation) — the same serializer behind GET /metrics.
+    println!("{}", engine.counters_report());
 
     // The memory envelope tightens (another app claimed RAM): swap the
     // adaptation set for a leaner one.  Retired sessions are rebound in
     // place via the delta-materialization path — only layers whose bits
     // differ re-dequantize and re-upload (DESIGN.md §Perf).
     let rep = engine.reconfigure(&["3.25", "3.50", "3.75"])?;
-    let ws = engine.weight_cache_stats();
     println!(
         "\nreconfigured adaptation set -> [3.25, 3.50, 3.75]: \
-         {} stacks rebuilt, {} layers re-materialized; weight cache \
-         {} hits / {} misses / {:.1} MB dequantized",
-        rep.stacks_rebuilt, rep.layers_changed, ws.hits, ws.misses,
-        ws.bytes_dequantized as f64 / 1e6
+         {} stacks rebuilt, {} layers re-materialized",
+        rep.stacks_rebuilt, rep.layers_changed
     );
+    println!("{}", engine.counters_report());
     let mut tail = make_queue(
         SchedPolicy::Edf,
         (0..3usize).map(|i| {

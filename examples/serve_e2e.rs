@@ -72,13 +72,10 @@ fn main() -> anyhow::Result<()> {
          switches at token granularity",
         outcomes.len(), stream_log.len(), interleaved
     );
-    let ts = rt.transfers().snapshot();
-    println!(
-        "[e2e] phase 1 batching: {} batched dispatches, mean occupancy {:.2} \
-         (same-target requests share one device call per token)",
-        ts.batched_steps,
-        ts.batch_occupancy as f64 / ts.batched_steps.max(1) as f64
-    );
+    // One serialized counter snapshot — the same serializer behind
+    // GET /metrics' `counters` field (transfers + weight cache +
+    // batching + speculation).
+    println!("[e2e] phase 1 {}", engine.counters_report());
     for o in &outcomes {
         println!(
             "[e2e]   req {} target {:.2} eff {:.3} ttft {:.0}ms retargets {}",

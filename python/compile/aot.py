@@ -15,6 +15,13 @@ Exported per model, into ``artifacts/hlo/<model>/``:
                           remains an independent device buffer across
                           steps, while tokens/positions/rope/selector
                           flags carry a leading batch dim
+  verify_step_g<G>.hlo.txt   speculative-verification step for γ ∈ {2, 4}
+                          draft tokens: γ+1 consecutive positions scored
+                          causally in one dispatch (per-position logits +
+                          the updated KV as output leaves) — the target
+                          half of self-speculative decoding (DESIGN
+                          §Speculation); async selector flags chain
+                          in-graph between positions
   prefill_<P>.hlo.txt     prompt ingestion for buckets P ∈ {64, 128, 256}
   anyprec_gemv_<b>.hlo.txt   standalone L1 bitplane-GEMV kernel (b ∈ 3..6)
   jl_estimate.hlo.txt     standalone L1 JL-projection estimator kernel
@@ -39,10 +46,11 @@ from .kernels.anyprec_gemv import anyprec_gemv
 from .kernels.estimator import K_PROJ, jl_estimate
 from .model import (ASYNC_GROUPS, GROUPS, ModelConfig, PRESETS,
                     decode_step_dual, decode_step_dual_batched, kv_shape,
-                    prefill)
+                    prefill, verify_step_dual)
 
 PREFILL_BUCKETS = (64, 128, 256)
 BATCH_BUCKETS = (2, 4, 8)
+SPEC_GAMMAS = (2, 4)
 
 
 def to_hlo_text(lowered) -> str:
@@ -132,6 +140,65 @@ def make_decode_fn(cfg: ModelConfig):
         use_async = {g: a[f"useh_{g}"] for g in ASYNC_GROUPS}
         logits, kv_new, ests, use_eff = decode_step_dual(
             nl, wl, wh, est, cfg, a["token"], a["pos"], a["cos"], a["sin"],
+            a["kv"], use_async, a["mode_exact"])
+        return (logits, kv_new, *[ests[g] for g in GROUPS],
+                *[use_eff[g] for g in GROUPS])
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Speculative-verification step (γ+1 positions, one dispatch).
+# ---------------------------------------------------------------------------
+
+
+def verify_arg_specs(cfg: ModelConfig, G: int) -> list[tuple[str, object]]:
+    """(name, spec) per positional argument of the γ-draft verify step.
+
+    Identical to ``decode_arg_specs`` except the per-position inputs grow
+    a leading γ+1 dim: ``tokens`` [γ+1] (next committed token + γ
+    drafts), ``cos``/``sin`` [γ+1, hd/2].  ``pos`` stays the scalar
+    position of ``tokens[0]`` (later positions are ``pos + i`` in-graph)
+    and the async flags stay [L] — they seed position 0 only; positions
+    1..γ chain in-graph (see ``verify_step_dual``).
+    """
+    L = cfg.n_layers
+    hd2 = cfg.head_dim // 2
+    g1 = G + 1
+    args: list[tuple[str, object]] = [
+        ("tokens", i32(g1)), ("pos", i32()),
+        ("cos", f32(g1, hd2)), ("sin", f32(g1, hd2)),
+        ("kv", f32(*kv_shape(cfg))),
+    ]
+    args += shared_weight_specs(cfg)
+    for g in ASYNC_GROUPS:
+        args.append((f"useh_{g}", f32(L)))
+    args.append(("mode_exact", f32()))
+    return args
+
+
+def verify_output_names() -> list[str]:
+    """Same leaf names as the single step; logits/est/useh leaves carry a
+    leading γ+1 dim, the KV leaf is the final (all-positions-written)
+    cache."""
+    return decode_output_names()
+
+
+def make_verify_fn(cfg: ModelConfig, G: int):
+    names = [n for n, _ in verify_arg_specs(cfg, G)]
+
+    def f(*args):
+        a = dict(zip(names, args))
+        nl = {k: a[k] for k in ("tok_emb", "out_head", "final_norm", "ln1", "ln2")}
+        wl = {g: a[f"wl_{g}"] for g in GROUPS}
+        wh = {g: a[f"wh_{g}"] for g in GROUPS}
+        est = {}
+        for g in GROUPS:
+            for field in ("G", "lina", "linb", "uselin", "thr"):
+                est[f"{field}_{g}"] = a[f"{field}_{g}"]
+        use_async = {g: a[f"useh_{g}"] for g in ASYNC_GROUPS}
+        logits, kv_new, ests, use_eff = verify_step_dual(
+            nl, wl, wh, est, cfg, a["tokens"], a["pos"], a["cos"], a["sin"],
             a["kv"], use_async, a["mode_exact"])
         return (logits, kv_new, *[ests[g] for g in GROUPS],
                 *[use_eff[g] for g in GROUPS])
@@ -380,6 +447,22 @@ def export_model(name: str) -> dict:
             "batch": B,
         }
         print(f"[aot:{name}] decode_step_b{B} "
+              f"({os.path.getsize(path) / 1e3:.0f} kB)", flush=True)
+
+    # speculative-verification steps (γ draft tokens + 1 bonus position)
+    for G in SPEC_GAMMAS:
+        specs = verify_arg_specs(cfg, G)
+        lowered = jax.jit(make_verify_fn(cfg, G)).lower(*[s for _, s in specs])
+        path = io.art(*outdir, f"verify_step_g{G}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(to_hlo_text(lowered))
+        entry["entries"][f"verify_step_g{G}"] = {
+            "path": os.path.relpath(path, io.ART),
+            "args": [n for n, _ in specs],
+            "outputs": verify_output_names(),
+            "gamma": G,
+        }
+        print(f"[aot:{name}] verify_step_g{G} "
               f"({os.path.getsize(path) / 1e3:.0f} kB)", flush=True)
 
     # prefill buckets

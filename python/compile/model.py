@@ -418,6 +418,55 @@ def decode_step_dual_batched(nl, wl, wh, est, cfg: ModelConfig,
     return jax.vmap(single)(tokens, poss, cos, sin, kv, use_h_async)
 
 
+def verify_step_dual(nl, wl, wh, est, cfg: ModelConfig, tokens: jnp.ndarray,
+                     pos: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray,
+                     kv: jnp.ndarray, use_h_async: dict,
+                     mode_exact: jnp.ndarray):
+    """Score γ+1 consecutive positions in ONE dispatch — the verification
+    step of self-speculative decoding (DESIGN §Speculation).
+
+    ``tokens`` ``[γ+1]`` holds the next committed token followed by γ
+    draft tokens; ``pos`` is the absolute position of ``tokens[0]``;
+    ``cos``/``sin`` are per-position RoPE tables ``[γ+1, hd/2]``.  The
+    positions are processed **causally in sequence** (γ is small and
+    static, so the sub-steps unroll): position i writes its KV entry
+    before position i+1 attends, exactly as γ+1 sequential
+    ``decode_step_dual`` calls would.
+
+    Async selector chaining: position 0 honors the caller-provided
+    ``use_h_async`` flags (the same contract as the single step); every
+    later position derives its flags **in-graph** from the previous
+    position's estimates vs the per-layer thresholds — the identical
+    rule the Rust ``SelectorState::observe`` applies between sequential
+    steps, so position-wise outputs match the sequential chain bit for
+    bit (pinned by ``test_verify_step_matches_sequential_single_steps``).
+
+    Returns ``(logits [γ+1, V], kv_new, ests {g: [γ+1, L]},
+    use_h_eff {g: [γ+1, L]})``.  ``logits[i]`` scores the token at
+    position ``pos + i + 1``; the Rust side keeps the longest accepted
+    draft prefix plus one bonus token and rewinds its position counter
+    past any rejected tail (stale KV entries beyond the counter are
+    masked by the attention and overwritten when those positions are
+    re-decoded).
+    """
+    n_pos = tokens.shape[0]
+    use_cur = dict(use_h_async)
+    louts, eouts, uouts = [], [], []
+    for i in range(n_pos):
+        logits, kv, ests, use_eff = decode_step_dual(
+            nl, wl, wh, est, cfg, tokens[i], pos + i, cos[i], sin[i], kv,
+            use_cur, mode_exact)
+        louts.append(logits)
+        eouts.append(ests)
+        uouts.append(use_eff)
+        use_cur = {g: (ests[g] > est[f"thr_{g}"]).astype(jnp.float32)
+                   for g in ASYNC_GROUPS}
+    logits_all = jnp.stack(louts)
+    ests_d = {g: jnp.stack([e[g] for e in eouts]) for g in GROUPS}
+    use_d = {g: jnp.stack([u[g] for u in uouts]) for g in GROUPS}
+    return logits_all, kv, ests_d, use_d
+
+
 # ---------------------------------------------------------------------------
 # Reference greedy decoding in pure JAX (used by tests to cross-check the
 # Rust decode loop end to end).

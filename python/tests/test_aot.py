@@ -14,7 +14,8 @@ from jax._src.lib import xla_client as xc
 from compile.aot import (batched_decode_arg_specs, batched_decode_output_names,
                          decode_arg_specs, decode_output_names, f32,
                          make_batched_decode_fn, make_decode_fn,
-                         make_prefill_fn, prefill_arg_specs, to_hlo_text)
+                         make_prefill_fn, make_verify_fn, prefill_arg_specs,
+                         to_hlo_text, verify_arg_specs, verify_output_names)
 from compile.kernels.estimator import K_PROJ
 from compile.model import (ASYNC_GROUPS, GROUPS, ModelConfig, extract_linears,
                            init_params, kv_shape, nonlinear_params)
@@ -202,6 +203,147 @@ def test_batched_lowering_parses_back():
     specs = batched_decode_arg_specs(CFG, B)
     lowered = jax.jit(make_batched_decode_fn(CFG, B)).lower(
         *[s for _, s in specs])
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert text.count("parameter(") >= len(specs)
+    mod = xc._xla.hlo_module_from_text(text)
+    assert mod is not None
+    assert len(mod.as_serialized_hlo_module_proto()) > 1000
+
+
+# ---------------------------------------------------------------------------
+# Speculative-verification step (γ+1 causal positions, one dispatch).
+# ---------------------------------------------------------------------------
+
+
+def _verify_args(cfg, params, G, pos0=3, seed=5):
+    """Inputs for the γ-draft verify step with live selection: wl ≠ wh,
+    mid-range thresholds and mixed linear/JL estimators so the in-graph
+    async flag chaining actually flips decisions between positions."""
+    nl = nonlinear_params(params)
+    lin = extract_linears(params)
+    rng = np.random.default_rng(seed)
+    L = cfg.n_layers
+    g1 = G + 1
+    hd = cfg.head_dim
+    inv = 1.0 / (10000.0 ** (np.arange(0, hd, 2) / hd))
+    poss = np.arange(pos0, pos0 + g1)
+    vals = {
+        "tokens": rng.integers(0, cfg.vocab, size=g1).astype(np.int32),
+        "pos": np.int32(pos0),
+        "cos": np.stack([np.cos(p * inv) for p in poss]).astype(np.float32),
+        "sin": np.stack([np.sin(p * inv) for p in poss]).astype(np.float32),
+        "kv": (rng.standard_normal(kv_shape(cfg)) * 0.01).astype(np.float32),
+        "tok_emb": nl["tok_emb"], "out_head": nl["out_head"],
+        "final_norm": nl["final_norm"], "ln1": nl["ln1"], "ln2": nl["ln2"],
+        "mode_exact": np.float32(0.0),
+    }
+    for g in GROUPS:
+        o, i = cfg.group_shape(g)
+        w = np.asarray(lin[g])
+        vals[f"wl_{g}"] = (w * 0.9).astype(np.float32)
+        vals[f"wh_{g}"] = w
+        vals[f"G_{g}"] = (rng.standard_normal((L, K_PROJ, i)) * 0.05
+                          ).astype(np.float32)
+        vals[f"lina_{g}"] = rng.random(L).astype(np.float32)
+        vals[f"linb_{g}"] = rng.random(L).astype(np.float32) * 0.1
+        vals[f"uselin_{g}"] = (rng.random(L) < 0.5).astype(np.float32)
+        vals[f"thr_{g}"] = (rng.random(L) * 0.5).astype(np.float32)
+    for g in ASYNC_GROUPS:
+        vals[f"useh_{g}"] = (rng.random(L) < 0.5).astype(np.float32)
+    return vals
+
+
+def test_verify_arg_spec_names_unique_and_ordered():
+    for G in (2, 4):
+        names = [n for n, _ in verify_arg_specs(CFG, G)]
+        assert len(names) == len(set(names))
+        assert names[0] == "tokens" and names[1] == "pos"
+        assert names[-1] == "mode_exact"
+        assert verify_output_names() == decode_output_names()
+
+
+@pytest.mark.parametrize("G", [2, 4])
+def test_verify_step_matches_sequential_single_steps(G):
+    """THE speculation contract: every position of ``verify_step_g{γ}``
+    must reproduce what γ+1 sequential ``decode_step`` calls would
+    compute — logits, KV evolution, estimates AND the chained async
+    flag decisions (position i+1's flags = position i's est > thr,
+    exactly the Rust ``SelectorState::observe`` rule).  The Rust
+    ``SpecSession`` relies on this to make speculative greedy decode
+    token-for-token identical to plain greedy decode."""
+    params = init_params(CFG, seed=0)
+    vals = _verify_args(CFG, params, G)
+    vnames = [n for n, _ in verify_arg_specs(CFG, G)]
+    vout = jax.jit(make_verify_fn(CFG, G))(
+        *[jnp.asarray(vals[n]) for n in vnames])
+    vmap_out = dict(zip(verify_output_names(), vout))
+
+    snames = [n for n, _ in decode_arg_specs(CFG)]
+    single = jax.jit(make_decode_fn(CFG))
+    sonames = decode_output_names()
+    kv = vals["kv"]
+    flags = {g: vals[f"useh_{g}"] for g in ASYNC_GROUPS}
+    for i in range(G + 1):
+        sv = dict(vals)
+        sv["token"] = vals["tokens"][i]
+        sv["pos"] = np.int32(int(vals["pos"]) + i)
+        sv["cos"] = vals["cos"][i]
+        sv["sin"] = vals["sin"][i]
+        sv["kv"] = kv
+        for g in ASYNC_GROUPS:
+            sv[f"useh_{g}"] = flags[g]
+        sout = single(*[jnp.asarray(sv[n]) for n in snames])
+        smap = dict(zip(sonames, sout))
+        np.testing.assert_allclose(np.asarray(vmap_out["logits"])[i],
+                                   np.asarray(smap["logits"]),
+                                   rtol=2e-4, atol=2e-5,
+                                   err_msg=f"position {i} logits")
+        for g in GROUPS:
+            np.testing.assert_allclose(np.asarray(vmap_out[f"est_{g}"])[i],
+                                       np.asarray(smap[f"est_{g}"]),
+                                       rtol=2e-4, atol=2e-5,
+                                       err_msg=f"position {i} est_{g}")
+            # 0/1 decisions must match exactly per position.
+            np.testing.assert_array_equal(
+                np.asarray(vmap_out[f"useh_{g}"])[i],
+                np.asarray(smap[f"useh_{g}"]),
+                err_msg=f"position {i} useh_{g}")
+        # Host-side sequential chaining: next step's async flags from
+        # this step's estimates (the SelectorState::observe rule).
+        kv = np.asarray(smap["kv"])
+        flags = {
+            g: (np.asarray(smap[f"est_{g}"]) > vals[f"thr_{g}"]
+                ).astype(np.float32)
+            for g in ASYNC_GROUPS
+        }
+    np.testing.assert_allclose(np.asarray(vmap_out["kv"]), kv,
+                               rtol=2e-4, atol=2e-5,
+                               err_msg="final KV after all positions")
+
+
+def test_verify_chaining_actually_flips_flags():
+    """Guard against a vacuous parity test: with mid-range thresholds the
+    chained flags must differ across positions for at least one group
+    (otherwise the chaining rule was never exercised)."""
+    G = 4
+    params = init_params(CFG, seed=0)
+    vals = _verify_args(CFG, params, G)
+    vnames = [n for n, _ in verify_arg_specs(CFG, G)]
+    vout = jax.jit(make_verify_fn(CFG, G))(
+        *[jnp.asarray(vals[n]) for n in vnames])
+    vmap_out = dict(zip(verify_output_names(), vout))
+    flips = 0
+    for g in ASYNC_GROUPS:
+        u = np.asarray(vmap_out[f"useh_{g}"])  # [G+1, L]
+        flips += int((np.abs(np.diff(u, axis=0)).sum() > 0))
+    assert flips > 0, "async decisions never changed across positions"
+
+
+def test_verify_lowering_parses_back():
+    G = 2
+    specs = verify_arg_specs(CFG, G)
+    lowered = jax.jit(make_verify_fn(CFG, G)).lower(*[s for _, s in specs])
     text = to_hlo_text(lowered)
     assert "ENTRY" in text
     assert text.count("parameter(") >= len(specs)

@@ -1,6 +1,12 @@
 """Phase-1 / baseline assignment solver invariants."""
 
 import numpy as np
+import pytest
+
+# Property tests need hypothesis; cargo-only / minimal CI
+# environments without it skip this module instead of erroring
+# out of collection (the ci.sh pytest gate must stay runnable).
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.assign import BITS, solve_assignment

@@ -1,6 +1,12 @@
 """Byte-BPE tokenizer: roundtrips, determinism, serialization."""
 
 import numpy as np
+import pytest
+
+# Property tests need hypothesis; cargo-only / minimal CI
+# environments without it skip this module instead of erroring
+# out of collection (the ci.sh pytest gate must stay runnable).
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.tokenizer import (BOS_ID, EOS_ID, Tokenizer, encode_to_bin,

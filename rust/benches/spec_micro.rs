@@ -1,0 +1,211 @@
+//! Self-speculative decoding microbench (DESIGN.md §Speculation).
+//!
+//! Part 1 (artifact-free): sweeps the costmodel's speculation math —
+//! acceptance a ∈ {0.3 … 0.9} × γ ∈ {0, 2, 4} → expected tokens per
+//! verify dispatch, predicted ms/token and speedup over plain decode on
+//! the paper-fit Jetson profile (3-bit draft vs 6-bit target at
+//! Llama-3-8B scale) — plus a γ-controller simulation: Bernoulli
+//! acceptance streams at each true rate drive the EWMA and record which
+//! γ the controller settles on.
+//!
+//! Part 2 (artifact-gated): serves one best-effort request through a real
+//! [`ServingCore`] with speculation on vs off and reports measured
+//! tokens/s, verify dispatches per token and the realized acceptance
+//! rate from the `spec_*` counters.
+//!
+//! Results land in `results/BENCH_spec.json` (see the README bench
+//! table); the ≤ 0.6 verify-dispatches/token acceptance bar is enforced
+//! by the `spec_*` integration tests.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dp_llm::bench_support as bs;
+use dp_llm::coordinator::qos::QosBudget;
+use dp_llm::coordinator::sched::{Request, SchedPolicy};
+use dp_llm::coordinator::service::{CoreConfig, CoreEvent, ServingCore,
+                                   ServingEngine};
+use dp_llm::costmodel::{pick_gamma, spec_cost_per_token,
+                        spec_tokens_per_round, JETSON_ORIN};
+use dp_llm::runtime::spec::GammaController;
+use dp_llm::runtime::Runtime;
+use dp_llm::util::json::Json;
+use dp_llm::util::rng::Rng;
+
+const GAMMAS: [usize; 3] = [0, 2, 4];
+const ACCEPTS: [f64; 7] = [0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
+const SIM_ROUNDS: usize = 200;
+
+fn main() {
+    let mut rows = Vec::new();
+    let mut sweep_rows = Vec::new();
+    let mut ctrl_rows = Vec::new();
+
+    // ---- Part 1a: predicted tokens/dispatch + speedup sweep ---------------
+    // Paper-scale pricing: 3-bit draft vs 6-bit target, Llama-3-8B bytes.
+    let n_params = 8.03e9f64;
+    let tpot_draft = JETSON_ORIN.tpot_ms(n_params * 3.0 / 8.0);
+    let tpot_target = JETSON_ORIN.tpot_ms(n_params * 6.0 / 8.0);
+    println!("modeled TPOT: draft(3b) {tpot_draft:.2} ms, \
+              target(6b) {tpot_target:.2} ms (Jetson fit, L3-8B scale)");
+    for &a in &ACCEPTS {
+        for &g in &GAMMAS {
+            let tokens = spec_tokens_per_round(a, g);
+            let cost = spec_cost_per_token(tpot_draft, tpot_target, a, g);
+            let speedup = tpot_target / cost;
+            println!(
+                "a={a:.1} γ={g}: {tokens:.3} tokens/dispatch, \
+                 {cost:.2} ms/token, speedup {speedup:.2}x"
+            );
+            let mut o = Json::obj();
+            o.set("accept", a)
+                .set("gamma", g)
+                .set("tokens_per_dispatch", tokens)
+                .set("ms_per_token", cost)
+                .set("speedup_vs_plain", speedup);
+            sweep_rows.push(o);
+        }
+    }
+    // Two headline cells for the summary table.
+    for &a in &[0.5, 0.9] {
+        let g = pick_gamma(tpot_draft, tpot_target, a, &[2, 4]);
+        let cost = spec_cost_per_token(tpot_draft, tpot_target, a, g);
+        rows.push(vec![
+            format!("model a={a:.1}: γ*, speedup"),
+            format!("γ={g}, {:.2}x", tpot_target / cost),
+        ]);
+    }
+
+    // ---- Part 1b: controller simulation over Bernoulli acceptance ---------
+    // Drives the real GammaController with synthetic rounds at a known
+    // true acceptance rate and records where the EWMA + cost model land.
+    for (i, &a_true) in ACCEPTS.iter().enumerate() {
+        let mut rng = Rng::new(41 + i as u64);
+        let mut ctrl = GammaController::new(tpot_draft, tpot_target);
+        let mut verify = 0u64;
+        let mut spec_tokens = 0u64;
+        let mut plain_rounds = 0u64;
+        let mut last_gamma = 0usize;
+        for _ in 0..SIM_ROUNDS {
+            let g = ctrl.pick(&[2, 4]);
+            last_gamma = g;
+            if g == 0 {
+                // Plain decode: one dispatch, one token, no observation
+                // — tracked separately so the spec-round yield below is
+                // not diluted once the controller parks at γ = 0.
+                plain_rounds += 1;
+                continue;
+            }
+            // Longest-prefix acceptance with i.i.d. per-draft prob.
+            let mut accepted = 0usize;
+            while accepted < g && rng.f64() < a_true {
+                accepted += 1;
+            }
+            ctrl.observe_round(accepted, g);
+            verify += 1;
+            spec_tokens += accepted as u64 + 1;
+        }
+        // Yield of the speculative rounds alone (0 when the controller
+        // never engaged); plain rounds are always 1 token/dispatch.
+        let per_dispatch = spec_tokens as f64 / verify.max(1) as f64;
+        println!(
+            "ctrl a={a_true:.1}: settles at γ={last_gamma}, ewma {:.2}, \
+             {verify} spec rounds at {per_dispatch:.2} tokens/verify-dispatch \
+             + {plain_rounds} plain rounds",
+            ctrl.accept_ewma
+        );
+        let mut o = Json::obj();
+        o.set("accept_true", a_true)
+            .set("gamma_final", last_gamma)
+            .set("accept_ewma", ctrl.accept_ewma)
+            .set("spec_rounds", verify as f64)
+            .set("plain_rounds", plain_rounds as f64)
+            .set("tokens_per_verify_dispatch", per_dispatch)
+            .set("rounds", SIM_ROUNDS);
+        ctrl_rows.push(o);
+    }
+
+    // ---- Part 2: real serving core, speculation on vs off -----------------
+    let mut serving_rows = Vec::new();
+    if bs::require_artifacts("spec_micro") {
+        let rt = Arc::new(Runtime::new().unwrap());
+        match ServingEngine::load(&rt, "dpl-tiny", 5, &["3.25", "4.00"]) {
+            Ok(engine) => {
+                for spec_on in [false, true] {
+                    let config = CoreConfig {
+                        spec: spec_on,
+                        ..CoreConfig::default()
+                    };
+                    let mut core = ServingCore::new(&engine, SchedPolicy::Fifo)
+                        .with_config(config);
+                    core.admit_pinned(
+                        Request::new(u64::from(spec_on), "The town of", 33,
+                                     QosBudget::best_effort()),
+                        4.0,
+                    )
+                    .unwrap();
+                    let before = rt.transfers().snapshot();
+                    let t0 = Instant::now();
+                    let mut decoded = 0u64;
+                    core.drain(&mut |ev| {
+                        if let CoreEvent::Token { index, .. } = ev {
+                            if *index > 0 {
+                                decoded += 1;
+                            }
+                        }
+                    })
+                    .unwrap();
+                    let secs = t0.elapsed().as_secs_f64();
+                    let after = rt.transfers().snapshot();
+                    let verify =
+                        after.spec_verify_dispatches - before.spec_verify_dispatches;
+                    let drafted = after.spec_drafted - before.spec_drafted;
+                    let accepted = after.spec_accepted - before.spec_accepted;
+                    let tok_s = decoded as f64 / secs.max(1e-9);
+                    let label = if spec_on { "spec" } else { "plain" };
+                    println!(
+                        "serving {label}: {tok_s:.1} tok/s, {verify} verify \
+                         dispatches / {decoded} tokens, acceptance {}/{}",
+                        accepted, drafted
+                    );
+                    let mut o = Json::obj();
+                    o.set("mode", label)
+                        .set("tokens_per_s", tok_s)
+                        .set("tokens", decoded as f64)
+                        .set("verify_dispatches", verify as f64)
+                        .set(
+                            "verify_dispatches_per_token",
+                            verify as f64 / decoded.max(1) as f64,
+                        )
+                        .set(
+                            "acceptance_rate",
+                            accepted as f64 / drafted.max(1) as f64,
+                        );
+                    serving_rows.push(o);
+                    rows.push(vec![
+                        format!("serving {label} tok/s | verify/token"),
+                        format!("{tok_s:.1} | {:.3}",
+                                verify as f64 / decoded.max(1) as f64),
+                    ]);
+                }
+            }
+            Err(e) => println!("[spec_micro] engine load failed ({e:#}); \
+                                serving part skipped"),
+        }
+    }
+
+    let mut j = Json::obj();
+    j.set("bench", "spec");
+    j.set("tpot_draft_ms", tpot_draft);
+    j.set("tpot_target_ms", tpot_target);
+    j.set("sweep", Json::Arr(sweep_rows));
+    j.set("controller", Json::Arr(ctrl_rows));
+    j.set("serving", Json::Arr(serving_rows));
+    let _ = std::fs::create_dir_all("results");
+    let _ = std::fs::write("results/BENCH_spec.json", j.dump());
+    println!("wrote results/BENCH_spec.json");
+
+    bs::emit("spec_micro",
+             "Self-speculative decoding (γ sweep, controller, serving)",
+             &["case", "value"], &rows);
+}

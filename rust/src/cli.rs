@@ -6,7 +6,7 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::qos::{QosBudget, UtilizationSim};
 use crate::coordinator::sched::{Request, SchedPolicy};
-use crate::coordinator::service::{make_queue, ServingEngine};
+use crate::coordinator::service::{make_queue, CoreConfig, ServingEngine};
 use crate::evalharness::{self, tasks, Method};
 use crate::model::{art, Manifest, ModelAssets};
 use crate::runtime::decode::EstMode;
@@ -22,6 +22,12 @@ USAGE: dpllm <subcommand> [--flags]
 
   generate   --model M --target T --prompt P [--max-new N] [--budget B]
   serve      --model M [--addr HOST:PORT] [--targets 3.50,4.00,4.50] [--budget B]
+             [--reselect-every N] [--gamma-cap N] [--no-spec] [--no-batch]
+             [--eos-token ID]
+             (speculative decoding + re-selection cadence knobs; env
+             equivalents DPLLM_RESELECT_EVERY / DPLLM_GAMMA_CAP /
+             DPLLM_NO_SPEC / DPLLM_NO_BATCH; --eos-token 258 stops
+             generations at the byte tokenizer's <eos> on every path)
   eval-ppl   --model M --method dpllm|hawq_v2|llm_mq|uniform --target T
              [--dataset synthwiki|synthweb] [--budget B] [--tokens N] [--exact]
   eval-task  --model M --task arith|listfn|dates|algebra --target T [--budget B]
@@ -94,7 +100,33 @@ fn serve(args: &Args) -> Result<()> {
     let rt = Arc::new(Runtime::new()?);
     let engine = ServingEngine::load(&rt, &model, budget, &tag_refs)?;
     eprintln!("[serve] adaptation set: {:?}", engine.targets());
-    let server = Server::new(engine, UtilizationSim::new(7, 0.5));
+    // Scheduling knobs: env defaults (CoreConfig::from_env) with CLI
+    // flags layered on top.
+    let mut cc = CoreConfig::from_env();
+    cc.reselect_every = args.usize_or("reselect-every",
+                                      cc.reselect_every as usize).max(1) as u64;
+    cc.gamma_cap = args.usize_or("gamma-cap", cc.gamma_cap);
+    if args.has("no-spec") {
+        cc.spec = false;
+    }
+    if args.has("no-batch") {
+        cc.max_batch = 1;
+    }
+    // Opt-in EOS termination, applied uniformly to every decode path
+    // (plain / batched / speculative) — e.g. --eos-token 258, the byte
+    // tokenizer's <eos> id.
+    if let Some(t) = args.get("eos-token").and_then(|s| s.parse::<u32>().ok()) {
+        cc.eos_token = Some(t);
+    }
+    eprintln!(
+        "[serve] core config: reselect_every={} gamma_cap={} spec={} \
+         max_batch={}",
+        cc.reselect_every, cc.gamma_cap, cc.spec,
+        if cc.max_batch == usize::MAX { "∞".to_string() }
+        else { cc.max_batch.to_string() }
+    );
+    let server = Server::new(engine, UtilizationSim::new(7, 0.5))
+        .with_core_config(cc);
     server.serve(&addr)
 }
 

@@ -1,9 +1,72 @@
 //! Serving metrics: per-request records + percentile summaries
-//! (powers the §6.3 per-query QoS study and the e2e example's report).
+//! (powers the §6.3 per-query QoS study and the e2e example's report),
+//! plus the ONE serializer for the runtime counter families — transfers,
+//! weight cache, batching, speculation — shared by `GET /metrics`, the
+//! examples and the benches so no caller hand-rolls its own snapshot
+//! formatting.
 
 use std::sync::Mutex;
 
+use crate::anyprec::materialize::MatSnapshot;
+use crate::runtime::TransferSnapshot;
+use crate::util::json::Json;
 use crate::util::stats::{mean, percentile};
+
+/// Serialize every runtime counter family into one JSON object:
+/// host↔device transfers + device-side assemblies, the weight
+/// materialization cache, continuous-batching occupancy, and the
+/// speculative-decoding drafted/accepted/verify counters with their
+/// derived rates.  The single source of truth behind `GET /metrics`'
+/// `counters` field and the examples' end-of-run reports.
+pub fn counters_json(ts: &TransferSnapshot, ws: &MatSnapshot) -> Json {
+    let mut j = Json::obj();
+    j.set("uploads", ts.uploads as i64)
+        .set("upload_bytes", ts.upload_bytes as i64)
+        .set("downloads", ts.downloads as i64)
+        .set("stack_assemblies", ts.assemblies as i64)
+        .set("batched_steps", ts.batched_steps as i64)
+        .set("batch_occupancy", ts.batch_occupancy as i64)
+        .set(
+            "mean_batch_occupancy",
+            ts.batch_occupancy as f64 / ts.batched_steps.max(1) as f64,
+        )
+        .set("spec_drafted", ts.spec_drafted as i64)
+        .set("spec_accepted", ts.spec_accepted as i64)
+        .set("spec_verify_dispatches", ts.spec_verify_dispatches as i64)
+        .set(
+            "spec_acceptance_rate",
+            ts.spec_accepted as f64 / ts.spec_drafted.max(1) as f64,
+        )
+        .set("weight_cache_hits", ws.hits as i64)
+        .set("weight_cache_misses", ws.misses as i64)
+        .set("weight_cache_evictions", ws.evictions as i64)
+        .set("weight_cache_bytes_dequantized", ws.bytes_dequantized as i64)
+        .set("weight_cache_resident_bytes", ws.resident_bytes as i64);
+    j
+}
+
+/// Human-readable one-liner over the same snapshot (examples / CLI).
+pub fn counters_report(ts: &TransferSnapshot, ws: &MatSnapshot) -> String {
+    format!(
+        "counters: {} uploads ({:.1} MB) / {} downloads / {} assemblies | \
+         batching {} dispatches, occupancy {:.2} | speculation {} verify \
+         dispatches, {}/{} drafts accepted ({:.0}%) | weight cache {} hits \
+         / {} misses / {:.1} MB dequantized",
+        ts.uploads,
+        ts.upload_bytes as f64 / 1e6,
+        ts.downloads,
+        ts.assemblies,
+        ts.batched_steps,
+        ts.batch_occupancy as f64 / ts.batched_steps.max(1) as f64,
+        ts.spec_verify_dispatches,
+        ts.spec_accepted,
+        ts.spec_drafted,
+        100.0 * ts.spec_accepted as f64 / ts.spec_drafted.max(1) as f64,
+        ws.hits,
+        ws.misses,
+        ws.bytes_dequantized as f64 / 1e6,
+    )
+}
 
 #[derive(Debug, Clone)]
 pub struct RequestRecord {
@@ -117,6 +180,38 @@ mod tests {
         assert!((s.mean_eff_bits - 4.1).abs() < 1e-9);
         assert_eq!(s.total_output_tokens, 20);
         assert!(s.throughput_tok_s > 0.0);
+    }
+
+    #[test]
+    fn counters_json_has_every_family_and_derived_rates() {
+        let ts = TransferSnapshot {
+            uploads: 10, upload_bytes: 4096, downloads: 7, assemblies: 2,
+            batched_steps: 4, batch_occupancy: 10,
+            spec_drafted: 8, spec_accepted: 6, spec_verify_dispatches: 2,
+        };
+        let ws = MatSnapshot {
+            hits: 5, misses: 3, evictions: 1, bytes_dequantized: 1 << 20,
+            resident_bytes: 2048, entries: 3,
+        };
+        let j = counters_json(&ts, &ws);
+        assert_eq!(j.f64_of("batched_steps").unwrap(), 4.0);
+        assert!((j.f64_of("mean_batch_occupancy").unwrap() - 2.5).abs() < 1e-12);
+        assert!((j.f64_of("spec_acceptance_rate").unwrap() - 0.75).abs() < 1e-12);
+        assert_eq!(j.f64_of("spec_verify_dispatches").unwrap(), 2.0);
+        assert_eq!(j.f64_of("weight_cache_hits").unwrap(), 5.0);
+        // The report string carries the same families.
+        let r = counters_report(&ts, &ws);
+        assert!(r.contains("2 verify dispatches"));
+        assert!(r.contains("6/8 drafts accepted (75%)"));
+        // Zero denominators must not divide by zero.
+        let zero = TransferSnapshot {
+            uploads: 0, upload_bytes: 0, downloads: 0, assemblies: 0,
+            batched_steps: 0, batch_occupancy: 0,
+            spec_drafted: 0, spec_accepted: 0, spec_verify_dispatches: 0,
+        };
+        let j = counters_json(&zero, &ws);
+        assert_eq!(j.f64_of("spec_acceptance_rate").unwrap(), 0.0);
+        assert_eq!(j.f64_of("mean_batch_occupancy").unwrap(), 0.0);
     }
 
     #[test]

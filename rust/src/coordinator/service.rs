@@ -22,6 +22,17 @@
 //! dispatches per generated token from 1.0 toward 1/B — DESIGN.md
 //! §Batching.  When no batch forms (mixed targets, B = 1 artifacts,
 //! `DPLLM_NO_BATCH`) every step degenerates to the per-request path.
+//!
+//! A spec-eligible generation running **alone** instead rides
+//! self-speculative decoding (DESIGN.md §Speculation): the adaptation
+//! set's lowest-precision session drafts γ tokens for free off the
+//! any-precision overlay, one `verify_step_g{γ}` dispatch at the target
+//! precision scores them all, and the accepted run streams in order —
+//! up to γ+1 tokens per dispatch where batching has no partner to
+//! amortize with.  Best-effort and loose-deadline requests are eligible;
+//! tight-EDF requests keep token-granular preemption.  The degradation
+//! ladder is spec → batched → single, every rung preserving greedy
+//! numerics exactly.  All knobs live in [`CoreConfig`].
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -29,24 +40,110 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use super::metrics::{MetricsRegistry, RequestRecord};
+use super::metrics::{counters_json, counters_report, MetricsRegistry, RequestRecord};
 use super::qos::{AdaptationPolicy, UtilizationSim};
 use super::sched::{Request, RequestQueue, SchedPolicy};
 use crate::anyprec::materialize::MatSnapshot;
 use crate::evalharness::{build_session_with_cache, engine_config_for, Method};
 use crate::model::{art, Manifest, ModelAssets};
 use crate::runtime::decode::{DecodeSession, EstMode, GenState, SwapReport, WeightCache};
+use crate::runtime::spec::{spec_eligible, spec_round, truncate_at_eos,
+                           GammaController, SpecState, MAX_SPEC_CATCHUP};
 use crate::runtime::Runtime;
 use crate::selector::EngineConfig;
 use crate::tokenizer::Tokenizer;
+use crate::util::json::Json;
 
-/// Tokens between utilization ticks / mid-stream target re-selection in the
-/// interleaved loop.
+/// Default tokens between utilization ticks / mid-stream target
+/// re-selection in the interleaved loop ([`CoreConfig::reselect_every`]).
 pub const RESELECT_EVERY: u64 = 8;
 
 /// Default cap on concurrently-interleaved generations (KV caches resident
 /// on the device at once).
 pub const DEFAULT_MAX_ACTIVE: usize = 4;
+
+/// Default cap on the speculative draft length γ
+/// ([`CoreConfig::gamma_cap`]); 0 disables speculation outright.
+pub const DEFAULT_GAMMA_CAP: usize = 4;
+
+/// Default boundary between "tight" and "loose" deadlines for the spec
+/// path ([`CoreConfig::loose_deadline_ms`]): requests whose deadline is at
+/// least this far out may commit multi-token speculative runs; tighter
+/// deadlines keep token-granular EDF preemption.
+pub const DEFAULT_LOOSE_DEADLINE_MS: f64 = 1_000.0;
+
+/// Runtime-tunable knobs of the [`ServingCore`] scheduling loop.  The
+/// `Default` instance reproduces the historical hard-coded behavior;
+/// [`CoreConfig::from_env`] layers the environment escape hatches on top
+/// and is what [`ServingCore::new`] uses, so deployments tune the loop
+/// without recompiling (the `serve` CLI additionally plumbs flags).
+#[derive(Debug, Clone)]
+pub struct CoreConfig {
+    /// Concurrently-interleaved generations (device KV residency cap).
+    pub max_active: usize,
+    /// Generations per shared device dispatch (1 = per-request dispatch;
+    /// further capped by the lead session's largest `decode_step_b*`).
+    pub max_batch: usize,
+    /// Tokens between utilization ticks / mid-stream re-selection.
+    pub reselect_every: u64,
+    /// Largest speculative draft length γ the controller may pick
+    /// (candidates are further limited to the compiled `verify_step_g*`
+    /// graphs); 0 disables speculation.
+    pub gamma_cap: usize,
+    /// Master switch for the speculative path (`DPLLM_NO_SPEC` clears it).
+    pub spec: bool,
+    /// Deadlines at least this many ms out still ride the spec path.
+    pub loose_deadline_ms: f64,
+    /// Token that terminates a generation when it is emitted, on EVERY
+    /// decode path — plain, batched, and speculative (where it truncates
+    /// the accepted run, EOS kept) — so speculation and plain decode
+    /// stay token-for-token identical.  `None` (the default) preserves
+    /// the historical behavior: generations run to `max_new`.
+    pub eos_token: Option<u32>,
+}
+
+impl Default for CoreConfig {
+    fn default() -> CoreConfig {
+        CoreConfig {
+            max_active: DEFAULT_MAX_ACTIVE,
+            max_batch: usize::MAX,
+            reselect_every: RESELECT_EVERY,
+            gamma_cap: DEFAULT_GAMMA_CAP,
+            spec: true,
+            loose_deadline_ms: DEFAULT_LOOSE_DEADLINE_MS,
+            eos_token: None,
+        }
+    }
+}
+
+impl CoreConfig {
+    /// Defaults + environment overrides: `DPLLM_NO_BATCH=1` forces
+    /// per-request dispatch, `DPLLM_NO_SPEC=1` disables speculation,
+    /// `DPLLM_RESELECT_EVERY=<n>` retunes the re-selection cadence and
+    /// `DPLLM_GAMMA_CAP=<n>` caps the speculative draft length.
+    pub fn from_env() -> CoreConfig {
+        let mut c = CoreConfig::default();
+        if std::env::var_os("DPLLM_NO_BATCH").is_some() {
+            c.max_batch = 1;
+        }
+        if std::env::var_os("DPLLM_NO_SPEC").is_some() {
+            c.spec = false;
+        }
+        if let Some(n) = std::env::var("DPLLM_RESELECT_EVERY")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+        {
+            c.reselect_every = n.max(1);
+        }
+        if let Some(n) = std::env::var("DPLLM_GAMMA_CAP")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            c.gamma_cap = n;
+        }
+        c
+    }
+}
 
 pub struct ServeOutcome {
     pub id: u64,
@@ -152,6 +249,58 @@ impl ServingEngine {
     /// `Runtime::transfers()` for the §Perf config-switch contract).
     pub fn weight_cache_stats(&self) -> MatSnapshot {
         self.weights.borrow().snapshot()
+    }
+
+    /// One serialized snapshot of every runtime counter family —
+    /// transfers, weight cache, batching, speculation — via the shared
+    /// serializer (`coordinator::metrics::counters_json`).  Backs the
+    /// `counters` field of `GET /metrics` and the examples' reports.
+    pub fn counters_json(&self) -> Json {
+        counters_json(&self.rt.transfers().snapshot(),
+                      &self.weights.borrow().snapshot())
+    }
+
+    /// Human-readable one-liner over [`ServingEngine::counters_json`]'s
+    /// snapshot (examples / CLI end-of-run reports).
+    pub fn counters_report(&self) -> String {
+        counters_report(&self.rt.transfers().snapshot(),
+                        &self.weights.borrow().snapshot())
+    }
+
+    /// Costmodel-priced TPOT of a target precision over THIS model's
+    /// real packed-store byte counts, at the memory-bandwidth-bound
+    /// asymptote (stream time only, no fixed per-token overhead).  The γ
+    /// controller prices speculative rounds with this rather than the
+    /// measured TPOTs: sandbox-scale measurements are overhead-dominated
+    /// (DESIGN.md §2), which would hide exactly the low-bit draft
+    /// advantage that reappears at paper scale — the affine slope is the
+    /// quantity speculation arbitrages.
+    pub fn modeled_tpot_ms(&self, target: f64) -> f64 {
+        let bytes = crate::costmodel::weight_bytes_at(&self.assets.store, target);
+        crate::costmodel::JETSON_ORIN.stream_ms(bytes)
+    }
+
+    /// The draft half of a self-speculative pair for `target`: the
+    /// adaptation set's lowest-precision session — resident for free via
+    /// the any-precision overlay.  `None` when speculation cannot engage:
+    /// the target has no compiled `verify_step_g*` graphs (old
+    /// artifacts), or it *is* the lowest-precision member (a draft as
+    /// slow as its target can never win; the γ controller would sit at 0
+    /// anyway, so the draft prefill is not worth paying).
+    pub fn spec_draft_for(&self, target: &DecodeSession) -> Option<&DecodeSession> {
+        if target.spec_gammas().is_empty() {
+            return None;
+        }
+        let (_, tag) = self
+            .targets
+            .iter()
+            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())?;
+        let draft = &self.sessions[tag];
+        if std::ptr::eq(draft, target) {
+            None
+        } else {
+            Some(draft)
+        }
     }
 
     /// Swap the adaptation set at runtime (FlexQuant's scenario: the
@@ -445,8 +594,20 @@ struct Generation<'e> {
     target: f64,
     pinned: bool,
     seq: u64,
+    /// Prompt length in tokens; `out_ids[j]` was fed (or will be fed) at
+    /// absolute position `prompt_len + j`.
+    prompt_len: usize,
     next_token: u32,
     out_ids: Vec<u32>,
+    /// Speculation pair state: the low-bit draft generation + γ
+    /// controller.  `None` when the request is ineligible (tight
+    /// deadline), speculation is disabled, the artifacts lack verify
+    /// graphs, or a speculative round failed (permanent per-request
+    /// fallback to plain decode).
+    spec: Option<SpecState<'e>>,
+    /// Terminated by emitting [`CoreConfig::eos_token`] (on any decode
+    /// path — plain, batched, or inside an accepted speculative run).
+    done: bool,
     queue_ms: f64,
     prefill_ms: f64,
     decode_ms: f64,
@@ -455,7 +616,8 @@ struct Generation<'e> {
 
 impl Generation<'_> {
     fn finished(&self) -> bool {
-        self.out_ids.len() >= self.req.max_new
+        self.done
+            || self.out_ids.len() >= self.req.max_new
             || self.gen.pos + 1 >= self.session.cfg.max_seq
     }
 }
@@ -470,52 +632,55 @@ pub struct ServingCore<'e> {
     active: Vec<Generation<'e>>,
     rr_cursor: usize,
     next_seq: u64,
-    max_active: usize,
-    /// Cap on generations sharing one device dispatch (further capped by
-    /// the lead session's largest `decode_step_b*` bucket).  1 disables
-    /// batching entirely.
-    max_batch: usize,
+    /// Scheduling knobs ([`CoreConfig`]); seeded from the environment by
+    /// [`ServingCore::new`].
+    config: CoreConfig,
     /// Batched dispatches that failed and fell back to per-request
     /// advances (see [`ServingCore::batch_errors`]).
     batch_errors: u64,
+    /// Speculative rounds that failed; each failure permanently drops
+    /// that request's speculation state (see [`ServingCore::spec_errors`]).
+    spec_errors: u64,
     token_clock: u64,
-    /// Last `token_clock / RESELECT_EVERY` epoch a re-selection ran for
+    /// Last `token_clock / reselect_every` epoch a re-selection ran for
     /// (see [`ServingCore::reselect_due`]).
     reselect_epoch: Option<u64>,
 }
 
 impl<'e> ServingCore<'e> {
     pub fn new(engine: &'e ServingEngine, policy: SchedPolicy) -> ServingCore<'e> {
-        // Escape hatch for perf comparisons and misbehaving batched
-        // artifacts: DPLLM_NO_BATCH forces per-request dispatch.
-        let max_batch = if std::env::var_os("DPLLM_NO_BATCH").is_some() {
-            1
-        } else {
-            usize::MAX
-        };
         ServingCore {
             engine,
             policy,
             active: Vec::new(),
             rr_cursor: 0,
             next_seq: 0,
-            max_active: DEFAULT_MAX_ACTIVE,
-            max_batch,
+            config: CoreConfig::from_env(),
             batch_errors: 0,
+            spec_errors: 0,
             token_clock: 0,
             reselect_epoch: None,
         }
     }
 
+    /// Replace the scheduling knobs wholesale (tests, CLI plumbing).
+    pub fn with_config(mut self, config: CoreConfig) -> ServingCore<'e> {
+        self.config = config;
+        self.config.max_active = self.config.max_active.max(1);
+        self.config.max_batch = self.config.max_batch.max(1);
+        self.config.reselect_every = self.config.reselect_every.max(1);
+        self
+    }
+
     pub fn with_max_active(mut self, n: usize) -> ServingCore<'e> {
-        self.max_active = n.max(1);
+        self.config.max_active = n.max(1);
         self
     }
 
     /// Cap the number of generations packed into one device dispatch
     /// (1 = per-request dispatch, the pre-batching behavior).
     pub fn with_max_batch(mut self, n: usize) -> ServingCore<'e> {
-        self.max_batch = n.max(1);
+        self.config.max_batch = n.max(1);
         self
     }
 
@@ -528,7 +693,7 @@ impl<'e> ServingCore<'e> {
     }
 
     pub fn has_capacity(&self) -> bool {
-        self.active.len() < self.max_active
+        self.active.len() < self.config.max_active
     }
 
     /// Tokens decoded since construction (drives the re-selection
@@ -546,13 +711,22 @@ impl<'e> ServingCore<'e> {
         self.batch_errors
     }
 
+    /// Speculative rounds that failed.  Each failure drops that
+    /// request's speculation state permanently (plain decode from then
+    /// on), so this stays small; a non-zero value usually means broken
+    /// `verify_step_g*` artifacts — regenerate them or set
+    /// `DPLLM_NO_SPEC=1`.
+    pub fn spec_errors(&self) -> u64 {
+        self.spec_errors
+    }
+
     /// True when a utilization tick + mid-stream re-selection is due:
-    /// once per [`RESELECT_EVERY`]-token epoch, and on the first call.
-    /// Epoch-based rather than `token_clock % RESELECT_EVERY == 0`
-    /// because a batched step can move the clock across a multiple
-    /// without ever landing on it.
+    /// once per [`CoreConfig::reselect_every`]-token epoch, and on the
+    /// first call.  Epoch-based rather than `token_clock % n == 0`
+    /// because a batched step or an accepted speculative run can move
+    /// the clock across a multiple without ever landing on it.
     pub fn reselect_due(&mut self) -> bool {
-        let epoch = self.token_clock / RESELECT_EVERY;
+        let epoch = self.token_clock / self.config.reselect_every.max(1);
         if self.reselect_epoch == Some(epoch) {
             false
         } else {
@@ -593,7 +767,7 @@ impl<'e> ServingCore<'e> {
     fn admit_inner(&mut self, req: Request, target: f64, pinned: bool)
                    -> Result<u64> {
         if !self.has_capacity() {
-            return Err(anyhow!("core at capacity ({})", self.max_active));
+            return Err(anyhow!("core at capacity ({})", self.config.max_active));
         }
         let session = self.engine.session_for_target(target);
         let queue_ms = req.arrival.elapsed().as_secs_f64() * 1e3;
@@ -606,6 +780,41 @@ impl<'e> ServingCore<'e> {
         let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
         let first = DecodeSession::argmax(&logits)?;
         let id = req.id;
+        // Pair eligible requests with the low-bit draft session: a draft
+        // prefill seeds the draft KV (prefill runs at max precision on
+        // both sessions, so this is the same compute the target paid).
+        // A failed draft prefill just means no speculation — never a
+        // failed admission.
+        let spec = if self.config.spec
+            && self.config.gamma_cap > 0
+            && spec_eligible(req.deadline_ms, self.config.loose_deadline_ms)
+        {
+            self.engine.spec_draft_for(session).and_then(|draft| {
+                let ctrl = GammaController::new(
+                    self.engine.modeled_tpot_ms(draft.ec.target),
+                    self.engine.modeled_tpot_ms(session.ec.target),
+                );
+                // If even the optimistic-start controller can never pick
+                // γ > 0 for this draft/target cost pair (e.g. adjacent
+                // targets), skip the pairing entirely — no draft prefill
+                // dispatch, no second device-resident KV cache.
+                let candidates: Vec<usize> = session
+                    .spec_gammas()
+                    .into_iter()
+                    .filter(|&g| g <= self.config.gamma_cap)
+                    .collect();
+                if ctrl.pick(&candidates) == 0 {
+                    return None;
+                }
+                draft.begin(&prompt_ids).ok().map(|(draft_gen, _)| SpecState {
+                    draft,
+                    draft_gen,
+                    ctrl,
+                })
+            })
+        } else {
+            None
+        };
         self.active.push(Generation {
             req,
             session,
@@ -613,8 +822,11 @@ impl<'e> ServingCore<'e> {
             target: session.ec.target,
             pinned,
             seq: self.next_seq,
+            prompt_len: prompt_ids.len(),
             next_token: first,
             out_ids: vec![first],
+            spec,
+            done: false,
             queue_ms,
             prefill_ms,
             decode_ms: 0.0,
@@ -643,20 +855,130 @@ impl<'e> ServingCore<'e> {
                 g.session = session;
                 session.adopt(&mut g.gen);
                 g.target = session.ec.target;
+                // The γ controller's cost comparison tracks the new
+                // target (the draft half stays pinned to the lowest
+                // member; if the target moved onto it, the controller's
+                // strict-improvement rule parks γ at 0 by itself).
+                if let Some(spec) = &mut g.spec {
+                    spec.ctrl.tpot_target_ms =
+                        self.engine.modeled_tpot_ms(g.target);
+                }
                 switched += 1;
             }
         }
         switched
     }
 
-    /// Advance the policy-chosen generation by ONE token — together with
-    /// every batch-compatible runnable generation in the same device
-    /// dispatch when the batched artifacts are available ([`pick_batch`]
-    /// + [`DecodeSession::advance_batch`]).  Emits the streamed token
-    /// events (a generation's first pick also emits its prefill-produced
-    /// token 0) and, on completion, the terminal outcomes.  A failed
-    /// batched dispatch falls back to per-request advances so one broken
-    /// generation is evicted without poisoning its batch mates.
+    /// Speculative draft length for one active generation this step, 0
+    /// when the plain/batched path should run instead: no speculation
+    /// state, γ controller says plain decode, or the remaining token /
+    /// sequence budget cannot fit a γ+1 run.
+    fn spec_gamma_for(&self, g: &Generation<'e>) -> usize {
+        let Some(spec) = &g.spec else { return 0 };
+        let remaining = g.req.max_new.saturating_sub(g.out_ids.len());
+        let candidates: Vec<usize> = g
+            .session
+            .spec_gammas()
+            .into_iter()
+            .filter(|&gm| {
+                gm <= self.config.gamma_cap
+                    && gm + 1 <= remaining
+                    && g.gen.pos + gm + 1 < g.session.cfg.max_seq
+            })
+            .collect();
+        spec.ctrl.pick(&candidates)
+    }
+
+    /// Try to serve `idx` through one speculative round.  Returns true
+    /// when the round fully handled this step's advance (events pushed,
+    /// clock moved); false to let the caller run the plain path —
+    /// including after a round failure, which drops the request's
+    /// speculation state so the step (and the rest of the generation)
+    /// proceeds unspeculated.
+    fn spec_step(&mut self, idx: usize, events: &mut Vec<CoreEvent>) -> bool {
+        let engine = self.engine;
+        let est_mode = engine.est_mode;
+        let eos = self.config.eos_token;
+        let gamma = self.spec_gamma_for(&self.active[idx]);
+        let g = &mut self.active[idx];
+        let Some(spec) = g.spec.as_mut() else { return false };
+        // Committed tokens the draft has not ingested yet (it falls
+        // behind when this generation advances through the batched or
+        // plain path, and by one token after a fully-accepted round).
+        // Far behind → speculation is not earning its keep here; drop it
+        // rather than stall a scheduling step on replay.
+        let behind = g.gen.pos - spec.draft_gen.pos;
+        if behind > MAX_SPEC_CATCHUP {
+            g.spec = None;
+            return false;
+        }
+        if gamma == 0 {
+            return false;
+        }
+        let dstart = spec.draft_gen.pos - g.prompt_len;
+        let catchup: Vec<u32> =
+            g.out_ids[dstart..g.out_ids.len() - 1].to_vec();
+        let t0 = Instant::now();
+        let round = spec_round(spec, g.session, &mut g.gen, g.next_token,
+                               &catchup, gamma, est_mode);
+        g.decode_ms += t0.elapsed().as_secs_f64() * 1e3;
+        match round {
+            Ok(r) => {
+                let mut toks = r.tokens;
+                if truncate_at_eos(&mut toks, eos) {
+                    g.done = true;
+                }
+                let n = toks.len() as u64;
+                // Stream the whole accepted run in order — each token is
+                // exactly what plain greedy decode would have emitted.
+                for t in toks {
+                    g.next_token = t;
+                    g.out_ids.push(t);
+                    events.push(CoreEvent::Token {
+                        id: g.req.id,
+                        index: g.out_ids.len() - 1,
+                        token: t,
+                        piece: engine.tokenizer.decode_one(t),
+                        target: g.target,
+                    });
+                }
+                self.token_clock += n;
+                true
+            }
+            Err(e) => {
+                // spec_round leaves the pair consistent (draft rewound);
+                // drop speculation for this request and let the caller's
+                // plain path advance it this very step.
+                self.spec_errors += 1;
+                if self.spec_errors == 1 {
+                    eprintln!(
+                        "[core] speculative round failed; request {} falls \
+                         back to plain decode (set DPLLM_NO_SPEC=1 or fix \
+                         the verify_step_g* artifacts if this persists): \
+                         {e:#}",
+                        g.req.id
+                    );
+                }
+                g.spec = None;
+                false
+            }
+        }
+    }
+
+    /// Advance the policy-chosen generation — together with every
+    /// batch-compatible runnable generation in the same device dispatch
+    /// when the batched artifacts are available ([`pick_batch`] +
+    /// [`DecodeSession::advance_batch`]), or by a multi-token
+    /// *speculative round* when it runs alone and is spec-eligible
+    /// (γ low-bit drafts verified in one target dispatch via
+    /// `runtime::spec::spec_round`, each accepted token streamed in
+    /// order).  Emits
+    /// the streamed token events (a generation's first pick also emits
+    /// its prefill-produced token 0) and, on completion, the terminal
+    /// outcomes.  A failed batched dispatch falls back to per-request
+    /// advances so one broken generation is evicted without poisoning
+    /// its batch mates; a failed speculative round falls back to the
+    /// plain path within the same step.
     pub fn step(&mut self) -> Result<Vec<CoreEvent>> {
         let pairs: Vec<(u64, Option<Instant>)> = self
             .active
@@ -667,7 +989,7 @@ impl<'e> ServingCore<'e> {
             return Ok(Vec::new());
         };
         let session: &'e DecodeSession = self.active[lead].session;
-        let cap = self.max_batch.min(session.max_batch()).max(1);
+        let cap = self.config.max_batch.min(session.max_batch()).max(1);
         let picked = if cap > 1 {
             let items: Vec<BatchItem> = self
                 .active
@@ -703,16 +1025,58 @@ impl<'e> ServingCore<'e> {
             }
         }
 
-        // Advance the non-finished picked generations: one batched
-        // dispatch when ≥ 2 share the lead's session, else per request.
+        // Advance the non-finished picked generations.  Degradation
+        // ladder (DESIGN.md §Speculation): a lone runnable generation
+        // tries a speculative round first (γ low-bit drafts verified in
+        // one target dispatch — converting idle batch capacity into
+        // tokens); ≥ 2 compatible generations share one batched
+        // dispatch; everything else is the per-request path.
         let to_advance: Vec<usize> = picked
             .iter()
             .copied()
             .filter(|&i| !self.active[i].finished())
             .collect();
         let est_mode = self.engine.est_mode;
-        let mut advanced: Vec<u64> = Vec::new();
         let mut failures: Vec<(u64, String)> = Vec::new();
+        let mut spec_done = false;
+        if self.config.spec && to_advance.len() == 1 {
+            spec_done = self.spec_step(to_advance[0], &mut events);
+        }
+        if !spec_done {
+            self.step_plain(&to_advance, &picked, est_mode, &mut events,
+                            &mut failures);
+        }
+        // Evict broken generations; the rest of the set keeps serving.
+        for (id, error) in failures {
+            if let Some(pos) = self.active.iter().position(|g| g.req.id == id) {
+                self.active.remove(pos);
+            }
+            events.push(CoreEvent::Failed { id, error });
+        }
+        // Completions (indices may have shifted — resolve by id).
+        for id in picked_ids {
+            if let Some(pos) = self.active.iter().position(|g| g.req.id == id) {
+                if self.active[pos].finished() {
+                    let g = self.active.remove(pos);
+                    events.push(CoreEvent::Done(self.complete(g)));
+                }
+            }
+        }
+        Ok(events)
+    }
+
+    /// The non-speculative advance of one scheduling step: one batched
+    /// dispatch when ≥ 2 picked generations share the lead's session,
+    /// else one per-request advance; streams the decoded tokens in pack
+    /// order and records failures for the caller to evict.  EOS handling
+    /// matches the speculative path: an emitted [`CoreConfig::eos_token`]
+    /// finishes the generation (token kept), so every decode path
+    /// produces the identical stream.
+    fn step_plain(&mut self, to_advance: &[usize], picked: &[usize],
+                  est_mode: EstMode, events: &mut Vec<CoreEvent>,
+                  failures: &mut Vec<(u64, String)>) {
+        let eos = self.config.eos_token;
+        let mut advanced: Vec<u64> = Vec::new();
         let advance_one = |g: &mut Generation<'e>,
                                advanced: &mut Vec<u64>,
                                failures: &mut Vec<(u64, String)>| {
@@ -726,12 +1090,18 @@ impl<'e> ServingCore<'e> {
                 Ok(next) => {
                     g.next_token = next;
                     g.out_ids.push(next);
+                    if eos == Some(next) {
+                        g.done = true;
+                    }
                     advanced.push(g.req.id);
                 }
                 Err(e) => failures.push((g.req.id, format!("{e:#}"))),
             }
         };
         if to_advance.len() >= 2 {
+            // All picked generations share the lead's session by the
+            // pick_batch key contract — any member names the batch exe.
+            let session: &'e DecodeSession = self.active[to_advance[0]].session;
             let t0 = Instant::now();
             let mut gens: Vec<&mut Generation<'e>> = self
                 .active
@@ -762,6 +1132,9 @@ impl<'e> ServingCore<'e> {
                             Ok(next) => {
                                 g.next_token = next;
                                 g.out_ids.push(next);
+                                if eos == Some(next) {
+                                    g.done = true;
+                                }
                                 advanced.push(g.req.id);
                             }
                             Err(e) => {
@@ -787,18 +1160,18 @@ impl<'e> ServingCore<'e> {
                         );
                     }
                     for g in gens.iter_mut() {
-                        advance_one(&mut **g, &mut advanced, &mut failures);
+                        advance_one(&mut **g, &mut advanced, &mut *failures);
                     }
                 }
             }
         } else if let Some(&i) = to_advance.first() {
-            advance_one(&mut self.active[i], &mut advanced, &mut failures);
+            advance_one(&mut self.active[i], &mut advanced, &mut *failures);
         }
         self.token_clock += advanced.len() as u64;
 
         // Stream the decoded tokens in pack order (EDF: deadline order;
         // FIFO: admission order).
-        for &i in &picked {
+        for &i in picked {
             let g = &self.active[i];
             if advanced.contains(&g.req.id) {
                 events.push(CoreEvent::Token {
@@ -810,23 +1183,6 @@ impl<'e> ServingCore<'e> {
                 });
             }
         }
-        // Evict broken generations; the rest of the set keeps serving.
-        for (id, error) in failures {
-            if let Some(pos) = self.active.iter().position(|g| g.req.id == id) {
-                self.active.remove(pos);
-            }
-            events.push(CoreEvent::Failed { id, error });
-        }
-        // Completions (indices may have shifted — resolve by id).
-        for id in picked_ids {
-            if let Some(pos) = self.active.iter().position(|g| g.req.id == id) {
-                if self.active[pos].finished() {
-                    let g = self.active.remove(pos);
-                    events.push(CoreEvent::Done(self.complete(g)));
-                }
-            }
-        }
-        Ok(events)
     }
 
     /// Run everything to completion: admit from `queue` as capacity frees
@@ -877,7 +1233,7 @@ impl<'e> ServingCore<'e> {
             id: g.req.id,
             target_precision: g.target,
             effective_bits: eff,
-            prompt_tokens: g.gen.pos - g.out_ids.len() + 1,
+            prompt_tokens: g.prompt_len,
             output_tokens: g.out_ids.len(),
             queue_ms: g.queue_ms,
             prefill_ms: g.prefill_ms,
@@ -1081,5 +1437,22 @@ mod tests {
             assert_eq!(pick_batch(SchedPolicy::Fifo, cursor, &items, 4),
                        vec![0, 1, 2]);
         }
+    }
+
+    /// The default CoreConfig reproduces the historical hard-coded
+    /// behavior exactly — the "defaulting to current behavior" contract
+    /// of making the knobs runtime-configurable.
+    #[test]
+    fn core_config_default_matches_legacy_constants() {
+        let c = CoreConfig::default();
+        assert_eq!(c.reselect_every, RESELECT_EVERY);
+        assert_eq!(c.max_active, DEFAULT_MAX_ACTIVE);
+        assert_eq!(c.max_batch, usize::MAX);
+        assert_eq!(c.gamma_cap, DEFAULT_GAMMA_CAP);
+        assert!(c.spec);
+        // None = the historical behavior (run to max_new); EOS
+        // termination is opt-in and applies to every path uniformly.
+        assert_eq!(c.eos_token, None);
+        assert_eq!(c.loose_deadline_ms, DEFAULT_LOOSE_DEADLINE_MS);
     }
 }

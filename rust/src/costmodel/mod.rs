@@ -159,6 +159,68 @@ pub fn estimator_critical_bytes(cfg: &ModelConfig, dp: &DpllmConfig,
     (bytes, invocations)
 }
 
+// ---------------------------------------------------------------------------
+// Self-speculative decoding cost model (DESIGN.md §Speculation).
+//
+// A speculative round costs γ draft decode steps at the low bitwidth plus
+// ONE verify dispatch at the target bitwidth (scoring γ+1 positions reads
+// the weights once — batch-1 decode is memory-bandwidth bound, §2 above,
+// so the verify step costs ≈ one target-precision token).  With per-draft
+// acceptance probability `a` the round commits 1 + a + a² + … + a^γ
+// tokens in expectation (greedy longest-prefix acceptance, ≥ 1 always).
+// The dynamic-γ controller picks the γ minimizing expected ms/token and
+// falls back to plain decode (γ = 0) whenever speculation would not be
+// strictly cheaper.
+// ---------------------------------------------------------------------------
+
+/// Expected committed tokens per verify round: Σ_{i=0}^{γ} aⁱ.
+/// γ = 0 → 1.0 (plain decode); a = 1 → γ + 1 (every draft accepted).
+pub fn spec_tokens_per_round(accept: f64, gamma: usize) -> f64 {
+    let a = accept.clamp(0.0, 1.0);
+    let mut e = 1.0;
+    let mut p = 1.0;
+    for _ in 0..gamma {
+        p *= a;
+        e += p;
+    }
+    e
+}
+
+/// Expected cost per committed token of a speculative round:
+/// `(γ·TPOT_draft + TPOT_target) / E[tokens]`.  γ = 0 degenerates to
+/// plain decode's `TPOT_target` exactly.
+pub fn spec_cost_per_token(tpot_draft_ms: f64, tpot_target_ms: f64,
+                           accept: f64, gamma: usize) -> f64 {
+    if gamma == 0 {
+        return tpot_target_ms;
+    }
+    (gamma as f64 * tpot_draft_ms + tpot_target_ms)
+        / spec_tokens_per_round(accept, gamma)
+}
+
+/// Pick the draft length from `candidates` (γ values with a compiled
+/// `verify_step_g*` graph) minimizing expected ms/token at acceptance
+/// rate `accept`.  Returns 0 — plain decode — unless some candidate is
+/// *strictly* cheaper: a draft as slow as the target (tpot_draft ≥
+/// tpot_target · E/(γ+… )) or a poor acceptance rate can never engage
+/// speculation, the fall-back the DP-LLM QoS story requires.
+pub fn pick_gamma(tpot_draft_ms: f64, tpot_target_ms: f64, accept: f64,
+                  candidates: &[usize]) -> usize {
+    let mut best = 0usize;
+    let mut best_cost = tpot_target_ms;
+    for &g in candidates {
+        if g == 0 {
+            continue;
+        }
+        let c = spec_cost_per_token(tpot_draft_ms, tpot_target_ms, accept, g);
+        if c < best_cost {
+            best = g;
+            best_cost = c;
+        }
+    }
+    best
+}
+
 /// Relative selector overhead vs. the static baseline (Table 4/6 cells).
 pub fn overhead_frac(profile: &DeviceProfile, cfg: &ModelConfig,
                      store: &AnyPrecStore, dp: &DpllmConfig, b_eff: f64,
@@ -205,6 +267,47 @@ mod tests {
         let t45 = JETSON_ORIN.tpot_ms(n * 4.5 / 8.0);
         assert!(((t45 - t40) - (t40 - t35)).abs() < 1e-9);
         assert!(t35 < t40 && t40 < t45);
+    }
+
+    #[test]
+    fn spec_tokens_per_round_bounds() {
+        // γ = 0 and a = 0 both degenerate to one token per round.
+        assert_eq!(spec_tokens_per_round(0.7, 0), 1.0);
+        assert_eq!(spec_tokens_per_round(0.0, 4), 1.0);
+        // Perfect acceptance commits γ + 1 tokens.
+        assert!((spec_tokens_per_round(1.0, 4) - 5.0).abs() < 1e-12);
+        // a = 0.5, γ = 2: 1 + 0.5 + 0.25.
+        assert!((spec_tokens_per_round(0.5, 2) - 1.75).abs() < 1e-12);
+        // Monotone in both a and γ.
+        assert!(spec_tokens_per_round(0.6, 4) > spec_tokens_per_round(0.4, 4));
+        assert!(spec_tokens_per_round(0.6, 4) > spec_tokens_per_round(0.6, 2));
+    }
+
+    #[test]
+    fn spec_cost_gamma0_is_plain_decode() {
+        assert_eq!(spec_cost_per_token(1.0, 3.0, 0.9, 0), 3.0);
+    }
+
+    #[test]
+    fn pick_gamma_prefers_speculation_only_when_strictly_cheaper() {
+        // Very cheap draft + high acceptance → the largest γ wins.
+        assert_eq!(pick_gamma(1.0, 10.0, 0.95, &[2, 4]), 4);
+        // Fast draft (3-bit vs 6-bit on the affine Jetson profile) + high
+        // acceptance → speculation engages (the fixed per-token overhead
+        // makes γ = 2 the sweet spot there, but any γ > 0 is the point).
+        let n = 8.03e9f64;
+        let t3 = JETSON_ORIN.tpot_ms(n * 3.0 / 8.0);
+        let t6 = JETSON_ORIN.tpot_ms(n * 6.0 / 8.0);
+        assert!(t3 < t6);
+        assert!(pick_gamma(t3, t6, 0.9, &[2, 4]) > 0);
+        // Low acceptance: each verify mostly commits one token while the
+        // round still paid γ drafts — plain decode wins.
+        assert_eq!(pick_gamma(t3, t6, 0.05, &[2, 4]), 0);
+        // Draft as expensive as the target can never be strictly cheaper
+        // (a < 1 ⇒ E[tokens] < γ+1 ⇒ cost/token > TPOT_target).
+        assert_eq!(pick_gamma(t6, t6, 0.95, &[2, 4]), 0);
+        // No compiled verify graphs → plain decode.
+        assert_eq!(pick_gamma(t3, t6, 0.9, &[]), 0);
     }
 
     #[test]

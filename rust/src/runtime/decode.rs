@@ -21,6 +21,13 @@
 //! per-request inputs, per-slot `kv<i>` parameters/outputs so each KV
 //! cache stays an independent device buffer), cutting dispatch calls per
 //! generated token from 1.0 to ~1/B — DESIGN.md §Batching.
+//!
+//! A *single* request can instead amortize dispatches through
+//! self-speculative decoding: [`DecodeSession::advance_verify`] scores γ
+//! draft tokens plus one bonus position against the KV cache in one
+//! `verify_step_g{2,4}` dispatch, and the `runtime::spec` layer turns the
+//! low-bit overlay variant into a free draft model — DESIGN.md
+//! §Speculation.
 
 use std::cell::{Cell, RefCell};
 use std::collections::{BTreeMap, HashMap};
@@ -67,6 +74,52 @@ pub struct StepOut {
     pub use_eff: BTreeMap<String, Vec<f32>>,
 }
 
+/// Host-visible results of one speculative-verification dispatch
+/// ([`DecodeSession::advance_verify`]): γ+1 positions' logits, estimates
+/// and effective selection flags, each with a leading position dim.  The
+/// updated KV cache (all γ+1 positions written) stays on the device in
+/// the [`GenState`]; the caller commits acceptance separately —
+/// `runtime::spec::spec_round` keeps the longest accepted draft prefix,
+/// observes exactly the kept positions on the selector, and advances the
+/// position counter past them (stale KV entries beyond the counter are
+/// masked by the attention and overwritten on re-decode).
+pub struct VerifyOut {
+    /// Positions scored (γ + 1).
+    pub n_pos: usize,
+    pub vocab: usize,
+    n_layers: usize,
+    /// Flattened `[n_pos, vocab]`; `logits_at(i)` scores position
+    /// `pos0 + i + 1`'s token.
+    pub logits: Vec<f32>,
+    /// Per group, flattened `[n_pos, L]`.
+    pub ests: BTreeMap<String, Vec<f32>>,
+    pub use_eff: BTreeMap<String, Vec<f32>>,
+}
+
+impl VerifyOut {
+    pub fn logits_at(&self, i: usize) -> &[f32] {
+        &self.logits[i * self.vocab..(i + 1) * self.vocab]
+    }
+
+    /// The per-position slice as a [`StepOut`] — exactly what a
+    /// sequential [`DecodeSession::advance`] at that position would have
+    /// returned (pinned by the jax-level parity test), so the selector
+    /// can [`SelectorState::observe`] accepted positions one by one.
+    pub fn step_out(&self, i: usize) -> StepOut {
+        let l = self.n_layers;
+        let slice = |m: &BTreeMap<String, Vec<f32>>| {
+            m.iter()
+                .map(|(g, v)| (g.clone(), v[i * l..(i + 1) * l].to_vec()))
+                .collect()
+        };
+        StepOut {
+            logits: self.logits_at(i).to_vec(),
+            ests: slice(&self.ests),
+            use_eff: slice(&self.use_eff),
+        }
+    }
+}
+
 /// Where a generation's KV cache currently lives.
 enum KvResidence {
     /// On the device; fed straight back into the next `execute_b`.
@@ -109,6 +162,18 @@ impl<'s> GenState<'s> {
     fn invalidate_flags(&mut self) {
         self.flag_bufs.clear();
     }
+
+    /// Rewind the position counter to `pos` (≤ current) — the KV
+    /// "rollback" of speculative decoding.  Nothing touches the device:
+    /// KV slots past `pos` keep their (now stale) contents, but the
+    /// decode graphs mask attention to `arange(S) <= pos`, so stale
+    /// entries are never attended and are overwritten in place when
+    /// those positions are re-decoded.  `steps`/selector statistics are
+    /// deliberately NOT rewound (they count real device work).
+    pub fn rewind(&mut self, pos: usize) {
+        debug_assert!(pos <= self.pos, "rewind forward ({} -> {pos})", self.pos);
+        self.pos = pos.min(self.pos);
+    }
 }
 
 /// What a [`DecodeSession::swap_bits`] rebind actually did.
@@ -148,6 +213,11 @@ pub struct DecodeSession {
     /// Empty when the artifacts predate the batched AOT export — every
     /// caller then falls back to per-request [`DecodeSession::advance`].
     batched: Vec<(usize, Arc<Exe>, Vec<String>)>,
+    /// Speculative-verification entries, ascending γ: (γ, exe, arg
+    /// names).  Empty when the artifacts predate the `verify_step_g*`
+    /// AOT export — the speculation path then degrades gracefully to
+    /// plain per-token decode ([`DecodeSession::spec_gammas`]).
+    verifies: Vec<(usize, Arc<Exe>, Vec<String>)>,
     /// Zero KV cache backing the masked padding slots of a partially
     /// filled batch (uploaded lazily, shared by all pad slots of all
     /// batched steps — inputs are not donated, so aliasing one buffer
@@ -263,6 +333,16 @@ impl DecodeSession {
             }
         }
 
+        // Verify entries are optional the same way: absent → speculation
+        // degrades to plain decode; present-but-broken → loud failure.
+        let mut verifies = Vec::new();
+        for g in [2usize, 4] {
+            if let Ok(e) = manifest.entry(&cfg.name, &format!("verify_step_g{g}")) {
+                let exe = rt.load(&e)?;
+                verifies.push((g, exe, e.args.clone()));
+            }
+        }
+
         let mut prefills = Vec::new();
         for p in [64usize, 128, 256] {
             if let Ok(e) = manifest.entry(&cfg.name, &format!("prefill_{p}")) {
@@ -330,6 +410,7 @@ impl DecodeSession {
             stacker,
             decode,
             batched,
+            verifies,
             pad_kv: RefCell::new(None),
             prefills,
             static_bufs,
@@ -711,6 +792,129 @@ impl DecodeSession {
         gen.pos += 1;
         gen.steps += 1;
         Ok(out)
+    }
+
+    /// The runtime this session executes on (counter access for the
+    /// speculation layer).
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.rt
+    }
+
+    /// Draft lengths γ for which this session's artifacts carry a
+    /// `verify_step_g{γ}` graph, ascending.  Empty → no speculation
+    /// (older manifests); the serving core then stays on plain decode.
+    pub fn spec_gammas(&self) -> Vec<usize> {
+        self.verifies.iter().map(|(g, _, _)| *g).collect()
+    }
+
+    /// Score `tokens` (the next committed token followed by γ draft
+    /// tokens) at consecutive positions starting at `gen.pos` in ONE
+    /// device dispatch — the target half of self-speculative decoding
+    /// (DESIGN.md §Speculation).
+    ///
+    /// Requires an exact `verify_step_g{tokens.len()-1}` artifact and a
+    /// device-resident KV cache.  On success the generation's KV buffer
+    /// is replaced by the output leaf (all γ+1 positions written) but
+    /// `pos`/`steps`/selector state are **not** advanced: acceptance is
+    /// the caller's decision (`runtime::spec::spec_round` commits the
+    /// longest accepted prefix and rewinds past the rejected tail via
+    /// [`GenState::rewind`]).  Counts one `spec_verify_dispatches` on
+    /// [`Runtime::transfers`].
+    pub fn advance_verify(&self, gen: &mut GenState<'_>, tokens: &[u32],
+                          mode: EstMode) -> Result<VerifyOut> {
+        let n_pos = tokens.len();
+        if n_pos < 2 {
+            bail!("verify needs at least one draft token (got {n_pos} total)");
+        }
+        let (_, exe, args) = self
+            .verifies
+            .iter()
+            .find(|(g, _, _)| g + 1 == n_pos)
+            .ok_or_else(|| {
+                anyhow!("no verify_step_g{} artifact (have γ ∈ {:?})",
+                        n_pos - 1, self.spec_gammas())
+            })?;
+        if gen.pos + n_pos >= self.cfg.max_seq {
+            bail!("verify of {n_pos} positions at {} exceeds max_seq {}",
+                  gen.pos, self.cfg.max_seq);
+        }
+        if !gen.kv_on_device() {
+            bail!("speculative verify requires device-resident KV \
+                   (tuple-lowered artifacts fall back to plain decode)");
+        }
+        let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let tok_buf = self.rt.upload_i32(&[n_pos], &toks)?;
+        let pos_buf = self.scalar_buffer(gen.pos as i32)?;
+        let half = self.cfg.head_dim() / 2;
+        let mut cos = Vec::with_capacity(n_pos * half);
+        let mut sin = Vec::with_capacity(n_pos * half);
+        for p in gen.pos..gen.pos + n_pos {
+            let (c, s) = self.cfg.rope_tables(p);
+            cos.extend_from_slice(&c);
+            sin.extend_from_slice(&s);
+        }
+        let cos_buf = self.rt.upload_f32(&[n_pos, half], &cos)?;
+        let sin_buf = self.rt.upload_f32(&[n_pos, half], &sin)?;
+        let mode_buf = self.mode_buffer(mode == EstMode::Exact)?;
+        self.refresh_flags(gen)?;
+
+        let mut arg_bufs: Vec<&PjRtBuffer> = Vec::with_capacity(args.len());
+        for name in args {
+            arg_bufs.push(match name.as_str() {
+                "tokens" => &tok_buf,
+                "pos" => &*pos_buf,
+                "cos" => &cos_buf,
+                "sin" => &sin_buf,
+                "kv" => match &gen.kv {
+                    KvResidence::Device(b) => b,
+                    KvResidence::Host(_) => {
+                        unreachable!("validated device-resident above")
+                    }
+                },
+                "mode_exact" => &*mode_buf,
+                other => gen
+                    .flag_bufs
+                    .get(other.strip_prefix("useh_").unwrap_or(other))
+                    .map(|(_, b)| b)
+                    .or_else(|| self.static_bufs.get(other))
+                    .ok_or_else(|| anyhow!("missing verify arg {other}"))?,
+            });
+        }
+        let replica = exe.run_buffers(&arg_bufs).context("verify step")?;
+        if !exe.untupled(&replica) {
+            bail!("verify graph lowered as a tuple — KV residency \
+                   impossible; falling back to plain decode");
+        }
+        let (v, l) = (self.cfg.vocab, self.cfg.n_layers);
+        let li = exe.output_index("logits")?;
+        let logits = buffer_f32(&replica[li])?;
+        self.rt.transfers().count_download();
+        if logits.len() != n_pos * v {
+            bail!("verify logits: {} values for {n_pos} positions, V={v}",
+                  logits.len());
+        }
+        let mut ests = BTreeMap::new();
+        let mut use_eff = BTreeMap::new();
+        for g in GROUPS {
+            let ei = exe.output_index(&format!("est_{g}"))?;
+            let ui = exe.output_index(&format!("useh_{g}"))?;
+            let e = buffer_f32(&replica[ei])?;
+            let u = buffer_f32(&replica[ui])?;
+            if e.len() != n_pos * l || u.len() != n_pos * l {
+                bail!("verify {g} outputs: {}/{} values for {n_pos} \
+                       positions, L={l}", e.len(), u.len());
+            }
+            ests.insert(g.to_string(), e);
+            use_eff.insert(g.to_string(), u);
+        }
+        let ki = exe.output_index("kv")?;
+        for (i, b) in replica.into_iter().enumerate() {
+            if i == ki {
+                gen.kv = KvResidence::Device(b);
+            }
+        }
+        self.rt.transfers().count_spec_verify();
+        Ok(VerifyOut { n_pos, vocab: v, n_layers: l, logits, ests, use_eff })
     }
 
     /// Largest batched-decode bucket this session's artifacts provide

@@ -15,6 +15,7 @@
 //!   GenState tests assert it through these counters.
 
 pub mod decode;
+pub mod spec;
 pub mod stack;
 
 use std::collections::HashMap;
@@ -28,9 +29,10 @@ use crate::model::HloEntry;
 use crate::tensor::Tensor;
 
 /// Running totals of host→device uploads (count + bytes), device→host
-/// literal reads, device-side stack assemblies, and batched decode
-/// dispatches.  Cheap atomics; benches and the GenState residency /
-/// batching tests read deltas around a decode step.
+/// literal reads, device-side stack assemblies, batched decode
+/// dispatches, and speculative-decoding activity.  Cheap atomics;
+/// benches and the GenState residency / batching / speculation tests
+/// read deltas around a decode step.
 #[derive(Default)]
 pub struct TransferStats {
     uploads: AtomicU64,
@@ -39,6 +41,9 @@ pub struct TransferStats {
     assemblies: AtomicU64,
     batched_steps: AtomicU64,
     batch_occupancy: AtomicU64,
+    spec_drafted: AtomicU64,
+    spec_accepted: AtomicU64,
+    spec_verify_dispatches: AtomicU64,
 }
 
 /// A point-in-time copy of [`TransferStats`].
@@ -64,6 +69,21 @@ pub struct TransferSnapshot {
     /// occupancy.  Padded no-op slots of a partially filled bucket are
     /// not counted.
     pub batch_occupancy: u64,
+    /// Draft tokens proposed by speculative rounds
+    /// (`runtime::spec::spec_round`).  Together with
+    /// [`TransferSnapshot::spec_accepted`] this yields the realized
+    /// draft acceptance rate `spec_accepted / spec_drafted` — the
+    /// quantity the dynamic-γ controller's EWMA tracks per request
+    /// (DESIGN.md §Speculation).
+    pub spec_drafted: u64,
+    /// Draft tokens accepted by greedy longest-prefix verification.
+    pub spec_accepted: u64,
+    /// `verify_step_g*` device dispatches
+    /// ([`decode::DecodeSession::advance_verify`]).  Each commits
+    /// between 1 (all drafts rejected) and γ+1 (all accepted + bonus)
+    /// tokens, so `spec_verify_dispatches / tokens` is the spec-path
+    /// analog of dispatch-calls-per-token.
+    pub spec_verify_dispatches: u64,
 }
 
 impl TransferStats {
@@ -87,6 +107,19 @@ impl TransferStats {
         self.batch_occupancy.fetch_add(occupancy, Ordering::Relaxed);
     }
 
+    /// Record one `verify_step_g*` dispatch
+    /// ([`decode::DecodeSession::advance_verify`]).
+    pub fn count_spec_verify(&self) {
+        self.spec_verify_dispatches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one speculative round's drafting outcome: `drafted` tokens
+    /// proposed, `accepted` of them kept by longest-prefix verification.
+    pub fn count_spec_round(&self, drafted: u64, accepted: u64) {
+        self.spec_drafted.fetch_add(drafted, Ordering::Relaxed);
+        self.spec_accepted.fetch_add(accepted, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> TransferSnapshot {
         TransferSnapshot {
             uploads: self.uploads.load(Ordering::Relaxed),
@@ -95,6 +128,11 @@ impl TransferStats {
             assemblies: self.assemblies.load(Ordering::Relaxed),
             batched_steps: self.batched_steps.load(Ordering::Relaxed),
             batch_occupancy: self.batch_occupancy.load(Ordering::Relaxed),
+            spec_drafted: self.spec_drafted.load(Ordering::Relaxed),
+            spec_accepted: self.spec_accepted.load(Ordering::Relaxed),
+            spec_verify_dispatches: self
+                .spec_verify_dispatches
+                .load(Ordering::Relaxed),
         }
     }
 }
@@ -339,6 +377,9 @@ mod tests {
         t.count_assembly();
         t.count_batched_step(4);
         t.count_batched_step(2);
+        t.count_spec_verify();
+        t.count_spec_round(4, 3);
+        t.count_spec_round(2, 0);
         let b = t.snapshot();
         assert_eq!(b.uploads_since(&a), 2);
         assert_eq!(b.upload_bytes_since(&a), 192);
@@ -346,5 +387,8 @@ mod tests {
         assert_eq!(b.assemblies - a.assemblies, 1);
         assert_eq!(b.batched_steps - a.batched_steps, 2);
         assert_eq!(b.batch_occupancy - a.batch_occupancy, 6);
+        assert_eq!(b.spec_verify_dispatches - a.spec_verify_dispatches, 1);
+        assert_eq!(b.spec_drafted - a.spec_drafted, 6);
+        assert_eq!(b.spec_accepted - a.spec_accepted, 3);
     }
 }

@@ -1,0 +1,376 @@
+//! Self-speculative decoding: free low-bit drafts from the multi-scale
+//! store, verified in one batched high-bit dispatch (DESIGN.md
+//! §Speculation).
+//!
+//! The Any-Precision overlay means a low-bit variant of the model is
+//! *already resident* whenever a higher-bit target is served — the
+//! bitplane nested-prefix property (`code_{b+1} = code_b << 1 | bit_b`)
+//! makes the draft model memory-free.  A [`spec_round`]:
+//!
+//!   1. **drafts** γ tokens greedily through the low-bit
+//!      [`DecodeSession`] (γ cheap decode steps on the draft's own
+//!      device-resident KV),
+//!   2. **verifies** them in ONE target-precision dispatch
+//!      ([`DecodeSession::advance_verify`], the `verify_step_g{2,4}`
+//!      graph): γ+1 causal positions scored against the target KV —
+//!      batch-1 decode is memory-bandwidth bound (DESIGN §2), so the
+//!      whole verify costs roughly one token's weight traffic,
+//!   3. **accepts** the longest draft prefix whose tokens match the
+//!      target's own greedy choices ([`longest_accepted_prefix`]) plus
+//!      one *bonus* token from the first disagreeing (or final)
+//!      position — ≥ 1 token of progress per verify dispatch, always,
+//!   4. **rolls back** by position-counter rewind ([`GenState::rewind`]):
+//!      KV slots past the counter are stale but masked by the causal
+//!      attention and overwritten in place when re-decoded — no device
+//!      traffic.
+//!
+//! Because acceptance compares against the target's own argmax at every
+//! position, speculative greedy decode emits **token-for-token the same
+//! sequence** as plain greedy decode — speculation changes latency, never
+//! output (asserted by the spec integration tests).
+//!
+//! The dynamic-γ controller ([`GammaController`]) picks γ ∈ {0, 2, 4}
+//! per request in the DP-LLM spirit: an acceptance-rate EWMA feeds the
+//! costmodel's affine-TPOT speculation model
+//! ([`crate::costmodel::pick_gamma`]), and γ = 0 — plain decode — wins
+//! whenever speculation would not be strictly cheaper.  Degradation
+//! ladder: spec → batched → single (DESIGN.md §Speculation); the
+//! `DPLLM_NO_SPEC` escape hatch and absent `verify_step_g*` manifest
+//! entries both land on plain decode.
+
+use anyhow::{bail, Result};
+
+use crate::costmodel;
+use crate::runtime::decode::{DecodeSession, EstMode, GenState};
+
+/// Hard cap on how many committed-but-not-yet-drafted tokens a round will
+/// replay into the draft model before speculating.  A generation that
+/// mostly advances through batched dispatches (where speculation is
+/// skipped) can fall arbitrarily far behind; past this bound the serving
+/// core drops its speculation state instead of stalling a step on
+/// catch-up work.
+pub const MAX_SPEC_CATCHUP: usize = 32;
+
+/// Acceptance-rate EWMA + the costmodel hook: picks the per-round draft
+/// length γ from the compiled `verify_step_g*` candidates.
+#[derive(Debug, Clone)]
+pub struct GammaController {
+    /// EWMA of the per-draft acceptance probability, seeded optimistic
+    /// so speculation gets a chance to measure itself.
+    pub accept_ewma: f64,
+    pub alpha: f64,
+    /// Predicted/measured per-token latency of the draft configuration
+    /// (the adaptation policy's calibrated TPOT, or the costmodel's
+    /// affine TPOT(b) at paper scale).
+    pub tpot_draft_ms: f64,
+    /// Same for the request's current target configuration (updated on
+    /// mid-stream re-selection).
+    pub tpot_target_ms: f64,
+}
+
+impl GammaController {
+    pub fn new(tpot_draft_ms: f64, tpot_target_ms: f64) -> GammaController {
+        GammaController {
+            // Optimistic start: a draft model that shares every weight
+            // bit with its target tends to agree with it, and an EWMA
+            // seeded too low would park γ at 0 forever (γ = 0 rounds
+            // produce no acceptance observations to recover from).
+            // A few bad rounds pull it below the engagement threshold.
+            accept_ewma: 0.9,
+            alpha: 0.25,
+            tpot_draft_ms,
+            tpot_target_ms,
+        }
+    }
+
+    /// Draft length for the next round: the candidate minimizing expected
+    /// ms/token at the current acceptance estimate, 0 (plain decode)
+    /// unless strictly cheaper ([`costmodel::pick_gamma`]).
+    pub fn pick(&self, candidates: &[usize]) -> usize {
+        costmodel::pick_gamma(self.tpot_draft_ms, self.tpot_target_ms,
+                              self.accept_ewma, candidates)
+    }
+
+    /// Fold one round's outcome (`accepted` of `gamma` drafts kept) into
+    /// the acceptance EWMA.
+    pub fn observe_round(&mut self, accepted: usize, gamma: usize) {
+        if gamma == 0 {
+            return;
+        }
+        let obs = accepted as f64 / gamma as f64;
+        self.accept_ewma = self.alpha * obs + (1.0 - self.alpha) * self.accept_ewma;
+    }
+}
+
+/// Per-request speculation state: the draft half of the pair.  The
+/// *target* half is the request's ordinary [`GenState`] on its target
+/// session — mid-stream re-selection can move it freely; the draft stays
+/// pinned to the adaptation set's lowest-precision session.
+pub struct SpecState<'s> {
+    /// The low-bit draft session (shares the runtime + weight overlay
+    /// with the target; distinct weight stacks, distinct KV).
+    pub draft: &'s DecodeSession,
+    /// The draft model's own device-resident generation state.  Invariant
+    /// between rounds: `draft_gen.pos <= target pos`, with the gap
+    /// closed by catch-up replay at the start of the next round.
+    pub draft_gen: GenState<'s>,
+    pub ctrl: GammaController,
+}
+
+/// Outcome of one [`spec_round`].
+pub struct SpecRound {
+    /// Committed tokens, in stream order: the accepted draft prefix plus
+    /// the bonus token.  Never empty (≥ 1 token of progress).
+    pub tokens: Vec<u32>,
+    /// How many of the γ drafts were accepted (0 ≤ accepted ≤ γ).
+    pub accepted_drafts: usize,
+    pub gamma: usize,
+}
+
+/// Greedy longest-prefix acceptance over a verify dispatch's logits:
+/// draft `i` is kept iff the target's own argmax at position `i` equals
+/// it and every earlier draft was kept; the bonus token is the target's
+/// argmax at the first disagreeing (or final) position.  Returns
+/// `(accepted, bonus)` — the round always commits `accepted + 1 ≥ 1`
+/// tokens, the guaranteed-progress property of speculative decoding.
+pub fn longest_accepted_prefix(logits: &[f32], vocab: usize,
+                               drafts: &[u32]) -> Result<(usize, u32)> {
+    if logits.len() < (drafts.len() + 1) * vocab {
+        bail!("verify logits cover {} positions, need {}",
+              logits.len() / vocab.max(1), drafts.len() + 1);
+    }
+    let mut accepted = 0usize;
+    for (i, &d) in drafts.iter().enumerate() {
+        let pred = DecodeSession::argmax(&logits[i * vocab..(i + 1) * vocab])?;
+        if pred == d {
+            accepted += 1;
+        } else {
+            break;
+        }
+    }
+    let bonus = DecodeSession::argmax(
+        &logits[accepted * vocab..(accepted + 1) * vocab])?;
+    Ok((accepted, bonus))
+}
+
+/// Truncate a committed run at the first EOS token (kept, inclusive).
+/// Returns true when an EOS was found — the generation is finished and
+/// its slot frees at the end of the step; tokens speculated past the EOS
+/// are discarded (their KV entries are stale-but-masked, like any
+/// rejected tail).
+pub fn truncate_at_eos(tokens: &mut Vec<u32>, eos: Option<u32>) -> bool {
+    let Some(e) = eos else { return false };
+    match tokens.iter().position(|&t| t == e) {
+        Some(i) => {
+            tokens.truncate(i + 1);
+            true
+        }
+        None => false,
+    }
+}
+
+/// QoS gate for the spec path: best-effort requests (no deadline) and
+/// loose deadlines ride speculation; a tight deadline keeps token-granular
+/// EDF preemption — a speculative round commits up to γ+1 tokens of ONE
+/// request before the scheduler runs again, which is exactly the latency
+/// slack a tight deadline does not have.
+pub fn spec_eligible(deadline_ms: Option<f64>, loose_deadline_ms: f64) -> bool {
+    match deadline_ms {
+        None => true,
+        Some(d) => d >= loose_deadline_ms,
+    }
+}
+
+/// One speculative round over a (draft, target) pair.
+///
+/// `token` is the next committed token to feed (== the last emitted
+/// token); `catchup` holds any committed tokens the draft has not yet
+/// ingested, oldest first (computed by the caller from the committed
+/// stream — replayed into the draft before drafting so its KV covers
+/// every committed position).  `gamma` must name a compiled
+/// `verify_step_g{γ}` graph of the target session.
+///
+/// On success the target [`GenState`] advanced by `accepted + 1`
+/// positions with its selector having observed exactly the kept
+/// positions — the identical evolution plain sequential decode would
+/// have produced (jax-level parity test + greedy acceptance).  On error
+/// the target is untouched except possibly its (unconditionally valid)
+/// KV write, and the draft is rewound to the round's start; the caller
+/// is expected to drop the [`SpecState`] and continue on plain decode.
+pub fn spec_round(state: &mut SpecState<'_>, target: &DecodeSession,
+                  target_gen: &mut GenState<'_>, token: u32, catchup: &[u32],
+                  gamma: usize, mode: EstMode) -> Result<SpecRound> {
+    if gamma == 0 {
+        bail!("spec_round with γ = 0 — the caller owns the plain path");
+    }
+    let pos0 = target_gen.pos;
+    // 1. Catch-up: replay committed tokens the draft missed (e.g. the
+    //    final draft of a fully-accepted round, or tokens decoded through
+    //    the batched path while speculation was skipped).
+    for &t in catchup {
+        state.draft.advance(&mut state.draft_gen, t, mode)?;
+    }
+    debug_assert_eq!(state.draft_gen.pos, pos0,
+                     "draft out of sync after catch-up");
+    // 2. Draft γ tokens greedily at the low bitwidth.
+    let mut drafts = Vec::with_capacity(gamma);
+    let mut t = token;
+    for _ in 0..gamma {
+        let out = match state.draft.advance(&mut state.draft_gen, t, mode) {
+            Ok(o) => o,
+            Err(e) => {
+                state.draft_gen.rewind(pos0);
+                return Err(e);
+            }
+        };
+        t = match DecodeSession::argmax(&out.logits) {
+            Ok(v) => v,
+            Err(e) => {
+                state.draft_gen.rewind(pos0);
+                return Err(e);
+            }
+        };
+        drafts.push(t);
+    }
+    // 3. Verify all γ+1 positions in one target-precision dispatch.
+    let mut vtokens = Vec::with_capacity(gamma + 1);
+    vtokens.push(token);
+    vtokens.extend_from_slice(&drafts);
+    let vout = match target.advance_verify(target_gen, &vtokens, mode) {
+        Ok(v) => v,
+        Err(e) => {
+            state.draft_gen.rewind(pos0);
+            return Err(e);
+        }
+    };
+    // 4. Greedy longest-prefix acceptance + commit.  The selector
+    //    observes exactly the kept positions (flags and effective-bit
+    //    accounting evolve as plain sequential decode would).
+    let (accepted, bonus) =
+        longest_accepted_prefix(&vout.logits, vout.vocab, &drafts)?;
+    for i in 0..=accepted {
+        let so = vout.step_out(i);
+        target_gen.sel.observe(&so.ests, &so.use_eff);
+    }
+    target_gen.pos = pos0 + accepted + 1;
+    target_gen.steps += accepted + 1;
+    // 5. Draft rollback: rejected positions rewind (stale KV is masked
+    //    and overwritten in place); a fully-accepted round leaves the
+    //    draft one token behind — drafts[γ-1] was never fed to it — and
+    //    the next round's catch-up closes the gap.
+    if accepted < gamma {
+        state.draft_gen.rewind(pos0 + accepted + 1);
+    }
+    state.ctrl.observe_round(accepted, gamma);
+    target
+        .runtime()
+        .transfers()
+        .count_spec_round(gamma as u64, accepted as u64);
+    let mut tokens = drafts;
+    tokens.truncate(accepted);
+    tokens.push(bonus);
+    Ok(SpecRound { tokens, accepted_drafts: accepted, gamma })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_hot(vocab: usize, id: u32) -> Vec<f32> {
+        let mut v = vec![0.0; vocab];
+        v[id as usize] = 1.0;
+        v
+    }
+
+    fn stack_logits(vocab: usize, ids: &[u32]) -> Vec<f32> {
+        ids.iter().flat_map(|&i| one_hot(vocab, i)).collect()
+    }
+
+    #[test]
+    fn acceptance_all_drafts_match() {
+        // Target predictions: [5, 6, 7] for drafts [5, 6] → both accepted,
+        // bonus from the final position.
+        let logits = stack_logits(8, &[5, 6, 7]);
+        let (k, bonus) = longest_accepted_prefix(&logits, 8, &[5, 6]).unwrap();
+        assert_eq!((k, bonus), (2, 7));
+    }
+
+    #[test]
+    fn acceptance_partial_prefix_takes_corrected_bonus() {
+        // Draft [5, 2] but target predicts 6 at position 1 → one draft
+        // kept, bonus is the target's correction (6), and the third
+        // position's logits are never consulted.
+        let logits = stack_logits(8, &[5, 6, 3]);
+        let (k, bonus) = longest_accepted_prefix(&logits, 8, &[5, 2]).unwrap();
+        assert_eq!((k, bonus), (1, 6));
+    }
+
+    #[test]
+    fn acceptance_all_rejected_still_emits_one_token() {
+        // Guaranteed progress: zero accepted drafts → exactly the bonus
+        // token (the target's own next choice) commits.
+        let logits = stack_logits(8, &[4, 1, 1]);
+        let (k, bonus) = longest_accepted_prefix(&logits, 8, &[7, 7]).unwrap();
+        assert_eq!(k, 0);
+        assert_eq!(bonus, 4);
+        // k + 1 tokens commit — never zero.
+        assert_eq!(k + 1, 1);
+    }
+
+    #[test]
+    fn acceptance_rejects_short_logits() {
+        assert!(longest_accepted_prefix(&[0.0; 8], 8, &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn eos_truncates_inclusive_and_frees() {
+        let mut toks = vec![3, 258, 9, 11];
+        assert!(truncate_at_eos(&mut toks, Some(258)));
+        assert_eq!(toks, vec![3, 258]);
+        // No EOS / disabled → untouched.
+        let mut toks = vec![3, 9];
+        assert!(!truncate_at_eos(&mut toks, Some(258)));
+        assert_eq!(toks, vec![3, 9]);
+        assert!(!truncate_at_eos(&mut toks, None));
+    }
+
+    #[test]
+    fn eligibility_gates_on_deadline_slack() {
+        // Best-effort always rides the spec path.
+        assert!(spec_eligible(None, 1000.0));
+        // Loose deadline rides; tight keeps token-granular preemption.
+        assert!(spec_eligible(Some(5000.0), 1000.0));
+        assert!(!spec_eligible(Some(120.0), 1000.0));
+        assert!(spec_eligible(Some(1000.0), 1000.0));
+    }
+
+    #[test]
+    fn controller_ewma_converges_and_gates_gamma() {
+        let mut c = GammaController::new(1.0, 10.0);
+        // High measured acceptance → EWMA climbs → largest γ stays picked.
+        for _ in 0..32 {
+            c.observe_round(4, 4);
+        }
+        assert!(c.accept_ewma > 0.95);
+        assert_eq!(c.pick(&[2, 4]), 4);
+        // Collapse of acceptance → γ falls back to plain decode.
+        for _ in 0..32 {
+            c.observe_round(0, 4);
+        }
+        assert!(c.accept_ewma < 0.05);
+        assert_eq!(c.pick(&[2, 4]), 0);
+        // γ = 0 rounds never perturb the estimate.
+        let before = c.accept_ewma;
+        c.observe_round(0, 0);
+        assert_eq!(c.accept_ewma, before);
+    }
+
+    #[test]
+    fn controller_draft_as_slow_as_target_never_speculates() {
+        let c = GammaController::new(10.0, 10.0);
+        assert_eq!(c.pick(&[2, 4]), 0);
+        // No verify graphs compiled → plain decode.
+        let c = GammaController::new(1.0, 10.0);
+        assert_eq!(c.pick(&[]), 0);
+    }
+}

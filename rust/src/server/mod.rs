@@ -19,7 +19,10 @@
 //!                   -> {"text", "target", "effective_bits", "tpot_ms",
 //!                       "ttft_ms", "retargets", "output_tokens"}
 //!   GET  /health    -> {"status": "ok", "targets": [...]}
-//!   GET  /metrics   -> summary JSON
+//!   GET  /metrics   -> summary JSON + a `counters` object: one
+//!                      serialized snapshot of every runtime counter
+//!                      family (transfers, weight cache, batching,
+//!                      speculation — `coordinator::metrics::counters_json`)
 //!
 //! Hardening: request bodies are capped at [`MAX_BODY_BYTES`]; a POST
 //! without a parseable `Content-Length`, or with one over the cap, is
@@ -38,7 +41,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::qos::{QosBudget, UtilizationSim};
 use crate::coordinator::sched::{Request, RequestQueue, SchedPolicy};
-use crate::coordinator::service::{CoreEvent, ServingCore, ServingEngine};
+use crate::coordinator::service::{CoreConfig, CoreEvent, ServingCore, ServingEngine};
 use crate::util::json::Json;
 
 /// Hard cap on request-body size; larger Content-Lengths are rejected with
@@ -65,12 +68,26 @@ struct Pending {
 pub struct Server {
     engine: ServingEngine,
     util: UtilizationSim,
+    /// Scheduling knobs for the executor's [`ServingCore`]; defaults to
+    /// [`CoreConfig::from_env`], overridable via [`Server::with_core_config`]
+    /// (the `serve` CLI plumbs `--reselect-every`/`--gamma-cap`/`--no-spec`).
+    core_config: CoreConfig,
     stop: Arc<AtomicBool>,
 }
 
 impl Server {
     pub fn new(engine: ServingEngine, util: UtilizationSim) -> Server {
-        Server { engine, util, stop: Arc::new(AtomicBool::new(false)) }
+        Server {
+            engine,
+            util,
+            core_config: CoreConfig::from_env(),
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    pub fn with_core_config(mut self, config: CoreConfig) -> Server {
+        self.core_config = config;
+        self
     }
 
     pub fn stop_handle(&self) -> Arc<AtomicBool> {
@@ -79,7 +96,7 @@ impl Server {
 
     /// Serve until the stop flag flips.
     pub fn serve(self, addr: &str) -> Result<()> {
-        let Server { engine, mut util, stop } = self;
+        let Server { engine, mut util, core_config, stop } = self;
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         listener.set_nonblocking(true)?;
         eprintln!("[server] listening on {addr}");
@@ -113,7 +130,8 @@ impl Server {
         // at token boundaries; best-effort requests FIFO among themselves.
         // Concurrent same-target requests share batched decode dispatches
         // (DESIGN.md §Batching).
-        let mut core = ServingCore::new(&engine, SchedPolicy::Edf);
+        let mut core = ServingCore::new(&engine, SchedPolicy::Edf)
+            .with_config(core_config);
         let mut queue = RequestQueue::new(SchedPolicy::Edf);
         let mut pending: HashMap<u64, Pending> = HashMap::new();
         let mut req_id = 0u64;
@@ -238,7 +256,12 @@ fn ingest(engine: &ServingEngine, core: &ServingCore<'_>,
                 .set("mean_eff_bits", s.mean_eff_bits)
                 .set("p90_eff_bits", s.p90_eff_bits)
                 .set("p99_eff_bits", s.p99_eff_bits)
-                .set("throughput_tok_s", s.throughput_tok_s);
+                .set("throughput_tok_s", s.throughput_tok_s)
+                // One serialized snapshot of every runtime counter
+                // family (transfers, weight cache, batching,
+                // speculation) — the shared serializer behind the
+                // examples' reports too.
+                .set("counters", engine.counters_json());
             ok_json(&j)
         }
         Route::Generate => match parse_generate(id, &work.body) {
