@@ -13,6 +13,10 @@ cargo test -q
 # Rustdoc gate: the public API docs (crate + module + item docs, incl.
 # intra-doc links) must keep compiling warning-free.
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+# Prefill scheduling microbench: the artifact-free chunk-schedule sim
+# always runs (and gates that the bench binary builds + executes); the
+# TTFT/ITL serving comparison engages only when DPLLM_ARTIFACTS is set.
+cargo bench --bench prefill_micro
 # Python L2 gate: the jax-level parity tests (incl. the speculative
 # verify_step_g* vs sequential-decode contract) run whenever a python
 # with jax + pytest is available; a cargo-only environment skips them so

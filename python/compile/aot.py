@@ -23,6 +23,12 @@ Exported per model, into ``artifacts/hlo/<model>/``:
                           §Speculation); async selector flags chain
                           in-graph between positions
   prefill_<P>.hlo.txt     prompt ingestion for buckets P ∈ {64, 128, 256}
+  prefill_chunk_<P>.hlo.txt  chunked prompt ingestion for P ∈ {64, 128}:
+                          takes the existing KV cache plus a position
+                          offset and appends P causal positions (same
+                          KV-leaf protocol as decode_step), so a prompt
+                          of ANY length ingests as a chain of bounded,
+                          schedulable dispatches (DESIGN §Prefill)
   anyprec_gemv_<b>.hlo.txt   standalone L1 bitplane-GEMV kernel (b ∈ 3..6)
   jl_estimate.hlo.txt     standalone L1 JL-projection estimator kernel
 
@@ -46,9 +52,10 @@ from .kernels.anyprec_gemv import anyprec_gemv
 from .kernels.estimator import K_PROJ, jl_estimate
 from .model import (ASYNC_GROUPS, GROUPS, ModelConfig, PRESETS,
                     decode_step_dual, decode_step_dual_batched, kv_shape,
-                    prefill, verify_step_dual)
+                    prefill, prefill_chunk, verify_step_dual)
 
 PREFILL_BUCKETS = (64, 128, 256)
+PREFILL_CHUNK_BUCKETS = (64, 128)
 BATCH_BUCKETS = (2, 4, 8)
 SPEC_GAMMAS = (2, 4)
 
@@ -299,6 +306,43 @@ def make_prefill_fn(cfg: ModelConfig, P: int):
     return f
 
 
+def prefill_chunk_arg_specs(cfg: ModelConfig, P: int) -> list[tuple[str, object]]:
+    """(name, spec) per positional argument of the P-token prefill chunk.
+
+    The ``prefill_<P>`` specs plus the decode-step KV protocol: ``pos``
+    (absolute position of ``tokens[0]``) and ``kv`` (the caller's cache,
+    an input AND an output leaf) — so the Rust runtime feeds a
+    device-resident buffer straight back across chunks, exactly as
+    ``decode_step``'s kv leaf.
+    """
+    d, v, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    hd2 = cfg.head_dim // 2
+    args = [
+        ("tokens", i32(P)), ("pos", i32()), ("n_valid", i32()),
+        ("cos", f32(P, hd2)), ("sin", f32(P, hd2)),
+        ("kv", f32(*kv_shape(cfg))),
+        ("tok_emb", f32(v, d)), ("out_head", f32(v, d)),
+        ("final_norm", f32(d)), ("ln1", f32(L, d)), ("ln2", f32(L, d)),
+    ]
+    for g in GROUPS:
+        o, i = cfg.group_shape(g)
+        args.append((f"w_{g}", f32(L, o, i)))
+    return args
+
+
+def make_prefill_chunk_fn(cfg: ModelConfig, P: int):
+    names = [n for n, _ in prefill_chunk_arg_specs(cfg, P)]
+
+    def f(*args):
+        a = dict(zip(names, args))
+        nl = {k: a[k] for k in ("tok_emb", "out_head", "final_norm", "ln1", "ln2")}
+        lin = {g: a[f"w_{g}"] for g in GROUPS}
+        return prefill_chunk(nl, lin, cfg, a["tokens"], a["pos"], a["n_valid"],
+                             a["cos"], a["sin"], a["kv"])
+
+    return f
+
+
 # ---------------------------------------------------------------------------
 # Standalone kernel entry points (L1 microbench + faithful-memory path).
 # ---------------------------------------------------------------------------
@@ -478,6 +522,21 @@ def export_model(name: str) -> dict:
             "outputs": ["logits_last", "kv"],
         }
         print(f"[aot:{name}] prefill_{P}", flush=True)
+
+    # prefill chunks (incremental prompt ingestion against an existing KV)
+    for P in PREFILL_CHUNK_BUCKETS:
+        specs = prefill_chunk_arg_specs(cfg, P)
+        lowered = jax.jit(make_prefill_chunk_fn(cfg, P)).lower(
+            *[s for _, s in specs])
+        path = io.art(*outdir, f"prefill_chunk_{P}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(to_hlo_text(lowered))
+        entry["entries"][f"prefill_chunk_{P}"] = {
+            "path": os.path.relpath(path, io.ART),
+            "args": [n for n, _ in specs],
+            "outputs": ["logits_last", "kv"],
+        }
+        print(f"[aot:{name}] prefill_chunk_{P}", flush=True)
 
     # standalone kernels
     for bits in (3, 4, 5, 6):

@@ -283,6 +283,82 @@ def prefill(nl: dict, lin: dict, cfg: ModelConfig, tokens: jnp.ndarray,
     return last, kv
 
 
+def prefill_chunk(nl: dict, lin: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                  pos0: jnp.ndarray, n_valid: jnp.ndarray, cos: jnp.ndarray,
+                  sin: jnp.ndarray, kv: jnp.ndarray):
+    """Chunked prompt ingestion: append P positions to an EXISTING KV cache.
+
+    Unlike ``prefill`` (which builds a KV cache from scratch and caps the
+    prompt at its bucket), a chunk takes the caller's per-layer KV buffers
+    plus a position offset and writes P new causal positions — the same
+    KV-leaf protocol as ``decode_step_dual``, so the Rust side chains
+    chunks against one device-resident cache and prompts of any length
+    (up to max_seq) ingest as a sequence of bounded dispatches.
+
+    tokens [P] int32 (padded), pos0 scalar — absolute position of
+    ``tokens[0]`` (== tokens already in ``kv`` from earlier chunks),
+    n_valid scalar — real tokens in THIS chunk.  cos/sin [P, head_dim/2]
+    are the RoPE tables for absolute positions pos0..pos0+P (inputs for
+    the same xla_extension-0.5.1 reason as everywhere else).
+    kv [L, 2, H, Smax, hd].
+
+    Query i (absolute pos0+i) attends keys at absolute positions
+    ``s <= pos0 + i``: earlier chunks' entries already in ``kv`` plus the
+    causal prefix of this chunk.  Padded tail tokens (i >= n_valid) write
+    k/v at positions >= pos0 + n_valid; those slots are stale-but-masked
+    under the decode graphs' ``arange(S) <= pos`` rule and are overwritten
+    in place by the next chunk or decode step — the identical protocol as
+    speculative-decoding rollback (DESIGN.md §Speculation), so a chain of
+    full chunks reproduces ``prefill`` bit-for-bit on every valid
+    position (pinned by test_prefill_chunk_chain_matches_full_prefill).
+
+    Returns (logits_last [V], kv_new) — logits_last scores the token
+    after position ``pos0 + n_valid - 1`` (only meaningful on the final
+    chunk).  Runs at the caller-chosen fixed weights; the Rust side
+    passes the max-precision prefill stacks, same as ``prefill``.
+    """
+    P = tokens.shape[0]
+    H, hd, S = cfg.n_heads, cfg.head_dim, cfg.max_seq
+    x = nl["tok_emb"][tokens]                 # [P, D]
+    cos_b = cos[:, None, :]
+    sin_b = sin[:, None, :]
+    local = jnp.arange(P)
+    # Key position s is attended by chunk-local query i iff s <= pos0 + i.
+    mask = jnp.arange(S)[None, :] <= (pos0 + local)[:, None]   # [P, S]
+
+    def block(carry, layer):
+        (x,) = carry
+        ln1, ln2, kv_l, wq, wk, wv, wo, wg, wu, wd = layer
+        h = rmsnorm(x, ln1)
+        q = (h @ wq.T).reshape(P, H, hd)
+        k = (h @ wk.T).reshape(P, H, hd)
+        v = (h @ wv.T).reshape(P, H, hd)
+        q = apply_rope(q, cos_b, sin_b)
+        k = apply_rope(k, cos_b, sin_b)
+        kv_l = jax.lax.dynamic_update_slice(
+            kv_l,
+            jnp.stack([jnp.transpose(k, (1, 0, 2)),
+                       jnp.transpose(v, (1, 0, 2))]),   # [2, H, P, hd]
+            (0, 0, pos0, 0))
+        keys, vals = kv_l[0], kv_l[1]          # [H, Smax, hd]
+        att = jnp.einsum("phd,hsd->hps", q, keys) / np.sqrt(hd)
+        att = jnp.where(mask[None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("hps,hsd->phd", att, vals).reshape(P, H * hd)
+        x = x + o @ wo.T
+        h2 = rmsnorm(x, ln2)
+        x = x + (jax.nn.silu(h2 @ wg.T) * (h2 @ wu.T)) @ wd.T
+        return (x,), kv_l
+
+    layers = (nl["ln1"], nl["ln2"], kv, lin["wq"], lin["wk"], lin["wv"],
+              lin["wo"], lin["wg"], lin["wu"], lin["wd"])
+    (x,), kv_new = jax.lax.scan(block, (x,), layers)
+    x = rmsnorm(x, nl["final_norm"])
+    logits = x @ nl["out_head"].T              # [P, V]
+    last = logits[jnp.maximum(n_valid - 1, 0)]
+    return last, kv_new
+
+
 def _estimate(x, G, lin_a, lin_b, use_lin):
     """Approximate relative error for one linear: ``a‖x‖+b`` or ``‖Gx‖``."""
     xn = jnp.linalg.norm(x)

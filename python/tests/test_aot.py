@@ -14,11 +14,14 @@ from jax._src.lib import xla_client as xc
 from compile.aot import (batched_decode_arg_specs, batched_decode_output_names,
                          decode_arg_specs, decode_output_names, f32,
                          make_batched_decode_fn, make_decode_fn,
-                         make_prefill_fn, make_verify_fn, prefill_arg_specs,
-                         to_hlo_text, verify_arg_specs, verify_output_names)
+                         make_prefill_chunk_fn, make_prefill_fn,
+                         make_verify_fn, prefill_arg_specs,
+                         prefill_chunk_arg_specs, to_hlo_text,
+                         verify_arg_specs, verify_output_names)
 from compile.kernels.estimator import K_PROJ
-from compile.model import (ASYNC_GROUPS, GROUPS, ModelConfig, extract_linears,
-                           init_params, kv_shape, nonlinear_params)
+from compile.model import (ASYNC_GROUPS, GROUPS, ModelConfig, decode_step_dual,
+                           extract_linears, init_params, kv_shape,
+                           nonlinear_params, prefill, prefill_chunk)
 
 CFG = ModelConfig("aot-test", vocab=32, d_model=16, n_layers=2, n_heads=2,
                   d_ff=24, max_seq=16)
@@ -101,6 +104,148 @@ def test_arg_spec_names_unique():
     names = [n for n, _ in decode_arg_specs(CFG)]
     assert len(names) == len(set(names))
     assert names[0] == "token" and names[-1] == "mode_exact"
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (incremental prompt ingestion against an existing KV).
+# ---------------------------------------------------------------------------
+
+
+def _rope_tables(p0, P):
+    hd = CFG.head_dim
+    inv = 1.0 / (10000.0 ** (np.arange(0, hd, 2) / hd))
+    ang = np.arange(p0, p0 + P)[:, None] * inv[None, :]
+    return np.cos(ang).astype(np.float32), np.sin(ang).astype(np.float32)
+
+
+def test_prefill_chunk_arg_spec_names_unique():
+    for P in (4, 8):
+        names = [n for n, _ in prefill_chunk_arg_specs(CFG, P)]
+        assert len(names) == len(set(names))
+        assert names[:3] == ["tokens", "pos", "n_valid"]
+        assert "kv" in names, "chunk must take the existing KV as an input"
+
+
+def test_prefill_chunk_chain_matches_full_prefill():
+    """THE chunked-prefill contract: a chain of full chunks against one
+    carried KV cache must reproduce a single bucketed ``prefill`` —
+    final-position logits AND the complete KV cache — so the Rust side
+    can ingest prompts longer than any bucket without changing numerics."""
+    P_full, C = 8, 4
+    params = init_params(CFG, seed=0)
+    nl = nonlinear_params(params)
+    lin = extract_linears(params)
+    rng = np.random.default_rng(2)
+    tokens = rng.integers(0, CFG.vocab, size=P_full).astype(np.int32)
+    cos_f, sin_f = _rope_tables(0, P_full)
+    logits_full, kv_full = jax.jit(
+        lambda *a: prefill(nl, lin, CFG, *a))(
+        jnp.asarray(tokens), jnp.int32(P_full),
+        jnp.asarray(cos_f), jnp.asarray(sin_f))
+
+    kv = jnp.zeros(kv_shape(CFG), jnp.float32)
+    logits_last = None
+    for c0 in range(0, P_full, C):
+        cos_c, sin_c = _rope_tables(c0, C)
+        logits_last, kv = jax.jit(
+            lambda *a: prefill_chunk(nl, lin, CFG, *a))(
+            jnp.asarray(tokens[c0:c0 + C]), jnp.int32(c0), jnp.int32(C),
+            jnp.asarray(cos_c), jnp.asarray(sin_c), kv)
+    np.testing.assert_allclose(np.asarray(logits_last),
+                               np.asarray(logits_full),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(kv), np.asarray(kv_full),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_prefill_chunk_partial_tail_matches_full_prefill():
+    """A partially filled final chunk (n_valid < P): logits and every
+    VALID KV position must match the full prefill; pad-written slots
+    beyond n_valid are stale-but-masked by construction (the decode
+    graphs' ``arange(S) <= pos`` rule) and are not compared."""
+    n_total, C = 7, 4
+    params = init_params(CFG, seed=1)
+    nl = nonlinear_params(params)
+    lin = extract_linears(params)
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, CFG.vocab, size=8).astype(np.int32)
+    toks[n_total:] = 0  # pad, matching the Rust caller's zero padding
+    cos_f, sin_f = _rope_tables(0, 8)
+    logits_full, kv_full = prefill(nl, lin, CFG, jnp.asarray(toks),
+                                   jnp.int32(n_total), jnp.asarray(cos_f),
+                                   jnp.asarray(sin_f))
+
+    kv = jnp.zeros(kv_shape(CFG), jnp.float32)
+    # Chunk 1: 4 valid of 4; chunk 2: 3 valid of 4.
+    for c0, nv in ((0, 4), (4, 3)):
+        cos_c, sin_c = _rope_tables(c0, C)
+        logits_last, kv = prefill_chunk(
+            nl, lin, CFG, jnp.asarray(toks[c0:c0 + C]), jnp.int32(c0),
+            jnp.int32(nv), jnp.asarray(cos_c), jnp.asarray(sin_c), kv)
+    np.testing.assert_allclose(np.asarray(logits_last),
+                               np.asarray(logits_full),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(kv)[:, :, :, :n_total],
+                               np.asarray(kv_full)[:, :, :, :n_total],
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_prefill_chunk_then_decode_matches_full_prefill_then_decode():
+    """Downstream contract: a decode step on a chunk-assembled KV must
+    equal the same step on the full-prefill KV — logits and the KV leaf —
+    i.e. chunked ingestion is invisible to the decode path."""
+    P_full, C = 8, 4
+    params = init_params(CFG, seed=0)
+    nl = nonlinear_params(params)
+    lin = extract_linears(params)
+    rng = np.random.default_rng(5)
+    tokens = rng.integers(0, CFG.vocab, size=P_full).astype(np.int32)
+    cos_f, sin_f = _rope_tables(0, P_full)
+    _, kv_full = prefill(nl, lin, CFG, jnp.asarray(tokens),
+                         jnp.int32(P_full), jnp.asarray(cos_f),
+                         jnp.asarray(sin_f))
+    kv_chunk = jnp.zeros(kv_shape(CFG), jnp.float32)
+    for c0 in range(0, P_full, C):
+        cos_c, sin_c = _rope_tables(c0, C)
+        _, kv_chunk = prefill_chunk(
+            nl, lin, CFG, jnp.asarray(tokens[c0:c0 + C]), jnp.int32(c0),
+            jnp.int32(C), jnp.asarray(cos_c), jnp.asarray(sin_c), kv_chunk)
+
+    wl = {g: jnp.asarray(lin[g]) for g in GROUPS}
+    est = {}
+    L = CFG.n_layers
+    for g in GROUPS:
+        _, i = CFG.group_shape(g)
+        est[f"G_{g}"] = jnp.zeros((L, K_PROJ, i), jnp.float32)
+        est[f"lina_{g}"] = jnp.zeros(L, jnp.float32)
+        est[f"linb_{g}"] = jnp.zeros(L, jnp.float32)
+        est[f"uselin_{g}"] = jnp.ones(L, jnp.float32)
+        est[f"thr_{g}"] = jnp.full(L, 1e30, jnp.float32)
+    use_async = {g: jnp.zeros(L, jnp.float32) for g in ASYNC_GROUPS}
+    cos_d, sin_d = _rope_tables(P_full, 1)
+    step = lambda kv: decode_step_dual(
+        nl, wl, wl, est, CFG, jnp.int32(3), jnp.int32(P_full),
+        jnp.asarray(cos_d[0]), jnp.asarray(sin_d[0]), kv, use_async,
+        jnp.float32(0.0))
+    lo_full, kv_a, _, _ = step(kv_full)
+    lo_chunk, kv_b, _, _ = step(kv_chunk)
+    np.testing.assert_allclose(np.asarray(lo_chunk), np.asarray(lo_full),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(kv_b), np.asarray(kv_a),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_prefill_chunk_lowering_parses_back():
+    P = 4
+    specs = prefill_chunk_arg_specs(CFG, P)
+    lowered = jax.jit(make_prefill_chunk_fn(CFG, P)).lower(
+        *[s for _, s in specs])
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert text.count("parameter(") >= len(specs)
+    mod = xc._xla.hlo_module_from_text(text)
+    assert mod is not None
+    assert len(mod.as_serialized_hlo_module_proto()) > 1000
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,189 @@
+//! Chunked-prefill scheduling microbench (DESIGN.md §Prefill).
+//!
+//! Part 1 (artifact-free): a deterministic chunk-schedule simulation of
+//! per-step decode stall vs. the old synchronous admission-time prefill,
+//! at prompt lengths {64, 512, 2048} and chunk sizes {64, 128}.  The
+//! cost model is deliberately simple: one decode round costs 1
+//! token-time unit for the whole batched active set, and prefill
+//! processes `Q` prompt tokens per token-time unit (prefill is
+//! batch-parallel over positions, so Q ≫ 1; the exact value only scales
+//! both columns).  Synchronous prefill stalls EVERY active decode for
+//! `L/Q` units at admission; chunked prefill bounds the per-round stall
+//! at `C/Q` and pays `ceil(L/C)` interleaved rounds of TTFT instead —
+//! exactly the bounded-stall / TTFT trade the serving core schedules.
+//!
+//! Part 2 (artifact-gated): serves a >256-token prompt through a real
+//! [`ServingCore`] while a short request decodes, and reports the decode
+//! request's maximum inter-token latency, the long request's
+//! queue/prefill/TTFT split, the `prefill_chunks`/`prefill_stall_ms`
+//! counters, and the synchronous-ingestion baseline (one timed
+//! `begin_prompt` of the same prompt — the stall the pre-chunking
+//! admission would have imposed on every active decode).
+//!
+//! Results land in `results/BENCH_prefill.json`; the interleave bound
+//! itself is enforced by the `prefill_interleaves_*` integration test.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dp_llm::bench_support as bs;
+use dp_llm::coordinator::qos::QosBudget;
+use dp_llm::coordinator::sched::{Request, SchedPolicy};
+use dp_llm::coordinator::service::{CoreConfig, CoreEvent, ServingCore,
+                                   ServingEngine};
+use dp_llm::runtime::Runtime;
+use dp_llm::tokenizer::Tokenizer;
+use dp_llm::util::json::Json;
+
+/// Prompt tokens processed per decode-token-time unit (prefill is
+/// batch-parallel over positions; the value scales both schedules).
+const Q: f64 = 16.0;
+const PROMPTS: [usize; 3] = [64, 512, 2048];
+const CHUNKS: [usize; 2] = [64, 128];
+
+fn long_prompt(tok: &Tokenizer, min_tokens: usize) -> String {
+    let mut s = String::new();
+    let mut i = 0usize;
+    while tok.encode(&s).len() < min_tokens {
+        s.push_str(&format!("item {} of the ledger; ", i * 37 % 911));
+        i += 1;
+    }
+    s
+}
+
+fn main() {
+    let mut rows = Vec::new();
+    let mut sim_rows = Vec::new();
+
+    // ---- Part 1: chunk-schedule simulation --------------------------------
+    for &l in &PROMPTS {
+        let sync_stall = l as f64 / Q;
+        for &c in &CHUNKS {
+            let rounds = (l + c - 1) / c;
+            let chunk_stall = c.min(l) as f64 / Q;
+            // Chunked TTFT: each round pays one interleaved decode round
+            // (1 unit) plus the chunk dispatch.
+            let ttft_chunked = rounds as f64 * (1.0 + chunk_stall);
+            println!(
+                "L={l:<5} C={c:<4}: sync stall {sync_stall:7.1} u | chunked \
+                 per-round stall {chunk_stall:5.1} u over {rounds:>2} rounds \
+                 (ttft {ttft_chunked:7.1} u vs sync {sync_stall:7.1} u)"
+            );
+            let mut o = Json::obj();
+            o.set("prompt_tokens", l)
+                .set("chunk", c)
+                .set("rounds", rounds)
+                .set("sync_stall_units", sync_stall)
+                .set("chunked_per_round_stall_units", chunk_stall)
+                .set("stall_reduction", sync_stall / chunk_stall.max(1e-9))
+                .set("ttft_chunked_units", ttft_chunked)
+                .set("ttft_sync_units", sync_stall);
+            sim_rows.push(o);
+            if c == 128 {
+                rows.push(vec![
+                    format!("sim L={l}: per-step stall sync → chunked"),
+                    format!("{sync_stall:.1} u → {chunk_stall:.1} u"),
+                ]);
+            }
+        }
+    }
+
+    // ---- Part 2: real serving core, decode ITL under a long prefill -------
+    let mut serving = Json::obj();
+    if bs::require_artifacts("prefill_micro") {
+        let rt = Arc::new(Runtime::new().unwrap());
+        match ServingEngine::load(&rt, "dpl-tiny", 5, &["4.00"]) {
+            Ok(engine) => {
+                let session = engine.session_for_target(4.0);
+                if session.prefill_chunk_buckets().is_empty() {
+                    println!("[prefill_micro] artifacts predate prefill_chunk \
+                              entries; serving part skipped");
+                } else {
+                    // Synchronous-ingestion baseline: the stall one
+                    // admission-time prefill of this prompt would impose.
+                    let prompt = long_prompt(&engine.tokenizer, 280);
+                    let ids = engine.tokenizer.encode(&prompt);
+                    let t0 = Instant::now();
+                    let _ = session.begin_prompt(&ids).unwrap();
+                    let sync_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+                    let config = CoreConfig { spec: false, ..CoreConfig::default() };
+                    let mut core = ServingCore::new(&engine, SchedPolicy::Fifo)
+                        .with_config(config);
+                    core.admit_pinned(
+                        Request::new(1, "The town of", 32,
+                                     QosBudget::best_effort()), 4.0)
+                        .unwrap();
+                    // Step until the short request decodes, then admit the
+                    // long prompt mid-flight.
+                    let mut started = false;
+                    while !started {
+                        for ev in core.step().unwrap() {
+                            if matches!(ev, CoreEvent::Token { id: 1, .. }) {
+                                started = true;
+                            }
+                        }
+                    }
+                    core.admit_pinned(
+                        Request::new(2, prompt, 4, QosBudget::best_effort()),
+                        4.0)
+                        .unwrap();
+                    let mut last_a: Option<Instant> = None;
+                    let mut max_itl_ms = 0f64;
+                    core.drain(&mut |ev| {
+                        if let CoreEvent::Token { id: 1, .. } = ev {
+                            let now = Instant::now();
+                            if let Some(prev) = last_a {
+                                let gap = (now - prev).as_secs_f64() * 1e3;
+                                max_itl_ms = max_itl_ms.max(gap);
+                            }
+                            last_a = Some(now);
+                        }
+                    })
+                    .unwrap();
+                    let rec = engine
+                        .metrics
+                        .records()
+                        .into_iter()
+                        .find(|r| r.id == 2)
+                        .expect("long request recorded");
+                    println!(
+                        "[prefill_micro] long prompt ({} tok): {} chunks, \
+                         prefill {:.1} ms, ttft {:.1} ms | decode max ITL \
+                         {max_itl_ms:.1} ms vs sync stall {sync_ms:.1} ms",
+                        ids.len(), core.prefill_chunks(), rec.prefill_ms,
+                        rec.ttft_ms
+                    );
+                    serving
+                        .set("prompt_tokens", ids.len())
+                        .set("prefill_chunks", core.prefill_chunks() as i64)
+                        .set("prefill_stall_ms", core.prefill_stall_ms())
+                        .set("long_prefill_ms", rec.prefill_ms)
+                        .set("long_queue_ms", rec.queue_ms)
+                        .set("long_ttft_ms", rec.ttft_ms)
+                        .set("decode_max_itl_ms", max_itl_ms)
+                        .set("sync_ingest_ms", sync_ms);
+                    rows.push(vec![
+                        "serving: decode max ITL | sync ingest".into(),
+                        format!("{max_itl_ms:.1} ms | {sync_ms:.1} ms"),
+                    ]);
+                }
+            }
+            Err(e) => println!("[prefill_micro] engine load failed ({e:#}); \
+                                serving part skipped"),
+        }
+    }
+
+    let mut j = Json::obj();
+    j.set("bench", "prefill");
+    j.set("prefill_tokens_per_unit", Q);
+    j.set("sim", Json::Arr(sim_rows));
+    j.set("serving", serving);
+    let _ = std::fs::create_dir_all("results");
+    let _ = std::fs::write("results/BENCH_prefill.json", j.dump());
+    println!("wrote results/BENCH_prefill.json");
+
+    bs::emit("prefill_micro",
+             "Chunked prefill scheduling (stall sim + serving ITL)",
+             &["case", "value"], &rows);
+}

@@ -166,8 +166,9 @@ fn eval_task(args: &Args) -> Result<()> {
                                args.usize_or("samples", tasks::task_eval_limit()),
                                EstMode::Approx)?;
     println!(
-        "{} {} {}: {:.1}% ({} samples, eff bits {:.3})",
-        model, task, method.label(), res.accuracy, res.n, res.effective_bits
+        "{} {} {}: {:.1}% ({} samples, {} skipped, eff bits {:.3})",
+        model, task, method.label(), res.accuracy, res.n, res.skipped,
+        res.effective_bits
     );
     Ok(())
 }

@@ -37,6 +37,7 @@ pub fn counters_json(ts: &TransferSnapshot, ws: &MatSnapshot) -> Json {
             "spec_acceptance_rate",
             ts.spec_accepted as f64 / ts.spec_drafted.max(1) as f64,
         )
+        .set("prefill_chunks", ts.prefill_chunks as i64)
         .set("weight_cache_hits", ws.hits as i64)
         .set("weight_cache_misses", ws.misses as i64)
         .set("weight_cache_evictions", ws.evictions as i64)
@@ -50,8 +51,8 @@ pub fn counters_report(ts: &TransferSnapshot, ws: &MatSnapshot) -> String {
     format!(
         "counters: {} uploads ({:.1} MB) / {} downloads / {} assemblies | \
          batching {} dispatches, occupancy {:.2} | speculation {} verify \
-         dispatches, {}/{} drafts accepted ({:.0}%) | weight cache {} hits \
-         / {} misses / {:.1} MB dequantized",
+         dispatches, {}/{} drafts accepted ({:.0}%) | {} prefill chunks | \
+         weight cache {} hits / {} misses / {:.1} MB dequantized",
         ts.uploads,
         ts.upload_bytes as f64 / 1e6,
         ts.downloads,
@@ -62,6 +63,7 @@ pub fn counters_report(ts: &TransferSnapshot, ws: &MatSnapshot) -> String {
         ts.spec_accepted,
         ts.spec_drafted,
         100.0 * ts.spec_accepted as f64 / ts.spec_drafted.max(1) as f64,
+        ts.prefill_chunks,
         ws.hits,
         ws.misses,
         ws.bytes_dequantized as f64 / 1e6,
@@ -75,9 +77,19 @@ pub struct RequestRecord {
     pub effective_bits: f64,
     pub prompt_tokens: usize,
     pub output_tokens: usize,
+    /// Arrival → admission (slot allocation; no prefill runs inside it).
     pub queue_ms: f64,
+    /// Wall time of the request's prompt-ingestion dispatches, summed
+    /// across the scheduling rounds they were spread over — NOT a
+    /// synchronous admission-time stamp (DESIGN.md §Prefill).
     pub prefill_ms: f64,
     pub decode_ms: f64,
+    /// Arrival → first streamed token.  Under chunked prefill this is
+    /// queue wait + the *scheduled* prefill span (chunk dispatches plus
+    /// the decode rounds interleaved between them), so
+    /// `ttft_ms >= queue_ms + prefill_ms` — the true queue/prefill/TTFT
+    /// split the admission-time stamp used to conflate.
+    pub ttft_ms: f64,
 }
 
 impl RequestRecord {
@@ -102,6 +114,9 @@ pub struct Summary {
     pub p50_total_ms: f64,
     pub p90_total_ms: f64,
     pub p99_total_ms: f64,
+    /// Arrival → first streamed token (scheduled prefill inside it).
+    pub mean_ttft_ms: f64,
+    pub p90_ttft_ms: f64,
     pub mean_eff_bits: f64,
     pub p90_eff_bits: f64,
     pub p99_eff_bits: f64,
@@ -126,6 +141,7 @@ impl MetricsRegistry {
         let rs = self.records.lock().unwrap();
         let tpot: Vec<f64> = rs.iter().map(|r| r.tpot_ms()).collect();
         let total: Vec<f64> = rs.iter().map(|r| r.total_ms()).collect();
+        let ttft: Vec<f64> = rs.iter().map(|r| r.ttft_ms).collect();
         let bits: Vec<f64> = rs.iter().map(|r| r.effective_bits).collect();
         let out_tokens: usize = rs.iter().map(|r| r.output_tokens).sum();
         let busy_s: f64 = rs.iter().map(|r| (r.prefill_ms + r.decode_ms) / 1e3).sum();
@@ -135,6 +151,8 @@ impl MetricsRegistry {
             p50_total_ms: percentile(&total, 50.0),
             p90_total_ms: percentile(&total, 90.0),
             p99_total_ms: percentile(&total, 99.0),
+            mean_ttft_ms: mean(&ttft),
+            p90_ttft_ms: percentile(&ttft, 90.0),
             mean_eff_bits: mean(&bits),
             p90_eff_bits: percentile(&bits, 90.0),
             p99_eff_bits: percentile(&bits, 99.0),
@@ -148,9 +166,11 @@ impl Summary {
     pub fn report(&self) -> String {
         format!(
             "requests={} tokens={} tpot={:.2}ms p50/p90/p99 latency={:.0}/{:.0}/{:.0}ms \
+             ttft mean/p90={:.0}/{:.0}ms \
              eff-bits mean/p90/p99={:.3}/{:.3}/{:.3} throughput={:.1} tok/s",
             self.n, self.total_output_tokens, self.mean_tpot_ms,
             self.p50_total_ms, self.p90_total_ms, self.p99_total_ms,
+            self.mean_ttft_ms, self.p90_ttft_ms,
             self.mean_eff_bits, self.p90_eff_bits, self.p99_eff_bits,
             self.throughput_tok_s,
         )
@@ -166,6 +186,9 @@ mod tests {
             id, target_precision: 4.0, effective_bits: bits,
             prompt_tokens: 8, output_tokens: out,
             queue_ms: 1.0, prefill_ms: 2.0, decode_ms,
+            // Scheduled-prefill invariant: ttft >= queue + prefill (the
+            // spread includes interleaved decode rounds).
+            ttft_ms: 5.0,
         }
     }
 
@@ -178,8 +201,12 @@ mod tests {
         assert_eq!(s.n, 2);
         assert!((s.mean_tpot_ms - 15.0).abs() < 1e-9);
         assert!((s.mean_eff_bits - 4.1).abs() < 1e-9);
+        assert!((s.mean_ttft_ms - 5.0).abs() < 1e-9);
+        assert!(s.p90_ttft_ms >= s.mean_ttft_ms - 1e-9);
         assert_eq!(s.total_output_tokens, 20);
         assert!(s.throughput_tok_s > 0.0);
+        // The TTFT split is part of the report line.
+        assert!(s.report().contains("ttft mean/p90=5/5ms"), "{}", s.report());
     }
 
     #[test]
@@ -188,6 +215,7 @@ mod tests {
             uploads: 10, upload_bytes: 4096, downloads: 7, assemblies: 2,
             batched_steps: 4, batch_occupancy: 10,
             spec_drafted: 8, spec_accepted: 6, spec_verify_dispatches: 2,
+            prefill_chunks: 3,
         };
         let ws = MatSnapshot {
             hits: 5, misses: 3, evictions: 1, bytes_dequantized: 1 << 20,
@@ -198,16 +226,19 @@ mod tests {
         assert!((j.f64_of("mean_batch_occupancy").unwrap() - 2.5).abs() < 1e-12);
         assert!((j.f64_of("spec_acceptance_rate").unwrap() - 0.75).abs() < 1e-12);
         assert_eq!(j.f64_of("spec_verify_dispatches").unwrap(), 2.0);
+        assert_eq!(j.f64_of("prefill_chunks").unwrap(), 3.0);
         assert_eq!(j.f64_of("weight_cache_hits").unwrap(), 5.0);
         // The report string carries the same families.
         let r = counters_report(&ts, &ws);
         assert!(r.contains("2 verify dispatches"));
         assert!(r.contains("6/8 drafts accepted (75%)"));
+        assert!(r.contains("3 prefill chunks"));
         // Zero denominators must not divide by zero.
         let zero = TransferSnapshot {
             uploads: 0, upload_bytes: 0, downloads: 0, assemblies: 0,
             batched_steps: 0, batch_occupancy: 0,
             spec_drafted: 0, spec_accepted: 0, spec_verify_dispatches: 0,
+            prefill_chunks: 0,
         };
         let j = counters_json(&zero, &ws);
         assert_eq!(j.f64_of("spec_acceptance_rate").unwrap(), 0.0);

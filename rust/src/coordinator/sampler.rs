@@ -1,7 +1,18 @@
 //! Token samplers for the decode loop: greedy, temperature, top-k.
 //! (The eval harnesses use greedy for determinism; the serving path can
 //! request sampled generation per query.)
+//!
+//! NaN safety is real here, not a note: a NaN logit (overflowed
+//! activation, broken artifact) is *excluded from the candidate set* on
+//! every path — greedy delegates to the NaN-skipping
+//! [`DecodeSession::argmax`], and top-k filters NaNs before a
+//! `f32::total_cmp` sort (no `partial_cmp(..).unwrap()` to panic the
+//! comparator).  Empty or all-NaN logits are an `Err` the caller must
+//! handle — silently emitting token 0 corrupted generations downstream.
 
+use anyhow::{bail, Result};
+
+use crate::runtime::decode::DecodeSession;
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -13,7 +24,9 @@ pub enum Sampling {
 }
 
 impl Sampling {
-    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u32 {
+    /// Sample one token.  `Err` on empty or all-NaN logits (both
+    /// variants), propagated instead of silently emitting token 0.
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> Result<u32> {
         match *self {
             Sampling::Greedy => argmax(logits),
             Sampling::TopK { k, temperature } => top_k(logits, k, temperature, rng),
@@ -21,19 +34,26 @@ impl Sampling {
     }
 }
 
-/// NaN-safe greedy argmax — single implementation lives in
-/// [`DecodeSession::argmax`]; this infallible wrapper keeps the sampler
-/// signature (empty/all-NaN logits cannot occur on the sampling path,
-/// where the decode step has already validated them).
-pub fn argmax(logits: &[f32]) -> u32 {
-    crate::runtime::decode::DecodeSession::argmax(logits).unwrap_or(0)
+/// NaN-safe greedy argmax — the single implementation lives in
+/// [`DecodeSession::argmax`]; this wrapper keeps the sampler module's
+/// name and now PROPAGATES the empty/all-NaN error instead of mapping it
+/// to token 0 (the old `unwrap_or(0)` silently corrupted generations).
+pub fn argmax(logits: &[f32]) -> Result<u32> {
+    DecodeSession::argmax(logits)
 }
 
-fn top_k(logits: &[f32], k: usize, temperature: f64, rng: &mut Rng) -> u32 {
+fn top_k(logits: &[f32], k: usize, temperature: f64, rng: &mut Rng) -> Result<u32> {
     let temperature = temperature.max(1e-4);
-    let mut idx: Vec<usize> = (0..logits.len()).collect();
-    idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
-    let k = if k == 0 { logits.len() } else { k.min(logits.len()) };
+    // NaN logits leave the candidate set entirely (the argmax rule);
+    // total_cmp keys the sort so even a raced-in NaN cannot panic.
+    let mut idx: Vec<usize> = (0..logits.len())
+        .filter(|&i| !logits[i].is_nan())
+        .collect();
+    if idx.is_empty() {
+        bail!("top-k over empty or all-NaN logits");
+    }
+    idx.sort_unstable_by(|&a, &b| logits[b].total_cmp(&logits[a]));
+    let k = if k == 0 { idx.len() } else { k.min(idx.len()) };
     let cand = &idx[..k];
     let max = logits[cand[0]] as f64;
     let weights: Vec<f64> = cand
@@ -45,10 +65,10 @@ fn top_k(logits: &[f32], k: usize, temperature: f64, rng: &mut Rng) -> u32 {
     for (w, &i) in weights.iter().zip(cand) {
         draw -= w;
         if draw <= 0.0 {
-            return i as u32;
+            return Ok(i as u32);
         }
     }
-    cand[k - 1] as u32
+    Ok(cand[k - 1] as u32)
 }
 
 #[cfg(test)]
@@ -60,7 +80,7 @@ mod tests {
     fn greedy_is_argmax() {
         let logits = vec![0.1, 3.0, -1.0, 2.9];
         let mut rng = Rng::new(0);
-        assert_eq!(Sampling::Greedy.sample(&logits, &mut rng), 1);
+        assert_eq!(Sampling::Greedy.sample(&logits, &mut rng).unwrap(), 1);
     }
 
     #[test]
@@ -68,7 +88,7 @@ mod tests {
         let logits = vec![0.0, 5.0, 1.0, 4.9];
         for_each_seed(20, |rng| {
             let s = Sampling::TopK { k: 4, temperature: 1e-3 };
-            assert_eq!(s.sample(&logits, rng), 1);
+            assert_eq!(s.sample(&logits, rng).unwrap(), 1);
         });
     }
 
@@ -77,7 +97,7 @@ mod tests {
         let logits = vec![10.0, 9.0, -50.0, -60.0];
         for_each_seed(30, |rng| {
             let s = Sampling::TopK { k: 2, temperature: 2.0 };
-            let t = s.sample(&logits, rng);
+            let t = s.sample(&logits, rng).unwrap();
             assert!(t == 0 || t == 1, "sampled outside top-2: {t}");
         });
     }
@@ -89,8 +109,47 @@ mod tests {
         let s = Sampling::TopK { k: 0, temperature: 10.0 };
         let mut seen = std::collections::BTreeSet::new();
         for _ in 0..200 {
-            seen.insert(s.sample(&logits, &mut rng));
+            seen.insert(s.sample(&logits, &mut rng).unwrap());
         }
         assert!(seen.len() >= 3, "only saw {seen:?}");
+    }
+
+    /// Regression: NaN-laced logits used to panic the top-k sort's
+    /// `partial_cmp(..).unwrap()`.  Now NaN entries simply leave the
+    /// candidate set and sampling stays within the finite support.
+    #[test]
+    fn top_k_survives_nan_logits_and_excludes_them() {
+        let logits = vec![f32::NAN, 10.0, f32::NAN, 9.0, f32::NAN];
+        for_each_seed(40, |rng| {
+            let s = Sampling::TopK { k: 2, temperature: 1.0 };
+            let t = s.sample(&logits, rng).unwrap();
+            assert!(t == 1 || t == 3, "sampled a NaN slot: {t}");
+        });
+        // k = 0 (no truncation) with NaNs present: same exclusion rule.
+        let mut rng = Rng::new(7);
+        let s = Sampling::TopK { k: 0, temperature: 5.0 };
+        for _ in 0..50 {
+            let t = s.sample(&logits, &mut rng).unwrap();
+            assert!(t == 1 || t == 3, "sampled a NaN slot: {t}");
+        }
+    }
+
+    /// Empty / all-NaN logits propagate as errors on BOTH variants — no
+    /// silent token 0.
+    #[test]
+    fn degenerate_logits_error_instead_of_token_zero() {
+        let mut rng = Rng::new(0);
+        let all_nan = vec![f32::NAN; 4];
+        assert!(Sampling::Greedy.sample(&all_nan, &mut rng).is_err());
+        assert!(Sampling::TopK { k: 2, temperature: 1.0 }
+            .sample(&all_nan, &mut rng)
+            .is_err());
+        assert!(Sampling::Greedy.sample(&[], &mut rng).is_err());
+        assert!(Sampling::TopK { k: 0, temperature: 1.0 }
+            .sample(&[], &mut rng)
+            .is_err());
+        assert!(argmax(&all_nan).is_err());
+        // NaN-laced but not degenerate: argmax skips the NaNs.
+        assert_eq!(argmax(&[f32::NAN, 2.0, 1.0]).unwrap(), 1);
     }
 }

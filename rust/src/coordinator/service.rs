@@ -33,6 +33,20 @@
 //! tight-EDF requests keep token-granular preemption.  The degradation
 //! ladder is spec → batched → single, every rung preserving greedy
 //! numerics exactly.  All knobs live in [`CoreConfig`].
+//!
+//! Prompt ingestion is a scheduled work unit, not an admission-time
+//! stall (DESIGN.md §Prefill): [`ServingCore::admit`] only tokenizes,
+//! validates and allocates the slot (phase `Prefilling`), and every
+//! `step()` interleaves **at most one** `prefill_chunk_<P>` dispatch
+//! with the decode paths — so active decodes never wait on more than one
+//! bounded chunk between tokens, prompts are no longer capped at the
+//! largest prefill bucket, and the first token streams (TTFT stamps)
+//! the round the last chunk lands.  Admission is fault-isolated:
+//! [`ServingCore::admit_from`] turns a rejected request (empty
+//! tokenization, over-long prompt, capacity race) into a terminal
+//! [`CoreEvent::Error`] for that id plus an `admit_rejects` count and
+//! keeps draining — one bad prompt can no longer abort the serving loop
+//! with every in-flight request.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -152,10 +166,15 @@ pub struct ServeOutcome {
     pub effective_bits: f64,
     pub prefill_ms: f64,
     pub decode_ms: f64,
-    /// Request arrival → first streamed token (includes queue wait,
-    /// prefill, and any interleaving delay before the first step).
+    /// Request arrival → first streamed token.  The prompt's chunk
+    /// dispatches are *scheduled* across token rounds, so this includes
+    /// queue wait, every chunk, and the decode rounds interleaved
+    /// between them (≥ queue + prefill, never their conflation).
     pub ttft_ms: f64,
     pub output_tokens: usize,
+    /// Scheduled prompt-ingestion dispatches this request took
+    /// (1 for a bucket-sized prompt; ceil(len / chunk) beyond it).
+    pub prefill_chunks: u64,
     /// Mid-stream target re-selections applied to this request.
     pub retargets: usize,
 }
@@ -175,9 +194,15 @@ pub enum CoreEvent {
     },
     /// Request finished; terminal stats.
     Done(ServeOutcome),
-    /// Request aborted on a decode error; the generation was evicted so
-    /// the rest of the active set keeps serving.
+    /// Request aborted on a decode/prefill error mid-flight; the
+    /// generation was evicted so the rest of the active set keeps
+    /// serving.
     Failed { id: u64, error: String },
+    /// Admission rejected (empty tokenization, over-long prompt,
+    /// capacity race): terminal for `id`, which never held a slot.  The
+    /// serving loop keeps draining — see [`ServingCore::admit_from`] and
+    /// [`ServingCore::admit_rejects`].
+    Error { id: u64, error: String },
 }
 
 /// One model + its adaptation set, ready to serve.
@@ -503,12 +528,20 @@ pub fn pick_next(policy: SchedPolicy, rr_cursor: usize,
     }
     match policy {
         SchedPolicy::Fifo => Some(rr_cursor % items.len()),
-        SchedPolicy::Edf => items
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, (seq, dl))| (dl.is_none(), *dl, *seq))
-            .map(|(i, _)| i),
+        SchedPolicy::Edf => edf_pick(items),
     }
+}
+
+/// The one EDF ordering rule, shared by [`pick_next`] and
+/// [`pick_prefill`] so the decode and prefill schedulers can never
+/// silently diverge: earliest absolute deadline first, best-effort
+/// (None) last, admission sequence as the FIFO tie-break.
+fn edf_pick(items: &[(u64, Option<Instant>)]) -> Option<usize> {
+    items
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, (seq, dl))| (dl.is_none(), *dl, *seq))
+        .map(|(i, _)| i)
 }
 
 /// One active generation as seen by [`pick_batch`]: admission sequence,
@@ -586,6 +619,36 @@ fn pick_batch_with_lead(policy: SchedPolicy, lead: usize, items: &[BatchItem],
     sel
 }
 
+/// Pure choice of which prompt-ingesting (`Prefilling`-phase)
+/// generation runs its next chunk this round, factored out like
+/// [`pick_next`] so the ordering properties are unit-testable without a
+/// device.  EDF: earliest deadline first (best-effort last), admission
+/// sequence as the tie-break — a deadlined long prompt reaches its first
+/// token before best-effort ones; FIFO: admission order.
+pub fn pick_prefill(policy: SchedPolicy,
+                    items: &[(u64, Option<Instant>)]) -> Option<usize> {
+    match policy {
+        SchedPolicy::Fifo => items
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, (seq, _))| *seq)
+            .map(|(i, _)| i),
+        SchedPolicy::Edf => edf_pick(items),
+    }
+}
+
+/// Where one in-flight generation is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Prompt ingestion in progress: `ingested` of `prompt_ids` tokens
+    /// are in the device-resident KV cache; [`ServingCore::step`] runs at
+    /// most one more chunk per round ([`DecodeSession::prefill_advance`]).
+    Prefilling { ingested: usize },
+    /// Prompt fully ingested; `next_token`/`out_ids` are live and the
+    /// generation competes for decode dispatches.
+    Decoding,
+}
+
 /// One in-flight generation inside the core.
 struct Generation<'e> {
     req: Request,
@@ -594,32 +657,89 @@ struct Generation<'e> {
     target: f64,
     pinned: bool,
     seq: u64,
-    /// Prompt length in tokens; `out_ids[j]` was fed (or will be fed) at
-    /// absolute position `prompt_len + j`.
-    prompt_len: usize,
+    /// The tokenized prompt; `out_ids[j]` was fed (or will be fed) at
+    /// absolute position `prompt_ids.len() + j`.
+    prompt_ids: Vec<u32>,
+    phase: Phase,
     next_token: u32,
     out_ids: Vec<u32>,
     /// Speculation pair state: the low-bit draft generation + γ
     /// controller.  `None` when the request is ineligible (tight
     /// deadline), speculation is disabled, the artifacts lack verify
-    /// graphs, or a speculative round failed (permanent per-request
-    /// fallback to plain decode).
+    /// graphs, the prompt exceeds the draft's bucketed prefill, or a
+    /// speculative round failed (permanent per-request fallback to
+    /// plain decode).
     spec: Option<SpecState<'e>>,
+    /// Set when the prompt finishes ingesting and speculation looks
+    /// viable (`spec_pairing_plan`): the draft prefill is DEFERRED to a
+    /// later round's single ingestion slot (`spec_pairing_step`), so the
+    /// completion round never runs two ingestion dispatches and the
+    /// one-dispatch-per-round interleave bound holds with speculation
+    /// enabled.  Cleared when the pairing attempt runs (either way).
+    spec_pending: bool,
     /// Terminated by emitting [`CoreConfig::eos_token`] (on any decode
     /// path — plain, batched, or inside an accepted speculative run).
     done: bool,
     queue_ms: f64,
+    /// Wall time of this request's scheduled prefill dispatches (spread
+    /// across rounds — no longer a synchronous admission stamp).
     prefill_ms: f64,
+    /// Chunk dispatches this request's prompt took to ingest.
+    prefill_chunks: u64,
     decode_ms: f64,
     ttft_ms: f64,
 }
 
 impl Generation<'_> {
     fn finished(&self) -> bool {
-        self.done
-            || self.out_ids.len() >= self.req.max_new
-            || self.gen.pos + 1 >= self.session.cfg.max_seq
+        matches!(self.phase, Phase::Decoding)
+            && (self.done
+                || self.out_ids.len() >= self.req.max_new
+                || self.gen.pos + 1 >= self.session.cfg.max_seq)
     }
+}
+
+/// The cheap half of speculation pairing: every gate EXCEPT the draft
+/// prefill dispatch itself — eligibility (config + deadline), a distinct
+/// draft session with verify graphs, a prompt within the draft's
+/// bucketed prefill (a second chunked ingestion would double the
+/// scheduled prefill work; batching still serves long prompts), and a γ
+/// controller that could ever pick γ > 0 for this cost pair.  Returns
+/// the draft session + seeded controller when pairing is worth a
+/// draft-prefill dispatch, so the pairing round consumes the plan
+/// instead of re-deriving it (one code path, no gate drift) — the
+/// prompt-completion round calls this just to decide `spec_pending`.
+fn spec_pairing_plan<'e>(engine: &'e ServingEngine, config: &CoreConfig,
+                         session: &DecodeSession, prompt_len: usize,
+                         deadline_ms: Option<f64>)
+                         -> Option<(&'e DecodeSession, GammaController)> {
+    if !(config.spec
+        && config.gamma_cap > 0
+        && spec_eligible(deadline_ms, config.loose_deadline_ms))
+    {
+        return None;
+    }
+    let draft = engine.spec_draft_for(session)?;
+    if draft.prefill_bucket(prompt_len).is_err() {
+        return None;
+    }
+    let ctrl = GammaController::new(
+        engine.modeled_tpot_ms(draft.ec.target),
+        engine.modeled_tpot_ms(session.ec.target),
+    );
+    // If even the optimistic-start controller can never pick γ > 0 for
+    // this draft/target cost pair (e.g. adjacent targets), skip the
+    // pairing entirely — no draft prefill dispatch, no second
+    // device-resident KV cache.
+    let candidates: Vec<usize> = session
+        .spec_gammas()
+        .into_iter()
+        .filter(|&g| g <= config.gamma_cap)
+        .collect();
+    if ctrl.pick(&candidates) == 0 {
+        return None;
+    }
+    Some((draft, ctrl))
 }
 
 /// Token-interleaved decode loop over one [`ServingEngine`], with a
@@ -641,6 +761,19 @@ pub struct ServingCore<'e> {
     /// Speculative rounds that failed; each failure permanently drops
     /// that request's speculation state (see [`ServingCore::spec_errors`]).
     spec_errors: u64,
+    /// Admissions rejected by [`ServingCore::admit_from`]; each became a
+    /// terminal [`CoreEvent::Error`] and the drain continued.
+    admit_rejects: u64,
+    /// Rejection events recorded by [`ServingCore::admit_from`], drained
+    /// at the head of the next [`ServingCore::step`].
+    rejects: Vec<CoreEvent>,
+    /// Ingestion dispatches run by [`ServingCore::step`]: prompt chunks,
+    /// whole bucketed prefills on chunk-less artifacts, and deferred
+    /// speculation pairings (see [`ServingCore::prefill_chunks`]).
+    prefill_chunks: u64,
+    /// Total wall time decode rounds were extended by an interleaved
+    /// prefill dispatch (see [`ServingCore::prefill_stall_ms`]).
+    prefill_stall_ms: f64,
     token_clock: u64,
     /// Last `token_clock / reselect_every` epoch a re-selection ran for
     /// (see [`ServingCore::reselect_due`]).
@@ -658,6 +791,10 @@ impl<'e> ServingCore<'e> {
             config: CoreConfig::from_env(),
             batch_errors: 0,
             spec_errors: 0,
+            admit_rejects: 0,
+            rejects: Vec::new(),
+            prefill_chunks: 0,
+            prefill_stall_ms: 0.0,
             token_clock: 0,
             reselect_epoch: None,
         }
@@ -720,6 +857,36 @@ impl<'e> ServingCore<'e> {
         self.spec_errors
     }
 
+    /// Admission rejections recorded by [`ServingCore::admit_from`]:
+    /// each produced a terminal [`CoreEvent::Error`] for its id and the
+    /// drain continued — the fault-isolation contract (one bad prompt
+    /// cannot take down the serving loop).
+    pub fn admit_rejects(&self) -> u64 {
+        self.admit_rejects
+    }
+
+    /// Ingestion dispatches this core has scheduled: one per
+    /// `prefill_chunk_<P>` call, per whole bucketed prefill on
+    /// chunk-less artifacts, and per deferred speculation pairing (the
+    /// draft's seed prefill runs through the same per-round ingestion
+    /// slot).  Companion to the runtime-level
+    /// `TransferSnapshot::prefill_chunks`, which counts only chunk
+    /// dispatches but includes harness-driven ones outside any core.
+    pub fn prefill_chunks(&self) -> u64 {
+        self.prefill_chunks
+    }
+
+    /// Total wall time decode rounds were extended by an interleaved
+    /// prefill dispatch: a chunk's duration is added whenever the same
+    /// scheduling round also served decode traffic.  Because `step()`
+    /// runs at most one chunk per round, `prefill_stall_ms` divided by
+    /// the number of stalling chunks bounds the extra latency any active
+    /// decode saw between its tokens from prompt ingestion — the
+    /// interleave contract the artifact-gated tests assert.
+    pub fn prefill_stall_ms(&self) -> f64 {
+        self.prefill_stall_ms
+    }
+
     /// True when a utilization tick + mid-stream re-selection is due:
     /// once per [`CoreConfig::reselect_every`]-token epoch, and on the
     /// first call.  Epoch-based rather than `token_clock % n == 0`
@@ -736,8 +903,17 @@ impl<'e> ServingCore<'e> {
     }
 
     /// Admit one request at the QoS-policy target for `utilization`.
-    /// Runs prefill immediately (max precision), so the request's first
-    /// token is ready before the next [`ServingCore::step`].
+    ///
+    /// **Non-blocking**: tokenizes, validates, allocates the slot and
+    /// enqueues a `Prefilling` phase — no prefill dispatch runs here.
+    /// The prompt ingests chunk by chunk through [`ServingCore::step`]
+    /// (at most one chunk per round, interleaved with the decode paths),
+    /// which streams the first token when the last chunk lands.  `Err`
+    /// means the request was REJECTED (empty tokenization, prompt beyond
+    /// [`DecodeSession::max_prompt_len`], capacity) with core state
+    /// untouched; queue-driven callers should prefer
+    /// [`ServingCore::admit_from`], which converts rejections into
+    /// terminal [`CoreEvent::Error`]s instead of propagating them.
     pub fn admit(&mut self, req: Request, utilization: f64) -> Result<u64> {
         let target = self.engine.policy.select(req.qos, utilization);
         self.admit_inner(req, target, false)
@@ -748,20 +924,30 @@ impl<'e> ServingCore<'e> {
         self.admit_inner(req, target, true)
     }
 
-    /// Pull requests from the queue while there is capacity.
+    /// Pull requests from the queue while there is capacity.  Fault
+    /// isolation (the headline bugfix of ISSUE 5): a rejected request is
+    /// terminal for THAT id only — it becomes a pending
+    /// [`CoreEvent::Error`] (drained by the next [`ServingCore::step`]),
+    /// bumps [`ServingCore::admit_rejects`], and the loop keeps admitting
+    /// and serving.  Returns how many requests were actually admitted.
     pub fn admit_from(&mut self, queue: &mut RequestQueue, utilization: f64)
-                      -> Result<usize> {
+                      -> usize {
         let mut admitted = 0;
         while self.has_capacity() {
-            match queue.pop() {
-                Some(r) => {
-                    self.admit(r, utilization)?;
-                    admitted += 1;
+            let Some(r) = queue.pop() else { break };
+            let id = r.id;
+            match self.admit(r, utilization) {
+                Ok(_) => admitted += 1,
+                Err(e) => {
+                    self.admit_rejects += 1;
+                    self.rejects.push(CoreEvent::Error {
+                        id,
+                        error: format!("{e:#}"),
+                    });
                 }
-                None => break,
             }
         }
-        Ok(admitted)
+        admitted
     }
 
     fn admit_inner(&mut self, req: Request, target: f64, pinned: bool)
@@ -770,51 +956,34 @@ impl<'e> ServingCore<'e> {
             return Err(anyhow!("core at capacity ({})", self.config.max_active));
         }
         let session = self.engine.session_for_target(target);
-        let queue_ms = req.arrival.elapsed().as_secs_f64() * 1e3;
         let prompt_ids = self.engine.tokenizer.encode(&req.prompt);
         if prompt_ids.is_empty() {
             return Err(anyhow!("empty prompt"));
         }
-        let t0 = Instant::now();
-        let (gen, logits) = session.begin(&prompt_ids)?;
-        let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let first = DecodeSession::argmax(&logits)?;
-        let id = req.id;
-        // Pair eligible requests with the low-bit draft session: a draft
-        // prefill seeds the draft KV (prefill runs at max precision on
-        // both sessions, so this is the same compute the target paid).
-        // A failed draft prefill just means no speculation — never a
-        // failed admission.
-        let spec = if self.config.spec
-            && self.config.gamma_cap > 0
-            && spec_eligible(req.deadline_ms, self.config.loose_deadline_ms)
-        {
-            self.engine.spec_draft_for(session).and_then(|draft| {
-                let ctrl = GammaController::new(
-                    self.engine.modeled_tpot_ms(draft.ec.target),
-                    self.engine.modeled_tpot_ms(session.ec.target),
-                );
-                // If even the optimistic-start controller can never pick
-                // γ > 0 for this draft/target cost pair (e.g. adjacent
-                // targets), skip the pairing entirely — no draft prefill
-                // dispatch, no second device-resident KV cache.
-                let candidates: Vec<usize> = session
-                    .spec_gammas()
-                    .into_iter()
-                    .filter(|&g| g <= self.config.gamma_cap)
-                    .collect();
-                if ctrl.pick(&candidates) == 0 {
-                    return None;
-                }
-                draft.begin(&prompt_ids).ok().map(|(draft_gen, _)| SpecState {
-                    draft,
-                    draft_gen,
-                    ctrl,
-                })
-            })
+        if prompt_ids.len() > session.max_prompt_len() {
+            return Err(anyhow!(
+                "prompt of {} tokens exceeds the maximum ingestible length \
+                 {} (max_seq {})",
+                prompt_ids.len(),
+                session.max_prompt_len(),
+                session.cfg.max_seq
+            ));
+        }
+        let queue_ms = req.arrival.elapsed().as_secs_f64() * 1e3;
+        // Non-blocking admission: at most the zero-KV state the chunked
+        // ingestion extends is allocated here (one bounded upload, no
+        // dispatch) — a long prompt can never stall the active decodes
+        // from inside admission.  Chunk-less artifacts get a no-upload
+        // placeholder instead: their first scheduled ingestion round
+        // replaces the whole GenState via `begin`, so an uploaded zero
+        // KV would be discarded unused.  Speculation pairing is deferred
+        // to its own ingestion round (`spec_pairing_step`).
+        let gen = if session.max_prefill_chunk() > 0 {
+            session.begin_empty()?
         } else {
-            None
+            session.begin_deferred()
         };
+        let id = req.id;
         self.active.push(Generation {
             req,
             session,
@@ -822,18 +991,20 @@ impl<'e> ServingCore<'e> {
             target: session.ec.target,
             pinned,
             seq: self.next_seq,
-            prompt_len: prompt_ids.len(),
-            next_token: first,
-            out_ids: vec![first],
-            spec,
+            prompt_ids,
+            phase: Phase::Prefilling { ingested: 0 },
+            next_token: 0,
+            out_ids: Vec::new(),
+            spec: None,
+            spec_pending: false,
             done: false,
             queue_ms,
-            prefill_ms,
+            prefill_ms: 0.0,
+            prefill_chunks: 0,
             decode_ms: 0.0,
-            // Finalized when the first token actually streams; under load
-            // that is later than admission+prefill (the generation may wait
-            // behind deadlined traffic before its first step).
-            ttft_ms: queue_ms + prefill_ms,
+            // Stamped when the first token actually streams (the round
+            // the last prefill chunk lands).
+            ttft_ms: 0.0,
         });
         self.next_seq += 1;
         Ok(id)
@@ -846,7 +1017,13 @@ impl<'e> ServingCore<'e> {
     pub fn reselect(&mut self, utilization: f64) -> usize {
         let mut switched = 0;
         for g in &mut self.active {
-            if g.pinned || g.finished() {
+            // A mid-prefill retarget would switch prefill weight stacks
+            // halfway through the prompt; ingestion finishes on the
+            // admission-time session and the first post-completion
+            // reselect moves the generation if utilization asks for it.
+            if g.pinned || g.finished()
+                || matches!(g.phase, Phase::Prefilling { .. })
+            {
                 continue;
             }
             let want = self.engine.policy.select(g.req.qos, utilization);
@@ -915,7 +1092,7 @@ impl<'e> ServingCore<'e> {
         if gamma == 0 {
             return false;
         }
-        let dstart = spec.draft_gen.pos - g.prompt_len;
+        let dstart = spec.draft_gen.pos - g.prompt_ids.len();
         let catchup: Vec<u32> =
             g.out_ids[dstart..g.out_ids.len() - 1].to_vec();
         let t0 = Instant::now();
@@ -965,104 +1142,281 @@ impl<'e> ServingCore<'e> {
         }
     }
 
-    /// Advance the policy-chosen generation — together with every
-    /// batch-compatible runnable generation in the same device dispatch
-    /// when the batched artifacts are available ([`pick_batch`] +
-    /// [`DecodeSession::advance_batch`]), or by a multi-token
-    /// *speculative round* when it runs alone and is spec-eligible
-    /// (γ low-bit drafts verified in one target dispatch via
-    /// `runtime::spec::spec_round`, each accepted token streamed in
-    /// order).  Emits
-    /// the streamed token events (a generation's first pick also emits
-    /// its prefill-produced token 0) and, on completion, the terminal
-    /// outcomes.  A failed batched dispatch falls back to per-request
-    /// advances so one broken generation is evicted without poisoning
-    /// its batch mates; a failed speculative round falls back to the
-    /// plain path within the same step.
+    /// One scheduling round.  Decode half: advance the policy-chosen
+    /// generation — together with every batch-compatible runnable
+    /// generation in the same device dispatch when the batched artifacts
+    /// are available ([`pick_batch`] + [`DecodeSession::advance_batch`]),
+    /// or by a multi-token *speculative round* when it runs alone and is
+    /// spec-eligible (γ low-bit drafts verified in one target dispatch
+    /// via `runtime::spec::spec_round`, each accepted token streamed in
+    /// order).  Prefill half: at most ONE prompt-ingestion chunk of the
+    /// [`pick_prefill`]-chosen `Prefilling` generation, so active
+    /// decodes never wait on more than one bounded chunk dispatch
+    /// between tokens; the round the last chunk lands, the first token
+    /// streams (index 0) and TTFT stamps.  Terminal outcomes emit on
+    /// completion; pending admission rejections
+    /// ([`ServingCore::admit_from`]) drain first.  A failed batched
+    /// dispatch falls back to per-request advances so one broken
+    /// generation is evicted without poisoning its batch mates; a failed
+    /// speculative round falls back to the plain path within the same
+    /// step; a failed prefill chunk evicts only its own generation.
     pub fn step(&mut self) -> Result<Vec<CoreEvent>> {
-        let pairs: Vec<(u64, Option<Instant>)> = self
+        // Admission rejections recorded since the last round surface
+        // first — terminal per-id events, ahead of any token traffic.
+        let mut events: Vec<CoreEvent> = std::mem::take(&mut self.rejects);
+
+        // ---- decode half: lead + ride-alongs over the decodable set ----
+        let decodable: Vec<usize> = self
             .active
             .iter()
-            .map(|g| (g.seq, g.req.deadline_instant()))
+            .enumerate()
+            .filter(|(_, g)| matches!(g.phase, Phase::Decoding))
+            .map(|(i, _)| i)
             .collect();
-        let Some(lead) = pick_next(self.policy, self.rr_cursor, &pairs) else {
-            return Ok(Vec::new());
-        };
-        let session: &'e DecodeSession = self.active[lead].session;
-        let cap = self.config.max_batch.min(session.max_batch()).max(1);
-        let picked = if cap > 1 {
-            let items: Vec<BatchItem> = self
-                .active
-                .iter()
-                .map(|g| BatchItem {
-                    seq: g.seq,
-                    deadline: g.req.deadline_instant(),
-                    key: g.session as *const DecodeSession as usize,
-                })
-                .collect();
-            pick_batch_with_lead(self.policy, lead, &items, cap)
-        } else {
-            vec![lead]
-        };
-        self.rr_cursor = self.rr_cursor.wrapping_add(1);
-        let picked_ids: Vec<u64> =
-            picked.iter().map(|&i| self.active[i].req.id).collect();
-        let mut events = Vec::new();
-
-        // Token 0 (from prefill) streams on the generation's first pick;
-        // TTFT is measured to *here*, not to admission.
-        for &i in &picked {
-            let g = &mut self.active[i];
-            if g.gen.steps == 0 {
-                g.ttft_ms = g.req.arrival.elapsed().as_secs_f64() * 1e3;
-                events.push(CoreEvent::Token {
-                    id: g.req.id,
-                    index: 0,
-                    token: g.next_token,
-                    piece: self.engine.tokenizer.decode_one(g.next_token),
-                    target: g.target,
-                });
-            }
-        }
-
-        // Advance the non-finished picked generations.  Degradation
-        // ladder (DESIGN.md §Speculation): a lone runnable generation
-        // tries a speculative round first (γ low-bit drafts verified in
-        // one target dispatch — converting idle batch capacity into
-        // tokens); ≥ 2 compatible generations share one batched
-        // dispatch; everything else is the per-request path.
-        let to_advance: Vec<usize> = picked
+        let pairs: Vec<(u64, Option<Instant>)> = decodable
             .iter()
-            .copied()
-            .filter(|&i| !self.active[i].finished())
+            .map(|&i| (self.active[i].seq, self.active[i].req.deadline_instant()))
             .collect();
-        let est_mode = self.engine.est_mode;
-        let mut failures: Vec<(u64, String)> = Vec::new();
-        let mut spec_done = false;
-        if self.config.spec && to_advance.len() == 1 {
-            spec_done = self.spec_step(to_advance[0], &mut events);
-        }
-        if !spec_done {
-            self.step_plain(&to_advance, &picked, est_mode, &mut events,
-                            &mut failures);
-        }
-        // Evict broken generations; the rest of the set keeps serving.
-        for (id, error) in failures {
-            if let Some(pos) = self.active.iter().position(|g| g.req.id == id) {
-                self.active.remove(pos);
+        if let Some(lead_d) = pick_next(self.policy, self.rr_cursor, &pairs) {
+            let lead = decodable[lead_d];
+            let session: &'e DecodeSession = self.active[lead].session;
+            let cap = self.config.max_batch.min(session.max_batch()).max(1);
+            let picked: Vec<usize> = if cap > 1 {
+                let items: Vec<BatchItem> = decodable
+                    .iter()
+                    .map(|&i| {
+                        let g = &self.active[i];
+                        BatchItem {
+                            seq: g.seq,
+                            deadline: g.req.deadline_instant(),
+                            key: g.session as *const DecodeSession as usize,
+                        }
+                    })
+                    .collect();
+                pick_batch_with_lead(self.policy, lead_d, &items, cap)
+                    .into_iter()
+                    .map(|j| decodable[j])
+                    .collect()
+            } else {
+                vec![lead]
+            };
+            self.rr_cursor = self.rr_cursor.wrapping_add(1);
+
+            // Advance the non-finished picked generations.  Degradation
+            // ladder (DESIGN.md §Speculation): a lone runnable generation
+            // tries a speculative round first (γ low-bit drafts verified
+            // in one target dispatch — converting idle batch capacity
+            // into tokens); ≥ 2 compatible generations share one batched
+            // dispatch; everything else is the per-request path.
+            let to_advance: Vec<usize> = picked
+                .iter()
+                .copied()
+                .filter(|&i| !self.active[i].finished())
+                .collect();
+            let est_mode = self.engine.est_mode;
+            let mut failures: Vec<(u64, String)> = Vec::new();
+            let mut spec_done = false;
+            if self.config.spec && to_advance.len() == 1 {
+                spec_done = self.spec_step(to_advance[0], &mut events);
             }
-            events.push(CoreEvent::Failed { id, error });
-        }
-        // Completions (indices may have shifted — resolve by id).
-        for id in picked_ids {
-            if let Some(pos) = self.active.iter().position(|g| g.req.id == id) {
-                if self.active[pos].finished() {
-                    let g = self.active.remove(pos);
-                    events.push(CoreEvent::Done(self.complete(g)));
+            if !spec_done {
+                self.step_plain(&to_advance, &picked, est_mode, &mut events,
+                                &mut failures);
+            }
+            // Evict broken generations; the rest of the set keeps serving.
+            for (id, error) in failures {
+                if let Some(pos) =
+                    self.active.iter().position(|g| g.req.id == id)
+                {
+                    self.active.remove(pos);
                 }
+                events.push(CoreEvent::Failed { id, error });
+            }
+        }
+
+        // ---- prefill half: at most one ingestion dispatch per round ----
+        let stalled_decode = !decodable.is_empty();
+        self.prefill_step(&mut events, stalled_decode);
+
+        // Completions — including a prefill landing straight into
+        // `finished` (max_new == 1) — resolved by id since indices shift.
+        let done_ids: Vec<u64> = self
+            .active
+            .iter()
+            .filter(|g| g.finished())
+            .map(|g| g.req.id)
+            .collect();
+        for id in done_ids {
+            if let Some(pos) = self.active.iter().position(|g| g.req.id == id) {
+                let g = self.active.remove(pos);
+                events.push(CoreEvent::Done(self.complete(g)));
             }
         }
         Ok(events)
+    }
+
+    /// The prefill half of one scheduling round: run at most ONE
+    /// ingestion dispatch.  Priority goes to the next prompt chunk of
+    /// the [`pick_prefill`]-chosen `Prefilling` generation (EDF:
+    /// earliest deadline first; FIFO: admission order) — chunks gate
+    /// someone's TTFT; with no prompt mid-ingestion, a deferred
+    /// speculation pairing (`spec_pending`) takes the slot instead, so
+    /// the draft prefill is a scheduled, metered dispatch too and the
+    /// one-dispatch-per-round interleave bound holds with speculation
+    /// enabled.  On a prompt's final chunk the first token streams
+    /// immediately (index 0), TTFT stamps (arrival → first streamed
+    /// token, the scheduled prefill spread inside it) and viable
+    /// requests are marked `spec_pending`.  Artifacts without
+    /// `prefill_chunk_*` entries degrade to running the whole bucketed
+    /// prefill as this round's single ingestion unit.  `stalled_decode`
+    /// marks that this round also served decode traffic; the dispatch's
+    /// wall time then counts toward [`ServingCore::prefill_stall_ms`].
+    /// A chunk failure evicts only this generation
+    /// ([`CoreEvent::Failed`]) — the serving loop continues.
+    fn prefill_step(&mut self, events: &mut Vec<CoreEvent>,
+                    stalled_decode: bool) {
+        let prefilling: Vec<usize> = self
+            .active
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| matches!(g.phase, Phase::Prefilling { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        let items: Vec<(u64, Option<Instant>)> = prefilling
+            .iter()
+            .map(|&i| (self.active[i].seq, self.active[i].req.deadline_instant()))
+            .collect();
+        let Some(p) = pick_prefill(self.policy, &items) else {
+            self.spec_pairing_step(stalled_decode);
+            return;
+        };
+        let idx = prefilling[p];
+        let engine = self.engine;
+        let config = self.config.clone();
+        let mut failure: Option<String> = None;
+        {
+            let g = &mut self.active[idx];
+            let session: &'e DecodeSession = g.session;
+            let Phase::Prefilling { ingested } = g.phase else {
+                unreachable!("filtered on phase above")
+            };
+            let t0 = Instant::now();
+            let chunk = session.max_prefill_chunk();
+            let total = g.prompt_ids.len();
+            let outcome: Result<(usize, Option<Vec<f32>>)> = if chunk == 0 {
+                // Chunk-less artifacts: the whole bucketed prefill is
+                // this round's ingestion unit (prompt length was
+                // validated against the bucket cap at admission).
+                match session.begin(&g.prompt_ids) {
+                    Ok((gen, logits)) => {
+                        g.gen = gen;
+                        Ok((total, Some(logits)))
+                    }
+                    Err(e) => Err(e),
+                }
+            } else {
+                let end = (ingested + chunk).min(total);
+                // Only the final chunk's logits are consulted (token 0);
+                // intermediate chunks skip the vocab-sized download.
+                session
+                    .prefill_advance(&mut g.gen, &g.prompt_ids[ingested..end],
+                                     end == total)
+                    .map(|logits| (end, logits))
+            };
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            g.prefill_ms += ms;
+            g.prefill_chunks += 1;
+            self.prefill_chunks += 1;
+            if stalled_decode {
+                self.prefill_stall_ms += ms;
+            }
+            match outcome {
+                Err(e) => failure = Some(format!("{e:#}")),
+                Ok((now_ingested, final_logits)) => {
+                    g.phase = Phase::Prefilling { ingested: now_ingested };
+                    if let Some(logits) = final_logits {
+                        match DecodeSession::argmax(&logits) {
+                            Err(e) => failure = Some(format!("{e:#}")),
+                            Ok(first) => {
+                                g.phase = Phase::Decoding;
+                                g.next_token = first;
+                                g.out_ids.push(first);
+                                g.ttft_ms =
+                                    g.req.arrival.elapsed().as_secs_f64() * 1e3;
+                                events.push(CoreEvent::Token {
+                                    id: g.req.id,
+                                    index: 0,
+                                    token: first,
+                                    piece: engine.tokenizer.decode_one(first),
+                                    target: g.target,
+                                });
+                                // The draft prefill is NOT run here — it
+                                // would make this round's ingestion cost
+                                // two dispatches.  A viable request is
+                                // marked and paired by a later round's
+                                // ingestion slot (spec_pairing_step).
+                                g.spec_pending = spec_pairing_plan(
+                                    engine, &config, session,
+                                    g.prompt_ids.len(), g.req.deadline_ms)
+                                    .is_some();
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(error) = failure {
+            let id = self.active[idx].req.id;
+            self.active.remove(idx);
+            events.push(CoreEvent::Failed { id, error });
+        }
+    }
+
+    /// Run one deferred speculation pairing as this round's ingestion
+    /// dispatch (only when no prompt is mid-ingestion — chunks outrank
+    /// pairings, since they gate a TTFT).  The draft prefill's wall time
+    /// is metered like any ingestion dispatch
+    /// ([`ServingCore::prefill_chunks`] / `prefill_stall_ms`) — counted
+    /// only when the dispatch actually ran, so the counters never show
+    /// phantom work — and billed to the request's `decode_ms`: it is
+    /// speed investment for the decode phase, and the request's first
+    /// token already streamed, so billing it to `prefill_ms` would break
+    /// the `ttft >= queue + prefill` record invariant.  Doomed pairings
+    /// are dropped dispatch-free: a generation finishing this round, one
+    /// already too far past its prompt for the catch-up bound (the first
+    /// spec round would discard the pair), or one whose viability
+    /// flipped since it was marked (mid-stream retarget).  A draft
+    /// prefill failure just means plain decode — never a failed request.
+    fn spec_pairing_step(&mut self, stalled_decode: bool) {
+        let Some(idx) = self.active.iter().position(|g| g.spec_pending) else {
+            return;
+        };
+        let engine = self.engine;
+        let config = self.config.clone();
+        let g = &mut self.active[idx];
+        g.spec_pending = false;
+        if g.finished()
+            || g.out_ids.len().saturating_sub(1) > MAX_SPEC_CATCHUP
+        {
+            return;
+        }
+        let session: &'e DecodeSession = g.session;
+        let Some((draft, ctrl)) = spec_pairing_plan(
+            engine, &config, session, g.prompt_ids.len(), g.req.deadline_ms)
+        else {
+            return;
+        };
+        let t0 = Instant::now();
+        g.spec = draft
+            .begin(&g.prompt_ids)
+            .ok()
+            .map(|(draft_gen, _)| SpecState { draft, draft_gen, ctrl });
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        g.decode_ms += ms;
+        self.prefill_chunks += 1;
+        if stalled_decode {
+            self.prefill_stall_ms += ms;
+        }
     }
 
     /// The non-speculative advance of one scheduling step: one batched
@@ -1196,8 +1550,11 @@ impl<'e> ServingCore<'e> {
             // mid-batch, so the freed slot is refilled in time to join
             // the very next batched dispatch (regression-tested by
             // admission_refills_freed_batch_slot_mid_flight; keep this
-            // at the loop head, before reselect/step).
-            self.admit_from(queue, util.current())?;
+            // at the loop head, before reselect/step).  Rejections never
+            // abort the loop: they surface as CoreEvent::Error from the
+            // step() below (regression-tested by
+            // poisoned_admission_does_not_kill_the_loop).
+            self.admit_from(queue, util.current());
             if self.reselect_due() {
                 let u = util.tick();
                 self.reselect(u);
@@ -1213,10 +1570,14 @@ impl<'e> ServingCore<'e> {
     }
 
     /// Finish all currently-active generations (no further admission).
+    /// Pending admission-rejection events are flushed too: a caller that
+    /// ran [`ServingCore::admit_from`] over an all-invalid queue (no slot
+    /// ever filled) still receives every terminal [`CoreEvent::Error`]
+    /// here instead of them being silently dropped.
     pub fn drain(&mut self, on_event: &mut dyn FnMut(&CoreEvent))
                  -> Result<Vec<ServeOutcome>> {
         let mut done = Vec::new();
-        while self.has_active() {
+        while self.has_active() || !self.rejects.is_empty() {
             for ev in self.step()? {
                 on_event(&ev);
                 if let CoreEvent::Done(o) = ev {
@@ -1233,11 +1594,12 @@ impl<'e> ServingCore<'e> {
             id: g.req.id,
             target_precision: g.target,
             effective_bits: eff,
-            prompt_tokens: g.prompt_len,
+            prompt_tokens: g.prompt_ids.len(),
             output_tokens: g.out_ids.len(),
             queue_ms: g.queue_ms,
             prefill_ms: g.prefill_ms,
             decode_ms: g.decode_ms,
+            ttft_ms: g.ttft_ms,
         });
         ServeOutcome {
             id: g.req.id,
@@ -1248,6 +1610,7 @@ impl<'e> ServingCore<'e> {
             decode_ms: g.decode_ms,
             ttft_ms: g.ttft_ms,
             output_tokens: g.out_ids.len(),
+            prefill_chunks: g.prefill_chunks,
             retargets: g.gen.retargets,
         }
     }
@@ -1437,6 +1800,31 @@ mod tests {
             assert_eq!(pick_batch(SchedPolicy::Fifo, cursor, &items, 4),
                        vec![0, 1, 2]);
         }
+    }
+
+    /// Prefill scheduling order: FIFO ingests prompts in admission
+    /// order; EDF gives the earliest deadline its chunks first
+    /// (best-effort last, admission seq tie-break) — so a deadlined long
+    /// prompt reaches its first token ahead of best-effort ones.
+    #[test]
+    fn pick_prefill_ordering() {
+        assert_eq!(pick_prefill(SchedPolicy::Fifo, &[]), None);
+        assert_eq!(pick_prefill(SchedPolicy::Edf, &[]), None);
+        let items = vec![
+            (3u64, None),
+            (1u64, now_plus(5000)),
+            (2u64, now_plus(50)),
+        ];
+        // FIFO: lowest admission sequence, deadlines ignored.
+        assert_eq!(pick_prefill(SchedPolicy::Fifo, &items), Some(1));
+        // EDF: tightest deadline wins; best-effort runs last.
+        assert_eq!(pick_prefill(SchedPolicy::Edf, &items), Some(2));
+        let be = vec![(9u64, None), (4u64, None)];
+        assert_eq!(pick_prefill(SchedPolicy::Edf, &be), Some(1));
+        // Deadline tie → admission order.
+        let t = now_plus(300);
+        let tied = vec![(7u64, t), (3u64, t)];
+        assert_eq!(pick_prefill(SchedPolicy::Edf, &tied), Some(1));
     }
 
     /// The default CoreConfig reproduces the historical hard-coded

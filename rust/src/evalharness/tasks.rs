@@ -32,16 +32,18 @@ pub fn load_task(task: &str) -> Result<Vec<TaskSample>> {
 }
 
 /// Greedy generation through the serving path: prefill into a
-/// device-resident [`GenState`](crate::runtime::decode::GenState), then
-/// advance token by token.
+/// device-resident [`GenState`](crate::runtime::decode::GenState) —
+/// chunked ingestion when the prompt exceeds the bucketed prefill
+/// ([`DecodeSession::begin_prompt`]), so long prompts evaluate for real
+/// instead of being skipped — then advance token by token.
 pub fn generate(session: &DecodeSession, tok: &Tokenizer, prompt: &str,
                 max_new: usize, mode: EstMode) -> Result<(String, f64)> {
     let prompt_ids = tok.encode(prompt);
     if prompt_ids.is_empty() {
         bail!("empty prompt");
     }
-    session.prefill_bucket(prompt_ids.len()).context("prompt too long")?;
-    let (mut gen, logits) = session.begin(&prompt_ids)?;
+    let (mut gen, logits) =
+        session.begin_prompt(&prompt_ids).context("prompt ingestion")?;
     let mut next = DecodeSession::argmax(&logits)?;
     let mut out_ids = vec![next];
     for _ in 1..max_new {
@@ -115,9 +117,18 @@ pub struct TaskResult {
     pub accuracy: f64,
     pub n: usize,
     pub effective_bits: f64,
+    /// Samples that did NOT evaluate (generation error or unparseable
+    /// gold answer).  The old code silently `continue`d past long
+    /// prompts, biasing downstream-task numbers toward short ones; with
+    /// chunked prefill those evaluate for real, and any residual skip is
+    /// visible here instead of silent (the artifact-gated eval test
+    /// asserts zero).
+    pub skipped: usize,
 }
 
-/// Exact-match accuracy of `session` on a task eval set.
+/// Exact-match accuracy of `session` on a task eval set.  Every skipped
+/// sample is COUNTED ([`TaskResult::skipped`]) — a skip changes the
+/// denominator, so hiding it silently biases the reported accuracy.
 pub fn eval_task(session: &DecodeSession, tok: &Tokenizer, task: &str,
                  limit: usize, mode: EstMode) -> Result<TaskResult> {
     let samples = load_task(task)?;
@@ -125,10 +136,14 @@ pub fn eval_task(session: &DecodeSession, tok: &Tokenizer, task: &str,
     let mut correct = 0usize;
     let mut eff = 0.0;
     let mut evaluated = 0usize;
+    let mut skipped = 0usize;
     for s in samples.iter().take(n) {
         let gold = match gold_answer(&s.task, &s.answer) {
             Some(g) => g,
-            None => continue,
+            None => {
+                skipped += 1; // unparseable gold answer — data fault
+                continue;
+            }
         };
         let max_new = match task {
             "arith" | "algebra" => 48,
@@ -136,7 +151,13 @@ pub fn eval_task(session: &DecodeSession, tok: &Tokenizer, task: &str,
         };
         let (text, bits) = match generate(session, tok, &s.prompt, max_new, mode) {
             Ok(r) => r,
-            Err(_) => continue, // long prompt: skip (bucketed prefill)
+            Err(_) => {
+                // Post-chunked-prefill this is a real fault (device error,
+                // prompt beyond max_seq), not the routine long-prompt case
+                // the bucketed path used to hit — keep it visible.
+                skipped += 1;
+                continue;
+            }
         };
         evaluated += 1;
         eff += bits;
@@ -145,13 +166,14 @@ pub fn eval_task(session: &DecodeSession, tok: &Tokenizer, task: &str,
         }
     }
     if evaluated == 0 {
-        bail!("no samples evaluated for {task}");
+        bail!("no samples evaluated for {task} ({skipped} skipped)");
     }
     Ok(TaskResult {
         task: task.to_string(),
         accuracy: correct as f64 / evaluated as f64 * 100.0,
         n: evaluated,
         effective_bits: eff / evaluated as f64,
+        skipped,
     })
 }
 

@@ -7,8 +7,10 @@
 //! - L2: JAX model + serving graphs (`python/compile/model.py`), AOT-lowered
 //!   to HLO text by `python/compile/aot.py` — including the batched
 //!   `decode_step_b{2,4,8}` entries behind continuous batching
-//!   (DESIGN.md §Batching) and the `verify_step_g{2,4}` entries behind
-//!   self-speculative decoding (DESIGN.md §Speculation).
+//!   (DESIGN.md §Batching), the `verify_step_g{2,4}` entries behind
+//!   self-speculative decoding (DESIGN.md §Speculation) and the
+//!   `prefill_chunk_{64,128}` entries behind chunked
+//!   scheduler-interleaved prompt ingestion (DESIGN.md §Prefill).
 //! - L3: this crate — loads the HLO artifacts via PJRT ([`runtime`]), owns
 //!   the request path: tokenization ([`tokenizer`]), dynamic per-layer
 //!   precision selection ([`selector`]), QoS adaptation, scheduling and

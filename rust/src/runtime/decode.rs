@@ -28,6 +28,16 @@
 //! `verify_step_g{2,4}` dispatch, and the `runtime::spec` layer turns the
 //! low-bit overlay variant into a free draft model — DESIGN.md
 //! §Speculation.
+//!
+//! Prompt ingestion is a schedulable unit of work too: where the
+//! monolithic `prefill_<P>` graphs build a KV cache from scratch (and cap
+//! the prompt at the largest bucket), the `prefill_chunk_<P>` graphs take
+//! the existing device-resident cache plus a position offset and append P
+//! causal positions — [`DecodeSession::begin_chunked`] +
+//! [`DecodeSession::prefill_advance`] ingest a prompt of any length up to
+//! `max_seq` as a chain of bounded dispatches the serving core interleaves
+//! with decode traffic, one chunk per scheduling round (DESIGN.md
+//! §Prefill).
 
 use std::cell::{Cell, RefCell};
 use std::collections::{BTreeMap, HashMap};
@@ -225,6 +235,14 @@ pub struct DecodeSession {
     pad_kv: RefCell<Option<Rc<PjRtBuffer>>>,
     /// (bucket_size, exe, arg names)
     prefills: Vec<(usize, Arc<Exe>, Vec<String>)>,
+    /// Chunked-prefill entries, ascending bucket size: (P, exe, arg
+    /// names).  Unlike `prefills` these take the EXISTING KV cache plus a
+    /// position offset and append P causal positions (the decode-step KV
+    /// leaf protocol), so a prompt of any length up to `max_seq` ingests
+    /// as a chain of bounded dispatches ([`DecodeSession::prefill_advance`]).
+    /// Empty when the artifacts predate the `prefill_chunk_*` AOT export —
+    /// ingestion then stays on the bucketed [`DecodeSession::begin`].
+    prefill_chunks: Vec<(usize, Arc<Exe>, Vec<String>)>,
     static_bufs: HashMap<String, PjRtBuffer>,
     prefill_bufs: HashMap<String, PjRtBuffer>,
     kv_zero: Vec<f32>,
@@ -354,6 +372,17 @@ impl DecodeSession {
             bail!("no prefill entries for {}", cfg.name);
         }
 
+        // Chunked-prefill entries are optional the same way as the batched
+        // and verify graphs: absent → prompts stay bucket-capped;
+        // present-but-broken → loud failure at load time.
+        let mut prefill_chunks = Vec::new();
+        for p in [64usize, 128] {
+            if let Ok(e) = manifest.entry(&cfg.name, &format!("prefill_chunk_{p}")) {
+                let exe = rt.load(&e)?;
+                prefill_chunks.push((p, exe, e.args.clone()));
+            }
+        }
+
         let stacker = Stacker::new(rt.clone());
 
         // ---- static decode args -------------------------------------------
@@ -413,6 +442,7 @@ impl DecodeSession {
             verifies,
             pad_kv: RefCell::new(None),
             prefills,
+            prefill_chunks,
             static_bufs,
             prefill_bufs,
             kv_zero: vec![0.0; kv_len],
@@ -553,6 +583,35 @@ impl DecodeSession {
             .ok_or_else(|| anyhow!("prompt of {n} tokens exceeds largest bucket"))
     }
 
+    /// Chunked-prefill bucket sizes, ascending (empty when the artifacts
+    /// predate the `prefill_chunk_*` AOT export — prompt ingestion is
+    /// then capped at the largest `prefill_<P>` bucket).
+    pub fn prefill_chunk_buckets(&self) -> Vec<usize> {
+        self.prefill_chunks.iter().map(|(p, _, _)| *p).collect()
+    }
+
+    /// Largest chunked-prefill bucket (0 without chunk artifacts) — the
+    /// per-round ingestion quantum of the serving core's interleaved
+    /// prefill (DESIGN.md §Prefill).
+    pub fn max_prefill_chunk(&self) -> usize {
+        self.prefill_chunks.last().map(|(p, _, _)| *p).unwrap_or(0)
+    }
+
+    /// Largest prompt this session can ingest AND still decode at least
+    /// one token: the largest `prefill_<P>` bucket without chunk
+    /// artifacts, else [`max_chunked_prompt_len`] at the smallest chunk
+    /// granularity (every chunk's *padded* bucket must fit under
+    /// `max_seq` — the chunk graph writes a bucket-sized KV span).
+    pub fn max_prompt_len(&self) -> usize {
+        let bucketed = self.prefills.iter().map(|(p, _, _)| *p).max().unwrap_or(0);
+        match self.prefill_chunks.first() {
+            None => bucketed,
+            Some((c, _, _)) => {
+                max_chunked_prompt_len(self.cfg.max_seq, *c).max(bucketed)
+            }
+        }
+    }
+
     // ---- cached per-step input buffers -----------------------------------
 
     fn rope_buffers(&self, pos: usize) -> Result<Rc<(PjRtBuffer, PjRtBuffer)>> {
@@ -685,6 +744,189 @@ impl DecodeSession {
             },
             logits,
         ))
+    }
+
+    /// Start a generation for CHUNKED prompt ingestion: a zeroed KV cache
+    /// at position 0 that [`DecodeSession::prefill_advance`] extends one
+    /// bounded chunk dispatch at a time — the schedulable alternative to
+    /// the monolithic [`DecodeSession::begin`], with no bucket cap on the
+    /// total prompt length (DESIGN.md §Prefill).  Errors when the
+    /// artifacts predate the `prefill_chunk_*` export.
+    pub fn begin_chunked(&self) -> Result<GenState<'_>> {
+        if self.prefill_chunks.is_empty() {
+            bail!(
+                "artifacts lack prefill_chunk_* entries for {} — re-run the \
+                 AOT export, or keep prompts within the {}-token prefill \
+                 bucket cap",
+                self.cfg.name,
+                self.prefills.iter().map(|(p, _, _)| *p).max().unwrap_or(0)
+            );
+        }
+        self.begin_empty()
+    }
+
+    /// Ingest one prompt chunk (≤ the largest chunk bucket) at the
+    /// generation's current position: ONE `prefill_chunk_<P>` dispatch
+    /// appends `tokens.len()` causal positions to the device-resident KV
+    /// cache and advances `gen.pos` past them.  With `want_logits`
+    /// (the FINAL chunk) the logits after the chunk's last token are
+    /// downloaded and returned — exactly what [`DecodeSession::begin`]
+    /// returns, for the caller to sample token 0 from; without it the
+    /// vocab-sized download is skipped entirely, since intermediate
+    /// chunks' logits are never consulted (on a 16-chunk prompt that is
+    /// 15 avoided device→host logits transfers on the latency-bounded
+    /// interleaved path).
+    ///
+    /// Padding protocol: the chunk pads to the smallest bucket ≥ n; pad
+    /// positions may write stale KV entries past `gen.pos`, which the
+    /// decode graphs mask (`arange(S) <= pos`) and the next chunk or
+    /// decode step overwrites in place — the same stale-but-masked rule
+    /// as speculative rollback, so chunked ingestion is numerically
+    /// invisible downstream (pinned by the jax chain-parity test and the
+    /// Rust `chunked_prefill_matches_bucketed_begin` integration test).
+    /// `steps` is NOT advanced (it counts decode dispatches; the serving
+    /// core keys first-token emission off prefill completion instead).
+    pub fn prefill_advance(&self, gen: &mut GenState<'_>, tokens: &[u32],
+                           want_logits: bool) -> Result<Option<Vec<f32>>> {
+        let n = tokens.len();
+        if n == 0 {
+            bail!("empty prefill chunk");
+        }
+        let (bucket, exe, args) = self
+            .prefill_chunks
+            .iter()
+            .find(|(p, _, _)| *p >= n)
+            .ok_or_else(|| {
+                anyhow!("prefill chunk of {n} tokens exceeds the largest \
+                         chunk bucket {}", self.max_prefill_chunk())
+            })?;
+        let bucket = *bucket;
+        // The chunk graph writes a BUCKET-sized KV span at gen.pos; XLA
+        // clamps dynamic_update_slice starts, so an overhanging write
+        // would silently shift backwards and corrupt earlier positions —
+        // reject it here instead.
+        if gen.pos + bucket > self.cfg.max_seq {
+            bail!("prefill chunk bucket {bucket} at position {} overruns \
+                   max_seq {}", gen.pos, self.cfg.max_seq);
+        }
+        let mut padded: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        padded.resize(bucket, 0);
+        let tok_buf = self.rt.upload_i32(&[bucket], &padded)?;
+        let pos_buf = self.scalar_buffer(gen.pos as i32)?;
+        let nv_buf = self.scalar_buffer(n as i32)?;
+        let half = self.cfg.head_dim() / 2;
+        let mut cos = Vec::with_capacity(bucket * half);
+        let mut sin = Vec::with_capacity(bucket * half);
+        for p in gen.pos..gen.pos + bucket {
+            let (c, s) = self.cfg.rope_tables(p);
+            cos.extend_from_slice(&c);
+            sin.extend_from_slice(&s);
+        }
+        let cos_buf = self.rt.upload_f32(&[bucket, half], &cos)?;
+        let sin_buf = self.rt.upload_f32(&[bucket, half], &sin)?;
+        // Host-KV fallback for tuple-lowered graphs, as in `advance`.
+        let kv_upload = match &gen.kv {
+            KvResidence::Device(_) => None,
+            KvResidence::Host(v) => Some(self.rt.upload_f32(&self.cfg.kv_shape(), v)?),
+        };
+        let mut arg_bufs: Vec<&PjRtBuffer> = Vec::with_capacity(args.len());
+        for name in args {
+            arg_bufs.push(match name.as_str() {
+                "tokens" => &tok_buf,
+                "pos" => &*pos_buf,
+                "n_valid" => &*nv_buf,
+                "cos" => &cos_buf,
+                "sin" => &sin_buf,
+                "kv" => match (&gen.kv, &kv_upload) {
+                    (KvResidence::Device(b), _) => b,
+                    (_, Some(b)) => b,
+                    _ => unreachable!("host kv uploaded above"),
+                },
+                other => self
+                    .prefill_bufs
+                    .get(other)
+                    .ok_or_else(|| anyhow!("missing prefill chunk arg {other}"))?,
+            });
+        }
+        let replica = exe.run_buffers(&arg_bufs).context("prefill chunk")?;
+        let logits = if exe.untupled(&replica) {
+            let ki = exe.output_index("kv")?;
+            let logits = if want_logits {
+                let li = exe.output_index("logits_last")?;
+                self.rt.transfers().count_download();
+                Some(buffer_f32(&replica[li])?)
+            } else {
+                None
+            };
+            for (i, b) in replica.into_iter().enumerate() {
+                if i == ki {
+                    gen.kv = KvResidence::Device(b);
+                }
+            }
+            logits
+        } else {
+            // Tuple fallback decomposes everything host-side anyway.
+            let out = exe.outputs(replica)?;
+            gen.kv = KvResidence::Host(out.f32_vec("kv")?);
+            if want_logits {
+                Some(out.f32_vec("logits_last")?)
+            } else {
+                None
+            }
+        };
+        gen.pos += n;
+        self.rt.transfers().count_prefill_chunk();
+        Ok(logits)
+    }
+
+    /// Full-prompt ingestion through whichever path the artifacts
+    /// support: the bucketed [`DecodeSession::begin`] when the prompt
+    /// fits a `prefill_<P>` bucket (one dispatch), else a chain of
+    /// [`DecodeSession::prefill_advance`] chunks.  One-stop entry for
+    /// callers that don't schedule chunks themselves (eval harnesses,
+    /// CLI `generate`); the serving core drives `prefill_advance`
+    /// directly so chunks interleave with decode traffic.
+    pub fn begin_prompt(&self, prompt: &[u32]) -> Result<(GenState<'_>, Vec<f32>)> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if self.prefill_bucket(prompt.len()).is_ok() {
+            return self.begin(prompt);
+        }
+        if prompt.len() > self.max_prompt_len() {
+            bail!("prompt of {} tokens exceeds max ingestible length {} \
+                   (max_seq {})", prompt.len(), self.max_prompt_len(),
+                  self.cfg.max_seq);
+        }
+        let mut gen = self.begin_chunked()?;
+        let chunk = self.max_prefill_chunk();
+        let n_chunks = (prompt.len() + chunk - 1) / chunk;
+        let mut logits = None;
+        for (i, piece) in prompt.chunks(chunk).enumerate() {
+            logits = self.prefill_advance(&mut gen, piece, i + 1 == n_chunks)?;
+        }
+        let logits = logits
+            .ok_or_else(|| anyhow!("chunked prefill produced no final logits"))?;
+        Ok((gen, logits))
+    }
+
+    /// Placeholder state for a generation whose real KV arrives later —
+    /// the serving core's admission slot on CHUNK-LESS artifacts, where
+    /// the first scheduled ingestion round replaces the whole `GenState`
+    /// via [`DecodeSession::begin`].  No device upload, no host slab
+    /// (unlike [`DecodeSession::begin_empty`], which uploads a full
+    /// zeroed KV cache the bucketed prefill would immediately discard).
+    /// Must not be advanced before replacement; a misuse surfaces as a
+    /// shape-mismatch upload error, never silent corruption.
+    pub fn begin_deferred(&self) -> GenState<'_> {
+        GenState {
+            sel: self.selector_state(),
+            kv: KvResidence::Host(Vec::new()),
+            pos: 0,
+            flag_bufs: HashMap::new(),
+            steps: 0,
+            retargets: 0,
+        }
     }
 
     /// Start a generation from an empty (zeroed) KV cache at position 0 —
@@ -1177,6 +1419,24 @@ pub fn wrap_err(e: impl std::fmt::Display) -> anyhow::Error {
     wrap(e)
 }
 
+/// Largest prompt length ingestible through chunked prefill with chunk
+/// granularity `c` (the smallest chunk bucket) under `max_seq`.  Two
+/// constraints: every chunk's *padded* bucket must fit under `max_seq`
+/// (the chunk graph writes a bucket-sized KV span — rounding the prompt
+/// up to `c` must not overrun), and one decode position must remain so
+/// the first generated token can be fed back (`advance` requires
+/// `pos + 1 < max_seq`).
+pub fn max_chunked_prompt_len(max_seq: usize, c: usize) -> usize {
+    if c == 0 {
+        return 0;
+    }
+    let mut l = max_seq.saturating_sub(2);
+    while l > 0 && (l + c - 1) / c * c > max_seq {
+        l -= 1;
+    }
+    l
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1210,5 +1470,30 @@ mod tests {
                 .unwrap(),
             2
         );
+    }
+
+    /// The chunked-prompt capacity bound: padded buckets must fit under
+    /// max_seq and one decode slot must remain.
+    #[test]
+    fn max_chunked_prompt_len_bounds() {
+        // max_seq a multiple of the granularity: only the decode slot
+        // constrains (512 - 2).
+        assert_eq!(max_chunked_prompt_len(512, 64), 510);
+        // Non-multiple: the last chunk's padding must still fit — 540
+        // rounds 480 < L <= 512 up to 512+ buckets... largest L with
+        // roundup64(L) <= 540 is 512, and 512 <= 538.
+        assert_eq!(max_chunked_prompt_len(540, 64), 512);
+        // Decode-slot bound tighter than the padding bound.
+        assert_eq!(max_chunked_prompt_len(128, 64), 126);
+        // Degenerate inputs.
+        assert_eq!(max_chunked_prompt_len(512, 0), 0);
+        assert_eq!(max_chunked_prompt_len(0, 64), 0);
+        assert_eq!(max_chunked_prompt_len(1, 64), 0);
+        // Every admissible L really is ingestible: padded length fits.
+        for max_seq in [130usize, 512, 700] {
+            let l = max_chunked_prompt_len(max_seq, 64);
+            assert!((l + 63) / 64 * 64 <= max_seq);
+            assert!(l + 1 < max_seq);
+        }
     }
 }

@@ -44,6 +44,7 @@ pub struct TransferStats {
     spec_drafted: AtomicU64,
     spec_accepted: AtomicU64,
     spec_verify_dispatches: AtomicU64,
+    prefill_chunks: AtomicU64,
 }
 
 /// A point-in-time copy of [`TransferStats`].
@@ -84,6 +85,11 @@ pub struct TransferSnapshot {
     /// tokens, so `spec_verify_dispatches / tokens` is the spec-path
     /// analog of dispatch-calls-per-token.
     pub spec_verify_dispatches: u64,
+    /// `prefill_chunk_<P>` device dispatches
+    /// ([`decode::DecodeSession::prefill_advance`]): bounded prompt-
+    /// ingestion units the serving core interleaves with decode steps
+    /// (at most one per scheduling round — DESIGN.md §Prefill).
+    pub prefill_chunks: u64,
 }
 
 impl TransferStats {
@@ -120,6 +126,12 @@ impl TransferStats {
         self.spec_accepted.fetch_add(accepted, Ordering::Relaxed);
     }
 
+    /// Record one `prefill_chunk_<P>` dispatch
+    /// ([`decode::DecodeSession::prefill_advance`]).
+    pub fn count_prefill_chunk(&self) {
+        self.prefill_chunks.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> TransferSnapshot {
         TransferSnapshot {
             uploads: self.uploads.load(Ordering::Relaxed),
@@ -133,6 +145,7 @@ impl TransferStats {
             spec_verify_dispatches: self
                 .spec_verify_dispatches
                 .load(Ordering::Relaxed),
+            prefill_chunks: self.prefill_chunks.load(Ordering::Relaxed),
         }
     }
 }
@@ -380,6 +393,8 @@ mod tests {
         t.count_spec_verify();
         t.count_spec_round(4, 3);
         t.count_spec_round(2, 0);
+        t.count_prefill_chunk();
+        t.count_prefill_chunk();
         let b = t.snapshot();
         assert_eq!(b.uploads_since(&a), 2);
         assert_eq!(b.upload_bytes_since(&a), 192);
@@ -390,5 +405,6 @@ mod tests {
         assert_eq!(b.spec_verify_dispatches - a.spec_verify_dispatches, 1);
         assert_eq!(b.spec_drafted - a.spec_drafted, 6);
         assert_eq!(b.spec_accepted - a.spec_accepted, 3);
+        assert_eq!(b.prefill_chunks - a.prefill_chunks, 2);
     }
 }

@@ -11,7 +11,12 @@
 //! deadline request no longer waits behind a whole best-effort generation
 //! — and requests decoding at the same target share batched device
 //! dispatches (DESIGN.md §Batching), so concurrency costs ~1/B dispatch
-//! overhead instead of scaling it linearly.
+//! overhead instead of scaling it linearly.  Prompt ingestion is
+//! scheduled, not synchronous (DESIGN.md §Prefill): admission allocates
+//! the slot and the core interleaves one prefill chunk per token round,
+//! so a long prompt neither stalls active decodes nor caps at a prefill
+//! bucket — and a rejected admission answers 400 to ITS connection while
+//! the loop keeps serving.
 //!
 //! Endpoints:
 //!   POST /generate  {"prompt": str, "max_new"?: int, "qos_ms_per_token"?: f,
@@ -186,6 +191,13 @@ impl Server {
                             CoreEvent::Failed { id, error } => {
                                 respond(&mut pending, id, error_json(500, &error));
                             }
+                            // Admission rejections surface as terminal
+                            // per-id events when a queue drives the core
+                            // (admit_from); this executor admits directly
+                            // in admit_ready, so the arm is defensive.
+                            CoreEvent::Error { id, error } => {
+                                respond(&mut pending, id, error_json(400, &error));
+                            }
                             CoreEvent::Token { .. } => {}
                         }
                     }
@@ -199,8 +211,11 @@ impl Server {
 }
 
 /// Pull queued requests into the core while it has free slots (pinned
-/// targets bypass the QoS policy).  An admission failure after ingest
-/// validation is a server fault → 500 to the waiting connection.
+/// targets bypass the QoS policy).  Admission is non-blocking (no
+/// prefill runs inside it — the core's step() schedules the chunks), and
+/// a rejection is terminal for THAT connection only: 400 to the waiting
+/// client (over-long prompt past `max_seq`, empty tokenization), while
+/// the executor loop and every in-flight generation keep serving.
 fn admit_ready(core: &mut ServingCore<'_>, queue: &mut RequestQueue,
                pending: &mut HashMap<u64, Pending>, util: &mut UtilizationSim) {
     while core.has_capacity() && !queue.is_empty() {
@@ -217,7 +232,7 @@ fn admit_ready(core: &mut ServingCore<'_>, queue: &mut RequestQueue,
             None => core.admit(r, u),
         };
         if let Err(e) = admitted {
-            respond(pending, id, error_json(500, &format!("{e:#}")));
+            respond(pending, id, error_json(400, &format!("{e:#}")));
         }
     }
 }
@@ -265,8 +280,10 @@ fn ingest(engine: &ServingEngine, core: &ServingCore<'_>,
             ok_json(&j)
         }
         Route::Generate => match parse_generate(id, &work.body) {
-            // Validate the prompt here so admission failures later can be
-            // classified as server faults (500), not client errors.
+            // Cheap client-error screening at ingest; admission re-checks
+            // and any later rejection is still per-connection (400), never
+            // an executor abort.  Prompt LENGTH is not screened: chunked
+            // prefill ingests any prompt up to the model's max_seq.
             Ok((request, _)) if engine.tokenizer.encode(&request.prompt)
                 .is_empty() => error_json(400, "empty prompt"),
             Ok((request, pinned)) => {
