@@ -17,6 +17,10 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 # always runs (and gates that the bench binary builds + executes); the
 # TTFT/ITL serving comparison engages only when DPLLM_ARTIFACTS is set.
 cargo bench --bench prefill_micro
+# Paged-KV-pool microbench: fully artifact-free (drives the real pool
+# accounting with a unit buffer type) — byte vs slot admission and
+# shared-prefix savings; emits results/BENCH_kvpool.json.
+cargo bench --bench kvpool_micro
 # Python L2 gate: the jax-level parity tests (incl. the speculative
 # verify_step_g* vs sequential-decode contract) run whenever a python
 # with jax + pytest is available; a cargo-only environment skips them so

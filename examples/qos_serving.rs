@@ -64,6 +64,10 @@ fn main() -> anyhow::Result<()> {
     // One serialized counter snapshot (transfers + weight cache +
     // batching + speculation) — the same serializer behind GET /metrics.
     println!("{}", engine.counters_report());
+    // Where device memory went: weight cache + paged KV pool budgets
+    // and residency (DESIGN.md §Memory), same object as GET /metrics'
+    // `memory` field.
+    println!("memory: {}", engine.memory_json().dump());
 
     // The memory envelope tightens (another app claimed RAM): swap the
     // adaptation set for a leaner one.  Retired sessions are rebound in

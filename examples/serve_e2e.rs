@@ -76,6 +76,9 @@ fn main() -> anyhow::Result<()> {
     // GET /metrics' `counters` field (transfers + weight cache +
     // batching + speculation).
     println!("[e2e] phase 1 {}", engine.counters_report());
+    // The combined device-memory report (weight cache + paged KV pool —
+    // DESIGN.md §Memory), as served in GET /metrics' `memory` field.
+    println!("[e2e] phase 1 memory {}", engine.memory_json().dump());
     for o in &outcomes {
         println!(
             "[e2e]   req {} target {:.2} eff {:.3} ttft {:.0}ms retargets {}",

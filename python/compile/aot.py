@@ -29,6 +29,15 @@ Exported per model, into ``artifacts/hlo/<model>/``:
                           KV-leaf protocol as decode_step), so a prompt
                           of ANY length ingests as a chain of bounded,
                           schedulable dispatches (DESIGN §Prefill)
+  decode_step_s<S>.hlo.txt   tier variants of decode_step whose KV leaf
+                          is truncated to S ∈ tier_ladder(max_seq) (128,
+                          256, 512, ... — DESIGN §Memory): bitwise the
+                          same computation for pos < S, since the
+                          ``arange(S) <= pos`` mask never reads the
+                          truncated tail, so a short sequence pays KV
+                          bytes proportional to its tier, not max_seq
+  prefill_chunk_<P>_s<S>.hlo.txt  tier variants of prefill_chunk (only
+                          for P <= S), same truncation rule
   anyprec_gemv_<b>.hlo.txt   standalone L1 bitplane-GEMV kernel (b ∈ 3..6)
   jl_estimate.hlo.txt     standalone L1 JL-projection estimator kernel
 
@@ -41,6 +50,7 @@ Usage: python -m compile.aot --model dpl-tiny
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 
 import jax
@@ -58,6 +68,19 @@ PREFILL_BUCKETS = (64, 128, 256)
 PREFILL_CHUNK_BUCKETS = (64, 128)
 BATCH_BUCKETS = (2, 4, 8)
 SPEC_GAMMAS = (2, 4)
+# Smallest KV tier of the paged pool (mirror of rust kvpool::BASE_TIER).
+KV_TIER_BASE = 128
+
+
+def tier_ladder(max_seq: int, base: int = KV_TIER_BASE) -> list[int]:
+    """Doubling KV-length ladder strictly below ``max_seq`` (the full
+    ``max_seq`` graphs are the existing unsuffixed exports).  Mirror of
+    rust ``kvpool::tier_ladder`` minus its final ``max_seq`` rung."""
+    tiers, s = [], max(base, 1)
+    while s < max_seq:
+        tiers.append(s)
+        s *= 2
+    return tiers
 
 
 def to_hlo_text(lowered) -> str:
@@ -537,6 +560,45 @@ def export_model(name: str) -> dict:
             "outputs": ["logits_last", "kv"],
         }
         print(f"[aot:{name}] prefill_chunk_{P}", flush=True)
+
+    # KV tier variants (paged KV pool — DESIGN §Memory): the same decode
+    # step / prefill chunk with the KV leaf truncated to S positions.
+    # The ``arange(S) <= pos`` mask makes slots past ``pos`` don't-care,
+    # so for pos < S the truncated graphs are bitwise identical to the
+    # full-max_seq ones (pinned by test_aot.py::test_tier_graph_parity) —
+    # a short sequence just stops paying max_seq KV bytes.  The Rust
+    # runtime treats these as optional: absent tiers degrade to the
+    # max_seq graphs.
+    for S in tier_ladder(cfg.max_seq):
+        tcfg = dataclasses.replace(cfg, max_seq=S)
+        specs = decode_arg_specs(tcfg)
+        lowered = jax.jit(make_decode_fn(tcfg)).lower(*[s for _, s in specs])
+        path = io.art(*outdir, f"decode_step_s{S}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(to_hlo_text(lowered))
+        entry["entries"][f"decode_step_s{S}"] = {
+            "path": os.path.relpath(path, io.ART),
+            "args": [n for n, _ in specs],
+            "outputs": decode_output_names(),
+            "k_proj": K_PROJ,
+            "tier": S,
+        }
+        for P in PREFILL_CHUNK_BUCKETS:
+            if P > S:
+                continue
+            specs = prefill_chunk_arg_specs(tcfg, P)
+            lowered = jax.jit(make_prefill_chunk_fn(tcfg, P)).lower(
+                *[s for _, s in specs])
+            path = io.art(*outdir, f"prefill_chunk_{P}_s{S}.hlo.txt")
+            with open(path, "w") as fh:
+                fh.write(to_hlo_text(lowered))
+            entry["entries"][f"prefill_chunk_{P}_s{S}"] = {
+                "path": os.path.relpath(path, io.ART),
+                "args": [n for n, _ in specs],
+                "outputs": ["logits_last", "kv"],
+                "tier": S,
+            }
+        print(f"[aot:{name}] tier s{S} (decode + chunks)", flush=True)
 
     # standalone kernels
     for bits in (3, 4, 5, 6):

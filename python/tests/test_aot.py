@@ -495,3 +495,136 @@ def test_verify_lowering_parses_back():
     mod = xc._xla.hlo_module_from_text(text)
     assert mod is not None
     assert len(mod.as_serialized_hlo_module_proto()) > 1000
+
+
+# ---------------------------------------------------------------------------
+# KV tier graphs (paged KV pool — DESIGN §Memory).
+# ---------------------------------------------------------------------------
+
+
+def _decode_vals(cfg, params, token, pos, seed=9):
+    """Full decode-step input dict (incl. RoPE tables for ``pos`` and a
+    random non-zero KV) — `_decode_args` above predates the cos/sin
+    arguments and omits them, so the tier tests build their own."""
+    nl = nonlinear_params(params)
+    lin = extract_linears(params)
+    rng = np.random.default_rng(seed)
+    hd = cfg.head_dim
+    inv = 1.0 / (10000.0 ** (np.arange(0, hd, 2) / hd))
+    vals = {
+        "token": np.int32(token), "pos": np.int32(pos),
+        "cos": np.cos(pos * inv).astype(np.float32),
+        "sin": np.sin(pos * inv).astype(np.float32),
+        "kv": (rng.standard_normal(kv_shape(cfg)) * 0.01).astype(np.float32),
+        "tok_emb": nl["tok_emb"], "out_head": nl["out_head"],
+        "final_norm": nl["final_norm"], "ln1": nl["ln1"], "ln2": nl["ln2"],
+        "mode_exact": np.float32(0.0),
+    }
+    L = cfg.n_layers
+    for g in GROUPS:
+        o, i = cfg.group_shape(g)
+        w = np.asarray(lin[g])
+        vals[f"wl_{g}"] = (w * 0.9).astype(np.float32)
+        vals[f"wh_{g}"] = w
+        vals[f"G_{g}"] = (rng.standard_normal((L, K_PROJ, i)) * 0.05
+                          ).astype(np.float32)
+        vals[f"lina_{g}"] = rng.random(L).astype(np.float32)
+        vals[f"linb_{g}"] = rng.random(L).astype(np.float32) * 0.1
+        vals[f"uselin_{g}"] = (rng.random(L) < 0.5).astype(np.float32)
+        vals[f"thr_{g}"] = (rng.random(L) * 0.5).astype(np.float32)
+    for g in ASYNC_GROUPS:
+        vals[f"useh_{g}"] = (rng.random(L) < 0.5).astype(np.float32)
+    return vals
+
+
+def test_tier_ladder_doubles_below_max_seq():
+    from compile.aot import tier_ladder
+    assert tier_ladder(640) == [128, 256, 512]
+    assert tier_ladder(128) == []
+    assert tier_ladder(16, base=4) == [4, 8]
+
+
+def test_tier_decode_matches_full_graph_bitwise():
+    """THE tier-truncation contract: for pos < S, ``decode_step_s{S}``
+    must be BITWISE identical to the full-max_seq graph on the same
+    prefix — the ``arange(S) <= pos`` mask zeroes every slot past pos
+    exactly (−1e30 → softmax weight 0.0), so truncating the tail can
+    change nothing.  The Rust KvPool relies on this to run short
+    sequences in small tiers and migrate by plain zero-pad."""
+    import dataclasses
+    S, pos = 8, 5
+    tcfg = dataclasses.replace(CFG, max_seq=S)
+    params = init_params(CFG, seed=0)
+    vals = _decode_vals(CFG, params, token=3, pos=pos)
+    tvals = dict(vals)
+    tvals["kv"] = vals["kv"][:, :, :, :S]
+
+    names = [n for n, _ in decode_arg_specs(CFG)]
+    fout = jax.jit(make_decode_fn(CFG))(
+        *[jnp.asarray(vals[n]) for n in names])
+    tout = jax.jit(make_decode_fn(tcfg))(
+        *[jnp.asarray(tvals[n]) for n in names])
+    fmap = dict(zip(decode_output_names(), fout))
+    tmap = dict(zip(decode_output_names(), tout))
+    np.testing.assert_array_equal(np.asarray(tmap["logits"]),
+                                  np.asarray(fmap["logits"]))
+    # The written prefix of the KV leaf is identical too (the tail the
+    # tier dropped was pass-through in the full graph).
+    np.testing.assert_array_equal(np.asarray(tmap["kv"]),
+                                  np.asarray(fmap["kv"])[:, :, :, :S])
+    for g in GROUPS:
+        np.testing.assert_array_equal(np.asarray(tmap[f"useh_{g}"]),
+                                      np.asarray(fmap[f"useh_{g}"]))
+
+
+def test_tier_migration_zero_pad_matches_max_from_birth():
+    """THE migration contract: growing a tier-S KV to max_seq by plain
+    zero-padding dim 3, then decoding on the full graph, must equal
+    having run at max_seq from birth — tail slots are don't-care under
+    the mask, so migration is a buffer copy, not a recompute."""
+    import dataclasses
+    S, C, n_prompt = 8, 4, 6
+    tcfg = dataclasses.replace(CFG, max_seq=S)
+    params = init_params(CFG, seed=1)
+    nl = nonlinear_params(params)
+    lin = extract_linears(params)
+    rng = np.random.default_rng(4)
+    toks = rng.integers(0, CFG.vocab, size=8).astype(np.int32)
+    toks[n_prompt:] = 0
+
+    def ingest(cfg):
+        kv = jnp.zeros(kv_shape(cfg), jnp.float32)
+        for c0, nv in ((0, 4), (4, 2)):
+            cos_c, sin_c = _rope_tables(c0, C)
+            _, kv = prefill_chunk(
+                nl, lin, cfg, jnp.asarray(toks[c0:c0 + C]), jnp.int32(c0),
+                jnp.int32(nv), jnp.asarray(cos_c), jnp.asarray(sin_c), kv)
+        return np.asarray(kv)
+
+    kv_tier = ingest(tcfg)
+    kv_birth = ingest(CFG)
+    # Migrate: zero-pad the sequence dim (exactly rust host_grow /
+    # kv_cast_hlo_text).
+    pad = [(0, 0)] * 5
+    pad[3] = (0, CFG.max_seq - S)
+    kv_migrated = np.pad(kv_tier, pad)
+
+    names = [n for n, _ in decode_arg_specs(CFG)]
+    vals = _decode_vals(CFG, params, token=3, pos=n_prompt)
+    step = jax.jit(make_decode_fn(CFG))
+    vals["kv"] = kv_birth
+    lo_birth = np.asarray(step(*[jnp.asarray(vals[n]) for n in names])[0])
+    vals["kv"] = kv_migrated
+    lo_migrated = np.asarray(step(*[jnp.asarray(vals[n]) for n in names])[0])
+    np.testing.assert_array_equal(lo_migrated, lo_birth)
+
+
+def test_tier_lowering_parses_back():
+    import dataclasses
+    tcfg = dataclasses.replace(CFG, max_seq=8)
+    specs = decode_arg_specs(tcfg)
+    lowered = jax.jit(make_decode_fn(tcfg)).lower(*[s for _, s in specs])
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text
+    mod = xc._xla.hlo_module_from_text(text)
+    assert mod is not None

@@ -1,0 +1,229 @@
+//! Paged-KV-pool admission microbench (DESIGN.md §Memory).
+//!
+//! Entirely artifact-free: both parts drive the REAL [`KvPool`]
+//! accounting (charge / migrate_charge / release / prefix cache) with a
+//! unit buffer type — no device, no model, so it runs in every CI.
+//!
+//! Part 1 — byte-based admission vs worst-case slot admission at the
+//! SAME byte budget (4 × max_seq worth of KV), on a short-request-
+//! dominated workload (90% of requests finish under the 128-token base
+//! tier, 10% run to ~max_seq).  Slot admission reserves max_seq bytes
+//! per request from birth; tier admission charges the smallest covering
+//! tier and grows by ladder migration, so short requests stop paying for
+//! KV they never touch.  Reported: mean admitted concurrency and
+//! makespan for each policy — the acceptance bar is ≥ 2× concurrency
+//! for the tiered pool.
+//!
+//! Part 2 — shared-prefix prefill savings at shared ratios {0, 0.5,
+//! 0.9}: N requests with a 300-token prompt, chunked at 128, so each
+//! cold prefill costs 3 chunk dispatches and a prefix hit (quantized to
+//! 256 tokens) saves 2 of them.  Uses the pool's real prefix cache
+//! (first-writer-wins insert, quantized lookup).  Reported: chunk
+//! dispatches with/without the cache and the saved fraction of
+//! *prefix* chunks for the sharing group — (N−1)/N when every sharer
+//! hits.
+//!
+//! Results land in `results/BENCH_kvpool.json`.
+
+use dp_llm::bench_support as bs;
+use dp_llm::runtime::kvpool::{self, KvPool, BASE_TIER};
+use dp_llm::util::json::Json;
+
+/// dpl-tiny KV byte cost of one sequence position:
+/// n_layers(8) · 2 · n_heads(8) · head_dim(32) · 4 B.
+const BYTES_PER_TOKEN: usize = 8 * 2 * 8 * 32 * 4;
+const MAX_SEQ: usize = 640;
+/// Budget = worst-case KV of this many concurrent requests.
+const BUDGET_SLOTS: usize = 4;
+const N_REQUESTS: usize = 200;
+
+/// Deterministic short-dominated workload: request i's total sequence
+/// length (prompt + output).  Every 10th request is long (~max_seq);
+/// the rest finish inside the base tier.
+fn req_len(i: usize) -> usize {
+    if i % 10 == 4 { 600 } else { 48 + (i * 13) % 80 }
+}
+
+struct Active {
+    len: usize,
+    pos: usize,
+    tier: usize,
+}
+
+/// Discrete-time serving sim against the real pool accounting: one
+/// token per active request per step, admission refills from the queue
+/// each step, tier requests migrate up the ladder on overflow (stalling
+/// one step when the pool is too full to grow — backpressure, not
+/// failure).  Returns (mean concurrency, makespan steps, peak in_use).
+fn run_sim(tiered: bool) -> (f64, usize, usize) {
+    let budget = BUDGET_SLOTS * MAX_SEQ * BYTES_PER_TOKEN;
+    let ladder = kvpool::tier_ladder(MAX_SEQ, BASE_TIER);
+    let mut pool: KvPool<()> = KvPool::new(budget, BYTES_PER_TOKEN);
+    let mut next = 0usize;
+    let mut active: Vec<Active> = Vec::new();
+    let mut steps = 0usize;
+    let mut occupancy_sum = 0usize;
+    let mut peak = 0usize;
+    while next < N_REQUESTS || !active.is_empty() {
+        // Admission: smallest covering tier (tiered) or max_seq (slots).
+        while next < N_REQUESTS {
+            let len = req_len(next);
+            let birth = if tiered {
+                kvpool::tier_for(&ladder, len.min(BASE_TIER)).unwrap_or(MAX_SEQ)
+            } else {
+                MAX_SEQ
+            };
+            if pool.charge(birth).is_err() {
+                break;
+            }
+            active.push(Active { len, pos: 0, tier: birth });
+            next += 1;
+        }
+        steps += 1;
+        occupancy_sum += active.len();
+        peak = peak.max(pool.in_use_bytes());
+        let mut i = 0;
+        while i < active.len() {
+            let a = &mut active[i];
+            if a.pos >= a.tier && a.tier < MAX_SEQ {
+                // Ladder migration; a full pool stalls the request one
+                // step instead of failing it.
+                let to = kvpool::tier_for(&ladder, a.pos + 1).unwrap_or(MAX_SEQ);
+                if pool.migrate_charge(a.tier, to).is_err() {
+                    i += 1;
+                    continue;
+                }
+                a.tier = to;
+            }
+            a.pos += 1;
+            if a.pos >= a.len {
+                pool.release(a.tier, Some(()));
+                active.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+    }
+    (occupancy_sum as f64 / steps.max(1) as f64, steps, peak)
+}
+
+/// Shared-prefix prefill sim at one sharing ratio: returns (dispatches
+/// with cache, dispatches without, prefix hits, saved prefix-chunk
+/// fraction within the sharing group).
+fn run_prefix(n: usize, ratio: f64) -> (usize, usize, usize, f64) {
+    let budget = BUDGET_SLOTS * MAX_SEQ * BYTES_PER_TOKEN;
+    let ladder = kvpool::tier_ladder(MAX_SEQ, BASE_TIER);
+    let mut pool: KvPool<()> = KvPool::new(budget, BYTES_PER_TOKEN);
+    let chunk = 128usize;
+    let prompt_len = 300usize;
+    let total_chunks = (prompt_len + chunk - 1) / chunk;
+    let n_shared = (n as f64 * ratio).round() as usize;
+    let shared_ids = vec![7u32; prompt_len];
+    let tier = kvpool::tier_for(&ladder, prompt_len).unwrap_or(MAX_SEQ);
+
+    let (mut with_cache, mut hits) = (0usize, 0usize);
+    for i in 0..n {
+        let ids = if i < n_shared {
+            shared_ids.clone()
+        } else {
+            let mut u = shared_ids.clone();
+            u[0] = 1000 + i as u32; // unique head -> distinct prefix key
+            u
+        };
+        if let Some(hit) = pool.prefix_lookup("m:4.00", &ids, chunk) {
+            hits += 1;
+            with_cache += total_chunks - hit.len / chunk;
+            continue;
+        }
+        with_cache += total_chunks;
+        if let Some(q) = kvpool::prefix_quantize(prompt_len, chunk) {
+            pool.prefix_insert("m:4.00", &ids, q, tier,
+                               std::rc::Rc::new(()));
+        }
+    }
+    let without = n * total_chunks;
+    let q_chunks = kvpool::prefix_quantize(prompt_len, chunk).unwrap() / chunk;
+    let saved_shared = if n_shared > 1 {
+        ((n_shared - 1) * q_chunks) as f64 / (n_shared * q_chunks) as f64
+    } else {
+        0.0
+    };
+    (with_cache, without, hits, saved_shared)
+}
+
+fn main() {
+    let mut rows = Vec::new();
+
+    // ---- Part 1: byte-based vs slot-based admission -----------------------
+    let (slot_conc, slot_steps, slot_peak) = run_sim(false);
+    let (tier_conc, tier_steps, tier_peak) = run_sim(true);
+    let speedup = tier_conc / slot_conc.max(1e-9);
+    println!(
+        "admission @ {} B budget ({BUDGET_SLOTS} max-seq slots), \
+         {N_REQUESTS} reqs (90% short):",
+        BUDGET_SLOTS * MAX_SEQ * BYTES_PER_TOKEN
+    );
+    println!(
+        "  slot-based: mean concurrency {slot_conc:6.2}, makespan \
+         {slot_steps:>5} steps, peak {slot_peak} B"
+    );
+    println!(
+        "  tier-based: mean concurrency {tier_conc:6.2}, makespan \
+         {tier_steps:>5} steps, peak {tier_peak} B   ({speedup:.2}x \
+         concurrency)"
+    );
+    rows.push(vec![
+        "admission: slot → tier mean concurrency".into(),
+        format!("{slot_conc:.2} → {tier_conc:.2} ({speedup:.2}x)"),
+    ]);
+
+    let mut adm = Json::obj();
+    adm.set("budget_bytes", (BUDGET_SLOTS * MAX_SEQ * BYTES_PER_TOKEN) as i64)
+        .set("requests", N_REQUESTS)
+        .set("slot_mean_concurrency", slot_conc)
+        .set("slot_makespan_steps", slot_steps)
+        .set("tier_mean_concurrency", tier_conc)
+        .set("tier_makespan_steps", tier_steps)
+        .set("concurrency_speedup", speedup);
+
+    // ---- Part 2: shared-prefix prefill savings ----------------------------
+    let mut prefix_rows = Vec::new();
+    for ratio in [0.0, 0.5, 0.9] {
+        let n = 60;
+        let (with_cache, without, hits, saved_shared) = run_prefix(n, ratio);
+        let saved = 1.0 - with_cache as f64 / without.max(1) as f64;
+        println!(
+            "prefix ratio {ratio:.1}: {without} chunks cold -> {with_cache} \
+             with cache ({hits} hits, {:.0}% total saved, shared-group \
+             prefix chunks {:.0}% saved)",
+            saved * 100.0,
+            saved_shared * 100.0
+        );
+        let mut o = Json::obj();
+        o.set("shared_ratio", ratio)
+            .set("requests", n)
+            .set("chunks_without_cache", without)
+            .set("chunks_with_cache", with_cache)
+            .set("prefix_hits", hits)
+            .set("total_chunk_fraction_saved", saved)
+            .set("shared_prefix_chunk_fraction_saved", saved_shared);
+        prefix_rows.push(o);
+        rows.push(vec![
+            format!("prefix ratio {ratio:.1}: chunk dispatches"),
+            format!("{without} → {with_cache} ({hits} hits)"),
+        ]);
+    }
+
+    let mut j = Json::obj();
+    j.set("bench", "kvpool");
+    j.set("bytes_per_token", BYTES_PER_TOKEN as i64);
+    j.set("admission", adm);
+    j.set("prefix", Json::Arr(prefix_rows));
+    let _ = std::fs::create_dir_all("results");
+    let _ = std::fs::write("results/BENCH_kvpool.json", j.dump());
+    println!("wrote results/BENCH_kvpool.json");
+
+    bs::emit("kvpool_micro",
+             "Paged KV pool (byte admission + shared-prefix cache)",
+             &["case", "value"], &rows);
+}

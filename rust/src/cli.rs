@@ -23,11 +23,14 @@ USAGE: dpllm <subcommand> [--flags]
   generate   --model M --target T --prompt P [--max-new N] [--budget B]
   serve      --model M [--addr HOST:PORT] [--targets 3.50,4.00,4.50] [--budget B]
              [--reselect-every N] [--gamma-cap N] [--no-spec] [--no-batch]
-             [--eos-token ID]
+             [--eos-token ID] [--kv-budget BYTES]
              (speculative decoding + re-selection cadence knobs; env
              equivalents DPLLM_RESELECT_EVERY / DPLLM_GAMMA_CAP /
              DPLLM_NO_SPEC / DPLLM_NO_BATCH; --eos-token 258 stops
-             generations at the byte tokenizer's <eos> on every path)
+             generations at the byte tokenizer's <eos> on every path;
+             --kv-budget caps the paged KV pool in bytes — accepts k/m/g
+             suffixes, e.g. --kv-budget 64m; env DPLLM_KV_BUDGET_BYTES.
+             DPLLM_NO_PREFIX_CACHE=1 disables the shared-prefix cache)
   eval-ppl   --model M --method dpllm|hawq_v2|llm_mq|uniform --target T
              [--dataset synthwiki|synthweb] [--budget B] [--tokens N] [--exact]
   eval-task  --model M --task arith|listfn|dates|algebra --target T [--budget B]
@@ -97,6 +100,12 @@ fn serve(args: &Args) -> Result<()> {
         .map(|t| format!("{:.2}", t.trim().parse::<f64>().unwrap_or(4.0)))
         .collect();
     let tag_refs: Vec<&str> = tags.iter().map(String::as_str).collect();
+    // KV pool byte budget: the flag wins over DPLLM_KV_BUDGET_BYTES by
+    // setting it before the engine (and its pool) loads.
+    if let Some(b) = args.get("kv-budget") {
+        let bytes = crate::runtime::kvpool::parse_bytes(b)?;
+        std::env::set_var("DPLLM_KV_BUDGET_BYTES", bytes.to_string());
+    }
     let rt = Arc::new(Runtime::new()?);
     let engine = ServingEngine::load(&rt, &model, budget, &tag_refs)?;
     eprintln!("[serve] adaptation set: {:?}", engine.targets());

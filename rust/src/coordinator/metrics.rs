@@ -8,6 +8,7 @@
 use std::sync::Mutex;
 
 use crate::anyprec::materialize::MatSnapshot;
+use crate::runtime::kvpool::MemoryStats;
 use crate::runtime::TransferSnapshot;
 use crate::util::json::Json;
 use crate::util::stats::{mean, percentile};
@@ -38,6 +39,10 @@ pub fn counters_json(ts: &TransferSnapshot, ws: &MatSnapshot) -> Json {
             ts.spec_accepted as f64 / ts.spec_drafted.max(1) as f64,
         )
         .set("prefill_chunks", ts.prefill_chunks as i64)
+        .set("kv_bytes_resident", ts.kv_bytes_resident as i64)
+        .set("kv_migrations", ts.kv_migrations as i64)
+        .set("prefix_hits", ts.prefix_hits as i64)
+        .set("prefix_prefills_saved", ts.prefix_prefills_saved as i64)
         .set("weight_cache_hits", ws.hits as i64)
         .set("weight_cache_misses", ws.misses as i64)
         .set("weight_cache_evictions", ws.evictions as i64)
@@ -68,6 +73,31 @@ pub fn counters_report(ts: &TransferSnapshot, ws: &MatSnapshot) -> String {
         ws.misses,
         ws.bytes_dequantized as f64 / 1e6,
     )
+}
+
+/// The combined device-memory report: where every resident byte lives
+/// (weight cache vs KV tiers vs cached prefixes) next to its budget.
+/// One object shared by `GET /metrics`' `memory` field, the engine's
+/// `counters_json` and the serve examples — `-1` budgets mean
+/// "unbounded" (no `DPLLM_KV_BUDGET_BYTES` / cache cap set).
+pub fn memory_json(ws: &MatSnapshot, kv: &MemoryStats) -> Json {
+    let budget = |b: usize| if b == usize::MAX { -1i64 } else { b as i64 };
+    let mut j = Json::obj();
+    j.set("weight_cache_resident_bytes", ws.resident_bytes as i64)
+        .set("weight_cache_entries", ws.entries as i64)
+        .set("kv_budget_bytes", budget(kv.budget))
+        .set("kv_in_use_bytes", kv.in_use as i64)
+        .set("kv_free_bytes", kv.free as i64)
+        .set("kv_prefix_bytes", kv.prefix as i64)
+        .set("kv_prefix_budget_bytes", budget(kv.prefix_budget))
+        .set("kv_prefix_entries", kv.prefix_entries as i64)
+        .set("kv_tier_reuses", kv.reuses as i64)
+        .set("kv_prefix_evictions", kv.prefix_evictions as i64)
+        .set(
+            "total_resident_bytes",
+            (ws.resident_bytes + kv.in_use + kv.free + kv.prefix) as i64,
+        );
+    j
 }
 
 #[derive(Debug, Clone)]
@@ -216,6 +246,8 @@ mod tests {
             batched_steps: 4, batch_occupancy: 10,
             spec_drafted: 8, spec_accepted: 6, spec_verify_dispatches: 2,
             prefill_chunks: 3,
+            kv_bytes_resident: 1024, kv_migrations: 2,
+            prefix_hits: 3, prefix_prefills_saved: 6,
         };
         let ws = MatSnapshot {
             hits: 5, misses: 3, evictions: 1, bytes_dequantized: 1 << 20,
@@ -239,10 +271,56 @@ mod tests {
             batched_steps: 0, batch_occupancy: 0,
             spec_drafted: 0, spec_accepted: 0, spec_verify_dispatches: 0,
             prefill_chunks: 0,
+            kv_bytes_resident: 0, kv_migrations: 0,
+            prefix_hits: 0, prefix_prefills_saved: 0,
         };
         let j = counters_json(&zero, &ws);
         assert_eq!(j.f64_of("spec_acceptance_rate").unwrap(), 0.0);
         assert_eq!(j.f64_of("mean_batch_occupancy").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn counters_json_carries_kv_pool_family() {
+        let ts = TransferSnapshot {
+            uploads: 0, upload_bytes: 0, downloads: 0, assemblies: 0,
+            batched_steps: 0, batch_occupancy: 0,
+            spec_drafted: 0, spec_accepted: 0, spec_verify_dispatches: 0,
+            prefill_chunks: 0,
+            kv_bytes_resident: 4096, kv_migrations: 3,
+            prefix_hits: 2, prefix_prefills_saved: 5,
+        };
+        let ws = MatSnapshot::default();
+        let j = counters_json(&ts, &ws);
+        assert_eq!(j.f64_of("kv_bytes_resident").unwrap(), 4096.0);
+        assert_eq!(j.f64_of("kv_migrations").unwrap(), 3.0);
+        assert_eq!(j.f64_of("prefix_hits").unwrap(), 2.0);
+        assert_eq!(j.f64_of("prefix_prefills_saved").unwrap(), 5.0);
+    }
+
+    #[test]
+    fn memory_json_totals_and_unbounded_budgets() {
+        let ws = MatSnapshot {
+            hits: 0, misses: 0, evictions: 0, bytes_dequantized: 0,
+            resident_bytes: 1000, entries: 2,
+        };
+        let kv = MemoryStats {
+            budget: 8000, in_use: 300, free: 200, prefix: 100,
+            prefix_budget: 2000, prefix_entries: 1,
+            reuses: 4, prefix_evictions: 1,
+        };
+        let j = memory_json(&ws, &kv);
+        assert_eq!(j.f64_of("kv_budget_bytes").unwrap(), 8000.0);
+        assert_eq!(j.f64_of("kv_in_use_bytes").unwrap(), 300.0);
+        assert_eq!(j.f64_of("total_resident_bytes").unwrap(), 1600.0);
+        assert_eq!(j.f64_of("kv_tier_reuses").unwrap(), 4.0);
+        // An unbounded pool serializes its budgets as -1, not usize::MAX.
+        let unbounded = MemoryStats {
+            budget: usize::MAX, prefix_budget: usize::MAX,
+            ..MemoryStats::default()
+        };
+        let j = memory_json(&ws, &unbounded);
+        assert_eq!(j.f64_of("kv_budget_bytes").unwrap(), -1.0);
+        assert_eq!(j.f64_of("kv_prefix_budget_bytes").unwrap(), -1.0);
     }
 
     #[test]

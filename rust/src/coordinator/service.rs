@@ -48,19 +48,23 @@
 //! keeps draining — one bad prompt can no longer abort the serving loop
 //! with every in-flight request.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::rc::Rc;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use super::metrics::{counters_json, counters_report, MetricsRegistry, RequestRecord};
+use super::metrics::{counters_json, counters_report, memory_json, MetricsRegistry,
+                     RequestRecord};
 use super::qos::{AdaptationPolicy, UtilizationSim};
 use super::sched::{Request, RequestQueue, SchedPolicy};
 use crate::anyprec::materialize::MatSnapshot;
 use crate::evalharness::{build_session_with_cache, engine_config_for, Method};
 use crate::model::{art, Manifest, ModelAssets};
 use crate::runtime::decode::{DecodeSession, EstMode, GenState, SwapReport, WeightCache};
+use crate::runtime::kvpool::{self, KvPool, SharedKvPool};
 use crate::runtime::spec::{spec_eligible, spec_round, truncate_at_eos,
                            GammaController, SpecState, MAX_SPEC_CATCHUP};
 use crate::runtime::Runtime;
@@ -198,11 +202,37 @@ pub enum CoreEvent {
     /// generation was evicted so the rest of the active set keeps
     /// serving.
     Failed { id: u64, error: String },
-    /// Admission rejected (empty tokenization, over-long prompt,
-    /// capacity race): terminal for `id`, which never held a slot.  The
-    /// serving loop keeps draining — see [`ServingCore::admit_from`] and
-    /// [`ServingCore::admit_rejects`].
-    Error { id: u64, error: String },
+    /// Admission rejected: terminal for `id`, which never held a slot.
+    /// The serving loop keeps draining — see [`ServingCore::admit_from`]
+    /// and [`ServingCore::admit_rejects`].  `capacity` distinguishes the
+    /// two reject families for transport-level status mapping: `true`
+    /// means the request was fine but the core was full (slot cap or KV
+    /// pool exhausted — retryable, HTTP 503), `false` means the request
+    /// itself was malformed (empty tokenization, over-long prompt —
+    /// HTTP 400).
+    Error { id: u64, error: String, capacity: bool },
+}
+
+/// Typed admission error for the slot-cap reject, so transports can
+/// classify it (alongside [`kvpool::PoolExhausted`]) as retryable
+/// capacity pressure rather than a malformed request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CoreAtCapacity(pub usize);
+
+impl std::fmt::Display for CoreAtCapacity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "core at capacity ({} slots)", self.0)
+    }
+}
+
+impl std::error::Error for CoreAtCapacity {}
+
+/// Is this admission error a capacity reject (full core or exhausted KV
+/// pool) rather than a malformed request?  Capacity rejects are
+/// transient: the same request can succeed once load drains, so
+/// transports map them to 503 + `Retry-After` instead of 400.
+pub fn is_capacity_reject(e: &anyhow::Error) -> bool {
+    e.is::<CoreAtCapacity>() || e.is::<kvpool::PoolExhausted>()
 }
 
 /// One model + its adaptation set, ready to serve.
@@ -219,6 +249,11 @@ pub struct ServingEngine {
     /// uploads once no matter how many targets use it, and
     /// [`ServingEngine::reconfigure`] rebinds are delta-materialized.
     weights: WeightCache,
+    /// Byte-budgeted KV pool shared by every session of the adaptation
+    /// set (tier free lists + shared-prefix cache — DESIGN.md §Memory).
+    /// Budget from `DPLLM_KV_BUDGET_BYTES` (CLI `--kv-budget`), else
+    /// unbounded: accounting runs but admission never rejects on bytes.
+    kv_pool: SharedKvPool,
     rt: Arc<Runtime>,
     /// Retained so [`ServingEngine::reconfigure`] rebinds without
     /// re-reading the packed store from disk (the store itself is an
@@ -248,6 +283,21 @@ impl ServingEngine {
         if sessions.is_empty() {
             return Err(anyhow!("no configurations loaded"));
         }
+        // One byte-budgeted KV pool for the whole adaptation set (every
+        // session shares the model's KV geometry, so bytes-per-token is
+        // uniform).  The prefix-cache tag is model:target — different
+        // precision targets prefill through different weight stacks and
+        // must never share prefix KV.
+        let first = sessions.values().next().expect("nonempty");
+        let kv_len: usize = first.cfg.kv_shape().iter().product();
+        let bytes_per_token = kv_len / first.cfg.max_seq.max(1) * 4;
+        let kv_budget = kvpool::budget_from_env().unwrap_or(usize::MAX);
+        let kv_pool: SharedKvPool =
+            Rc::new(RefCell::new(KvPool::new(kv_budget, bytes_per_token)));
+        for (tag, s) in sessions.iter_mut() {
+            let t = format!("{}:{tag}", s.cfg.name);
+            s.set_kv_pool(kv_pool.clone(), &t);
+        }
         // Calibrate the adaptation policy with measured TPOTs.
         let mut options = Vec::new();
         for (target, tag) in &targets {
@@ -263,6 +313,7 @@ impl ServingEngine {
             metrics: MetricsRegistry::new(),
             est_mode: EstMode::Approx,
             weights,
+            kv_pool,
             rt: rt.clone(),
             assets,
             manifest,
@@ -276,13 +327,45 @@ impl ServingEngine {
         self.weights.borrow().snapshot()
     }
 
+    /// The shared KV pool (tier free lists + prefix cache).
+    pub fn kv_pool(&self) -> &SharedKvPool {
+        &self.kv_pool
+    }
+
+    /// KV pool pressure (`in_use / budget`; 0.0 when unbounded) — the
+    /// signal `costmodel::downshift_for_pressure` turns into admission
+    /// backpressure.
+    pub fn kv_pressure(&self) -> f64 {
+        self.kv_pool.borrow().pressure()
+    }
+
+    /// Cheap byte-admission pre-gate: could the pool hold one more
+    /// generation at its smallest birth tier?  (The authoritative check
+    /// is the charge inside admission itself; this keeps queue-driven
+    /// admission from popping requests it must immediately reject.)
+    pub fn kv_would_admit(&self) -> bool {
+        let s = self.sessions.values().next().expect("nonempty");
+        let tier = s.kv_tiers().first().copied().unwrap_or(s.cfg.max_seq);
+        self.kv_pool.borrow().would_admit(tier)
+    }
+
+    /// The combined "where is device memory going" report: weight-cache
+    /// bytes + KV pool bytes and budgets, one object (surfaced in
+    /// `counters_json`, `GET /metrics` and the serve examples).
+    pub fn memory_json(&self) -> Json {
+        memory_json(&self.weights.borrow().snapshot(),
+                    &self.kv_pool.borrow().stats())
+    }
+
     /// One serialized snapshot of every runtime counter family —
-    /// transfers, weight cache, batching, speculation — via the shared
-    /// serializer (`coordinator::metrics::counters_json`).  Backs the
-    /// `counters` field of `GET /metrics` and the examples' reports.
+    /// transfers, weight cache, batching, speculation, KV pool — via the
+    /// shared serializer (`coordinator::metrics::counters_json`).  Backs
+    /// the `counters` field of `GET /metrics` and the examples' reports.
     pub fn counters_json(&self) -> Json {
-        counters_json(&self.rt.transfers().snapshot(),
-                      &self.weights.borrow().snapshot())
+        let mut j = counters_json(&self.rt.transfers().snapshot(),
+                                  &self.weights.borrow().snapshot());
+        j.set("memory", self.memory_json());
+        j
     }
 
     /// Human-readable one-liner over [`ServingEngine::counters_json`]'s
@@ -373,7 +456,7 @@ impl ServingEngine {
         let mut rep = SwapReport::default();
         let mut failure = None;
         for (tag, ec) in pending {
-            let s = match retired.pop() {
+            let mut s = match retired.pop() {
                 // swap_bits is atomic: on error the session is still fully
                 // on its old configuration, so it goes back under its old
                 // tag below.
@@ -399,6 +482,11 @@ impl ServingEngine {
                     }
                 },
             };
+            // (Re)bind the shared KV pool under the *new* target identity:
+            // prefix-cache keys are per `(model, target)` so a rebound
+            // session never resurrects KV prefilled through other weights.
+            let prefix_tag = format!("{}:{tag}", s.cfg.name);
+            s.set_kv_pool(self.kv_pool.clone(), &prefix_tag);
             self.sessions.insert(tag, s);
         }
         if failure.is_some() {
@@ -761,9 +849,19 @@ pub struct ServingCore<'e> {
     /// Speculative rounds that failed; each failure permanently drops
     /// that request's speculation state (see [`ServingCore::spec_errors`]).
     spec_errors: u64,
-    /// Admissions rejected by [`ServingCore::admit_from`]; each became a
-    /// terminal [`CoreEvent::Error`] and the drain continued.
-    admit_rejects: u64,
+    /// Malformed-request admissions rejected by
+    /// [`ServingCore::admit_from`] (empty tokenization, over-long
+    /// prompt); each became a terminal [`CoreEvent::Error`] and the
+    /// drain continued.
+    admit_rejects_invalid: u64,
+    /// Capacity admissions rejected by [`ServingCore::admit_from`] (core
+    /// full, KV pool exhausted) — transient pressure, mapped to 503 at
+    /// the transport.
+    admit_rejects_capacity: u64,
+    /// Admissions whose target precision was downshifted by KV-pool
+    /// pressure before the request entered the core (the DP-LLM
+    /// precision knob as admission backpressure).
+    admit_downshifts: u64,
     /// Rejection events recorded by [`ServingCore::admit_from`], drained
     /// at the head of the next [`ServingCore::step`].
     rejects: Vec<CoreEvent>,
@@ -791,7 +889,9 @@ impl<'e> ServingCore<'e> {
             config: CoreConfig::from_env(),
             batch_errors: 0,
             spec_errors: 0,
-            admit_rejects: 0,
+            admit_rejects_invalid: 0,
+            admit_rejects_capacity: 0,
+            admit_downshifts: 0,
             rejects: Vec::new(),
             prefill_chunks: 0,
             prefill_stall_ms: 0.0,
@@ -830,7 +930,12 @@ impl<'e> ServingCore<'e> {
     }
 
     pub fn has_capacity(&self) -> bool {
+        // Slot cap AND a cheap KV-pool pre-gate: when the pool cannot
+        // hold even one birth-tier generation, queue-driven admission
+        // stops popping requests it would immediately 503.  The
+        // authoritative byte check is the charge inside admission.
         self.active.len() < self.config.max_active
+            && self.engine.kv_would_admit()
     }
 
     /// Tokens decoded since construction (drives the re-selection
@@ -860,9 +965,29 @@ impl<'e> ServingCore<'e> {
     /// Admission rejections recorded by [`ServingCore::admit_from`]:
     /// each produced a terminal [`CoreEvent::Error`] for its id and the
     /// drain continued — the fault-isolation contract (one bad prompt
-    /// cannot take down the serving loop).
+    /// cannot take down the serving loop).  Sum of the two families.
     pub fn admit_rejects(&self) -> u64 {
-        self.admit_rejects
+        self.admit_rejects_invalid + self.admit_rejects_capacity
+    }
+
+    /// Malformed-request rejections (empty tokenization, over-long
+    /// prompt) — the non-retryable family (HTTP 400 at the transport).
+    pub fn admit_rejects_invalid(&self) -> u64 {
+        self.admit_rejects_invalid
+    }
+
+    /// Capacity rejections (core slots full, KV pool exhausted) — the
+    /// retryable family (HTTP 503 + `Retry-After` at the transport).
+    pub fn admit_rejects_capacity(&self) -> u64 {
+        self.admit_rejects_capacity
+    }
+
+    /// Admissions whose target precision was lowered by
+    /// [`crate::costmodel::downshift_for_pressure`] because the KV pool
+    /// was under pressure at admit time: lower bits finish sooner, so
+    /// their KV bytes drain sooner — backpressure before rejection.
+    pub fn admit_downshifts(&self) -> u64 {
+        self.admit_downshifts
     }
 
     /// Ingestion dispatches this core has scheduled: one per
@@ -915,7 +1040,19 @@ impl<'e> ServingCore<'e> {
     /// [`ServingCore::admit_from`], which converts rejections into
     /// terminal [`CoreEvent::Error`]s instead of propagating them.
     pub fn admit(&mut self, req: Request, utilization: f64) -> Result<u64> {
-        let target = self.engine.policy.select(req.qos, utilization);
+        let mut target = self.engine.policy.select(req.qos, utilization);
+        // KV pressure is a precision signal before it is a reject: a
+        // downshifted request decodes faster, so its KV bytes drain
+        // sooner (the DP-LLM knob as admission backpressure).
+        let pressure = self.engine.kv_pressure();
+        if pressure >= crate::costmodel::DOWNSHIFT_PRESSURE {
+            let shifted = crate::costmodel::downshift_for_pressure(
+                &self.engine.targets(), target, pressure);
+            if shifted != target {
+                self.admit_downshifts += 1;
+                target = shifted;
+            }
+        }
         self.admit_inner(req, target, false)
     }
 
@@ -939,10 +1076,16 @@ impl<'e> ServingCore<'e> {
             match self.admit(r, utilization) {
                 Ok(_) => admitted += 1,
                 Err(e) => {
-                    self.admit_rejects += 1;
+                    let capacity = is_capacity_reject(&e);
+                    if capacity {
+                        self.admit_rejects_capacity += 1;
+                    } else {
+                        self.admit_rejects_invalid += 1;
+                    }
                     self.rejects.push(CoreEvent::Error {
                         id,
                         error: format!("{e:#}"),
+                        capacity,
                     });
                 }
             }
@@ -953,7 +1096,7 @@ impl<'e> ServingCore<'e> {
     fn admit_inner(&mut self, req: Request, target: f64, pinned: bool)
                    -> Result<u64> {
         if !self.has_capacity() {
-            return Err(anyhow!("core at capacity ({})", self.config.max_active));
+            return Err(anyhow::Error::new(CoreAtCapacity(self.config.max_active)));
         }
         let session = self.engine.session_for_target(target);
         let prompt_ids = self.engine.tokenizer.encode(&req.prompt);
@@ -978,10 +1121,17 @@ impl<'e> ServingCore<'e> {
         // replaces the whole GenState via `begin`, so an uploaded zero
         // KV would be discarded unused.  Speculation pairing is deferred
         // to its own ingestion round (`spec_pairing_step`).
-        let gen = if session.max_prefill_chunk() > 0 {
-            session.begin_empty()?
+        let (gen, ingested) = if session.max_prefill_chunk() > 0 {
+            // Shared-prefix fast path: a cached prefix of this prompt
+            // (same model + target) clones its KV zero-copy and the
+            // request starts with those chunks already ingested — N
+            // requests sharing a system prompt pay one chunked prefill.
+            match session.begin_from_prefix(&prompt_ids) {
+                Some((gen, len)) => (gen, len),
+                None => (session.begin_empty()?, 0),
+            }
         } else {
-            session.begin_deferred()
+            (session.begin_deferred(), 0)
         };
         let id = req.id;
         self.active.push(Generation {
@@ -992,7 +1142,7 @@ impl<'e> ServingCore<'e> {
             pinned,
             seq: self.next_seq,
             prompt_ids,
-            phase: Phase::Prefilling { ingested: 0 },
+            phase: Phase::Prefilling { ingested },
             next_token: 0,
             out_ids: Vec::new(),
             spec: None,
@@ -1334,6 +1484,21 @@ impl<'e> ServingCore<'e> {
                 Err(e) => failure = Some(format!("{e:#}")),
                 Ok((now_ingested, final_logits)) => {
                     g.phase = Phase::Prefilling { ingested: now_ingested };
+                    // Publish this prompt's quantized prefix into the
+                    // shared cache once enough chunks have landed (the
+                    // final chunk stays uncached so a hit still produces
+                    // first-token logits).  First writer wins; later
+                    // identical prompts clone the KV instead of
+                    // prefilling.
+                    if chunk > 0 {
+                        if let Some(q) = kvpool::prefix_quantize(total, chunk)
+                        {
+                            if now_ingested >= q {
+                                session.prefix_publish(
+                                    &mut g.gen, &g.prompt_ids, q);
+                            }
+                        }
+                    }
                     if let Some(logits) = final_logits {
                         match DecodeSession::argmax(&logits) {
                             Err(e) => failure = Some(format!("{e:#}")),

@@ -221,6 +221,53 @@ pub fn pick_gamma(tpot_draft_ms: f64, tpot_target_ms: f64, accept: f64,
     best
 }
 
+// ---------------------------------------------------------------------------
+// KV-pool admission backpressure (DESIGN.md §Memory).
+//
+// The serving core admits against a byte budget of KV tiers.  When the
+// pool runs hot, DP-LLM's precision knob doubles as an admission-control
+// lever (FlexQuant's dynamic-precision-switching scenario, PAPERS.md):
+// admit new traffic at a LOWER effective bitwidth instead of rejecting.
+// A lower-bit generation streams fewer weight bytes per token (TPOT is
+// affine in bits, §top of file), so it finishes — and releases its KV
+// tier — sooner, draining pressure fastest exactly when the pool needs
+// relief.  The rule is deliberately a pure function of (available
+// targets, wanted target, pressure) so it is unit-testable and the
+// serving core carries no policy of its own.
+// ---------------------------------------------------------------------------
+
+/// Pool pressure (`in_use / budget`) at which admission starts
+/// downshifting new requests one precision rung.
+pub const DOWNSHIFT_PRESSURE: f64 = 0.85;
+
+/// Pool pressure at which admission drops straight to the lowest
+/// resident target precision.
+pub const FLOOR_PRESSURE: f64 = 0.95;
+
+/// The target precision a new request should be admitted at, given the
+/// adaptation set's resident `targets`, the QoS policy's choice `want`,
+/// and the KV pool `pressure`: untouched below [`DOWNSHIFT_PRESSURE`],
+/// one available rung down in the band up to [`FLOOR_PRESSURE`], the
+/// lowest resident target at or above it.  Unknown/empty target sets and
+/// already-lowest choices pass through unchanged.
+pub fn downshift_for_pressure(targets: &[f64], want: f64, pressure: f64) -> f64 {
+    if targets.is_empty() || pressure < DOWNSHIFT_PRESSURE {
+        return want;
+    }
+    let floor = targets.iter().copied().fold(f64::INFINITY, f64::min);
+    if pressure >= FLOOR_PRESSURE {
+        return floor.min(want);
+    }
+    // One rung down: the largest resident target strictly below `want`.
+    targets
+        .iter()
+        .copied()
+        .filter(|&t| t < want)
+        .fold(f64::NEG_INFINITY, f64::max)
+        .max(floor)
+        .min(want)
+}
+
 /// Relative selector overhead vs. the static baseline (Table 4/6 cells).
 pub fn overhead_frac(profile: &DeviceProfile, cfg: &ModelConfig,
                      store: &AnyPrecStore, dp: &DpllmConfig, b_eff: f64,
@@ -308,6 +355,26 @@ mod tests {
         assert_eq!(pick_gamma(t6, t6, 0.95, &[2, 4]), 0);
         // No compiled verify graphs → plain decode.
         assert_eq!(pick_gamma(t3, t6, 0.9, &[]), 0);
+    }
+
+    #[test]
+    fn downshift_engages_only_under_pressure() {
+        let targets = [3.5, 4.5, 5.5];
+        // Cold pool: the policy's choice passes through.
+        assert_eq!(downshift_for_pressure(&targets, 5.5, 0.0), 5.5);
+        assert_eq!(downshift_for_pressure(&targets, 5.5, 0.84), 5.5);
+        // Pressure band: one available rung down.
+        assert_eq!(downshift_for_pressure(&targets, 5.5, 0.90), 4.5);
+        assert_eq!(downshift_for_pressure(&targets, 4.5, 0.90), 3.5);
+        // At/above the floor threshold: straight to the lowest target.
+        assert_eq!(downshift_for_pressure(&targets, 5.5, 0.95), 3.5);
+        assert_eq!(downshift_for_pressure(&targets, 5.5, 1.0), 3.5);
+        // Already at the lowest rung: nothing below to shift to.
+        assert_eq!(downshift_for_pressure(&targets, 3.5, 0.99), 3.5);
+        // Degenerate inputs pass through.
+        assert_eq!(downshift_for_pressure(&[], 4.5, 0.99), 4.5);
+        // A want below every resident target is never shifted UP.
+        assert_eq!(downshift_for_pressure(&targets, 3.0, 0.99), 3.0);
     }
 
     #[test]

@@ -50,6 +50,7 @@ use xla::PjRtBuffer;
 use crate::anyprec::materialize::{changed_layers, MatKey, MatSnapshot, MaterializeCache};
 use crate::anyprec::{AnyPrecStore, GroupStore, GROUPS};
 use crate::model::{Manifest, ModelAssets, ModelConfig};
+use crate::runtime::kvpool::{self, KvCaster, SharedKvPool};
 use crate::runtime::stack::Stacker;
 use crate::runtime::{buffer_f32, wrap, Exe, Runtime};
 use crate::selector::{EngineConfig, SelectorState, ASYNC_GROUPS};
@@ -134,8 +135,32 @@ impl VerifyOut {
 enum KvResidence {
     /// On the device; fed straight back into the next `execute_b`.
     Device(PjRtBuffer),
+    /// On the device but owned by the shared-prefix cache (copy-on-
+    /// write): dispatches never mutate their inputs, so the shared
+    /// buffer is read directly and the generation's first dispatch
+    /// output becomes its private [`KvResidence::Device`] buffer.
+    Shared(Rc<PjRtBuffer>),
     /// Host fallback (tuple-lowered graph): re-uploaded each step.
     Host(Vec<f32>),
+}
+
+/// Pool accounting attached to a [`GenState`]: the charged bytes are
+/// credited back (and the residency gauge decremented) when the lease
+/// drops, so completion, eviction, wholesale `GenState` replacement,
+/// and mid-construction error paths all funnel through one destructor
+/// and the pool can never leak a tier.
+struct PoolLease {
+    pool: SharedKvPool,
+    rt: Arc<Runtime>,
+    tier: usize,
+}
+
+impl Drop for PoolLease {
+    fn drop(&mut self) {
+        let bytes = self.pool.borrow().tier_bytes(self.tier);
+        self.pool.borrow_mut().release(self.tier, None);
+        self.rt.transfers().count_kv_release(bytes as u64);
+    }
 }
 
 /// Per-request device-resident generation handle.
@@ -159,12 +184,29 @@ pub struct GenState<'s> {
     pub steps: usize,
     /// Mid-stream target re-selections applied (ServingCore).
     pub retargets: usize,
+    /// KV sequence capacity of the current buffer (== `cfg.max_seq`
+    /// without an active tier ladder; see `runtime::kvpool`).
+    tier: usize,
+    /// Byte accounting against the shared KV pool (None off the pool).
+    lease: Option<PoolLease>,
 }
 
 impl<'s> GenState<'s> {
-    /// True while the KV cache is device-resident (the O(1)-traffic path).
+    /// True while the KV cache is device-resident (the O(1)-traffic
+    /// path) — privately owned or shared from the prefix cache.
     pub fn kv_on_device(&self) -> bool {
-        matches!(self.kv, KvResidence::Device(_))
+        matches!(self.kv, KvResidence::Device(_) | KvResidence::Shared(_))
+    }
+
+    /// KV sequence capacity of the current buffer (tier ladder).
+    pub fn kv_tier(&self) -> usize {
+        self.tier
+    }
+
+    /// True while the KV buffer is a copy-on-write reference into the
+    /// shared-prefix cache (cleared by the first dispatch).
+    pub fn kv_shared(&self) -> bool {
+        matches!(self.kv, KvResidence::Shared(_))
     }
 
     /// Drop cached flag buffers so the next step re-uploads them (used
@@ -183,6 +225,22 @@ impl<'s> GenState<'s> {
     pub fn rewind(&mut self, pos: usize) {
         debug_assert!(pos <= self.pos, "rewind forward ({} -> {pos})", self.pos);
         self.pos = pos.min(self.pos);
+    }
+}
+
+impl Drop for GenState<'_> {
+    fn drop(&mut self) {
+        let Some(lease) = self.lease.take() else { return };
+        let kv = std::mem::replace(&mut self.kv, KvResidence::Host(Vec::new()));
+        let (pool, tier) = (lease.pool.clone(), lease.tier);
+        // Credit the charged bytes first so the donation fits the budget.
+        drop(lease);
+        // Only a privately owned device buffer recycles (stale contents
+        // are fine — see kvpool); shared/host residences have nothing to
+        // donate.
+        if let KvResidence::Device(b) = kv {
+            pool.borrow_mut().donate(tier, b);
+        }
     }
 }
 
@@ -243,6 +301,25 @@ pub struct DecodeSession {
     /// Empty when the artifacts predate the `prefill_chunk_*` AOT export —
     /// ingestion then stays on the bucketed [`DecodeSession::begin`].
     prefill_chunks: Vec<(usize, Arc<Exe>, Vec<String>)>,
+    /// Tier-shaped decode graphs (`decode_step_s{S}`) keyed by KV tier
+    /// `S < max_seq` — optional AOT entries; absent tiers simply aren't
+    /// offered and generations stay at `max_seq` shape (tier-1 behavior
+    /// unchanged).  A tier is only listed when its chunked-prefill
+    /// graphs cover every canonical chunk bucket, so ingestion never
+    /// faces a bucket its tier can't dispatch.
+    tier_decodes: BTreeMap<usize, (Arc<Exe>, Vec<String>)>,
+    /// Tier-shaped chunked-prefill graphs (`prefill_chunk_{P}_s{S}`):
+    /// tier -> ascending (P, exe, args).
+    tier_chunks: BTreeMap<usize, Vec<(usize, Arc<Exe>, Vec<String>)>>,
+    /// Shared byte-budgeted KV pool (None → every generation owns a
+    /// `max_seq` buffer and no byte accounting happens — the historical
+    /// behavior).  Installed by [`DecodeSession::set_kv_pool`].
+    pool: Option<SharedKvPool>,
+    /// Device-side tier-migration / snapshot graphs (pad / copy).
+    caster: KvCaster,
+    /// Target-stack identity for prefix-cache keying (precision targets
+    /// must not share prefix KV — their prefill stacks differ).
+    tag: String,
     static_bufs: HashMap<String, PjRtBuffer>,
     prefill_bufs: HashMap<String, PjRtBuffer>,
     kv_zero: Vec<f32>,
@@ -383,7 +460,44 @@ impl DecodeSession {
             }
         }
 
+        // Tier-shaped graphs are optional the same way: absent → the KV
+        // pool degrades to max_seq-only tiers; present-but-broken → loud
+        // failure.  A tier is dropped unless its chunk graphs cover every
+        // canonical chunk bucket (prefill_advance picks buckets from the
+        // canonical set and must be able to dispatch them at any tier).
+        let mut tier_decodes = BTreeMap::new();
+        let mut tier_chunks: BTreeMap<usize, Vec<(usize, Arc<Exe>, Vec<String>)>> =
+            BTreeMap::new();
+        for s in kvpool::tier_ladder(cfg.max_seq, kvpool::BASE_TIER) {
+            if s >= cfg.max_seq {
+                continue;
+            }
+            if let Ok(e) = manifest.entry(&cfg.name, &format!("decode_step_s{s}")) {
+                let exe = rt.load(&e)?;
+                tier_decodes.insert(s, (exe, e.args.clone()));
+            }
+            for p in [64usize, 128] {
+                if let Ok(e) =
+                    manifest.entry(&cfg.name, &format!("prefill_chunk_{p}_s{s}"))
+                {
+                    let exe = rt.load(&e)?;
+                    tier_chunks.entry(s).or_default().push((p, exe, e.args.clone()));
+                }
+            }
+        }
+        let canonical: Vec<usize> =
+            prefill_chunks.iter().map(|(p, _, _)| *p).collect();
+        tier_decodes.retain(|s, _| {
+            canonical.is_empty()
+                || tier_chunks.get(s).is_some_and(|set| {
+                    canonical
+                        .iter()
+                        .all(|b| set.iter().any(|(p, _, _)| p == b))
+                })
+        });
+
         let stacker = Stacker::new(rt.clone());
+        let caster = KvCaster::new(rt.clone());
 
         // ---- static decode args -------------------------------------------
         let mut static_bufs = HashMap::new();
@@ -429,6 +543,7 @@ impl DecodeSession {
         }
 
         let kv_len: usize = cfg.kv_shape().iter().product();
+        let tag = cfg.name.clone();
         Ok(DecodeSession {
             rt,
             decode_args: decode_entry.args.clone(),
@@ -443,6 +558,11 @@ impl DecodeSession {
             pad_kv: RefCell::new(None),
             prefills,
             prefill_chunks,
+            tier_decodes,
+            tier_chunks,
+            pool: None,
+            caster,
+            tag,
             static_bufs,
             prefill_bufs,
             kv_zero: vec![0.0; kv_len],
@@ -612,6 +732,273 @@ impl DecodeSession {
         }
     }
 
+    // ---- KV pool / tier ladder / shared-prefix cache ---------------------
+
+    /// Install the shared byte-budgeted KV pool and this session's
+    /// prefix-cache identity tag (the serving engine passes the target
+    /// string).  Without a pool the session behaves exactly as before:
+    /// max_seq buffers, no accounting, no prefix sharing.
+    pub fn set_kv_pool(&mut self, pool: SharedKvPool, tag: &str) {
+        self.pool = Some(pool);
+        self.tag = tag.to_string();
+    }
+
+    /// The shared KV pool handle, if one is installed.
+    pub fn kv_pool(&self) -> Option<&SharedKvPool> {
+        self.pool.as_ref()
+    }
+
+    /// Active KV tier ladder, ascending, always ending at `max_seq`.
+    /// Sub-max tiers appear only when their AOT graphs are present.
+    pub fn kv_tiers(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.tier_decodes.keys().copied().collect();
+        v.push(self.cfg.max_seq);
+        v
+    }
+
+    /// KV cache shape at sequence capacity `tier`.
+    fn kv_shape_at(&self, tier: usize) -> Vec<usize> {
+        let mut s = self.cfg.kv_shape();
+        s[3] = tier;
+        s
+    }
+
+    /// `(n_layers, n_heads, head_dim)` — the non-sequence KV dims.
+    fn kv_dims(&self) -> (usize, usize, usize) {
+        let s = self.cfg.kv_shape();
+        (s[0], s[2], s[4])
+    }
+
+    /// The tier a fresh generation is born at: the smallest available
+    /// tier when the pool + tier graphs are active, else `max_seq`.
+    fn birth_tier(&self) -> usize {
+        if self.pool.is_some() {
+            self.kv_tiers().first().copied().unwrap_or(self.cfg.max_seq)
+        } else {
+            self.cfg.max_seq
+        }
+    }
+
+    /// Charge `tier` bytes against the pool (no free-list pop — for
+    /// buffers that arrive from dispatch outputs) and mint the lease
+    /// that releases them on drop.  `None` without a pool.
+    fn lease_for(&self, tier: usize) -> Result<Option<PoolLease>> {
+        let Some(pool) = &self.pool else { return Ok(None) };
+        pool.borrow_mut().charge(tier)?;
+        let bytes = pool.borrow().tier_bytes(tier);
+        self.rt.transfers().count_kv_acquire(bytes as u64);
+        Ok(Some(PoolLease {
+            pool: pool.clone(),
+            rt: self.rt.clone(),
+            tier,
+        }))
+    }
+
+    /// A zeroed-or-recycled KV residence at `tier` plus its lease.
+    /// Free-listed buffers are reused WITHOUT zeroing: every slot ≤ pos
+    /// is overwritten by a dispatch before the `arange(S) <= pos` mask
+    /// ever exposes it, so stale contents are unobservable.  Without a
+    /// pool this is a plain zero upload at `tier` (= max_seq) and no
+    /// lease.
+    fn acquire_kv(&self, tier: usize)
+                  -> Result<(KvResidence, Option<PoolLease>)> {
+        let recycled = match &self.pool {
+            Some(pool) => pool.borrow_mut().acquire(tier)?,
+            None => None,
+        };
+        let lease = self.pool.as_ref().map(|pool| {
+            let bytes = pool.borrow().tier_bytes(tier);
+            self.rt.transfers().count_kv_acquire(bytes as u64);
+            PoolLease { pool: pool.clone(), rt: self.rt.clone(), tier }
+        });
+        if let Some(buf) = recycled {
+            return Ok((KvResidence::Device(buf), lease));
+        }
+        let shape = self.kv_shape_at(tier);
+        let len: usize = shape.iter().product();
+        // An upload failure drops `lease`, crediting the charge back.
+        let buf = self.rt.upload_f32(&shape, &self.kv_zero[..len])?;
+        Ok((KvResidence::Device(buf), lease))
+    }
+
+    /// Grow `gen`'s KV to the smallest tier covering `needed` positions
+    /// — the tier-migration path.  Stale tail slots are don't-care under
+    /// the `arange(S) <= pos` mask, so migration is a zero-pad on the
+    /// sequence dim: device-side through [`KvCaster`], else a
+    /// download/grow/upload host fallback.  The byte delta is charged
+    /// before the copy (growth can hit the pool budget) and rolled back
+    /// if the copy fails; the outgrown buffer is donated to the free
+    /// list for the next birth-tier acquisition.
+    fn ensure_tier(&self, gen: &mut GenState<'_>, needed: usize) -> Result<()> {
+        // A tier is usable only where THIS session has matching graphs —
+        // a retarget (`adopt`) can hand over a tier a sibling session
+        // exported but this one didn't, which migrates up here too.
+        let compatible = gen.tier == self.cfg.max_seq
+            || self.tier_decodes.contains_key(&gen.tier);
+        if needed <= gen.tier && compatible {
+            return Ok(());
+        }
+        let want = needed.max(gen.tier.min(self.cfg.max_seq));
+        let to = kvpool::tier_for(&self.kv_tiers(), want).ok_or_else(|| {
+            anyhow!("kv tier for {needed} positions exceeds max_seq {}",
+                    self.cfg.max_seq)
+        })?;
+        let from = gen.tier;
+        if let Some(pool) = &self.pool {
+            pool.borrow_mut().migrate_charge(from, to)?;
+        }
+        match self.grow_kv(&gen.kv, from, to) {
+            Ok(kv) => {
+                let old = std::mem::replace(&mut gen.kv, kv);
+                if let Some(pool) = &self.pool {
+                    if let KvResidence::Device(b) = old {
+                        pool.borrow_mut().donate(from, b);
+                    }
+                    let delta = pool.borrow().tier_bytes(to)
+                        - pool.borrow().tier_bytes(from);
+                    self.rt.transfers().count_kv_acquire(delta as u64);
+                }
+                if let Some(lease) = &mut gen.lease {
+                    lease.tier = to;
+                }
+                gen.tier = to;
+                self.rt.transfers().count_kv_migration();
+                Ok(())
+            }
+            Err(e) => {
+                if let Some(pool) = &self.pool {
+                    // Shrinking the charge back always fits.
+                    let _ = pool.borrow_mut().migrate_charge(to, from);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// The grown KV residence: device pad graph when available, else a
+    /// host zero-pad (re-upload for device residences, in-place for the
+    /// host fallback residence).
+    fn grow_kv(&self, kv: &KvResidence, from: usize, to: usize)
+               -> Result<KvResidence> {
+        let (l, h, d) = self.kv_dims();
+        let host = |data: &[f32]| -> Result<KvResidence> {
+            let grown = kvpool::host_grow(data, l, h, d, from, to);
+            Ok(KvResidence::Device(
+                self.rt.upload_f32(&self.kv_shape_at(to), &grown)?,
+            ))
+        };
+        match kv {
+            KvResidence::Device(b) => match self.caster.cast((l, h, d), from, to, b) {
+                Some(nb) => Ok(KvResidence::Device(nb)),
+                None => host(&buffer_f32(b)?),
+            },
+            KvResidence::Shared(rc) => {
+                match self.caster.cast((l, h, d), from, to, rc) {
+                    Some(nb) => Ok(KvResidence::Device(nb)),
+                    None => host(&buffer_f32(rc)?),
+                }
+            }
+            KvResidence::Host(v) => {
+                Ok(KvResidence::Host(kvpool::host_grow(v, l, h, d, from, to)))
+            }
+        }
+    }
+
+    /// The decode graph matching `tier` (the max_seq graph otherwise).
+    fn decode_for(&self, tier: usize) -> (&Arc<Exe>, &[String]) {
+        if tier < self.cfg.max_seq {
+            if let Some((e, a)) = self.tier_decodes.get(&tier) {
+                return (e, a);
+            }
+        }
+        (&self.decode, &self.decode_args)
+    }
+
+    /// The chunked-prefill entry for `bucket` at `tier` (tier graphs
+    /// cover every canonical bucket by the load-time retain rule).
+    fn chunk_for(&self, tier: usize, bucket: usize)
+                 -> Result<&(usize, Arc<Exe>, Vec<String>)> {
+        let set = if tier < self.cfg.max_seq {
+            self.tier_chunks.get(&tier).unwrap_or(&self.prefill_chunks)
+        } else {
+            &self.prefill_chunks
+        };
+        set.iter().find(|(p, _, _)| *p == bucket).ok_or_else(|| {
+            anyhow!("no prefill_chunk_{bucket} graph at kv tier {tier}")
+        })
+    }
+
+    /// Probe the shared-prefix cache for `prompt`.  A hit returns a
+    /// generation already carrying the cached prefix KV (copy-on-write —
+    /// see `runtime::kvpool`) at `pos = prefix_len`, plus the prefix
+    /// length; the avoided chunk dispatches are counted on
+    /// [`Runtime::transfers`].  `None` on a miss, without a pool, with
+    /// the cache disabled, or when the pool can't fit the consumer tier.
+    pub fn begin_from_prefix(&self, prompt: &[u32])
+                             -> Option<(GenState<'_>, usize)> {
+        let pool = self.pool.as_ref()?;
+        let quantum = self.max_prefill_chunk();
+        if quantum == 0 || kvpool::prefix_cache_disabled() {
+            return None;
+        }
+        let hit = pool.borrow_mut().prefix_lookup(&self.tag, prompt, quantum)?;
+        let lease = self.lease_for(hit.tier).ok()?;
+        self.rt
+            .transfers()
+            .count_prefix_hit((hit.len / quantum) as u64);
+        Some((
+            GenState {
+                sel: self.selector_state(),
+                kv: KvResidence::Shared(hit.kv),
+                pos: hit.len,
+                flag_bufs: HashMap::new(),
+                steps: 0,
+                retargets: 0,
+                tier: hit.tier,
+                lease,
+            },
+            hit.len,
+        ))
+    }
+
+    /// Publish `gen`'s KV as the immutable shared-prefix entry for
+    /// `prompt[..len]`.  Zero-copy: dispatches never mutate their input
+    /// buffers, so the published buffer stays valid forever while the
+    /// generation continues — the generation's own handle becomes a
+    /// shared reference to the same buffer (its next dispatch output is
+    /// private again).  No-op without a pool, with the cache disabled,
+    /// off a chunk boundary, before ingestion reached `len`, for
+    /// host-resident KV, or when the entry already exists (first writer
+    /// wins).
+    pub fn prefix_publish(&self, gen: &mut GenState<'_>, prompt: &[u32],
+                          len: usize) {
+        let Some(pool) = &self.pool else { return };
+        let quantum = self.max_prefill_chunk();
+        if quantum == 0
+            || kvpool::prefix_cache_disabled()
+            || len == 0
+            || len % quantum != 0
+            || len > prompt.len()
+            || gen.pos < len
+        {
+            return;
+        }
+        if pool.borrow().prefix_contains(&self.tag, prompt, len) {
+            return;
+        }
+        let kv = std::mem::replace(&mut gen.kv, KvResidence::Host(Vec::new()));
+        match kv {
+            KvResidence::Device(b) => {
+                let rc = Rc::new(b);
+                pool.borrow_mut().prefix_insert(
+                    &self.tag, prompt, len, gen.tier, rc.clone(),
+                );
+                gen.kv = KvResidence::Shared(rc);
+            }
+            other => gen.kv = other,
+        }
+    }
+
     // ---- cached per-step input buffers -----------------------------------
 
     fn rope_buffers(&self, pos: usize) -> Result<Rc<(PjRtBuffer, PjRtBuffer)>> {
@@ -683,6 +1070,9 @@ impl DecodeSession {
     /// precision, keep the produced KV cache on the device, and return the
     /// handle plus the last-position logits (caller samples token 1).
     pub fn begin(&self, prompt: &[u32]) -> Result<(GenState<'_>, Vec<f32>)> {
+        // Bucketed prefill emits a full max_seq KV buffer from the
+        // dispatch, so the lease charges the top tier up front.
+        let lease = self.lease_for(self.cfg.max_seq)?;
         let bucket = self.prefill_bucket(prompt.len())?;
         let (_, exe, args) = self
             .prefills
@@ -741,6 +1131,8 @@ impl DecodeSession {
                 flag_bufs: HashMap::new(),
                 steps: 0,
                 retargets: 0,
+                tier: self.cfg.max_seq,
+                lease,
             },
             logits,
         ))
@@ -792,15 +1184,15 @@ impl DecodeSession {
         if n == 0 {
             bail!("empty prefill chunk");
         }
-        let (bucket, exe, args) = self
+        let bucket = self
             .prefill_chunks
             .iter()
             .find(|(p, _, _)| *p >= n)
+            .map(|(p, _, _)| *p)
             .ok_or_else(|| {
                 anyhow!("prefill chunk of {n} tokens exceeds the largest \
                          chunk bucket {}", self.max_prefill_chunk())
             })?;
-        let bucket = *bucket;
         // The chunk graph writes a BUCKET-sized KV span at gen.pos; XLA
         // clamps dynamic_update_slice starts, so an overhanging write
         // would silently shift backwards and corrupt earlier positions —
@@ -809,6 +1201,10 @@ impl DecodeSession {
             bail!("prefill chunk bucket {bucket} at position {} overruns \
                    max_seq {}", gen.pos, self.cfg.max_seq);
         }
+        // The same clamping rule applies within a KV tier: the whole
+        // bucket span must fit the buffer, so migrate up front.
+        self.ensure_tier(gen, gen.pos + bucket)?;
+        let (_, exe, args) = self.chunk_for(gen.tier, bucket)?;
         let mut padded: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
         padded.resize(bucket, 0);
         let tok_buf = self.rt.upload_i32(&[bucket], &padded)?;
@@ -826,8 +1222,10 @@ impl DecodeSession {
         let sin_buf = self.rt.upload_f32(&[bucket, half], &sin)?;
         // Host-KV fallback for tuple-lowered graphs, as in `advance`.
         let kv_upload = match &gen.kv {
-            KvResidence::Device(_) => None,
-            KvResidence::Host(v) => Some(self.rt.upload_f32(&self.cfg.kv_shape(), v)?),
+            KvResidence::Device(_) | KvResidence::Shared(_) => None,
+            KvResidence::Host(v) => {
+                Some(self.rt.upload_f32(&self.kv_shape_at(gen.tier), v)?)
+            }
         };
         let mut arg_bufs: Vec<&PjRtBuffer> = Vec::with_capacity(args.len());
         for name in args {
@@ -839,6 +1237,7 @@ impl DecodeSession {
                 "sin" => &sin_buf,
                 "kv" => match (&gen.kv, &kv_upload) {
                     (KvResidence::Device(b), _) => b,
+                    (KvResidence::Shared(rc), _) => rc.as_ref(),
                     (_, Some(b)) => b,
                     _ => unreachable!("host kv uploaded above"),
                 },
@@ -926,20 +1325,28 @@ impl DecodeSession {
             flag_bufs: HashMap::new(),
             steps: 0,
             retargets: 0,
+            tier: self.cfg.max_seq,
+            lease: None,
         }
     }
 
     /// Start a generation from an empty (zeroed) KV cache at position 0 —
-    /// teacher-forced perplexity and TPOT measurement.
+    /// teacher-forced perplexity, TPOT measurement, and the seed state
+    /// for chunked prefill.  With an active KV pool the generation is
+    /// born at the smallest available tier (recycling a free-listed
+    /// buffer when one fits) and migrates up as `pos` grows.
     pub fn begin_empty(&self) -> Result<GenState<'_>> {
-        let kv_buf = self.rt.upload_f32(&self.cfg.kv_shape(), &self.kv_zero)?;
+        let tier = self.birth_tier();
+        let (kv, lease) = self.acquire_kv(tier)?;
         Ok(GenState {
             sel: self.selector_state(),
-            kv: KvResidence::Device(kv_buf),
+            kv,
             pos: 0,
             flag_bufs: HashMap::new(),
             steps: 0,
             retargets: 0,
+            tier,
+            lease,
         })
     }
 
@@ -962,6 +1369,10 @@ impl DecodeSession {
         if gen.pos + 1 >= self.cfg.max_seq {
             bail!("position {} at max_seq {}", gen.pos, self.cfg.max_seq);
         }
+        // The step writes slot `pos`; migrate up a KV tier if the
+        // current buffer can't hold it (no-op off the tier ladder).
+        self.ensure_tier(gen, gen.pos + 1)?;
+        let (decode, decode_args) = self.decode_for(gen.tier);
         let tok_buf = self.scalar_buffer(token as i32)?;
         let pos_buf = self.scalar_buffer(gen.pos as i32)?;
         let rope = self.rope_buffers(gen.pos)?;
@@ -969,12 +1380,14 @@ impl DecodeSession {
         self.refresh_flags(gen)?;
         // Host-KV fallback: upload for this step only (tuple-lowered graph).
         let kv_upload = match &gen.kv {
-            KvResidence::Device(_) => None,
-            KvResidence::Host(v) => Some(self.rt.upload_f32(&self.cfg.kv_shape(), v)?),
+            KvResidence::Device(_) | KvResidence::Shared(_) => None,
+            KvResidence::Host(v) => {
+                Some(self.rt.upload_f32(&self.kv_shape_at(gen.tier), v)?)
+            }
         };
 
-        let mut arg_bufs: Vec<&PjRtBuffer> = Vec::with_capacity(self.decode_args.len());
-        for name in &self.decode_args {
+        let mut arg_bufs: Vec<&PjRtBuffer> = Vec::with_capacity(decode_args.len());
+        for name in decode_args {
             arg_bufs.push(match name.as_str() {
                 "token" => &*tok_buf,
                 "pos" => &*pos_buf,
@@ -982,6 +1395,7 @@ impl DecodeSession {
                 "sin" => &rope.1,
                 "kv" => match (&gen.kv, &kv_upload) {
                     (KvResidence::Device(b), _) => b,
+                    (KvResidence::Shared(rc), _) => rc.as_ref(),
                     (_, Some(b)) => b,
                     _ => unreachable!("host kv uploaded above"),
                 },
@@ -994,23 +1408,23 @@ impl DecodeSession {
                     .ok_or_else(|| anyhow!("missing decode arg {other}"))?,
             });
         }
-        let replica = self.decode.run_buffers(&arg_bufs).context("decode step")?;
+        let replica = decode.run_buffers(&arg_bufs).context("decode step")?;
 
-        let out = if self.decode.untupled(&replica) {
+        let out = if decode.untupled(&replica) {
             // Device-resident path: read only the small outputs, keep KV on
             // the device for the next step.
             let mut ests = BTreeMap::new();
             let mut use_eff = BTreeMap::new();
             for g in GROUPS {
-                let ei = self.decode.output_index(&format!("est_{g}"))?;
-                let ui = self.decode.output_index(&format!("useh_{g}"))?;
+                let ei = decode.output_index(&format!("est_{g}"))?;
+                let ui = decode.output_index(&format!("useh_{g}"))?;
                 ests.insert(g.to_string(), buffer_f32(&replica[ei])?);
                 use_eff.insert(g.to_string(), buffer_f32(&replica[ui])?);
             }
-            let li = self.decode.output_index("logits")?;
+            let li = decode.output_index("logits")?;
             let logits = buffer_f32(&replica[li])?;
             self.rt.transfers().count_download();
-            let ki = self.decode.output_index("kv")?;
+            let ki = decode.output_index("kv")?;
             for (i, b) in replica.into_iter().enumerate() {
                 if i == ki {
                     gen.kv = KvResidence::Device(b);
@@ -1019,7 +1433,7 @@ impl DecodeSession {
             StepOut { logits, ests, use_eff }
         } else {
             // Tuple fallback: full host decomposition (legacy artifacts).
-            let parts = self.decode.outputs(replica)?;
+            let parts = decode.outputs(replica)?;
             let mut ests = BTreeMap::new();
             let mut use_eff = BTreeMap::new();
             for g in GROUPS {
@@ -1084,6 +1498,9 @@ impl DecodeSession {
             bail!("speculative verify requires device-resident KV \
                    (tuple-lowered artifacts fall back to plain decode)");
         }
+        // Verify graphs are exported at max shape only — migrate a
+        // tiered generation up before dispatch (DESIGN.md §Memory).
+        self.ensure_tier(gen, self.cfg.max_seq)?;
         let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
         let tok_buf = self.rt.upload_i32(&[n_pos], &toks)?;
         let pos_buf = self.scalar_buffer(gen.pos as i32)?;
@@ -1109,6 +1526,7 @@ impl DecodeSession {
                 "sin" => &sin_buf,
                 "kv" => match &gen.kv {
                     KvResidence::Device(b) => b,
+                    KvResidence::Shared(rc) => rc.as_ref(),
                     KvResidence::Host(_) => {
                         unreachable!("validated device-resident above")
                     }
@@ -1234,6 +1652,12 @@ impl DecodeSession {
                        (tuple-lowered artifacts fall back to per-request steps)");
             }
         }
+        // Batched graphs are exported at max shape only — migrate tiered
+        // slots up before any inputs pack (DESIGN.md §Memory).  A failed
+        // migration leaves every gen still valid at its old tier.
+        for (gen, _) in slots.iter_mut() {
+            self.ensure_tier(gen, self.cfg.max_seq)?;
+        }
         // ---- pack per-slot inputs with a leading batch dim ---------------
         let l = self.cfg.n_layers;
         let half = self.cfg.head_dim() / 2;
@@ -1285,6 +1709,7 @@ impl DecodeSession {
                     if i < n {
                         match &slots[i].0.kv {
                             KvResidence::Device(kb) => kb,
+                            KvResidence::Shared(rc) => rc.as_ref(),
                             KvResidence::Host(_) => {
                                 unreachable!("validated device-resident above")
                             }

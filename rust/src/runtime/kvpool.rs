@@ -1,0 +1,758 @@
+//! Byte-budgeted KV-cache pool: length tiers, free-list reuse, tier
+//! migration, and the shared-prefix prefill cache.
+//!
+//! Every admitted request used to own a full `max_seq`-sized KV device
+//! buffer for its whole lifetime, so serving concurrency was capped by
+//! worst-case KV memory instead of actual usage.  The pool replaces that
+//! with a ladder of fixed KV length **tiers** (doubling from a base up to
+//! `max_seq`, mirroring the prefill chunk-bucket machinery): a generation
+//! acquires the smallest tier covering its position, **migrates** to the
+//! next tier via a device-side copy when it overflows, and releases its
+//! tier to a per-tier free list on completion.  Three properties make
+//! this safe and cheap (DESIGN.md §Memory):
+//!
+//! * **Stale-but-masked** — the decode graphs mask attention with
+//!   `arange(S) <= pos`, so every KV slot past `pos` is don't-care.
+//!   Migration is therefore a plain zero-pad on the sequence dim (the pad
+//!   values are never read), and a recycled free-list buffer needs **no
+//!   zeroing** before reuse — slot `p` is overwritten by the dispatch at
+//!   `pos = p` before the mask ever exposes it.
+//! * **Functional dispatches** — every decode/prefill dispatch REPLACES
+//!   the KV buffer with a fresh output; inputs are never mutated in
+//!   place.  That gives the shared-prefix cache copy-on-write for free: a
+//!   cached prefix buffer is handed to a new generation as a shared
+//!   (`Rc`) input, and the generation's very first dispatch produces its
+//!   own private buffer — no copy dispatch at all.
+//! * **Bit-exact tiers** — masked lanes are exactly `-1e30`, so their
+//!   softmax contribution is exactly `0.0`: a tier-S dispatch and a
+//!   max_seq dispatch produce identical logits for the same `pos`.
+//!
+//! The pool itself is pure byte accounting, generic over the buffer
+//! payload `B` (unit tests use `B = ()`, the runtime uses
+//! `B = PjRtBuffer`) — the same shape as `anyprec::MaterializeCache`.
+//! Device-side tier casts live in [`KvCaster`], a sibling of
+//! `stack::Stacker` that generates pad/copy graphs as HLO text and
+//! caches the compiled executables shape-keyed on the [`Runtime`].
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+use xla::PjRtBuffer;
+
+use crate::model::HloEntry;
+use crate::runtime::{wrap, Exe, Runtime};
+
+/// Smallest KV tier (sequence positions).  Matches the largest prefill
+/// chunk bucket so one full chunk always fits the birth tier.
+pub const BASE_TIER: usize = 128;
+
+/// Fraction of the pool budget the prefix cache may occupy (denominator).
+const PREFIX_BUDGET_DIV: usize = 4;
+
+/// The doubling tier ladder: `base, 2·base, 4·base, …`, capped at (and
+/// always ending exactly on) `max_seq`.
+pub fn tier_ladder(max_seq: usize, base: usize) -> Vec<usize> {
+    let mut tiers = Vec::new();
+    let mut s = base.max(1);
+    while s < max_seq {
+        tiers.push(s);
+        s *= 2;
+    }
+    tiers.push(max_seq);
+    tiers
+}
+
+/// Smallest tier in `ladder` with room for `needed` positions.
+pub fn tier_for(ladder: &[usize], needed: usize) -> Option<usize> {
+    ladder.iter().copied().find(|&s| s >= needed)
+}
+
+/// Largest multiple of `quantum` that is `<= prompt_len - 1` — the
+/// shareable prefix length for a prompt.  Capped below the full prompt so
+/// a prefix-cache hit always leaves at least one final chunk to prefill
+/// (the dispatch that produces the first-token logits).
+pub fn prefix_quantize(prompt_len: usize, quantum: usize) -> Option<usize> {
+    if quantum == 0 || prompt_len <= quantum {
+        return None;
+    }
+    Some((prompt_len - 1) / quantum * quantum)
+}
+
+/// Parse a byte count with an optional `k`/`m`/`g` suffix (binary units):
+/// `"1048576"`, `"512m"`, `"2g"`.
+pub fn parse_bytes(s: &str) -> Result<usize> {
+    let t = s.trim().to_ascii_lowercase();
+    let (num, mult) = match t.as_bytes().last() {
+        Some(b'k') => (&t[..t.len() - 1], 1usize << 10),
+        Some(b'm') => (&t[..t.len() - 1], 1usize << 20),
+        Some(b'g') => (&t[..t.len() - 1], 1usize << 30),
+        _ => (t.as_str(), 1usize),
+    };
+    let n: usize = num
+        .parse()
+        .with_context(|| format!("invalid byte count '{s}'"))?;
+    Ok(n * mult)
+}
+
+/// KV pool budget from `DPLLM_KV_BUDGET_BYTES` (same `k/m/g` suffixes as
+/// [`parse_bytes`]); unset or unparsable → `None` (unbounded pool).
+pub fn budget_from_env() -> Option<usize> {
+    std::env::var("DPLLM_KV_BUDGET_BYTES")
+        .ok()
+        .and_then(|v| parse_bytes(&v).ok())
+}
+
+/// True when the shared-prefix cache is disabled (`DPLLM_NO_PREFIX_CACHE`).
+pub fn prefix_cache_disabled() -> bool {
+    std::env::var_os("DPLLM_NO_PREFIX_CACHE").is_some()
+}
+
+/// Typed capacity error: the byte budget cannot hold another tier.  The
+/// serving layer downcasts (`anyhow::Error::is::<PoolExhausted>`) to
+/// classify such a rejection as *capacity* (HTTP 503 + `Retry-After`)
+/// rather than invalid input (400) — pool exhaustion is transient, a
+/// malformed prompt is not.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolExhausted {
+    pub in_use: usize,
+    pub wanted: usize,
+    pub budget: usize,
+}
+
+impl std::fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "kv pool exhausted: {} bytes in use + {} wanted > {} budget",
+            self.in_use, self.wanted, self.budget
+        )
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
+/// Point-in-time byte accounting of a [`KvPool`] — the KV half of the
+/// combined memory report (`ServingEngine::memory_json`).  Plain data so
+/// the metrics layer stays device-free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MemoryStats {
+    /// Pool byte budget (`usize::MAX` = unbounded).
+    pub budget: usize,
+    /// Bytes hard-committed to live generation tiers.
+    pub in_use: usize,
+    /// Evictable bytes parked on the tier free lists.
+    pub free: usize,
+    /// Evictable bytes held by shared-prefix entries.
+    pub prefix: usize,
+    /// Byte cap on the prefix cache (budget / 4).
+    pub prefix_budget: usize,
+    /// Live prefix entries.
+    pub prefix_entries: usize,
+    /// Free-list reuses (acquisitions that skipped a fresh allocation).
+    pub reuses: u64,
+    /// Prefix entries evicted (LRU, byte pressure).
+    pub prefix_evictions: u64,
+}
+
+/// A shared-prefix cache hit: the cached KV (shared, immutable — the
+/// consumer's first dispatch produces its private copy), the prefix
+/// length in tokens, and the tier the buffer is shaped for.
+pub struct PrefixHit<B> {
+    pub kv: Rc<B>,
+    pub len: usize,
+    pub tier: usize,
+}
+
+struct PrefixEntry<B> {
+    kv: Rc<B>,
+    len: usize,
+    tier: usize,
+    bytes: usize,
+    stamp: u64,
+}
+
+/// Byte-budgeted KV pool: tier free lists + prefix cache + accounting.
+///
+/// Pure host-side bookkeeping — nothing here touches a device.  `in_use`
+/// bytes (live generation tiers) are the only *hard* commitment; free-
+/// listed buffers and prefix entries are evictable and are dropped, LRU
+/// last, whenever a new acquisition needs the room.
+pub struct KvPool<B> {
+    budget: usize,
+    bytes_per_token: usize,
+    in_use: usize,
+    free: HashMap<usize, Vec<B>>,
+    free_bytes: usize,
+    prefix: HashMap<(String, Vec<u32>), PrefixEntry<B>>,
+    prefix_bytes: usize,
+    prefix_budget: usize,
+    clock: u64,
+    /// Free-list reuses (acquisitions that skipped a fresh allocation).
+    pub reuses: u64,
+    /// Prefix entries evicted (LRU, byte pressure).
+    pub prefix_evictions: u64,
+}
+
+/// The shared, interior-mutable pool handle the runtime threads through
+/// sessions (one executor thread — same `Rc<RefCell<…>>` shape as the
+/// weight cache).
+pub type SharedKvPool = Rc<RefCell<KvPool<PjRtBuffer>>>;
+
+impl<B> KvPool<B> {
+    /// `budget` caps total pool-owned bytes (`usize::MAX` = unbounded,
+    /// the tier-1 default); `bytes_per_token` is the KV byte cost of one
+    /// sequence position across all layers/heads
+    /// (`n_layers · 2 · n_heads · head_dim · 4`).
+    pub fn new(budget: usize, bytes_per_token: usize) -> KvPool<B> {
+        KvPool {
+            budget,
+            bytes_per_token: bytes_per_token.max(1),
+            in_use: 0,
+            free: HashMap::new(),
+            free_bytes: 0,
+            prefix: HashMap::new(),
+            prefix_bytes: 0,
+            prefix_budget: budget / PREFIX_BUDGET_DIV,
+            clock: 0,
+            reuses: 0,
+            prefix_evictions: 0,
+        }
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    pub fn tier_bytes(&self, tier: usize) -> usize {
+        tier * self.bytes_per_token
+    }
+
+    /// Hard-committed bytes (live generation tiers).
+    pub fn in_use_bytes(&self) -> usize {
+        self.in_use
+    }
+
+    /// All pool-owned bytes: live + free-listed + prefix cache.
+    pub fn resident_bytes(&self) -> usize {
+        self.in_use + self.free_bytes + self.prefix_bytes
+    }
+
+    pub fn free_bytes(&self) -> usize {
+        self.free_bytes
+    }
+
+    pub fn prefix_bytes(&self) -> usize {
+        self.prefix_bytes
+    }
+
+    pub fn prefix_entries(&self) -> usize {
+        self.prefix.len()
+    }
+
+    /// The byte-accounting snapshot for memory reports.
+    pub fn stats(&self) -> MemoryStats {
+        MemoryStats {
+            budget: self.budget,
+            in_use: self.in_use,
+            free: self.free_bytes,
+            prefix: self.prefix_bytes,
+            prefix_budget: self.prefix_budget,
+            prefix_entries: self.prefix.len(),
+            reuses: self.reuses,
+            prefix_evictions: self.prefix_evictions,
+        }
+    }
+
+    /// Fraction of the budget hard-committed — the admission-pressure
+    /// signal the cost model's downshift rule consumes.  0.0 when the
+    /// pool is unbounded.
+    pub fn pressure(&self) -> f64 {
+        if self.budget == usize::MAX || self.budget == 0 {
+            return 0.0;
+        }
+        self.in_use as f64 / self.budget as f64
+    }
+
+    /// Would acquiring `tier` fit the budget?  Only `in_use` counts
+    /// against it — free-listed buffers and prefix entries yield.
+    pub fn would_admit(&self, tier: usize) -> bool {
+        self.in_use.saturating_add(self.tier_bytes(tier)) <= self.budget
+    }
+
+    /// Charge `tier` bytes without consuming a free-listed buffer — for
+    /// callers whose buffer arrives from a dispatch output (the bucketed
+    /// prefill path).  Errors when the budget cannot hold another `tier`.
+    pub fn charge(&mut self, tier: usize) -> Result<()> {
+        let tb = self.tier_bytes(tier);
+        if !self.would_admit(tier) {
+            return Err(PoolExhausted {
+                in_use: self.in_use,
+                wanted: tb,
+                budget: self.budget,
+            }
+            .into());
+        }
+        self.in_use += tb;
+        self.make_room();
+        Ok(())
+    }
+
+    /// Charge `tier` bytes and hand back a recycled buffer if one is
+    /// free-listed (stale contents are fine — see module docs).  `None`
+    /// means the caller allocates fresh.  Errors when the budget cannot
+    /// hold another `tier`.
+    pub fn acquire(&mut self, tier: usize) -> Result<Option<B>> {
+        let tb = self.tier_bytes(tier);
+        if let Some(buf) = self.free.get_mut(&tier).and_then(Vec::pop) {
+            // Reuse moves bytes free -> live; in_use still has to fit.
+            if self.in_use.saturating_add(tb) > self.budget {
+                self.free.entry(tier).or_default().push(buf);
+                return Err(PoolExhausted {
+                    in_use: self.in_use,
+                    wanted: tb,
+                    budget: self.budget,
+                }
+                .into());
+            }
+            self.in_use += tb;
+            self.free_bytes -= tb;
+            self.reuses += 1;
+            return Ok(Some(buf));
+        }
+        self.charge(tier)?;
+        Ok(None)
+    }
+
+    /// Charge the byte delta of growing `from` → `to` (the migration
+    /// path: the old buffer is released separately via
+    /// [`KvPool::release`]).  Errors when the grown tier cannot fit.
+    pub fn migrate_charge(&mut self, from: usize, to: usize) -> Result<()> {
+        let (fb, tb) = (self.tier_bytes(from), self.tier_bytes(to));
+        let grown = self.in_use.saturating_sub(fb).saturating_add(tb);
+        if grown > self.budget {
+            return Err(PoolExhausted {
+                in_use: self.in_use,
+                wanted: tb.saturating_sub(fb),
+                budget: self.budget,
+            }
+            .into());
+        }
+        self.in_use = grown;
+        self.make_room();
+        Ok(())
+    }
+
+    /// Credit `tier` bytes back; a returned buffer is free-listed for
+    /// reuse when it still fits the budget, dropped otherwise.
+    pub fn release(&mut self, tier: usize, buf: Option<B>) {
+        let tb = self.tier_bytes(tier);
+        self.in_use = self.in_use.saturating_sub(tb);
+        if let Some(b) = buf {
+            self.donate(tier, b);
+        }
+    }
+
+    /// Free-list a buffer the pool no longer charges as live — the
+    /// outgrown buffer left behind by a tier migration (its bytes were
+    /// re-pointed at the new tier by [`KvPool::migrate_charge`]).
+    /// Dropped instead when keeping it would overrun the budget.
+    pub fn donate(&mut self, tier: usize, buf: B) {
+        let tb = self.tier_bytes(tier);
+        if self.resident_bytes() + tb <= self.budget {
+            self.free.entry(tier).or_default().push(buf);
+            self.free_bytes += tb;
+        }
+    }
+
+    /// Drop evictable bytes (free list first, then LRU prefix entries)
+    /// until total residency fits the budget again.
+    fn make_room(&mut self) {
+        while self.resident_bytes() > self.budget && self.free_bytes > 0 {
+            let tier = self
+                .free
+                .iter()
+                .find_map(|(&t, v)| (!v.is_empty()).then_some(t));
+            let Some(tier) = tier else { break };
+            if self.free.get_mut(&tier).and_then(Vec::pop).is_some() {
+                self.free_bytes -= self.tier_bytes(tier);
+            }
+        }
+        while self.resident_bytes() > self.budget && !self.prefix.is_empty() {
+            self.evict_coldest_prefix();
+        }
+    }
+
+    fn evict_coldest_prefix(&mut self) {
+        let coldest = self
+            .prefix
+            .iter()
+            .min_by_key(|(_, e)| e.stamp)
+            .map(|(k, _)| k.clone());
+        if let Some(k) = coldest {
+            if let Some(e) = self.prefix.remove(&k) {
+                self.prefix_bytes -= e.bytes;
+                self.prefix_evictions += 1;
+            }
+        }
+    }
+
+    /// Longest cached prefix of `ids` for target stack `tag`, probing
+    /// quantized lengths (`quantum`, `2·quantum`, …, capped below the
+    /// full prompt) from longest down.  A hit refreshes the entry's LRU
+    /// stamp and hands out a shared reference to the immutable KV.
+    pub fn prefix_lookup(&mut self, tag: &str, ids: &[u32],
+                         quantum: usize) -> Option<PrefixHit<B>> {
+        let mut q = prefix_quantize(ids.len(), quantum)?;
+        self.clock += 1;
+        loop {
+            let key = (tag.to_string(), ids[..q].to_vec());
+            if let Some(e) = self.prefix.get_mut(&key) {
+                e.stamp = self.clock;
+                return Some(PrefixHit {
+                    kv: e.kv.clone(),
+                    len: e.len,
+                    tier: e.tier,
+                });
+            }
+            if q <= quantum {
+                return None;
+            }
+            q -= quantum;
+        }
+    }
+
+    /// True when `(tag, ids[..len])` is already cached — callers use it
+    /// to skip building a snapshot for an existing entry.
+    pub fn prefix_contains(&self, tag: &str, ids: &[u32], len: usize) -> bool {
+        len <= ids.len()
+            && self
+                .prefix
+                .contains_key(&(tag.to_string(), ids[..len].to_vec()))
+    }
+
+    /// Insert an immutable prefix snapshot (`len` tokens, KV shaped for
+    /// `tier`).  First writer wins; cold entries are LRU-evicted to keep
+    /// the cache within its budget share.
+    pub fn prefix_insert(&mut self, tag: &str, ids: &[u32], len: usize,
+                         tier: usize, kv: Rc<B>) {
+        if len > ids.len() || self.prefix_contains(tag, ids, len) {
+            return;
+        }
+        let bytes = self.tier_bytes(tier);
+        if bytes > self.prefix_budget {
+            return;
+        }
+        while self.prefix_bytes + bytes > self.prefix_budget
+            && !self.prefix.is_empty()
+        {
+            self.evict_coldest_prefix();
+        }
+        self.clock += 1;
+        self.prefix_bytes += bytes;
+        self.prefix.insert(
+            (tag.to_string(), ids[..len].to_vec()),
+            PrefixEntry { kv, len, tier, bytes, stamp: self.clock },
+        );
+    }
+}
+
+/// Grow a host-resident KV cache `[l, 2, h, from, d]` → `[l, 2, h, to, d]`
+/// by zero-padding the sequence dim — the host fallback for tier
+/// migration (pad values are don't-care under the `arange(S) <= pos`
+/// mask, zeros keep it deterministic).
+pub fn host_grow(data: &[f32], l: usize, h: usize, d: usize, from: usize,
+                 to: usize) -> Vec<f32> {
+    let slabs = l * 2 * h;
+    debug_assert_eq!(data.len(), slabs * from * d);
+    let mut out = Vec::with_capacity(slabs * to * d);
+    for s in 0..slabs {
+        out.extend_from_slice(&data[s * from * d..(s + 1) * from * d]);
+        out.resize(out.len() + (to - from) * d, 0.0);
+    }
+    out
+}
+
+/// Device-side KV tier casts: `[l, 2, h, from, d]` → `[l, 2, h, to, d]`
+/// as a zero-pad graph (`from == to` is a plain copy), generated as HLO
+/// text and compiled once per shape (cached on the [`Runtime`], failure
+/// memoized).  Falls back to `None` — callers then take the
+/// download/grow/upload host path — when generation or compilation fails
+/// or `DPLLM_NO_DEVICE_STACK` disables runtime-generated device graphs.
+pub struct KvCaster {
+    rt: Arc<Runtime>,
+}
+
+impl KvCaster {
+    pub fn new(rt: Arc<Runtime>) -> KvCaster {
+        KvCaster { rt }
+    }
+
+    /// Cast `kv` from tier `from` to tier `to` on the device.  `None`
+    /// when the device path is unavailable for this shape.
+    pub fn cast(&self, dims: (usize, usize, usize), from: usize, to: usize,
+                kv: &PjRtBuffer) -> Option<PjRtBuffer> {
+        let exe = self.exe_for(dims, from, to)?;
+        match exe.run_buffers(&[kv]) {
+            Ok(mut replica) if replica.len() == 1 => replica.pop(),
+            _ => None,
+        }
+    }
+
+    /// True when the device cast graph for this shape compiles.
+    pub fn device_side(&self, dims: (usize, usize, usize), from: usize,
+                       to: usize) -> bool {
+        self.exe_for(dims, from, to).is_some()
+    }
+
+    fn exe_for(&self, (l, h, d): (usize, usize, usize), from: usize,
+               to: usize) -> Option<Arc<Exe>> {
+        if std::env::var_os("DPLLM_NO_DEVICE_STACK").is_some() {
+            return None;
+        }
+        let key = (l, h, d, from, to);
+        let mut cache = self.rt.kv_exes.lock().unwrap();
+        if let Some(e) = cache.get(&key) {
+            return e.clone();
+        }
+        let built = self.build_exe(l, h, d, from, to).ok();
+        cache.insert(key, built.clone());
+        built
+    }
+
+    /// Parse + compile directly against the PJRT client (NOT
+    /// `Runtime::load` — that cache is keyed by path forever and these
+    /// temp paths are process-unique; the compiled Exe goes into the
+    /// shape-keyed `kv_exes` map instead).  Same temp-path discipline as
+    /// `stack::Stacker::build_exe`.
+    fn build_exe(&self, l: usize, h: usize, d: usize, from: usize,
+                 to: usize) -> Result<Arc<Exe>> {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        let text = kv_cast_hlo_text(l, h, d, from, to);
+        let path = std::env::temp_dir().join(format!(
+            "dpllm_kvcast_{l}x{h}x{d}_{from}to{to}_{}_{seq}.hlo",
+            std::process::id()
+        ));
+        std::fs::write(&path, text)
+            .with_context(|| format!("writing {}", path.display()))?;
+        let entry = HloEntry {
+            path: path.to_string_lossy().into_owned(),
+            args: vec!["p0".into()],
+            outputs: vec!["kv".into()],
+        };
+        let compiled = (|| -> Result<Arc<Exe>> {
+            let proto = xla::HloModuleProto::from_text_file(&entry.path)
+                .map_err(wrap)
+                .with_context(|| format!("parsing {}", entry.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .rt
+                .client
+                .compile(&comp)
+                .map_err(wrap)
+                .with_context(|| format!("compiling {}", entry.path))?;
+            Ok(Arc::new(Exe { exe, entry: entry.clone() }))
+        })();
+        let _ = std::fs::remove_file(&path);
+        compiled
+    }
+}
+
+/// HLO text of the tier cast: zero high-pad on the sequence dim (dim 3),
+/// or a plain `copy` when `from == to` (prefix snapshot).
+fn kv_cast_hlo_text(l: usize, h: usize, d: usize, from: usize,
+                    to: usize) -> String {
+    let src = format!("f32[{l},2,{h},{from},{d}]{{4,3,2,1,0}}");
+    let dst = format!("f32[{l},2,{h},{to},{d}]{{4,3,2,1,0}}");
+    let mut s = String::new();
+    let _ = writeln!(s, "HloModule kvcast_{l}x{h}x{d}_{from}to{to}\n");
+    let _ = writeln!(s, "ENTRY %main {{");
+    let _ = writeln!(s, "  %p0 = {src} parameter(0)");
+    if from == to {
+        let _ = writeln!(s, "  ROOT %kv = {dst} copy({src} %p0)");
+    } else {
+        let _ = writeln!(s, "  %zero = f32[] constant(0)");
+        let _ = writeln!(
+            s,
+            "  ROOT %kv = {dst} pad({src} %p0, f32[] %zero), \
+             padding=0_0x0_0x0_0x0_{}x0_0",
+            to - from
+        );
+    }
+    let _ = writeln!(s, "}}");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_ladder_doubles_and_caps_at_max_seq() {
+        assert_eq!(tier_ladder(640, 128), vec![128, 256, 512, 640]);
+        assert_eq!(tier_ladder(512, 128), vec![128, 256, 512]);
+        assert_eq!(tier_ladder(100, 128), vec![100]);
+        assert_eq!(tier_for(&[128, 256, 640], 1), Some(128));
+        assert_eq!(tier_for(&[128, 256, 640], 129), Some(256));
+        assert_eq!(tier_for(&[128, 256, 640], 641), None);
+    }
+
+    #[test]
+    fn prefix_quantize_caps_below_full_prompt() {
+        // 300 tokens at quantum 128: shareable prefix is 256 — the final
+        // chunk (tokens 256..300) must stay uncached so a hit still runs
+        // the logits-producing dispatch.
+        assert_eq!(prefix_quantize(300, 128), Some(256));
+        // An exact multiple shares one quantum less than the whole.
+        assert_eq!(prefix_quantize(256, 128), Some(128));
+        assert_eq!(prefix_quantize(129, 128), Some(128));
+        assert_eq!(prefix_quantize(128, 128), None);
+        assert_eq!(prefix_quantize(5, 0), None);
+    }
+
+    #[test]
+    fn parse_bytes_suffixes() {
+        assert_eq!(parse_bytes("4096").unwrap(), 4096);
+        assert_eq!(parse_bytes("64k").unwrap(), 64 << 10);
+        assert_eq!(parse_bytes("512M").unwrap(), 512 << 20);
+        assert_eq!(parse_bytes("2g").unwrap(), 2 << 30);
+        assert!(parse_bytes("lots").is_err());
+    }
+
+    /// Free-list reuse: release hands the buffer back to the next
+    /// same-tier acquisition without growing residency.
+    #[test]
+    fn free_list_reuse_skips_fresh_allocation() {
+        let mut p: KvPool<u32> = KvPool::new(usize::MAX, 10);
+        assert!(p.acquire(128).unwrap().is_none()); // fresh
+        assert_eq!(p.in_use_bytes(), 1280);
+        p.release(128, Some(7));
+        assert_eq!(p.in_use_bytes(), 0);
+        assert_eq!(p.free_bytes(), 1280);
+        assert_eq!(p.acquire(128).unwrap(), Some(7)); // recycled
+        assert_eq!(p.reuses, 1);
+        assert_eq!(p.in_use_bytes(), 1280);
+        assert_eq!(p.free_bytes(), 0);
+        // A different tier misses the free list.
+        p.release(128, Some(9));
+        assert!(p.acquire(256).unwrap().is_none());
+    }
+
+    /// Byte accounting: admission bounds, migration delta, release credit.
+    #[test]
+    fn budget_accounting_bounds_admission() {
+        // budget = 1000 bytes, 1 byte/token.
+        let mut p: KvPool<()> = KvPool::new(1000, 1);
+        assert!(p.would_admit(640));
+        assert!(p.acquire(640).unwrap().is_none());
+        assert!(!p.would_admit(640));
+        assert!(p.would_admit(256));
+        assert!(p.acquire(640).is_err());
+        assert!(p.acquire(256).unwrap().is_none());
+        assert_eq!(p.in_use_bytes(), 896);
+        // 256 -> 512 would need 896 - 256 + 512 = 1152 > 1000.
+        assert!(p.migrate_charge(256, 512).is_err());
+        p.release(640, None);
+        assert!(p.migrate_charge(256, 512).is_ok());
+        assert_eq!(p.in_use_bytes(), 512);
+        assert_eq!(p.pressure(), 0.512);
+        // Free-listed bytes yield: a buffer that no longer fits is dropped.
+        p.release(512, Some(()));
+        assert_eq!(p.free_bytes(), 512);
+        assert!(p.acquire(640).unwrap().is_none());
+        assert_eq!(p.free_bytes(), 0, "free list evicted to fit the budget");
+        assert!(p.resident_bytes() <= 1000);
+    }
+
+    /// Unbounded pools report zero pressure and admit everything.
+    #[test]
+    fn unbounded_pool_never_rejects() {
+        let mut p: KvPool<()> = KvPool::new(usize::MAX, 1 << 20);
+        for _ in 0..100 {
+            assert!(p.acquire(640).is_ok());
+        }
+        assert_eq!(p.pressure(), 0.0);
+    }
+
+    /// LRU eviction of cold prefix entries under the prefix byte budget.
+    #[test]
+    fn prefix_cache_lru_evicts_coldest() {
+        // budget 1024 -> prefix budget 256; tier 64 at 1 B/token = 64 B
+        // per entry -> 4 entries fit.
+        let mut p: KvPool<()> = KvPool::new(1024, 1);
+        let ids: Vec<u32> = (0..200).collect();
+        for len in [64usize, 128, 192] {
+            p.prefix_insert("4.0", &ids, len, 64, Rc::new(()));
+        }
+        assert_eq!(p.prefix_entries(), 3);
+        // Touch the len=64 entry so len=128 becomes the coldest.
+        assert!(p.prefix_lookup("4.0", &ids[..65], 64).is_some());
+        p.prefix_insert("4.0", &ids[..100], 96, 64, Rc::new(()));
+        p.prefix_insert("8.0", &ids, 64, 64, Rc::new(()));
+        assert_eq!(p.prefix_entries(), 4);
+        assert_eq!(p.prefix_evictions, 1);
+        assert!(p.prefix_lookup("4.0", &ids[..65], 64).is_some(),
+                "recently-touched entry survived");
+        // The cold len=128 entry is gone: a 129-token prompt now falls
+        // back to its 64-token prefix.
+        let hit = p.prefix_lookup("4.0", &ids[..129], 64).unwrap();
+        assert_eq!(hit.len, 64);
+    }
+
+    /// Longest-prefix probing and stack-identity keying.
+    #[test]
+    fn prefix_lookup_probes_longest_first_and_keys_on_tag() {
+        let mut p: KvPool<()> = KvPool::new(usize::MAX, 1);
+        let ids: Vec<u32> = (0..300).collect();
+        p.prefix_insert("4.0", &ids, 128, 128, Rc::new(()));
+        p.prefix_insert("4.0", &ids, 256, 256, Rc::new(()));
+        let hit = p.prefix_lookup("4.0", &ids, 128).unwrap();
+        assert_eq!((hit.len, hit.tier), (256, 256));
+        // Other stack identity: no sharing across precision targets.
+        assert!(p.prefix_lookup("8.0", &ids, 128).is_none());
+        // Diverging tokens past the first quantum: falls back to 128.
+        let mut other = ids.clone();
+        other[200] = 9999;
+        assert_eq!(p.prefix_lookup("4.0", &other, 128).unwrap().len, 128);
+        // First writer wins: re-inserting under a live key is a no-op.
+        p.prefix_insert("4.0", &ids, 256, 256, Rc::new(()));
+        assert_eq!(p.prefix_entries(), 2);
+    }
+
+    #[test]
+    fn host_grow_pads_sequence_dim_with_zeros() {
+        // l=1, h=1, d=2, from=2 -> to=4: two slabs (k and v).
+        let data: Vec<f32> = (1..=8).map(|x| x as f32).collect();
+        let out = host_grow(&data, 1, 1, 2, 2, 4);
+        assert_eq!(out.len(), 16);
+        assert_eq!(&out[..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&out[4..8], &[0.0; 4]);
+        assert_eq!(&out[8..12], &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(&out[12..], &[0.0; 4]);
+    }
+
+    #[test]
+    fn kv_cast_hlo_text_pad_shape() {
+        let t = kv_cast_hlo_text(2, 4, 8, 256, 512);
+        assert!(t.contains("HloModule kvcast_2x4x8_256to512"));
+        assert!(t.contains("%p0 = f32[2,2,4,256,8]{4,3,2,1,0} parameter(0)"));
+        assert!(t.contains("%zero = f32[] constant(0)"));
+        assert!(t.contains(
+            "ROOT %kv = f32[2,2,4,512,8]{4,3,2,1,0} \
+             pad(f32[2,2,4,256,8]{4,3,2,1,0} %p0, f32[] %zero), \
+             padding=0_0x0_0x0_0x0_256x0_0"
+        ));
+    }
+
+    #[test]
+    fn kv_cast_hlo_text_same_tier_is_copy() {
+        let t = kv_cast_hlo_text(2, 4, 8, 256, 256);
+        assert!(t.contains("ROOT %kv = f32[2,2,4,256,8]{4,3,2,1,0} copy("));
+        assert!(!t.contains(" pad("));
+    }
+}

@@ -15,6 +15,7 @@
 //!   GenState tests assert it through these counters.
 
 pub mod decode;
+pub mod kvpool;
 pub mod spec;
 pub mod stack;
 
@@ -45,6 +46,10 @@ pub struct TransferStats {
     spec_accepted: AtomicU64,
     spec_verify_dispatches: AtomicU64,
     prefill_chunks: AtomicU64,
+    kv_bytes_resident: AtomicU64,
+    kv_migrations: AtomicU64,
+    prefix_hits: AtomicU64,
+    prefix_prefills_saved: AtomicU64,
 }
 
 /// A point-in-time copy of [`TransferStats`].
@@ -90,6 +95,23 @@ pub struct TransferSnapshot {
     /// ingestion units the serving core interleaves with decode steps
     /// (at most one per scheduling round — DESIGN.md §Prefill).
     pub prefill_chunks: u64,
+    /// KV-cache bytes hard-committed to live generation tiers in the
+    /// [`kvpool::KvPool`] (free-listed and prefix-cached bytes are
+    /// evictable and reported separately via the pool's `memory_json`).
+    /// A gauge, not a monotone counter — admission and tier acquisition
+    /// add, release subtracts (DESIGN.md §Memory).
+    pub kv_bytes_resident: u64,
+    /// Tier migrations: a generation outgrew its KV tier and carried its
+    /// cache into the next tier (device-side pad or host copy).  Each is
+    /// one extra dispatch amortized over a whole tier worth of tokens.
+    pub kv_migrations: u64,
+    /// Shared-prefix cache hits: admissions that started from a cached
+    /// prompt-prefix KV instead of prefilling from scratch.
+    pub prefix_hits: u64,
+    /// `prefill_chunk_<P>` dispatches avoided by prefix-cache hits — the
+    /// direct savings meter: N requests sharing one prompt prefix pay
+    /// ~1/N of the chunk dispatches (DESIGN.md §Memory).
+    pub prefix_prefills_saved: u64,
 }
 
 impl TransferStats {
@@ -132,6 +154,34 @@ impl TransferStats {
         self.prefill_chunks.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Charge `bytes` of KV-cache residency against the pool gauge.
+    pub fn count_kv_acquire(&self, bytes: u64) {
+        self.kv_bytes_resident.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Credit `bytes` of KV-cache residency back (release / eviction).
+    /// Saturates at zero so a double-release can never wrap the gauge.
+    pub fn count_kv_release(&self, bytes: u64) {
+        let _ = self.kv_bytes_resident.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| Some(v.saturating_sub(bytes)),
+        );
+    }
+
+    /// Record one KV tier migration (generation outgrew its tier).
+    pub fn count_kv_migration(&self) {
+        self.kv_migrations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one shared-prefix cache hit that avoided `chunks_saved`
+    /// prefill-chunk dispatches.
+    pub fn count_prefix_hit(&self, chunks_saved: u64) {
+        self.prefix_hits.fetch_add(1, Ordering::Relaxed);
+        self.prefix_prefills_saved
+            .fetch_add(chunks_saved, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> TransferSnapshot {
         TransferSnapshot {
             uploads: self.uploads.load(Ordering::Relaxed),
@@ -146,6 +196,12 @@ impl TransferStats {
                 .spec_verify_dispatches
                 .load(Ordering::Relaxed),
             prefill_chunks: self.prefill_chunks.load(Ordering::Relaxed),
+            kv_bytes_resident: self.kv_bytes_resident.load(Ordering::Relaxed),
+            kv_migrations: self.kv_migrations.load(Ordering::Relaxed),
+            prefix_hits: self.prefix_hits.load(Ordering::Relaxed),
+            prefix_prefills_saved: self
+                .prefix_prefills_saved
+                .load(Ordering::Relaxed),
         }
     }
 }
@@ -170,6 +226,14 @@ pub struct Runtime {
     /// per-session [`stack::Stacker`], so sibling sessions share one
     /// compile per shape — see `stack.rs`.
     stack_exes: Mutex<HashMap<(usize, usize, usize), Option<std::sync::Arc<Exe>>>>,
+    /// Compiled KV tier-migration / snapshot graphs keyed by
+    /// `(layers, heads, head_dim, from_seq, to_seq)` (`from == to` is the
+    /// plain copy used for prefix snapshots; `None` = compilation failed
+    /// once, don't retry).  Shared across sessions like `stack_exes` —
+    /// see `kvpool.rs`.
+    kv_exes: Mutex<
+        HashMap<(usize, usize, usize, usize, usize), Option<std::sync::Arc<Exe>>>,
+    >,
     transfers: TransferStats,
 }
 
@@ -180,6 +244,7 @@ impl Runtime {
             client,
             cache: Mutex::new(HashMap::new()),
             stack_exes: Mutex::new(HashMap::new()),
+            kv_exes: Mutex::new(HashMap::new()),
             transfers: TransferStats::default(),
         })
     }
@@ -395,6 +460,10 @@ mod tests {
         t.count_spec_round(2, 0);
         t.count_prefill_chunk();
         t.count_prefill_chunk();
+        t.count_kv_acquire(4096);
+        t.count_kv_release(1024);
+        t.count_kv_migration();
+        t.count_prefix_hit(3);
         let b = t.snapshot();
         assert_eq!(b.uploads_since(&a), 2);
         assert_eq!(b.upload_bytes_since(&a), 192);
@@ -406,5 +475,12 @@ mod tests {
         assert_eq!(b.spec_drafted - a.spec_drafted, 6);
         assert_eq!(b.spec_accepted - a.spec_accepted, 3);
         assert_eq!(b.prefill_chunks - a.prefill_chunks, 2);
+        assert_eq!(b.kv_bytes_resident, 3072);
+        assert_eq!(b.kv_migrations - a.kv_migrations, 1);
+        assert_eq!(b.prefix_hits - a.prefix_hits, 1);
+        assert_eq!(b.prefix_prefills_saved - a.prefix_prefills_saved, 3);
+        // The residency gauge saturates instead of wrapping on over-release.
+        t.count_kv_release(1 << 40);
+        assert_eq!(t.snapshot().kv_bytes_resident, 0);
     }
 }

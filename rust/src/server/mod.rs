@@ -15,8 +15,12 @@
 //! scheduled, not synchronous (DESIGN.md §Prefill): admission allocates
 //! the slot and the core interleaves one prefill chunk per token round,
 //! so a long prompt neither stalls active decodes nor caps at a prefill
-//! bucket — and a rejected admission answers 400 to ITS connection while
-//! the loop keeps serving.
+//! bucket — and a rejected admission answers ITS connection only while
+//! the loop keeps serving.  Rejections are classified (DESIGN.md
+//! §Memory): a malformed request (empty tokenization, over-long prompt)
+//! is a 400, while transient capacity pressure (core slots full, KV pool
+//! exhausted) is a **503 with a `Retry-After` header** — the client did
+//! nothing wrong and the same request succeeds once load drains.
 //!
 //! Endpoints:
 //!   POST /generate  {"prompt": str, "max_new"?: int, "qos_ms_per_token"?: f,
@@ -24,10 +28,12 @@
 //!                   -> {"text", "target", "effective_bits", "tpot_ms",
 //!                       "ttft_ms", "retargets", "output_tokens"}
 //!   GET  /health    -> {"status": "ok", "targets": [...]}
-//!   GET  /metrics   -> summary JSON + a `counters` object: one
+//!   GET  /metrics   -> summary JSON + a `counters` object (one
 //!                      serialized snapshot of every runtime counter
-//!                      family (transfers, weight cache, batching,
-//!                      speculation — `coordinator::metrics::counters_json`)
+//!                      family — transfers, weight cache, batching,
+//!                      speculation, KV pool) + a `memory` object (the
+//!                      combined weight-cache/KV byte report —
+//!                      `coordinator::metrics::memory_json`)
 //!
 //! Hardening: request bodies are capped at [`MAX_BODY_BYTES`]; a POST
 //! without a parseable `Content-Length`, or with one over the cap, is
@@ -46,7 +52,9 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::qos::{QosBudget, UtilizationSim};
 use crate::coordinator::sched::{Request, RequestQueue, SchedPolicy};
-use crate::coordinator::service::{CoreConfig, CoreEvent, ServingCore, ServingEngine};
+use crate::coordinator::service::{
+    is_capacity_reject, CoreConfig, CoreEvent, ServingCore, ServingEngine,
+};
 use crate::util::json::Json;
 
 /// Hard cap on request-body size; larger Content-Lengths are rejected with
@@ -195,8 +203,9 @@ impl Server {
                             // per-id events when a queue drives the core
                             // (admit_from); this executor admits directly
                             // in admit_ready, so the arm is defensive.
-                            CoreEvent::Error { id, error } => {
-                                respond(&mut pending, id, error_json(400, &error));
+                            CoreEvent::Error { id, error, capacity } => {
+                                let body = reject_response(&error, capacity);
+                                respond(&mut pending, id, body);
                             }
                             CoreEvent::Token { .. } => {}
                         }
@@ -210,12 +219,31 @@ impl Server {
     }
 }
 
+/// Seconds a capacity-rejected client is told to wait before retrying.
+/// Deliberately short: the pool drains at token cadence, so pressure
+/// clears in tens to hundreds of milliseconds — 1s is the smallest
+/// integral `Retry-After` value HTTP allows.
+const RETRY_AFTER_SECS: &str = "1";
+
+/// Status-mapped rejection body: malformed request → 400, transient
+/// capacity pressure (core full / KV pool exhausted) → 503 with a
+/// `Retry-After` header so well-behaved clients back off and retry.
+fn reject_response(error: &str, capacity: bool) -> String {
+    if capacity {
+        error_json_with(503, "Service Unavailable", error,
+                        &[("Retry-After", RETRY_AFTER_SECS)])
+    } else {
+        error_json(400, error)
+    }
+}
+
 /// Pull queued requests into the core while it has free slots (pinned
 /// targets bypass the QoS policy).  Admission is non-blocking (no
 /// prefill runs inside it — the core's step() schedules the chunks), and
-/// a rejection is terminal for THAT connection only: 400 to the waiting
-/// client (over-long prompt past `max_seq`, empty tokenization), while
-/// the executor loop and every in-flight generation keep serving.
+/// a rejection is terminal for THAT connection only — 400 to the waiting
+/// client for a malformed request (over-long prompt past `max_seq`,
+/// empty tokenization), 503 + `Retry-After` for capacity pressure —
+/// while the executor loop and every in-flight generation keep serving.
 fn admit_ready(core: &mut ServingCore<'_>, queue: &mut RequestQueue,
                pending: &mut HashMap<u64, Pending>, util: &mut UtilizationSim) {
     while core.has_capacity() && !queue.is_empty() {
@@ -232,7 +260,8 @@ fn admit_ready(core: &mut ServingCore<'_>, queue: &mut RequestQueue,
             None => core.admit(r, u),
         };
         if let Err(e) = admitted {
-            respond(pending, id, error_json(400, &format!("{e:#}")));
+            let body = reject_response(&format!("{e:#}"), is_capacity_reject(&e));
+            respond(pending, id, body);
         }
     }
 }
@@ -274,9 +303,12 @@ fn ingest(engine: &ServingEngine, core: &ServingCore<'_>,
                 .set("throughput_tok_s", s.throughput_tok_s)
                 // One serialized snapshot of every runtime counter
                 // family (transfers, weight cache, batching,
-                // speculation) — the shared serializer behind the
-                // examples' reports too.
-                .set("counters", engine.counters_json());
+                // speculation, KV pool) — the shared serializer behind
+                // the examples' reports too — plus the combined
+                // device-memory report (weight cache + KV tiers +
+                // cached prefixes vs their budgets).
+                .set("counters", engine.counters_json())
+                .set("memory", engine.memory_json());
             ok_json(&j)
         }
         Route::Generate => match parse_generate(id, &work.body) {
@@ -571,6 +603,22 @@ mod tests {
                                 &[("Allow", "POST")]);
         assert!(r.starts_with("HTTP/1.1 405 Method Not Allowed\r\n"));
         assert!(r.contains("Allow: POST\r\n"));
+    }
+
+    #[test]
+    fn capacity_reject_is_503_with_retry_after_invalid_is_400() {
+        // Capacity pressure: the client did nothing wrong — retryable.
+        let r = reject_response("core at capacity (4 slots)", true);
+        assert!(r.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(r.contains("Retry-After: 1\r\n"));
+        let body = r.split("\r\n\r\n").nth(1).unwrap();
+        assert!(Json::parse(body).unwrap().str_of("error").unwrap()
+            .contains("capacity"));
+        // Malformed request: same request will never succeed — 400, no
+        // Retry-After.
+        let r = reject_response("empty prompt", false);
+        assert!(r.starts_with("HTTP/1.1 400 Error\r\n"));
+        assert!(!r.contains("Retry-After"));
     }
 
     fn roundtrip(raw: &[u8]) -> Parsed {

@@ -7,6 +7,8 @@
 //! `DPLLM_ARTIFACTS` environment variable (pointing at a `make artifacts`
 //! output tree) AND the manifest actually existing.  Unset → skip.
 
+use std::cell::RefCell;
+use std::rc::Rc;
 use std::sync::Arc;
 
 use dp_llm::anyprec::GROUPS;
@@ -18,6 +20,7 @@ use dp_llm::evalharness::{build_session, build_session_with_cache, perplexity,
                           perplexity_batched, tasks, Method};
 use dp_llm::model::{art, artifacts_available, Manifest, ModelAssets};
 use dp_llm::runtime::decode::{DecodeSession, EstMode};
+use dp_llm::runtime::kvpool::{KvPool, SharedKvPool};
 use dp_llm::runtime::spec::{spec_round, GammaController, SpecState};
 use dp_llm::runtime::Runtime;
 use dp_llm::tokenizer::Tokenizer;
@@ -1080,7 +1083,7 @@ fn prefill_interleaves_one_chunk_per_round_and_splits_ttft() {
                     got[(*id - 1) as usize] += 1
                 }
                 CoreEvent::Failed { id, error }
-                | CoreEvent::Error { id, error } => {
+                | CoreEvent::Error { id, error, .. } => {
                     panic!("request {id} errored: {error}")
                 }
                 _ => {}
@@ -1151,4 +1154,137 @@ fn prefill_then_decode() {
     let out = session.advance(&mut gen, next, EstMode::Approx).unwrap();
     assert!(out.logits.iter().all(|v| v.is_finite()));
     assert_eq!(gen.pos, prompt.len() + 1);
+}
+
+/// Installs a byte-budgeted KV pool on a fresh session (what
+/// `ServingEngine::load` does for the whole adaptation set).
+fn with_kv_pool(session: &mut DecodeSession, budget: usize) {
+    let kv_len: usize = session.cfg.kv_shape().iter().product();
+    let bpt = kv_len / session.cfg.max_seq.max(1) * 4;
+    let pool: SharedKvPool =
+        Rc::new(RefCell::new(KvPool::new(budget, bpt)));
+    session.set_kv_pool(pool, "itest:4.00");
+}
+
+/// Tier-migrated generations are bit-exact against a max_seq-from-birth
+/// session: decoding through a sub-max tier graph and the zero-pad
+/// migration are numerically invisible, because the `arange(S) <= pos`
+/// mask makes every tail slot don't-care (DESIGN.md §Memory; the same
+/// invariant is pinned at the jax level in test_aot.py's tier tests).
+#[test]
+fn tier_migration_preserves_logits_bitwise() {
+    require_artifacts!();
+    let rt = Arc::new(Runtime::new().unwrap());
+    let assets = ModelAssets::load(MODEL).unwrap();
+    let manifest = Manifest::load().unwrap();
+    let m = Method::Dpllm { tag: "4.00".into() };
+    // Reference: no pool installed — born at max_seq, never migrates.
+    let plain = build_session(&rt, &assets, &manifest, 5, &m).unwrap();
+    // Tiered: pool installed — born at the smallest tier, migrates up.
+    let mut tiered = build_session(&rt, &assets, &manifest, 5, &m).unwrap();
+    with_kv_pool(&mut tiered, usize::MAX);
+    let tiers = tiered.kv_tiers();
+    if tiers.len() < 2 {
+        eprintln!("skipping: artifacts predate the KV tier graphs");
+        return;
+    }
+    let chunk = plain.max_prefill_chunk();
+    if chunk == 0 {
+        eprintln!("skipping: artifacts predate the prefill chunk graphs");
+        return;
+    }
+    // A prompt longer than the birth tier forces a mid-stream migration
+    // in the tiered session (the second chunk's bucket span overruns it).
+    let birth = tiers[0];
+    let prompt: Vec<u32> =
+        (0..birth as u32 + 32).map(|t| 2 + t % 61).collect();
+    let run = |session: &DecodeSession| {
+        let mut gen = session.begin_empty().unwrap();
+        let mut logits = None;
+        let mut at = 0usize;
+        while at < prompt.len() {
+            let n = chunk.min(prompt.len() - at);
+            logits = session
+                .prefill_advance(&mut gen, &prompt[at..at + n],
+                                 at + n == prompt.len())
+                .unwrap();
+            at += n;
+        }
+        let first = DecodeSession::argmax(logits.as_ref().unwrap()).unwrap();
+        let out = session.advance(&mut gen, first, EstMode::Approx).unwrap();
+        (logits.unwrap(), first, out.logits)
+    };
+    let before = rt.transfers().snapshot();
+    let (l_ref, t_ref, d_ref) = run(&plain);
+    let mid = rt.transfers().snapshot();
+    assert_eq!(mid.kv_migrations, before.kv_migrations,
+               "the pool-less reference must never migrate");
+    let (l_tier, t_tier, d_tier) = run(&tiered);
+    assert!(rt.transfers().snapshot().kv_migrations > mid.kv_migrations,
+            "the tiered generation must migrate at least once");
+    assert_eq!(t_ref, t_tier, "first sampled token must match");
+    assert_eq!(l_ref, l_tier, "prefill logits must be bit-exact");
+    assert_eq!(d_ref, d_tier,
+               "post-migration decode logits must be bit-exact");
+}
+
+/// Shared-prefix prefill cache: the second of two requests with an
+/// identical prompt prefix clones the published prefix KV (copy-on-write)
+/// and skips its prefix chunks, producing bit-identical first-token
+/// logits while `prefix_hits`/`prefix_prefills_saved` advance.
+#[test]
+fn shared_prefix_hit_reuses_kv_and_matches_first_token() {
+    require_artifacts!();
+    let rt = Arc::new(Runtime::new().unwrap());
+    let assets = ModelAssets::load(MODEL).unwrap();
+    let manifest = Manifest::load().unwrap();
+    let m = Method::Dpllm { tag: "4.00".into() };
+    let mut session = build_session(&rt, &assets, &manifest, 5, &m).unwrap();
+    with_kv_pool(&mut session, usize::MAX);
+    let chunk = session.max_prefill_chunk();
+    if chunk == 0 {
+        eprintln!("skipping: artifacts predate the prefill chunk graphs");
+        return;
+    }
+    // One full quantum plus a tail: the shareable prefix is the first
+    // `chunk` tokens; the final chunk stays uncached, so a hit still
+    // dispatches the graph that yields the first-token logits.
+    let prompt: Vec<u32> =
+        (0..chunk as u32 + 32).map(|t| 3 + t % 53).collect();
+    assert!(session.begin_from_prefix(&prompt).is_none(),
+            "cold cache must miss");
+    // Request A: full chunked prefill, publishing at the quantum boundary
+    // (exactly what ServingCore::prefill_step does).
+    let mut ga = session.begin_empty().unwrap();
+    let none = session
+        .prefill_advance(&mut ga, &prompt[..chunk], false)
+        .unwrap();
+    assert!(none.is_none(), "want_logits=false skips the logits download");
+    session.prefix_publish(&mut ga, &prompt, chunk);
+    let la = session
+        .prefill_advance(&mut ga, &prompt[chunk..], true)
+        .unwrap()
+        .expect("final chunk returns logits");
+    // Request B: prefix hit — only the final chunk is dispatched.
+    let before = rt.transfers().snapshot();
+    let (mut gb, len) = session
+        .begin_from_prefix(&prompt)
+        .expect("published prefix must hit");
+    assert_eq!(len, chunk);
+    assert_eq!(gb.pos, chunk);
+    let lb = session
+        .prefill_advance(&mut gb, &prompt[chunk..], true)
+        .unwrap()
+        .expect("final chunk returns logits");
+    let after = rt.transfers().snapshot();
+    assert_eq!(after.prefix_hits, before.prefix_hits + 1);
+    assert!(after.prefix_prefills_saved > before.prefix_prefills_saved,
+            "a hit must count its avoided prefix chunks");
+    assert_eq!(la, lb, "first-token logits must be bit-identical");
+    // Copy-on-write: each generation's next dispatch output is private,
+    // so both continue independently from the shared prefix.
+    let t0 = DecodeSession::argmax(&la).unwrap();
+    let oa = session.advance(&mut ga, t0, EstMode::Approx).unwrap();
+    let ob = session.advance(&mut gb, t0, EstMode::Approx).unwrap();
+    assert_eq!(oa.logits, ob.logits);
 }
