@@ -21,6 +21,10 @@ cargo bench --bench prefill_micro
 # accounting with a unit buffer type) — byte vs slot admission and
 # shared-prefix savings; emits results/BENCH_kvpool.json.
 cargo bench --bench kvpool_micro
+# Router scale-out microbench: sim replica workers behind the REAL
+# Router (class routing, work stealing, respawn) — throughput scaling
+# at 1/2/4 replicas + a chaos run; emits results/BENCH_router.json.
+cargo bench --bench router_micro
 # Python L2 gate: the jax-level parity tests (incl. the speculative
 # verify_step_g* vs sequential-decode contract) run whenever a python
 # with jax + pytest is available; a cargo-only environment skips them so

@@ -9,10 +9,13 @@
 use std::sync::Arc;
 
 use dp_llm::coordinator::qos::{QosBudget, UtilizationSim};
+use dp_llm::coordinator::router::{Router, RouterConfig, RouterEvent};
 use dp_llm::coordinator::sched::{Request, SchedPolicy};
 use dp_llm::coordinator::service::{make_queue, ServingEngine};
 use dp_llm::evalharness::tasks;
 use dp_llm::model::artifacts_available;
+use dp_llm::runtime::replica::sim::{sim_link, SimProfile};
+use dp_llm::runtime::replica::ReplicaSpec;
 use dp_llm::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
@@ -94,5 +97,62 @@ fn main() -> anyhow::Result<()> {
         println!("  req {:>4}  target {:.2}  eff-bits {:.3}  {} toks",
                  o.id, o.target_precision, o.effective_bits, o.output_tokens);
     }
+
+    // --- fleet view: the same QoS classes over a 2-replica router --------
+    // Scale-out happens one level above the engine: a precision-tiered
+    // fleet routes best-effort traffic to a low-bit economy replica and
+    // tight-SLO traffic to a high-bit premium one, stealing backlog when
+    // one side idles (DESIGN.md §Scale-out).  Simulated workers keep
+    // this section device-free; per-token time comes from the measured
+    // adaptation-set TPOTs above.
+    println!("\nfleet view (2 sim replicas, tiers 3.25/3.50 | 4.50/4.75):");
+    let tpot_lo = engine.policy.options.first().map(|&(_, ms)| ms)
+                        .unwrap_or(1.0);
+    let tpot_hi = engine.policy.options.last().map(|&(_, ms)| ms)
+                        .unwrap_or(2.0);
+    let token_us = ((tpot_lo * 1000.0) as u64).clamp(50, 5_000);
+    let specs = vec![
+        ReplicaSpec::sim(0, &["3.25", "3.50"], false, tpot_lo),
+        ReplicaSpec::sim(1, &["4.50", "4.75"], true, tpot_hi),
+    ];
+    let mut router = Router::new(
+        specs,
+        Box::new(move |spec| sim_link(spec, SimProfile {
+            token_us, slots: 4, ..SimProfile::default()
+        })),
+        RouterConfig::default(),
+    );
+    let mut pending = 0usize;
+    for i in 0..12u64 {
+        let qos = if i % 3 == 0 { QosBudget::best_effort() }
+                  else { QosBudget::tight(60.0) };
+        let r = Request::new(2000 + i, format!("fleet query {i}"), 12, qos);
+        let r = if i % 3 != 0 { r.with_deadline(5_000.0) } else { r };
+        if router.submit(r, None).is_none() {
+            pending += 1;
+        }
+    }
+    while pending > 0 {
+        for ev in router.poll() {
+            match ev {
+                RouterEvent::Done { replica, outcome } => {
+                    pending -= 1;
+                    println!(
+                        "  req {:>4} -> replica {replica}  target {:.2}  \
+                         {} toks",
+                        outcome.id, outcome.target_precision,
+                        outcome.output_tokens
+                    );
+                }
+                RouterEvent::Failed { .. }
+                | RouterEvent::Rejected { .. } => pending -= 1,
+                RouterEvent::Respawned { .. } => {}
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_micros(200));
+    }
+    println!("fleet replicas: {}", router.replicas_json().dump());
+    println!("fleet counters: {}", router.counters().json().dump());
+    router.shutdown();
     Ok(())
 }

@@ -18,12 +18,15 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use dp_llm::coordinator::qos::{QosBudget, UtilizationSim};
+use dp_llm::coordinator::router::{Router, RouterConfig};
 use dp_llm::coordinator::sched::{Request, RequestQueue, SchedPolicy};
 use dp_llm::coordinator::service::{CoreEvent, ServingCore, ServingEngine};
+use dp_llm::costmodel::{weight_bytes_at, JETSON_ORIN};
 use dp_llm::evalharness::tasks;
-use dp_llm::model::artifacts_available;
+use dp_llm::model::{artifacts_available, ModelAssets};
+use dp_llm::runtime::replica::{engine_link, ReplicaSpec};
 use dp_llm::runtime::Runtime;
-use dp_llm::server::{http_get, http_post, Server};
+use dp_llm::server::{http_get, http_post, RouterServer, Server};
 use dp_llm::util::json::Json;
 use dp_llm::util::stats::{mean, percentile};
 
@@ -155,6 +158,77 @@ fn main() -> anyhow::Result<()> {
                  j.f64_of("target").unwrap_or(0.0),
                  j.str_of("text").unwrap_or_default().chars().take(48).collect::<String>());
     }
+
+    // --- phase 3: precision-tiered fleet behind the router ---------------
+    // Two engine replicas over ONE shared Arc<ModelAssets> (each thread
+    // builds its own Runtime + ServingCore and materializes only its
+    // slice of the ladder), with class routing: best-effort traffic to
+    // the low-bit economy replica, tight-SLO to the high-bit premium
+    // one.  DESIGN.md §Scale-out.
+    println!("\n[e2e] phase 3: 2-replica fleet (economy 3.25/3.50 | \
+              premium 4.50/4.75)");
+    let fleet_addr = "127.0.0.1:8078";
+    let assets = Arc::new(ModelAssets::load("dpl-tiny")?);
+    let tiers: [&[&str]; 2] = [&["3.25", "3.50"], &["4.50", "4.75"]];
+    let specs: Vec<ReplicaSpec> = tiers.iter().enumerate().map(|(i, tags)| {
+        let targets: Vec<f64> =
+            tags.iter().filter_map(|t| t.parse().ok()).collect();
+        let cheapest = targets.iter().copied().fold(f64::INFINITY, f64::min);
+        ReplicaSpec {
+            id: i,
+            model: "dpl-tiny".to_string(),
+            budget: 5,
+            tags: tags.iter().map(|t| t.to_string()).collect(),
+            targets,
+            premium: i == 1,
+            tpot_ms: JETSON_ORIN.stream_ms(
+                weight_bytes_at(&assets.store, cheapest)),
+            core: dp_llm::coordinator::service::CoreConfig::default(),
+            heartbeat_ms: 200,
+        }
+    }).collect();
+    let spawn_assets = assets.clone();
+    let router = Router::new(
+        specs,
+        Box::new(move |spec| engine_link(spec, spawn_assets.clone())),
+        RouterConfig::default(),
+    );
+    let fleet = RouterServer::new(router);
+    let fleet_stop = fleet.stop_handle();
+    let fleet_prompts: Vec<String> =
+        (0..4).map(|i| format!("A fleet request, number {i}.")).collect();
+    let fleet_client = std::thread::spawn(move || -> anyhow::Result<()> {
+        for _ in 0..200 {
+            if http_get(fleet_addr, "/health").is_ok() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+        for (i, p) in fleet_prompts.iter().enumerate() {
+            let mut body = Json::obj();
+            body.set("prompt", p.as_str()).set("max_new", 8usize);
+            if i % 2 == 1 {
+                // tight per-token budget + deadline -> premium tier
+                body.set("qos_ms_per_token", 120.0)
+                    .set("deadline_ms", 5_000.0);
+            }
+            let j = http_post(fleet_addr, "/generate", &body.dump())?;
+            println!("[e2e]   fleet req {i}: replica {} target {:.2} \
+                      ({} toks)",
+                     j.f64_of("replica").unwrap_or(-1.0),
+                     j.f64_of("target").unwrap_or(0.0),
+                     j.f64_of("output_tokens").unwrap_or(0.0));
+        }
+        // The fleet /metrics adds the per-replica `replicas` array:
+        // tier, queue depth, tokens/s EWMA, steals, respawns.
+        let m = http_get(fleet_addr, "/metrics")?;
+        println!("[e2e] fleet /metrics -> {}", m.dump());
+        fleet_stop.store(true, Ordering::Relaxed);
+        Ok(())
+    });
+    fleet.serve(fleet_addr)?;
+    fleet_client.join().unwrap()?;
+
     println!("[e2e] OK — all three layers composed on the request path");
     Ok(())
 }

@@ -1,0 +1,277 @@
+//! Multi-replica router microbench (DESIGN.md §Scale-out).
+//!
+//! Entirely artifact-free: simulated replica workers (fixed per-token
+//! service time, bounded active slots) behind the REAL [`Router`] —
+//! class routing, queue-depth dispatch, work stealing, capacity retries
+//! and respawn all run the production code paths; only the decode loop
+//! is simulated.  No device, no model, so it runs in every CI.
+//!
+//! Part 1 — saturation throughput scaling: 120 requests (16 tokens
+//! each) submitted upfront over fleets of {1, 2, 4} replicas × class
+//! mixes {balanced, premium-heavy, economy-heavy}.  Reported per cell:
+//! aggregate tokens/s, speedup vs the 1-replica fleet of the same mix,
+//! p99 queue delay (time-to-first-token minus the simulated service
+//! time) and steal count.  The acceptance bar is ≥ 1.5× tokens/s for
+//! 2 replicas vs 1 at saturation.
+//!
+//! Part 2 — chaos: one replica panics mid-run; the fleet must finish
+//! every healthy request, report the respawn, and keep both classes
+//! flowing.
+//!
+//! Results land in `results/BENCH_router.json`.
+
+use std::time::{Duration, Instant};
+
+use dp_llm::bench_support as bs;
+use dp_llm::coordinator::router::{Router, RouterConfig, RouterEvent};
+use dp_llm::coordinator::sched::Request;
+use dp_llm::coordinator::QosBudget;
+use dp_llm::runtime::replica::sim::{sim_link, SimProfile};
+use dp_llm::runtime::replica::ReplicaSpec;
+use dp_llm::util::json::Json;
+
+/// Simulated per-token service time of one replica round.
+const TOKEN_US: u64 = 200;
+/// Active-generation slots per replica (the sim's `max_active`).
+const SLOTS: usize = 4;
+const N_REQUESTS: usize = 120;
+const MAX_NEW: usize = 16;
+
+/// A fleet of `n` sim replicas: lower half economy (low-bit slice),
+/// upper half premium (high-bit slice) — the same tiering the CLI
+/// builds for `--replicas n`.
+fn fleet(n: usize, profile: SimProfile) -> Router {
+    let specs: Vec<ReplicaSpec> = (0..n)
+        .map(|i| {
+            let premium = i >= n / 2 && n > 1;
+            let tags: &[&str] = if premium {
+                &["4.50", "4.75"]
+            } else {
+                &["3.25", "3.50"]
+            };
+            ReplicaSpec::sim(i, tags, premium, TOKEN_US as f64 / 1000.0)
+        })
+        .collect();
+    Router::new(
+        specs,
+        Box::new(move |spec| sim_link(spec, profile.clone())),
+        RouterConfig::default(),
+    )
+}
+
+/// Deterministic request mix: request i is premium (tight per-token
+/// budget + deadline) when `(i * 7919) % 100` falls under the premium
+/// percentage.
+fn requests(premium_pct: usize) -> Vec<Request> {
+    (0..N_REQUESTS as u64)
+        .map(|i| {
+            let premium = (i * 7919) % 100 < premium_pct as u64;
+            let qos = if premium {
+                QosBudget::tight(5.0)
+            } else {
+                QosBudget::best_effort()
+            };
+            let r = Request::new(i, format!("bench prompt {i}"), MAX_NEW, qos);
+            if premium { r.with_deadline(10_000.0) } else { r }
+        })
+        .collect()
+}
+
+struct Cell {
+    replicas: usize,
+    mix: &'static str,
+    premium_pct: usize,
+    tokens_per_s: f64,
+    p99_queue_ms: f64,
+    steals: u64,
+    retries: u64,
+    completed: usize,
+}
+
+/// Submit every request upfront (saturation), then poll the router to
+/// completion.  Returns the measured cell.
+fn run_cell(n: usize, mix: &'static str, premium_pct: usize) -> Cell {
+    let mut router = fleet(n, SimProfile { token_us: TOKEN_US, slots: SLOTS,
+                                           ..SimProfile::default() });
+    let reqs = requests(premium_pct);
+    let start = Instant::now();
+    let mut terminal = 0usize;
+    let mut queue_ms: Vec<f64> = Vec::with_capacity(N_REQUESTS);
+    let mut tokens = 0usize;
+    for r in reqs {
+        if router.submit(r, None).is_some() {
+            terminal += 1; // immediate reject (should not happen here)
+        }
+    }
+    let deadline = start + Duration::from_secs(30);
+    while terminal < N_REQUESTS {
+        assert!(Instant::now() < deadline, "router bench wedged");
+        for ev in router.poll() {
+            match ev {
+                RouterEvent::Done { outcome, .. } => {
+                    terminal += 1;
+                    tokens += outcome.output_tokens;
+                    // Queue delay = TTFT minus one simulated service
+                    // round (the token the replica actually computed).
+                    queue_ms
+                        .push((outcome.ttft_ms - TOKEN_US as f64 / 1000.0)
+                              .max(0.0));
+                }
+                RouterEvent::Failed { .. } | RouterEvent::Rejected { .. } => {
+                    terminal += 1;
+                }
+                RouterEvent::Respawned { .. } => {}
+            }
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    router.shutdown();
+    queue_ms.sort_by(|a, b| a.total_cmp(b));
+    let p99 = queue_ms
+        .get(((queue_ms.len() as f64 * 0.99).ceil() as usize)
+             .saturating_sub(1))
+        .copied()
+        .unwrap_or(0.0);
+    let c = router.counters();
+    Cell {
+        replicas: n,
+        mix,
+        premium_pct,
+        tokens_per_s: tokens as f64 / elapsed.max(1e-9),
+        p99_queue_ms: p99,
+        steals: c.steals,
+        retries: c.retries,
+        completed: queue_ms.len(),
+    }
+}
+
+/// Chaos run: replica 0 panics mid-run; the fleet must still finish
+/// every request (completed or capacity-rejected died-inflight work)
+/// and respawn the dead worker.
+fn run_chaos() -> (usize, usize, u64) {
+    let n = 2usize;
+    let mut router = fleet(
+        n,
+        SimProfile {
+            token_us: TOKEN_US,
+            slots: SLOTS,
+            panic_after_tokens: Some((N_REQUESTS * MAX_NEW / 8) as u64),
+            ..SimProfile::default()
+        },
+    );
+    let start = Instant::now();
+    let (mut done, mut rejected, mut respawns) = (0usize, 0usize, 0u64);
+    for r in requests(50) {
+        if router.submit(r, None).is_some() {
+            rejected += 1;
+        }
+    }
+    let deadline = start + Duration::from_secs(30);
+    while done + rejected < N_REQUESTS {
+        assert!(Instant::now() < deadline, "chaos bench wedged");
+        for ev in router.poll() {
+            match ev {
+                RouterEvent::Done { .. } => done += 1,
+                RouterEvent::Failed { .. } | RouterEvent::Rejected { .. } => {
+                    rejected += 1;
+                }
+                RouterEvent::Respawned { .. } => respawns += 1,
+            }
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    router.shutdown();
+    (done, rejected, respawns)
+}
+
+fn main() {
+    let mixes: [(&str, usize); 3] =
+        [("balanced", 50), ("premium-heavy", 80), ("economy-heavy", 20)];
+    let counts = [1usize, 2, 4];
+
+    let mut rows = Vec::new();
+    let mut cells: Vec<Cell> = Vec::new();
+    for &(mix, pct) in &mixes {
+        for &n in &counts {
+            cells.push(run_cell(n, mix, pct));
+        }
+    }
+
+    println!(
+        "router saturation: {N_REQUESTS} reqs x {MAX_NEW} toks, sim \
+         {TOKEN_US} us/token x {SLOTS} slots per replica:"
+    );
+    let mut json_rows = Vec::new();
+    let mut speedup_2x_balanced = 0.0f64;
+    for c in &cells {
+        let base = cells
+            .iter()
+            .find(|b| b.replicas == 1 && b.mix == c.mix)
+            .map(|b| b.tokens_per_s)
+            .unwrap_or(c.tokens_per_s);
+        let speedup = c.tokens_per_s / base.max(1e-9);
+        if c.mix == "balanced" && c.replicas == 2 {
+            speedup_2x_balanced = speedup;
+        }
+        println!(
+            "  {:>13} x{}: {:8.0} tok/s ({speedup:4.2}x), p99 queue \
+             {:7.2} ms, steals {:>3}, retries {}",
+            c.mix, c.replicas, c.tokens_per_s, c.p99_queue_ms, c.steals,
+            c.retries
+        );
+        let mut o = Json::obj();
+        o.set("replicas", c.replicas)
+            .set("mix", c.mix)
+            .set("premium_pct", c.premium_pct)
+            .set("tokens_per_s", c.tokens_per_s)
+            .set("speedup_vs_1", speedup)
+            .set("p99_queue_ms", c.p99_queue_ms)
+            .set("steals", c.steals as i64)
+            .set("retries", c.retries as i64)
+            .set("completed", c.completed);
+        json_rows.push(o);
+        rows.push(vec![
+            format!("{} x{}", c.mix, c.replicas),
+            format!("{:.0} tok/s ({speedup:.2}x), p99 {:.2} ms",
+                    c.tokens_per_s, c.p99_queue_ms),
+        ]);
+    }
+    println!(
+        "  acceptance: 2-replica balanced speedup {speedup_2x_balanced:.2}x \
+         (bar: >= 1.50x)"
+    );
+
+    let (done, rejected, respawns) = run_chaos();
+    println!(
+        "chaos: replica 0 panics mid-run -> {done} done, {rejected} \
+         rejected, {respawns} respawn(s); every request terminal"
+    );
+    rows.push(vec![
+        "chaos: panic mid-run".into(),
+        format!("{done} done / {rejected} rejected, {respawns} respawn(s)"),
+    ]);
+
+    let mut chaos = Json::obj();
+    chaos
+        .set("done", done)
+        .set("rejected", rejected)
+        .set("respawns", respawns as i64);
+
+    let mut j = Json::obj();
+    j.set("bench", "router");
+    j.set("requests", N_REQUESTS);
+    j.set("max_new", MAX_NEW);
+    j.set("token_us", TOKEN_US as i64);
+    j.set("slots", SLOTS);
+    j.set("speedup_2x_balanced", speedup_2x_balanced);
+    j.set("cells", Json::Arr(json_rows));
+    j.set("chaos", chaos);
+    let _ = std::fs::create_dir_all("results");
+    let _ = std::fs::write("results/BENCH_router.json", j.dump());
+    println!("wrote results/BENCH_router.json");
+
+    bs::emit("router_micro",
+             "Precision-tiered router over N sim replicas",
+             &["case", "value"], &rows);
+}

@@ -22,6 +22,7 @@ USAGE: dpllm <subcommand> [--flags]
 
   generate   --model M --target T --prompt P [--max-new N] [--budget B]
   serve      --model M [--addr HOST:PORT] [--targets 3.50,4.00,4.50] [--budget B]
+             [--replicas N] [--replica-tiers \"3.25,3.50|4.50,4.75\"]
              [--reselect-every N] [--gamma-cap N] [--no-spec] [--no-batch]
              [--eos-token ID] [--kv-budget BYTES]
              (speculative decoding + re-selection cadence knobs; env
@@ -30,7 +31,12 @@ USAGE: dpllm <subcommand> [--flags]
              generations at the byte tokenizer's <eos> on every path;
              --kv-budget caps the paged KV pool in bytes — accepts k/m/g
              suffixes, e.g. --kv-budget 64m; env DPLLM_KV_BUDGET_BYTES.
-             DPLLM_NO_PREFIX_CACHE=1 disables the shared-prefix cache)
+             DPLLM_NO_PREFIX_CACHE=1 disables the shared-prefix cache.
+             --replicas N > 1 serves a precision-tiered fleet behind one
+             router: each replica materializes a slice of the ladder —
+             --replica-tiers pins the slices, pipe-separated — the upper
+             half of the fleet takes tight-SLO traffic, and idle replicas
+             steal backlog; see DESIGN.md §Scale-out)
   eval-ppl   --model M --method dpllm|hawq_v2|llm_mq|uniform --target T
              [--dataset synthwiki|synthweb] [--budget B] [--tokens N] [--exact]
   eval-task  --model M --task arith|listfn|dates|algebra --target T [--budget B]
@@ -106,9 +112,6 @@ fn serve(args: &Args) -> Result<()> {
         let bytes = crate::runtime::kvpool::parse_bytes(b)?;
         std::env::set_var("DPLLM_KV_BUDGET_BYTES", bytes.to_string());
     }
-    let rt = Arc::new(Runtime::new()?);
-    let engine = ServingEngine::load(&rt, &model, budget, &tag_refs)?;
-    eprintln!("[serve] adaptation set: {:?}", engine.targets());
     // Scheduling knobs: env defaults (CoreConfig::from_env) with CLI
     // flags layered on top.
     let mut cc = CoreConfig::from_env();
@@ -134,9 +137,92 @@ fn serve(args: &Args) -> Result<()> {
         if cc.max_batch == usize::MAX { "∞".to_string() }
         else { cc.max_batch.to_string() }
     );
+    let replicas = args.usize_or("replicas", 1).max(1);
+    if replicas > 1 {
+        // Fleet path: every replica thread builds its own Runtime +
+        // engine over the shared assets, so no engine loads here.
+        return serve_fleet(args, &model, budget, &addr, &tags, replicas, cc);
+    }
+    let rt = Arc::new(Runtime::new()?);
+    let engine = ServingEngine::load(&rt, &model, budget, &tag_refs)?;
+    eprintln!("[serve] adaptation set: {:?}", engine.targets());
     let server = Server::new(engine, UtilizationSim::new(7, 0.5))
         .with_core_config(cc);
     server.serve(&addr)
+}
+
+/// `serve --replicas N`: one front-of-house [`Router`] over N replica
+/// workers, each with its own `Runtime` + `ServingCore` over a slice of
+/// the precision ladder, all sharing one `Arc<ModelAssets>` (weights are
+/// mmap-backed — replicas materialize only their own slice).  The upper
+/// half of the fleet is the premium (tight-SLO, high-bit) tier.
+fn serve_fleet(args: &Args, model: &str, budget: u32, addr: &str,
+               tags: &[String], replicas: usize, cc: CoreConfig)
+               -> Result<()> {
+    use crate::coordinator::router::{
+        parse_replica_tiers, split_tiers, Router, RouterConfig,
+    };
+    use crate::costmodel::{weight_bytes_at, JETSON_ORIN};
+    use crate::runtime::replica::{engine_link, ReplicaSpec};
+    use crate::server::RouterServer;
+
+    let slices = match args.get("replica-tiers") {
+        Some(spec) => {
+            let s = parse_replica_tiers(spec)?;
+            if s.len() != replicas {
+                bail!("--replica-tiers has {} slices but --replicas is {}",
+                      s.len(), replicas);
+            }
+            s
+        }
+        None => split_tiers(tags, replicas),
+    };
+    if slices.len() != replicas {
+        // split_tiers clamps to one tag per replica minimum.
+        eprintln!("[serve] only {} ladder members — fleet clamped to {} \
+                   replicas", tags.len(), slices.len());
+    }
+    let assets = Arc::new(ModelAssets::load(model)?);
+    let specs: Vec<ReplicaSpec> = slices
+        .iter()
+        .enumerate()
+        .map(|(i, slice)| {
+            let targets: Vec<f64> = slice
+                .iter()
+                .map(|t| t.parse::<f64>().unwrap_or(4.0))
+                .collect();
+            // Expected-delay unit: modeled stream time of this
+            // replica's cheapest member (no engine needed).
+            let cheapest = targets.iter().copied().fold(f64::INFINITY, f64::min);
+            let tpot_ms =
+                JETSON_ORIN.stream_ms(weight_bytes_at(&assets.store, cheapest));
+            ReplicaSpec {
+                id: i,
+                model: model.to_string(),
+                budget,
+                tags: slice.clone(),
+                targets,
+                premium: i >= replicas / 2,
+                tpot_ms,
+                core: cc.clone(),
+                heartbeat_ms: 200,
+            }
+        })
+        .collect();
+    for s in &specs {
+        eprintln!(
+            "[serve] replica {}: tier {:?} ({}) modeled tpot {:.2} ms",
+            s.id, s.tags, if s.premium { "premium" } else { "economy" },
+            s.tpot_ms
+        );
+    }
+    let spawn_assets = assets.clone();
+    let router = Router::new(
+        specs,
+        Box::new(move |spec| engine_link(spec, spawn_assets.clone())),
+        RouterConfig::default(),
+    );
+    RouterServer::new(router).serve(addr)
 }
 
 fn eval_ppl(args: &Args) -> Result<()> {

@@ -100,6 +100,57 @@ pub fn memory_json(ws: &MatSnapshot, kv: &MemoryStats) -> Json {
     j
 }
 
+/// One row of the per-replica fleet report: what the router knows about
+/// a replica (backlog, respawns, steals) merged with the replica's own
+/// heartbeat (active slots, decode-rate EWMA).  Serialized by
+/// [`replicas_json`] into the `replicas` array of `GET /metrics`.
+#[derive(Debug, Clone)]
+pub struct ReplicaStatus {
+    pub id: usize,
+    /// Comma-joined tier slice, e.g. `"3.25,3.50"`.
+    pub tier: String,
+    pub premium: bool,
+    pub alive: bool,
+    /// Router-side backlog (routed, not yet forwarded).
+    pub queue_depth: usize,
+    /// Forwarded to the replica, not yet terminal.
+    pub inflight: usize,
+    /// Replica-reported active generation slots (last heartbeat).
+    pub active: usize,
+    /// Replica-reported decode throughput EWMA (last heartbeat).
+    pub tokens_per_s: f64,
+    pub steals_in: u64,
+    pub steals_out: u64,
+    pub respawns: u64,
+    /// Requests completed on this replica (router-observed `Done`s).
+    pub done: u64,
+}
+
+/// The `replicas` array of `GET /metrics` (per-replica observability,
+/// DESIGN.md §Scale-out).
+pub fn replicas_json(rs: &[ReplicaStatus]) -> Json {
+    Json::Arr(
+        rs.iter()
+            .map(|r| {
+                let mut j = Json::obj();
+                j.set("id", r.id as i64)
+                    .set("tier", r.tier.as_str())
+                    .set("premium", r.premium)
+                    .set("alive", r.alive)
+                    .set("queue_depth", r.queue_depth as i64)
+                    .set("inflight", r.inflight as i64)
+                    .set("active", r.active as i64)
+                    .set("tokens_per_s", r.tokens_per_s)
+                    .set("steals_in", r.steals_in as i64)
+                    .set("steals_out", r.steals_out as i64)
+                    .set("respawns", r.respawns as i64)
+                    .set("done", r.done as i64);
+                j
+            })
+            .collect(),
+    )
+}
+
 #[derive(Debug, Clone)]
 pub struct RequestRecord {
     pub id: u64,
@@ -333,5 +384,31 @@ mod tests {
         assert!(s.p50_total_ms <= s.p90_total_ms);
         assert!(s.p90_total_ms <= s.p99_total_ms);
         assert!(s.p90_eff_bits <= s.p99_eff_bits);
+    }
+
+    #[test]
+    fn replicas_json_serializes_fleet_rows() {
+        let rows = vec![
+            ReplicaStatus {
+                id: 0, tier: "3.25,3.50".to_string(), premium: false,
+                alive: true, queue_depth: 3, inflight: 2, active: 2,
+                tokens_per_s: 120.5, steals_in: 0, steals_out: 4,
+                respawns: 0, done: 7,
+            },
+            ReplicaStatus {
+                id: 1, tier: "4.50,4.75".to_string(), premium: true,
+                alive: false, queue_depth: 0, inflight: 0, active: 0,
+                tokens_per_s: 0.0, steals_in: 4, steals_out: 0,
+                respawns: 1, done: 2,
+            },
+        ];
+        let j = replicas_json(&rows);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].str_of("tier").unwrap(), "3.25,3.50");
+        assert_eq!(arr[0].f64_of("queue_depth").unwrap(), 3.0);
+        assert_eq!(arr[0].f64_of("steals_out").unwrap(), 4.0);
+        assert_eq!(arr[1].f64_of("respawns").unwrap(), 1.0);
+        assert_eq!(arr[1].f64_of("id").unwrap(), 1.0);
     }
 }

@@ -10,10 +10,12 @@
 pub mod metrics;
 pub mod sampler;
 pub mod qos;
+pub mod router;
 pub mod sched;
 pub mod workload;
 pub mod service;
 
 pub use qos::{AdaptationPolicy, QosBudget, UtilizationSim};
+pub use router::{Router, RouterConfig, RouterCounters, RouterEvent};
 pub use sched::{Request, RequestQueue, SchedPolicy};
 pub use service::{BatchItem, CoreEvent, ServeOutcome, ServingCore, ServingEngine};

@@ -1,0 +1,1081 @@
+//! Front-of-house router for multi-replica serving (DESIGN.md
+//! §Scale-out).
+//!
+//! The [`Router`] owns fleet-level admission: it classifies each
+//! request (tight-SLO traffic is *premium*, best-effort is *economy*),
+//! picks the replica with the shortest expected delay for that class
+//! (`modeled tpot_ms × (backlog + 1)` — the costmodel stream time is
+//! the delay unit, so a premium replica with a deep queue loses to an
+//! idle sibling), forwards over the [`ReplicaCommand`] channel, and
+//! reconciles [`ReplicaEvent`]s back into terminal [`RouterEvent`]s.
+//!
+//! Three fleet behaviors ride on top of plain routing:
+//!
+//! - **Work stealing** — an idle replica (no backlog, no active slots)
+//!   pulls from the *back* of the deepest sibling queue once it exceeds
+//!   a threshold, with pinned targets clamped to the thief's tier
+//!   slice.  Class affinity is a preference, not a partition: a drained
+//!   premium replica serves economy overflow rather than idling.
+//! - **Capacity retry** — a per-replica capacity reject (slot cap / KV
+//!   pool exhausted) is retried once on the best sibling before
+//!   surfacing as fleet-level 503 (`router_retries` vs
+//!   `router_rejects_capacity`).
+//! - **Drain + respawn** — a replica that dies (panic → `Died`, channel
+//!   drop) or wedges (heartbeat timeout) is drained: its in-flight
+//!   requests terminate with a retryable error, its backlog re-routes
+//!   to live siblings, and a fresh worker is spawned from the same
+//!   [`ReplicaSpec`] — the PR 5 single-loop fault isolation story made
+//!   fleet-wide.
+//!
+//! The spawn function is injected ([`ReplicaSpawn`]), so unit tests and
+//! the artifact-free `router_micro` bench drive the REAL routing /
+//! steal / drain / respawn code over simulated workers
+//! ([`crate::runtime::replica::sim`]).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::TryRecvError;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::{replicas_json, ReplicaStatus};
+use super::sched::Request;
+use super::service::ServeOutcome;
+use crate::runtime::replica::{ReplicaCommand, ReplicaEvent, ReplicaHealth,
+                              ReplicaLink, ReplicaSpec};
+use crate::util::json::Json;
+
+/// Builds (or rebuilds, on respawn) the worker for a spec.  Injected so
+/// the same router logic runs over engine-backed and simulated workers.
+pub type ReplicaSpawn = Box<dyn FnMut(&ReplicaSpec) -> ReplicaLink>;
+
+/// Is this request premium (tight-SLO) traffic?  A finite per-token
+/// budget or an explicit deadline means the client asked for latency;
+/// everything else is best-effort economy traffic.
+pub fn is_premium(req: &Request) -> bool {
+    req.deadline_ms.is_some() || req.qos.ms_per_token.is_finite()
+}
+
+/// What [`pick_replica`] / [`pick_steal`] see of one replica: plain
+/// data, so the routing core is a pure function over snapshots
+/// (property-testable without threads).
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaSnapshot {
+    pub id: usize,
+    pub alive: bool,
+    pub premium: bool,
+    /// Modeled per-token ms of the replica's cheapest target.
+    pub tpot_ms: f64,
+    /// Router backlog + forwarded in-flight (work ahead of a new
+    /// arrival).
+    pub queued: usize,
+    /// Replica-reported active slots (last heartbeat).
+    pub active: usize,
+}
+
+fn expected_delay(s: &ReplicaSnapshot) -> f64 {
+    s.tpot_ms.max(1e-9) * (s.queued + s.active + 1) as f64
+}
+
+/// Shortest-expected-delay routing with class affinity: prefer alive
+/// replicas of the request's class, minimizing
+/// `tpot_ms × (backlog + active + 1)` (ties broken by lowest id); when
+/// no replica of the class is alive, fall back to any alive replica —
+/// a degraded fleet still serves everything.
+pub fn pick_replica(snaps: &[ReplicaSnapshot], premium: bool)
+                    -> Option<usize> {
+    let best = |class_only: bool| {
+        snaps
+            .iter()
+            .filter(|s| s.alive && (!class_only || s.premium == premium))
+            .min_by(|a, b| {
+                expected_delay(a)
+                    .partial_cmp(&expected_delay(b))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.id.cmp(&b.id))
+            })
+    };
+    best(true).or_else(|| best(false)).map(|s| s.id)
+}
+
+/// Work stealing: `(victim, thief)` when an alive replica is fully idle
+/// (no queue, no active slots) and some sibling's queue is at least
+/// `threshold` deep.  The thief takes from the back of the victim's
+/// queue (the request that would otherwise wait longest).
+pub fn pick_steal(snaps: &[ReplicaSnapshot], threshold: usize)
+                  -> Option<(usize, usize)> {
+    let thief = snaps
+        .iter()
+        .filter(|s| s.alive && s.queued == 0 && s.active == 0)
+        .min_by_key(|s| s.id)?;
+    let victim = snaps
+        .iter()
+        .filter(|s| s.alive && s.id != thief.id)
+        .max_by(|a, b| a.queued.cmp(&b.queued).then(b.id.cmp(&a.id)))?;
+    (victim.queued >= threshold.max(1)).then_some((victim.id, thief.id))
+}
+
+/// Nearest member of a replica's tier slice to a requested pin — a
+/// stolen or re-routed pinned request runs at the closest precision the
+/// new replica actually materializes.
+pub fn clamp_target(targets: &[f64], t: f64) -> f64 {
+    targets
+        .iter()
+        .copied()
+        .min_by(|a, b| {
+            (a - t).abs()
+                .partial_cmp(&(b - t).abs())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .unwrap_or(t)
+}
+
+/// Parse `--replica-tiers "3.25,3.50|4.00,4.50,4.75"`: one
+/// pipe-separated tag slice per replica.
+pub fn parse_replica_tiers(spec: &str) -> Result<Vec<Vec<String>>> {
+    let mut out = Vec::new();
+    for slice in spec.split('|') {
+        let tags: Vec<String> = slice
+            .split(',')
+            .map(|t| t.trim().to_string())
+            .filter(|t| !t.is_empty())
+            .collect();
+        if tags.is_empty() {
+            return Err(anyhow!("empty tier slice in --replica-tiers {spec:?}"));
+        }
+        out.push(tags);
+    }
+    Ok(out)
+}
+
+/// Default tier assignment for `--replicas n` without an explicit
+/// `--replica-tiers`: contiguous near-even chunks of the ascending
+/// ladder, so low replicas materialize the cheap low-bit slice
+/// (economy) and high replicas the expensive high-bit slice (premium).
+/// `n` is clamped to the ladder length — a replica with no tags cannot
+/// serve.
+pub fn split_tiers(tags: &[String], n: usize) -> Vec<Vec<String>> {
+    let n = n.clamp(1, tags.len().max(1));
+    let per = tags.len() / n;
+    let extra = tags.len() % n;
+    let mut it = tags.iter();
+    let mut out = vec![Vec::new(); n];
+    for (i, slice) in out.iter_mut().enumerate() {
+        let take = per + usize::from(i < extra);
+        for _ in 0..take {
+            if let Some(t) = it.next() {
+                slice.push(t.clone());
+            }
+        }
+    }
+    out
+}
+
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Requests forwarded to one replica concurrently; the rest wait in
+    /// the router backlog where they stay stealable/re-routable.
+    pub max_inflight: usize,
+    /// Minimum victim queue depth before an idle replica steals.
+    pub steal_threshold: usize,
+    /// Silence longer than this declares a replica wedged.
+    pub heartbeat_timeout: Duration,
+    /// Respawn budget per replica; a spec that keeps dying stops being
+    /// revived (load failures would otherwise respawn forever).
+    pub max_respawns: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            max_inflight: 4,
+            steal_threshold: 2,
+            heartbeat_timeout: Duration::from_millis(2000),
+            max_respawns: 3,
+        }
+    }
+}
+
+/// Fleet-level counters (`router_*` in `GET /metrics`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RouterCounters {
+    pub routed_premium: u64,
+    pub routed_economy: u64,
+    pub steals: u64,
+    pub respawns: u64,
+    /// Capacity rejects absorbed by retrying on a sibling.
+    pub retries: u64,
+    /// Capacity rejects surfaced to the client (503 + `Retry-After`).
+    pub rejects_capacity: u64,
+    /// Backlogged requests re-routed off a dead replica.
+    pub rerouted: u64,
+    /// In-flight requests terminated by a replica death.
+    pub died_inflight: u64,
+}
+
+impl RouterCounters {
+    pub fn json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("router_routed_premium", self.routed_premium as i64)
+            .set("router_routed_economy", self.routed_economy as i64)
+            .set("router_steals", self.steals as i64)
+            .set("router_respawns", self.respawns as i64)
+            .set("router_retries", self.retries as i64)
+            .set("router_rejects_capacity", self.rejects_capacity as i64)
+            .set("router_rerouted", self.rerouted as i64)
+            .set("router_died_inflight", self.died_inflight as i64);
+        j
+    }
+}
+
+/// A request inside the router: its class, its (clamped-per-replica)
+/// pin, and whether its one sibling retry is spent.
+#[derive(Debug, Clone)]
+struct RoutedRequest {
+    req: Request,
+    pinned: Option<f64>,
+    premium: bool,
+    retried: bool,
+}
+
+/// Terminal (or fleet-level) events [`Router::poll`] hands the
+/// transport.
+pub enum RouterEvent {
+    /// Request finished on `replica`.
+    Done { replica: usize, outcome: ServeOutcome },
+    /// Request aborted mid-flight (HTTP 500).
+    Failed { id: u64, error: String },
+    /// Request rejected; `capacity: true` is retryable (HTTP 503 +
+    /// `Retry-After`), `false` malformed (HTTP 400).
+    Rejected { id: u64, error: String, capacity: bool },
+    /// Fleet event: replica `replica` was drained and respawned.
+    Respawned { replica: usize },
+}
+
+struct ReplicaSlot {
+    spec: ReplicaSpec,
+    link: ReplicaLink,
+    alive: bool,
+    /// Exited cleanly via `Shutdown` — never respawned.
+    stopped: bool,
+    last_seen: Instant,
+    health: ReplicaHealth,
+    backlog: VecDeque<RoutedRequest>,
+    inflight: HashMap<u64, RoutedRequest>,
+    steals_in: u64,
+    steals_out: u64,
+    respawns: u64,
+    done: u64,
+}
+
+/// The front-of-house router: owns the replica fleet and every routing
+/// decision.  Single-threaded like the rest of the executor path — the
+/// transport calls [`Router::submit`] / [`Router::poll`] from one loop.
+pub struct Router {
+    replicas: Vec<ReplicaSlot>,
+    spawn: ReplicaSpawn,
+    cfg: RouterConfig,
+    counters: RouterCounters,
+}
+
+impl Router {
+    /// Spawns every replica.  `specs[i].id` must equal `i`: replica ids
+    /// double as fleet indices everywhere (snapshots, steal pairs,
+    /// status rows).
+    pub fn new(specs: Vec<ReplicaSpec>, mut spawn: ReplicaSpawn,
+               cfg: RouterConfig) -> Router {
+        let now = Instant::now();
+        let replicas = specs
+            .into_iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                assert_eq!(spec.id, i, "replica specs must be indexed 0..n");
+                let link = spawn(&spec);
+                ReplicaSlot {
+                    spec,
+                    link,
+                    alive: true,
+                    stopped: false,
+                    last_seen: now,
+                    health: ReplicaHealth::default(),
+                    backlog: VecDeque::new(),
+                    inflight: HashMap::new(),
+                    steals_in: 0,
+                    steals_out: 0,
+                    respawns: 0,
+                    done: 0,
+                }
+            })
+            .collect();
+        Router { replicas, spawn, cfg, counters: RouterCounters::default() }
+    }
+
+    pub fn counters(&self) -> RouterCounters {
+        self.counters
+    }
+
+    /// All distinct target precisions served by live replicas
+    /// (ascending) — the fleet-level `/health` payload.
+    pub fn targets(&self) -> Vec<f64> {
+        let mut all: Vec<f64> = self
+            .replicas
+            .iter()
+            .filter(|r| r.alive)
+            .flat_map(|r| r.spec.targets.iter().copied())
+            .collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        all.dedup();
+        all
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.replicas.iter().filter(|r| r.alive).count()
+    }
+
+    /// True when no routed request is waiting or in flight anywhere.
+    pub fn idle(&self) -> bool {
+        self.replicas
+            .iter()
+            .all(|r| r.backlog.is_empty() && r.inflight.is_empty())
+    }
+
+    fn snapshot_of(r: &ReplicaSlot) -> ReplicaSnapshot {
+        ReplicaSnapshot {
+            id: r.spec.id,
+            alive: r.alive,
+            premium: r.spec.premium,
+            tpot_ms: r.spec.tpot_ms,
+            queued: r.backlog.len() + r.inflight.len(),
+            active: r.health.active,
+        }
+    }
+
+    pub fn snapshots(&self) -> Vec<ReplicaSnapshot> {
+        self.replicas.iter().map(Self::snapshot_of).collect()
+    }
+
+    /// Route one request.  `pinned` fixes the target precision (clamped
+    /// to whatever slice serves it).  `None` means accepted; `Some` is
+    /// an immediate terminal event (no live replica).
+    pub fn submit(&mut self, req: Request, pinned: Option<f64>)
+                  -> Option<RouterEvent> {
+        let premium = is_premium(&req);
+        let snaps = self.snapshots();
+        let Some(i) = pick_replica(&snaps, premium) else {
+            self.counters.rejects_capacity += 1;
+            return Some(RouterEvent::Rejected {
+                id: req.id,
+                error: "no live replica".to_string(),
+                capacity: true,
+            });
+        };
+        if premium {
+            self.counters.routed_premium += 1;
+        } else {
+            self.counters.routed_economy += 1;
+        }
+        self.replicas[i]
+            .backlog
+            .push_back(RoutedRequest { req, pinned, premium, retried: false });
+        self.pump(i);
+        None
+    }
+
+    /// Drain replica events, detect wedged/dead replicas, drain +
+    /// respawn them, steal work for idle replicas, forward backlogs.
+    pub fn poll(&mut self) -> Vec<RouterEvent> {
+        self.poll_at(Instant::now())
+    }
+
+    /// [`Router::poll`] with an injected clock, so wedge detection is
+    /// deterministic under test.
+    pub fn poll_at(&mut self, now: Instant) -> Vec<RouterEvent> {
+        let mut out = Vec::new();
+        let mut dead: Vec<(usize, String)> = Vec::new();
+        for i in 0..self.replicas.len() {
+            loop {
+                let ev = match self.replicas[i].link.rx.try_recv() {
+                    Ok(ev) => ev,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        if self.replicas[i].alive {
+                            dead.push((i, "event channel closed".to_string()));
+                        }
+                        break;
+                    }
+                };
+                self.replicas[i].last_seen = now;
+                match ev {
+                    ReplicaEvent::Ready => {}
+                    ReplicaEvent::Heartbeat(h) => self.replicas[i].health = h,
+                    ReplicaEvent::Done(o) => {
+                        self.replicas[i].inflight.remove(&o.id);
+                        self.replicas[i].done += 1;
+                        out.push(RouterEvent::Done { replica: i, outcome: o });
+                    }
+                    ReplicaEvent::Failed { id, error } => {
+                        self.replicas[i].inflight.remove(&id);
+                        out.push(RouterEvent::Failed { id, error });
+                    }
+                    ReplicaEvent::Error { id, error, capacity } => {
+                        let rr = self.replicas[i].inflight.remove(&id);
+                        self.on_reject(i, id, error, capacity, rr, &mut out);
+                    }
+                    ReplicaEvent::Stopped => {
+                        self.replicas[i].alive = false;
+                        self.replicas[i].stopped = true;
+                    }
+                    ReplicaEvent::Died { error } => dead.push((i, error)),
+                }
+            }
+            let r = &self.replicas[i];
+            if r.alive
+                && now.duration_since(r.last_seen) > self.cfg.heartbeat_timeout
+            {
+                dead.push((i, "heartbeat timeout (replica wedged)".to_string()));
+            }
+        }
+        for (i, reason) in dead {
+            self.drain_and_respawn(i, &reason, now, &mut out);
+        }
+        // Work stealing: keep moving tail items to idle replicas until
+        // no (victim, thief) pair qualifies.  Terminates: every move
+        // makes the thief non-idle.
+        loop {
+            let snaps = self.snapshots();
+            let Some((victim, thief)) =
+                pick_steal(&snaps, self.cfg.steal_threshold)
+            else {
+                break;
+            };
+            let Some(mut rr) = self.replicas[victim].backlog.pop_back() else {
+                break;
+            };
+            rr.pinned = rr
+                .pinned
+                .map(|t| clamp_target(&self.replicas[thief].spec.targets, t));
+            self.replicas[thief].backlog.push_back(rr);
+            self.replicas[victim].steals_out += 1;
+            self.replicas[thief].steals_in += 1;
+            self.counters.steals += 1;
+        }
+        for i in 0..self.replicas.len() {
+            self.pump(i);
+        }
+        out
+    }
+
+    /// A replica-side admission reject.  Capacity rejects get ONE retry
+    /// on the best live sibling (a full replica must not 503 the fleet);
+    /// everything else — malformed requests, spent retries, no sibling —
+    /// surfaces as a terminal event.
+    fn on_reject(&mut self, replica: usize, id: u64, error: String,
+                 capacity: bool, rr: Option<RoutedRequest>,
+                 out: &mut Vec<RouterEvent>) {
+        if let Some(mut rr) = rr {
+            if capacity && !rr.retried {
+                let snaps: Vec<ReplicaSnapshot> = self
+                    .snapshots()
+                    .into_iter()
+                    .filter(|s| s.id != replica)
+                    .collect();
+                if let Some(j) = pick_replica(&snaps, rr.premium) {
+                    rr.retried = true;
+                    self.counters.retries += 1;
+                    self.replicas[j].backlog.push_back(rr);
+                    return;
+                }
+            }
+        }
+        if capacity {
+            self.counters.rejects_capacity += 1;
+        }
+        out.push(RouterEvent::Rejected { id, error, capacity });
+    }
+
+    /// Fleet-wide fault isolation: terminate the dead replica's
+    /// in-flight requests (retryable — the client re-submits), re-route
+    /// its backlog to live siblings, and respawn from the original spec
+    /// while the respawn budget lasts.
+    fn drain_and_respawn(&mut self, i: usize, reason: &str, now: Instant,
+                         out: &mut Vec<RouterEvent>) {
+        if !self.replicas[i].alive {
+            return;
+        }
+        self.replicas[i].alive = false;
+        self.replicas[i].health = ReplicaHealth::default();
+        let mut inflight: Vec<u64> =
+            self.replicas[i].inflight.drain().map(|(id, _)| id).collect();
+        inflight.sort_unstable();
+        for id in inflight {
+            self.counters.died_inflight += 1;
+            out.push(RouterEvent::Rejected {
+                id,
+                error: format!("replica {i} died mid-flight: {reason}"),
+                capacity: true,
+            });
+        }
+        let backlog: Vec<RoutedRequest> =
+            self.replicas[i].backlog.drain(..).collect();
+        for mut rr in backlog {
+            let snaps = self.snapshots();
+            match pick_replica(&snaps, rr.premium) {
+                Some(j) => {
+                    rr.pinned = rr.pinned.map(|t| {
+                        clamp_target(&self.replicas[j].spec.targets, t)
+                    });
+                    self.counters.rerouted += 1;
+                    self.replicas[j].backlog.push_back(rr);
+                }
+                None => {
+                    self.counters.rejects_capacity += 1;
+                    out.push(RouterEvent::Rejected {
+                        id: rr.req.id,
+                        error: format!(
+                            "no live replica (replica {i} died: {reason})"
+                        ),
+                        capacity: true,
+                    });
+                }
+            }
+        }
+        if !self.replicas[i].stopped
+            && self.replicas[i].respawns < self.cfg.max_respawns
+        {
+            // The old link is replaced; a wedged thread is abandoned
+            // (threads cannot be killed), a panicked one already exited.
+            let link = (self.spawn)(&self.replicas[i].spec);
+            self.replicas[i].link = link;
+            self.replicas[i].alive = true;
+            self.replicas[i].last_seen = now;
+            self.replicas[i].respawns += 1;
+            self.counters.respawns += 1;
+            out.push(RouterEvent::Respawned { replica: i });
+        }
+    }
+
+    /// Forward backlog to the replica while its in-flight window has
+    /// room.  Requests left in the backlog stay stealable/re-routable.
+    fn pump(&mut self, i: usize) {
+        while self.replicas[i].alive
+            && self.replicas[i].inflight.len() < self.cfg.max_inflight.max(1)
+        {
+            let Some(mut rr) = self.replicas[i].backlog.pop_front() else {
+                break;
+            };
+            rr.pinned = rr
+                .pinned
+                .map(|t| clamp_target(&self.replicas[i].spec.targets, t));
+            let cmd = ReplicaCommand::Submit {
+                req: rr.req.clone(),
+                pinned: rr.pinned,
+            };
+            if self.replicas[i].link.tx.send(cmd).is_err() {
+                // Channel gone: keep the request; the death is detected
+                // and drained on the next poll.
+                self.replicas[i].backlog.push_front(rr);
+                break;
+            }
+            self.replicas[i].inflight.insert(rr.req.id, rr);
+        }
+    }
+
+    /// Per-replica rows for the `replicas` array of `GET /metrics`.
+    pub fn status(&self) -> Vec<ReplicaStatus> {
+        self.replicas
+            .iter()
+            .map(|r| ReplicaStatus {
+                id: r.spec.id,
+                tier: r.spec.tags.join(","),
+                premium: r.spec.premium,
+                alive: r.alive,
+                queue_depth: r.backlog.len(),
+                inflight: r.inflight.len(),
+                active: r.health.active,
+                tokens_per_s: r.health.tokens_per_s,
+                steals_in: r.steals_in,
+                steals_out: r.steals_out,
+                respawns: r.respawns,
+                done: r.done,
+            })
+            .collect()
+    }
+
+    pub fn replicas_json(&self) -> Json {
+        replicas_json(&self.status())
+    }
+
+    /// The fleet half of `GET /metrics`: `router_*` counters + the
+    /// per-replica `replicas` array.
+    pub fn metrics_json(&self) -> Json {
+        let mut j = self.counters.json();
+        j.set("replicas", self.replicas_json());
+        j
+    }
+
+    /// Clean shutdown: ask every live replica to finish its active set
+    /// and join the workers that can exit (wedged threads are
+    /// abandoned).
+    pub fn shutdown(&mut self) {
+        for r in &mut self.replicas {
+            if r.alive {
+                let _ = r.link.tx.send(ReplicaCommand::Shutdown);
+            }
+        }
+        for r in &mut self.replicas {
+            if r.alive || r.stopped {
+                if let Some(j) = r.link.join.take() {
+                    let _ = j.join();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::qos::QosBudget;
+    use crate::runtime::replica::sim::{sim_link, SimProfile};
+    use crate::util::rng::Rng;
+
+    fn snap(id: usize, alive: bool, premium: bool, tpot_ms: f64,
+            queued: usize, active: usize) -> ReplicaSnapshot {
+        ReplicaSnapshot { id, alive, premium, tpot_ms, queued, active }
+    }
+
+    #[test]
+    fn pick_replica_prefers_class_then_shortest_delay() {
+        let snaps = vec![
+            snap(0, true, false, 1.0, 0, 0), // idle economy
+            snap(1, true, true, 2.0, 0, 0),  // idle premium, slower tpot
+            snap(2, true, true, 2.0, 3, 1),  // busy premium
+        ];
+        // Premium traffic prefers the idle premium replica even though
+        // the economy one has a lower absolute delay.
+        assert_eq!(pick_replica(&snaps, true), Some(1));
+        assert_eq!(pick_replica(&snaps, false), Some(0));
+        // With every premium replica dead, premium traffic degrades to
+        // the economy replica instead of rejecting.
+        let degraded = vec![
+            snap(0, true, false, 1.0, 0, 0),
+            snap(1, false, true, 2.0, 0, 0),
+        ];
+        assert_eq!(pick_replica(&degraded, true), Some(0));
+        assert_eq!(pick_replica(&[], true), None);
+        let all_dead = vec![snap(0, false, false, 1.0, 0, 0)];
+        assert_eq!(pick_replica(&all_dead, false), None);
+    }
+
+    /// Property test over pseudo-random fleets: the pick is always
+    /// alive; it matches the class whenever any alive replica of the
+    /// class exists; and among alive class-matching replicas none has a
+    /// strictly smaller expected delay (ties break to the lowest id).
+    #[test]
+    fn pick_replica_property_class_affinity_and_min_delay() {
+        let mut rng = Rng::new(0xD0_07);
+        for _ in 0..500 {
+            let n = 1 + (rng.next_u64() % 6) as usize;
+            let snaps: Vec<ReplicaSnapshot> = (0..n)
+                .map(|id| ReplicaSnapshot {
+                    id,
+                    alive: rng.bool(0.8),
+                    premium: rng.bool(0.5),
+                    tpot_ms: rng.range(0.5, 8.0),
+                    queued: (rng.next_u64() % 5) as usize,
+                    active: (rng.next_u64() % 4) as usize,
+                })
+                .collect();
+            for premium in [false, true] {
+                let pick = pick_replica(&snaps, premium);
+                let any_alive = snaps.iter().any(|s| s.alive);
+                assert_eq!(pick.is_some(), any_alive);
+                let Some(id) = pick else { continue };
+                let chosen = snaps[id];
+                assert!(chosen.alive, "picked a dead replica");
+                let class_alive =
+                    snaps.iter().any(|s| s.alive && s.premium == premium);
+                if class_alive {
+                    assert_eq!(chosen.premium, premium,
+                               "class ignored while class replicas alive");
+                    for s in snaps.iter().filter(|s| {
+                        s.alive && s.premium == premium
+                    }) {
+                        let (d, dc) =
+                            (expected_delay(s), expected_delay(&chosen));
+                        assert!(dc < d + 1e-12,
+                                "replica {} had smaller delay", s.id);
+                        if (d - dc).abs() < 1e-12 {
+                            assert!(chosen.id <= s.id, "tie not to lowest id");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pick_steal_idle_thief_deepest_victim_threshold() {
+        let snaps = vec![
+            snap(0, true, false, 1.0, 5, 2),
+            snap(1, true, true, 2.0, 0, 0), // idle
+            snap(2, true, false, 1.0, 3, 1),
+        ];
+        assert_eq!(pick_steal(&snaps, 2), Some((0, 1)));
+        // Below threshold: no steal.
+        let shallow = vec![
+            snap(0, true, false, 1.0, 1, 2),
+            snap(1, true, true, 2.0, 0, 0),
+        ];
+        assert_eq!(pick_steal(&shallow, 2), None);
+        // No idle replica: no steal.
+        let busy = vec![
+            snap(0, true, false, 1.0, 5, 2),
+            snap(1, true, true, 2.0, 0, 1),
+        ];
+        assert_eq!(pick_steal(&busy, 2), None);
+        // A dead idle replica never steals.
+        let dead_thief = vec![
+            snap(0, true, false, 1.0, 5, 2),
+            snap(1, false, true, 2.0, 0, 0),
+        ];
+        assert_eq!(pick_steal(&dead_thief, 2), None);
+    }
+
+    #[test]
+    fn clamp_split_and_parse_tiers() {
+        assert_eq!(clamp_target(&[3.25, 3.5], 4.75), 3.5);
+        assert_eq!(clamp_target(&[4.5, 4.75], 3.25), 4.5);
+        assert_eq!(clamp_target(&[], 4.0), 4.0);
+        let tags: Vec<String> = ["3.25", "3.50", "4.00", "4.50", "4.75"]
+            .iter()
+            .map(|t| t.to_string())
+            .collect();
+        assert_eq!(split_tiers(&tags, 2), vec![
+            vec!["3.25".to_string(), "3.50".to_string(), "4.00".to_string()],
+            vec!["4.50".to_string(), "4.75".to_string()],
+        ]);
+        assert_eq!(split_tiers(&tags, 1).len(), 1);
+        assert_eq!(split_tiers(&tags, 9).len(), 5, "clamped to ladder");
+        let parsed = parse_replica_tiers("3.25,3.50|4.00, 4.50").unwrap();
+        assert_eq!(parsed, vec![
+            vec!["3.25".to_string(), "3.50".to_string()],
+            vec!["4.00".to_string(), "4.50".to_string()],
+        ]);
+        assert!(parse_replica_tiers("3.25||4.00").is_err());
+    }
+
+    // ---- fleet tests over simulated workers (REAL router logic) ----
+
+    fn fast(core_slots: usize) -> SimProfile {
+        SimProfile { token_us: 50, slots: core_slots, ..SimProfile::default() }
+    }
+
+    fn two_tier_specs() -> Vec<ReplicaSpec> {
+        vec![
+            ReplicaSpec::sim(0, &["3.25", "3.50"], false, 1.0),
+            ReplicaSpec::sim(1, &["4.50", "4.75"], true, 2.0),
+        ]
+    }
+
+    fn eco_req(id: u64, max_new: usize) -> Request {
+        Request::new(id, "p", max_new, QosBudget::best_effort())
+    }
+
+    fn prem_req(id: u64, max_new: usize) -> Request {
+        Request::new(id, "p", max_new, QosBudget::tight(5.0))
+            .with_deadline(1000.0)
+    }
+
+    /// Drive the router until `want` terminal events (Done / Failed /
+    /// Rejected) or the deadline passes; returns every event seen.
+    fn drive(router: &mut Router, want: usize, ms: u64) -> Vec<RouterEvent> {
+        let mut events = Vec::new();
+        let deadline = Instant::now() + Duration::from_millis(ms);
+        while Instant::now() < deadline {
+            events.extend(router.poll());
+            let terminal = events
+                .iter()
+                .filter(|e| !matches!(e, RouterEvent::Respawned { .. }))
+                .count();
+            if terminal >= want {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        events
+    }
+
+    fn done_ids(events: &[RouterEvent]) -> Vec<u64> {
+        let mut ids: Vec<u64> = events
+            .iter()
+            .filter_map(|e| match e {
+                RouterEvent::Done { outcome, .. } => Some(outcome.id),
+                _ => None,
+            })
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Class routing over live workers: premium requests complete at
+    /// premium-tier precisions, economy at economy-tier, and both
+    /// counters advance.
+    #[test]
+    fn class_routing_maps_qos_to_tier() {
+        let mut router = Router::new(
+            two_tier_specs(),
+            Box::new(|spec| sim_link(spec, fast(4))),
+            RouterConfig::default(),
+        );
+        for id in 0..4u64 {
+            let ev = if id % 2 == 0 {
+                router.submit(eco_req(id, 4), None)
+            } else {
+                router.submit(prem_req(id, 4), None)
+            };
+            assert!(ev.is_none());
+        }
+        let events = drive(&mut router, 4, 2000);
+        assert_eq!(done_ids(&events), vec![0, 1, 2, 3]);
+        for ev in &events {
+            if let RouterEvent::Done { outcome, .. } = ev {
+                if outcome.id % 2 == 1 {
+                    assert!(outcome.target_precision >= 4.5,
+                            "premium request served at economy precision");
+                } else {
+                    assert!(outcome.target_precision <= 3.5,
+                            "economy request served at premium precision");
+                }
+            }
+        }
+        let c = router.counters();
+        assert_eq!(c.routed_premium, 2);
+        assert_eq!(c.routed_economy, 2);
+        router.shutdown();
+    }
+
+    #[test]
+    fn work_steal_moves_backlog_between_replicas() {
+        let cfg = RouterConfig {
+            max_inflight: 1,
+            steal_threshold: 2,
+            ..RouterConfig::default()
+        };
+        let mut router = Router::new(
+            two_tier_specs(),
+            // Slow economy worker, one slot — a deep backlog forms.
+            Box::new(|spec| {
+                let p = if spec.id == 0 {
+                    SimProfile { token_us: 2000, slots: 1,
+                                 ..SimProfile::default() }
+                } else {
+                    fast(4)
+                };
+                sim_link(spec, p)
+            }),
+            cfg,
+        );
+        // All-economy burst: everything routes to replica 0; replica 1
+        // idles and must steal.
+        for id in 0..10u64 {
+            assert!(router.submit(eco_req(id, 4), None).is_none());
+        }
+        let events = drive(&mut router, 10, 5000);
+        assert_eq!(done_ids(&events), (0..10).collect::<Vec<u64>>(),
+                   "every request completed despite the skewed burst");
+        let c = router.counters();
+        assert!(c.steals >= 1, "idle premium replica never stole");
+        let status = router.status();
+        assert!(status[1].steals_in >= 1);
+        assert_eq!(status[0].steals_out, status[1].steals_in);
+        router.shutdown();
+    }
+
+    /// Chaos regression: replica 0 panics mid-run.  Healthy requests on
+    /// the sibling complete, the dead replica's backlog re-routes and
+    /// completes, its in-flight requests terminate retryably, and the
+    /// counters prove exactly one respawn.
+    #[test]
+    fn replica_panic_drains_and_respawns() {
+        let cfg = RouterConfig {
+            max_inflight: 2,
+            steal_threshold: usize::MAX, // isolate respawn from stealing
+            ..RouterConfig::default()
+        };
+        let mut router = Router::new(
+            two_tier_specs(),
+            Box::new(|spec| {
+                let p = if spec.id == 0 {
+                    // The fault is token-count-keyed, so the respawned
+                    // worker (which starts from zero and inherits no
+                    // re-routed work — that went to the sibling) never
+                    // re-trips it.
+                    SimProfile { token_us: 500, slots: 2,
+                                 panic_after_tokens: Some(6),
+                                 ..SimProfile::default() }
+                } else {
+                    fast(4)
+                };
+                sim_link(spec, p)
+            }),
+            cfg,
+        );
+        for id in 0..6u64 {
+            assert!(router.submit(eco_req(id, 2), None).is_none());
+        }
+        for id in 6..8u64 {
+            assert!(router.submit(prem_req(id, 2), None).is_none());
+        }
+        let events = drive(&mut router, 8, 5000);
+        let c = router.counters();
+        assert_eq!(c.respawns, 1, "exactly one respawn");
+        assert!(events.iter().any(|e| matches!(
+            e, RouterEvent::Respawned { replica: 0 })));
+        // Premium (healthy sibling) requests all completed.
+        let done = done_ids(&events);
+        assert!(done.contains(&6) && done.contains(&7),
+                "healthy sibling requests lost");
+        // Every request is accounted for: Done or retryable Rejected.
+        let mut seen: Vec<u64> = events
+            .iter()
+            .filter_map(|e| match e {
+                RouterEvent::Done { outcome, .. } => Some(outcome.id),
+                RouterEvent::Rejected { id, capacity: true, .. } => Some(*id),
+                _ => None,
+            })
+            .collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen, (0..8).collect::<Vec<u64>>(),
+                   "a request vanished during the drain");
+        assert!(c.died_inflight > 0 || c.rerouted > 0,
+                "the dead replica's work was never drained");
+        // /metrics reports the respawn.
+        let arr = router.replicas_json();
+        let rows = arr.as_arr().unwrap();
+        assert_eq!(rows[0].f64_of("respawns").unwrap(), 1.0);
+        router.shutdown();
+    }
+
+    /// Satellite: a per-replica capacity reject retries on a sibling
+    /// before surfacing — `router_retries` advances, the request still
+    /// completes, and nothing 503s.
+    #[test]
+    fn capacity_reject_retries_on_sibling() {
+        let mut router = Router::new(
+            two_tier_specs(),
+            Box::new(|spec| {
+                let p = if spec.id == 0 {
+                    SimProfile { reject_first: true, token_us: 50,
+                                 ..SimProfile::default() }
+                } else {
+                    fast(4)
+                };
+                sim_link(spec, p)
+            }),
+            RouterConfig::default(),
+        );
+        assert!(router.submit(eco_req(0, 3), None).is_none());
+        let events = drive(&mut router, 1, 2000);
+        assert_eq!(done_ids(&events), vec![0],
+                   "request did not complete on the sibling");
+        let c = router.counters();
+        assert_eq!(c.retries, 1);
+        assert_eq!(c.rejects_capacity, 0, "retry leaked into a 503");
+        router.shutdown();
+    }
+
+    /// With no sibling to retry on, the capacity reject surfaces as a
+    /// retryable (503-shaped) event and `router_rejects_capacity`
+    /// advances.
+    #[test]
+    fn capacity_reject_surfaces_without_sibling() {
+        let mut router = Router::new(
+            vec![ReplicaSpec::sim(0, &["4.00"], true, 1.0)],
+            Box::new(|spec| {
+                sim_link(spec, SimProfile { reject_first: true, token_us: 50,
+                                            ..SimProfile::default() })
+            }),
+            RouterConfig::default(),
+        );
+        assert!(router.submit(eco_req(0, 3), None).is_none());
+        let events = drive(&mut router, 1, 2000);
+        assert!(events.iter().any(|e| matches!(
+            e, RouterEvent::Rejected { id: 0, capacity: true, .. })));
+        assert_eq!(router.counters().rejects_capacity, 1);
+        assert_eq!(router.counters().retries, 0);
+        router.shutdown();
+    }
+
+    /// Specs whose workers effectively never heartbeat, so wedge tests
+    /// are deterministic: no beat can race the fabricated clock.
+    fn silent_specs() -> Vec<ReplicaSpec> {
+        two_tier_specs()
+            .into_iter()
+            .map(|mut s| {
+                s.heartbeat_ms = 1_000_000;
+                s
+            })
+            .collect()
+    }
+
+    /// Wedge detection is pure clock arithmetic: a fabricated `poll_at`
+    /// far in the future declares every silent replica wedged, drains
+    /// it, and respawns it.
+    #[test]
+    fn heartbeat_timeout_drains_and_respawns_wedged_replica() {
+        let mut router = Router::new(
+            silent_specs(),
+            Box::new(|spec| sim_link(spec, fast(4))),
+            RouterConfig {
+                heartbeat_timeout: Duration::from_millis(100),
+                ..RouterConfig::default()
+            },
+        );
+        // Let the workers emit Ready and drain it, then jump the clock
+        // past the timeout: every silent replica looks wedged.
+        std::thread::sleep(Duration::from_millis(30));
+        router.poll();
+        let future = Instant::now() + Duration::from_secs(10);
+        let events = router.poll_at(future);
+        let respawned = events
+            .iter()
+            .filter(|e| matches!(e, RouterEvent::Respawned { .. }))
+            .count();
+        assert_eq!(respawned, 2, "both silent replicas respawned");
+        assert_eq!(router.counters().respawns, 2);
+        assert_eq!(router.alive_count(), 2, "fleet recovered");
+        router.shutdown();
+    }
+
+    /// The respawn budget caps revival: a spec that keeps dying stops
+    /// being respawned and the fleet routes around it.
+    #[test]
+    fn respawn_budget_caps_revival() {
+        let mut router = Router::new(
+            silent_specs(),
+            Box::new(|spec| sim_link(spec, fast(4))),
+            RouterConfig {
+                heartbeat_timeout: Duration::from_millis(50),
+                max_respawns: 2,
+                ..RouterConfig::default()
+            },
+        );
+        // Each wedge→respawn cycle takes two fabricated polls (one
+        // drains the fresh worker's Ready, the next declares it wedged
+        // again); 8 cycles comfortably exhausts a budget of 2 each.
+        let mut future = Instant::now();
+        for _ in 0..8 {
+            std::thread::sleep(Duration::from_millis(5));
+            future += Duration::from_secs(10);
+            router.poll_at(future);
+        }
+        assert_eq!(router.counters().respawns, 4, "2 per replica, capped");
+        assert_eq!(router.alive_count(), 0);
+        // With the whole fleet down, submission rejects retryably.
+        let ev = router.submit(eco_req(99, 2), None);
+        assert!(matches!(ev, Some(RouterEvent::Rejected { capacity: true, .. })));
+        router.shutdown();
+    }
+}

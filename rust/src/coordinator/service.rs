@@ -256,9 +256,10 @@ pub struct ServingEngine {
     kv_pool: SharedKvPool,
     rt: Arc<Runtime>,
     /// Retained so [`ServingEngine::reconfigure`] rebinds without
-    /// re-reading the packed store from disk (the store itself is an
-    /// `Arc` already shared with every session).
-    assets: ModelAssets,
+    /// re-reading the packed store from disk.  Behind an `Arc` so the
+    /// multi-replica path ([`crate::runtime::replica`]) parses the packed
+    /// store once and shares it across every replica engine.
+    assets: Arc<ModelAssets>,
     manifest: Manifest,
     budget: u32,
 }
@@ -267,7 +268,18 @@ impl ServingEngine {
     /// Load DP-LLM configurations for every `tags` entry (e.g. "3.50").
     pub fn load(rt: &Arc<Runtime>, model: &str, budget: u32,
                 tags: &[&str]) -> Result<ServingEngine> {
-        let assets = ModelAssets::load(model)?;
+        let assets = Arc::new(ModelAssets::load(model)?);
+        ServingEngine::load_shared(rt, assets, budget, tags)
+    }
+
+    /// Like [`ServingEngine::load`], but over already-loaded assets — the
+    /// multi-replica path parses the packed store once and every replica
+    /// engine shares the same `Arc<ModelAssets>` (and so the same
+    /// `Arc<AnyPrecStore>`), materializing only its slice of the
+    /// precision ladder.  Device-side caches (weights, KV) stay
+    /// per-engine: PJRT buffers are per-client and `!Send`.
+    pub fn load_shared(rt: &Arc<Runtime>, assets: Arc<ModelAssets>,
+                       budget: u32, tags: &[&str]) -> Result<ServingEngine> {
         let manifest = Manifest::load()?;
         let tokenizer = Tokenizer::load(&art(&["data", "tokenizer.json"]))?;
         let weights = DecodeSession::fresh_weight_cache();
@@ -453,6 +465,8 @@ impl ServingEngine {
                 retired.push((tag, s));
             }
         }
+        let retired_tags: Vec<String> =
+            retired.iter().map(|(t, _)| t.clone()).collect();
         let mut rep = SwapReport::default();
         let mut failure = None;
         for (tag, ec) in pending {
@@ -494,6 +508,21 @@ impl ServingEngine {
             // sessions so the engine never serves from an empty set.
             for (tag, s) in retired {
                 self.sessions.insert(tag, s);
+            }
+        }
+        // Shared-prefix entries are keyed `model:target`, so a retired
+        // target's entries can never be *hit* again — but they WOULD
+        // strand pool bytes (and device KV buffers) until LRU pressure
+        // ages them out, shrinking the budget available to live targets.
+        // Invalidate eagerly for every tag that actually left the set
+        // (tags restored by the failure path above are still live).
+        {
+            let model_name = self.assets.cfg.name.clone();
+            let mut pool = self.kv_pool.borrow_mut();
+            for tag in &retired_tags {
+                if !self.sessions.contains_key(tag) {
+                    pool.invalidate_tag(&format!("{model_name}:{tag}"));
+                }
             }
         }
         // Targets always derive from the sessions actually resident.

@@ -196,6 +196,9 @@ pub struct KvPool<B> {
     pub reuses: u64,
     /// Prefix entries evicted (LRU, byte pressure).
     pub prefix_evictions: u64,
+    /// Prefix entries dropped eagerly because their target identity was
+    /// retired by `reconfigure()` (staleness fix, DESIGN.md §Memory).
+    pub prefix_invalidations: u64,
 }
 
 /// The shared, interior-mutable pool handle the runtime threads through
@@ -221,6 +224,7 @@ impl<B> KvPool<B> {
             clock: 0,
             reuses: 0,
             prefix_evictions: 0,
+            prefix_invalidations: 0,
         }
     }
 
@@ -458,6 +462,29 @@ impl<B> KvPool<B> {
             (tag.to_string(), ids[..len].to_vec()),
             PrefixEntry { kv, len, tier, bytes, stamp: self.clock },
         );
+    }
+
+    /// Drop every prefix entry published under target identity `tag`
+    /// (`"model:target"`), returning how many were removed.  Called by
+    /// `ServingEngine::reconfigure` when a target leaves the adaptation
+    /// set: a retired tag can never be looked up again, so its entries
+    /// would only strand pool bytes (and device KV buffers) until LRU
+    /// pressure aged them out.  Counted by `prefix_invalidations`,
+    /// distinct from `prefix_evictions` (LRU pressure).
+    pub fn invalidate_tag(&mut self, tag: &str) -> usize {
+        let stale: Vec<(String, Vec<u32>)> = self
+            .prefix
+            .keys()
+            .filter(|(t, _)| t == tag)
+            .cloned()
+            .collect();
+        for k in &stale {
+            if let Some(e) = self.prefix.remove(k) {
+                self.prefix_bytes -= e.bytes;
+                self.prefix_invalidations += 1;
+            }
+        }
+        stale.len()
     }
 }
 
@@ -722,6 +749,33 @@ mod tests {
         // First writer wins: re-inserting under a live key is a no-op.
         p.prefix_insert("4.0", &ids, 256, 256, Rc::new(()));
         assert_eq!(p.prefix_entries(), 2);
+    }
+
+    /// `reconfigure()` staleness fix: retiring a target invalidates its
+    /// prefix entries eagerly instead of stranding them until LRU
+    /// eviction, and only that target's — siblings keep their bytes.
+    #[test]
+    fn invalidate_tag_drops_only_retired_targets_entries() {
+        let mut p: KvPool<()> = KvPool::new(usize::MAX, 1);
+        let ids: Vec<u32> = (0..300).collect();
+        p.prefix_insert("m:4.00", &ids, 128, 128, Rc::new(()));
+        p.prefix_insert("m:4.00", &ids, 256, 256, Rc::new(()));
+        p.prefix_insert("m:3.50", &ids, 128, 128, Rc::new(()));
+        let before = p.prefix_bytes();
+        assert_eq!(p.invalidate_tag("m:4.00"), 2);
+        assert_eq!(p.prefix_entries(), 1);
+        assert_eq!(p.prefix_invalidations, 2);
+        assert_eq!(p.prefix_evictions, 0, "invalidation is not an eviction");
+        assert_eq!(p.prefix_bytes(), before - 128 - 256,
+                   "bytes credited back on invalidation");
+        // The retired tag's entries can never be hit again…
+        assert!(p.prefix_lookup("m:4.00", &ids, 128).is_none());
+        // …while the surviving sibling still hits.
+        assert!(p.prefix_lookup("m:3.50", &ids, 128).is_some());
+        // Re-introducing the tag republishes cleanly from scratch.
+        p.prefix_insert("m:4.00", &ids, 128, 128, Rc::new(()));
+        assert_eq!(p.prefix_lookup("m:4.00", &ids, 128).unwrap().len, 128);
+        assert_eq!(p.invalidate_tag("m:9.99"), 0, "unknown tag is a no-op");
     }
 
     #[test]

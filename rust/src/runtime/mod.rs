@@ -16,6 +16,7 @@
 
 pub mod decode;
 pub mod kvpool;
+pub mod replica;
 pub mod spec;
 pub mod stack;
 

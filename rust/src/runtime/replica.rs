@@ -1,0 +1,605 @@
+//! Replica workers for multi-replica serving (DESIGN.md §Scale-out).
+//!
+//! A replica is ONE thread running its own [`ServingCore`] over its own
+//! [`Runtime`]: PJRT handles are `!Send`, so nothing device-resident
+//! ever crosses a thread boundary — replicas exchange only plain-data
+//! [`ReplicaCommand`]/[`ReplicaEvent`] messages with the front-of-house
+//! router ([`crate::coordinator::router`]) over mpsc channels.  What
+//! *is* shared is the parsed packed store: every replica engine holds
+//! the same `Arc<ModelAssets>` (and through it the same
+//! `Arc<AnyPrecStore>`), so N replicas parse the weights once and each
+//! materializes only the slice of the precision ladder its tier serves.
+//! Device-side caches (weight slabs, KV pool) stay per-replica — PJRT
+//! buffers belong to one client.
+//!
+//! Fault isolation is the PR 5 story made fleet-wide: a panic anywhere
+//! in the worker trips [`PanicGuard`] (its `Drop` runs during
+//! unwinding) and surfaces as [`ReplicaEvent::Died`], a wedged worker
+//! simply stops heartbeating, and either way the router drains and
+//! respawns the replica without operator action.
+//!
+//! The [`sim`] submodule provides timing-faithful simulated workers
+//! that speak the identical protocol, so the router's steal/drain/
+//! respawn logic is exercised hermetically by unit tests and the
+//! artifact-free `router_micro` bench.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::qos::UtilizationSim;
+use crate::coordinator::sched::{Request, RequestQueue, SchedPolicy};
+use crate::coordinator::service::{is_capacity_reject, CoreConfig, CoreEvent,
+                                  ServeOutcome, ServingCore, ServingEngine};
+use crate::model::ModelAssets;
+use crate::runtime::Runtime;
+
+/// Everything needed to (re)spawn one replica worker.  Plain data: the
+/// router keeps it and hands it back to the spawn function on respawn,
+/// so a replica always comes back with its original tier slice.
+#[derive(Debug, Clone)]
+pub struct ReplicaSpec {
+    pub id: usize,
+    /// Model name for [`ServingEngine::load_shared`].
+    pub model: String,
+    /// Per-layer bit budget (same meaning as the single-engine path).
+    pub budget: u32,
+    /// The slice of the precision ladder this replica materializes
+    /// (adaptation-set tags, e.g. `["3.25", "3.50"]`).
+    pub tags: Vec<String>,
+    /// Parsed numeric targets of `tags` (router-side pin clamping).
+    pub targets: Vec<f64>,
+    /// Premium replicas take tight-SLO traffic; economy replicas take
+    /// best-effort traffic (class→tier mapping, DESIGN.md §Scale-out).
+    pub premium: bool,
+    /// Modeled per-token latency of this replica's cheapest target
+    /// (`costmodel` stream time) — the router's expected-delay unit.
+    pub tpot_ms: f64,
+    pub core: CoreConfig,
+    /// Heartbeat cadence; the router declares a replica wedged after
+    /// missing several of these.
+    pub heartbeat_ms: u64,
+}
+
+impl ReplicaSpec {
+    /// A spec for simulated workers ([`sim`]) — no artifacts involved.
+    pub fn sim(id: usize, tags: &[&str], premium: bool, tpot_ms: f64)
+               -> ReplicaSpec {
+        ReplicaSpec {
+            id,
+            model: "sim".to_string(),
+            budget: 0,
+            tags: tags.iter().map(|t| t.to_string()).collect(),
+            targets: tags.iter().filter_map(|t| t.parse().ok()).collect(),
+            premium,
+            tpot_ms,
+            core: CoreConfig::default(),
+            heartbeat_ms: 10,
+        }
+    }
+}
+
+/// Router → replica.
+pub enum ReplicaCommand {
+    /// Serve one request; `pinned` fixes the target precision (already
+    /// clamped to this replica's tier slice by the router).
+    Submit { req: Request, pinned: Option<f64> },
+    /// Finish the active set, then exit cleanly with
+    /// [`ReplicaEvent::Stopped`].
+    Shutdown,
+}
+
+/// Replica → router.  Plain data only.
+pub enum ReplicaEvent {
+    /// Engine loaded; the replica is accepting work.
+    Ready,
+    /// Periodic liveness + load signal.
+    Heartbeat(ReplicaHealth),
+    /// A request finished (terminal).
+    Done(ServeOutcome),
+    /// A request aborted mid-flight (terminal; replica keeps serving).
+    Failed { id: u64, error: String },
+    /// Admission rejected `id` — `capacity: true` is retryable
+    /// (slot cap / KV pool), `false` is malformed (terminal 400).
+    Error { id: u64, error: String, capacity: bool },
+    /// Clean exit after [`ReplicaCommand::Shutdown`].
+    Stopped,
+    /// The worker is gone: load failure or panic (via [`PanicGuard`]).
+    Died { error: String },
+}
+
+/// Load snapshot carried by [`ReplicaEvent::Heartbeat`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ReplicaHealth {
+    /// Requests accepted but not yet admitted to the core.
+    pub queued: usize,
+    /// Active generation slots.
+    pub active: usize,
+    /// Decode throughput EWMA.
+    pub tokens_per_s: f64,
+}
+
+/// One replica's channel endpoints as the router sees them.
+pub struct ReplicaLink {
+    pub tx: Sender<ReplicaCommand>,
+    pub rx: Receiver<ReplicaEvent>,
+    /// `None` for workers the router abandoned (wedged threads cannot
+    /// be joined — they are replaced, not reaped).
+    pub join: Option<JoinHandle<()>>,
+}
+
+/// Sends [`ReplicaEvent::Died`] from `Drop` unless disarmed — `Drop`
+/// runs during unwinding, so a panic anywhere in the worker body turns
+/// into a protocol event instead of a silently dropped channel.
+struct PanicGuard {
+    tx: Sender<ReplicaEvent>,
+    armed: bool,
+}
+
+impl PanicGuard {
+    fn new(tx: Sender<ReplicaEvent>) -> PanicGuard {
+        PanicGuard { tx, armed: true }
+    }
+
+    fn disarm(&mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for PanicGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            let _ = self.tx.send(ReplicaEvent::Died {
+                error: "replica thread terminated unexpectedly (panic)"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Tracks the heartbeat cadence and the decode-rate EWMA; shared by the
+/// engine-backed and simulated workers so both report comparable
+/// `tokens_per_s`.
+struct HeartbeatClock {
+    every: Duration,
+    last: Instant,
+    last_tokens: u64,
+    ewma: Option<f64>,
+}
+
+impl HeartbeatClock {
+    fn new(every_ms: u64) -> HeartbeatClock {
+        HeartbeatClock {
+            every: Duration::from_millis(every_ms.max(1)),
+            last: Instant::now(),
+            last_tokens: 0,
+            ewma: None,
+        }
+    }
+
+    /// When a beat is due, fold the window's token rate into the EWMA
+    /// and return it; `None` between beats.
+    fn tick(&mut self, tokens_total: u64) -> Option<f64> {
+        let dt = self.last.elapsed();
+        if dt < self.every {
+            return None;
+        }
+        let inst = (tokens_total - self.last_tokens) as f64
+            / dt.as_secs_f64().max(1e-9);
+        let ewma = match self.ewma {
+            Some(prev) => 0.3 * inst + 0.7 * prev,
+            None => inst,
+        };
+        self.ewma = Some(ewma);
+        self.last = Instant::now();
+        self.last_tokens = tokens_total;
+        Some(ewma)
+    }
+}
+
+/// Build the channel pair and spawn an engine-backed replica worker.
+pub fn engine_link(spec: &ReplicaSpec, assets: Arc<ModelAssets>)
+                   -> ReplicaLink {
+    let (cmd_tx, cmd_rx) = mpsc::channel();
+    let (ev_tx, ev_rx) = mpsc::channel();
+    let join = spawn_engine_replica(spec.clone(), assets, cmd_rx, ev_tx);
+    ReplicaLink { tx: cmd_tx, rx: ev_rx, join: Some(join) }
+}
+
+/// Spawn one real replica: its own `Runtime` (PJRT client) and
+/// `ServingCore`, an engine over the shared assets materializing only
+/// `spec.tags`, and the command/event loop.
+pub fn spawn_engine_replica(
+    spec: ReplicaSpec,
+    assets: Arc<ModelAssets>,
+    rx: Receiver<ReplicaCommand>,
+    tx: Sender<ReplicaEvent>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("replica-{}", spec.id))
+        .spawn(move || run_engine_replica(spec, assets, rx, tx))
+        .expect("spawn replica thread")
+}
+
+fn run_engine_replica(
+    spec: ReplicaSpec,
+    assets: Arc<ModelAssets>,
+    rx: Receiver<ReplicaCommand>,
+    tx: Sender<ReplicaEvent>,
+) {
+    let mut guard = PanicGuard::new(tx.clone());
+    let rt = match Runtime::new() {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            guard.disarm();
+            let _ = tx.send(ReplicaEvent::Died {
+                error: format!("replica {}: runtime: {e:#}", spec.id),
+            });
+            return;
+        }
+    };
+    let tags: Vec<&str> = spec.tags.iter().map(String::as_str).collect();
+    let engine =
+        match ServingEngine::load_shared(&rt, assets, spec.budget, &tags) {
+            Ok(e) => e,
+            Err(e) => {
+                guard.disarm();
+                let _ = tx.send(ReplicaEvent::Died {
+                    error: format!("replica {}: load: {e:#}", spec.id),
+                });
+                return;
+            }
+        };
+    let mut core =
+        ServingCore::new(&engine, SchedPolicy::Edf).with_config(spec.core.clone());
+    let mut queue = RequestQueue::new(SchedPolicy::Edf);
+    let mut pinned: HashMap<u64, f64> = HashMap::new();
+    let mut util = UtilizationSim::new(spec.id as u64 * 7919 + 13, 0.5);
+    let mut hb = HeartbeatClock::new(spec.heartbeat_ms);
+    let mut tokens_total = 0u64;
+    let _ = tx.send(ReplicaEvent::Ready);
+    loop {
+        // Ingest commands.  Block briefly only when fully idle, so an
+        // idle replica still heartbeats instead of looking wedged.
+        let mut shutdown = false;
+        loop {
+            let busy = core.has_active() || !queue.is_empty();
+            let cmd = if busy {
+                match rx.try_recv() {
+                    Ok(c) => Some(c),
+                    Err(TryRecvError::Empty) => None,
+                    Err(TryRecvError::Disconnected) => {
+                        shutdown = true;
+                        None
+                    }
+                }
+            } else {
+                let wait = Duration::from_millis(spec.heartbeat_ms.max(2) / 2);
+                match rx.recv_timeout(wait) {
+                    Ok(c) => Some(c),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        shutdown = true;
+                        None
+                    }
+                }
+            };
+            match cmd {
+                Some(ReplicaCommand::Submit { req, pinned: p }) => {
+                    if let Some(t) = p {
+                        pinned.insert(req.id, t);
+                    }
+                    queue.push(req);
+                }
+                Some(ReplicaCommand::Shutdown) => {
+                    shutdown = true;
+                    break;
+                }
+                None => break,
+            }
+        }
+        if shutdown {
+            // Finish the active set (no further admission), then exit
+            // cleanly.  The router may already be gone (channel drop);
+            // sends are best-effort.
+            let outs = core.drain(&mut |ev| match ev {
+                CoreEvent::Failed { id, error } => {
+                    let _ = tx.send(ReplicaEvent::Failed {
+                        id: *id,
+                        error: error.clone(),
+                    });
+                }
+                CoreEvent::Error { id, error, capacity } => {
+                    let _ = tx.send(ReplicaEvent::Error {
+                        id: *id,
+                        error: error.clone(),
+                        capacity: *capacity,
+                    });
+                }
+                _ => {}
+            });
+            if let Ok(outs) = outs {
+                for o in outs {
+                    let _ = tx.send(ReplicaEvent::Done(o));
+                }
+            }
+            guard.disarm();
+            let _ = tx.send(ReplicaEvent::Stopped);
+            return;
+        }
+        // Admit while there is capacity.  Pinned requests go straight to
+        // their (tier-clamped) target; the rest ride the QoS policy.  A
+        // rejected admission is terminal for that id only (PR 5).
+        while core.has_capacity() && !queue.is_empty() {
+            let Some(r) = queue.pop() else { break };
+            let id = r.id;
+            let res = match pinned.remove(&id) {
+                Some(t) => core.admit_pinned(r, t),
+                None => core.admit(r, util.tick()),
+            };
+            if let Err(e) = res {
+                let capacity = is_capacity_reject(&e);
+                let _ = tx.send(ReplicaEvent::Error {
+                    id,
+                    error: format!("{e:#}"),
+                    capacity,
+                });
+            }
+        }
+        if core.has_active() {
+            match core.step() {
+                Ok(events) => {
+                    for ev in events {
+                        match ev {
+                            CoreEvent::Token { .. } => tokens_total += 1,
+                            CoreEvent::Done(o) => {
+                                let _ = tx.send(ReplicaEvent::Done(o));
+                            }
+                            CoreEvent::Failed { id, error } => {
+                                let _ = tx.send(ReplicaEvent::Failed {
+                                    id, error,
+                                });
+                            }
+                            CoreEvent::Error { id, error, capacity } => {
+                                let _ = tx.send(ReplicaEvent::Error {
+                                    id, error, capacity,
+                                });
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    // Loop-level error: the PR 5 contract says keep
+                    // serving — per-request failures already surfaced
+                    // as events above.
+                    eprintln!("[replica {}] step error: {e:#}", spec.id);
+                }
+            }
+        }
+        if let Some(rate) = hb.tick(tokens_total) {
+            let _ = tx.send(ReplicaEvent::Heartbeat(ReplicaHealth {
+                queued: queue.len(),
+                active: core.active_len(),
+                tokens_per_s: rate,
+            }));
+        }
+    }
+}
+
+/// Simulated replica workers: the same channel protocol and the same
+/// token-interleaved serving discipline as the engine-backed worker
+/// (one round advances every active generation by one token), with a
+/// configurable per-token cost and injectable faults — so the router,
+/// its tests, and the `router_micro` bench exercise the REAL
+/// routing/steal/drain/respawn logic without artifacts.
+pub mod sim {
+    use super::*;
+
+    /// Timing + fault profile of one simulated replica.
+    #[derive(Debug, Clone)]
+    pub struct SimProfile {
+        /// Simulated per-token service time (one interleaved round).
+        pub token_us: u64,
+        /// Active-generation slots (the sim's `max_active`).
+        pub slots: usize,
+        /// Panic once this many tokens have been produced (chaos:
+        /// exercises [`PanicGuard`] → `Died` → drain/respawn).
+        pub panic_after_tokens: Option<u64>,
+        /// Go silent (no events, no heartbeats) once this many tokens
+        /// have been produced — a wedged worker, detected only by
+        /// heartbeat timeout.
+        pub mute_after_tokens: Option<u64>,
+        /// Answer the first `Submit` with a capacity reject
+        /// (`PoolExhausted`-shaped) — exercises the router's
+        /// retry-on-sibling path.
+        pub reject_first: bool,
+    }
+
+    impl Default for SimProfile {
+        fn default() -> SimProfile {
+            SimProfile {
+                token_us: 200,
+                slots: 4,
+                panic_after_tokens: None,
+                mute_after_tokens: None,
+                reject_first: false,
+            }
+        }
+    }
+
+    /// Build the channel pair and spawn a simulated worker.
+    pub fn sim_link(spec: &ReplicaSpec, profile: SimProfile) -> ReplicaLink {
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let (ev_tx, ev_rx) = mpsc::channel();
+        let join = spawn_sim_replica(spec.clone(), profile, cmd_rx, ev_tx);
+        ReplicaLink { tx: cmd_tx, rx: ev_rx, join: Some(join) }
+    }
+
+    pub fn spawn_sim_replica(
+        spec: ReplicaSpec,
+        profile: SimProfile,
+        rx: Receiver<ReplicaCommand>,
+        tx: Sender<ReplicaEvent>,
+    ) -> JoinHandle<()> {
+        std::thread::Builder::new()
+            .name(format!("sim-replica-{}", spec.id))
+            .spawn(move || run_sim_replica(spec, profile, rx, tx))
+            .expect("spawn sim replica thread")
+    }
+
+    /// An in-flight simulated generation.
+    struct SimGen {
+        req: Request,
+        target: f64,
+        produced: usize,
+        /// Arrival → admission wait, ms (queue delay component of TTFT).
+        wait_ms: f64,
+    }
+
+    fn outcome(g: &SimGen, token_us: u64) -> ServeOutcome {
+        let per_tok_ms = token_us as f64 / 1e3;
+        ServeOutcome {
+            id: g.req.id,
+            text: String::new(),
+            target_precision: g.target,
+            effective_bits: g.target,
+            prefill_ms: per_tok_ms,
+            decode_ms: per_tok_ms * g.produced as f64,
+            ttft_ms: g.wait_ms + per_tok_ms,
+            output_tokens: g.produced,
+            prefill_chunks: 1,
+            retargets: 0,
+        }
+    }
+
+    fn run_sim_replica(
+        spec: ReplicaSpec,
+        profile: SimProfile,
+        rx: Receiver<ReplicaCommand>,
+        tx: Sender<ReplicaEvent>,
+    ) {
+        let mut guard = PanicGuard::new(tx.clone());
+        let mut active: Vec<SimGen> = Vec::new();
+        let mut queue: Vec<(Request, Option<f64>)> = Vec::new();
+        let mut hb = HeartbeatClock::new(spec.heartbeat_ms);
+        let mut tokens_total = 0u64;
+        let mut rejected_once = false;
+        let _ = tx.send(ReplicaEvent::Ready);
+        loop {
+            let mut shutdown = false;
+            loop {
+                let busy = !active.is_empty() || !queue.is_empty();
+                let cmd = if busy {
+                    match rx.try_recv() {
+                        Ok(c) => Some(c),
+                        Err(TryRecvError::Empty) => None,
+                        Err(TryRecvError::Disconnected) => {
+                            shutdown = true;
+                            None
+                        }
+                    }
+                } else {
+                    let wait =
+                        Duration::from_millis(spec.heartbeat_ms.max(2) / 2);
+                    match rx.recv_timeout(wait) {
+                        Ok(c) => Some(c),
+                        Err(RecvTimeoutError::Timeout) => None,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            shutdown = true;
+                            None
+                        }
+                    }
+                };
+                match cmd {
+                    Some(ReplicaCommand::Submit { req, pinned }) => {
+                        if profile.reject_first && !rejected_once {
+                            rejected_once = true;
+                            let _ = tx.send(ReplicaEvent::Error {
+                                id: req.id,
+                                error: "sim: KV pool exhausted".to_string(),
+                                capacity: true,
+                            });
+                        } else {
+                            queue.push((req, pinned));
+                        }
+                    }
+                    Some(ReplicaCommand::Shutdown) => {
+                        shutdown = true;
+                        break;
+                    }
+                    None => break,
+                }
+            }
+            if shutdown {
+                // Finish the active set, drop the backlog (the router
+                // re-routes anything it still tracks), exit cleanly.
+                for g in &mut active {
+                    g.produced = g.req.max_new;
+                    let _ = tx.send(ReplicaEvent::Done(outcome(g, profile.token_us)));
+                }
+                guard.disarm();
+                let _ = tx.send(ReplicaEvent::Stopped);
+                return;
+            }
+            // Admit into free slots.
+            while active.len() < profile.slots.max(1) && !queue.is_empty() {
+                let (req, pinned) = queue.remove(0);
+                let target = pinned.unwrap_or_else(|| {
+                    spec.targets.first().copied().unwrap_or(4.0)
+                });
+                let wait_ms = req.arrival.elapsed().as_secs_f64() * 1e3;
+                active.push(SimGen { req, target, produced: 0, wait_ms });
+            }
+            if !active.is_empty() {
+                // One interleaved round: every active generation
+                // advances one token for one `token_us` of service time
+                // (the batched-decode idealization).
+                std::thread::sleep(Duration::from_micros(profile.token_us));
+                tokens_total += active.len() as u64;
+                let mut i = 0;
+                while i < active.len() {
+                    active[i].produced += 1;
+                    if active[i].produced >= active[i].req.max_new.max(1) {
+                        let g = active.swap_remove(i);
+                        let _ = tx.send(ReplicaEvent::Done(outcome(
+                            &g,
+                            profile.token_us,
+                        )));
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            if let Some(n) = profile.panic_after_tokens {
+                if tokens_total >= n {
+                    panic!("injected replica fault after {n} tokens");
+                }
+            }
+            if let Some(n) = profile.mute_after_tokens {
+                if tokens_total >= n {
+                    // Wedge: stop emitting anything (including
+                    // heartbeats) and idle until the router drops our
+                    // channel, then vanish without a Died event.
+                    loop {
+                        match rx.recv_timeout(Duration::from_millis(20)) {
+                            Err(RecvTimeoutError::Disconnected) => {
+                                guard.disarm();
+                                return;
+                            }
+                            _ => continue,
+                        }
+                    }
+                }
+            }
+            if let Some(rate) = hb.tick(tokens_total) {
+                let _ = tx.send(ReplicaEvent::Heartbeat(ReplicaHealth {
+                    queued: queue.len(),
+                    active: active.len(),
+                    tokens_per_s: rate,
+                }));
+            }
+        }
+    }
+}

@@ -51,6 +51,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::coordinator::qos::{QosBudget, UtilizationSim};
+use crate::coordinator::router::{Router, RouterEvent};
 use crate::coordinator::sched::{Request, RequestQueue, SchedPolicy};
 use crate::coordinator::service::{
     is_capacity_reject, CoreConfig, CoreEvent, ServingCore, ServingEngine,
@@ -114,29 +115,7 @@ impl Server {
         listener.set_nonblocking(true)?;
         eprintln!("[server] listening on {addr}");
         let (tx, rx) = channel::<Work>();
-        let acceptor_stop = stop.clone();
-
-        // Acceptor thread: sockets + HTTP parsing only (Send-safe).
-        let acceptor = std::thread::spawn(move || {
-            loop {
-                if acceptor_stop.load(Ordering::Relaxed) {
-                    break;
-                }
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let tx = tx.clone();
-                        std::thread::spawn(move || {
-                            let _ = handle_conn(stream, tx);
-                        });
-                    }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
-                    }
-                    Err(_) => break,
-                }
-            }
-            drop(tx);
-        });
+        let acceptor = spawn_acceptor(listener, tx, stop.clone());
 
         // Executor loop: owns the engine (and all !Send PJRT handles) and a
         // token-interleaved ServingCore.  EDF so deadlined requests preempt
@@ -217,6 +196,174 @@ impl Server {
         let _ = acceptor.join();
         Ok(())
     }
+}
+
+/// Acceptor thread: sockets + HTTP parsing only (Send-safe); parsed
+/// requests cross to the executor — single-engine [`Server`] or fleet
+/// [`RouterServer`] — as [`Work`] over the channel.
+fn spawn_acceptor(listener: TcpListener, tx: Sender<Work>,
+                  stop: Arc<AtomicBool>) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let tx = tx.clone();
+                    std::thread::spawn(move || {
+                        let _ = handle_conn(stream, tx);
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(_) => break,
+            }
+        }
+        drop(tx);
+    })
+}
+
+/// Multi-replica front end (DESIGN.md §Scale-out): the same acceptor +
+/// [`Work`] protocol as [`Server`], but the executor loop drives the
+/// fleet [`Router`] — class routing, work stealing, capacity retries
+/// and drain/respawn all happen here, while every decode loop runs on
+/// its replica's own thread (PJRT handles never cross threads).
+pub struct RouterServer {
+    router: Router,
+    stop: Arc<AtomicBool>,
+}
+
+impl RouterServer {
+    pub fn new(router: Router) -> RouterServer {
+        RouterServer { router, stop: Arc::new(AtomicBool::new(false)) }
+    }
+
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Serve until the stop flag flips, then shut the fleet down.
+    pub fn serve(self, addr: &str) -> Result<()> {
+        let RouterServer { mut router, stop } = self;
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        listener.set_nonblocking(true)?;
+        eprintln!("[router] listening on {addr} ({} replicas)",
+                  router.alive_count());
+        let (tx, rx) = channel::<Work>();
+        let acceptor = spawn_acceptor(listener, tx, stop.clone());
+        let mut waiting: HashMap<u64, Sender<String>> = HashMap::new();
+        let mut req_id = 0u64;
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            // Ingest: block briefly when nothing is pending so an idle
+            // fleet costs no CPU; otherwise drain without blocking.
+            if waiting.is_empty() {
+                match rx.recv_timeout(std::time::Duration::from_millis(50)) {
+                    Ok(work) => {
+                        req_id += 1;
+                        ingest_routed(&mut router, &mut waiting, req_id, work);
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        break;
+                    }
+                }
+            }
+            while let Ok(work) = rx.try_recv() {
+                req_id += 1;
+                ingest_routed(&mut router, &mut waiting, req_id, work);
+            }
+            for ev in router.poll() {
+                match ev {
+                    RouterEvent::Done { replica, outcome } => {
+                        let mut j = outcome_json(&outcome, 0.0);
+                        j.set("replica", replica as i64);
+                        if let Some(reply) = waiting.remove(&outcome.id) {
+                            let _ = reply.send(ok_json(&j));
+                        }
+                    }
+                    RouterEvent::Failed { id, error } => {
+                        if let Some(reply) = waiting.remove(&id) {
+                            let _ = reply.send(error_json(500, &error));
+                        }
+                    }
+                    RouterEvent::Rejected { id, error, capacity } => {
+                        if let Some(reply) = waiting.remove(&id) {
+                            let _ = reply.send(reject_response(&error, capacity));
+                        }
+                    }
+                    RouterEvent::Respawned { replica } => {
+                        eprintln!(
+                            "[router] replica {replica} drained and respawned"
+                        );
+                    }
+                }
+            }
+            if !waiting.is_empty() || !router.idle() {
+                // Replica work is asynchronous: poll at a token-ish
+                // cadence instead of spinning.
+                std::thread::sleep(std::time::Duration::from_micros(500));
+            }
+        }
+        router.shutdown();
+        let _ = acceptor.join();
+        Ok(())
+    }
+}
+
+/// [`ingest`]'s fleet twin: immediate endpoints answer from router
+/// state; generate work routes to a replica and replies later from a
+/// [`RouterEvent`].  Tokenization happens replica-side (the tokenizer
+/// lives with each engine), so ingest screening here is byte-level
+/// only — a prompt that tokenizes to nothing is still a per-request
+/// 400 from replica admission, never more.
+fn ingest_routed(router: &mut Router,
+                 waiting: &mut HashMap<u64, Sender<String>>, id: u64,
+                 work: Work) {
+    let resp = match route(&work.method, &work.path) {
+        Route::Health => {
+            let mut j = Json::obj();
+            j.set("status", "ok");
+            j.set("targets", Json::Arr(
+                router.targets().iter().map(|&t| Json::Num(t)).collect()));
+            j.set("replicas_alive", router.alive_count() as i64);
+            ok_json(&j)
+        }
+        Route::Metrics => {
+            // Fleet-level metrics: `router_*` counters + the per-replica
+            // `replicas` array (tier slice, queue depth, active slots,
+            // tokens/s EWMA, steals, respawns).
+            ok_json(&router.metrics_json())
+        }
+        Route::Generate => match parse_generate(id, &work.body) {
+            Ok((request, _)) if request.prompt.trim().is_empty() => {
+                error_json(400, "empty prompt")
+            }
+            Ok((request, pinned)) => match router.submit(request, pinned) {
+                None => {
+                    waiting.insert(id, work.reply);
+                    return; // replied later, from a RouterEvent
+                }
+                Some(RouterEvent::Rejected { error, capacity, .. }) => {
+                    reject_response(&error, capacity)
+                }
+                Some(_) => error_json(500, "unexpected router event"),
+            },
+            Err(e) => error_json(400, &format!("{e:#}")),
+        },
+        Route::WrongMethod(allow) => {
+            error_json_with(405, "Method Not Allowed",
+                            &format!("method {} not allowed", work.method),
+                            &[("Allow", allow)])
+        }
+        Route::NotFound => error_json(404, "not found"),
+    };
+    let _ = work.reply.send(resp);
 }
 
 /// Seconds a capacity-rejected client is told to wait before retrying.
@@ -692,5 +839,57 @@ mod tests {
             Parsed::Reject { code, .. } => assert_eq!(code, 400),
             Parsed::Req { .. } => panic!("expected reject"),
         }
+    }
+
+    /// Hermetic end-to-end pass through the router executor: sim replicas
+    /// (no model artifacts) behind a real TCP listener, driven by the same
+    /// `http_post`/`http_get` clients the integration tests use.
+    #[test]
+    fn router_server_end_to_end_over_sim_replicas() {
+        use crate::coordinator::router::RouterConfig;
+        use crate::runtime::replica::sim::{sim_link, SimProfile};
+        use crate::runtime::replica::ReplicaSpec;
+
+        let specs = vec![
+            ReplicaSpec::sim(0, &["3.25", "3.50"], false, 1.0),
+            ReplicaSpec::sim(1, &["4.50", "4.75"], true, 2.0),
+        ];
+        let router = Router::new(
+            specs,
+            Box::new(|spec| {
+                sim_link(
+                    spec,
+                    SimProfile {
+                        token_us: 50,
+                        ..SimProfile::default()
+                    },
+                )
+            }),
+            RouterConfig::default(),
+        );
+        let server = RouterServer::new(router);
+        let stop = server.stop_handle();
+        let addr = "127.0.0.1:18091";
+        let handle = std::thread::spawn(move || server.serve(addr));
+        std::thread::sleep(std::time::Duration::from_millis(50));
+
+        let r = http_post(addr, "/generate", r#"{"prompt":"hello world","max_new":4}"#)
+            .expect("generate roundtrip");
+        assert_eq!(r.f64_of("output_tokens").unwrap(), 4.0);
+        // Economy request (no deadline, no per-token budget) lands on the
+        // low-bit tier; the executor stamps which replica served it.
+        assert!(r.f64_of("replica").is_ok());
+        assert!(r.f64_of("target").unwrap() <= 3.5);
+
+        let h = http_get(addr, "/health").expect("health roundtrip");
+        assert_eq!(h.f64_of("replicas_alive").unwrap(), 2.0);
+
+        let m = http_get(addr, "/metrics").expect("metrics roundtrip");
+        let rows = m.get("replicas").expect("replicas key").as_arr().expect("fleet rows");
+        assert_eq!(rows.len(), 2);
+        assert!(m.f64_of("router_routed_economy").unwrap() >= 1.0);
+
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        handle.join().unwrap().unwrap();
     }
 }
