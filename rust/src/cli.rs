@@ -202,7 +202,11 @@ fn serve_fleet(args: &Args, model: &str, budget: u32, addr: &str,
                 budget,
                 tags: slice.clone(),
                 targets,
-                premium: i >= replicas / 2,
+                // From the clamped fleet size, not the requested
+                // --replicas: split_tiers may shrink the fleet to the
+                // ladder length, and `i >= replicas / 2` would then
+                // leave the whole fleet economy.
+                premium: i >= slices.len() / 2,
                 tpot_ms,
                 core: cc.clone(),
                 heartbeat_ms: 200,

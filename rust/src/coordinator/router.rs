@@ -66,20 +66,23 @@ pub struct ReplicaSnapshot {
     pub premium: bool,
     /// Modeled per-token ms of the replica's cheapest target.
     pub tpot_ms: f64,
-    /// Router backlog + forwarded in-flight (work ahead of a new
-    /// arrival).
+    /// Work ahead of a new arrival: router backlog + in-flight, where
+    /// in-flight is the larger of the router's forwarded count and the
+    /// replica-reported active slots — the heartbeat `active` is a
+    /// lagged view of the same forwarded requests, so summing both
+    /// would bill a busy replica roughly twice.
     pub queued: usize,
     /// Replica-reported active slots (last heartbeat).
     pub active: usize,
 }
 
 fn expected_delay(s: &ReplicaSnapshot) -> f64 {
-    s.tpot_ms.max(1e-9) * (s.queued + s.active + 1) as f64
+    s.tpot_ms.max(1e-9) * (s.queued + 1) as f64
 }
 
 /// Shortest-expected-delay routing with class affinity: prefer alive
 /// replicas of the request's class, minimizing
-/// `tpot_ms × (backlog + active + 1)` (ties broken by lowest id); when
+/// `tpot_ms × (queued + 1)` (ties broken by lowest id); when
 /// no replica of the class is alive, fall back to any alive replica —
 /// a degraded fleet still serves everything.
 pub fn pick_replica(snaps: &[ReplicaSnapshot], premium: bool)
@@ -178,8 +181,16 @@ pub struct RouterConfig {
     pub max_inflight: usize,
     /// Minimum victim queue depth before an idle replica steals.
     pub steal_threshold: usize,
-    /// Silence longer than this declares a replica wedged.
+    /// Silence longer than this declares a replica wedged — armed only
+    /// once the replica has spoken (its `Ready` arrived).
     pub heartbeat_timeout: Duration,
+    /// Startup grace: an engine-backed replica sends nothing until
+    /// `Runtime::new` + `ServingEngine::load_shared` finish, and
+    /// load/compile routinely outlasts a heartbeat period.  Until the
+    /// first event arrives the slot is judged against this much longer
+    /// deadline instead, so a slow load is not declared wedged and
+    /// respawned into a load loop that exhausts the respawn budget.
+    pub startup_timeout: Duration,
     /// Respawn budget per replica; a spec that keeps dying stops being
     /// revived (load failures would otherwise respawn forever).
     pub max_respawns: u64,
@@ -191,6 +202,7 @@ impl Default for RouterConfig {
             max_inflight: 4,
             steal_threshold: 2,
             heartbeat_timeout: Duration::from_millis(2000),
+            startup_timeout: Duration::from_secs(120),
             max_respawns: 3,
         }
     }
@@ -258,6 +270,10 @@ struct ReplicaSlot {
     alive: bool,
     /// Exited cleanly via `Shutdown` — never respawned.
     stopped: bool,
+    /// Has sent at least one event since (re)spawn — load finished, so
+    /// the wedge timer runs at `heartbeat_timeout` instead of
+    /// `startup_timeout`.
+    ready: bool,
     last_seen: Instant,
     health: ReplicaHealth,
     backlog: VecDeque<RoutedRequest>,
@@ -296,6 +312,7 @@ impl Router {
                     link,
                     alive: true,
                     stopped: false,
+                    ready: false,
                     last_seen: now,
                     health: ReplicaHealth::default(),
                     backlog: VecDeque::new(),
@@ -332,6 +349,13 @@ impl Router {
         self.replicas.iter().filter(|r| r.alive).count()
     }
 
+    /// Live replicas whose `Ready` has been observed — i.e. slots whose
+    /// wedge timer runs at `heartbeat_timeout` rather than the startup
+    /// deadline (diagnostics / deterministic tests).
+    pub fn ready_count(&self) -> usize {
+        self.replicas.iter().filter(|r| r.alive && r.ready).count()
+    }
+
     /// True when no routed request is waiting or in flight anywhere.
     pub fn idle(&self) -> bool {
         self.replicas
@@ -345,7 +369,7 @@ impl Router {
             alive: r.alive,
             premium: r.spec.premium,
             tpot_ms: r.spec.tpot_ms,
-            queued: r.backlog.len() + r.inflight.len(),
+            queued: r.backlog.len() + r.inflight.len().max(r.health.active),
             active: r.health.active,
         }
     }
@@ -391,7 +415,16 @@ impl Router {
     /// deterministic under test.
     pub fn poll_at(&mut self, now: Instant) -> Vec<RouterEvent> {
         let mut out = Vec::new();
+        // One entry per replica at most: a panic delivers Died AND a
+        // closed channel in the same poll, and draining twice would
+        // abandon the freshly respawned worker and burn a second
+        // respawn from the budget.
         let mut dead: Vec<(usize, String)> = Vec::new();
+        fn mark_dead(dead: &mut Vec<(usize, String)>, i: usize, why: String) {
+            if !dead.iter().any(|(j, _)| *j == i) {
+                dead.push((i, why));
+            }
+        }
         for i in 0..self.replicas.len() {
             loop {
                 let ev = match self.replicas[i].link.rx.try_recv() {
@@ -399,12 +432,14 @@ impl Router {
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => {
                         if self.replicas[i].alive {
-                            dead.push((i, "event channel closed".to_string()));
+                            mark_dead(&mut dead, i,
+                                      "event channel closed".to_string());
                         }
                         break;
                     }
                 };
                 self.replicas[i].last_seen = now;
+                self.replicas[i].ready = true;
                 match ev {
                     ReplicaEvent::Ready => {}
                     ReplicaEvent::Heartbeat(h) => self.replicas[i].health = h,
@@ -425,14 +460,21 @@ impl Router {
                         self.replicas[i].alive = false;
                         self.replicas[i].stopped = true;
                     }
-                    ReplicaEvent::Died { error } => dead.push((i, error)),
+                    ReplicaEvent::Died { error } => {
+                        mark_dead(&mut dead, i, error);
+                    }
                 }
             }
             let r = &self.replicas[i];
-            if r.alive
-                && now.duration_since(r.last_seen) > self.cfg.heartbeat_timeout
-            {
-                dead.push((i, "heartbeat timeout (replica wedged)".to_string()));
+            // Until the replica has spoken it is still loading: judge it
+            // against the (long) startup deadline, not the heartbeat one.
+            let (deadline, why) = if r.ready {
+                (self.cfg.heartbeat_timeout, "heartbeat timeout (replica wedged)")
+            } else {
+                (self.cfg.startup_timeout, "startup timeout (replica never became ready)")
+            };
+            if r.alive && now.duration_since(r.last_seen) > deadline {
+                mark_dead(&mut dead, i, why.to_string());
             }
         }
         for (i, reason) in dead {
@@ -547,6 +589,7 @@ impl Router {
             let link = (self.spawn)(&self.replicas[i].spec);
             self.replicas[i].link = link;
             self.replicas[i].alive = true;
+            self.replicas[i].ready = false;
             self.replicas[i].last_seen = now;
             self.replicas[i].respawns += 1;
             self.counters.respawns += 1;
@@ -1033,10 +1076,15 @@ mod tests {
                 ..RouterConfig::default()
             },
         );
-        // Let the workers emit Ready and drain it, then jump the clock
-        // past the timeout: every silent replica looks wedged.
-        std::thread::sleep(Duration::from_millis(30));
-        router.poll();
+        // Drain both workers' Ready (arming the heartbeat timer), then
+        // jump the clock past the timeout: every silent replica looks
+        // wedged.
+        let arm = Instant::now() + Duration::from_secs(2);
+        while router.ready_count() < 2 && Instant::now() < arm {
+            router.poll();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(router.ready_count(), 2, "workers never became ready");
         let future = Instant::now() + Duration::from_secs(10);
         let events = router.poll_at(future);
         let respawned = events
@@ -1046,6 +1094,93 @@ mod tests {
         assert_eq!(respawned, 2, "both silent replicas respawned");
         assert_eq!(router.counters().respawns, 2);
         assert_eq!(router.alive_count(), 2, "fleet recovered");
+        router.shutdown();
+    }
+
+    /// A replica that is still loading (no event sent yet) must be
+    /// judged against the long startup deadline, not the heartbeat
+    /// one — a real engine's load/compile easily outlasts the 2s
+    /// heartbeat timeout, and misdeclaring it wedged respawns it into
+    /// a load loop that exhausts the budget and kills the fleet.
+    #[test]
+    fn slow_startup_is_not_wedged_before_ready() {
+        use std::sync::mpsc;
+        let spawn = |_spec: &ReplicaSpec| {
+            let (cmd_tx, cmd_rx) = mpsc::channel::<ReplicaCommand>();
+            let (ev_tx, ev_rx) = mpsc::channel();
+            // "Loads" for 200 ms before Ready, then idles silently.
+            let join = std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(200));
+                let _ = ev_tx.send(ReplicaEvent::Ready);
+                loop {
+                    match cmd_rx.recv() {
+                        Ok(ReplicaCommand::Shutdown) | Err(_) => return,
+                        Ok(_) => {}
+                    }
+                }
+            });
+            ReplicaLink { tx: cmd_tx, rx: ev_rx, join: Some(join) }
+        };
+        let mut router = Router::new(
+            vec![ReplicaSpec::sim(0, &["4.00"], true, 1.0)],
+            Box::new(spawn),
+            RouterConfig {
+                heartbeat_timeout: Duration::from_millis(50),
+                ..RouterConfig::default()
+            },
+        );
+        // Far past the heartbeat timeout but well inside the startup
+        // deadline: the loading replica must NOT be declared wedged.
+        let events = router.poll_at(Instant::now() + Duration::from_secs(10));
+        assert!(events.is_empty(), "loading replica was drained");
+        assert_eq!(router.counters().respawns, 0,
+                   "slow load respawned mid-load");
+        assert_eq!(router.alive_count(), 1);
+        // Once Ready arrives the heartbeat timer arms: the same clock
+        // jump now declares the (silent) replica wedged.
+        let arm = Instant::now() + Duration::from_secs(2);
+        while router.ready_count() < 1 && Instant::now() < arm {
+            router.poll();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(router.ready_count(), 1, "worker never became ready");
+        let events = router.poll_at(Instant::now() + Duration::from_secs(10));
+        assert!(events.iter().any(|e| matches!(
+            e, RouterEvent::Respawned { replica: 0 })));
+        assert_eq!(router.counters().respawns, 1);
+        router.shutdown();
+    }
+
+    /// A panic delivers Died AND a closed channel in the same poll;
+    /// the drain must run once — a double drain would abandon the
+    /// freshly respawned worker and burn a second respawn.
+    #[test]
+    fn died_then_disconnect_respawns_once() {
+        let mut router = Router::new(
+            vec![ReplicaSpec::sim(0, &["4.00"], false, 1.0)],
+            Box::new(|spec| {
+                sim_link(spec, SimProfile {
+                    token_us: 50,
+                    slots: 1,
+                    panic_after_tokens: Some(1),
+                    ..SimProfile::default()
+                })
+            }),
+            RouterConfig::default(),
+        );
+        assert!(router.submit(eco_req(0, 4), None).is_none());
+        // Let the worker panic AND fully unwind (its event channel
+        // drops), so a single poll sees Died followed by Disconnected.
+        std::thread::sleep(Duration::from_millis(300));
+        let events = router.poll();
+        assert_eq!(router.counters().respawns, 1,
+                   "double drain burned two respawns");
+        let respawned = events
+            .iter()
+            .filter(|e| matches!(e, RouterEvent::Respawned { .. }))
+            .count();
+        assert_eq!(respawned, 1);
+        assert_eq!(router.alive_count(), 1, "fresh worker was abandoned");
         router.shutdown();
     }
 
@@ -1063,10 +1198,16 @@ mod tests {
             },
         );
         // Each wedge→respawn cycle takes two fabricated polls (one
-        // drains the fresh worker's Ready, the next declares it wedged
-        // again); 8 cycles comfortably exhausts a budget of 2 each.
+        // drains the fresh worker's Ready, arming the heartbeat timer;
+        // the next declares it wedged again).  Poll until the budget of
+        // 2 per replica is spent and the final drain leaves the fleet
+        // dead — the terminal state is absorbing, so the loop is exact.
+        let wall = Instant::now() + Duration::from_secs(5);
         let mut future = Instant::now();
-        for _ in 0..8 {
+        while router.counters().respawns < 4 || router.alive_count() > 0 {
+            if Instant::now() >= wall {
+                break;
+            }
             std::thread::sleep(Duration::from_millis(5));
             future += Duration::from_secs(10);
             router.poll_at(future);
