@@ -25,6 +25,13 @@ cargo bench --bench kvpool_micro
 # Router (class routing, work stealing, respawn) — throughput scaling
 # at 1/2/4 replicas + a chaos run; emits results/BENCH_router.json.
 cargo bench --bench router_micro
+# Trace-driven serving bench: seed-pinned Poisson/bursty/diurnal traces
+# (long-tail lengths, mixed SLO classes) replayed through sim fleets of
+# 1/2/4 replicas behind the real Router — goodput, per-class SLO
+# attainment, TTFT/ITL tails, Jain fairness; every cell schema-checked;
+# emits results/BENCH_serving_trace.json.  The real-engine cell engages
+# only when DPLLM_ARTIFACTS is set.
+cargo bench --bench serving_trace
 # Python L2 gate: the jax-level parity tests (incl. the speculative
 # verify_step_g* vs sequential-decode contract) run whenever a python
 # with jax + pytest is available; a cargo-only environment skips them so

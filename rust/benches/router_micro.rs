@@ -29,6 +29,7 @@ use dp_llm::coordinator::QosBudget;
 use dp_llm::runtime::replica::sim::{sim_link, SimProfile};
 use dp_llm::runtime::replica::ReplicaSpec;
 use dp_llm::util::json::Json;
+use dp_llm::util::stats;
 
 /// Simulated per-token service time of one replica round.
 const TOKEN_US: u64 = 200;
@@ -127,12 +128,7 @@ fn run_cell(n: usize, mix: &'static str, premium_pct: usize) -> Cell {
     }
     let elapsed = start.elapsed().as_secs_f64();
     router.shutdown();
-    queue_ms.sort_by(|a, b| a.total_cmp(b));
-    let p99 = queue_ms
-        .get(((queue_ms.len() as f64 * 0.99).ceil() as usize)
-             .saturating_sub(1))
-        .copied()
-        .unwrap_or(0.0);
+    let p99 = stats::percentile_nearest_rank(&queue_ms, 99.0).unwrap_or(0.0);
     let c = router.counters();
     Cell {
         replicas: n,

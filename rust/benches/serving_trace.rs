@@ -1,0 +1,256 @@
+//! Trace-driven serving bench (DESIGN.md §Evaluation): the end-to-end
+//! measurement every earlier bench deferred — goodput, per-class SLO
+//! attainment, p50/p99/p999 TTFT + ITL, and Jain fairness under
+//! realistic query streams.
+//!
+//! Artifact-free grid: {Poisson, bursty MMPP, diurnal} arrival models ×
+//! {1, 2, 4}-replica fleets of simulated workers behind the REAL
+//! [`Router`] (same sim idiom as `router_micro`), replaying a
+//! seed-pinned long-tail trace of `N_REQUESTS` per cell at `TIME_SCALE`
+//! compression — tens of thousands of requests total, runs in every CI.
+//! Artifact-gated cell: the same trace machinery through a real
+//! single-engine `ServingCore` when `DPLLM_ARTIFACTS` is set.
+//!
+//! Every cell is schema-checked (`loadgen::schema_check`) before
+//! anything is written; results land in
+//! `results/BENCH_serving_trace.json`.
+
+use std::time::Duration;
+
+use dp_llm::bench_support as bs;
+use dp_llm::coordinator::loadgen::{
+    self, replay_fleet, ArrivalProcess, ReplayOpts, TraceReport, TraceSpec,
+};
+use dp_llm::coordinator::router::{Router, RouterConfig};
+use dp_llm::runtime::replica::sim::{sim_link, SimProfile};
+use dp_llm::runtime::replica::ReplicaSpec;
+use dp_llm::util::json::Json;
+
+/// Simulated per-token service time of one replica round.
+const TOKEN_US: u64 = 50;
+/// Active-generation slots per sim replica.
+const SLOTS: usize = 8;
+/// Requests per grid cell (9 cells → 22.5k replayed requests).
+const N_REQUESTS: usize = 2500;
+const MAX_SEQ: usize = 512;
+const MAX_NEW: usize = 16;
+/// Trace-time compression: 0.005 turns a ~100 req/s trace into ~20k
+/// req/s offered load — one sim replica saturates, four do not, so the
+/// grid shows both regimes.
+const TIME_SCALE: f64 = 0.005;
+const SEED: u64 = 20250808;
+
+fn arrival_models() -> Vec<ArrivalProcess> {
+    vec![
+        ArrivalProcess::Poisson { rate_per_s: 100.0 },
+        ArrivalProcess::Bursty {
+            rate_on: 250.0,
+            rate_off: 20.0,
+            mean_on_s: 2.0,
+            mean_off_s: 2.0,
+        },
+        ArrivalProcess::Diurnal {
+            base_per_s: 100.0,
+            amplitude: 0.8,
+            period_s: 20.0,
+        },
+    ]
+}
+
+/// Same tiering as `router_micro` / `--replicas n`: lower half economy,
+/// upper half premium.
+fn fleet(n: usize) -> Router {
+    let specs: Vec<ReplicaSpec> = (0..n)
+        .map(|i| {
+            let premium = i >= n / 2 && n > 1;
+            let tags: &[&str] = if premium {
+                &["4.50", "4.75"]
+            } else {
+                &["3.25", "3.50"]
+            };
+            ReplicaSpec::sim(i, tags, premium, TOKEN_US as f64 / 1e3)
+        })
+        .collect();
+    Router::new(
+        specs,
+        Box::new(|spec| {
+            sim_link(
+                spec,
+                SimProfile {
+                    token_us: TOKEN_US,
+                    slots: SLOTS,
+                    ..SimProfile::default()
+                },
+            )
+        }),
+        RouterConfig::default(),
+    )
+}
+
+/// The mixed-SLO spec with metering thresholds rescaled to sim service
+/// times (sim ITL is 0.05 ms, so the production 250/60 ms ITL budgets
+/// would never discriminate — TTFT under queueing is where sim cells
+/// differ).
+fn spec_for(arrival: ArrivalProcess) -> TraceSpec {
+    let mut spec = TraceSpec::mixed(arrival, MAX_SEQ, MAX_NEW);
+    spec.classes[1].slo_ttft_ms = 25.0;
+    spec.classes[2].slo_ttft_ms = 10.0;
+    spec
+}
+
+fn run_cell(arrival: ArrivalProcess, replicas: usize) -> TraceReport {
+    let trace = spec_for(arrival)
+        .generate(N_REQUESTS, SEED)
+        .expect("trace generation");
+    let mut router = fleet(replicas);
+    let report = replay_fleet(
+        &trace,
+        &mut router,
+        &ReplayOpts {
+            time_scale: TIME_SCALE,
+            deadline: Duration::from_secs(30),
+        },
+    );
+    router.shutdown();
+    assert_eq!(
+        report.lost, 0,
+        "{} x{replicas}: requests without terminal outcome",
+        arrival.name()
+    );
+    report
+}
+
+/// Artifact-gated: the identical trace machinery through one real
+/// engine-backed `ServingCore`.  `None` when artifacts are missing.
+fn run_engine_cell() -> Option<TraceReport> {
+    use dp_llm::coordinator::loadgen::replay_core;
+    use dp_llm::coordinator::sched::SchedPolicy;
+    use dp_llm::coordinator::service::{ServingCore, ServingEngine};
+    use dp_llm::coordinator::UtilizationSim;
+    use dp_llm::runtime::Runtime;
+    use std::sync::Arc;
+
+    if !bs::require_artifacts("serving_trace") {
+        return None;
+    }
+    let rt = Arc::new(Runtime::new().ok()?);
+    let engine = match ServingEngine::load(&rt, "dpl-tiny", 5, &["4.00"]) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("[serving_trace] engine load failed ({e:#}); skipping");
+            return None;
+        }
+    };
+    let mut core = ServingCore::new(&engine, SchedPolicy::Edf);
+    let mut util = UtilizationSim::constant(0.3);
+    let trace = spec_for(ArrivalProcess::Poisson { rate_per_s: 20.0 })
+        .generate(40, SEED)
+        .expect("engine trace");
+    let report = replay_core(
+        &trace,
+        &mut core,
+        &mut util,
+        &ReplayOpts {
+            time_scale: 0.05,
+            deadline: Duration::from_secs(120),
+        },
+    );
+    Some(report)
+}
+
+fn main() {
+    let fleets = [1usize, 2, 4];
+    let models = arrival_models();
+
+    println!(
+        "serving_trace: {N_REQUESTS} reqs/cell, sim {TOKEN_US} us/token x \
+         {SLOTS} slots, time_scale {TIME_SCALE} (offered load ~1/scale):"
+    );
+    let mut rows = Vec::new();
+    let mut cells = Vec::new();
+    for arrival in &models {
+        for &n in &fleets {
+            let r = run_cell(*arrival, n);
+            println!(
+                "  {:>7} x{}: goodput {:8.0} tok/s (of {:8.0}), attain \
+                 {:5.3}, ttft p99 {:7.2} ms (premium p999 {:7.2}), jain \
+                 {:5.3}",
+                r.arrival,
+                n,
+                r.goodput_tok_s,
+                r.throughput_tok_s,
+                r.slo_attainment,
+                r.classes
+                    .iter()
+                    .filter_map(|c| c.ttft.map(|t| t.p99))
+                    .fold(0.0f64, f64::max),
+                r.classes
+                    .last()
+                    .and_then(|c| c.ttft.map(|t| t.p999))
+                    .unwrap_or(0.0),
+                r.jain_fairness,
+            );
+            rows.push(vec![
+                format!("{} x{}", r.arrival, n),
+                format!(
+                    "goodput {:.0}/{:.0} tok/s, attain {:.3}, jain {:.3}",
+                    r.goodput_tok_s,
+                    r.throughput_tok_s,
+                    r.slo_attainment,
+                    r.jain_fairness
+                ),
+            ]);
+            cells.push(r);
+        }
+    }
+
+    // Emitter self-gate: every cell must pass the schema check BEFORE
+    // anything lands in results/ — a broken emitter fails CI here.
+    let mut json_cells = Vec::with_capacity(cells.len());
+    for r in &cells {
+        let j = r.to_json();
+        loadgen::schema_check(&j).expect("serving_trace cell schema");
+        json_cells.push(j);
+    }
+
+    let engine_cell = run_engine_cell();
+
+    let mut j = Json::obj();
+    j.set("bench", "serving_trace")
+        .set("requests_per_cell", N_REQUESTS)
+        .set("token_us", TOKEN_US as i64)
+        .set("slots", SLOTS)
+        .set("time_scale", TIME_SCALE)
+        .set("max_seq", MAX_SEQ)
+        .set("max_new", MAX_NEW)
+        .set("seed", SEED as i64)
+        .set("cells", Json::Arr(json_cells));
+    if let Some(r) = &engine_cell {
+        let cell = r.to_json();
+        loadgen::schema_check(&cell).expect("engine cell schema");
+        println!(
+            "  engine x1: goodput {:.1} tok/s, attain {:.3} (real \
+             ServingCore, 40 reqs)",
+            r.goodput_tok_s, r.slo_attainment
+        );
+        rows.push(vec![
+            "engine x1 (artifact-gated)".into(),
+            format!(
+                "goodput {:.1} tok/s, attain {:.3}",
+                r.goodput_tok_s, r.slo_attainment
+            ),
+        ]);
+        j.set("engine_cell", cell);
+    }
+
+    let _ = std::fs::create_dir_all("results");
+    let _ = std::fs::write("results/BENCH_serving_trace.json", j.dump());
+    println!("wrote results/BENCH_serving_trace.json");
+
+    bs::emit(
+        "serving_trace",
+        "Trace-driven serving: goodput / SLO attainment / tails / fairness",
+        &["cell", "value"],
+        &rows,
+    );
+}

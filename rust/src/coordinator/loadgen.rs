@@ -1,0 +1,1129 @@
+//! Trace-driven load generation + end-to-end SLO metering
+//! (DESIGN.md §Evaluation).
+//!
+//! Every bench before this one was micro or steady-state; this module is
+//! the missing piece the ROADMAP calls "honest evaluation": a
+//! deterministic, seed-replayable query stream shaped like production
+//! traffic — Poisson / bursty (MMPP on/off) / diurnal arrivals, long-tail
+//! prompt/output lengths (lognormal body + Pareto tail, capped at
+//! `max_seq`), and mixed SLO classes layered on the existing
+//! [`WorkloadSpec`]/[`QosClass`] machinery — plus the replay drivers that
+//! push it through a single [`ServingCore`] or the [`Router`] fleet and
+//! meter what the paper's §6.3 experiments meter: goodput (tokens/s from
+//! requests that met their SLO), per-class SLO attainment, nearest-rank
+//! p50/p99/p999 TTFT and ITL, and a Jain fairness index.
+//!
+//! Everything here is plain host-side data: the same [`Trace`] replays
+//! against simulated replica workers (hermetic tests, the artifact-free
+//! `serving_trace` bench cells) and against real engines (the
+//! artifact-gated cell) without changing a single metric definition.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::qos::UtilizationSim;
+use super::router::{Router, RouterEvent};
+use super::sched::Request;
+use super::service::{is_capacity_reject, CoreEvent, ServingCore};
+use super::workload::{QosClass, WorkloadSpec};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::{tail_percentiles, TailPercentiles};
+
+// ---------------------------------------------------------------------------
+// Arrival processes
+// ---------------------------------------------------------------------------
+
+/// The arrival-time model of a trace.  All three are sampled with the
+/// deterministic [`Rng`], so a `(process, seed)` pair always produces the
+/// identical arrival sequence.
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at a constant rate — the baseline open-loop
+    /// load every queueing result assumes.
+    Poisson { rate_per_s: f64 },
+    /// Markov-modulated Poisson process with ON/OFF phases: arrivals at
+    /// `rate_on` during ON dwells, `rate_off` during OFF dwells, with
+    /// exponentially distributed dwell times.  Its window-count variance
+    /// exceeds Poisson's (index of dispersion > 1) — the bursty traffic
+    /// that actually breaks tail latency.
+    Bursty {
+        rate_on: f64,
+        rate_off: f64,
+        mean_on_s: f64,
+        mean_off_s: f64,
+    },
+    /// Non-homogeneous Poisson with a sinusoidal rate
+    /// `λ(t) = base·(1 + amplitude·sin(2πt/period))`, sampled by Lewis
+    /// thinning — the slow day/night swell under which reconfiguration
+    /// policies earn their keep.  `amplitude` is clamped to `[0, 1]`.
+    Diurnal {
+        base_per_s: f64,
+        amplitude: f64,
+        period_s: f64,
+    },
+}
+
+impl ArrivalProcess {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+            ArrivalProcess::Diurnal { .. } => "diurnal",
+        }
+    }
+
+    /// Long-run mean arrival rate (requests/s) — capacity planning and
+    /// the share-validation hand-off to [`WorkloadSpec`].
+    pub fn mean_rate_per_s(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate_per_s } => rate_per_s,
+            ArrivalProcess::Bursty {
+                rate_on,
+                rate_off,
+                mean_on_s,
+                mean_off_s,
+            } => {
+                let span = (mean_on_s + mean_off_s).max(1e-12);
+                (rate_on * mean_on_s + rate_off * mean_off_s) / span
+            }
+            ArrivalProcess::Diurnal { base_per_s, .. } => base_per_s,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        let ok = |x: f64| x.is_finite() && x >= 0.0;
+        match *self {
+            ArrivalProcess::Poisson { rate_per_s } => {
+                if !ok(rate_per_s) || rate_per_s == 0.0 {
+                    bail!("poisson rate must be finite and positive");
+                }
+            }
+            ArrivalProcess::Bursty {
+                rate_on,
+                rate_off,
+                mean_on_s,
+                mean_off_s,
+            } => {
+                if !ok(rate_on) || !ok(rate_off) || rate_on.max(rate_off) == 0.0 {
+                    bail!("bursty rates must be finite, >= 0, not both 0");
+                }
+                let pos = |x: f64| x.is_finite() && x > 0.0;
+                if !pos(mean_on_s) || !pos(mean_off_s) {
+                    bail!("bursty dwell means must be positive");
+                }
+            }
+            ArrivalProcess::Diurnal { base_per_s, period_s, .. } => {
+                let pos = |x: f64| x.is_finite() && x > 0.0;
+                if !pos(base_per_s) || !pos(period_s) {
+                    bail!("diurnal base rate and period must be positive");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Sample `n` arrival offsets (ms from trace start, nondecreasing).
+    pub fn arrivals_ms(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n);
+        match *self {
+            ArrivalProcess::Poisson { rate_per_s } => {
+                let mut t = 0.0;
+                for _ in 0..n {
+                    t += rng.exp(rate_per_s) * 1e3;
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Bursty {
+                rate_on,
+                rate_off,
+                mean_on_s,
+                mean_off_s,
+            } => {
+                let mut t_s = 0.0;
+                let mut on = true;
+                let mut phase_end = rng.exp(1.0 / mean_on_s);
+                while out.len() < n {
+                    let rate = if on { rate_on } else { rate_off };
+                    // rng.exp(0) is +inf, so an idle OFF phase simply
+                    // fast-forwards to its dwell boundary.
+                    let dt = rng.exp(rate);
+                    if t_s + dt >= phase_end {
+                        // Phase flip: the exponential is memoryless, so
+                        // redrawing at the new rate is exact.
+                        t_s = phase_end;
+                        on = !on;
+                        let dwell = if on { mean_on_s } else { mean_off_s };
+                        phase_end = t_s + rng.exp(1.0 / dwell);
+                        continue;
+                    }
+                    t_s += dt;
+                    out.push(t_s * 1e3);
+                }
+            }
+            ArrivalProcess::Diurnal {
+                base_per_s,
+                amplitude,
+                period_s,
+            } => {
+                let amp = amplitude.clamp(0.0, 1.0);
+                let rate_max = base_per_s * (1.0 + amp);
+                let mut t_s = 0.0;
+                while out.len() < n {
+                    // Lewis thinning: homogeneous candidates at the peak
+                    // rate, accepted with probability λ(t)/λ_max.
+                    t_s += rng.exp(rate_max);
+                    let phase = 2.0 * std::f64::consts::PI * t_s / period_s;
+                    let rate_t = base_per_s * (1.0 + amp * phase.sin());
+                    if rng.f64() * rate_max <= rate_t.max(0.0) {
+                        out.push(t_s * 1e3);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Length distributions
+// ---------------------------------------------------------------------------
+
+/// Long-tail length model: a lognormal body with a Pareto tail, clamped
+/// to `[min, cap]` — production prompt/output length histograms in two
+/// moments plus a tail index.  `cap` is `max_seq` for prompts and the
+/// per-request `max_new` for outputs, so a tail draw can never exceed
+/// what the serving stack admits.
+#[derive(Debug, Clone, Copy)]
+pub struct LengthDist {
+    /// Mean of `ln(len)` for the body (body median = `e^ln_mean`).
+    pub ln_mean: f64,
+    /// Stddev of `ln(len)` for the body.
+    pub ln_sigma: f64,
+    /// Probability a draw comes from the Pareto tail instead.
+    pub tail_prob: f64,
+    /// Pareto shape α (smaller = heavier tail); the scale is the body
+    /// median, so the tail extends the body rather than replacing it.
+    pub pareto_alpha: f64,
+    pub min: usize,
+    /// Inclusive upper clamp.
+    pub cap: usize,
+}
+
+impl LengthDist {
+    /// Prompt lengths: median ~48 tokens, σ=0.8, 5% Pareto(1.2) tail —
+    /// the "mostly short, occasionally huge" shape of chat traffic.
+    pub fn prompts(cap: usize) -> LengthDist {
+        LengthDist {
+            ln_mean: 48.0f64.ln(),
+            ln_sigma: 0.8,
+            tail_prob: 0.05,
+            pareto_alpha: 1.2,
+            min: 1,
+            cap,
+        }
+    }
+
+    /// Output lengths: median ~12 tokens, σ=0.6, 5% Pareto(1.5) tail.
+    pub fn outputs(cap: usize) -> LengthDist {
+        LengthDist {
+            ln_mean: 12.0f64.ln(),
+            ln_sigma: 0.6,
+            tail_prob: 0.05,
+            pareto_alpha: 1.5,
+            min: 1,
+            cap,
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let x = if rng.bool(self.tail_prob) {
+            let xm = self.ln_mean.exp();
+            let u = rng.f64().max(1e-12);
+            xm * u.powf(-1.0 / self.pareto_alpha.max(1e-6))
+        } else {
+            (self.ln_mean + self.ln_sigma * rng.normal()).exp()
+        };
+        let lo = self.min.max(1);
+        let hi = self.cap.max(lo);
+        (x.round() as usize).clamp(lo, hi)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SLO classes + trace spec
+// ---------------------------------------------------------------------------
+
+/// A [`QosClass`] plus the metering thresholds that decide whether a
+/// completed request *counts*: goodput and attainment are computed
+/// against these, while the embedded QoS budget/deadline keep steering
+/// admission and scheduling exactly as before.
+#[derive(Debug, Clone)]
+pub struct TraceClass {
+    pub name: String,
+    pub qos: QosClass,
+    /// TTFT SLO (ms); `INFINITY` = no first-token SLO.
+    pub slo_ttft_ms: f64,
+    /// Mean inter-token-latency SLO (ms/token); `INFINITY` = none.
+    pub slo_itl_ms: f64,
+}
+
+/// Everything needed to synthesize a [`Trace`]: arrival model, length
+/// models, and the SLO class table.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    pub arrival: ArrivalProcess,
+    pub prompt_len: LengthDist,
+    pub output_len: LengthDist,
+    pub classes: Vec<TraceClass>,
+}
+
+impl TraceSpec {
+    /// The standard mixed-SLO trace, layered on [`WorkloadSpec::mixed`]:
+    /// the same three QoS classes (best-effort / tight-250 / tight-60 +
+    /// 2 s deadline), with metering thresholds derived from each class's
+    /// own budget (ITL SLO = `ms_per_token`, TTFT SLO = the EDF
+    /// deadline).  Benches override the thresholds for sim-scale runs.
+    pub fn mixed(arrival: ArrivalProcess, max_seq: usize, max_new: usize)
+                 -> TraceSpec {
+        let ws = WorkloadSpec::mixed(arrival.mean_rate_per_s(), max_new);
+        let names = ["best_effort", "standard", "premium"];
+        let classes = ws
+            .classes
+            .iter()
+            .zip(names)
+            .map(|(c, name)| TraceClass {
+                name: name.to_string(),
+                qos: *c,
+                slo_ttft_ms: c.deadline_ms.unwrap_or(f64::INFINITY),
+                slo_itl_ms: c.budget.ms_per_token,
+            })
+            .collect();
+        TraceSpec {
+            arrival,
+            prompt_len: LengthDist::prompts(max_seq),
+            output_len: LengthDist::outputs(max_new),
+            classes,
+        }
+    }
+
+    /// View the class table through [`WorkloadSpec::validated`] — one
+    /// validation/normalization path for both the steady-state workload
+    /// generator and the trace driver.
+    fn normalized_shares(&self) -> Result<Vec<f64>> {
+        let ws = WorkloadSpec {
+            rate_per_s: self.arrival.mean_rate_per_s(),
+            max_new: self.output_len.cap.max(1),
+            classes: self.classes.iter().map(|c| c.qos).collect(),
+        }
+        .validated()
+        .context("TraceSpec class table")?;
+        Ok(ws.classes.iter().map(|c| c.share).collect())
+    }
+
+    /// Synthesize `n` requests.  Deterministic: the same `(spec, n,
+    /// seed)` always yields the identical trace.
+    pub fn generate(&self, n: usize, seed: u64) -> Result<Trace> {
+        self.arrival.validate()?;
+        let shares = self.normalized_shares()?;
+        let mut rng = Rng::new(seed);
+        let arrivals = self.arrival.arrivals_ms(n, &mut rng);
+        let mut events = Vec::with_capacity(n);
+        for at_ms in arrivals {
+            let mut draw = rng.f64();
+            let mut class = shares.len() - 1;
+            for (i, s) in shares.iter().enumerate() {
+                draw -= s;
+                if draw <= 0.0 {
+                    class = i;
+                    break;
+                }
+            }
+            events.push(TraceEvent {
+                at_ms,
+                class,
+                prompt_tokens: self.prompt_len.sample(&mut rng),
+                max_new: self.output_len.sample(&mut rng),
+            });
+        }
+        Ok(Trace {
+            arrival: self.arrival.name(),
+            seed,
+            classes: self.classes.clone(),
+            events,
+        })
+    }
+}
+
+/// One synthetic request: plain data, materialized into a [`Request`]
+/// only at its release instant so queue/TTFT metering stays honest.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    /// Release offset from trace start (ms).
+    pub at_ms: f64,
+    /// Index into [`Trace::classes`].
+    pub class: usize,
+    pub prompt_tokens: usize,
+    pub max_new: usize,
+}
+
+/// A fully synthesized, replayable trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub arrival: &'static str,
+    pub seed: u64,
+    pub classes: Vec<TraceClass>,
+    pub events: Vec<TraceEvent>,
+}
+
+/// A synthetic prompt of roughly `tokens` tokens: single-character words
+/// so sim replicas stay cheap while real tokenizers still see ~one token
+/// per word.
+pub fn synth_prompt(tokens: usize) -> String {
+    let n = tokens.max(1);
+    let mut s = String::with_capacity(2 * n);
+    for i in 0..n {
+        if i > 0 {
+            s.push(' ');
+        }
+        s.push('t');
+    }
+    s
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Total span of the arrival sequence (ms).
+    pub fn duration_ms(&self) -> f64 {
+        self.events.last().map(|e| e.at_ms).unwrap_or(0.0)
+    }
+
+    /// Materialize event `i` as a live [`Request`] — call at release
+    /// time: the request's `arrival` stamp is `Instant::now()`.
+    pub fn request(&self, i: usize) -> Request {
+        let e = self.events[i];
+        let c = &self.classes[e.class];
+        let mut r = Request::new(
+            i as u64,
+            synth_prompt(e.prompt_tokens),
+            e.max_new,
+            c.qos.budget,
+        );
+        if let Some(d) = c.qos.deadline_ms {
+            r = r.with_deadline(d);
+        }
+        r
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replay drivers
+// ---------------------------------------------------------------------------
+
+/// Replay pacing + safety rails.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplayOpts {
+    /// Wall-clock multiplier on trace timestamps: `0.01` replays a
+    /// 100 s trace in ~1 s.  Service times are NOT scaled — compression
+    /// raises the offered load, which is exactly what saturation cells
+    /// want; report it alongside the results.
+    pub time_scale: f64,
+    /// Hard wall deadline: requests still pending when it passes are
+    /// recorded as [`Terminal::Lost`] instead of hanging the harness.
+    pub deadline: Duration,
+}
+
+impl Default for ReplayOpts {
+    fn default() -> ReplayOpts {
+        ReplayOpts { time_scale: 1.0, deadline: Duration::from_secs(60) }
+    }
+}
+
+/// Terminal state of one replayed request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Terminal {
+    /// Completed with an outcome.
+    Done,
+    /// Admission reject; `capacity: true` is the retryable 503 shape,
+    /// `false` the malformed-request 400 shape.
+    Rejected { capacity: bool },
+    /// Aborted mid-flight.
+    Failed,
+    /// Never reached a terminal event before the replay deadline — a
+    /// wedge; chaos gates assert this stays zero.
+    Lost,
+}
+
+/// Per-request metering record.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestRecord {
+    pub class: usize,
+    pub terminal: Terminal,
+    /// First-token latency as reported by the serving outcome (ms);
+    /// NaN unless [`Terminal::Done`].
+    pub ttft_ms: f64,
+    /// Mean inter-token latency: `decode_ms / output_tokens` (ms); NaN
+    /// unless [`Terminal::Done`].
+    pub itl_ms: f64,
+    pub tokens: usize,
+    /// Submit → terminal wall latency (ms).
+    pub latency_ms: f64,
+}
+
+struct ReplayState {
+    recs: Vec<RequestRecord>,
+    submitted: Vec<Option<Instant>>,
+    terminal: usize,
+}
+
+impl ReplayState {
+    fn new(trace: &Trace) -> ReplayState {
+        ReplayState {
+            recs: trace
+                .events
+                .iter()
+                .map(|e| RequestRecord {
+                    class: e.class,
+                    terminal: Terminal::Lost,
+                    ttft_ms: f64::NAN,
+                    itl_ms: f64::NAN,
+                    tokens: 0,
+                    latency_ms: f64::NAN,
+                })
+                .collect(),
+            submitted: vec![None; trace.events.len()],
+            terminal: 0,
+        }
+    }
+
+    fn latency_ms(&self, id: usize) -> f64 {
+        self.submitted[id]
+            .map(|t| t.elapsed().as_secs_f64() * 1e3)
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Record a terminal state once; later duplicates are ignored (a
+    /// request must reach exactly one terminal outcome).
+    fn settle(&mut self, id: u64, make: impl FnOnce(&mut RequestRecord)) {
+        let i = id as usize;
+        if i >= self.recs.len() || self.recs[i].terminal != Terminal::Lost {
+            return;
+        }
+        let lat = self.latency_ms(i);
+        let r = &mut self.recs[i];
+        r.latency_ms = lat;
+        make(r);
+        self.terminal += 1;
+    }
+
+    fn on_router_event(&mut self, ev: RouterEvent) {
+        match ev {
+            RouterEvent::Done { outcome, .. } => {
+                self.settle(outcome.id, |r| {
+                    r.terminal = Terminal::Done;
+                    r.ttft_ms = outcome.ttft_ms;
+                    r.tokens = outcome.output_tokens;
+                    r.itl_ms =
+                        outcome.decode_ms / outcome.output_tokens.max(1) as f64;
+                });
+            }
+            RouterEvent::Failed { id, .. } => {
+                self.settle(id, |r| r.terminal = Terminal::Failed);
+            }
+            RouterEvent::Rejected { id, capacity, .. } => {
+                self.settle(id, |r| r.terminal = Terminal::Rejected { capacity });
+            }
+            RouterEvent::Respawned { .. } => {}
+        }
+    }
+
+    fn on_core_event(&mut self, ev: CoreEvent) {
+        match ev {
+            CoreEvent::Done(outcome) => {
+                self.settle(outcome.id, |r| {
+                    r.terminal = Terminal::Done;
+                    r.ttft_ms = outcome.ttft_ms;
+                    r.tokens = outcome.output_tokens;
+                    r.itl_ms =
+                        outcome.decode_ms / outcome.output_tokens.max(1) as f64;
+                });
+            }
+            CoreEvent::Failed { id, .. } => {
+                self.settle(id, |r| r.terminal = Terminal::Failed);
+            }
+            CoreEvent::Error { id, capacity, .. } => {
+                self.settle(id, |r| {
+                    r.terminal = Terminal::Rejected { capacity };
+                });
+            }
+            CoreEvent::Token { .. } => {}
+        }
+    }
+}
+
+/// Replay `trace` through the [`Router`] fleet: release each request at
+/// `at_ms · time_scale`, poll terminal events, meter everything.  The
+/// router is left running (callers shut it down) so counters can be read
+/// after the report.
+pub fn replay_fleet(trace: &Trace, router: &mut Router, opts: &ReplayOpts)
+                    -> TraceReport {
+    let n = trace.events.len();
+    let replicas = router.alive_count();
+    let mut st = ReplayState::new(trace);
+    let start = Instant::now();
+    let hard = start + opts.deadline;
+    let mut next = 0usize;
+    while st.terminal < n {
+        if Instant::now() > hard {
+            break; // unfinished requests stay Lost
+        }
+        let now_ms = start.elapsed().as_secs_f64() * 1e3;
+        while next < n && trace.events[next].at_ms * opts.time_scale <= now_ms {
+            let req = trace.request(next);
+            st.submitted[next] = Some(Instant::now());
+            if let Some(ev) = router.submit(req, None) {
+                st.on_router_event(ev);
+            }
+            next += 1;
+        }
+        for ev in router.poll() {
+            st.on_router_event(ev);
+        }
+        std::thread::sleep(Duration::from_micros(100));
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    build_report(trace, &st.recs, wall_s, replicas)
+}
+
+/// Replay `trace` through a single [`ServingCore`] (the artifact-gated
+/// path): release due requests into a FIFO, admit while the core has
+/// slot capacity, step the core, meter.  Admission errors are terminal
+/// for that request only (the PR 5 contract).  `util` feeds the
+/// QoS → precision policy exactly as the serving loop does.
+pub fn replay_core(trace: &Trace, core: &mut ServingCore,
+                   util: &mut UtilizationSim, opts: &ReplayOpts)
+                   -> TraceReport {
+    let n = trace.events.len();
+    let mut st = ReplayState::new(trace);
+    let start = Instant::now();
+    let hard = start + opts.deadline;
+    let mut next = 0usize;
+    let mut pending: VecDeque<Request> = VecDeque::new();
+    while st.terminal < n {
+        if Instant::now() > hard {
+            break;
+        }
+        let now_ms = start.elapsed().as_secs_f64() * 1e3;
+        while next < n && trace.events[next].at_ms * opts.time_scale <= now_ms {
+            st.submitted[next] = Some(Instant::now());
+            pending.push_back(trace.request(next));
+            next += 1;
+        }
+        while core.has_capacity() && !pending.is_empty() {
+            let req = pending.pop_front().expect("nonempty pending");
+            let id = req.id;
+            if let Err(e) = core.admit(req, util.tick()) {
+                let capacity = is_capacity_reject(&e);
+                st.settle(id, |r| {
+                    r.terminal = Terminal::Rejected { capacity };
+                });
+            }
+        }
+        if core.has_active() {
+            match core.step() {
+                Ok(events) => {
+                    for ev in events {
+                        st.on_core_event(ev);
+                    }
+                }
+                Err(e) => {
+                    // PR 5 contract: loop-level errors keep serving;
+                    // per-request failures already surfaced as events.
+                    eprintln!("[replay_core] step error: {e:#}");
+                }
+            }
+        } else {
+            // Nothing active: wait briefly for the next release (or for
+            // the wall deadline to flag whatever never settled).
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    build_report(trace, &st.recs, wall_s, 1)
+}
+
+// ---------------------------------------------------------------------------
+// Metering
+// ---------------------------------------------------------------------------
+
+/// Per-class slice of the report.
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    pub name: String,
+    pub submitted: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub failed: usize,
+    pub lost: usize,
+    /// Completed requests that met both SLO thresholds.
+    pub slo_met: usize,
+    /// `slo_met / submitted` (1.0 for an empty class).
+    pub attainment: f64,
+    /// Tokens/s from SLO-meeting requests of this class.
+    pub goodput_tok_s: f64,
+    /// Nearest-rank TTFT tails over completed requests.
+    pub ttft: Option<TailPercentiles>,
+    /// Nearest-rank mean-ITL tails over completed requests.
+    pub itl: Option<TailPercentiles>,
+}
+
+/// The full replay report — everything `BENCH_serving_trace.json` emits.
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    pub arrival: String,
+    pub replicas: usize,
+    pub requests: usize,
+    pub wall_s: f64,
+    /// Tokens produced by completed requests.
+    pub tokens: usize,
+    /// All completed tokens / wall time.
+    pub throughput_tok_s: f64,
+    /// Tokens from SLO-meeting requests / wall time — the headline.
+    pub goodput_tok_s: f64,
+    /// Overall `slo_met / submitted`.
+    pub slo_attainment: f64,
+    /// Jain index `(Σx)²/(n·Σx²)` over per-request service rates
+    /// (tokens per second of wall latency) of completed requests;
+    /// 1.0 = perfectly even service, →1/n = one request starves the
+    /// rest.  1.0 when fewer than two requests completed.
+    pub jain_fairness: f64,
+    pub lost: usize,
+    pub classes: Vec<ClassReport>,
+}
+
+/// Jain fairness index over nonnegative rates.
+pub fn jain_index(rates: &[f64]) -> f64 {
+    let xs: Vec<f64> = rates
+        .iter()
+        .copied()
+        .filter(|x| x.is_finite() && *x >= 0.0)
+        .collect();
+    if xs.len() < 2 {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sumsq: f64 = xs.iter().map(|x| x * x).sum();
+    if sumsq <= 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (xs.len() as f64 * sumsq)
+}
+
+fn build_report(trace: &Trace, recs: &[RequestRecord], wall_s: f64,
+                replicas: usize) -> TraceReport {
+    let wall = wall_s.max(1e-9);
+    let mut classes = Vec::with_capacity(trace.classes.len());
+    let (mut tokens_all, mut good_tokens, mut met_all, mut lost_all) =
+        (0usize, 0usize, 0usize, 0usize);
+    for (ci, tc) in trace.classes.iter().enumerate() {
+        let mine: Vec<&RequestRecord> =
+            recs.iter().filter(|r| r.class == ci).collect();
+        let mut ttft = Vec::new();
+        let mut itl = Vec::new();
+        let (mut completed, mut rejected, mut failed, mut lost) =
+            (0usize, 0usize, 0usize, 0usize);
+        let (mut slo_met, mut class_good) = (0usize, 0usize);
+        for r in &mine {
+            match r.terminal {
+                Terminal::Done => {
+                    completed += 1;
+                    tokens_all += r.tokens;
+                    ttft.push(r.ttft_ms);
+                    itl.push(r.itl_ms);
+                    if r.ttft_ms <= tc.slo_ttft_ms && r.itl_ms <= tc.slo_itl_ms
+                    {
+                        slo_met += 1;
+                        class_good += r.tokens;
+                    }
+                }
+                Terminal::Rejected { .. } => rejected += 1,
+                Terminal::Failed => failed += 1,
+                Terminal::Lost => lost += 1,
+            }
+        }
+        met_all += slo_met;
+        good_tokens += class_good;
+        lost_all += lost;
+        classes.push(ClassReport {
+            name: tc.name.clone(),
+            submitted: mine.len(),
+            completed,
+            rejected,
+            failed,
+            lost,
+            slo_met,
+            attainment: if mine.is_empty() {
+                1.0
+            } else {
+                slo_met as f64 / mine.len() as f64
+            },
+            goodput_tok_s: class_good as f64 / wall,
+            ttft: tail_percentiles(&ttft),
+            itl: tail_percentiles(&itl),
+        });
+    }
+    let rates: Vec<f64> = recs
+        .iter()
+        .filter(|r| r.terminal == Terminal::Done && r.latency_ms > 0.0)
+        .map(|r| r.tokens as f64 / (r.latency_ms / 1e3))
+        .collect();
+    TraceReport {
+        arrival: trace.arrival.to_string(),
+        replicas,
+        requests: recs.len(),
+        wall_s,
+        tokens: tokens_all,
+        throughput_tok_s: tokens_all as f64 / wall,
+        goodput_tok_s: good_tokens as f64 / wall,
+        slo_attainment: if recs.is_empty() {
+            1.0
+        } else {
+            met_all as f64 / recs.len() as f64
+        },
+        jain_fairness: jain_index(&rates),
+        lost: lost_all,
+        classes,
+    }
+}
+
+impl TraceReport {
+    /// The JSON cell `serving_trace` emits.  Tail percentiles of a class
+    /// with zero completions are emitted as 0.0 (check `completed`).
+    pub fn to_json(&self) -> Json {
+        let tails = |o: &mut Json, prefix: &str, t: Option<TailPercentiles>| {
+            let t = t.unwrap_or(TailPercentiles {
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+                p999: 0.0,
+            });
+            o.set(&format!("{prefix}_p50_ms"), t.p50)
+                .set(&format!("{prefix}_p90_ms"), t.p90)
+                .set(&format!("{prefix}_p99_ms"), t.p99)
+                .set(&format!("{prefix}_p999_ms"), t.p999);
+        };
+        let mut cls = Vec::with_capacity(self.classes.len());
+        for c in &self.classes {
+            let mut o = Json::obj();
+            o.set("name", c.name.as_str())
+                .set("submitted", c.submitted)
+                .set("completed", c.completed)
+                .set("rejected", c.rejected)
+                .set("failed", c.failed)
+                .set("lost", c.lost)
+                .set("slo_met", c.slo_met)
+                .set("slo_attainment", c.attainment)
+                .set("goodput_tok_s", c.goodput_tok_s);
+            tails(&mut o, "ttft", c.ttft);
+            tails(&mut o, "itl", c.itl);
+            cls.push(o);
+        }
+        let mut j = Json::obj();
+        j.set("arrival", self.arrival.as_str())
+            .set("replicas", self.replicas)
+            .set("requests", self.requests)
+            .set("wall_s", self.wall_s)
+            .set("tokens", self.tokens)
+            .set("throughput_tok_s", self.throughput_tok_s)
+            .set("goodput_tok_s", self.goodput_tok_s)
+            .set("slo_attainment", self.slo_attainment)
+            .set("jain_fairness", self.jain_fairness)
+            .set("lost", self.lost)
+            .set("classes", Json::Arr(cls));
+        j
+    }
+}
+
+/// Schema sanity check for one report cell: every required key present,
+/// every number finite.  Runs as a unit test AND as the emitter's own
+/// pre-write gate, so a broken emitter fails CI instead of writing
+/// garbage into `results/BENCH_serving_trace.json`.
+pub fn schema_check(j: &Json) -> Result<()> {
+    j.req("arrival")?.as_str().context("arrival")?;
+    for key in [
+        "replicas",
+        "requests",
+        "wall_s",
+        "tokens",
+        "throughput_tok_s",
+        "goodput_tok_s",
+        "slo_attainment",
+        "jain_fairness",
+        "lost",
+    ] {
+        let v = j.req(key)?.as_f64().with_context(|| key.to_string())?;
+        if !v.is_finite() {
+            bail!("serving_trace schema: {key} = {v} not finite");
+        }
+    }
+    let classes = j.req("classes")?.as_arr().context("classes")?;
+    if classes.is_empty() {
+        bail!("serving_trace schema: empty classes array");
+    }
+    for (i, c) in classes.iter().enumerate() {
+        c.req("name")?.as_str().with_context(|| format!("class {i} name"))?;
+        for key in [
+            "submitted",
+            "completed",
+            "rejected",
+            "failed",
+            "lost",
+            "slo_met",
+            "slo_attainment",
+            "goodput_tok_s",
+            "ttft_p50_ms",
+            "ttft_p90_ms",
+            "ttft_p99_ms",
+            "ttft_p999_ms",
+            "itl_p50_ms",
+            "itl_p90_ms",
+            "itl_p99_ms",
+            "itl_p999_ms",
+        ] {
+            let v = c
+                .req(key)?
+                .as_f64()
+                .with_context(|| format!("class {i} {key}"))?;
+            if !v.is_finite() {
+                bail!("serving_trace schema: class {i} {key} = {v} not finite");
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::RouterConfig;
+    use crate::runtime::replica::sim::{sim_link, SimProfile};
+    use crate::runtime::replica::ReplicaSpec;
+
+    fn poisson(rate: f64) -> ArrivalProcess {
+        ArrivalProcess::Poisson { rate_per_s: rate }
+    }
+
+    fn bursty() -> ArrivalProcess {
+        ArrivalProcess::Bursty {
+            rate_on: 200.0,
+            rate_off: 5.0,
+            mean_on_s: 0.5,
+            mean_off_s: 0.5,
+        }
+    }
+
+    fn diurnal() -> ArrivalProcess {
+        ArrivalProcess::Diurnal {
+            base_per_s: 50.0,
+            amplitude: 0.9,
+            period_s: 10.0,
+        }
+    }
+
+    /// Index of dispersion (variance/mean of window counts) — ≈1 for
+    /// Poisson, >1 for bursty traffic.
+    fn dispersion(arrivals_ms: &[f64], window_ms: f64) -> f64 {
+        let span = arrivals_ms.last().copied().unwrap_or(0.0);
+        let nwin = (span / window_ms).ceil().max(1.0) as usize;
+        let mut counts = vec![0.0f64; nwin];
+        for &t in arrivals_ms {
+            let w = ((t / window_ms) as usize).min(nwin - 1);
+            counts[w] += 1.0;
+        }
+        let mean = counts.iter().sum::<f64>() / counts.len() as f64;
+        let var = counts.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>()
+            / counts.len() as f64;
+        var / mean.max(1e-12)
+    }
+
+    #[test]
+    fn arrivals_deterministic_per_seed() {
+        for proc in [poisson(30.0), bursty(), diurnal()] {
+            let a = proc.arrivals_ms(300, &mut Rng::new(7));
+            let b = proc.arrivals_ms(300, &mut Rng::new(7));
+            assert_eq!(a, b, "{} not seed-deterministic", proc.name());
+            let c = proc.arrivals_ms(300, &mut Rng::new(8));
+            assert_ne!(a, c, "{} ignores the seed", proc.name());
+            for win in a.windows(2) {
+                assert!(win[1] >= win[0], "{} non-monotonic", proc.name());
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_interarrival_mean_within_tolerance() {
+        let rate = 50.0;
+        let a = poisson(rate).arrivals_ms(4000, &mut Rng::new(3));
+        let mean_gap_ms = a.last().unwrap() / a.len() as f64;
+        let expect = 1e3 / rate;
+        assert!(
+            (mean_gap_ms - expect).abs() < 0.1 * expect,
+            "mean gap {mean_gap_ms} ms, expected ~{expect} ms"
+        );
+    }
+
+    #[test]
+    fn bursty_dispersion_exceeds_poisson() {
+        // Equal mean rates, same window: the MMPP must be visibly
+        // burstier than Poisson.
+        let rate = bursty().mean_rate_per_s();
+        let pois = poisson(rate).arrivals_ms(3000, &mut Rng::new(5));
+        let brst = bursty().arrivals_ms(3000, &mut Rng::new(5));
+        let d_pois = dispersion(&pois, 100.0);
+        let d_brst = dispersion(&brst, 100.0);
+        assert!(d_pois < 2.0, "poisson dispersion {d_pois} implausibly high");
+        assert!(
+            d_brst > d_pois && d_brst > 1.5,
+            "bursty dispersion {d_brst} not above poisson {d_pois}"
+        );
+    }
+
+    #[test]
+    fn diurnal_peak_half_outweighs_trough_half() {
+        let a = diurnal().arrivals_ms(4000, &mut Rng::new(9));
+        // sin > 0 on the first half of each period, < 0 on the second.
+        let period_ms = 10_000.0;
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for &t in &a {
+            if (t % period_ms) < period_ms / 2.0 {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak as f64 > 1.5 * trough as f64,
+            "peak {peak} vs trough {trough}: no diurnal shape"
+        );
+    }
+
+    #[test]
+    fn lengths_clamped_and_long_tailed() {
+        let d = LengthDist::prompts(4096);
+        let mut rng = Rng::new(4);
+        let mut xs = Vec::new();
+        for _ in 0..4000 {
+            let x = d.sample(&mut rng);
+            assert!((1..=4096).contains(&x));
+            xs.push(x as f64);
+        }
+        let med = crate::util::stats::percentile_nearest_rank(&xs, 50.0)
+            .unwrap();
+        let p99 = crate::util::stats::percentile_nearest_rank(&xs, 99.0)
+            .unwrap();
+        assert!(
+            p99 > 3.0 * med,
+            "p99 {p99} vs median {med}: tail not heavy"
+        );
+    }
+
+    #[test]
+    fn trace_generation_deterministic() {
+        let spec = TraceSpec::mixed(bursty(), 512, 32);
+        let a = spec.generate(500, 42).unwrap();
+        let b = spec.generate(500, 42).unwrap();
+        assert_eq!(a.len(), 500);
+        for (x, y) in a.events.iter().zip(&b.events) {
+            assert_eq!(x.at_ms, y.at_ms);
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+            assert_eq!(x.max_new, y.max_new);
+        }
+        for e in &a.events {
+            assert!(e.class < spec.classes.len());
+            assert!((1..=512).contains(&e.prompt_tokens));
+            assert!((1..=32).contains(&e.max_new));
+        }
+    }
+
+    #[test]
+    fn trace_spec_rejects_malformed_classes() {
+        let mut spec = TraceSpec::mixed(poisson(10.0), 128, 16);
+        spec.classes[0].qos.share = f64::NAN;
+        assert!(spec.generate(10, 1).is_err());
+        let mut spec = TraceSpec::mixed(poisson(10.0), 128, 16);
+        spec.classes.clear();
+        assert!(spec.generate(10, 1).is_err());
+    }
+
+    #[test]
+    fn jain_index_bounds() {
+        assert_eq!(jain_index(&[2.0, 2.0, 2.0]), 1.0);
+        let skew = jain_index(&[10.0, 0.1, 0.1, 0.1]);
+        assert!(skew < 0.5, "skewed rates should score low: {skew}");
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[5.0]), 1.0);
+    }
+
+    #[test]
+    fn synth_prompt_token_count() {
+        assert_eq!(synth_prompt(1), "t");
+        assert_eq!(synth_prompt(3), "t t t");
+        assert_eq!(synth_prompt(0), "t"); // never empty
+    }
+
+    /// Hermetic end-to-end: a small bursty trace through a 2-replica sim
+    /// fleet — every request terminal, none lost, and the emitted JSON
+    /// passes the schema gate (the satellite's emitter regression).
+    #[test]
+    fn replay_fleet_all_terminal_and_schema_valid() {
+        let spec = TraceSpec::mixed(bursty(), 64, 8);
+        let trace = spec.generate(80, 17).unwrap();
+        let specs: Vec<ReplicaSpec> = (0..2)
+            .map(|i| {
+                ReplicaSpec::sim(i, &["3.50", "4.50"], i == 1, 0.05)
+            })
+            .collect();
+        let mut router = Router::new(
+            specs,
+            Box::new(|spec| {
+                sim_link(spec, SimProfile { token_us: 50, ..SimProfile::default() })
+            }),
+            RouterConfig::default(),
+        );
+        let report = replay_fleet(
+            &trace,
+            &mut router,
+            &ReplayOpts {
+                time_scale: 0.002,
+                deadline: Duration::from_secs(20),
+            },
+        );
+        router.shutdown();
+        assert_eq!(report.requests, 80);
+        assert_eq!(report.lost, 0, "requests lost in a healthy fleet");
+        let done: usize = report.classes.iter().map(|c| c.completed).sum();
+        let rejected: usize = report.classes.iter().map(|c| c.rejected).sum();
+        let failed: usize = report.classes.iter().map(|c| c.failed).sum();
+        assert_eq!(done + rejected + failed, 80);
+        assert!(report.tokens > 0);
+        assert!(report.throughput_tok_s > 0.0);
+        assert!(report.jain_fairness > 0.0 && report.jain_fairness <= 1.0);
+        let j = report.to_json();
+        schema_check(&j).expect("schema");
+        // And a broken cell must fail the gate.
+        assert!(schema_check(&Json::obj()).is_err());
+        let mut bad = report.clone();
+        bad.jain_fairness = f64::NAN;
+        assert!(schema_check(&bad.to_json()).is_err());
+    }
+}

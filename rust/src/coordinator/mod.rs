@@ -7,6 +7,7 @@
 //! is a *dynamic* configuration — per-layer precision keeps being chosen
 //! token by token by the relative-error selector.
 
+pub mod loadgen;
 pub mod metrics;
 pub mod sampler;
 pub mod qos;
@@ -15,6 +16,7 @@ pub mod sched;
 pub mod workload;
 pub mod service;
 
+pub use loadgen::{ArrivalProcess, LengthDist, Trace, TraceReport, TraceSpec};
 pub use qos::{AdaptationPolicy, QosBudget, UtilizationSim};
 pub use router::{Router, RouterConfig, RouterCounters, RouterEvent};
 pub use sched::{Request, RequestQueue, SchedPolicy};

@@ -219,6 +219,9 @@ pub struct RouterCounters {
     pub retries: u64,
     /// Capacity rejects surfaced to the client (503 + `Retry-After`).
     pub rejects_capacity: u64,
+    /// Malformed-request rejects surfaced to the client (400) — the
+    /// fleet-level aggregate of replica-side `admit_rejects_invalid`.
+    pub rejects_invalid: u64,
     /// Backlogged requests re-routed off a dead replica.
     pub rerouted: u64,
     /// In-flight requests terminated by a replica death.
@@ -234,6 +237,7 @@ impl RouterCounters {
             .set("router_respawns", self.respawns as i64)
             .set("router_retries", self.retries as i64)
             .set("router_rejects_capacity", self.rejects_capacity as i64)
+            .set("router_rejects_invalid", self.rejects_invalid as i64)
             .set("router_rerouted", self.rerouted as i64)
             .set("router_died_inflight", self.died_inflight as i64);
         j
@@ -531,6 +535,8 @@ impl Router {
         }
         if capacity {
             self.counters.rejects_capacity += 1;
+        } else {
+            self.counters.rejects_invalid += 1;
         }
         out.push(RouterEvent::Rejected { id, error, capacity });
     }

@@ -2,6 +2,8 @@
 //! mixed QoS classes, prompt sampling from the instruct set — the
 //! controllable analog of the paper's §6.3 query stream.
 
+use anyhow::{bail, Result};
+
 use super::qos::QosBudget;
 use super::sched::Request;
 use crate::util::rng::Rng;
@@ -41,6 +43,35 @@ impl WorkloadSpec {
         }
     }
 
+    /// Validate the class table and normalize shares to sum to exactly
+    /// 1.0.  Errors on an empty table and on any share that is NaN,
+    /// infinite, or not strictly positive — a malformed spec must fail
+    /// loudly instead of silently skewing class assignment (a NaN share
+    /// poisons the cumulative draw in `pick_class`; a negative one makes
+    /// its *neighbor* over-selected).
+    pub fn validated(mut self) -> Result<WorkloadSpec> {
+        if self.classes.is_empty() {
+            bail!("WorkloadSpec: empty class table");
+        }
+        for (i, c) in self.classes.iter().enumerate() {
+            if !c.share.is_finite() || c.share <= 0.0 {
+                bail!(
+                    "WorkloadSpec: class {i} share {} must be a finite \
+                     positive number",
+                    c.share
+                );
+            }
+        }
+        let sum: f64 = self.classes.iter().map(|c| c.share).sum();
+        if !sum.is_finite() || sum <= 0.0 {
+            bail!("WorkloadSpec: class shares sum to {sum}");
+        }
+        for c in &mut self.classes {
+            c.share /= sum;
+        }
+        Ok(self)
+    }
+
     fn pick_class(&self, rng: &mut Rng) -> &QosClass {
         let mut draw = rng.f64() * self.classes.iter().map(|c| c.share).sum::<f64>();
         for c in &self.classes {
@@ -54,16 +85,21 @@ impl WorkloadSpec {
 
     /// Generate `n` requests over `prompts` with Poisson inter-arrival
     /// offsets (returned alongside, in ms, for trace-driven replay).
+    ///
+    /// Panics on a malformed class table (see [`WorkloadSpec::validated`])
+    /// — callers building specs from external input should validate
+    /// first and surface the error.
     pub fn generate(&self, prompts: &[String], n: usize, seed: u64)
                     -> Vec<(f64, Request)> {
+        let spec = self.clone().validated().expect("invalid WorkloadSpec");
         let mut rng = Rng::new(seed);
         let mut t_ms = 0.0;
         let mut out = Vec::with_capacity(n);
         for i in 0..n {
-            t_ms += rng.exp(self.rate_per_s) * 1e3;
-            let class = *self.pick_class(&mut rng);
+            t_ms += rng.exp(spec.rate_per_s) * 1e3;
+            let class = *spec.pick_class(&mut rng);
             let prompt = prompts[rng.range(0, prompts.len())].clone();
-            let mut r = Request::new(i as u64, prompt, self.max_new, class.budget);
+            let mut r = Request::new(i as u64, prompt, spec.max_new, class.budget);
             if let Some(d) = class.deadline_ms {
                 r = r.with_deadline(d);
             }
@@ -120,6 +156,60 @@ mod tests {
             assert_eq!(x.1.prompt, y.1.prompt);
             assert_eq!(x.0, y.0);
         }
+    }
+
+    fn spec_with_shares(shares: &[f64]) -> WorkloadSpec {
+        WorkloadSpec {
+            rate_per_s: 10.0,
+            max_new: 8,
+            classes: shares
+                .iter()
+                .map(|&share| QosClass {
+                    share,
+                    budget: QosBudget::best_effort(),
+                    deadline_ms: None,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn validated_normalizes_shares_to_one() {
+        let w = spec_with_shares(&[2.0, 6.0]).validated().unwrap();
+        assert!((w.classes[0].share - 0.25).abs() < 1e-12);
+        assert!((w.classes[1].share - 0.75).abs() < 1e-12);
+        let sum: f64 = w.classes.iter().map(|c| c.share).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validated_rejects_malformed_shares() {
+        assert!(spec_with_shares(&[]).validated().is_err());
+        assert!(spec_with_shares(&[0.0, 1.0]).validated().is_err());
+        assert!(spec_with_shares(&[-0.5, 1.5]).validated().is_err());
+        assert!(spec_with_shares(&[f64::NAN, 1.0]).validated().is_err());
+        assert!(spec_with_shares(&[f64::INFINITY, 1.0]).validated().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid WorkloadSpec")]
+    fn generate_panics_on_negative_share() {
+        spec_with_shares(&[-1.0, 2.0]).generate(&prompts(), 5, 1);
+    }
+
+    /// Un-normalized (but valid) shares still drive the advertised mix:
+    /// generate normalizes internally, so 3:1 means 75% / 25%.
+    #[test]
+    fn generate_normalizes_unnormalized_shares() {
+        let mut w = spec_with_shares(&[3.0, 1.0]);
+        w.classes[1].budget = QosBudget::tight(100.0);
+        let reqs = w.generate(&prompts(), 800, 11);
+        let tight = reqs
+            .iter()
+            .filter(|(_, r)| r.qos.ms_per_token.is_finite())
+            .count();
+        let frac = tight as f64 / reqs.len() as f64;
+        assert!((frac - 0.25).abs() < 0.06, "tight share {frac}");
     }
 
     /// Property: shares always sum to ~1 and every request gets a prompt

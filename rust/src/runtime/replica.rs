@@ -415,6 +415,12 @@ pub mod sim {
         /// (`PoolExhausted`-shaped) — exercises the router's
         /// retry-on-sibling path.
         pub reject_first: bool,
+        /// Admission screening like the engine core's: an empty prompt,
+        /// or one longer than this many chars, answers with a terminal
+        /// invalid reject (`capacity: false`, the 400 shape the core's
+        /// `admit_rejects_invalid` counter tracks).  `None` admits
+        /// anything — the pre-chaos default.
+        pub max_prompt_chars: Option<usize>,
     }
 
     impl Default for SimProfile {
@@ -425,6 +431,7 @@ pub mod sim {
                 panic_after_tokens: None,
                 mute_after_tokens: None,
                 reject_first: false,
+                max_prompt_chars: None,
             }
         }
     }
@@ -514,7 +521,20 @@ pub mod sim {
                 };
                 match cmd {
                     Some(ReplicaCommand::Submit { req, pinned }) => {
-                        if profile.reject_first && !rejected_once {
+                        let invalid = match profile.max_prompt_chars {
+                            Some(m) => req.prompt.trim().is_empty()
+                                || req.prompt.len() > m,
+                            None => false,
+                        };
+                        if invalid {
+                            let _ = tx.send(ReplicaEvent::Error {
+                                id: req.id,
+                                error: "sim: invalid prompt (empty or over \
+                                        max length)"
+                                    .to_string(),
+                                capacity: false,
+                            });
+                        } else if profile.reject_first && !rejected_once {
                             rejected_once = true;
                             let _ = tx.send(ReplicaEvent::Error {
                                 id: req.id,

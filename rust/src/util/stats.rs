@@ -47,6 +47,57 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     quantile(xs, p / 100.0)
 }
 
+/// Nearest-rank percentile (p in [0,100]): the smallest element with at
+/// least `⌈p/100·n⌉` observations at or below it — an actual observed
+/// sample, never an interpolated value, which is what tail-latency
+/// reporting wants (a p999 that was really measured).  Distinct from
+/// [`quantile`]/[`percentile`], whose numpy-linear interpolation the
+/// Phase-3 threshold translation depends on.  Returns `None` for empty
+/// input or when any sample is NaN — a poisoned latency series must
+/// fail loudly, not sort arbitrarily.
+pub fn percentile_nearest_rank(xs: &[f64], p: f64) -> Option<f64> {
+    if xs.is_empty() || xs.iter().any(|x| x.is_nan()) {
+        return None;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let p = p.clamp(0.0, 100.0);
+    let rank = ((p / 100.0 * v.len() as f64).ceil() as usize)
+        .clamp(1, v.len());
+    Some(v[rank - 1])
+}
+
+/// The tail summary every latency-reporting bench shares: nearest-rank
+/// p50/p90/p99/p999 computed in one sort.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TailPercentiles {
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub p999: f64,
+}
+
+/// One-sort [`percentile_nearest_rank`] at the standard report points.
+/// Same `None` contract: empty or NaN-containing input.
+pub fn tail_percentiles(xs: &[f64]) -> Option<TailPercentiles> {
+    if xs.is_empty() || xs.iter().any(|x| x.is_nan()) {
+        return None;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let at = |p: f64| {
+        let rank = ((p / 100.0 * v.len() as f64).ceil() as usize)
+            .clamp(1, v.len());
+        v[rank - 1]
+    };
+    Some(TailPercentiles {
+        p50: at(50.0),
+        p90: at(90.0),
+        p99: at(99.0),
+        p999: at(99.9),
+    })
+}
+
 /// Median absolute deviation — robust spread for bench reporting.
 pub fn mad(xs: &[f64]) -> f64 {
     let med = quantile(xs, 0.5);
@@ -161,6 +212,75 @@ mod tests {
         assert!((quantile(&xs, 0.25) - 1.75).abs() < 1e-12);
         assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-12);
         assert!((quantile(&xs, 1.0) - 4.0).abs() < 1e-12);
+    }
+
+    /// Naive nearest-rank oracle: full sort, count-based rank walk.
+    fn oracle_nearest_rank(xs: &[f64], p: f64) -> Option<f64> {
+        if xs.is_empty() || xs.iter().any(|x| x.is_nan()) {
+            return None;
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let need = (p / 100.0 * v.len() as f64).ceil().max(1.0) as usize;
+        // Walk until `need` observations are at or below the candidate.
+        for (i, x) in v.iter().enumerate() {
+            if i + 1 >= need {
+                return Some(*x);
+            }
+        }
+        v.last().copied()
+    }
+
+    #[test]
+    fn nearest_rank_empty_and_nan_rejected() {
+        assert_eq!(percentile_nearest_rank(&[], 50.0), None);
+        assert_eq!(percentile_nearest_rank(&[1.0, f64::NAN], 50.0), None);
+        assert_eq!(tail_percentiles(&[]), None);
+        assert_eq!(tail_percentiles(&[f64::NAN]), None);
+    }
+
+    #[test]
+    fn nearest_rank_single_element_is_every_percentile() {
+        for p in [0.0, 50.0, 99.0, 99.9, 100.0] {
+            assert_eq!(percentile_nearest_rank(&[7.5], p), Some(7.5));
+        }
+        let t = tail_percentiles(&[7.5]).unwrap();
+        assert_eq!((t.p50, t.p90, t.p99, t.p999), (7.5, 7.5, 7.5, 7.5));
+    }
+
+    #[test]
+    fn nearest_rank_ties_and_known_values() {
+        // All-ties: any percentile is the tied value.
+        assert_eq!(percentile_nearest_rank(&[3.0; 10], 99.9), Some(3.0));
+        // 1..=100: nearest-rank pK is exactly K.
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile_nearest_rank(&xs, 50.0), Some(50.0));
+        assert_eq!(percentile_nearest_rank(&xs, 99.0), Some(99.0));
+        assert_eq!(percentile_nearest_rank(&xs, 99.9), Some(100.0));
+    }
+
+    /// Property: the one-sort implementation matches the naive oracle on
+    /// random lengths/values (with duplicates), at every report point.
+    #[test]
+    fn nearest_rank_matches_oracle_property() {
+        crate::util::rng::for_each_seed(25, |rng| {
+            let n = rng.range(1, 400);
+            // Coarse values force ties.
+            let xs: Vec<f64> =
+                (0..n).map(|_| rng.range(0, 50) as f64).collect();
+            for p in [0.0, 10.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+                assert_eq!(
+                    percentile_nearest_rank(&xs, p),
+                    oracle_nearest_rank(&xs, p),
+                    "n={n} p={p}"
+                );
+            }
+            let t = tail_percentiles(&xs).unwrap();
+            assert_eq!(Some(t.p50), oracle_nearest_rank(&xs, 50.0));
+            assert_eq!(Some(t.p90), oracle_nearest_rank(&xs, 90.0));
+            assert_eq!(Some(t.p99), oracle_nearest_rank(&xs, 99.0));
+            assert_eq!(Some(t.p999), oracle_nearest_rank(&xs, 99.9));
+        });
     }
 
     #[test]

@@ -1,0 +1,290 @@
+//! Chaos scenario suite (DESIGN.md §Evaluation): hermetic regression
+//! gates — `cargo test -q`, no `DPLLM_ARTIFACTS` — that drive the REAL
+//! serving code (router, pool accounting, downshift policy) through the
+//! faults production will see, and pin the counters each fault must
+//! move.  Every injected request must reach exactly one terminal
+//! outcome; "the fleet got wedged" is itself a failure (wall deadlines).
+//!
+//! The four scenarios and their counters:
+//! 1. poisoned prompts (oversized/empty) mid-burst →
+//!    `router_rejects_invalid` (the fleet aggregate of the core's
+//!    `admit_rejects_invalid` 400 shape)
+//! 2. `reconfigure()` retiring a target under load →
+//!    `prefix_invalidations` on the KV pool (the exact call
+//!    `ServingEngine::reconfigure` makes for each retired tag)
+//! 3. replica kill/respawn mid-trace → `router_respawns`, with the
+//!    no-healthy-request-lost invariant
+//! 4. KV-pressure downshift under a sustained burst → the
+//!    `downshift_for_pressure` policy (the core's `admit_downshifts`
+//!    path) over real pool pressure accounting
+
+use std::rc::Rc;
+use std::time::Duration;
+
+use dp_llm::coordinator::loadgen::{
+    replay_fleet, ArrivalProcess, ReplayOpts, TraceSpec,
+};
+use dp_llm::coordinator::router::{Router, RouterConfig, RouterEvent};
+use dp_llm::runtime::replica::sim::{sim_link, SimProfile};
+use dp_llm::runtime::replica::ReplicaSpec;
+
+const TOKEN_US: u64 = 50;
+
+fn burst() -> ArrivalProcess {
+    ArrivalProcess::Bursty {
+        rate_on: 300.0,
+        rate_off: 10.0,
+        mean_on_s: 0.5,
+        mean_off_s: 0.5,
+    }
+}
+
+fn two_replicas(profile_for: impl Fn(usize) -> SimProfile + 'static)
+                -> Router {
+    let specs = vec![
+        ReplicaSpec::sim(0, &["3.25", "3.50"], false, TOKEN_US as f64 / 1e3),
+        ReplicaSpec::sim(1, &["4.50", "4.75"], true, TOKEN_US as f64 / 1e3),
+    ];
+    Router::new(
+        specs,
+        Box::new(move |spec| sim_link(spec, profile_for(spec.id))),
+        RouterConfig::default(),
+    )
+}
+
+/// Drive the router until `want` terminal events or the deadline.
+fn drive(router: &mut Router, want: usize, deadline: Duration)
+         -> Vec<RouterEvent> {
+    let start = std::time::Instant::now();
+    let mut out = Vec::new();
+    let mut terminal = 0usize;
+    while terminal < want {
+        assert!(
+            start.elapsed() < deadline,
+            "fleet wedged: {terminal}/{want} terminal after {deadline:?}"
+        );
+        for ev in router.poll() {
+            match ev {
+                RouterEvent::Done { .. }
+                | RouterEvent::Failed { .. }
+                | RouterEvent::Rejected { .. } => terminal += 1,
+                RouterEvent::Respawned { .. } => {}
+            }
+            out.push(ev);
+        }
+        std::thread::sleep(Duration::from_micros(100));
+    }
+    out
+}
+
+/// Chaos 1 — poisoned prompts mid-burst.  A bursty trace is replayed at
+/// saturation with every 5th request poisoned (alternately empty and
+/// oversized).  Sim replicas screen admission like the engine core
+/// (`max_prompt_chars`); the router must surface each poison as a
+/// terminal 400-shaped reject, count it in `router_rejects_invalid`,
+/// and finish every healthy request untouched.
+#[test]
+fn poisoned_prompts_mid_burst_terminal_and_counted() {
+    const N: usize = 60;
+    const MAX_PROMPT_CHARS: usize = 512;
+    let spec = TraceSpec::mixed(burst(), 128, 8);
+    let trace = spec.generate(N, 23).unwrap();
+    let mut router = two_replicas(|_| SimProfile {
+        token_us: TOKEN_US,
+        max_prompt_chars: Some(MAX_PROMPT_CHARS),
+        ..SimProfile::default()
+    });
+    let mut poisoned = Vec::new();
+    for i in 0..N {
+        let mut req = trace.request(i);
+        if i % 5 == 2 {
+            // Alternate the two poison shapes the core screens for.
+            req.prompt = if i % 10 == 2 {
+                String::new()
+            } else {
+                "x".repeat(MAX_PROMPT_CHARS + 1)
+            };
+            poisoned.push(i as u64);
+        }
+        assert!(
+            router.submit(req, None).is_none(),
+            "unexpected immediate reject from an unsaturated fleet"
+        );
+    }
+    let events = drive(&mut router, N, Duration::from_secs(20));
+    let mut invalid_ids = Vec::new();
+    let (mut done, mut failed) = (0usize, 0usize);
+    for ev in &events {
+        match ev {
+            RouterEvent::Done { .. } => done += 1,
+            RouterEvent::Failed { .. } => failed += 1,
+            RouterEvent::Rejected { id, capacity, .. } => {
+                assert!(!*capacity, "poison surfaced as a retryable 503");
+                invalid_ids.push(*id);
+            }
+            RouterEvent::Respawned { .. } => {}
+        }
+    }
+    invalid_ids.sort_unstable();
+    assert_eq!(invalid_ids, poisoned, "exactly the poisoned ids rejected");
+    assert_eq!(done, N - poisoned.len(), "every healthy request completed");
+    assert_eq!(failed, 0);
+    let c = router.counters();
+    assert_eq!(c.rejects_invalid, poisoned.len() as u64);
+    assert_eq!(c.rejects_capacity, 0);
+    router.shutdown();
+}
+
+/// Chaos 2 — `reconfigure()` under load with prefix-cache invalidation.
+/// Drives the REAL pool accounting (unit buffers): prefixes published
+/// under two target identities while live generations hold bytes, then
+/// one target is retired exactly the way `ServingEngine::reconfigure`
+/// does it — `invalidate_tag` per retired identity.  The retired tag's
+/// entries must drop (counted by `prefix_invalidations`, not the LRU
+/// `prefix_evictions`), the survivor's entries must keep hitting, and
+/// byte accounting must stay exact.
+#[test]
+fn reconfigure_under_load_invalidates_retired_prefixes() {
+    use dp_llm::runtime::kvpool::KvPool;
+    const QUANTUM: usize = 16;
+    let mut pool: KvPool<()> = KvPool::new(64 * 1024, 16);
+    // Live load: four in-flight generations hold committed bytes.
+    for _ in 0..4 {
+        pool.charge(256).unwrap();
+    }
+    // Published prefixes under a retiring identity and a surviving one.
+    let ids: Vec<u32> = (0..64u32).collect();
+    for (t, len) in [(16usize, 16usize), (32, 32), (48, 48)] {
+        pool.prefix_insert("m:4.50", &ids, len, t, Rc::new(()));
+    }
+    pool.prefix_insert("m:3.50", &ids, 32, 32, Rc::new(()));
+    assert_eq!(pool.prefix_entries(), 4);
+    let held = pool.prefix_bytes();
+    assert!(held > 0);
+
+    // The reconfigure() retire path, mid-load.
+    let dropped = pool.invalidate_tag("m:4.50");
+    assert_eq!(dropped, 3, "all three retired-tag entries dropped");
+    assert_eq!(pool.prefix_invalidations, 3);
+    assert_eq!(pool.prefix_evictions, 0, "invalidation is not LRU eviction");
+    assert_eq!(pool.prefix_entries(), 1);
+    assert!(pool.prefix_bytes() < held, "retired bytes reclaimed");
+
+    // Retired identity can never hit again; the survivor still does.
+    assert!(pool.prefix_lookup("m:4.50", &ids, QUANTUM).is_none());
+    let hit = pool.prefix_lookup("m:3.50", &ids, QUANTUM).expect("live tag");
+    assert_eq!(hit.len, 32);
+    // Live generations were untouched.
+    assert_eq!(pool.in_use_bytes(), 4 * 256 * 16);
+    // Re-retiring is a no-op, not a counter leak.
+    assert_eq!(pool.invalidate_tag("m:4.50"), 0);
+    assert_eq!(pool.prefix_invalidations, 3);
+}
+
+/// Chaos 3 — replica kill/respawn mid-trace.  A Poisson trace replays
+/// through two replicas; replica 0 panics partway in.  The router must
+/// drain it (in-flight work surfaces as retryable 503-shaped rejects,
+/// backlog re-routes), respawn it (`router_respawns`), and leave NO
+/// request without a terminal outcome — the no-healthy-request-lost
+/// invariant, now asserted trace-wide instead of per-hand-built-case.
+#[test]
+fn replica_kill_respawn_mid_trace_no_request_lost() {
+    const N: usize = 80;
+    let spec = TraceSpec::mixed(
+        ArrivalProcess::Poisson { rate_per_s: 100.0 },
+        128,
+        8,
+    );
+    let trace = spec.generate(N, 31).unwrap();
+    let mut router = two_replicas(|id| SimProfile {
+        token_us: TOKEN_US,
+        // Replica 0 dies after ~1/4 of the trace's ~640 tokens.
+        panic_after_tokens: (id == 0).then_some(150),
+        ..SimProfile::default()
+    });
+    let report = replay_fleet(
+        &trace,
+        &mut router,
+        &ReplayOpts {
+            time_scale: 0.002,
+            deadline: Duration::from_secs(20),
+        },
+    );
+    let c = router.counters();
+    router.shutdown();
+    assert_eq!(report.requests, N);
+    assert_eq!(report.lost, 0, "a request vanished without a terminal event");
+    let failed: usize = report.classes.iter().map(|cl| cl.failed).sum();
+    let done: usize = report.classes.iter().map(|cl| cl.completed).sum();
+    let rejected: usize = report.classes.iter().map(|cl| cl.rejected).sum();
+    assert_eq!(failed, 0, "panic must not surface as HTTP-500 failures");
+    assert_eq!(done + rejected, N);
+    assert!(done > 0, "fleet stopped completing work after the kill");
+    assert!(c.respawns >= 1, "dead replica was never respawned");
+    assert_eq!(
+        c.rejects_invalid, 0,
+        "kill chaos must only produce retryable rejects"
+    );
+}
+
+/// Chaos 4 — KV-pressure downshift under a sustained burst.  A bursty
+/// trace's KV demand runs against the REAL byte-budgeted pool; each
+/// admission prices its target through `downshift_for_pressure` on live
+/// pool pressure — the exact policy behind the core's `admit_downshifts`
+/// counter.  Under the burst the pool must cross the pressure threshold
+/// and downshift (but never below the ladder floor), and every request
+/// must still reach a terminal outcome (served or capacity-rejected).
+#[test]
+fn kv_pressure_downshift_under_sustained_burst() {
+    use dp_llm::costmodel::{downshift_for_pressure, DOWNSHIFT_PRESSURE};
+    use dp_llm::runtime::kvpool::KvPool;
+    const N: usize = 300;
+    let targets = [3.25, 3.5, 4.5, 5.5];
+    let spec = TraceSpec::mixed(burst(), 64, 16);
+    let trace = spec.generate(N, 47).unwrap();
+    // Budget sized to ~6 concurrent worst-case sequences: the burst must
+    // queue against it.
+    let mut pool: KvPool<()> = KvPool::new(6 * 80, 1);
+    let mut active: Vec<usize> = Vec::new(); // admitted tier sizes
+    let (mut served, mut rejected, mut downshifts) = (0usize, 0usize, 0usize);
+    let mut floor_respected = true;
+    for (i, e) in trace.events.iter().enumerate() {
+        // Sustained burst: only every third arrival frees a slot first.
+        if i % 3 == 0 {
+            if let Some(t) = active.pop() {
+                pool.release(t, None);
+            }
+        }
+        let tier = e.prompt_tokens + e.max_new;
+        let pressure = pool.pressure();
+        assert!((0.0..=1.0).contains(&pressure), "pressure {pressure}");
+        let want = 5.5;
+        let target = downshift_for_pressure(&targets, want, pressure);
+        if target < want {
+            downshifts += 1;
+            floor_respected &= target >= targets[0];
+            assert!(
+                pressure >= DOWNSHIFT_PRESSURE,
+                "downshift below the pressure threshold"
+            );
+        }
+        match pool.charge(tier) {
+            Ok(()) => {
+                active.push(tier);
+                served += 1;
+            }
+            Err(_) => rejected += 1, // capacity reject: terminal
+        }
+    }
+    for t in active {
+        pool.release(t, None);
+    }
+    assert_eq!(served + rejected, N, "every request reached a terminal state");
+    assert!(served > 0 && rejected > 0, "burst never pressured the pool");
+    assert!(
+        downshifts > 0,
+        "sustained burst never triggered a precision downshift"
+    );
+    assert!(floor_respected, "downshift went below the ladder floor");
+    assert_eq!(pool.in_use_bytes(), 0, "byte accounting leaked");
+}
