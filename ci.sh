@@ -32,6 +32,11 @@ cargo bench --bench router_micro
 # emits results/BENCH_serving_trace.json.  The real-engine cell engages
 # only when DPLLM_ARTIFACTS is set.
 cargo bench --bench serving_trace
+# Observability microbench: flight-recorder record cost (disabled path
+# bar ~25 ns/event, exact drop accounting), histogram record/merge cost,
+# and the Chrome trace emit path validated by parsing back through
+# util::json; emits results/BENCH_obs.json (schema-checked pre-write).
+cargo bench --bench obs_micro
 # Python L2 gate: the jax-level parity tests (incl. the speculative
 # verify_step_g* vs sequential-decode contract) run whenever a python
 # with jax + pytest is available; a cargo-only environment skips them so

@@ -1,0 +1,193 @@
+//! Observability microbench (DESIGN.md §Observability).
+//!
+//! Entirely artifact-free: measures the cost of the flight recorder and
+//! the log2 latency histograms — the two hot-path primitives every
+//! request crosses — plus the Chrome trace-event emit path.
+//!
+//! Part 1 — record cost: ns/event with the tracer disabled (the price
+//! every production dispatch pays when tracing is off — the bar is
+//! ~25 ns, one relaxed atomic load + branch) and enabled (thread-local
+//! ring push).  The overwrite-oldest ring's drop counter is asserted
+//! EXACT: a 256-slot ring fed 1000 events must report 744 drops.
+//!
+//! Part 2 — histogram cost: ns per `record_ms` and per 2-class
+//! 3-family merge (allocation-free fixed arrays).
+//!
+//! Part 3 — trace export: a 10k-event synthetic run emitted as Chrome
+//! trace JSON and parsed back through `util::json::Json` (the same
+//! validation `GET /trace` consumers rely on).
+//!
+//! Results land in `results/BENCH_obs.json` (schema-checked before the
+//! write, like `serving_trace`).
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use dp_llm::bench_support as bs;
+use dp_llm::obs::{EventKind, HistogramSet, SloClass, Tracer};
+use dp_llm::util::json::Json;
+
+/// Events per timing loop — large enough to amortize the Instant reads.
+const N: u64 = 1_000_000;
+
+fn event_for(i: u64) -> EventKind {
+    match i % 4 {
+        0 => EventKind::Admit { id: i, target_mb: 4000, queue_us: i % 977 },
+        1 => EventKind::FirstToken { id: i, ttft_us: 100 + i % 4096 },
+        2 => EventKind::Reselect {
+            id: i,
+            from_mb: 4000,
+            to_mb: 3500,
+            layers_changed: (i % 7) as u32,
+            eff_delta_mb: -((i % 300) as i32),
+        },
+        _ => EventKind::Done { id: i, tokens: 16, eff_mb: 3600 },
+    }
+}
+
+/// ns/event over `n` records against `t` (enabled or disabled).
+fn record_ns(t: &Tracer, n: u64) -> f64 {
+    let start = Instant::now();
+    for i in 0..n {
+        t.record(black_box(event_for(i)));
+    }
+    start.elapsed().as_nanos() as f64 / n as f64
+}
+
+fn main() {
+    // Part 1 — record cost, disabled vs enabled.
+    let off = Tracer::new(4096);
+    let disabled_ns = record_ns(&off, N);
+    let snap = off.snapshot();
+    assert_eq!(snap.events.len(), 0, "disabled tracer recorded");
+    assert_eq!(snap.dropped, 0);
+
+    let on = Tracer::new(4096);
+    on.set_enabled(true);
+    let enabled_ns = record_ns(&on, N);
+
+    // Exact drop accounting: 1000 events through a 256-slot ring.
+    let small = Tracer::new(256);
+    small.set_enabled(true);
+    for i in 0..1000u64 {
+        small.record(event_for(i));
+    }
+    let snap = small.drain();
+    assert_eq!(snap.events.len(), 256, "ring kept exactly its capacity");
+    assert_eq!(snap.dropped, 744, "drop counter must be exact");
+
+    println!(
+        "trace record: disabled {disabled_ns:.1} ns/event (bar: ~25 ns), \
+         enabled {enabled_ns:.1} ns/event; drops exact (744/1000 @ cap 256)"
+    );
+
+    // Part 2 — histogram record + merge.
+    let mut h = HistogramSet::new();
+    let start = Instant::now();
+    for i in 0..N {
+        let class = SloClass::from_premium(i % 3 == 0);
+        let ms = (i % 2048) as f64 / 7.0;
+        h.record(class, black_box(ms), ms / 16.0, ms / 4.0);
+    }
+    let hist_record_ns = start.elapsed().as_nanos() as f64 / N as f64;
+
+    let mut acc = HistogramSet::new();
+    const MERGES: u64 = 100_000;
+    let start = Instant::now();
+    for _ in 0..MERGES {
+        acc.merge(black_box(&h));
+    }
+    let hist_merge_ns = start.elapsed().as_nanos() as f64 / MERGES as f64;
+    let p99 = {
+        let j = h.json();
+        j.get("economy").unwrap().f64_of("ttft_ms_p99").unwrap()
+    };
+    println!(
+        "histogram: record {hist_record_ns:.1} ns (3 families), merge \
+         {hist_merge_ns:.1} ns (2 classes x 3 families), economy ttft \
+         p99 {p99:.1} ms"
+    );
+
+    // Part 3 — Chrome trace emit for a 10k-event synthetic run,
+    // validated by parsing back through util::json.
+    const EVENTS: u64 = 10_000;
+    let t = Tracer::new(EVENTS as usize + 16);
+    t.set_enabled(true);
+    for i in 0..EVENTS {
+        t.record(event_for(i));
+    }
+    let start = Instant::now();
+    let dump = t.snapshot().chrome_json().dump();
+    let emit_ms = start.elapsed().as_secs_f64() * 1e3;
+    let parsed = Json::parse(&dump).expect("chrome trace JSON parses");
+    let rows = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    // Every recorded event plus the process-name metadata records.
+    assert!(rows.len() >= EVENTS as usize, "trace rows lost in emit");
+    assert_eq!(parsed.f64_of("dropped").unwrap(), 0.0);
+    println!(
+        "chrome emit: {} events -> {:.0} KiB JSON in {emit_ms:.1} ms, \
+         parses back",
+        rows.len(),
+        dump.len() as f64 / 1024.0
+    );
+
+    let mut j = Json::obj();
+    j.set("bench", "obs")
+        .set("events_per_loop", N as i64)
+        .set("record_disabled_ns", disabled_ns)
+        .set("record_enabled_ns", enabled_ns)
+        .set("disabled_bar_ns", 25.0)
+        .set("hist_record_ns", hist_record_ns)
+        .set("hist_merge_ns", hist_merge_ns)
+        .set("chrome_events", rows.len())
+        .set("chrome_emit_ms", emit_ms);
+    schema_check(&j).expect("obs bench schema");
+    let _ = std::fs::create_dir_all("results");
+    let _ = std::fs::write("results/BENCH_obs.json", j.dump());
+    println!("wrote results/BENCH_obs.json");
+
+    bs::emit(
+        "obs_micro",
+        "Flight recorder + histogram hot-path cost",
+        &["case", "value"],
+        &[
+            vec!["record (disabled)".into(),
+                 format!("{disabled_ns:.1} ns/event (bar ~25 ns)")],
+            vec!["record (enabled)".into(),
+                 format!("{enabled_ns:.1} ns/event")],
+            vec!["ring drops".into(), "exact (744/1000 @ cap 256)".into()],
+            vec!["histogram record".into(),
+                 format!("{hist_record_ns:.1} ns (3 families)")],
+            vec!["histogram merge".into(),
+                 format!("{hist_merge_ns:.1} ns (full set)")],
+            vec!["chrome emit (10k)".into(), format!("{emit_ms:.1} ms")],
+        ],
+    );
+}
+
+/// Pre-write schema gate (the `serving_trace` idiom): every required
+/// key present and finite, so a broken emitter fails the bench instead
+/// of writing garbage into `results/BENCH_obs.json`.
+fn schema_check(j: &Json) -> Result<()> {
+    j.req("bench")?.as_str().context("bench")?;
+    for key in [
+        "events_per_loop",
+        "record_disabled_ns",
+        "record_enabled_ns",
+        "disabled_bar_ns",
+        "hist_record_ns",
+        "hist_merge_ns",
+        "chrome_events",
+        "chrome_emit_ms",
+    ] {
+        let v = j.req(key)?.as_f64().with_context(|| key.to_string())?;
+        if !v.is_finite() {
+            bail!("obs schema: {key} = {v} not finite");
+        }
+        if v < 0.0 {
+            bail!("obs schema: {key} = {v} negative");
+        }
+    }
+    Ok(())
+}

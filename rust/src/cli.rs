@@ -24,8 +24,13 @@ USAGE: dpllm <subcommand> [--flags]
   serve      --model M [--addr HOST:PORT] [--targets 3.50,4.00,4.50] [--budget B]
              [--replicas N] [--replica-tiers \"3.25,3.50|4.50,4.75\"]
              [--reselect-every N] [--gamma-cap N] [--no-spec] [--no-batch]
-             [--eos-token ID] [--kv-budget BYTES]
-             (speculative decoding + re-selection cadence knobs; env
+             [--eos-token ID] [--kv-budget BYTES] [--trace-out PATH]
+             (--trace-out enables the flight recorder and writes the
+             Chrome trace-event JSON — Perfetto-loadable — to PATH on
+             shutdown; DPLLM_TRACE=1 enables recording without a dump
+             file (scrape GET /trace instead); DPLLM_LOG filters
+             structured logs, e.g. DPLLM_LOG=warn,router=debug;
+             speculative decoding + re-selection cadence knobs; env
              equivalents DPLLM_RESELECT_EVERY / DPLLM_GAMMA_CAP /
              DPLLM_NO_SPEC / DPLLM_NO_BATCH; --eos-token 258 stops
              generations at the byte tokenizer's <eos> on every path;
@@ -146,8 +151,11 @@ fn serve(args: &Args) -> Result<()> {
     let rt = Arc::new(Runtime::new()?);
     let engine = ServingEngine::load(&rt, &model, budget, &tag_refs)?;
     eprintln!("[serve] adaptation set: {:?}", engine.targets());
-    let server = Server::new(engine, UtilizationSim::new(7, 0.5))
+    let mut server = Server::new(engine, UtilizationSim::new(7, 0.5))
         .with_core_config(cc);
+    if let Some(path) = args.get("trace-out") {
+        server = server.with_trace_out(path.into());
+    }
     server.serve(&addr)
 }
 
@@ -226,7 +234,11 @@ fn serve_fleet(args: &Args, model: &str, budget: u32, addr: &str,
         Box::new(move |spec| engine_link(spec, spawn_assets.clone())),
         RouterConfig::default(),
     );
-    RouterServer::new(router).serve(addr)
+    let mut server = RouterServer::new(router);
+    if let Some(path) = args.get("trace-out") {
+        server = server.with_trace_out(path.into());
+    }
+    server.serve(addr)
 }
 
 fn eval_ppl(args: &Args) -> Result<()> {

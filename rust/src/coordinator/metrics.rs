@@ -5,13 +5,16 @@
 //! examples and the benches so no caller hand-rolls its own snapshot
 //! formatting.
 
+use std::collections::VecDeque;
 use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::anyprec::materialize::MatSnapshot;
+use crate::obs::hist::{HistogramSet, SloClass};
 use crate::runtime::kvpool::MemoryStats;
 use crate::runtime::TransferSnapshot;
 use crate::util::json::Json;
-use crate::util::stats::{mean, percentile};
+use crate::util::stats::percentile;
 
 /// Serialize every runtime counter family into one JSON object:
 /// host↔device transfers + device-side assemblies, the weight
@@ -171,6 +174,14 @@ pub struct RequestRecord {
     /// `ttft_ms >= queue_ms + prefill_ms` — the true queue/prefill/TTFT
     /// split the admission-time stamp used to conflate.
     pub ttft_ms: f64,
+    /// SLO class: `true` when the request carried a deadline or a
+    /// finite per-token budget (keys the per-class histograms).
+    pub premium: bool,
+    /// Wall-clock arrival stamp (throughput is measured over the span
+    /// first arrival → last completion, not summed busy time).
+    pub arrival: Instant,
+    /// Wall-clock terminal-completion stamp.
+    pub completed: Instant,
 }
 
 impl RequestRecord {
@@ -183,9 +194,46 @@ impl RequestRecord {
     }
 }
 
+/// Default retention window of [`MetricsRegistry`] (records kept for
+/// windowed percentiles; cumulative state is exact forever).
+pub const DEFAULT_RETAINED_RECORDS: usize = 65_536;
+
+/// Cumulative, never-trimmed aggregate state: long-running summaries
+/// stay exact while the record window stays bounded.
 #[derive(Default)]
+struct Cumulative {
+    n: u64,
+    out_tokens: u64,
+    sum_tpot_ms: f64,
+    sum_ttft_ms: f64,
+    sum_eff_bits: f64,
+    span_start: Option<Instant>,
+    span_end: Option<Instant>,
+    hist: HistogramSet,
+}
+
+struct RegInner {
+    /// Bounded window of the most recent records (percentile queries,
+    /// example reports).  Oldest records are dropped past `cap`.
+    ring: VecDeque<RequestRecord>,
+    cap: usize,
+    cum: Cumulative,
+}
+
+/// Per-request serving metrics with **flat memory**: a bounded ring of
+/// the last [`DEFAULT_RETAINED_RECORDS`] records (windowed percentiles)
+/// plus cumulative counters/sums and per-SLO-class log2 latency
+/// histograms (exact means, throughput and histogram percentiles over
+/// the whole lifetime) — a long-running `serve` no longer grows an
+/// unbounded `Vec`.
 pub struct MetricsRegistry {
-    records: Mutex<Vec<RequestRecord>>,
+    inner: Mutex<RegInner>,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        MetricsRegistry::with_capacity(DEFAULT_RETAINED_RECORDS)
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -210,35 +258,98 @@ impl MetricsRegistry {
         Self::default()
     }
 
-    pub fn record(&self, r: RequestRecord) {
-        self.records.lock().unwrap().push(r);
+    /// A registry retaining at most `cap` records (cumulative state is
+    /// unaffected by the cap).
+    pub fn with_capacity(cap: usize) -> Self {
+        MetricsRegistry {
+            inner: Mutex::new(RegInner {
+                ring: VecDeque::new(),
+                cap: cap.max(1),
+                cum: Cumulative::default(),
+            }),
+        }
     }
 
+    pub fn record(&self, r: RequestRecord) {
+        let mut g = self.inner.lock().unwrap();
+        let cum = &mut g.cum;
+        cum.n += 1;
+        cum.out_tokens += r.output_tokens as u64;
+        cum.sum_tpot_ms += r.tpot_ms();
+        cum.sum_ttft_ms += r.ttft_ms;
+        cum.sum_eff_bits += r.effective_bits;
+        cum.span_start = Some(match cum.span_start {
+            Some(s) => s.min(r.arrival),
+            None => r.arrival,
+        });
+        cum.span_end = Some(match cum.span_end {
+            Some(e) => e.max(r.completed),
+            None => r.completed,
+        });
+        cum.hist.record(
+            SloClass::from_premium(r.premium),
+            r.ttft_ms,
+            r.tpot_ms(),
+            r.queue_ms,
+        );
+        if g.ring.len() == g.cap {
+            g.ring.pop_front();
+        }
+        g.ring.push_back(r);
+    }
+
+    /// The retained record window, oldest first (at most the configured
+    /// capacity — NOT the full request history once it wraps).
     pub fn records(&self) -> Vec<RequestRecord> {
-        self.records.lock().unwrap().clone()
+        self.inner.lock().unwrap().ring.iter().cloned().collect()
+    }
+
+    /// Lifetime request count (exact, unaffected by window trimming).
+    pub fn total_recorded(&self) -> u64 {
+        self.inner.lock().unwrap().cum.n
+    }
+
+    /// Snapshot of the cumulative per-SLO-class latency histograms
+    /// (TTFT / ITL / queue delay) — feeds `/metrics` percentiles and
+    /// the Prometheus exposition.
+    pub fn histograms(&self) -> HistogramSet {
+        self.inner.lock().unwrap().cum.hist.clone()
     }
 
     pub fn summary(&self) -> Summary {
-        let rs = self.records.lock().unwrap();
+        let g = self.inner.lock().unwrap();
+        let rs = &g.ring;
         let tpot: Vec<f64> = rs.iter().map(|r| r.tpot_ms()).collect();
         let total: Vec<f64> = rs.iter().map(|r| r.total_ms()).collect();
         let ttft: Vec<f64> = rs.iter().map(|r| r.ttft_ms).collect();
         let bits: Vec<f64> = rs.iter().map(|r| r.effective_bits).collect();
-        let out_tokens: usize = rs.iter().map(|r| r.output_tokens).sum();
-        let busy_s: f64 = rs.iter().map(|r| (r.prefill_ms + r.decode_ms) / 1e3).sum();
+        let cum = &g.cum;
+        let n = cum.n.max(1) as f64;
+        // Throughput over the wall-clock span first arrival → last
+        // completion: N overlapping requests each contributing T busy
+        // seconds over a T-second wall span report N× the old
+        // summed-busy-time number, which understated real concurrency.
+        let span_s = match (cum.span_start, cum.span_end) {
+            (Some(s), Some(e)) => e.saturating_duration_since(s).as_secs_f64(),
+            _ => 0.0,
+        };
         Summary {
-            n: rs.len(),
-            mean_tpot_ms: mean(&tpot),
+            n: cum.n as usize,
+            mean_tpot_ms: cum.sum_tpot_ms / n,
             p50_total_ms: percentile(&total, 50.0),
             p90_total_ms: percentile(&total, 90.0),
             p99_total_ms: percentile(&total, 99.0),
-            mean_ttft_ms: mean(&ttft),
+            mean_ttft_ms: cum.sum_ttft_ms / n,
             p90_ttft_ms: percentile(&ttft, 90.0),
-            mean_eff_bits: mean(&bits),
+            mean_eff_bits: cum.sum_eff_bits / n,
             p90_eff_bits: percentile(&bits, 90.0),
             p99_eff_bits: percentile(&bits, 99.0),
-            throughput_tok_s: if busy_s > 0.0 { out_tokens as f64 / busy_s } else { 0.0 },
-            total_output_tokens: out_tokens,
+            throughput_tok_s: if span_s > 0.0 {
+                cum.out_tokens as f64 / span_s
+            } else {
+                0.0
+            },
+            total_output_tokens: cum.out_tokens as usize,
         }
     }
 }
@@ -262,7 +373,10 @@ impl Summary {
 mod tests {
     use super::*;
 
+    use std::time::Duration;
+
     fn rec(id: u64, decode_ms: f64, out: usize, bits: f64) -> RequestRecord {
+        let completed = Instant::now();
         RequestRecord {
             id, target_precision: 4.0, effective_bits: bits,
             prompt_tokens: 8, output_tokens: out,
@@ -270,6 +384,9 @@ mod tests {
             // Scheduled-prefill invariant: ttft >= queue + prefill (the
             // spread includes interleaved decode rounds).
             ttft_ms: 5.0,
+            premium: false,
+            arrival: completed - Duration::from_secs_f64((3.0 + decode_ms) / 1e3),
+            completed,
         }
     }
 
@@ -288,6 +405,68 @@ mod tests {
         assert!(s.throughput_tok_s > 0.0);
         // The TTFT split is part of the report line.
         assert!(s.report().contains("ttft mean/p90=5/5ms"), "{}", s.report());
+    }
+
+    #[test]
+    fn throughput_uses_wall_clock_span_not_summed_busy_time() {
+        // Two fully-overlapping requests: each produces 100 tokens over
+        // the same 1 s wall-clock span.  Real throughput is 200 tok/s;
+        // the old summed-busy-time formula (tokens / Σ per-request busy
+        // seconds) reported ~100 tok/s — understating N× with N
+        // overlapping requests.
+        let m = MetricsRegistry::new();
+        let t0 = Instant::now();
+        let t1 = t0 + Duration::from_secs(1);
+        for id in 0..2u64 {
+            m.record(RequestRecord {
+                id, target_precision: 4.0, effective_bits: 4.0,
+                prompt_tokens: 8, output_tokens: 100,
+                queue_ms: 0.0, prefill_ms: 0.0, decode_ms: 1000.0,
+                ttft_ms: 10.0, premium: false,
+                arrival: t0, completed: t1,
+            });
+        }
+        let s = m.summary();
+        assert_eq!(s.total_output_tokens, 200);
+        assert!(
+            (s.throughput_tok_s - 200.0).abs() < 1.0,
+            "wall-clock-span throughput expected ~200 tok/s, got {}",
+            s.throughput_tok_s
+        );
+    }
+
+    #[test]
+    fn retention_window_is_bounded_but_cumulative_state_is_exact() {
+        let m = MetricsRegistry::with_capacity(4);
+        for i in 0..10 {
+            m.record(rec(i, 100.0, 10, 4.0));
+        }
+        // Window trimmed to the newest 4 records…
+        let w = m.records();
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.first().unwrap().id, 6);
+        assert_eq!(w.last().unwrap().id, 9);
+        // …while lifetime aggregates stay exact.
+        assert_eq!(m.total_recorded(), 10);
+        let s = m.summary();
+        assert_eq!(s.n, 10);
+        assert_eq!(s.total_output_tokens, 100);
+        assert!((s.mean_tpot_ms - 10.0).abs() < 1e-9);
+        assert!((s.mean_eff_bits - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histograms_key_by_slo_class() {
+        let m = MetricsRegistry::new();
+        let mut premium = rec(0, 100.0, 10, 4.5);
+        premium.premium = true;
+        m.record(premium);
+        m.record(rec(1, 200.0, 10, 3.5));
+        m.record(rec(2, 300.0, 10, 3.5));
+        let hs = m.histograms();
+        let j = hs.json();
+        assert_eq!(j.get("premium").unwrap().f64_of("n").unwrap(), 1.0);
+        assert_eq!(j.get("economy").unwrap().f64_of("n").unwrap(), 2.0);
     }
 
     #[test]

@@ -41,6 +41,7 @@ use anyhow::{anyhow, Result};
 use super::metrics::{replicas_json, ReplicaStatus};
 use super::sched::Request;
 use super::service::ServeOutcome;
+use crate::obs::{global_tracer, EventKind, HistogramSet, SloClass};
 use crate::runtime::replica::{ReplicaCommand, ReplicaEvent, ReplicaHealth,
                               ReplicaLink, ReplicaSpec};
 use crate::util::json::Json;
@@ -252,6 +253,11 @@ struct RoutedRequest {
     pinned: Option<f64>,
     premium: bool,
     retried: bool,
+    /// When the router accepted the request — the fleet-level
+    /// queue-delay clock (backlog wait + every steal/re-route hop).
+    enqueued: Instant,
+    /// Router queue delay, stamped at the (final) forward.
+    queued_ms: f64,
 }
 
 /// Terminal (or fleet-level) events [`Router::poll`] hands the
@@ -296,6 +302,11 @@ pub struct Router {
     spawn: ReplicaSpawn,
     cfg: RouterConfig,
     counters: RouterCounters,
+    /// Fleet-level latency histograms, recorded once per terminal
+    /// [`RouterEvent::Done`].  The engine-side `MetricsRegistry` set
+    /// lives inside each replica and is not scraped in fleet mode, so
+    /// no request is double-counted.
+    hist: HistogramSet,
 }
 
 impl Router {
@@ -328,7 +339,13 @@ impl Router {
                 }
             })
             .collect();
-        Router { replicas, spawn, cfg, counters: RouterCounters::default() }
+        Router {
+            replicas,
+            spawn,
+            cfg,
+            counters: RouterCounters::default(),
+            hist: HistogramSet::new(),
+        }
     }
 
     pub fn counters(&self) -> RouterCounters {
@@ -391,6 +408,7 @@ impl Router {
         let snaps = self.snapshots();
         let Some(i) = pick_replica(&snaps, premium) else {
             self.counters.rejects_capacity += 1;
+            global_tracer().record(EventKind::Reject { id: req.id, capacity: true });
             return Some(RouterEvent::Rejected {
                 id: req.id,
                 error: "no live replica".to_string(),
@@ -402,9 +420,19 @@ impl Router {
         } else {
             self.counters.routed_economy += 1;
         }
-        self.replicas[i]
-            .backlog
-            .push_back(RoutedRequest { req, pinned, premium, retried: false });
+        global_tracer().record(EventKind::Route {
+            id: req.id,
+            replica: i as u32,
+            premium,
+        });
+        self.replicas[i].backlog.push_back(RoutedRequest {
+            req,
+            pinned,
+            premium,
+            retried: false,
+            enqueued: Instant::now(),
+            queued_ms: 0.0,
+        });
         self.pump(i);
         None
     }
@@ -448,8 +476,16 @@ impl Router {
                     ReplicaEvent::Ready => {}
                     ReplicaEvent::Heartbeat(h) => self.replicas[i].health = h,
                     ReplicaEvent::Done(o) => {
-                        self.replicas[i].inflight.remove(&o.id);
+                        let rr = self.replicas[i].inflight.remove(&o.id);
                         self.replicas[i].done += 1;
+                        let premium =
+                            rr.as_ref().map(|r| r.premium).unwrap_or(false);
+                        let queue_ms =
+                            rr.as_ref().map(|r| r.queued_ms).unwrap_or(0.0);
+                        let itl_ms =
+                            o.decode_ms / o.output_tokens.max(1) as f64;
+                        self.hist.record(SloClass::from_premium(premium),
+                                         o.ttft_ms, itl_ms, queue_ms);
                         out.push(RouterEvent::Done { replica: i, outcome: o });
                     }
                     ReplicaEvent::Failed { id, error } => {
@@ -500,6 +536,11 @@ impl Router {
             rr.pinned = rr
                 .pinned
                 .map(|t| clamp_target(&self.replicas[thief].spec.targets, t));
+            global_tracer().record(EventKind::Steal {
+                id: rr.req.id,
+                from: victim as u32,
+                to: thief as u32,
+            });
             self.replicas[thief].backlog.push_back(rr);
             self.replicas[victim].steals_out += 1;
             self.replicas[thief].steals_in += 1;
@@ -528,6 +569,11 @@ impl Router {
                 if let Some(j) = pick_replica(&snaps, rr.premium) {
                     rr.retried = true;
                     self.counters.retries += 1;
+                    global_tracer().record(EventKind::Route {
+                        id: rr.req.id,
+                        replica: j as u32,
+                        premium: rr.premium,
+                    });
                     self.replicas[j].backlog.push_back(rr);
                     return;
                 }
@@ -552,6 +598,12 @@ impl Router {
         }
         self.replicas[i].alive = false;
         self.replicas[i].health = ReplicaHealth::default();
+        global_tracer().record(EventKind::Drain {
+            replica: i as u32,
+            inflight: self.replicas[i].inflight.len() as u32,
+            backlog: self.replicas[i].backlog.len() as u32,
+        });
+        crate::dpllm_log!(Warn, "router", "draining replica {i}: {reason}");
         let mut inflight: Vec<u64> =
             self.replicas[i].inflight.drain().map(|(id, _)| id).collect();
         inflight.sort_unstable();
@@ -573,6 +625,11 @@ impl Router {
                         clamp_target(&self.replicas[j].spec.targets, t)
                     });
                     self.counters.rerouted += 1;
+                    global_tracer().record(EventKind::Route {
+                        id: rr.req.id,
+                        replica: j as u32,
+                        premium: rr.premium,
+                    });
                     self.replicas[j].backlog.push_back(rr);
                 }
                 None => {
@@ -599,6 +656,8 @@ impl Router {
             self.replicas[i].last_seen = now;
             self.replicas[i].respawns += 1;
             self.counters.respawns += 1;
+            global_tracer().record(EventKind::Respawn { replica: i as u32 });
+            crate::dpllm_log!(Info, "router", "respawned replica {i}");
             out.push(RouterEvent::Respawned { replica: i });
         }
     }
@@ -625,6 +684,11 @@ impl Router {
                 self.replicas[i].backlog.push_front(rr);
                 break;
             }
+            rr.queued_ms = rr.enqueued.elapsed().as_secs_f64() * 1e3;
+            global_tracer().record(EventKind::Forward {
+                id: rr.req.id,
+                replica: i as u32,
+            });
             self.replicas[i].inflight.insert(rr.req.id, rr);
         }
     }
@@ -654,11 +718,18 @@ impl Router {
         replicas_json(&self.status())
     }
 
-    /// The fleet half of `GET /metrics`: `router_*` counters + the
-    /// per-replica `replicas` array.
+    /// Fleet-level latency histograms (TTFT / ITL / router queue delay
+    /// per SLO class).
+    pub fn histograms(&self) -> HistogramSet {
+        self.hist.clone()
+    }
+
+    /// The fleet half of `GET /metrics`: `router_*` counters, the
+    /// per-replica `replicas` array, and per-class latency percentiles.
     pub fn metrics_json(&self) -> Json {
         let mut j = self.counters.json();
         j.set("replicas", self.replicas_json());
+        j.set("latency", self.hist.json());
         j
     }
 
@@ -901,6 +972,12 @@ mod tests {
         let c = router.counters();
         assert_eq!(c.routed_premium, 2);
         assert_eq!(c.routed_economy, 2);
+        // Fleet histograms: one record per terminal Done, keyed by the
+        // request's SLO class, surfaced under `latency` in /metrics.
+        let lat = router.metrics_json();
+        let lat = lat.get("latency").unwrap();
+        assert_eq!(lat.get("premium").unwrap().f64_of("n").unwrap(), 2.0);
+        assert_eq!(lat.get("economy").unwrap().f64_of("n").unwrap(), 2.0);
         router.shutdown();
     }
 

@@ -63,6 +63,7 @@ use super::sched::{Request, RequestQueue, SchedPolicy};
 use crate::anyprec::materialize::MatSnapshot;
 use crate::evalharness::{build_session_with_cache, engine_config_for, Method};
 use crate::model::{art, Manifest, ModelAssets};
+use crate::obs::{global_tracer, EventKind};
 use crate::runtime::decode::{DecodeSession, EstMode, GenState, SwapReport, WeightCache};
 use crate::runtime::kvpool::{self, KvPool, SharedKvPool};
 use crate::runtime::spec::{spec_eligible, spec_round, truncate_at_eos,
@@ -75,6 +76,16 @@ use crate::util::json::Json;
 /// Default tokens between utilization ticks / mid-stream target
 /// re-selection in the interleaved loop ([`CoreConfig::reselect_every`]).
 pub const RESELECT_EVERY: u64 = 8;
+
+/// Precision in integer milli-bits for `Copy` flight-recorder events
+/// (4.5 bits → 4500); non-finite values (no decode steps yet) map to 0.
+fn milli_bits(bits: f64) -> u32 {
+    if bits.is_finite() && bits > 0.0 {
+        (bits * 1000.0).round() as u32
+    } else {
+        0
+    }
+}
 
 /// Default cap on concurrently-interleaved generations (KV caches resident
 /// on the device at once).
@@ -561,6 +572,13 @@ impl ServingEngine {
             options.push((*target, tpot));
         }
         self.policy = AdaptationPolicy::new(options);
+        if failure.is_none() {
+            global_tracer().record(EventKind::SwapBits {
+                stacks: rep.stacks_rebuilt as u32,
+                layers: rep.layers_changed as u32,
+                uploads: rep.selector_uploads as u32,
+            });
+        }
         match failure {
             Some(e) => Err(e),
             None => Ok(rep),
@@ -797,6 +815,9 @@ struct Generation<'e> {
     /// Terminated by emitting [`CoreConfig::eos_token`] (on any decode
     /// path — plain, batched, or inside an accepted speculative run).
     done: bool,
+    /// Last speculative draft length the γ controller picked for this
+    /// request (flight-recorder `gamma_change` events fire on change).
+    gamma_last: u8,
     queue_ms: f64,
     /// Wall time of this request's scheduled prefill dispatches (spread
     /// across rounds — no longer a synchronous admission stamp).
@@ -1079,6 +1100,12 @@ impl<'e> ServingCore<'e> {
                 &self.engine.targets(), target, pressure);
             if shifted != target {
                 self.admit_downshifts += 1;
+                global_tracer().record(EventKind::PressureDownshift {
+                    id: req.id,
+                    want_mb: milli_bits(target),
+                    got_mb: milli_bits(shifted),
+                    pressure_pct: (pressure * 100.0).clamp(0.0, 255.0) as u8,
+                });
                 target = shifted;
             }
         }
@@ -1111,6 +1138,7 @@ impl<'e> ServingCore<'e> {
                     } else {
                         self.admit_rejects_invalid += 1;
                     }
+                    global_tracer().record(EventKind::Reject { id, capacity });
                     self.rejects.push(CoreEvent::Error {
                         id,
                         error: format!("{e:#}"),
@@ -1156,13 +1184,24 @@ impl<'e> ServingCore<'e> {
             // request starts with those chunks already ingested — N
             // requests sharing a system prompt pay one chunked prefill.
             match session.begin_from_prefix(&prompt_ids) {
-                Some((gen, len)) => (gen, len),
+                Some((gen, len)) => {
+                    global_tracer().record(EventKind::PrefixHit {
+                        id: req.id,
+                        saved_tokens: len as u32,
+                    });
+                    (gen, len)
+                }
                 None => (session.begin_empty()?, 0),
             }
         } else {
             (session.begin_deferred(), 0)
         };
         let id = req.id;
+        global_tracer().record(EventKind::Admit {
+            id,
+            target_mb: milli_bits(session.ec.target),
+            queue_us: (queue_ms * 1e3).max(0.0) as u64,
+        });
         self.active.push(Generation {
             req,
             session,
@@ -1177,6 +1216,7 @@ impl<'e> ServingCore<'e> {
             spec: None,
             spec_pending: false,
             done: false,
+            gamma_last: 0,
             queue_ms,
             prefill_ms: 0.0,
             prefill_chunks: 0,
@@ -1207,7 +1247,19 @@ impl<'e> ServingCore<'e> {
             }
             let want = self.engine.policy.select(g.req.qos, utilization);
             let session = self.engine.session_for_target(want);
+            let from_mb = milli_bits(g.target);
+            let mut layers_changed = 0u32;
             if !std::ptr::eq(session, g.session) {
+                // Per-linear (low, high) candidate flips the retarget
+                // applies — the per-layer payload of the Reselect event.
+                layers_changed = session
+                    .ec
+                    .wl_bits
+                    .iter()
+                    .zip(&g.session.ec.wl_bits)
+                    .zip(session.ec.wh_bits.iter().zip(&g.session.ec.wh_bits))
+                    .filter(|((nl, ol), (nh, oh))| nl != ol || nh != oh)
+                    .count() as u32;
                 g.session = session;
                 session.adopt(&mut g.gen);
                 g.target = session.ec.target;
@@ -1221,6 +1273,23 @@ impl<'e> ServingCore<'e> {
                 }
                 switched += 1;
             }
+            // One precision-decision event per active request per
+            // epoch — `from_mb == to_mb` records "epoch kept the
+            // assignment", so the trace shows every decision, not only
+            // the switches.
+            let eff = g.gen.sel.effective_bits();
+            let eff_delta_mb = if eff.is_finite() {
+                ((g.target - eff) * 1000.0).round() as i32
+            } else {
+                0
+            };
+            global_tracer().record(EventKind::Reselect {
+                id: g.req.id,
+                from_mb,
+                to_mb: milli_bits(g.target),
+                layers_changed,
+                eff_delta_mb,
+            });
         }
         switched
     }
@@ -1268,6 +1337,14 @@ impl<'e> ServingCore<'e> {
             g.spec = None;
             return false;
         }
+        let gamma_now = gamma.min(u8::MAX as usize) as u8;
+        if gamma_now != g.gamma_last {
+            g.gamma_last = gamma_now;
+            global_tracer().record(EventKind::GammaChange {
+                id: g.req.id,
+                gamma: gamma_now,
+            });
+        }
         if gamma == 0 {
             return false;
         }
@@ -1307,11 +1384,12 @@ impl<'e> ServingCore<'e> {
                 // plain path advance it this very step.
                 self.spec_errors += 1;
                 if self.spec_errors == 1 {
-                    eprintln!(
-                        "[core] speculative round failed; request {} falls \
-                         back to plain decode (set DPLLM_NO_SPEC=1 or fix \
-                         the verify_step_g* artifacts if this persists): \
-                         {e:#}",
+                    crate::dpllm_log!(
+                        Warn,
+                        "core",
+                        "speculative round failed; request {} falls back to \
+                         plain decode (set DPLLM_NO_SPEC=1 or fix the \
+                         verify_step_g* artifacts if this persists): {e:#}",
                         g.req.id
                     );
                 }
@@ -1512,6 +1590,11 @@ impl<'e> ServingCore<'e> {
             match outcome {
                 Err(e) => failure = Some(format!("{e:#}")),
                 Ok((now_ingested, final_logits)) => {
+                    global_tracer().record(EventKind::PrefillChunk {
+                        id: g.req.id,
+                        chunk: g.prefill_chunks as u32,
+                        pos: now_ingested as u32,
+                    });
                     g.phase = Phase::Prefilling { ingested: now_ingested };
                     // Publish this prompt's quantized prefix into the
                     // shared cache once enough chunks have landed (the
@@ -1537,6 +1620,10 @@ impl<'e> ServingCore<'e> {
                                 g.out_ids.push(first);
                                 g.ttft_ms =
                                     g.req.arrival.elapsed().as_secs_f64() * 1e3;
+                                global_tracer().record(EventKind::FirstToken {
+                                    id: g.req.id,
+                                    ttft_us: (g.ttft_ms * 1e3).max(0.0) as u64,
+                                });
                                 events.push(CoreEvent::Token {
                                     id: g.req.id,
                                     index: 0,
@@ -1700,8 +1787,10 @@ impl<'e> ServingCore<'e> {
                     // dispatch per token forever.
                     self.batch_errors += 1;
                     if self.batch_errors == 1 {
-                        eprintln!(
-                            "[core] batched dispatch failed, falling back to \
+                        crate::dpllm_log!(
+                            Warn,
+                            "core",
+                            "batched dispatch failed, falling back to \
                              per-request steps (set DPLLM_NO_BATCH=1 or fix \
                              the decode_step_b* artifacts if this persists): \
                              {e:#}"
@@ -1784,6 +1873,11 @@ impl<'e> ServingCore<'e> {
 
     fn complete(&self, g: Generation<'e>) -> ServeOutcome {
         let eff = g.gen.sel.effective_bits();
+        global_tracer().record(EventKind::Done {
+            id: g.req.id,
+            tokens: g.out_ids.len() as u32,
+            eff_mb: milli_bits(eff),
+        });
         self.engine.metrics.record(RequestRecord {
             id: g.req.id,
             target_precision: g.target,
@@ -1794,6 +1888,9 @@ impl<'e> ServingCore<'e> {
             prefill_ms: g.prefill_ms,
             decode_ms: g.decode_ms,
             ttft_ms: g.ttft_ms,
+            premium: super::router::is_premium(&g.req),
+            arrival: g.req.arrival,
+            completed: Instant::now(),
         });
         ServeOutcome {
             id: g.req.id,

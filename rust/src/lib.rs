@@ -24,6 +24,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod evalharness;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod selector;
 pub mod server;

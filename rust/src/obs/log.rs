@@ -1,0 +1,172 @@
+//! Structured leveled logging: the [`dpllm_log!`](crate::dpllm_log)
+//! macro + `DPLLM_LOG` env filtering (DESIGN.md §Observability).
+//!
+//! Every former bare `eprintln!` in the serving stack now goes through
+//! `dpllm_log!(level, component, fmt, …)`, which renders as
+//! `[LEVEL component] message` on stderr and is filtered by the
+//! `DPLLM_LOG` environment variable:
+//!
+//! - `DPLLM_LOG=warn` — global minimum level (default `info`)
+//! - `DPLLM_LOG=warn,router=debug,core=trace` — per-component
+//!   overrides on top of the global minimum
+//! - levels, most to least severe: `error`, `warn`, `info`, `debug`,
+//!   `trace`
+//!
+//! The filter parses once (first log call) and the enabled check is a
+//! cheap comparison, so log statements can sit on serving paths.
+
+use std::sync::OnceLock;
+
+/// Log severity, most severe first (`Error < Warn` in ordering terms:
+/// a level is emitted when `level <= minimum`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed `DPLLM_LOG` filter: a global minimum + per-component
+/// overrides.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogFilter {
+    default: Level,
+    overrides: Vec<(String, Level)>,
+}
+
+impl LogFilter {
+    /// Parse a `DPLLM_LOG`-shaped spec (`"warn,router=debug"`).
+    /// Unknown tokens are ignored rather than fatal — a typo in an env
+    /// var must not take the server down.
+    pub fn parse(spec: &str) -> LogFilter {
+        let mut f = LogFilter { default: Level::Info, overrides: Vec::new() };
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match part.split_once('=') {
+                Some((comp, lvl)) => {
+                    if let Some(l) = Level::parse(lvl) {
+                        f.overrides.push((comp.trim().to_string(), l));
+                    }
+                }
+                None => {
+                    if let Some(l) = Level::parse(part) {
+                        f.default = l;
+                    }
+                }
+            }
+        }
+        f
+    }
+
+    /// Minimum level for one component.
+    pub fn min_level(&self, component: &str) -> Level {
+        self.overrides
+            .iter()
+            .find(|(c, _)| c == component)
+            .map(|&(_, l)| l)
+            .unwrap_or(self.default)
+    }
+
+    pub fn enabled(&self, level: Level, component: &str) -> bool {
+        level <= self.min_level(component)
+    }
+}
+
+fn filter() -> &'static LogFilter {
+    static FILTER: OnceLock<LogFilter> = OnceLock::new();
+    FILTER.get_or_init(|| LogFilter::parse(&std::env::var("DPLLM_LOG").unwrap_or_default()))
+}
+
+/// Is a `(level, component)` pair emitted under the current filter?
+/// (Called by the macro before formatting, so disabled statements never
+/// format their arguments.)
+pub fn enabled(level: Level, component: &str) -> bool {
+    filter().enabled(level, component)
+}
+
+/// Emit one formatted record (the macro's backend).
+pub fn log(level: Level, component: &str, args: std::fmt::Arguments<'_>) {
+    eprintln!("[{} {}] {}", level.tag(), component, args);
+}
+
+/// Structured leveled logging: `dpllm_log!(Info, "server", "listening
+/// on {addr}")`.  Filtered by `DPLLM_LOG` (see
+/// [`obs::log`](crate::obs::log)); arguments are not formatted when the
+/// statement is filtered out.
+#[macro_export]
+macro_rules! dpllm_log {
+    ($lvl:ident, $comp:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::$lvl, $comp) {
+            $crate::obs::log::log(
+                $crate::obs::log::Level::$lvl,
+                $comp,
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_filter_is_info() {
+        let f = LogFilter::parse("");
+        assert!(f.enabled(Level::Error, "core"));
+        assert!(f.enabled(Level::Info, "core"));
+        assert!(!f.enabled(Level::Debug, "core"));
+        assert!(!f.enabled(Level::Trace, "core"));
+    }
+
+    #[test]
+    fn global_level_and_component_overrides() {
+        let f = LogFilter::parse("warn,router=debug, core = trace");
+        assert!(!f.enabled(Level::Info, "server"), "global floor is warn");
+        assert!(f.enabled(Level::Warn, "server"));
+        assert!(f.enabled(Level::Debug, "router"));
+        assert!(!f.enabled(Level::Trace, "router"));
+        assert!(f.enabled(Level::Trace, "core"), "whitespace-tolerant override");
+    }
+
+    #[test]
+    fn junk_tokens_are_ignored_not_fatal() {
+        let f = LogFilter::parse("blurp,router=notalevel,=,debug");
+        assert_eq!(f.min_level("router"), Level::Debug, "global debug survives junk");
+    }
+
+    #[test]
+    fn macro_compiles_against_the_filter() {
+        // Smoke: both filtered and emitted paths type-check and run.
+        crate::dpllm_log!(Error, "obs-test", "answer={}", 42);
+        crate::dpllm_log!(Trace, "obs-test", "filtered out {}", "normally");
+    }
+}

@@ -1,0 +1,21 @@
+//! Observability (DESIGN.md §Observability): the flight recorder
+//! ([`trace`]), live log2-bucket latency histograms ([`hist`]), the
+//! Prometheus text exposition ([`prom`]) and structured leveled logging
+//! ([`log`], the [`dpllm_log!`](crate::dpllm_log) macro).
+//!
+//! The serving stack records into the process-wide [`trace::global`]
+//! tracer — request lifecycle, precision decisions (selector epoch
+//! re-assignments, pressure downshifts, γ changes, `swap_bits`
+//! rebinds), KV events and fleet events — exported as Chrome
+//! trace-event JSON via `GET /trace` on both servers and
+//! `dpllm serve --trace-out <path>`.  Histograms feed per-SLO-class
+//! TTFT/ITL/queue-delay percentiles into `/metrics` and
+//! `GET /metrics?format=prometheus`.
+
+pub mod hist;
+pub mod log;
+pub mod prom;
+pub mod trace;
+
+pub use hist::{HistogramSet, LogHistogram, SloClass};
+pub use trace::{global as global_tracer, EventKind, TraceSnapshot, Tracer};

@@ -1,0 +1,311 @@
+//! Prometheus text exposition (version 0.0.4) over the existing JSON
+//! counter serializers, plus a line-format validator (DESIGN.md
+//! §Observability).
+//!
+//! `GET /metrics?format=prometheus` flattens the same JSON objects the
+//! default endpoint serves — summary scalars, the full runtime counter
+//! families, the memory report, `router_*` counters, per-replica rows —
+//! into `dpllm_*` gauge lines, and renders the per-class TTFT / ITL /
+//! queue-delay [`HistogramSet`]s as native Prometheus histograms
+//! (`_bucket{le=…}` / `_sum` / `_count`).  No client library exists in
+//! the offline crate cache, so [`validate`] is the hand-rolled
+//! line-format checker the unit tests (and the `obs_micro` bench) hold
+//! the exposition against.
+
+use anyhow::{bail, Result};
+
+use super::hist::{HistogramSet, SloClass};
+use crate::util::json::Json;
+
+/// Prefix every exposed metric name carries.
+pub const PREFIX: &str = "dpllm";
+
+/// Sanitize one JSON key into a Prometheus metric-name segment
+/// (`[a-zA-Z0-9_]`, leading digit guarded by the `dpllm_` prefix).
+fn sanitize(key: &str) -> String {
+    key.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect()
+}
+
+/// Append one metric line: `name{labels} value`.
+pub fn push_metric(out: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push_str("=\"");
+            // Label values escape backslash, quote and newline.
+            for c in v.chars() {
+                match c {
+                    '\\' => out.push_str("\\\\"),
+                    '"' => out.push_str("\\\""),
+                    '\n' => out.push_str("\\n"),
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    if value.is_finite() {
+        // Integral values print without a fraction (counter-friendly).
+        if value.fract() == 0.0 && value.abs() < 9e15 {
+            let _ = std::fmt::Write::write_fmt(out, format_args!("{}", value as i64));
+        } else {
+            let _ = std::fmt::Write::write_fmt(out, format_args!("{value}"));
+        }
+    } else if value.is_nan() {
+        out.push_str("NaN");
+    } else if value > 0.0 {
+        out.push_str("+Inf");
+    } else {
+        out.push_str("-Inf");
+    }
+    out.push('\n');
+}
+
+/// Flatten a JSON object's numeric/bool leaves into `dpllm_<path>`
+/// gauges, recursing into nested objects with `_`-joined paths.
+/// Strings and arrays are skipped (arrays with per-row identity go
+/// through [`replica_rows`]).
+pub fn flatten_object(out: &mut String, path: &str, j: &Json) {
+    if let Json::Obj(m) = j {
+        for (k, v) in m {
+            let name = if path.is_empty() {
+                format!("{PREFIX}_{}", sanitize(k))
+            } else {
+                format!("{path}_{}", sanitize(k))
+            };
+            match v {
+                Json::Num(x) => push_metric(out, &name, &[], *x),
+                Json::Bool(b) => push_metric(out, &name, &[], if *b { 1.0 } else { 0.0 }),
+                Json::Obj(_) => flatten_object(out, &name, v),
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Expose a `replicas` array (from `metrics::replicas_json`) as
+/// `dpllm_replica_<field>{replica="<id>",tier="…"}` gauges.
+pub fn replica_rows(out: &mut String, rows: &[Json]) {
+    for r in rows {
+        let id = r.f64_of("id").unwrap_or(-1.0);
+        let id_s = format!("{}", id as i64);
+        let tier = r.str_of("tier").unwrap_or_default();
+        if let Json::Obj(m) = r {
+            for (k, v) in m {
+                if k == "id" || k == "tier" {
+                    continue;
+                }
+                let val = match v {
+                    Json::Num(x) => *x,
+                    Json::Bool(b) => {
+                        if *b {
+                            1.0
+                        } else {
+                            0.0
+                        }
+                    }
+                    _ => continue,
+                };
+                let name = format!("{PREFIX}_replica_{}", sanitize(k));
+                push_metric(
+                    out,
+                    &name,
+                    &[("replica", id_s.as_str()), ("tier", tier.as_str())],
+                    val,
+                );
+            }
+        }
+    }
+}
+
+/// Render a [`HistogramSet`] as native Prometheus histogram series,
+/// one per metric family × SLO class.  Bucket bounds are the log2
+/// upper bounds in milliseconds.
+pub fn histogram_set(out: &mut String, hs: &HistogramSet) {
+    for (family, hists) in hs.families() {
+        let name = format!("{PREFIX}_{}", sanitize(family));
+        out.push_str(&format!("# TYPE {name} histogram\n"));
+        for class in SloClass::all() {
+            let h = &hists[class as usize];
+            for (bound_us, cum) in h.cumulative() {
+                let le = format!("{}", bound_us as f64 / 1e3);
+                push_metric(
+                    out,
+                    &format!("{name}_bucket"),
+                    &[("class", class.name()), ("le", le.as_str())],
+                    cum as f64,
+                );
+            }
+            push_metric(
+                out,
+                &format!("{name}_bucket"),
+                &[("class", class.name()), ("le", "+Inf")],
+                h.count() as f64,
+            );
+            push_metric(
+                out,
+                &format!("{name}_sum"),
+                &[("class", class.name())],
+                h.sum_us() as f64 / 1e3,
+            );
+            push_metric(
+                out,
+                &format!("{name}_count"),
+                &[("class", class.name())],
+                h.count() as f64,
+            );
+        }
+    }
+}
+
+fn valid_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn valid_value(s: &str) -> bool {
+    matches!(s, "+Inf" | "-Inf" | "NaN") || s.parse::<f64>().is_ok()
+}
+
+/// Validate Prometheus text-exposition line format: every non-comment,
+/// non-blank line must be `name[{label="value",…}] value`.  This is the
+/// parser stand-in for a scrape (no prometheus client exists in the
+/// offline crate cache) — unit tests hold every exposition we emit
+/// against it.
+pub fn validate(text: &str) -> Result<()> {
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name_part, rest) = match line.find(|c| c == '{' || c == ' ') {
+            Some(i) => (&line[..i], &line[i..]),
+            None => bail!("line {}: no value separator: {line:?}", ln + 1),
+        };
+        if !valid_name(name_part) {
+            bail!("line {}: bad metric name {name_part:?}", ln + 1);
+        }
+        let value_part = if let Some(label_body) = rest.strip_prefix('{') {
+            let Some(close) = label_body.find('}') else {
+                bail!("line {}: unterminated label set: {line:?}", ln + 1);
+            };
+            let labels = &label_body[..close];
+            for pair in labels.split(',').filter(|p| !p.is_empty()) {
+                let Some((k, v)) = pair.split_once('=') else {
+                    bail!("line {}: label without '=': {pair:?}", ln + 1);
+                };
+                if !valid_label_name(k) {
+                    bail!("line {}: bad label name {k:?}", ln + 1);
+                }
+                if !(v.starts_with('"') && v.ends_with('"') && v.len() >= 2) {
+                    bail!("line {}: unquoted label value {v:?}", ln + 1);
+                }
+            }
+            label_body[close + 1..].trim_start()
+        } else {
+            rest.trim_start()
+        };
+        if !valid_value(value_part) {
+            bail!("line {}: bad sample value {value_part:?}", ln + 1);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_metric_formats_scalars_and_labels() {
+        let mut out = String::new();
+        push_metric(&mut out, "dpllm_uploads", &[], 42.0);
+        push_metric(&mut out, "dpllm_rate", &[("class", "premium")], 0.75);
+        push_metric(&mut out, "dpllm_x_bucket", &[("le", "+Inf")], 7.0);
+        assert_eq!(
+            out,
+            "dpllm_uploads 42\ndpllm_rate{class=\"premium\"} 0.75\n\
+             dpllm_x_bucket{le=\"+Inf\"} 7\n"
+        );
+        validate(&out).unwrap();
+    }
+
+    #[test]
+    fn flatten_covers_nested_objects_and_skips_strings() {
+        let mut j = Json::obj();
+        j.set("uploads", 10i64).set("arrival", "poisson");
+        let mut mem = Json::obj();
+        mem.set("kv_in_use_bytes", 300i64);
+        j.set("memory", mem);
+        let mut out = String::new();
+        flatten_object(&mut out, "", &j);
+        assert!(out.contains("dpllm_uploads 10\n"));
+        assert!(out.contains("dpllm_memory_kv_in_use_bytes 300\n"));
+        assert!(!out.contains("poisson"), "strings are not samples");
+        validate(&out).unwrap();
+    }
+
+    #[test]
+    fn replica_rows_carry_identity_labels() {
+        let mut r = Json::obj();
+        r.set("id", 1i64)
+            .set("tier", "4.50,4.75")
+            .set("premium", true)
+            .set("queue_depth", 3i64)
+            .set("tokens_per_s", 120.5);
+        let mut out = String::new();
+        replica_rows(&mut out, &[r]);
+        assert!(out.contains(
+            "dpllm_replica_queue_depth{replica=\"1\",tier=\"4.50,4.75\"} 3\n"
+        ));
+        assert!(out.contains("dpllm_replica_premium{replica=\"1\",tier=\"4.50,4.75\"} 1\n"));
+        validate(&out).unwrap();
+    }
+
+    #[test]
+    fn histogram_exposition_is_cumulative_and_valid() {
+        let mut hs = HistogramSet::new();
+        hs.record(SloClass::Premium, 5.0, 0.5, 1.0);
+        hs.record(SloClass::Premium, 9.0, 0.7, 2.0);
+        hs.record(SloClass::Economy, 40.0, 2.0, 10.0);
+        let mut out = String::new();
+        histogram_set(&mut out, &hs);
+        validate(&out).unwrap();
+        assert!(out.contains("# TYPE dpllm_ttft_ms histogram"));
+        assert!(out.contains("dpllm_ttft_ms_bucket{class=\"premium\",le=\"+Inf\"} 2\n"));
+        assert!(out.contains("dpllm_ttft_ms_count{class=\"premium\"} 2\n"));
+        assert!(out.contains("dpllm_itl_ms_count{class=\"economy\"} 1\n"));
+        // +Inf count equals _count for every class (cumulative sanity).
+        for class in ["premium", "economy"] {
+            let inf = format!("dpllm_queue_delay_ms_bucket{{class=\"{class}\",le=\"+Inf\"}}");
+            assert!(out.contains(&inf), "missing +Inf bucket for {class}");
+        }
+    }
+
+    #[test]
+    fn validator_rejects_malformed_lines() {
+        assert!(validate("ok_metric 1\n").is_ok());
+        assert!(validate("# HELP anything goes\n").is_ok());
+        assert!(validate("9leading_digit 1\n").is_err());
+        assert!(validate("name{le=\"1\"\n").is_err(), "unterminated labels");
+        assert!(validate("name{le=unquoted} 1\n").is_err());
+        assert!(validate("name notanumber\n").is_err());
+        assert!(validate("name{class=\"p\"} +Inf\n").is_ok());
+    }
+}

@@ -1,0 +1,559 @@
+//! Flight recorder: a bounded, overwrite-oldest trace ring of typed,
+//! timestamped events (DESIGN.md §Observability).
+//!
+//! Design constraints, in order:
+//! 1. **Disabled cost ~0.** Serving code calls [`Tracer::record`]
+//!    unconditionally; when tracing is off the call is one relaxed
+//!    atomic load and a branch (≤ ~25 ns — measured by `obs_micro`).
+//! 2. **No cross-thread contention on the hot path.** Replica workers,
+//!    the router executor and the engine thread each record into their
+//!    own per-thread ring; a lock is taken only on a ring the recording
+//!    thread owns (uncontended except while a drain is merging).
+//! 3. **Bounded memory, no silent loss.** Each ring holds the last
+//!    `cap` events; older events are overwritten and counted in an
+//!    exact per-ring drop counter, surfaced by every snapshot.
+//!
+//! Events are plain `Copy` data (precision values carried as integer
+//! milli-bits, never strings) so the record path never allocates.  The
+//! merged snapshot exports as Chrome trace-event JSON (Perfetto /
+//! `chrome://tracing` loadable): one track per request (pid
+//! [`PID_REQUESTS`]), one per replica (pid [`PID_FLEET`]), one per
+//! precision decision stream (pid [`PID_PRECISION`]).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Chrome-trace process id grouping the per-request lifecycle tracks.
+pub const PID_REQUESTS: u64 = 1;
+/// Chrome-trace process id grouping the per-replica fleet tracks.
+pub const PID_FLEET: u64 = 2;
+/// Chrome-trace process id grouping the precision-decision tracks.
+pub const PID_PRECISION: u64 = 3;
+
+/// Default per-thread ring capacity (events).  At ~48 bytes/event this
+/// bounds a thread's recorder at ~0.8 MB.
+pub const DEFAULT_RING_CAP: usize = 16_384;
+
+/// One typed flight-recorder event.  `Copy` only — precision values are
+/// integer milli-bits (`4500` = 4.500 bits) so recording never
+/// allocates or formats.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    // -- request lifecycle (pid = PID_REQUESTS, tid = request id) ------
+    /// Admission allocated a slot: target precision + queue delay.
+    Admit { id: u64, target_mb: u32, queue_us: u64 },
+    /// Admission rejected the request (`capacity` = retryable 503 shape).
+    Reject { id: u64, capacity: bool },
+    /// One chunked-prefill dispatch (`pos` = positions ingested so far).
+    PrefillChunk { id: u64, chunk: u32, pos: u32 },
+    /// First streamed token (TTFT stamp).
+    FirstToken { id: u64, ttft_us: u64 },
+    /// Terminal completion: output tokens + effective milli-bits.
+    Done { id: u64, tokens: u32, eff_mb: u32 },
+
+    // -- precision decisions (pid = PID_PRECISION, tid = request id) ---
+    /// Selector epoch re-assignment for one request: old → new target
+    /// milli-bits, per-layer bit flips, effective-bits delta
+    /// (milli-bits, signed).  Recorded for every active request at
+    /// every re-selection epoch — `from_mb == to_mb` means the epoch
+    /// kept the assignment.
+    Reselect { id: u64, from_mb: u32, to_mb: u32, layers_changed: u32, eff_delta_mb: i32 },
+    /// `downshift_for_pressure` engaged at admission: wanted → granted
+    /// milli-bits at `pressure_pct`% pool pressure.
+    PressureDownshift { id: u64, want_mb: u32, got_mb: u32, pressure_pct: u8 },
+    /// The speculative-γ controller changed draft length for a request.
+    GammaChange { id: u64, gamma: u8 },
+    /// A `swap_bits` delta-rebind (engine reconfigure): stacks rebuilt,
+    /// layer assignments changed, selector buffers re-uploaded.
+    SwapBits { stacks: u32, layers: u32, uploads: u32 },
+
+    // -- KV events (pid = PID_PRECISION, tid = request id) -------------
+    /// KV tier migration (tier sizes in slots).
+    KvMigrate { id: u64, from_tier: u32, to_tier: u32 },
+    /// Shared-prefix cache hit: prefill positions skipped.
+    PrefixHit { id: u64, saved_tokens: u32 },
+    /// Prefix-cache entries dropped (LRU eviction or tag invalidation).
+    PrefixEvict { entries: u32, invalidation: bool },
+
+    // -- fleet events (pid = PID_FLEET, tid = replica id) --------------
+    /// Router class-routed a request to a replica.
+    Route { id: u64, replica: u32, premium: bool },
+    /// Work stealing moved a backlogged request between replicas.
+    Steal { id: u64, from: u32, to: u32 },
+    /// Router forwarded a routed request to its replica thread.
+    Forward { id: u64, replica: u32 },
+    /// Drain began for a dead/wedged replica (`inflight` requests
+    /// surfaced as retryable rejects, `backlog` re-routed).
+    Drain { replica: u32, inflight: u32, backlog: u32 },
+    /// The drained replica respawned.
+    Respawn { replica: u32 },
+}
+
+impl EventKind {
+    /// Chrome-trace event name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Admit { .. } => "admit",
+            EventKind::Reject { .. } => "reject",
+            EventKind::PrefillChunk { .. } => "prefill_chunk",
+            EventKind::FirstToken { .. } => "first_token",
+            EventKind::Done { .. } => "done",
+            EventKind::Reselect { .. } => "reselect",
+            EventKind::PressureDownshift { .. } => "pressure_downshift",
+            EventKind::GammaChange { .. } => "gamma_change",
+            EventKind::SwapBits { .. } => "swap_bits",
+            EventKind::KvMigrate { .. } => "kv_migrate",
+            EventKind::PrefixHit { .. } => "prefix_hit",
+            EventKind::PrefixEvict { .. } => "prefix_evict",
+            EventKind::Route { .. } => "route",
+            EventKind::Steal { .. } => "steal",
+            EventKind::Forward { .. } => "forward",
+            EventKind::Drain { .. } => "drain",
+            EventKind::Respawn { .. } => "respawn",
+        }
+    }
+
+    /// Chrome-trace (pid, tid) track assignment: requests and precision
+    /// decisions get one track per request id; fleet events one track
+    /// per replica id.
+    pub fn track(&self) -> (u64, u64) {
+        match *self {
+            EventKind::Admit { id, .. }
+            | EventKind::Reject { id, .. }
+            | EventKind::PrefillChunk { id, .. }
+            | EventKind::FirstToken { id, .. }
+            | EventKind::Done { id, .. } => (PID_REQUESTS, id),
+            EventKind::Reselect { id, .. }
+            | EventKind::PressureDownshift { id, .. }
+            | EventKind::GammaChange { id, .. }
+            | EventKind::KvMigrate { id, .. }
+            | EventKind::PrefixHit { id, .. } => (PID_PRECISION, id),
+            EventKind::SwapBits { .. } | EventKind::PrefixEvict { .. } => (PID_PRECISION, 0),
+            EventKind::Route { replica, .. } => (PID_FLEET, replica as u64),
+            EventKind::Steal { from, .. } => (PID_FLEET, from as u64),
+            EventKind::Forward { replica, .. } => (PID_FLEET, replica as u64),
+            EventKind::Drain { replica, .. } => (PID_FLEET, replica as u64),
+            EventKind::Respawn { replica } => (PID_FLEET, replica as u64),
+        }
+    }
+
+    /// Chrome-trace `args` payload (milli-bit fields surfaced as bits).
+    fn args(&self) -> Json {
+        let bits = |mb: u32| mb as f64 / 1000.0;
+        let mut a = Json::obj();
+        match *self {
+            EventKind::Admit { id, target_mb, queue_us } => {
+                a.set("id", id as i64)
+                    .set("target_bits", bits(target_mb))
+                    .set("queue_us", queue_us as i64);
+            }
+            EventKind::Reject { id, capacity } => {
+                a.set("id", id as i64).set("capacity", capacity);
+            }
+            EventKind::PrefillChunk { id, chunk, pos } => {
+                a.set("id", id as i64).set("chunk", chunk as i64).set("pos", pos as i64);
+            }
+            EventKind::FirstToken { id, ttft_us } => {
+                a.set("id", id as i64).set("ttft_us", ttft_us as i64);
+            }
+            EventKind::Done { id, tokens, eff_mb } => {
+                a.set("id", id as i64)
+                    .set("tokens", tokens as i64)
+                    .set("eff_bits", bits(eff_mb));
+            }
+            EventKind::Reselect { id, from_mb, to_mb, layers_changed, eff_delta_mb } => {
+                a.set("id", id as i64)
+                    .set("from_bits", bits(from_mb))
+                    .set("to_bits", bits(to_mb))
+                    .set("layers_changed", layers_changed as i64)
+                    .set("eff_bits_delta", eff_delta_mb as f64 / 1000.0);
+            }
+            EventKind::PressureDownshift { id, want_mb, got_mb, pressure_pct } => {
+                a.set("id", id as i64)
+                    .set("want_bits", bits(want_mb))
+                    .set("got_bits", bits(got_mb))
+                    .set("pressure_pct", pressure_pct as i64);
+            }
+            EventKind::GammaChange { id, gamma } => {
+                a.set("id", id as i64).set("gamma", gamma as i64);
+            }
+            EventKind::SwapBits { stacks, layers, uploads } => {
+                a.set("stacks_rebuilt", stacks as i64)
+                    .set("layers_changed", layers as i64)
+                    .set("selector_uploads", uploads as i64);
+            }
+            EventKind::KvMigrate { id, from_tier, to_tier } => {
+                a.set("id", id as i64)
+                    .set("from_tier", from_tier as i64)
+                    .set("to_tier", to_tier as i64);
+            }
+            EventKind::PrefixHit { id, saved_tokens } => {
+                a.set("id", id as i64).set("saved_tokens", saved_tokens as i64);
+            }
+            EventKind::PrefixEvict { entries, invalidation } => {
+                a.set("entries", entries as i64).set("invalidation", invalidation);
+            }
+            EventKind::Route { id, replica, premium } => {
+                a.set("id", id as i64)
+                    .set("replica", replica as i64)
+                    .set("premium", premium);
+            }
+            EventKind::Steal { id, from, to } => {
+                a.set("id", id as i64).set("from", from as i64).set("to", to as i64);
+            }
+            EventKind::Forward { id, replica } => {
+                a.set("id", id as i64).set("replica", replica as i64);
+            }
+            EventKind::Drain { replica, inflight, backlog } => {
+                a.set("replica", replica as i64)
+                    .set("inflight", inflight as i64)
+                    .set("backlog", backlog as i64);
+            }
+            EventKind::Respawn { replica } => {
+                a.set("replica", replica as i64);
+            }
+        }
+        a
+    }
+}
+
+/// One recorded event: microseconds since the tracer's epoch + payload.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    pub t_us: u64,
+    pub kind: EventKind,
+}
+
+/// Fixed-capacity overwrite-oldest buffer with an exact drop counter.
+struct Ring {
+    cap: usize,
+    buf: Vec<TraceEvent>,
+    /// Oldest element once saturated (`buf.len() == cap`).
+    head: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring { cap: cap.max(1), buf: Vec::new(), head: 0, dropped: 0 }
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Oldest-first copy of the live window.
+    fn ordered(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+
+    fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.dropped = 0;
+    }
+}
+
+struct Shared {
+    /// Distinguishes tracers in the per-thread registry (a thread may
+    /// record into several tracers over its lifetime — tests do).
+    id: u64,
+    enabled: AtomicBool,
+    epoch: Instant,
+    cap_per_thread: usize,
+    rings: Mutex<Vec<Arc<Mutex<Ring>>>>,
+}
+
+thread_local! {
+    /// This thread's rings, keyed by tracer id (linear scan: a thread
+    /// records into one or two tracers in practice).
+    static LOCAL_RINGS: RefCell<Vec<(u64, Arc<Mutex<Ring>>)>> = RefCell::new(Vec::new());
+}
+
+static NEXT_TRACER_ID: AtomicU64 = AtomicU64::new(1);
+
+/// The flight recorder.  Cloning shares the same recorder (`Arc`
+/// inside); [`global`] returns the process-wide instance the serving
+/// stack records into.
+#[derive(Clone)]
+pub struct Tracer {
+    shared: Arc<Shared>,
+}
+
+impl Tracer {
+    /// A fresh recorder with `cap_per_thread` events per recording
+    /// thread, initially disabled.
+    pub fn new(cap_per_thread: usize) -> Tracer {
+        Tracer {
+            shared: Arc::new(Shared {
+                id: NEXT_TRACER_ID.fetch_add(1, Ordering::Relaxed),
+                enabled: AtomicBool::new(false),
+                epoch: Instant::now(),
+                cap_per_thread,
+                rings: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.shared.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.shared.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Record one event.  Disabled: one relaxed load + branch.  Enabled:
+    /// a timestamp, an uncontended lock on this thread's own ring, one
+    /// slot write — no allocation once the ring is warm.
+    #[inline]
+    pub fn record(&self, kind: EventKind) {
+        if !self.shared.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        self.record_always(kind);
+    }
+
+    #[inline(never)]
+    fn record_always(&self, kind: EventKind) {
+        let t_us = self.shared.epoch.elapsed().as_micros() as u64;
+        let ring = self.local_ring();
+        ring.lock().unwrap().push(TraceEvent { t_us, kind });
+    }
+
+    fn local_ring(&self) -> Arc<Mutex<Ring>> {
+        LOCAL_RINGS.with(|cell| {
+            let mut local = cell.borrow_mut();
+            if let Some((_, r)) = local.iter().find(|(id, _)| *id == self.shared.id) {
+                return r.clone();
+            }
+            let r = Arc::new(Mutex::new(Ring::new(self.shared.cap_per_thread)));
+            self.shared.rings.lock().unwrap().push(r.clone());
+            local.push((self.shared.id, r.clone()));
+            r
+        })
+    }
+
+    /// Merge every thread's ring into one timestamp-ordered snapshot
+    /// without clearing anything (`GET /trace` uses this).
+    pub fn snapshot(&self) -> TraceSnapshot {
+        self.collect(false)
+    }
+
+    /// Like [`Tracer::snapshot`], but clears the rings and drop
+    /// counters (one-shot export, e.g. `--trace-out` at shutdown).
+    pub fn drain(&self) -> TraceSnapshot {
+        self.collect(true)
+    }
+
+    fn collect(&self, clear: bool) -> TraceSnapshot {
+        let rings = self.shared.rings.lock().unwrap();
+        let mut events = Vec::new();
+        let mut dropped = 0u64;
+        for ring in rings.iter() {
+            let mut r = ring.lock().unwrap();
+            events.extend(r.ordered());
+            dropped += r.dropped;
+            if clear {
+                r.clear();
+            }
+        }
+        // Stable sort: per-ring order is preserved among equal stamps.
+        events.sort_by_key(|e| e.t_us);
+        TraceSnapshot { events, dropped }
+    }
+}
+
+/// A merged, timestamp-ordered view of the recorder.
+#[derive(Debug)]
+pub struct TraceSnapshot {
+    /// Events oldest-first (globally sorted by `t_us`).
+    pub events: Vec<TraceEvent>,
+    /// Events overwritten before this snapshot, summed over rings —
+    /// exact, so saturation is visible rather than silent.
+    pub dropped: u64,
+}
+
+impl TraceSnapshot {
+    /// Chrome trace-event JSON (the `{"traceEvents": [...]}` object
+    /// form): instant events (`ph:"i"`, thread-scoped) on one track per
+    /// request / replica / precision stream, with `ph:"M"` metadata
+    /// naming the three process groups.  Loads in Perfetto and
+    /// `chrome://tracing`; round-trips through [`crate::util::json`].
+    pub fn chrome_json(&self) -> Json {
+        let mut evs: Vec<Json> = Vec::with_capacity(self.events.len() + 3);
+        for (pid, name) in [
+            (PID_REQUESTS, "requests"),
+            (PID_FLEET, "replicas"),
+            (PID_PRECISION, "precision"),
+        ] {
+            let mut args = Json::obj();
+            args.set("name", name);
+            let mut m = Json::obj();
+            m.set("name", "process_name")
+                .set("ph", "M")
+                .set("pid", pid as i64)
+                .set("tid", 0i64)
+                .set("args", args);
+            evs.push(m);
+        }
+        for e in &self.events {
+            let (pid, tid) = e.kind.track();
+            let mut j = Json::obj();
+            j.set("name", e.kind.name())
+                .set("ph", "i")
+                .set("s", "t")
+                .set("ts", e.t_us as i64)
+                .set("pid", pid as i64)
+                .set("tid", tid as i64)
+                .set("args", e.kind.args());
+            evs.push(j);
+        }
+        let mut top = Json::obj();
+        top.set("traceEvents", Json::Arr(evs))
+            .set("dropped", self.dropped as i64);
+        top
+    }
+}
+
+/// The process-wide flight recorder every serving component records
+/// into.  Disabled unless `DPLLM_TRACE` is set (to anything but `0`) or
+/// a caller (CLI `--trace-out`, tests) enables it explicitly.
+pub fn global() -> &'static Tracer {
+    static GLOBAL: OnceLock<Tracer> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let t = Tracer::new(DEFAULT_RING_CAP);
+        if std::env::var("DPLLM_TRACE").map(|v| v != "0" && !v.is_empty()).unwrap_or(false) {
+            t.set_enabled(true);
+        }
+        t
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tick(id: u64) -> EventKind {
+        EventKind::FirstToken { id, ttft_us: id }
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::new(8);
+        t.record(tick(1));
+        assert!(t.snapshot().events.is_empty());
+        assert_eq!(t.snapshot().dropped, 0);
+    }
+
+    #[test]
+    fn ring_wraparound_keeps_newest_and_counts_drops_exactly() {
+        let t = Tracer::new(8);
+        t.set_enabled(true);
+        for i in 0..11u64 {
+            t.record(tick(i));
+        }
+        let s = t.snapshot();
+        assert_eq!(s.events.len(), 8, "ring holds exactly cap events");
+        assert_eq!(s.dropped, 3, "drop counter is exact");
+        // The survivors are the NEWEST 8 (overwrite-oldest), in order.
+        let ids: Vec<u64> = s
+            .events
+            .iter()
+            .map(|e| match e.kind {
+                EventKind::FirstToken { id, .. } => id,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ids, (3..11).collect::<Vec<u64>>());
+        // Drain clears both the window and the drop counter.
+        let d = t.drain();
+        assert_eq!(d.events.len(), 8);
+        assert_eq!(t.snapshot().events.len(), 0);
+        assert_eq!(t.snapshot().dropped, 0);
+    }
+
+    #[test]
+    fn cross_thread_merge_is_timestamp_ordered_and_lossless() {
+        let t = Tracer::new(1024);
+        t.set_enabled(true);
+        let mut handles = Vec::new();
+        for thread in 0..4u64 {
+            let t = t.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100u64 {
+                    t.record(EventKind::FirstToken { id: thread, ttft_us: i });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = t.snapshot();
+        assert_eq!(s.events.len(), 400);
+        assert_eq!(s.dropped, 0);
+        // Global merge is non-decreasing in time, and each per-request
+        // track (= per-thread here) kept its own order.
+        for w in s.events.windows(2) {
+            assert!(w[0].t_us <= w[1].t_us, "merge not time-ordered");
+        }
+        for thread in 0..4u64 {
+            let seq: Vec<u64> = s
+                .events
+                .iter()
+                .filter_map(|e| match e.kind {
+                    EventKind::FirstToken { id, ttft_us } if id == thread => Some(ttft_us),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(seq, (0..100).collect::<Vec<u64>>(), "track {thread} reordered");
+        }
+    }
+
+    #[test]
+    fn chrome_json_round_trips_through_util_json() {
+        let t = Tracer::new(64);
+        t.set_enabled(true);
+        t.record(EventKind::Admit { id: 7, target_mb: 4500, queue_us: 120 });
+        t.record(EventKind::Reselect {
+            id: 7,
+            from_mb: 4500,
+            to_mb: 3500,
+            layers_changed: 9,
+            eff_delta_mb: -1000,
+        });
+        t.record(EventKind::Drain { replica: 2, inflight: 3, backlog: 1 });
+        t.record(EventKind::Respawn { replica: 2 });
+        t.record(EventKind::Done { id: 7, tokens: 16, eff_mb: 3600 });
+        let j = t.snapshot().chrome_json();
+        let parsed = Json::parse(&j.dump()).expect("chrome trace JSON parses back");
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 metadata records + 5 instants.
+        assert_eq!(evs.len(), 8);
+        assert_eq!(evs[0].str_of("ph").unwrap(), "M");
+        let admit = evs.iter().find(|e| e.str_of("name").as_deref() == Ok("admit")).unwrap();
+        assert_eq!(admit.str_of("ph").unwrap(), "i");
+        assert_eq!(admit.f64_of("pid").unwrap(), PID_REQUESTS as f64);
+        assert_eq!(admit.f64_of("tid").unwrap(), 7.0);
+        let args = admit.get("args").unwrap();
+        assert!((args.f64_of("target_bits").unwrap() - 4.5).abs() < 1e-9);
+        let resel = evs.iter().find(|e| e.str_of("name").as_deref() == Ok("reselect")).unwrap();
+        assert_eq!(resel.f64_of("pid").unwrap(), PID_PRECISION as f64);
+        let args = resel.get("args").unwrap();
+        assert!((args.f64_of("eff_bits_delta").unwrap() + 1.0).abs() < 1e-9);
+        assert_eq!(parsed.f64_of("dropped").unwrap(), 0.0);
+    }
+}

@@ -863,6 +863,15 @@ impl DecodeSession {
                 }
                 gen.tier = to;
                 self.rt.transfers().count_kv_migration();
+                // The session has no request identity down here; id 0
+                // marks an unattributed migration on the precision track.
+                crate::obs::global_tracer().record(
+                    crate::obs::EventKind::KvMigrate {
+                        id: 0,
+                        from_tier: from as u32,
+                        to_tier: to as u32,
+                    },
+                );
                 Ok(())
             }
             Err(e) => {

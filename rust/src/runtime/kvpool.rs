@@ -401,6 +401,12 @@ impl<B> KvPool<B> {
             if let Some(e) = self.prefix.remove(&k) {
                 self.prefix_bytes -= e.bytes;
                 self.prefix_evictions += 1;
+                crate::obs::global_tracer().record(
+                    crate::obs::EventKind::PrefixEvict {
+                        entries: 1,
+                        invalidation: false,
+                    },
+                );
             }
         }
     }
@@ -483,6 +489,14 @@ impl<B> KvPool<B> {
                 self.prefix_bytes -= e.bytes;
                 self.prefix_invalidations += 1;
             }
+        }
+        if !stale.is_empty() {
+            crate::obs::global_tracer().record(
+                crate::obs::EventKind::PrefixEvict {
+                    entries: stale.len() as u32,
+                    invalidation: true,
+                },
+            );
         }
         stale.len()
     }

@@ -374,7 +374,8 @@ fn run_engine_replica(
                     // Loop-level error: the PR 5 contract says keep
                     // serving — per-request failures already surfaced
                     // as events above.
-                    eprintln!("[replica {}] step error: {e:#}", spec.id);
+                    crate::dpllm_log!(Warn, "replica",
+                                      "[replica {}] step error: {e:#}", spec.id);
                 }
             }
         }

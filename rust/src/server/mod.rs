@@ -33,7 +33,16 @@
 //!                      family — transfers, weight cache, batching,
 //!                      speculation, KV pool) + a `memory` object (the
 //!                      combined weight-cache/KV byte report —
-//!                      `coordinator::metrics::memory_json`)
+//!                      `coordinator::metrics::memory_json`) + a
+//!                      `latency` object (per-SLO-class TTFT/ITL/queue
+//!                      percentiles from the live log2 histograms)
+//!   GET  /metrics?format=prometheus
+//!                   -> the same counters as Prometheus text exposition
+//!                      (gauges from every numeric leaf + native
+//!                      histogram series per family × SLO class)
+//!   GET  /trace     -> flight-recorder snapshot as Chrome trace-event
+//!                      JSON (load into Perfetto / chrome://tracing);
+//!                      non-destructive — the ring keeps recording
 //!
 //! Hardening: request bodies are capped at [`MAX_BODY_BYTES`]; a POST
 //! without a parseable `Content-Length`, or with one over the cap, is
@@ -56,6 +65,7 @@ use crate::coordinator::sched::{Request, RequestQueue, SchedPolicy};
 use crate::coordinator::service::{
     is_capacity_reject, CoreConfig, CoreEvent, ServingCore, ServingEngine,
 };
+use crate::obs::{global_tracer, prom};
 use crate::util::json::Json;
 
 /// Hard cap on request-body size; larger Content-Lengths are rejected with
@@ -87,6 +97,9 @@ pub struct Server {
     /// (the `serve` CLI plumbs `--reselect-every`/`--gamma-cap`/`--no-spec`).
     core_config: CoreConfig,
     stop: Arc<AtomicBool>,
+    /// Write the flight-recorder trace (Chrome trace-event JSON) here on
+    /// shutdown (`dpllm serve --trace-out`).
+    trace_out: Option<std::path::PathBuf>,
 }
 
 impl Server {
@@ -96,11 +109,19 @@ impl Server {
             util,
             core_config: CoreConfig::from_env(),
             stop: Arc::new(AtomicBool::new(false)),
+            trace_out: None,
         }
     }
 
     pub fn with_core_config(mut self, config: CoreConfig) -> Server {
         self.core_config = config;
+        self
+    }
+
+    /// Enable the global tracer and dump its ring to `path` on shutdown.
+    pub fn with_trace_out(mut self, path: std::path::PathBuf) -> Server {
+        global_tracer().set_enabled(true);
+        self.trace_out = Some(path);
         self
     }
 
@@ -110,10 +131,10 @@ impl Server {
 
     /// Serve until the stop flag flips.
     pub fn serve(self, addr: &str) -> Result<()> {
-        let Server { engine, mut util, core_config, stop } = self;
+        let Server { engine, mut util, core_config, stop, trace_out } = self;
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         listener.set_nonblocking(true)?;
-        eprintln!("[server] listening on {addr}");
+        crate::dpllm_log!(Info, "server", "listening on {addr}");
         let (tx, rx) = channel::<Work>();
         let acceptor = spawn_acceptor(listener, tx, stop.clone());
 
@@ -190,11 +211,32 @@ impl Server {
                         }
                     }
                 }
-                Err(e) => eprintln!("[server] core step error: {e:#}"),
+                Err(e) => {
+                    crate::dpllm_log!(Warn, "server", "core step error: {e:#}")
+                }
             }
         }
         let _ = acceptor.join();
+        write_trace_out(trace_out.as_deref());
         Ok(())
+    }
+}
+
+/// Dump the global flight recorder to `path` (Chrome trace-event JSON);
+/// drains the ring, so the file holds everything still buffered.
+fn write_trace_out(path: Option<&std::path::Path>) {
+    let Some(path) = path else { return };
+    let snap = global_tracer().drain();
+    let n = snap.events.len();
+    match std::fs::write(path, snap.chrome_json().dump()) {
+        Ok(()) => crate::dpllm_log!(
+            Info, "server",
+            "wrote {n} trace events ({} dropped) to {}", snap.dropped,
+            path.display()
+        ),
+        Err(e) => crate::dpllm_log!(
+            Error, "server", "trace-out {} failed: {e}", path.display()
+        ),
     }
 }
 
@@ -233,11 +275,23 @@ fn spawn_acceptor(listener: TcpListener, tx: Sender<Work>,
 pub struct RouterServer {
     router: Router,
     stop: Arc<AtomicBool>,
+    trace_out: Option<std::path::PathBuf>,
 }
 
 impl RouterServer {
     pub fn new(router: Router) -> RouterServer {
-        RouterServer { router, stop: Arc::new(AtomicBool::new(false)) }
+        RouterServer {
+            router,
+            stop: Arc::new(AtomicBool::new(false)),
+            trace_out: None,
+        }
+    }
+
+    /// Enable the global tracer and dump its ring to `path` on shutdown.
+    pub fn with_trace_out(mut self, path: std::path::PathBuf) -> RouterServer {
+        global_tracer().set_enabled(true);
+        self.trace_out = Some(path);
+        self
     }
 
     pub fn stop_handle(&self) -> Arc<AtomicBool> {
@@ -246,12 +300,12 @@ impl RouterServer {
 
     /// Serve until the stop flag flips, then shut the fleet down.
     pub fn serve(self, addr: &str) -> Result<()> {
-        let RouterServer { mut router, stop } = self;
+        let RouterServer { mut router, stop, trace_out } = self;
         let listener =
             TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         listener.set_nonblocking(true)?;
-        eprintln!("[router] listening on {addr} ({} replicas)",
-                  router.alive_count());
+        crate::dpllm_log!(Info, "router", "listening on {addr} ({} replicas)",
+                          router.alive_count());
         let (tx, rx) = channel::<Work>();
         let acceptor = spawn_acceptor(listener, tx, stop.clone());
         let mut waiting: HashMap<u64, Sender<String>> = HashMap::new();
@@ -298,8 +352,9 @@ impl RouterServer {
                         }
                     }
                     RouterEvent::Respawned { replica } => {
-                        eprintln!(
-                            "[router] replica {replica} drained and respawned"
+                        crate::dpllm_log!(
+                            Warn, "router",
+                            "replica {replica} drained and respawned"
                         );
                     }
                 }
@@ -312,6 +367,7 @@ impl RouterServer {
         }
         router.shutdown();
         let _ = acceptor.join();
+        write_trace_out(trace_out.as_deref());
         Ok(())
     }
 }
@@ -334,12 +390,27 @@ fn ingest_routed(router: &mut Router,
             j.set("replicas_alive", router.alive_count() as i64);
             ok_json(&j)
         }
-        Route::Metrics => {
+        Route::Metrics { prometheus } => {
             // Fleet-level metrics: `router_*` counters + the per-replica
             // `replicas` array (tier slice, queue depth, active slots,
-            // tokens/s EWMA, steals, respawns).
-            ok_json(&router.metrics_json())
+            // tokens/s EWMA, steals, respawns) + per-class latency
+            // percentiles.
+            let j = router.metrics_json();
+            if prometheus {
+                let mut text = String::new();
+                prom::flatten_object(&mut text, "", &j);
+                if let Some(rows) =
+                    j.get("replicas").and_then(|r| r.as_arr().ok())
+                {
+                    prom::replica_rows(&mut text, rows);
+                }
+                prom::histogram_set(&mut text, &router.histograms());
+                ok_prometheus(&text)
+            } else {
+                ok_json(&j)
+            }
         }
+        Route::Trace => ok_json(&global_tracer().snapshot().chrome_json()),
         Route::Generate => match parse_generate(id, &work.body) {
             Ok((request, _)) if request.prompt.trim().is_empty() => {
                 error_json(400, "empty prompt")
@@ -437,7 +508,7 @@ fn ingest(engine: &ServingEngine, core: &ServingCore<'_>,
                 .set("queued", queue.len() as i64);
             ok_json(&j)
         }
-        Route::Metrics => {
+        Route::Metrics { prometheus } => {
             let s = engine.metrics.summary();
             let mut j = Json::obj();
             j.set("requests", s.n)
@@ -456,8 +527,20 @@ fn ingest(engine: &ServingEngine, core: &ServingCore<'_>,
                 // cached prefixes vs their budgets).
                 .set("counters", engine.counters_json())
                 .set("memory", engine.memory_json());
-            ok_json(&j)
+            if prometheus {
+                // Every numeric leaf above becomes a `dpllm_*` gauge;
+                // the latency histograms export as native histogram
+                // series rather than pre-baked percentile gauges.
+                let mut text = String::new();
+                prom::flatten_object(&mut text, "", &j);
+                prom::histogram_set(&mut text, &engine.metrics.histograms());
+                ok_prometheus(&text)
+            } else {
+                j.set("latency", engine.metrics.histograms().json());
+                ok_json(&j)
+            }
         }
+        Route::Trace => ok_json(&global_tracer().snapshot().chrome_json()),
         Route::Generate => match parse_generate(id, &work.body) {
             // Cheap client-error screening at ingest; admission re-checks
             // and any later rejection is still per-connection (400), never
@@ -531,7 +614,12 @@ fn outcome_json(o: &crate::coordinator::service::ServeOutcome, u: f64) -> Json {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Route {
     Health,
-    Metrics,
+    Metrics {
+        /// `?format=prometheus`: text exposition instead of JSON.
+        prometheus: bool,
+    },
+    /// Flight-recorder snapshot as Chrome trace-event JSON.
+    Trace,
     Generate,
     /// Known path, wrong method; payload = value for the `Allow` header.
     WrongMethod(&'static str),
@@ -539,11 +627,19 @@ enum Route {
 }
 
 fn route(method: &str, path: &str) -> Route {
+    // The query string selects representations (e.g. the Prometheus
+    // exposition); it never changes which endpoint is addressed.
+    let (path, query) = path.split_once('?').unwrap_or((path, ""));
     match (method, path) {
         ("GET", "/health") => Route::Health,
-        ("GET", "/metrics") => Route::Metrics,
+        ("GET", "/metrics") => Route::Metrics {
+            prometheus: query.split('&').any(|kv| kv == "format=prometheus"),
+        },
+        ("GET", "/trace") => Route::Trace,
         ("POST", "/generate") => Route::Generate,
-        (_, "/health") | (_, "/metrics") => Route::WrongMethod("GET"),
+        (_, "/health") | (_, "/metrics") | (_, "/trace") => {
+            Route::WrongMethod("GET")
+        }
         (_, "/generate") => Route::WrongMethod("POST"),
         _ => Route::NotFound,
     }
@@ -645,12 +741,17 @@ fn http_response(code: u32, reason: &str, body: &str) -> String {
 
 fn http_response_with(code: u32, reason: &str, body: &str,
                       extra_headers: &[(&str, &str)]) -> String {
+    http_response_typed(code, reason, "application/json", body, extra_headers)
+}
+
+fn http_response_typed(code: u32, reason: &str, content_type: &str,
+                       body: &str, extra_headers: &[(&str, &str)]) -> String {
     let mut headers = String::new();
     for (k, v) in extra_headers {
         headers.push_str(&format!("{k}: {v}\r\n"));
     }
     format!(
-        "HTTP/1.1 {code} {reason}\r\nContent-Type: application/json\r\n\
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {content_type}\r\n\
          {headers}Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     )
@@ -658,6 +759,12 @@ fn http_response_with(code: u32, reason: &str, body: &str,
 
 fn ok_json(j: &Json) -> String {
     http_response(200, "OK", &j.dump())
+}
+
+/// Prometheus text exposition (`GET /metrics?format=prometheus`).
+fn ok_prometheus(text: &str) -> String {
+    http_response_typed(200, "OK",
+                        "text/plain; version=0.0.4; charset=utf-8", text, &[])
 }
 
 fn error_json(code: u32, msg: &str) -> String {
@@ -680,17 +787,23 @@ pub fn http_post(addr: &str, path: &str, body: &str) -> Result<Json> {
         body.len()
     );
     stream.write_all(req.as_bytes())?;
-    read_response(stream)
+    Json::parse(&read_response(stream)?).context("response body")
 }
 
 pub fn http_get(addr: &str, path: &str) -> Result<Json> {
+    Json::parse(&http_get_text(addr, path)?).context("response body")
+}
+
+/// `http_get` without the JSON parse — for non-JSON representations
+/// (the Prometheus exposition).
+pub fn http_get_text(addr: &str, path: &str) -> Result<String> {
     let mut stream = TcpStream::connect(addr)?;
     let req = format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
     stream.write_all(req.as_bytes())?;
     read_response(stream)
 }
 
-fn read_response(stream: TcpStream) -> Result<Json> {
+fn read_response(stream: TcpStream) -> Result<String> {
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
     reader.read_line(&mut line)?;
@@ -707,7 +820,7 @@ fn read_response(stream: TcpStream) -> Result<Json> {
     }
     let mut body = vec![0u8; content_len];
     reader.read_exact(&mut body)?;
-    Json::parse(&String::from_utf8_lossy(&body)).context("response body")
+    Ok(String::from_utf8_lossy(&body).into_owned())
 }
 
 #[cfg(test)]
@@ -733,11 +846,22 @@ mod tests {
     #[test]
     fn routing_known_paths_and_methods() {
         assert_eq!(route("GET", "/health"), Route::Health);
-        assert_eq!(route("GET", "/metrics"), Route::Metrics);
+        assert_eq!(route("GET", "/metrics"),
+                   Route::Metrics { prometheus: false });
+        assert_eq!(route("GET", "/trace"), Route::Trace);
         assert_eq!(route("POST", "/generate"), Route::Generate);
+        // The query string selects a representation, never a route.
+        assert_eq!(route("GET", "/metrics?format=prometheus"),
+                   Route::Metrics { prometheus: true });
+        assert_eq!(route("GET", "/metrics?format=json"),
+                   Route::Metrics { prometheus: false });
+        assert_eq!(route("GET", "/metrics?x=1&format=prometheus"),
+                   Route::Metrics { prometheus: true });
+        assert_eq!(route("GET", "/health?anything"), Route::Health);
         // Wrong method on a known path -> 405 with the right Allow value.
         assert_eq!(route("POST", "/health"), Route::WrongMethod("GET"));
         assert_eq!(route("DELETE", "/metrics"), Route::WrongMethod("GET"));
+        assert_eq!(route("POST", "/trace"), Route::WrongMethod("GET"));
         assert_eq!(route("GET", "/generate"), Route::WrongMethod("POST"));
         // Unknown path -> 404.
         assert_eq!(route("GET", "/nope"), Route::NotFound);
@@ -850,6 +974,11 @@ mod tests {
         use crate::runtime::replica::sim::{sim_link, SimProfile};
         use crate::runtime::replica::ReplicaSpec;
 
+        // The flight recorder is off by default; /trace assertions below
+        // need it live.  Enabling is sticky and harmless to other tests
+        // (they use local Tracer instances or ignore the global one).
+        global_tracer().set_enabled(true);
+
         let specs = vec![
             ReplicaSpec::sim(0, &["3.25", "3.50"], false, 1.0),
             ReplicaSpec::sim(1, &["4.50", "4.75"], true, 2.0),
@@ -888,6 +1017,32 @@ mod tests {
         let rows = m.get("replicas").expect("replicas key").as_arr().expect("fleet rows");
         assert_eq!(rows.len(), 2);
         assert!(m.f64_of("router_routed_economy").unwrap() >= 1.0);
+        // The completed request landed in the economy latency histogram.
+        let lat = m.get("latency").expect("latency key");
+        assert!(lat.get("economy").unwrap().f64_of("n").unwrap() >= 1.0);
+
+        // Prometheus representation of the same state: parses line by
+        // line and carries both the flattened counters and the native
+        // histogram series.
+        let text = http_get_text(addr, "/metrics?format=prometheus")
+            .expect("prometheus scrape");
+        crate::obs::prom::validate(&text).expect("valid exposition");
+        assert!(text.contains("dpllm_router_routed_economy"));
+        assert!(text.contains("dpllm_replica_done{"));
+        assert!(text.contains("dpllm_ttft_ms_bucket{"));
+
+        // Flight recorder: the scrape is valid Chrome trace JSON; the
+        // routed request left route→forward lifecycle events.
+        let t = http_get(addr, "/trace").expect("trace scrape");
+        let events = t.get("traceEvents").expect("traceEvents").as_arr().unwrap();
+        assert!(!events.is_empty());
+        let names: Vec<String> = events
+            .iter()
+            .filter_map(|e| e.str_of("name").ok())
+            .collect();
+        assert!(names.iter().any(|n| n == "route"), "no route event traced");
+        assert!(names.iter().any(|n| n == "forward"),
+                "no forward event traced");
 
         stop.store(true, std::sync::atomic::Ordering::Relaxed);
         handle.join().unwrap().unwrap();

@@ -17,6 +17,9 @@
 //! 4. KV-pressure downshift under a sustained burst → the
 //!    `downshift_for_pressure` policy (the core's `admit_downshifts`
 //!    path) over real pool pressure accounting
+//! 5. fleet-event ordering in the flight recorder → a killed replica's
+//!    `drain` trace event precedes its `respawn`, straight from the
+//!    same global tracer `GET /trace` serves
 
 use std::rc::Rc;
 use std::time::Duration;
@@ -287,4 +290,70 @@ fn kv_pressure_downshift_under_sustained_burst() {
     );
     assert!(floor_respected, "downshift went below the ladder floor");
     assert_eq!(pool.in_use_bytes(), 0, "byte accounting leaked");
+}
+
+/// Chaos 5 — flight-recorder event ordering across a kill/respawn.  A
+/// three-replica fleet (replica 2 premium, the only fleet in this
+/// binary with a replica id 2 — so its events are unambiguous even
+/// though the global tracer is shared) takes a premium burst; replica 2
+/// panics mid-burst.  The recorder must hold a `drain` event for
+/// replica 2 strictly before its `respawn`, and the drained requests
+/// must still reach terminal outcomes on the surviving replicas.
+#[test]
+fn kill_respawn_orders_drain_before_respawn_in_trace() {
+    use dp_llm::coordinator::qos::QosBudget;
+    use dp_llm::coordinator::sched::Request;
+    use dp_llm::obs::{global_tracer, EventKind};
+
+    global_tracer().set_enabled(true);
+    let specs = vec![
+        ReplicaSpec::sim(0, &["3.25"], false, TOKEN_US as f64 / 1e3),
+        ReplicaSpec::sim(1, &["3.50"], false, TOKEN_US as f64 / 1e3),
+        ReplicaSpec::sim(2, &["4.75"], true, TOKEN_US as f64 / 1e3),
+    ];
+    let mut router = Router::new(
+        specs,
+        Box::new(|spec| {
+            sim_link(spec, SimProfile {
+                token_us: 500,
+                slots: 2,
+                // Only the premium replica dies; the fault is
+                // token-count-keyed so the respawned worker (whose
+                // backlog re-routed away) never re-trips it.
+                panic_after_tokens: (spec.id == 2).then_some(6),
+                ..SimProfile::default()
+            })
+        }),
+        RouterConfig {
+            steal_threshold: usize::MAX, // isolate drain from stealing
+            ..RouterConfig::default()
+        },
+    );
+    const N: u64 = 6;
+    for id in 0..N {
+        let req = Request::new(id, "p", 2, QosBudget::tight(5.0));
+        assert!(router.submit(req, None).is_none());
+    }
+    let events = drive(&mut router, N as usize, Duration::from_secs(20));
+    assert!(router.counters().respawns >= 1, "replica 2 never respawned");
+    assert!(events.iter().any(|e| matches!(
+        e, RouterEvent::Respawned { replica: 2 })));
+    router.shutdown();
+
+    // The recorder's view of the same incident: drain strictly before
+    // respawn for replica 2.  snapshot() is already timestamp-sorted
+    // (stable, so same-thread ties keep program order).
+    let snap = global_tracer().snapshot();
+    let drain_at = snap.events.iter().position(|e| matches!(
+        e.kind, EventKind::Drain { replica: 2, .. }));
+    let respawn_at = snap.events.iter().position(|e| matches!(
+        e.kind, EventKind::Respawn { replica: 2 }));
+    let drain_at = drain_at.expect("no drain event traced for replica 2");
+    let respawn_at = respawn_at.expect("no respawn event traced for replica 2");
+    assert!(drain_at < respawn_at,
+            "drain (idx {drain_at}) must precede respawn (idx {respawn_at})");
+    // The burst also left request-lifecycle events on the precision
+    // replica's route track.
+    assert!(snap.events.iter().any(|e| matches!(
+        e.kind, EventKind::Route { replica: 2, premium: true, .. })));
 }
