@@ -236,9 +236,18 @@ impl Default for MetricsRegistry {
     }
 }
 
+/// Percentile/mean digest of a [`MetricsRegistry`].  `n`, the means,
+/// `throughput_tok_s` and `total_output_tokens` are lifetime-exact
+/// (cumulative state); the `p*` percentile fields cover only the
+/// retained record window — `window` says how many records that is, so
+/// a wrapped ring is visible rather than silently passing window
+/// percentiles off as all-of-`n` statistics.
 #[derive(Debug, Clone)]
 pub struct Summary {
     pub n: usize,
+    /// Records behind the `p*` fields: equals `n` until the bounded
+    /// ring wraps, the ring capacity afterwards.
+    pub window: usize,
     pub mean_tpot_ms: f64,
     pub p50_total_ms: f64,
     pub p90_total_ms: f64,
@@ -249,7 +258,15 @@ pub struct Summary {
     pub mean_eff_bits: f64,
     pub p90_eff_bits: f64,
     pub p99_eff_bits: f64,
+    /// Lifetime rate: tokens over the wall-clock span first arrival →
+    /// last completion since startup.  Idle gaps between bursts dilute
+    /// it — that is the long-run average, by design.
     pub throughput_tok_s: f64,
+    /// Live rate: same wall-clock-span formula restricted to the
+    /// retained record window, so on a long-running server it tracks
+    /// recent load instead of being permanently diluted by old idle
+    /// stretches (which age out of the ring).
+    pub window_throughput_tok_s: f64,
     pub total_output_tokens: usize,
 }
 
@@ -333,8 +350,18 @@ impl MetricsRegistry {
             (Some(s), Some(e)) => e.saturating_duration_since(s).as_secs_f64(),
             _ => 0.0,
         };
+        // Windowed rate: same formula over just the retained records.
+        let win_tokens: u64 = rs.iter().map(|r| r.output_tokens as u64).sum();
+        let win_span_s = match (
+            rs.iter().map(|r| r.arrival).min(),
+            rs.iter().map(|r| r.completed).max(),
+        ) {
+            (Some(s), Some(e)) => e.saturating_duration_since(s).as_secs_f64(),
+            _ => 0.0,
+        };
         Summary {
             n: cum.n as usize,
+            window: rs.len(),
             mean_tpot_ms: cum.sum_tpot_ms / n,
             p50_total_ms: percentile(&total, 50.0),
             p90_total_ms: percentile(&total, 90.0),
@@ -349,6 +376,11 @@ impl MetricsRegistry {
             } else {
                 0.0
             },
+            window_throughput_tok_s: if win_span_s > 0.0 {
+                win_tokens as f64 / win_span_s
+            } else {
+                0.0
+            },
             total_output_tokens: cum.out_tokens as usize,
         }
     }
@@ -356,7 +388,7 @@ impl MetricsRegistry {
 
 impl Summary {
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} tokens={} tpot={:.2}ms p50/p90/p99 latency={:.0}/{:.0}/{:.0}ms \
              ttft mean/p90={:.0}/{:.0}ms \
              eff-bits mean/p90/p99={:.3}/{:.3}/{:.3} throughput={:.1} tok/s",
@@ -365,7 +397,14 @@ impl Summary {
             self.mean_ttft_ms, self.p90_ttft_ms,
             self.mean_eff_bits, self.p90_eff_bits, self.p99_eff_bits,
             self.throughput_tok_s,
-        )
+        );
+        if self.window < self.n {
+            s.push_str(&format!(
+                " (percentiles over last {} requests, window rate {:.1} tok/s)",
+                self.window, self.window_throughput_tok_s,
+            ));
+        }
+        s
     }
 }
 
@@ -453,6 +492,41 @@ mod tests {
         assert_eq!(s.total_output_tokens, 100);
         assert!((s.mean_tpot_ms - 10.0).abs() < 1e-9);
         assert!((s.mean_eff_bits - 4.0).abs() < 1e-9);
+        // The wrapped window is surfaced, not silently passed off as n.
+        assert_eq!(s.window, 4);
+        assert!(s.report().contains("percentiles over last 4 requests"),
+                "{}", s.report());
+    }
+
+    #[test]
+    fn window_throughput_sheds_evicted_idle_gaps() {
+        // An old burst, a 100 s idle gap, then a fresh burst that
+        // evicts the old records from the 2-slot ring.  The lifetime
+        // rate is diluted by the gap (by design); the window rate
+        // covers only the retained burst.
+        let m = MetricsRegistry::with_capacity(2);
+        let t0 = Instant::now();
+        let mk = |arrival: Instant, completed: Instant, id: u64| RequestRecord {
+            id, target_precision: 4.0, effective_bits: 4.0,
+            prompt_tokens: 8, output_tokens: 100,
+            queue_ms: 0.0, prefill_ms: 0.0, decode_ms: 1000.0,
+            ttft_ms: 10.0, premium: false, arrival, completed,
+        };
+        m.record(mk(t0, t0 + Duration::from_secs(1), 0));
+        m.record(mk(t0, t0 + Duration::from_secs(1), 1));
+        let late = t0 + Duration::from_secs(101);
+        m.record(mk(late, late + Duration::from_secs(1), 2));
+        m.record(mk(late, late + Duration::from_secs(1), 3));
+        let s = m.summary();
+        // Lifetime: 400 tokens over the 102 s span ≈ 3.9 tok/s.
+        assert!(s.throughput_tok_s < 5.0, "{}", s.throughput_tok_s);
+        // Window: the fresh burst's 200 tokens over its 1 s span.
+        assert_eq!(s.window, 2);
+        assert!(
+            (s.window_throughput_tok_s - 200.0).abs() < 1.0,
+            "window rate expected ~200 tok/s, got {}",
+            s.window_throughput_tok_s
+        );
     }
 
     #[test]

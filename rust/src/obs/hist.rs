@@ -91,6 +91,10 @@ impl LogHistogram {
     /// upper bound, clamped to the observed max.  For any true sample
     /// percentile `v` the result `r` satisfies `v ≤ r < 2·v` (and
     /// `r = 0` exactly when `v = 0`).  Returns 0 on an empty histogram.
+    /// The top bucket is open-ended (values ≥ 2^63 µs clamp into it, so
+    /// its nominal upper bound can underflow what it holds); a rank
+    /// landing there reports the observed max, keeping `v ≤ r`
+    /// unconditional.
     pub fn percentile_us(&self, p: f64) -> u64 {
         if self.count == 0 {
             return 0;
@@ -101,7 +105,11 @@ impl LogHistogram {
         for (i, &n) in self.buckets.iter().enumerate() {
             seen += n;
             if seen >= rank {
-                return Self::upper_bound(i).min(self.max_us);
+                return if i == BUCKETS - 1 {
+                    self.max_us
+                } else {
+                    Self::upper_bound(i).min(self.max_us)
+                };
             }
         }
         self.max_us
@@ -305,6 +313,18 @@ mod tests {
             assert_eq!(a.percentile_us(p), whole.percentile_us(p));
         }
         assert_eq!(a.cumulative(), whole.cumulative());
+    }
+
+    #[test]
+    fn top_bucket_percentile_reports_observed_max() {
+        // Values ≥ 2^63 µs clamp into the open-ended top bucket, whose
+        // nominal upper bound (2^63 - 1) sits below them; the reported
+        // percentile must still satisfy v ≤ r.
+        let mut h = LogHistogram::new();
+        h.record_us(1);
+        h.record_us(u64::MAX - 3);
+        assert_eq!(h.percentile_us(50.0), 1);
+        assert_eq!(h.percentile_us(99.0), u64::MAX - 3);
     }
 
     #[test]

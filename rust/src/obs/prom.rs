@@ -183,11 +183,66 @@ fn valid_value(s: &str) -> bool {
     matches!(s, "+Inf" | "-Inf" | "NaN") || s.parse::<f64>().is_ok()
 }
 
+/// Scan a label body starting just past the opening `{`, quote-aware:
+/// `,`, `}` and `=` inside quoted values — and `\`-escaped characters
+/// within them — do not terminate pairs (replica tier labels are
+/// comma-joined, e.g. `tier="3.25,3.50"`).  Returns the byte offset
+/// just past the closing `}`, or what went wrong.
+fn scan_labels(body: &str) -> std::result::Result<usize, String> {
+    let b = body.as_bytes();
+    let mut i = 0usize;
+    loop {
+        match b.get(i) {
+            None => return Err("unterminated label set".to_string()),
+            Some(b'}') => return Ok(i + 1),
+            Some(_) => {}
+        }
+        let start = i;
+        while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+            i += 1;
+        }
+        let name = &body[start..i];
+        if !valid_label_name(name) {
+            return Err(format!("bad label name {name:?}"));
+        }
+        if b.get(i) != Some(&b'=') {
+            return Err(format!("label {name:?} without '='"));
+        }
+        i += 1;
+        if b.get(i) != Some(&b'"') {
+            return Err(format!("unquoted value for label {name:?}"));
+        }
+        i += 1;
+        loop {
+            match b.get(i) {
+                None => return Err(format!("unterminated value for label {name:?}")),
+                Some(b'\\') => {
+                    if i + 1 >= b.len() {
+                        return Err(format!("dangling escape in label {name:?}"));
+                    }
+                    i += 2;
+                }
+                Some(b'"') => {
+                    i += 1;
+                    break;
+                }
+                Some(_) => i += 1,
+            }
+        }
+        match b.get(i) {
+            Some(b',') => i += 1,
+            Some(b'}') => return Ok(i + 1),
+            _ => return Err(format!("expected ',' or '}}' after label {name:?}")),
+        }
+    }
+}
+
 /// Validate Prometheus text-exposition line format: every non-comment,
-/// non-blank line must be `name[{label="value",…}] value`.  This is the
-/// parser stand-in for a scrape (no prometheus client exists in the
-/// offline crate cache) — unit tests hold every exposition we emit
-/// against it.
+/// non-blank line must be `name[{label="value",…}] value`, with label
+/// values scanned quote-aware so legal commas, braces and `\` escapes
+/// inside values pass.  This is the parser stand-in
+/// for a scrape (no prometheus client exists in the offline crate
+/// cache) — unit tests hold every exposition we emit against it.
 pub fn validate(text: &str) -> Result<()> {
     for (ln, line) in text.lines().enumerate() {
         let line = line.trim_end();
@@ -202,22 +257,10 @@ pub fn validate(text: &str) -> Result<()> {
             bail!("line {}: bad metric name {name_part:?}", ln + 1);
         }
         let value_part = if let Some(label_body) = rest.strip_prefix('{') {
-            let Some(close) = label_body.find('}') else {
-                bail!("line {}: unterminated label set: {line:?}", ln + 1);
-            };
-            let labels = &label_body[..close];
-            for pair in labels.split(',').filter(|p| !p.is_empty()) {
-                let Some((k, v)) = pair.split_once('=') else {
-                    bail!("line {}: label without '=': {pair:?}", ln + 1);
-                };
-                if !valid_label_name(k) {
-                    bail!("line {}: bad label name {k:?}", ln + 1);
-                }
-                if !(v.starts_with('"') && v.ends_with('"') && v.len() >= 2) {
-                    bail!("line {}: unquoted label value {v:?}", ln + 1);
-                }
+            match scan_labels(label_body) {
+                Ok(end) => label_body[end..].trim_start(),
+                Err(why) => bail!("line {}: {why}: {line:?}", ln + 1),
             }
-            label_body[close + 1..].trim_start()
         } else {
             rest.trim_start()
         };
@@ -307,5 +350,23 @@ mod tests {
         assert!(validate("name{le=unquoted} 1\n").is_err());
         assert!(validate("name notanumber\n").is_err());
         assert!(validate("name{class=\"p\"} +Inf\n").is_ok());
+    }
+
+    #[test]
+    fn validator_is_quote_aware_inside_label_values() {
+        // Comma-joined tier labels are legal exposition — the scanner
+        // must not treat the ',' inside the quotes as a pair boundary.
+        assert!(validate("m{tier=\"3.25,3.50\"} 1\n").is_ok());
+        // Nor a '}' or '=' inside the quotes as the label-set close.
+        assert!(validate("m{v=\"a}b\",w=\"c=d\"} 1\n").is_ok());
+        // Escapes produced by push_metric stay inside the value.
+        assert!(validate("m{v=\"a\\\"b\\\\\"} 1\n").is_ok());
+        // A value that never closes its quote is still rejected, even
+        // though a bare '}' appears later on the line.
+        assert!(validate("m{v=\"a,b} 1\n").is_err());
+        // Roundtrip: the emitter's escaping parses back.
+        let mut out = String::new();
+        push_metric(&mut out, "m", &[("tier", "3.25,3.50"), ("q", "a\"b\\c")], 2.0);
+        validate(&out).unwrap();
     }
 }

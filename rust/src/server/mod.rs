@@ -512,6 +512,9 @@ fn ingest(engine: &ServingEngine, core: &ServingCore<'_>,
             let s = engine.metrics.summary();
             let mut j = Json::obj();
             j.set("requests", s.n)
+                // How many retained records the p* fields cover — equal
+                // to `requests` until the bounded ring wraps.
+                .set("percentile_window", s.window as i64)
                 .set("mean_tpot_ms", s.mean_tpot_ms)
                 .set("p90_total_ms", s.p90_total_ms)
                 .set("p99_total_ms", s.p99_total_ms)
@@ -519,6 +522,10 @@ fn ingest(engine: &ServingEngine, core: &ServingCore<'_>,
                 .set("p90_eff_bits", s.p90_eff_bits)
                 .set("p99_eff_bits", s.p99_eff_bits)
                 .set("throughput_tok_s", s.throughput_tok_s)
+                // Rate over the retained window's span — tracks recent
+                // load where the lifetime figure dilutes across idle
+                // gaps.
+                .set("window_throughput_tok_s", s.window_throughput_tok_s)
                 // One serialized snapshot of every runtime counter
                 // family (transfers, weight cache, batching,
                 // speculation, KV pool) — the shared serializer behind
