@@ -37,6 +37,11 @@ cargo bench --bench serving_trace
 # and the Chrome trace emit path validated by parsing back through
 # util::json; emits results/BENCH_obs.json (schema-checked pre-write).
 cargo bench --bench obs_micro
+# Cold-start microbench: packed DPAK container (verify+mmap, zero
+# plane-byte copies — asserted) vs legacy npz (parse+copy) on a
+# synthetic store, plus tier-sliced residency at 3/4/6 bits; emits
+# results/BENCH_coldstart.json (schema-checked pre-write).
+cargo bench --bench coldstart_micro
 # Python L2 gate: the jax-level parity tests (incl. the speculative
 # verify_step_g* vs sequential-decode contract) run whenever a python
 # with jax + pytest is available; a cargo-only environment skips them so

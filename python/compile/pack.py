@@ -1,0 +1,165 @@
+"""Pack the any-precision store into the DPAK container (DESIGN.md §Artifact).
+
+Mirrors ``rust/src/anyprec/dpak.rs`` byte-for-byte:
+
+    offset 0   magic  b"DPAK"
+           4   u32 LE format version (1)
+           8   u64 LE manifest byte length
+          16   UTF-8 JSON manifest (compact, keys sorted), space-padded
+           ...zero padding to a 64-byte boundary...
+               sections, each 64-byte aligned, zero-padded between
+
+Sections are plane-major (every group's bitplane 0, then bitplane 1, …)
+followed by the LUTs by ascending bitwidth, so the byte range a
+``max_bits`` tier needs is a *prefix* of the data region.  Digests are
+``crc32:%08x`` (zlib.crc32 == the Rust ``util::digest`` IEEE CRC-32),
+and the container ``version`` is the CRC-32 of all section digest
+strings in canonical order — the Rust writer produces the identical
+version for identical weights, which is what the serve-time version
+gate compares.
+
+Usage: ``python -m compile.pack --model dpl-tiny``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import zlib
+
+import numpy as np
+
+from . import io_utils as io
+from .model import GROUPS
+
+MAGIC = b"DPAK"
+FORMAT_VERSION = 1
+ALIGN = 64
+MIN_BITS, MAX_BITS = 3, 6
+
+
+def _align_up(x: int) -> int:
+    return (x + ALIGN - 1) // ALIGN * ALIGN
+
+
+def _digest(b: bytes) -> str:
+    return "crc32:%08x" % (zlib.crc32(b) & 0xFFFFFFFF)
+
+
+def _sections(planes: dict, luts: dict) -> list[dict]:
+    """Canonical section list: plane-major, then LUTs ascending.
+
+    ``planes[g]`` is u8 ``[L, 6, out, in/8]`` (the anyprec.npz layout);
+    ``luts[g][b]`` is f32 ``[L, out, 2**b]``.
+    """
+    secs = []
+    for p in range(MAX_BITS):
+        for g in GROUPS:
+            arr = planes[g][:, p]  # [L, out, in/8], layer-major payload
+            payload = np.ascontiguousarray(arr).tobytes()
+            lb = arr.shape[1] * arr.shape[2]
+            layers = [_digest(payload[l * lb:(l + 1) * lb])
+                      for l in range(arr.shape[0])]
+            secs.append({"name": f"plane{p}/{g}", "group": g, "plane": p,
+                         "payload": payload, "digest": _digest(payload),
+                         "layers": layers})
+    for b in range(MIN_BITS, MAX_BITS + 1):
+        for g in GROUPS:
+            payload = np.ascontiguousarray(
+                luts[g][b].astype("<f4")).tobytes()
+            secs.append({"name": f"lut{b}/{g}", "group": g, "bits": b,
+                         "payload": payload, "digest": _digest(payload)})
+    return secs
+
+
+def _manifest(model: str, version: str, planes: dict, secs: list[dict]) -> dict:
+    groups = {}
+    for g in GROUPS:
+        pl = planes[g]
+        entries = [None] * MAX_BITS
+        lut_entries = {}
+        for s in secs:
+            if s["group"] != g:
+                continue
+            e = {"off": s["off"], "len": len(s["payload"]),
+                 "digest": s["digest"]}
+            if "plane" in s:
+                e["layers"] = s["layers"]
+                entries[s["plane"]] = e
+            else:
+                lut_entries[str(s["bits"])] = e
+        groups[g] = {"n_layers": int(pl.shape[0]), "out": int(pl.shape[2]),
+                     "in": int(pl.shape[3] * 8), "planes": entries,
+                     "luts": lut_entries}
+    return {"format": "dpak", "format_version": FORMAT_VERSION,
+            "model": model, "version": version, "dtype": "f32",
+            "min_bits": MIN_BITS, "max_bits": MAX_BITS, "groups": groups}
+
+
+def _dump(obj) -> str:
+    # Byte-identical to the Rust util::json dump: compact separators,
+    # keys sorted (BTreeMap ordering == lexicographic for ASCII keys).
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def write_dpak(path: str, model: str, planes: dict, luts: dict) -> str:
+    """Write one container; returns its content version string."""
+    for g in GROUPS:
+        if g not in planes or g not in luts:
+            raise ValueError(f"pack: store missing group {g}")
+        if planes[g].shape[1] != MAX_BITS:
+            raise ValueError(f"pack: {g} has {planes[g].shape[1]} planes, "
+                             f"need {MAX_BITS}")
+    secs = _sections(planes, luts)
+    version = _digest("".join(s["digest"] for s in secs).encode())
+
+    # Offsets are absolute and appear inside the manifest, whose length
+    # moves the data region: iterate to a fixed point, space-padding if
+    # the final render lands short (the Rust parser skips trailing ws).
+    mlen = 0
+    while True:
+        off = _align_up(16 + mlen)
+        for s in secs:
+            s["off"] = off
+            off = _align_up(off + len(s["payload"]))
+        rendered = _dump(_manifest(model, version, planes, secs)).encode()
+        if len(rendered) <= mlen:
+            manifest = rendered + b" " * (mlen - len(rendered))
+            break
+        mlen = len(rendered)
+
+    end = secs[-1]["off"] + len(secs[-1]["payload"])
+    out = bytearray(end)
+    out[0:4] = MAGIC
+    out[4:8] = FORMAT_VERSION.to_bytes(4, "little")
+    out[8:16] = len(manifest).to_bytes(8, "little")
+    out[16:16 + len(manifest)] = manifest
+    for s in secs:
+        out[s["off"]:s["off"] + len(s["payload"])] = s["payload"]
+    with open(path, "wb") as f:
+        f.write(out)
+    return version
+
+
+def pack_model(name: str, out_path: str | None = None) -> str:
+    """Repack ``models/<name>/anyprec.npz`` into ``anyprec.dpak``."""
+    z = io.load_npz(io.art("models", name, "anyprec.npz"))
+    planes = {g: np.asarray(z[f"planes_{g}"], dtype=np.uint8) for g in GROUPS}
+    luts = {g: {b: np.asarray(z[f"lut{b}_{g}"], dtype=np.float32)
+                for b in range(MIN_BITS, MAX_BITS + 1)} for g in GROUPS}
+    path = out_path or io.art("models", name, "anyprec.dpak")
+    version = write_dpak(path, name, planes, luts)
+    print(f"[pack] {path} version {version}")
+    return version
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="dpl-tiny")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    pack_model(args.model, args.out)
+
+
+if __name__ == "__main__":
+    main()

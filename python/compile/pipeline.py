@@ -59,6 +59,10 @@ def ensure_model(name: str) -> None:
     if io.stale([m(name, "anyprec.npz"), m(name, "fisher.npz")],
                 m(name, "ckpt.npz")):
         run("compile.quantize", "--model", name)
+    # Packed single-file container (mmap zero-copy serving); the Rust
+    # loader prefers it over the npz when present.
+    if io.stale(m(name, "anyprec.dpak"), m(name, "anyprec.npz")):
+        run("compile.pack", "--model", name)
 
 
 def ensure_calib(name: str, budget: int, calib_set: str = "synthweb",

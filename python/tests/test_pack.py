@@ -1,0 +1,116 @@
+"""DPAK packer invariants: header, canonical layout, digests, determinism."""
+
+import json
+import zlib
+
+import numpy as np
+import pytest
+
+from compile.model import GROUPS
+from compile.pack import (ALIGN, MAX_BITS, MIN_BITS, _dump, write_dpak)
+
+
+def _synth_store(rng, L=2, out=8, n_in=16):
+    planes = {g: rng.integers(0, 256, size=(L, MAX_BITS, out, n_in // 8),
+                              dtype=np.uint8)
+              for g in GROUPS}
+    luts = {g: {b: rng.standard_normal((L, out, 2 ** b)).astype(np.float32)
+                for b in range(MIN_BITS, MAX_BITS + 1)}
+            for g in GROUPS}
+    return planes, luts
+
+
+def _parse(path):
+    raw = open(path, "rb").read()
+    assert raw[0:4] == b"DPAK"
+    assert int.from_bytes(raw[4:8], "little") == 1
+    mlen = int.from_bytes(raw[8:16], "little")
+    manifest = json.loads(raw[16:16 + mlen].decode())
+    return raw, manifest
+
+
+def test_container_layout_and_digests(tmp_path):
+    rng = np.random.default_rng(7)
+    planes, luts = _synth_store(rng)
+    path = str(tmp_path / "t.dpak")
+    version = write_dpak(path, "toy", planes, luts)
+    raw, man = _parse(path)
+    assert man["format"] == "dpak" and man["model"] == "toy"
+    assert man["version"] == version and version.startswith("crc32:")
+    assert man["min_bits"] == MIN_BITS and man["max_bits"] == MAX_BITS
+    assert set(man["groups"]) == set(GROUPS)
+    # Every recorded section: aligned, in bounds, digest-true, and its
+    # payload byte-equal to the source arrays.
+    for g in GROUPS:
+        gj = man["groups"][g]
+        assert (gj["n_layers"], gj["out"], gj["in"]) == (2, 8, 16)
+        for p, e in enumerate(gj["planes"]):
+            assert e["off"] % ALIGN == 0
+            payload = raw[e["off"]:e["off"] + e["len"]]
+            assert payload == np.ascontiguousarray(planes[g][:, p]).tobytes()
+            assert e["digest"] == "crc32:%08x" % zlib.crc32(payload)
+            lb = e["len"] // gj["n_layers"]
+            for l, ld in enumerate(e["layers"]):
+                chunk = payload[l * lb:(l + 1) * lb]
+                assert ld == "crc32:%08x" % zlib.crc32(chunk)
+        for b in range(MIN_BITS, MAX_BITS + 1):
+            e = gj["luts"][str(b)]
+            payload = raw[e["off"]:e["off"] + e["len"]]
+            assert payload == luts[g][b].astype("<f4").tobytes()
+            assert e["digest"] == "crc32:%08x" % zlib.crc32(payload)
+
+
+def test_tier_slice_is_a_prefix(tmp_path):
+    """Plane-major layout: the planes a 4-bit tier needs (0..3, the
+    dominant bytes) all end before any 5/6-bit plane begins, and the
+    LUT region is likewise ordered by ascending bitwidth — higher
+    precision is pure appended delta in each region."""
+    rng = np.random.default_rng(8)
+    planes, luts = _synth_store(rng)
+    path = str(tmp_path / "t.dpak")
+    write_dpak(path, "toy", planes, luts)
+    _, man = _parse(path)
+    lo_end, hi_start = 0, 1 << 60
+    lut_ends = {b: 0 for b in range(MIN_BITS, MAX_BITS + 1)}
+    lut_starts = {b: 1 << 60 for b in range(MIN_BITS, MAX_BITS + 1)}
+    for g in GROUPS:
+        gj = man["groups"][g]
+        for p, e in enumerate(gj["planes"]):
+            if p < 4:
+                lo_end = max(lo_end, e["off"] + e["len"])
+            else:
+                hi_start = min(hi_start, e["off"])
+        for b in range(MIN_BITS, MAX_BITS + 1):
+            e = gj["luts"][str(b)]
+            lut_starts[b] = min(lut_starts[b], e["off"])
+            lut_ends[b] = max(lut_ends[b], e["off"] + e["len"])
+    assert lo_end <= hi_start
+    # LUTs live after every plane, ascending by bitwidth.
+    assert hi_start <= min(lut_starts.values())
+    for b in range(MIN_BITS, MAX_BITS):
+        assert lut_ends[b] <= lut_starts[b + 1]
+
+
+def test_version_is_content_identity(tmp_path):
+    """Same weights -> same version; one flipped bit -> different."""
+    rng = np.random.default_rng(9)
+    planes, luts = _synth_store(rng)
+    v1 = write_dpak(str(tmp_path / "a.dpak"), "toy", planes, luts)
+    v2 = write_dpak(str(tmp_path / "b.dpak"), "renamed", planes, luts)
+    assert v1 == v2  # model name is not part of the content identity
+    planes["wq"][0, 0, 0, 0] ^= 1
+    v3 = write_dpak(str(tmp_path / "c.dpak"), "toy", planes, luts)
+    assert v3 != v1
+
+
+def test_manifest_dump_is_compact_sorted():
+    s = _dump({"b": 1, "a": {"z": True, "y": [1, 2]}})
+    assert s == '{"a":{"y":[1,2],"z":true},"b":1}'
+
+
+def test_missing_group_refused(tmp_path):
+    rng = np.random.default_rng(10)
+    planes, luts = _synth_store(rng)
+    del planes["wd"]
+    with pytest.raises(ValueError, match="missing group"):
+        write_dpak(str(tmp_path / "t.dpak"), "toy", planes, luts)

@@ -1,0 +1,169 @@
+//! Cold-start microbench (DESIGN.md §Artifact) — entirely artifact-free.
+//!
+//! Builds a synthetic full-precision store, writes it both ways (legacy
+//! `anyprec.npz` and packed `anyprec.dpak`), and measures what a replica
+//! pays to go from file to servable store:
+//!
+//!   * wall ms: `AnyPrecStore::load` (npz parse + copy every byte) vs
+//!     `AnyPrecStore::load_dpak` (manifest + digest verify, then mmap —
+//!     zero plane-byte copies);
+//!   * bytes mapped vs bytes copied, from [`LoadStats`] — the zero-copy
+//!     contract is *asserted*, not just reported;
+//!   * tier-slice residency: `load_slice(max_bits)` for 3/4/6 bits maps
+//!     strictly fewer bytes the lower the tier.
+//!
+//! Results land in `results/BENCH_coldstart.json`, schema-checked before
+//! the write (the `serving_trace` idiom).
+
+use anyhow::{bail, Context, Result};
+use dp_llm::anyprec::{dpak, AnyPrecStore, GROUPS, MAX_BITS, MIN_BITS};
+use dp_llm::bench_support as bs;
+use dp_llm::util::json::Json;
+use dp_llm::util::npz::{write_npz, NpyData};
+use dp_llm::util::rng::Rng;
+use dp_llm::util::stats::bench;
+
+/// Synthetic store geometry: big enough that parse/copy cost dominates
+/// timer noise, small enough for CI (~5.5 MB of planes + ~3.4 MB LUTs).
+const L: usize = 4;
+const OUT: usize = 256;
+const IN: usize = 1024;
+
+fn write_synthetic_npz(path: &str) -> Result<()> {
+    let mut rng = Rng::new(0xC01D);
+    let mut members: Vec<(String, Vec<usize>, NpyData)> = Vec::new();
+    for g in GROUPS {
+        let n = L * 6 * OUT * (IN / 8);
+        let planes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        members.push((format!("planes_{g}"), vec![L, 6, OUT, IN / 8],
+                      NpyData::U8(planes)));
+        for b in MIN_BITS..=MAX_BITS {
+            let w = 1usize << b;
+            let lut: Vec<f32> =
+                (0..L * OUT * w).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            members.push((format!("lut{b}_{g}"), vec![L, OUT, w],
+                          NpyData::F32(lut)));
+        }
+    }
+    let refs: Vec<(&str, &[usize], NpyData)> = members
+        .iter()
+        .map(|(n, s, d)| (n.as_str(), s.as_slice(), d.clone()))
+        .collect();
+    write_npz(path, &refs)
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join("dpllm_coldstart_micro");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let npz = dir.join("anyprec.npz").to_string_lossy().into_owned();
+    let dpk = dir.join("anyprec.dpak").to_string_lossy().into_owned();
+
+    write_synthetic_npz(&npz).expect("write synthetic npz");
+    let store = AnyPrecStore::load(&npz).expect("npz load");
+    let meta = dpak::write(&store, "bench", &dpk).expect("pack");
+    println!("packed synthetic store: version {} ({} groups, {}x{}x{})",
+             meta.version, GROUPS.len(), L, OUT, IN);
+
+    // ---- cold load wall time: npz parse+copy vs dpak verify+mmap ----------
+    let npz_load = bench("coldstart npz load", 3, 200.0, || {
+        let s = AnyPrecStore::load(&npz).unwrap();
+        assert!(s.stats().plane_bytes_copied > 0);
+    });
+    println!("{}", npz_load.report());
+    let dpak_load = bench("coldstart dpak load", 3, 200.0, || {
+        let s = AnyPrecStore::load_dpak(&dpk).unwrap();
+        assert_eq!(s.stats().plane_bytes_copied, 0,
+                   "dpak load must copy zero plane bytes");
+    });
+    println!("{}", dpak_load.report());
+    let speedup = npz_load.median_ns / dpak_load.median_ns;
+
+    let npz_stats = AnyPrecStore::load(&npz).unwrap().stats();
+    let dpak_stats = AnyPrecStore::load_dpak(&dpk).unwrap().stats();
+    println!(
+        "npz: copied {:.2} MB planes + {:.2} MB luts; dpak: mapped {:.2} MB \
+         planes, copied 0 B ({speedup:.1}x faster cold start)",
+        npz_stats.plane_bytes_copied as f64 / 1e6,
+        npz_stats.lut_bytes_copied as f64 / 1e6,
+        dpak_stats.plane_bytes_mapped as f64 / 1e6,
+    );
+
+    // ---- tier-sliced residency: bytes a max_bits tier touches -------------
+    let mut slice_rows = Vec::new();
+    let mut slices = Json::obj();
+    let full_bytes = dpak_stats.plane_bytes_mapped + dpak_stats.lut_bytes_mapped
+        + dpak_stats.lut_bytes_copied;
+    let mut prev = 0u64;
+    for b in [3u8, 4, 6] {
+        let s = AnyPrecStore::load_slice(&dpk, b).unwrap();
+        let st = s.stats();
+        assert_eq!(st.plane_bytes_copied, 0, "slice load copied plane bytes");
+        let total = st.plane_bytes_mapped + st.lut_bytes_mapped
+            + st.lut_bytes_copied;
+        assert!(total > prev, "slice {b} does not grow residency");
+        prev = total;
+        let mut e = Json::obj();
+        e.set("plane_bytes_mapped", st.plane_bytes_mapped as f64)
+            .set("lut_bytes", (st.lut_bytes_mapped + st.lut_bytes_copied) as f64)
+            .set("total_bytes", total as f64)
+            .set("fraction_of_full", total as f64 / full_bytes as f64);
+        slices.set(&format!("max_bits_{b}"), e);
+        slice_rows.push(vec![
+            format!("tier slice max_bits={b}"),
+            format!("{:.2} MB resident ({:.0}% of full)",
+                    total as f64 / 1e6, 100.0 * total as f64 / full_bytes as f64),
+        ]);
+    }
+
+    let mut j = Json::obj();
+    j.set("bench", "coldstart")
+        .set("layers", L).set("out", OUT).set("in", IN)
+        .set("npz_load_ms", npz_load.median_ns / 1e6)
+        .set("dpak_load_ms", dpak_load.median_ns / 1e6)
+        .set("speedup_dpak_vs_npz", speedup)
+        .set("npz_bytes_copied",
+             (npz_stats.plane_bytes_copied + npz_stats.lut_bytes_copied) as f64)
+        .set("dpak_plane_bytes_mapped", dpak_stats.plane_bytes_mapped as f64)
+        .set("dpak_plane_bytes_copied", dpak_stats.plane_bytes_copied as f64)
+        .set("slices", slices);
+    schema_check(&j).expect("coldstart bench schema");
+    let _ = std::fs::create_dir_all("results");
+    let _ = std::fs::write("results/BENCH_coldstart.json", j.dump());
+    println!("wrote results/BENCH_coldstart.json");
+
+    let mut rows = vec![
+        vec!["npz load (parse+copy)".into(),
+             format!("{:.2} ms", npz_load.median_ns / 1e6)],
+        vec!["dpak load (verify+mmap)".into(),
+             format!("{:.2} ms ({speedup:.1}x)", dpak_load.median_ns / 1e6)],
+        vec!["dpak plane bytes copied".into(), "0 (asserted)".into()],
+    ];
+    rows.extend(slice_rows);
+    bs::emit("coldstart_micro",
+             "Cold start: packed container vs legacy npz (synthetic store)",
+             &["case", "value"], &rows);
+}
+
+/// Pre-write schema gate: every required key present, finite, sane.
+fn schema_check(j: &Json) -> Result<()> {
+    j.req("bench")?.as_str().context("bench")?;
+    for key in ["layers", "out", "in", "npz_load_ms", "dpak_load_ms",
+                "speedup_dpak_vs_npz", "npz_bytes_copied",
+                "dpak_plane_bytes_mapped", "dpak_plane_bytes_copied"] {
+        let v = j.req(key)?.as_f64().with_context(|| key.to_string())?;
+        if !v.is_finite() || v < 0.0 {
+            bail!("coldstart schema: {key} = {v} invalid");
+        }
+    }
+    if j.req("dpak_plane_bytes_copied")?.as_f64()? != 0.0 {
+        bail!("coldstart schema: dpak load copied plane bytes");
+    }
+    let s = j.req("slices")?;
+    for b in [3u8, 4, 6] {
+        let frac = s.req(&format!("max_bits_{b}"))?.f64_of("fraction_of_full")?;
+        if !(0.0..=1.0 + 1e-9).contains(&frac) {
+            bail!("coldstart schema: slice {b} fraction {frac} out of range");
+        }
+    }
+    Ok(())
+}

@@ -12,7 +12,7 @@
 
 use std::collections::BTreeMap;
 
-use dp_llm::anyprec::{GroupStore, MAX_BITS, MIN_BITS};
+use dp_llm::anyprec::{Codes, GroupStore, MAX_BITS, MIN_BITS};
 use dp_llm::bench_support as bs;
 use dp_llm::model::ModelAssets;
 use dp_llm::util::json::Json;
@@ -30,7 +30,7 @@ fn synthetic_store(l: usize, out: usize, n_in: usize) -> GroupStore {
         let w = 1usize << b;
         luts.insert(b, (0..l * out * w).map(|_| rng.f32() * 2.0 - 1.0).collect());
     }
-    GroupStore { planes, n_layers: l, out_dim: out, in_dim: n_in, luts }
+    GroupStore::from_layer_major(&planes, l, out, n_in, luts).unwrap()
 }
 
 fn kernel_json(kernel: &str, bits: u8, median_ns: f64, bytes_out: usize) -> Json {
@@ -79,19 +79,19 @@ fn main() {
             speedup_b4 = naive.median_ns / word.median_ns;
         }
         if bits > MIN_BITS {
-            let mut base = vec![0u8; n];
+            let mut base = Codes::new();
             store.dequant_codes_into(0, bits - 1, &mut base).unwrap();
-            let mut codes = vec![0u8; n];
+            let mut codes = Codes::new();
             // The reset memcpy is measurement scaffolding (real refines
             // mutate in place, once); time it separately and subtract so
             // the recorded number is the refine+lut cost alone.
             let reset = bench(&format!("codes reset memcpy b={bits}"), 8, 20.0, || {
-                codes.copy_from_slice(&base);
+                codes.copy_from(&base);
             });
             let refine = bench(
                 &format!("dequant refine {}->{bits}", bits - 1), 8, 20.0, || {
-                    codes.copy_from_slice(&base);
-                    store.refine_codes_into(0, bits - 1, &mut codes).unwrap();
+                    codes.copy_from(&base);
+                    store.refine_codes_into(0, &mut codes).unwrap();
                     store.lut_map_into(0, bits, &codes, &mut buf).unwrap();
                 });
             let refine_ns = (refine.median_ns - reset.median_ns).max(0.0);
@@ -133,10 +133,15 @@ fn main() {
         for bits in [3u8, 4, 5, 6] {
             let entry = manifest.entry(model, &format!("anyprec_gemv_{bits}")).unwrap();
             let exe = rt.load(&entry).unwrap();
+            let mut layer_planes = Vec::with_capacity(6 * out_d * in_d / 8);
+            for p in 0..6 {
+                layer_planes.extend_from_slice(store.plane_layer(p, 0).unwrap());
+            }
             let planes = xla::Literal::create_from_shape_and_untyped_data(
                 xla::ElementType::U8, &[6, out_d, in_d / 8],
-                &store.planes[..6 * out_d * in_d / 8]).unwrap();
-            let lut = xla::Literal::vec1(&store.luts[&bits][..out_d * (1 << bits)])
+                &layer_planes).unwrap();
+            let lut = xla::Literal::vec1(
+                    &store.lut(bits).unwrap()[..out_d * (1 << bits)])
                 .reshape(&[out_d as i64, 1i64 << bits]).unwrap();
             let xl = xla::Literal::vec1(&x);
             let r = bench(&format!("anyprec_gemv_{bits} (pallas/hlo)"), 8, 20.0, || {

@@ -1,0 +1,874 @@
+//! DPAK — the versioned single-file container for the any-precision
+//! weight store (DESIGN.md §Artifact).
+//!
+//! ```text
+//! offset 0   magic  b"DPAK"
+//!        4   u32 LE format version (currently 1)
+//!        8   u64 LE manifest byte length
+//!       16   UTF-8 JSON manifest
+//!        ...zero padding to a 64-byte boundary...
+//!            sections, each 64-byte aligned, zero-padded between
+//! ```
+//!
+//! Sections are laid out **plane-major**: every group's bitplane 0
+//! (MSB), then every group's bitplane 1, … then the LUTs by ascending
+//! bitwidth.  With nested-prefix codes (PR 2: `code_{b+1} = code_b << 1
+//! | bit_b`) this makes higher bitwidths *pure appended deltas*: the
+//! planes a `max_bits` tier needs are a prefix of the plane region
+//! (the dominant bytes), and the (small) LUT region is likewise
+//! ordered ascending — a node touches only what its precision tier
+//! serves.
+//!
+//! The manifest (wolfpack-style: name/version/arch + per-entry offsets
+//! and digests) records for every section its absolute byte offset,
+//! length, and CRC-32 digest, plus per-layer digests inside each plane
+//! section (partial-fetch validation).  `version` is the content
+//! identity: the CRC-32 of all section digest strings in canonical
+//! order — two containers with identical weights get identical
+//! versions no matter when or where they were packed.  The same bytes
+//! are produced by `python/compile/pack.py`; the cross-language digest
+//! contract is pinned by `util::digest` known-vector tests.
+//!
+//! Loading ([`load`]) verifies the manifest geometry and every mapped
+//! section digest, then hands out plane/LUT ranges **borrowed from one
+//! read-only mmap** — zero plane-byte copies, one physical mapping
+//! shared by every replica view.  All failure modes are typed
+//! [`DpakError`]s: fleet boot refuses cleanly instead of panicking.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::digest::{crc32, digest_str};
+use crate::util::json::Json;
+use crate::util::mmap::Mmap;
+
+use super::{
+    AnyPrecStore, GroupStore, LoadStats, LutBytes, PlaneBytes, GROUPS, MAX_BITS,
+    MIN_BITS,
+};
+
+pub const DPAK_MAGIC: [u8; 4] = *b"DPAK";
+pub const DPAK_FORMAT_VERSION: u32 = 1;
+/// Section alignment: cache-line / SIMD friendly, and guarantees the
+/// f32 LUT reinterpret is aligned on any page-aligned mapping.
+pub const DPAK_ALIGN: usize = 64;
+
+/// Identity of a loaded DPAK container (the serve-time version gate
+/// compares this against what the AOT manifest recorded at pack time).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DpakMeta {
+    pub model: String,
+    /// Content version: `crc32:` over all section digests.
+    pub version: String,
+    pub format_version: u32,
+    /// The precision ceiling this *view* resides at (≤ the container's).
+    pub max_bits: u8,
+}
+
+/// Why a DPAK container was refused.  Typed so fleet boot / serve can
+/// branch (and tests can pin) the exact failure, and `Display` gives the
+/// operator the artifact-level story.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DpakError {
+    BadMagic,
+    UnsupportedFormatVersion(u32),
+    /// The file ends before `what` does.
+    Truncated { what: String, need: usize, have: usize },
+    /// The manifest JSON is missing/malformed/inconsistent.
+    Manifest(String),
+    /// A section's recorded offset/length disagrees with the geometry
+    /// the manifest itself declares.
+    OffsetMismatch { section: String, detail: String },
+    /// Stored bytes do not hash to the recorded digest (corruption).
+    DigestMismatch { section: String, want: String, got: String },
+    /// Serve-time identity check failed (wrong model or stale version).
+    VersionGate { field: String, want: String, got: String },
+}
+
+impl fmt::Display for DpakError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DpakError::BadMagic => write!(f, "not a DPAK container (bad magic)"),
+            DpakError::UnsupportedFormatVersion(v) => {
+                write!(f, "DPAK format version {v} not supported (reader speaks \
+                           {DPAK_FORMAT_VERSION})")
+            }
+            DpakError::Truncated { what, need, have } => {
+                write!(f, "truncated container: {what} needs {need} bytes, \
+                           file has {have}")
+            }
+            DpakError::Manifest(d) => write!(f, "bad DPAK manifest: {d}"),
+            DpakError::OffsetMismatch { section, detail } => {
+                write!(f, "section {section}: offset/length mismatch — {detail}")
+            }
+            DpakError::DigestMismatch { section, want, got } => {
+                write!(f, "section {section}: digest mismatch (manifest {want}, \
+                           stored bytes {got}) — container is corrupt")
+            }
+            DpakError::VersionGate { field, want, got } => {
+                write!(f, "version gate refused: {field} is '{got}', deployment \
+                           expects '{want}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DpakError {}
+
+fn align_up(x: usize) -> usize {
+    (x + DPAK_ALIGN - 1) / DPAK_ALIGN * DPAK_ALIGN
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+
+struct Section {
+    /// `plane{p}/{group}` or `lut{b}/{group}` — error/manifest naming.
+    kind: SectionKind,
+    payload: Vec<u8>,
+    digest: String,
+    /// Per-layer digests (plane sections only).
+    layers: Vec<String>,
+    off: usize,
+}
+
+enum SectionKind {
+    Plane { group: &'static str, p: usize },
+    Lut { group: &'static str, bits: u8 },
+}
+
+/// Pack a (full-precision) store into a DPAK container at `path`.
+/// Returns the identity the container now carries.
+pub fn write(store: &AnyPrecStore, model: &str, path: &str) -> Result<DpakMeta> {
+    if store.max_bits() != MAX_BITS {
+        bail!("pack requires a full-precision store (max_bits {}), got {}",
+              MAX_BITS, store.max_bits());
+    }
+    for g in GROUPS {
+        store.group(g).with_context(|| "pack: store missing a group")?;
+    }
+    // Canonical section order: plane-major across groups, then LUTs by
+    // ascending bitwidth — the tier-slice prefix property.
+    let mut sections: Vec<Section> = Vec::new();
+    for p in 0..MAX_BITS as usize {
+        for g in GROUPS {
+            let gs = store.group(g)?;
+            let payload = gs.planes[p].as_slice().to_vec();
+            let layer_bytes = gs.out_dim * gs.in_dim / 8;
+            let layers = (0..gs.n_layers)
+                .map(|l| digest_str(&payload[l * layer_bytes..(l + 1) * layer_bytes]))
+                .collect();
+            let digest = digest_str(&payload);
+            sections.push(Section {
+                kind: SectionKind::Plane { group: g, p },
+                payload, digest, layers, off: 0,
+            });
+        }
+    }
+    for b in MIN_BITS..=MAX_BITS {
+        for g in GROUPS {
+            let gs = store.group(g)?;
+            let payload: Vec<u8> =
+                gs.lut(b)?.iter().flat_map(|x| x.to_le_bytes()).collect();
+            let digest = digest_str(&payload);
+            sections.push(Section {
+                kind: SectionKind::Lut { group: g, bits: b },
+                payload, digest, layers: Vec::new(), off: 0,
+            });
+        }
+    }
+    // Content version: digest of the section digests in canonical order.
+    let mut ver = String::new();
+    for s in &sections {
+        ver.push_str(&s.digest);
+    }
+    let version = format!("crc32:{:08x}", crc32(ver.as_bytes()));
+
+    // Manifest length and section offsets depend on each other (offsets
+    // are absolute and appear inside the manifest); iterate to a fixed
+    // point, padding with trailing spaces if the render lands short.
+    let mut mlen = 0usize;
+    let manifest_bytes = loop {
+        let data_start = align_up(16 + mlen);
+        let mut off = data_start;
+        for s in sections.iter_mut() {
+            s.off = off;
+            off = align_up(off + s.payload.len());
+        }
+        let rendered = render_manifest(store, model, &version, &sections).dump();
+        if rendered.len() <= mlen {
+            let mut bytes = rendered.into_bytes();
+            bytes.resize(mlen, b' '); // Json::parse skips trailing ws
+            break bytes;
+        }
+        mlen = rendered.len();
+    };
+
+    let data_start = align_up(16 + manifest_bytes.len());
+    let end = sections
+        .last()
+        .map(|s| s.off + s.payload.len())
+        .unwrap_or(data_start);
+    let mut out = vec![0u8; end];
+    out[0..4].copy_from_slice(&DPAK_MAGIC);
+    out[4..8].copy_from_slice(&DPAK_FORMAT_VERSION.to_le_bytes());
+    out[8..16].copy_from_slice(&(manifest_bytes.len() as u64).to_le_bytes());
+    out[16..16 + manifest_bytes.len()].copy_from_slice(&manifest_bytes);
+    for s in &sections {
+        out[s.off..s.off + s.payload.len()].copy_from_slice(&s.payload);
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {path}"))?;
+    Ok(DpakMeta {
+        model: model.to_string(),
+        version,
+        format_version: DPAK_FORMAT_VERSION,
+        max_bits: MAX_BITS,
+    })
+}
+
+fn render_manifest(store: &AnyPrecStore, model: &str, version: &str,
+                   sections: &[Section]) -> Json {
+    let mut groups = Json::obj();
+    for g in GROUPS {
+        let gs = store.group(g).expect("checked by write()");
+        let mut planes = vec![Json::Null; MAX_BITS as usize];
+        let mut luts = Json::obj();
+        for s in sections {
+            match &s.kind {
+                SectionKind::Plane { group, p } if *group == g => {
+                    let mut e = Json::obj();
+                    e.set("off", s.off).set("len", s.payload.len());
+                    e.set("digest", s.digest.as_str());
+                    e.set("layers",
+                          Json::Arr(s.layers.iter()
+                              .map(|d| Json::Str(d.clone())).collect()));
+                    planes[*p] = e;
+                }
+                SectionKind::Lut { group, bits } if *group == g => {
+                    let mut e = Json::obj();
+                    e.set("off", s.off).set("len", s.payload.len());
+                    e.set("digest", s.digest.as_str());
+                    luts.set(&bits.to_string(), e);
+                }
+                _ => {}
+            }
+        }
+        let mut gj = Json::obj();
+        gj.set("n_layers", gs.n_layers)
+            .set("out", gs.out_dim)
+            .set("in", gs.in_dim)
+            .set("planes", Json::Arr(planes))
+            .set("luts", luts);
+        groups.set(g, gj);
+    }
+    let mut m = Json::obj();
+    m.set("format", "dpak")
+        .set("format_version", DPAK_FORMAT_VERSION as usize)
+        .set("model", model)
+        .set("version", version)
+        .set("dtype", "f32")
+        .set("min_bits", MIN_BITS as usize)
+        .set("max_bits", MAX_BITS as usize)
+        .set("groups", groups);
+    m
+}
+
+// ---------------------------------------------------------------------------
+// Loader
+// ---------------------------------------------------------------------------
+
+struct Parsed {
+    map: Arc<Mmap>,
+    manifest: Json,
+    format_version: u32,
+}
+
+fn parse_container(path: &str) -> Result<Parsed> {
+    let map = Arc::new(Mmap::open(path)?);
+    let bytes: &[u8] = &map;
+    if bytes.len() < 16 {
+        return Err(DpakError::Truncated {
+            what: "header".into(), need: 16, have: bytes.len(),
+        }.into());
+    }
+    if bytes[0..4] != DPAK_MAGIC {
+        return Err(DpakError::BadMagic.into());
+    }
+    let format_version =
+        u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+    if format_version != DPAK_FORMAT_VERSION {
+        return Err(DpakError::UnsupportedFormatVersion(format_version).into());
+    }
+    let mlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    if 16 + mlen > bytes.len() {
+        return Err(DpakError::Truncated {
+            what: "manifest".into(), need: 16 + mlen, have: bytes.len(),
+        }.into());
+    }
+    let text = std::str::from_utf8(&bytes[16..16 + mlen])
+        .map_err(|e| DpakError::Manifest(format!("manifest not utf-8: {e}")))?;
+    let manifest = Json::parse(text)
+        .map_err(|e| DpakError::Manifest(format!("manifest json: {e}")))?;
+    if manifest.str_of("format").unwrap_or_default() != "dpak" {
+        return Err(DpakError::Manifest("format field is not 'dpak'".into()).into());
+    }
+    Ok(Parsed { map, manifest, format_version })
+}
+
+/// One manifest section entry, bounds- and digest-checked against the
+/// mapping.  Returns the validated (off, len).
+fn checked_section(map: &Mmap, entry: &Json, name: &str,
+                   want_len: usize) -> Result<(usize, usize)> {
+    let off = entry
+        .usize_of("off")
+        .map_err(|e| DpakError::Manifest(format!("{name}: {e}")))?;
+    let len = entry
+        .usize_of("len")
+        .map_err(|e| DpakError::Manifest(format!("{name}: {e}")))?;
+    if len != want_len {
+        return Err(DpakError::OffsetMismatch {
+            section: name.into(),
+            detail: format!("manifest length {len}, geometry wants {want_len}"),
+        }.into());
+    }
+    if off % DPAK_ALIGN != 0 || off < 16 {
+        return Err(DpakError::OffsetMismatch {
+            section: name.into(),
+            detail: format!("offset {off} not {DPAK_ALIGN}-byte aligned"),
+        }.into());
+    }
+    if off + len > map.len() {
+        return Err(DpakError::Truncated {
+            what: format!("section {name}"), need: off + len, have: map.len(),
+        }.into());
+    }
+    let want = entry
+        .str_of("digest")
+        .map_err(|e| DpakError::Manifest(format!("{name}: {e}")))?;
+    let got = digest_str(&map[off..off + len]);
+    if got != want {
+        return Err(DpakError::DigestMismatch {
+            section: name.into(), want, got,
+        }.into());
+    }
+    Ok((off, len))
+}
+
+/// Validate and map a DPAK container, residing only the planes/LUTs a
+/// `max_bits` precision tier needs.  Zero plane bytes are copied; every
+/// resided section's digest is verified before the store is handed out.
+pub fn load(path: &str, max_bits: u8) -> Result<AnyPrecStore> {
+    if !(MIN_BITS..=MAX_BITS).contains(&max_bits) {
+        bail!("load_slice max_bits {max_bits} out of range {MIN_BITS}..={MAX_BITS}");
+    }
+    if cfg!(target_endian = "big") {
+        bail!("DPAK containers are little-endian; big-endian hosts unsupported");
+    }
+    let t0 = std::time::Instant::now();
+    let parsed = parse_container(path).with_context(|| format!("loading {path}"))?;
+    let Parsed { map, manifest, format_version } = parsed;
+    let file_max: u8 = manifest.usize_of("max_bits").unwrap_or(MAX_BITS as usize) as u8;
+    if max_bits > file_max {
+        return Err(DpakError::Manifest(format!(
+            "container holds {file_max} bits, slice wants {max_bits}"
+        )).into());
+    }
+    let gobj = manifest
+        .req("groups")
+        .map_err(|e| DpakError::Manifest(e.to_string()))?;
+    let mut groups = BTreeMap::new();
+    let mut stats = LoadStats::default();
+    for g in GROUPS {
+        let gj = gobj
+            .get(g)
+            .ok_or_else(|| DpakError::Manifest(format!("missing group {g}")))?;
+        let n_layers = gj.usize_of("n_layers")
+            .map_err(|e| DpakError::Manifest(format!("{g}: {e}")))?;
+        let out_dim = gj.usize_of("out")
+            .map_err(|e| DpakError::Manifest(format!("{g}: {e}")))?;
+        let in_dim = gj.usize_of("in")
+            .map_err(|e| DpakError::Manifest(format!("{g}: {e}")))?;
+        if in_dim % 8 != 0 || n_layers == 0 || out_dim == 0 || in_dim == 0 {
+            return Err(DpakError::Manifest(format!(
+                "group {g}: degenerate geometry [L={n_layers}, out={out_dim}, \
+                 in={in_dim}]"
+            )).into());
+        }
+        let parr = gj.req("planes")
+            .and_then(|p| p.as_arr())
+            .map_err(|e| DpakError::Manifest(format!("{g} planes: {e}")))?;
+        if parr.len() != file_max as usize {
+            return Err(DpakError::Manifest(format!(
+                "group {g}: {} plane entries, container max_bits {file_max}",
+                parr.len()
+            )).into());
+        }
+        let plane_len = n_layers * out_dim * in_dim / 8;
+        let mut planes = Vec::with_capacity(max_bits as usize);
+        for (p, entry) in parr.iter().enumerate().take(max_bits as usize) {
+            let name = format!("plane{p}/{g}");
+            let (off, len) = checked_section(&map, entry, &name, plane_len)?;
+            let layers = entry.req("layers").and_then(|l| l.as_arr())
+                .map_err(|e| DpakError::Manifest(format!("{name}: {e}")))?;
+            if layers.len() != n_layers {
+                return Err(DpakError::Manifest(format!(
+                    "{name}: {} layer digests, {n_layers} layers", layers.len()
+                )).into());
+            }
+            stats.plane_bytes_mapped += len as u64;
+            planes.push(PlaneBytes::Mapped { map: map.clone(), off, len });
+        }
+        let lobj = gj.req("luts")
+            .map_err(|e| DpakError::Manifest(format!("{g}: {e}")))?;
+        let mut luts = BTreeMap::new();
+        for b in MIN_BITS..=max_bits {
+            let name = format!("lut{b}/{g}");
+            let entry = lobj.get(&b.to_string())
+                .ok_or_else(|| DpakError::Manifest(format!("missing {name}")))?;
+            let lut_len = n_layers * out_dim * (1usize << b) * 4;
+            let (off, len) = checked_section(&map, entry, &name, lut_len)?;
+            let base = map.as_ptr() as usize + off;
+            if base % 4 == 0 {
+                stats.lut_bytes_mapped += len as u64;
+                luts.insert(b, LutBytes::Mapped { map: map.clone(), off, n: len / 4 });
+            } else {
+                // Owned-read fallback whose buffer landed unaligned:
+                // copy this LUT rather than reinterpret misaligned f32s.
+                let v: Vec<f32> = map[off..off + len]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                stats.lut_bytes_copied += len as u64;
+                luts.insert(b, LutBytes::Owned(Arc::from(v)));
+            }
+        }
+        let gs = GroupStore {
+            planes, n_layers, out_dim, in_dim, luts, max_bits,
+        };
+        gs.validate().with_context(|| format!("group {g} of {path}"))?;
+        groups.insert(g.to_string(), gs);
+    }
+    let meta = DpakMeta {
+        model: manifest.str_of("model")
+            .map_err(|e| DpakError::Manifest(e.to_string()))?,
+        version: manifest.str_of("version")
+            .map_err(|e| DpakError::Manifest(e.to_string()))?,
+        format_version,
+        max_bits,
+    };
+    stats.load_ms = t0.elapsed().as_secs_f64() * 1e3;
+    stats.mapped = map.is_mapped();
+    Ok(AnyPrecStore { groups, meta: Some(meta), map: Some(map), stats })
+}
+
+/// Serve-time identity check: the container must carry the expected
+/// model name (and, when the AOT manifest recorded one at pack time, the
+/// exact content version).  Refusal is the typed
+/// [`DpakError::VersionGate`] — fleet boot stops before touching
+/// devices, instead of serving stale or foreign weights.
+pub fn check_version_gate(meta: &DpakMeta, model: &str,
+                          expect_version: Option<&str>) -> Result<()> {
+    if meta.model != model {
+        return Err(DpakError::VersionGate {
+            field: "model".into(),
+            want: model.to_string(),
+            got: meta.model.clone(),
+        }.into());
+    }
+    if let Some(v) = expect_version {
+        if meta.version != v {
+            return Err(DpakError::VersionGate {
+                field: "version".into(),
+                want: v.to_string(),
+                got: meta.version.clone(),
+            }.into());
+        }
+    }
+    Ok(())
+}
+
+/// Deep-inspect a container: verify EVERY section digest *and* the
+/// per-layer digests inside each plane section, and return a summary
+/// (the `dpllm inspect` subcommand).
+pub fn inspect(path: &str) -> Result<Json> {
+    let parsed = parse_container(path).with_context(|| format!("inspecting {path}"))?;
+    let Parsed { map, manifest, format_version } = parsed;
+    let file_max: u8 = manifest.usize_of("max_bits").unwrap_or(MAX_BITS as usize) as u8;
+    let gobj = manifest.req("groups")
+        .map_err(|e| DpakError::Manifest(e.to_string()))?;
+    let mut groups_out = Json::obj();
+    let mut n_sections = 0usize;
+    let mut data_bytes = 0usize;
+    for g in GROUPS {
+        let gj = gobj.get(g)
+            .ok_or_else(|| DpakError::Manifest(format!("missing group {g}")))?;
+        let n_layers = gj.usize_of("n_layers")?;
+        let out_dim = gj.usize_of("out")?;
+        let in_dim = gj.usize_of("in")?;
+        let plane_len = n_layers * out_dim * in_dim / 8;
+        let layer_bytes = out_dim * in_dim / 8;
+        let mut plane_bytes = 0usize;
+        for (p, entry) in gj.req("planes")?.as_arr()?.iter().enumerate() {
+            let name = format!("plane{p}/{g}");
+            let (off, len) = checked_section(&map, entry, &name, plane_len)?;
+            // Per-layer digests: the partial-fetch validation contract.
+            let layers = entry.req("layers")?.as_arr()?;
+            for (l, want) in layers.iter().enumerate() {
+                let want = want.as_str()?;
+                let lo = off + l * layer_bytes;
+                let got = digest_str(&map[lo..lo + layer_bytes]);
+                if got != want {
+                    return Err(DpakError::DigestMismatch {
+                        section: format!("{name} layer {l}"),
+                        want: want.to_string(),
+                        got,
+                    }.into());
+                }
+            }
+            plane_bytes += len;
+            n_sections += 1;
+        }
+        let mut lut_bytes = 0usize;
+        let lobj = gj.req("luts")?;
+        for b in MIN_BITS..=file_max {
+            let name = format!("lut{b}/{g}");
+            let entry = lobj.get(&b.to_string())
+                .ok_or_else(|| DpakError::Manifest(format!("missing {name}")))?;
+            let lut_len = n_layers * out_dim * (1usize << b) * 4;
+            let (_, len) = checked_section(&map, entry, &name, lut_len)?;
+            lut_bytes += len;
+            n_sections += 1;
+        }
+        let mut row = Json::obj();
+        row.set("n_layers", n_layers).set("out", out_dim).set("in", in_dim)
+            .set("plane_bytes", plane_bytes).set("lut_bytes", lut_bytes);
+        groups_out.set(g, row);
+        data_bytes += plane_bytes + lut_bytes;
+    }
+    let mut out = Json::obj();
+    out.set("file", path)
+        .set("file_bytes", map.len())
+        .set("format_version", format_version as usize)
+        .set("model", manifest.str_of("model")?)
+        .set("version", manifest.str_of("version")?)
+        .set("min_bits", manifest.usize_of("min_bits").unwrap_or(MIN_BITS as usize))
+        .set("max_bits", file_max as usize)
+        .set("sections", n_sections)
+        .set("data_bytes", data_bytes)
+        .set("groups", groups_out)
+        .set("verified", true);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::anyprec::Codes;
+    use crate::util::npz::{write_npz, NpyData};
+    use crate::util::rng::{for_each_seed, Rng};
+
+    fn tmp(name: &str) -> String {
+        std::env::temp_dir().join(name).to_string_lossy().into_owned()
+    }
+
+    /// Random full store over all 7 groups with realistic shape coupling
+    /// (attention groups square, MLP groups rectangular), plus the raw
+    /// layer-major npz members so the same weights can go down the
+    /// legacy path.
+    fn synth(rng: &mut Rng) -> (AnyPrecStore, Vec<(String, Vec<usize>, NpyData)>) {
+        let l = rng.range(1, 3);
+        let d = 8 * rng.range(1, 3);
+        let f = 8 * rng.range(2, 4);
+        let mut groups = BTreeMap::new();
+        let mut members = Vec::new();
+        for g in GROUPS {
+            let (out, n_in) = match g {
+                "wg" | "wu" => (f, d),
+                "wd" => (d, f),
+                _ => (d, d),
+            };
+            let mut planes = vec![0u8; l * 6 * out * (n_in / 8)];
+            for b in planes.iter_mut() {
+                *b = rng.next_u64() as u8;
+            }
+            let mut luts = BTreeMap::new();
+            for b in MIN_BITS..=MAX_BITS {
+                let w = 1usize << b;
+                let lut: Vec<f32> =
+                    (0..l * out * w).map(|_| rng.f32() * 2.0 - 1.0).collect();
+                members.push((format!("lut{b}_{g}"), vec![l, out, w],
+                              NpyData::F32(lut.clone())));
+                luts.insert(b, lut);
+            }
+            members.push((format!("planes_{g}"), vec![l, 6, out, n_in / 8],
+                          NpyData::U8(planes.clone())));
+            groups.insert(
+                g.to_string(),
+                GroupStore::from_layer_major(&planes, l, out, n_in, luts).unwrap(),
+            );
+        }
+        let store = AnyPrecStore {
+            groups, meta: None, map: None, stats: LoadStats::default(),
+        };
+        (store, members)
+    }
+
+    fn write_members_npz(path: &str, members: &[(String, Vec<usize>, NpyData)]) {
+        let refs: Vec<(&str, &[usize], NpyData)> = members
+            .iter()
+            .map(|(n, s, d)| (n.as_str(), s.as_slice(), d.clone()))
+            .collect();
+        write_npz(path, &refs).unwrap();
+    }
+
+    fn dpak_err(err: &anyhow::Error) -> DpakError {
+        err.downcast_ref::<DpakError>()
+            .unwrap_or_else(|| panic!("expected DpakError, got: {err:#}"))
+            .clone()
+    }
+
+    /// Acceptance: pack → load_dpak is bit-identical to the npz path
+    /// over randomized stores, all groups and bitwidths — and the DPAK
+    /// path copies zero plane bytes while the npz path copies them all.
+    #[test]
+    fn roundtrip_bit_identical_with_npz_path() {
+        for_each_seed(5, |rng| {
+            let (store, members) = synth(rng);
+            let npz_path = tmp(&format!("dpllm_dpak_rt_{}.npz", rng.next_u64()));
+            let dpak_path = npz_path.replace(".npz", ".dpak");
+            write_members_npz(&npz_path, &members);
+            write(&store, "synth", &dpak_path).unwrap();
+
+            let via_npz = AnyPrecStore::load(&npz_path).unwrap();
+            let via_dpak = AnyPrecStore::load_dpak(&dpak_path).unwrap();
+
+            // zero plane-byte copies on the dpak path; all-copy on npz
+            assert_eq!(via_dpak.stats().plane_bytes_copied, 0);
+            assert!(via_dpak.stats().plane_bytes_mapped > 0);
+            assert_eq!(via_npz.stats().plane_bytes_mapped, 0);
+            assert_eq!(via_npz.stats().plane_bytes_copied,
+                       via_dpak.stats().plane_bytes_mapped);
+
+            for g in GROUPS {
+                let a = via_npz.group(g).unwrap();
+                let b = via_dpak.group(g).unwrap();
+                assert_eq!((a.n_layers, a.out_dim, a.in_dim),
+                           (b.n_layers, b.out_dim, b.in_dim));
+                for layer in 0..a.n_layers {
+                    for p in 0..MAX_BITS as usize {
+                        assert_eq!(a.plane_layer(p, layer).unwrap(),
+                                   b.plane_layer(p, layer).unwrap(),
+                                   "{g} plane {p} layer {layer}");
+                    }
+                    for bits in MIN_BITS..=MAX_BITS {
+                        assert_eq!(a.dequant(layer, bits).unwrap().data,
+                                   b.dequant(layer, bits).unwrap().data,
+                                   "{g} layer {layer} bits {bits}");
+                    }
+                }
+            }
+            std::fs::remove_file(&npz_path).ok();
+            std::fs::remove_file(&dpak_path).ok();
+        });
+    }
+
+    /// Acceptance: `load_slice(4)` maps strictly fewer bytes than a full
+    /// load, and serves its resident bitwidths bit-identically while
+    /// refusing the others.  The codes path honors residency too.
+    #[test]
+    fn tier_slice_maps_fewer_bytes() {
+        let mut rng = Rng::new(0xD9A4);
+        let (store, _) = synth(&mut rng);
+        let path = tmp("dpllm_dpak_slice.dpak");
+        write(&store, "synth", &path).unwrap();
+
+        let full = AnyPrecStore::load_dpak(&path).unwrap();
+        let s4 = AnyPrecStore::load_slice(&path, 4).unwrap();
+        let s3 = AnyPrecStore::load_slice(&path, 3).unwrap();
+        assert!(s4.stats().plane_bytes_mapped < full.stats().plane_bytes_mapped);
+        assert!(s3.stats().plane_bytes_mapped < s4.stats().plane_bytes_mapped);
+        assert!(s4.stats().lut_bytes_mapped + s4.stats().lut_bytes_copied
+                < full.stats().lut_bytes_mapped + full.stats().lut_bytes_copied);
+        assert_eq!(s4.max_bits(), 4);
+
+        let g = "wq";
+        assert_eq!(s4.group(g).unwrap().dequant(0, 4).unwrap().data,
+                   full.group(g).unwrap().dequant(0, 4).unwrap().data);
+        assert!(s4.group(g).unwrap().dequant(0, 5).is_err());
+        let mut codes = Codes::new();
+        s4.group(g).unwrap().dequant_codes_into(0, 4, &mut codes).unwrap();
+        assert!(s4.group(g).unwrap().refine_codes_into(0, &mut codes).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Acceptance: N replica views share ONE mapping — observable via the
+    /// `Arc<Mmap>` refcount.
+    #[test]
+    fn replicas_share_one_mapping() {
+        let mut rng = Rng::new(0x5A5A);
+        let (store, _) = synth(&mut rng);
+        let path = tmp("dpllm_dpak_share.dpak");
+        write(&store, "synth", &path).unwrap();
+
+        let full = AnyPrecStore::load_dpak(&path).unwrap();
+        let map = full.mapping().expect("dpak store carries its mapping").clone();
+        assert_eq!(Arc::strong_count(&map), 2); // full.map + our clone
+        let replicas: Vec<AnyPrecStore> =
+            (0..4).map(|i| full.slice(3 + (i % 4) as u8).unwrap()).collect();
+        assert_eq!(Arc::strong_count(&map), 6);
+        // every replica's planes read through the same physical bytes
+        for r in &replicas {
+            assert!(std::ptr::eq(
+                r.group("wq").unwrap().plane_layer(0, 0).unwrap().as_ptr(),
+                full.group("wq").unwrap().plane_layer(0, 0).unwrap().as_ptr(),
+            ));
+        }
+        drop(replicas);
+        drop(full);
+        assert_eq!(Arc::strong_count(&map), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Corruption suite: every failure mode is a typed error, no panics.
+    #[test]
+    fn corrupted_containers_refused_with_typed_errors() {
+        let mut rng = Rng::new(0xC0DE);
+        let (store, _) = synth(&mut rng);
+        let path = tmp("dpllm_dpak_corrupt.dpak");
+        write(&store, "synth", &path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // not a dpak at all
+        std::fs::write(&path, b"PAKD nope").unwrap();
+        assert_eq!(dpak_err(&AnyPrecStore::load_dpak(&path).unwrap_err()),
+                   DpakError::BadMagic);
+
+        // future format version
+        let mut v2 = good.clone();
+        v2[4] = 9;
+        std::fs::write(&path, &v2).unwrap();
+        assert_eq!(dpak_err(&AnyPrecStore::load_dpak(&path).unwrap_err()),
+                   DpakError::UnsupportedFormatVersion(9));
+
+        // header cut short
+        std::fs::write(&path, &good[..10]).unwrap();
+        assert!(matches!(dpak_err(&AnyPrecStore::load_dpak(&path).unwrap_err()),
+                         DpakError::Truncated { .. }));
+
+        // file truncated mid-section
+        std::fs::write(&path, &good[..good.len() - 64]).unwrap();
+        assert!(matches!(dpak_err(&AnyPrecStore::load_dpak(&path).unwrap_err()),
+                         DpakError::Truncated { .. }));
+
+        // single flipped bit in the LAST plane section byte — the digest
+        // must catch it
+        let mut flipped = good.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x10;
+        std::fs::write(&path, &flipped).unwrap();
+        // (last section is lut6 of the last group; any section works)
+        assert!(matches!(dpak_err(&AnyPrecStore::load_dpak(&path).unwrap_err()),
+                         DpakError::DigestMismatch { .. }));
+
+        // flip a bit inside the FIRST data section (a plane) specifically
+        let mlen = u64::from_le_bytes(good[8..16].try_into().unwrap()) as usize;
+        let data_start = (16 + mlen + DPAK_ALIGN - 1) / DPAK_ALIGN * DPAK_ALIGN;
+        let mut flipped = good.clone();
+        flipped[data_start] ^= 0x01;
+        std::fs::write(&path, &flipped).unwrap();
+        match dpak_err(&AnyPrecStore::load_dpak(&path).unwrap_err()) {
+            DpakError::DigestMismatch { section, .. } => {
+                assert_eq!(section, "plane0/wq");
+            }
+            other => panic!("wrong error: {other}"),
+        }
+
+        // manifest/section offset mismatch: tamper the manifest's length
+        // field for plane0/wq (same digit count keeps the JSON well-formed)
+        let text = String::from_utf8(good[16..16 + mlen].to_vec()).unwrap();
+        let m = Json::parse(&text).unwrap();
+        let len = m.req("groups").unwrap().req("wq").unwrap()
+            .req("planes").unwrap().as_arr().unwrap()[0]
+            .usize_of("len").unwrap();
+        let needle = format!("\"len\":{len}");
+        // mutate the last digit in place: always same digit count, always
+        // a different value, so the manifest stays byte-for-byte resizable
+        let mut digits = len.to_string().into_bytes();
+        let last = digits.last_mut().unwrap();
+        *last = if *last == b'9' { b'0' } else { *last + 1 };
+        let bad_len = format!("\"len\":{}", String::from_utf8(digits).unwrap());
+        let tampered_text = text.replacen(&needle, &bad_len, 1);
+        let mut tampered = good.clone();
+        tampered[16..16 + mlen].copy_from_slice(tampered_text.as_bytes());
+        std::fs::write(&path, &tampered).unwrap();
+        assert!(matches!(dpak_err(&AnyPrecStore::load_dpak(&path).unwrap_err()),
+                         DpakError::OffsetMismatch { .. }));
+
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// The serve-time gate: wrong model or stale version is a typed
+    /// refusal; matching identity passes.
+    #[test]
+    fn version_gate_refuses_mismatches() {
+        let mut rng = Rng::new(0x6A7E);
+        let (store, _) = synth(&mut rng);
+        let path = tmp("dpllm_dpak_gate.dpak");
+        let meta = write(&store, "dpl-tiny", &path).unwrap();
+        let loaded = AnyPrecStore::load_dpak(&path).unwrap();
+        assert_eq!(loaded.meta().unwrap().model, "dpl-tiny");
+        assert_eq!(loaded.meta().unwrap().version, meta.version);
+
+        check_version_gate(loaded.meta().unwrap(), "dpl-tiny", None).unwrap();
+        check_version_gate(loaded.meta().unwrap(), "dpl-tiny",
+                           Some(&meta.version)).unwrap();
+        match dpak_err(&check_version_gate(loaded.meta().unwrap(), "other-model",
+                                           None).unwrap_err()) {
+            DpakError::VersionGate { field, .. } => assert_eq!(field, "model"),
+            other => panic!("wrong error: {other}"),
+        }
+        match dpak_err(&check_version_gate(loaded.meta().unwrap(), "dpl-tiny",
+                                           Some("crc32:00000000")).unwrap_err()) {
+            DpakError::VersionGate { field, .. } => assert_eq!(field, "version"),
+            other => panic!("wrong error: {other}"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// `dpllm inspect` smoke: summary fields present, deep verification
+    /// passes on a good container and names the bad layer on a corrupt one.
+    #[test]
+    fn inspect_smoke() {
+        let mut rng = Rng::new(0x1A5B);
+        let (store, _) = synth(&mut rng);
+        let path = tmp("dpllm_dpak_inspect.dpak");
+        let meta = write(&store, "dpl-tiny", &path).unwrap();
+
+        let j = inspect(&path).unwrap();
+        assert_eq!(j.str_of("model").unwrap(), "dpl-tiny");
+        assert_eq!(j.str_of("version").unwrap(), meta.version);
+        assert_eq!(j.usize_of("max_bits").unwrap(), 6);
+        assert_eq!(j.usize_of("sections").unwrap(), 7 * 6 + 7 * 4);
+        assert!(j.req("verified").unwrap().as_bool().unwrap());
+        let wq = j.req("groups").unwrap().req("wq").unwrap();
+        assert!(wq.usize_of("plane_bytes").unwrap() > 0);
+
+        // corrupt one byte of plane data → inspect names the layer
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let data_start = (16 + mlen + DPAK_ALIGN - 1) / DPAK_ALIGN * DPAK_ALIGN;
+        bytes[data_start] ^= 0x80;
+        std::fs::write(&path, &bytes).unwrap();
+        match dpak_err(&inspect(&path).unwrap_err()) {
+            DpakError::DigestMismatch { section, .. } => {
+                assert!(section.starts_with("plane0/wq"), "{section}");
+            }
+            other => panic!("wrong error: {other}"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

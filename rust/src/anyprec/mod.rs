@@ -9,6 +9,17 @@
 //! `W_l` / `W_h` stacks at model-load time and on precision rebinds
 //! (config switch, not request path), and to account memory for Table 9.
 //!
+//! **Ownership (DESIGN.md §Artifact):** plane and LUT buffers are
+//! [`PlaneBytes`] / [`LutBytes`] — either owned heap copies (the legacy
+//! `.npz` path) or borrowed ranges of one reference-counted read-only
+//! mmap of a DPAK container ([`dpak`]), in which case loading copies
+//! **zero** plane bytes and N replicas share a single physical mapping.
+//! Planes are held plane-major (`planes[p]` = all layers of bitplane
+//! `p`), so a *tier slice* — [`AnyPrecStore::load_slice`] with
+//! `max_bits < 6` — simply maps fewer sections: an economy replica never
+//! touches the 5–6-bit planes.  [`LoadStats`] meters what each load
+//! mapped vs copied.
+//!
 //! Materialization is the config-switch hot path (DESIGN.md §Perf), so the
 //! dequantizer comes in three speeds:
 //!
@@ -20,18 +31,26 @@
 //!   slabs and no per-layer allocation;
 //! * [`GroupStore::refine_codes_into`] — the **incremental path**: the
 //!   nested-prefix property (`code_{b+1} = code_b << 1 | bit_b`) turns a
-//!   b→b+1 re-materialization into a single-plane walk;
+//!   b→b+1 re-materialization into a single-plane walk.  Codes travel in
+//!   the [`Codes`] newtype, which carries their current bitwidth so
+//!   [`GroupStore::lut_map_into`] can *refuse* a mismatched mapping
+//!   instead of silently yielding wrong weights;
 //! * [`GroupStore::dequant_reference`] — the original naive per-bit loop,
 //!   retained as the differential-test oracle and bench baseline.
 
+pub mod dpak;
 pub mod materialize;
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::tensor::Tensor;
+use crate::util::mmap::Mmap;
 use crate::util::npz::{load_npz, NpyArray};
+
+pub use dpak::{DpakError, DpakMeta};
 
 pub const GROUPS: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
 pub const MIN_BITS: u8 = 3;
@@ -76,27 +95,268 @@ fn gather_codes(prows: &[&[u8]], byte: usize) -> u64 {
     codes
 }
 
+/// One bitplane's backing storage: an owned copy (legacy npz path, or
+/// hand-built test stores) or a borrowed range of a shared read-only
+/// mapping (DPAK path — zero plane-byte copies, one mapping per node).
+#[derive(Clone)]
+pub enum PlaneBytes {
+    Owned(Arc<[u8]>),
+    Mapped { map: Arc<Mmap>, off: usize, len: usize },
+}
+
+impl PlaneBytes {
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            PlaneBytes::Owned(v) => v,
+            PlaneBytes::Mapped { map, off, len } => &map[*off..*off + *len],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            PlaneBytes::Owned(v) => v.len(),
+            PlaneBytes::Mapped { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn is_mapped(&self) -> bool {
+        matches!(self, PlaneBytes::Mapped { .. })
+    }
+}
+
+/// One bitwidth's centroid table: owned f32s or an aligned borrowed range
+/// of the shared mapping (DPAK sections are 64-byte aligned, so the
+/// reinterpret below is always in-bounds and aligned; the loader checks).
+#[derive(Clone)]
+pub enum LutBytes {
+    Owned(Arc<[f32]>),
+    /// `off` is a byte offset into `map`, 4-aligned; `n` counts f32s.
+    Mapped { map: Arc<Mmap>, off: usize, n: usize },
+}
+
+impl LutBytes {
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            LutBytes::Owned(v) => v,
+            LutBytes::Mapped { map, off, n } => {
+                let bytes = &map[*off..*off + *n * 4];
+                debug_assert_eq!(bytes.as_ptr() as usize % 4, 0);
+                // SAFETY: the DPAK loader only constructs this variant
+                // after checking 4-byte alignment and little-endian host;
+                // the range is in-bounds of the mapping for its lifetime.
+                unsafe {
+                    std::slice::from_raw_parts(bytes.as_ptr() as *const f32, *n)
+                }
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            LutBytes::Owned(v) => v.len(),
+            LutBytes::Mapped { n, .. } => *n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn is_mapped(&self) -> bool {
+        matches!(self, LutBytes::Mapped { .. })
+    }
+}
+
+/// A codes buffer whose current bitwidth travels with the data.
+///
+/// The codes-level API used to take bare `&[u8]`: codes refined to *b*
+/// bits but mapped through the *b'*-bit LUT index in-bounds whenever
+/// `b < b'` — silently yielding wrong weights.  The newtype closes that
+/// hole: [`GroupStore::dequant_codes_into`] stamps the bitwidth,
+/// [`GroupStore::refine_codes_into`] advances it, and
+/// [`GroupStore::lut_map_into`] refuses any mismatch.
+#[derive(Debug, Clone, Default)]
+pub struct Codes {
+    data: Vec<u8>,
+    bits: u8,
+}
+
+impl Codes {
+    pub fn new() -> Codes {
+        Codes::default()
+    }
+
+    /// The bitwidth the buffer currently holds (0 = uninitialized).
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// Overwrite this buffer with another's contents *and* bitwidth
+    /// (no reallocation once capacities match) — lets refine sweeps and
+    /// benches reset to a checkpointed state without rebuilding codes.
+    pub fn copy_from(&mut self, other: &Codes) {
+        self.data.resize(other.data.len(), 0);
+        self.data.copy_from_slice(&other.data);
+        self.bits = other.bits;
+    }
+}
+
+/// What a store load mapped vs copied — the zero-copy contract, metered.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LoadStats {
+    /// Plane bytes copied into owned heap buffers (legacy npz path).
+    pub plane_bytes_copied: u64,
+    /// Plane bytes served as borrowed ranges of the container mapping.
+    pub plane_bytes_mapped: u64,
+    pub lut_bytes_copied: u64,
+    pub lut_bytes_mapped: u64,
+    /// Wall time of the load (parse + digest verification included).
+    pub load_ms: f64,
+    /// Backed by a live kernel mapping (false: owned-read fallback).
+    pub mapped: bool,
+}
+
 /// Packed planes + LUTs for one linear group (stacked over layers).
+///
+/// Planes are **plane-major**: `planes[p]` holds bitplane `p` (0 = MSB)
+/// for every layer, laid out `[L, out, in/8]`.  Only planes
+/// `0..max_bits` are resident — a tier-sliced store simply holds fewer
+/// entries, and any dequant above `max_bits` fails loudly.
+#[derive(Clone)]
 pub struct GroupStore {
-    /// u8 planes `[L, 6, out, in/8]` (plane 0 = MSB).
-    pub planes: Vec<u8>,
+    planes: Vec<PlaneBytes>,
     pub n_layers: usize,
     pub out_dim: usize,
     pub in_dim: usize,
-    /// LUT per bitwidth b (3..=6): f32 `[L, out, 2^b]`.
-    pub luts: BTreeMap<u8, Vec<f32>>,
+    /// LUT per resident bitwidth b (3..=max_bits): f32 `[L, out, 2^b]`.
+    luts: BTreeMap<u8, LutBytes>,
+    max_bits: u8,
 }
 
 impl GroupStore {
-    fn plane_stride(&self) -> (usize, usize, usize) {
-        let bytes_in = self.in_dim / 8;
-        // strides for [L, 6, out, in/8]
-        (6 * self.out_dim * bytes_in, self.out_dim * bytes_in, bytes_in)
+    /// Build an owned store from the legacy layer-major layout
+    /// `[L, 6, out, in/8]` (what `quantize.py` packs into npz) — copies
+    /// the planes once to transpose them plane-major.
+    pub fn from_layer_major(planes_lm: &[u8], n_layers: usize, out_dim: usize,
+                            in_dim: usize, luts: BTreeMap<u8, Vec<f32>>)
+                            -> Result<GroupStore> {
+        if in_dim % 8 != 0 {
+            bail!("in_dim {in_dim} not a multiple of 8 (bitplane packing)");
+        }
+        let bytes_in = in_dim / 8;
+        let layer_bytes = out_dim * bytes_in;
+        let want = n_layers * 6 * layer_bytes;
+        if planes_lm.len() != want {
+            bail!(
+                "plane buffer holds {} bytes, shape [L={n_layers}, 6, out={out_dim}, \
+                 in/8={bytes_in}] wants {want}",
+                planes_lm.len()
+            );
+        }
+        let nb = MAX_BITS as usize;
+        let mut planes = Vec::with_capacity(nb);
+        for p in 0..nb {
+            let mut buf = Vec::with_capacity(n_layers * layer_bytes);
+            for l in 0..n_layers {
+                let src = (l * 6 + p) * layer_bytes;
+                buf.extend_from_slice(&planes_lm[src..src + layer_bytes]);
+            }
+            planes.push(PlaneBytes::Owned(Arc::from(buf)));
+        }
+        let luts = luts
+            .into_iter()
+            .map(|(b, v)| (b, LutBytes::Owned(Arc::from(v))))
+            .collect();
+        let store = GroupStore {
+            planes, n_layers, out_dim, in_dim, luts, max_bits: MAX_BITS,
+        };
+        store.validate()?;
+        Ok(store)
+    }
+
+    /// Resident precision ceiling: dequants above this bitwidth error.
+    pub fn max_bits(&self) -> u8 {
+        self.max_bits
+    }
+
+    /// A cheap sliced view holding only planes/LUTs ≤ `max_bits` (Arc
+    /// clones — no plane bytes move).  The per-replica residency cut.
+    pub fn slice(&self, max_bits: u8) -> Result<GroupStore> {
+        if !(MIN_BITS..=MAX_BITS).contains(&max_bits) {
+            bail!("slice max_bits {max_bits} out of range {MIN_BITS}..={MAX_BITS}");
+        }
+        if max_bits > self.max_bits {
+            bail!(
+                "slice max_bits {max_bits} exceeds resident precision {} — \
+                 cannot widen a tier-sliced store",
+                self.max_bits
+            );
+        }
+        let store = GroupStore {
+            planes: self.planes[..max_bits as usize].to_vec(),
+            n_layers: self.n_layers,
+            out_dim: self.out_dim,
+            in_dim: self.in_dim,
+            luts: self
+                .luts
+                .iter()
+                .filter(|(b, _)| **b <= max_bits)
+                .map(|(b, l)| (*b, l.clone()))
+                .collect(),
+            max_bits,
+        };
+        store.validate()?;
+        Ok(store)
+    }
+
+    /// Bitplane `p` of one layer: `[out, in/8]` bytes.
+    pub fn plane_layer(&self, p: usize, layer: usize) -> Result<&[u8]> {
+        if p >= self.planes.len() {
+            bail!("plane {p} not resident (store holds {} planes)", self.planes.len());
+        }
+        if layer >= self.n_layers {
+            bail!("layer {layer} out of range ({})", self.n_layers);
+        }
+        let layer_bytes = self.out_dim * self.in_dim / 8;
+        Ok(&self.planes[p].as_slice()[layer * layer_bytes..(layer + 1) * layer_bytes])
+    }
+
+    /// The LUT for `bits`: f32 `[L, out, 2^bits]` flattened.
+    pub fn lut(&self, bits: u8) -> Result<&[f32]> {
+        self.luts
+            .get(&bits)
+            .map(|l| l.as_f32())
+            .ok_or_else(|| anyhow!("missing lut for {bits} bits"))
+    }
+
+    /// Resident plane bytes (what this view keeps reachable).
+    pub fn resident_plane_bytes(&self) -> usize {
+        self.planes.iter().map(|p| p.len()).sum()
+    }
+
+    fn resident_lut_bytes(&self) -> usize {
+        self.luts.values().map(|l| l.len() * 4).sum()
     }
 
     /// Structural invariants every dequant path assumes.  Run once at
-    /// [`AnyPrecStore::load`] so a malformed npz fails loudly at load time
-    /// instead of truncating or panicking mid-request.
+    /// load so a malformed artifact fails loudly at load time instead of
+    /// truncating or panicking mid-request.
     pub fn validate(&self) -> Result<()> {
         if self.n_layers == 0 || self.out_dim == 0 || self.in_dim == 0 {
             bail!(
@@ -107,15 +367,26 @@ impl GroupStore {
         if self.in_dim % 8 != 0 {
             bail!("in_dim {} not a multiple of 8 (bitplane packing)", self.in_dim);
         }
-        let want_planes = self.n_layers * 6 * self.out_dim * self.in_dim / 8;
-        if self.planes.len() != want_planes {
+        if !(MIN_BITS..=MAX_BITS).contains(&self.max_bits) {
+            bail!("max_bits {} out of range {MIN_BITS}..={MAX_BITS}", self.max_bits);
+        }
+        if self.planes.len() != self.max_bits as usize {
             bail!(
-                "plane buffer holds {} bytes, shape [L={}, 6, out={}, in/8={}] wants {}",
-                self.planes.len(), self.n_layers, self.out_dim, self.in_dim / 8,
-                want_planes
+                "store holds {} planes, max_bits {} wants that many",
+                self.planes.len(), self.max_bits
             );
         }
-        for b in MIN_BITS..=MAX_BITS {
+        let want_plane = self.n_layers * self.out_dim * self.in_dim / 8;
+        for (p, plane) in self.planes.iter().enumerate() {
+            if plane.len() != want_plane {
+                bail!(
+                    "plane {p} holds {} bytes, shape [L={}, out={}, in/8={}] wants {}",
+                    plane.len(), self.n_layers, self.out_dim, self.in_dim / 8,
+                    want_plane
+                );
+            }
+        }
+        for b in MIN_BITS..=self.max_bits {
             let lut = self
                 .luts
                 .get(&b)
@@ -132,13 +403,17 @@ impl GroupStore {
         if !(MIN_BITS..=MAX_BITS).contains(&bits) {
             bail!("bits {bits} out of range");
         }
+        if bits > self.max_bits {
+            bail!(
+                "bits {bits} exceed resident precision {} — tier-sliced store; \
+                 load a wider slice to serve this bitwidth",
+                self.max_bits
+            );
+        }
         if layer >= self.n_layers {
             bail!("layer {layer} out of range ({})", self.n_layers);
         }
-        self.luts
-            .get(&bits)
-            .map(|v| v.as_slice())
-            .ok_or_else(|| anyhow!("missing lut for {bits} bits"))
+        self.lut(bits)
     }
 
     /// Word-level kernel core over rows `[row0, row0 + dst.len()/in_dim)`
@@ -161,20 +436,20 @@ impl GroupStore {
         if self.in_dim == 0 {
             return; // degenerate hand-built store; load-time validate rejects
         }
-        let (sl, sp, so) = self.plane_stride();
         let bytes_in = self.in_dim / 8;
+        let layer_bytes = self.out_dim * bytes_in;
         let lut_w = 1usize << NB;
         let lut_base = layer * self.out_dim * lut_w;
         let mask = lut_w - 1;
         let nrows = dst.len() / self.in_dim;
+        let pbufs: [&[u8]; NB] = std::array::from_fn(|p| self.planes[p].as_slice());
         for r in 0..nrows {
             let o = row0 + r;
             let row_lut = &lut[lut_base + o * lut_w..lut_base + (o + 1) * lut_w];
             let row_dst = &mut dst[r * self.in_dim..(r + 1) * self.in_dim];
-            let base = layer * sl + o * so;
-            let prows: [&[u8]; NB] = std::array::from_fn(|p| {
-                &self.planes[base + p * sp..base + p * sp + bytes_in]
-            });
+            let base = layer * layer_bytes + o * bytes_in;
+            let prows: [&[u8]; NB] =
+                std::array::from_fn(|p| &pbufs[p][base..base + bytes_in]);
             for byte in 0..bytes_in {
                 let codes = gather_codes(&prows, byte);
                 let cell = &mut row_dst[byte * 8..byte * 8 + 8];
@@ -241,19 +516,20 @@ impl GroupStore {
     /// semantics as [`GroupStore::dequant`], ~an order of magnitude slower.
     pub fn dequant_reference(&self, layer: usize, bits: u8) -> Result<Tensor> {
         let lut = self.check_layer_bits(layer, bits)?;
-        let (sl, sp, so) = self.plane_stride();
         let bytes_in = self.in_dim / 8;
+        let layer_bytes = self.out_dim * bytes_in;
         let lut_w = 1usize << bits;
         let lut_base = layer * self.out_dim * lut_w;
         let mut out = vec![0f32; self.out_dim * self.in_dim];
         for o in 0..self.out_dim {
             let row_lut = &lut[lut_base + o * lut_w..lut_base + (o + 1) * lut_w];
             let dst = &mut out[o * self.in_dim..(o + 1) * self.in_dim];
+            let base = layer * layer_bytes + o * bytes_in;
             for byte in 0..bytes_in {
                 // gather the byte of each of the top `bits` planes
                 let mut plane_bytes = [0u8; 6];
                 for (p, pb) in plane_bytes.iter_mut().enumerate().take(bits as usize) {
-                    *pb = self.planes[layer * sl + p * sp + o * so + byte];
+                    *pb = self.planes[p].as_slice()[base + byte];
                 }
                 for j in 0..8 {
                     let mut code = 0usize;
@@ -268,27 +544,28 @@ impl GroupStore {
     }
 
     /// Materialize one layer's **codes** (not centroid values) at `bits`,
-    /// word-level.  The codes buffer is the refinement state for
-    /// [`GroupStore::refine_codes_into`].
+    /// word-level, stamping the buffer's bitwidth.  The codes buffer is
+    /// the refinement state for [`GroupStore::refine_codes_into`]; it is
+    /// (re)sized here, so one buffer can be reused across layers/groups.
     pub fn dequant_codes_into(&self, layer: usize, bits: u8,
-                              codes: &mut [u8]) -> Result<()> {
+                              codes: &mut Codes) -> Result<()> {
         self.check_layer_bits(layer, bits)?;
-        if codes.len() != self.out_dim * self.in_dim {
-            bail!(
-                "codes buffer holds {} elements, layer wants {}",
-                codes.len(), self.out_dim * self.in_dim
-            );
-        }
-        let (sl, sp, so) = self.plane_stride();
+        codes.data.resize(self.out_dim * self.in_dim, 0);
+        codes.bits = bits;
         let bytes_in = self.in_dim / 8;
+        let layer_bytes = self.out_dim * bytes_in;
         let nb = bits as usize;
         let empty: &[u8] = &[];
+        let mut pbufs: [&[u8]; 6] = [empty; 6];
+        for (p, slot) in pbufs.iter_mut().enumerate().take(nb) {
+            *slot = self.planes[p].as_slice();
+        }
         for o in 0..self.out_dim {
-            let row = &mut codes[o * self.in_dim..(o + 1) * self.in_dim];
-            let base = layer * sl + o * so;
+            let row = &mut codes.data[o * self.in_dim..(o + 1) * self.in_dim];
+            let base = layer * layer_bytes + o * bytes_in;
             let mut prows: [&[u8]; 6] = [empty; 6];
             for (p, slot) in prows.iter_mut().enumerate().take(nb) {
-                *slot = &self.planes[base + p * sp..base + p * sp + bytes_in];
+                *slot = &pbufs[p][base..base + bytes_in];
             }
             for byte in 0..bytes_in {
                 let w = gather_codes(&prows[..nb], byte);
@@ -301,61 +578,77 @@ impl GroupStore {
         Ok(())
     }
 
-    /// Incremental refinement `from_bits → from_bits + 1`: append the next
-    /// plane's bit to every code (`code_{b+1} = code_b << 1 | bit_b`).
-    /// Reads exactly ONE plane instead of re-walking all `b+1`, which is
-    /// what makes sweeping 3→4→5→6 (calibration, candidate probing) cost
-    /// one full dequant plus three single-plane passes.
-    pub fn refine_codes_into(&self, layer: usize, from_bits: u8,
-                             codes: &mut [u8]) -> Result<()> {
+    /// Incremental refinement by one bit: append the next plane's bit to
+    /// every code (`code_{b+1} = code_b << 1 | bit_b`).  Reads exactly ONE
+    /// plane instead of re-walking all `b+1`, which is what makes sweeping
+    /// 3→4→5→6 (calibration, candidate probing) cost one full dequant plus
+    /// three single-plane passes.  The source bitwidth comes from the
+    /// [`Codes`] buffer itself — there is no `from_bits` to get wrong.
+    pub fn refine_codes_into(&self, layer: usize, codes: &mut Codes) -> Result<()> {
+        let from_bits = codes.bits;
         if !(MIN_BITS..MAX_BITS).contains(&from_bits) {
             bail!("refine from {from_bits} bits: need {MIN_BITS}..{}", MAX_BITS - 1);
+        }
+        if from_bits >= self.max_bits {
+            bail!(
+                "refine to {} bits: plane not resident (tier-sliced store \
+                 holds {} bits)",
+                from_bits + 1, self.max_bits
+            );
         }
         if layer >= self.n_layers {
             bail!("layer {layer} out of range ({})", self.n_layers);
         }
-        if codes.len() != self.out_dim * self.in_dim {
+        if codes.data.len() != self.out_dim * self.in_dim {
             bail!(
                 "codes buffer holds {} elements, layer wants {}",
-                codes.len(), self.out_dim * self.in_dim
+                codes.data.len(), self.out_dim * self.in_dim
             );
         }
-        let (sl, sp, so) = self.plane_stride();
         let bytes_in = self.in_dim / 8;
-        let p = from_bits as usize; // planes 0..from_bits gave the prefix
+        let layer_bytes = self.out_dim * bytes_in;
+        // planes 0..from_bits gave the prefix; plane[from_bits] appends
+        let plane = self.planes[from_bits as usize].as_slice();
         for o in 0..self.out_dim {
-            let row = &mut codes[o * self.in_dim..(o + 1) * self.in_dim];
-            let base = layer * sl + p * sp + o * so;
+            let row = &mut codes.data[o * self.in_dim..(o + 1) * self.in_dim];
+            let base = layer * layer_bytes + o * bytes_in;
             for byte in 0..bytes_in {
-                let pb = self.planes[base + byte];
+                let pb = plane[base + byte];
                 let cell = &mut row[byte * 8..byte * 8 + 8];
                 for (j, c) in cell.iter_mut().enumerate() {
                     *c = (*c << 1) | ((pb >> j) & 1);
                 }
             }
         }
+        codes.bits = from_bits + 1;
         Ok(())
     }
 
-    /// Map a codes buffer at `bits` through the layer's LUT.  Codes must
-    /// have been produced at exactly `bits` (dequant_codes_into / refined
-    /// to it).  Mismatches are NOT detectable here: codes at *higher*
-    /// bitwidths index past the LUT row and panic, but codes at *lower*
-    /// bitwidths index in-bounds and silently yield wrong weights — the
-    /// caller owns tracking the codes' current bitwidth.
-    pub fn lut_map_into(&self, layer: usize, bits: u8, codes: &[u8],
+    /// Map a codes buffer through the layer's `bits`-bit LUT.  The codes'
+    /// own bitwidth must equal `bits` — a mismatch is a hard error, never
+    /// a silent wrong-weight mapping (codes at lower bitwidths index the
+    /// LUT in-bounds, which is exactly why the old bare-slice API could
+    /// not catch this).
+    pub fn lut_map_into(&self, layer: usize, bits: u8, codes: &Codes,
                         out: &mut [f32]) -> Result<()> {
         let lut = self.check_layer_bits(layer, bits)?;
+        if codes.bits != bits {
+            bail!(
+                "codes refined to {} bits but lut_map requested {bits} — \
+                 refusing mismatched codes (silent corruption hazard)",
+                codes.bits
+            );
+        }
         let n = self.out_dim * self.in_dim;
-        if codes.len() != n || out.len() != n {
+        if codes.data.len() != n || out.len() != n {
             bail!("lut_map buffers hold {}/{} elements, layer wants {n}",
-                  codes.len(), out.len());
+                  codes.data.len(), out.len());
         }
         let lut_w = 1usize << bits;
         let lut_base = layer * self.out_dim * lut_w;
         for o in 0..self.out_dim {
             let row_lut = &lut[lut_base + o * lut_w..lut_base + (o + 1) * lut_w];
-            let src = &codes[o * self.in_dim..(o + 1) * self.in_dim];
+            let src = &codes.data[o * self.in_dim..(o + 1) * self.in_dim];
             let dst = &mut out[o * self.in_dim..(o + 1) * self.in_dim];
             for (d, &c) in dst.iter_mut().zip(src) {
                 *d = row_lut[c as usize];
@@ -397,12 +690,23 @@ impl GroupStore {
 /// The full any-precision model store (7 groups).
 pub struct AnyPrecStore {
     pub groups: BTreeMap<String, GroupStore>,
+    /// DPAK manifest identity (None on the legacy npz path).
+    meta: Option<DpakMeta>,
+    /// The shared container mapping (None on the npz path).  Its
+    /// `Arc::strong_count` is the number of live store views — the
+    /// replicas-share-one-mapping invariant, observable in tests.
+    map: Option<Arc<Mmap>>,
+    stats: LoadStats,
 }
 
 impl AnyPrecStore {
+    /// Legacy path: parse an uncompressed `.npz` and copy every plane/LUT
+    /// into owned buffers (metered in [`LoadStats`] as copied bytes).
     pub fn load(path: &str) -> Result<AnyPrecStore> {
+        let t0 = std::time::Instant::now();
         let arrays = load_npz(path)?;
         let mut groups = BTreeMap::new();
+        let mut stats = LoadStats::default();
         for g in GROUPS {
             let planes = arrays
                 .get(&format!("planes_{g}"))
@@ -420,21 +724,56 @@ impl AnyPrecStore {
                 if lut.shape != vec![n_layers, out_dim, 1 << b] {
                     bail!("lut{b}_{g}: unexpected shape {:?}", lut.shape);
                 }
-                luts.insert(b, lut.to_f32());
+                let v = lut.to_f32();
+                stats.lut_bytes_copied += (v.len() * 4) as u64;
+                luts.insert(b, v);
             }
-            let store = GroupStore {
-                planes: planes.as_u8().context(format!("planes_{g}"))?.to_vec(),
-                n_layers,
-                out_dim,
-                in_dim,
-                luts,
-            };
-            store
-                .validate()
+            let lm = planes.as_u8().context(format!("planes_{g}"))?;
+            stats.plane_bytes_copied += lm.len() as u64;
+            let store = GroupStore::from_layer_major(lm, n_layers, out_dim, in_dim, luts)
                 .with_context(|| format!("planes_{g} in {path}"))?;
             groups.insert(g.to_string(), store);
         }
-        Ok(AnyPrecStore { groups })
+        stats.load_ms = t0.elapsed().as_secs_f64() * 1e3;
+        Ok(AnyPrecStore { groups, meta: None, map: None, stats })
+    }
+
+    /// Zero-copy path: validate and map a DPAK container at full
+    /// precision.  See [`dpak`] for the format.
+    pub fn load_dpak(path: &str) -> Result<AnyPrecStore> {
+        dpak::load(path, MAX_BITS)
+    }
+
+    /// Load only the planes/LUTs a precision tier needs: `.dpak` paths
+    /// map just those sections; `.npz` paths parse fully (the zip gives
+    /// no random access) and then drop the higher planes.
+    pub fn load_slice(path: &str, max_bits: u8) -> Result<AnyPrecStore> {
+        if path.ends_with(".dpak") {
+            dpak::load(path, max_bits)
+        } else {
+            AnyPrecStore::load(path)?.slice(max_bits)
+        }
+    }
+
+    /// A cheap sliced view of an already-loaded store (Arc clones; the
+    /// container mapping, if any, is shared — this is how N replicas get
+    /// per-tier residency out of one physical mapping).
+    pub fn slice(&self, max_bits: u8) -> Result<AnyPrecStore> {
+        let mut groups = BTreeMap::new();
+        for (name, g) in &self.groups {
+            groups.insert(
+                name.clone(),
+                g.slice(max_bits).with_context(|| format!("slicing group {name}"))?,
+            );
+        }
+        let mut stats = tally(&groups);
+        stats.mapped = self.stats.mapped;
+        Ok(AnyPrecStore {
+            groups,
+            meta: self.meta.clone(),
+            map: self.map.clone(),
+            stats,
+        })
     }
 
     pub fn group(&self, g: &str) -> Result<&GroupStore> {
@@ -449,6 +788,47 @@ impl AnyPrecStore {
     pub fn n_layers(&self) -> usize {
         self.groups.values().next().map(|g| g.n_layers).unwrap_or(0)
     }
+
+    /// Resident precision ceiling across groups (= the slice bitwidth).
+    pub fn max_bits(&self) -> u8 {
+        self.groups.values().map(|g| g.max_bits).min().unwrap_or(MAX_BITS)
+    }
+
+    /// DPAK identity (model/version) — None for npz-loaded stores.
+    pub fn meta(&self) -> Option<&DpakMeta> {
+        self.meta.as_ref()
+    }
+
+    /// The shared container mapping, for refcount observation.
+    pub fn mapping(&self) -> Option<&Arc<Mmap>> {
+        self.map.as_ref()
+    }
+
+    pub fn stats(&self) -> LoadStats {
+        self.stats
+    }
+}
+
+/// Recompute mapped/copied byte tallies from what a set of groups holds.
+fn tally(groups: &BTreeMap<String, GroupStore>) -> LoadStats {
+    let mut s = LoadStats::default();
+    for g in groups.values() {
+        for p in &g.planes {
+            if p.is_mapped() {
+                s.plane_bytes_mapped += p.len() as u64;
+            } else {
+                s.plane_bytes_copied += p.len() as u64;
+            }
+        }
+        for l in g.luts.values() {
+            if l.is_mapped() {
+                s.lut_bytes_mapped += (l.len() * 4) as u64;
+            } else {
+                s.lut_bytes_copied += (l.len() * 4) as u64;
+            }
+        }
+    }
+    s
 }
 
 #[cfg(test)]
@@ -458,8 +838,8 @@ mod tests {
 
     /// Build a tiny store by hand and check dequant against the format spec.
     fn toy_store() -> GroupStore {
-        // 1 layer, 2 out rows, 8 in cols; code6 of (o=0) = col index*8+o... keep simple:
-        // col j in row o has 6-bit code = (j + o) % 64.
+        // 1 layer, 2 out rows, 16 in cols; col j in row o has 6-bit code
+        // (j*4 + o) % 64.
         let (l, out, n_in) = (1usize, 2usize, 16usize);
         let mut planes = vec![0u8; l * 6 * out * (n_in / 8)];
         let code = |o: usize, j: usize| -> u8 { ((j * 4 + o) % 64) as u8 };
@@ -487,7 +867,7 @@ mod tests {
             }
             luts.insert(b, lut);
         }
-        GroupStore { planes, n_layers: l, out_dim: out, in_dim: n_in, luts }
+        GroupStore::from_layer_major(&planes, l, out, n_in, luts).unwrap()
     }
 
     /// Random store with arbitrary codes and LUT values (dims vary).
@@ -506,7 +886,7 @@ mod tests {
                 (0..l * out * w).map(|_| rng.f32() * 2.0 - 1.0).collect();
             luts.insert(b, lut);
         }
-        GroupStore { planes, n_layers: l, out_dim: out, in_dim: n_in, luts }
+        GroupStore::from_layer_major(&planes, l, out, n_in, luts).unwrap()
     }
 
     #[test]
@@ -570,19 +950,42 @@ mod tests {
             let s = random_store(rng);
             for layer in 0..s.n_layers {
                 let n = s.out_dim * s.in_dim;
-                let mut codes = vec![0u8; n];
+                let mut codes = Codes::new();
                 let mut out = vec![0f32; n];
                 s.dequant_codes_into(layer, MIN_BITS, &mut codes).unwrap();
                 for bits in MIN_BITS..=MAX_BITS {
                     if bits > MIN_BITS {
-                        s.refine_codes_into(layer, bits - 1, &mut codes).unwrap();
+                        s.refine_codes_into(layer, &mut codes).unwrap();
                     }
+                    assert_eq!(codes.bits(), bits);
                     s.lut_map_into(layer, bits, &codes, &mut out).unwrap();
                     let reference = s.dequant_reference(layer, bits).unwrap();
                     assert_eq!(reference.data, out, "bits={bits} layer={layer}");
                 }
             }
         });
+    }
+
+    /// The satellite fix pinned: mapping codes through a LUT of a
+    /// *different* bitwidth must be refused — at lower LUT widths the old
+    /// bare-slice API indexed in-bounds and silently corrupted weights.
+    #[test]
+    fn codes_bits_mismatch_rejected() {
+        let s = toy_store();
+        let mut codes = Codes::new();
+        let mut out = vec![0f32; s.out_dim * s.in_dim];
+        s.dequant_codes_into(0, 3, &mut codes).unwrap();
+        for wrong in [4u8, 5, 6] {
+            let err = s.lut_map_into(0, wrong, &codes, &mut out).unwrap_err();
+            assert!(err.to_string().contains("refusing mismatched codes"),
+                    "bits={wrong}: {err}");
+        }
+        // ...and the matching width still works.
+        s.lut_map_into(0, 3, &codes, &mut out).unwrap();
+        // Refined codes stop matching the old width.
+        s.refine_codes_into(0, &mut codes).unwrap();
+        assert!(s.lut_map_into(0, 3, &codes, &mut out).is_err());
+        s.lut_map_into(0, 4, &codes, &mut out).unwrap();
     }
 
     /// A slab big enough to cross the parallel threshold must agree with
@@ -600,7 +1003,7 @@ mod tests {
             let w = 1usize << b;
             luts.insert(b, (0..l * out * w).map(|_| rng.f32()).collect());
         }
-        let s = GroupStore { planes, n_layers: l, out_dim: out, in_dim: n_in, luts };
+        let s = GroupStore::from_layer_major(&planes, l, out, n_in, luts).unwrap();
         assert!(out * n_in >= super::PAR_MIN_ELEMS);
         for bits in [3u8, 5] {
             let reference = s.dequant_reference(0, bits).unwrap();
@@ -633,31 +1036,71 @@ mod tests {
         assert!(s.dequant_stack(&[4, 4]).is_err());
         let mut short = vec![0f32; 3];
         assert!(s.dequant_into(0, 4, &mut short).is_err());
-        let mut codes = vec![0u8; 2 * 16];
-        assert!(s.refine_codes_into(0, 6, &mut codes).is_err());
-        assert!(s.refine_codes_into(0, 2, &mut codes).is_err());
-        assert!(s.refine_codes_into(9, 4, &mut codes).is_err());
+        let mut codes = Codes::new();
+        // refine on an uninitialized buffer (bits = 0) is rejected
+        assert!(s.refine_codes_into(0, &mut codes).is_err());
+        s.dequant_codes_into(0, 6, &mut codes).unwrap();
+        // refine past MAX_BITS is rejected
+        assert!(s.refine_codes_into(0, &mut codes).is_err());
+        s.dequant_codes_into(0, 4, &mut codes).unwrap();
+        assert!(s.refine_codes_into(9, &mut codes).is_err());
     }
 
+    /// Malformed inputs are rejected at construction, not at dequant time.
     #[test]
-    fn validate_catches_malformed_stores() {
+    fn constructor_rejects_malformed_stores() {
+        let good = toy_store();
+        assert!(good.validate().is_ok());
+        let (l, out, n_in) = (1usize, 2usize, 16usize);
+        let planes = vec![0u8; l * 6 * out * (n_in / 8)];
+        let full_luts = || -> BTreeMap<u8, Vec<f32>> {
+            (MIN_BITS..=MAX_BITS)
+                .map(|b| (b, vec![0f32; l * out * (1usize << b)]))
+                .collect()
+        };
+
+        // short plane buffer
+        assert!(GroupStore::from_layer_major(&planes[..planes.len() - 1], l, out,
+                                             n_in, full_luts()).is_err());
+        // in_dim not a byte multiple
+        assert!(GroupStore::from_layer_major(&planes, l, out, 12, full_luts())
+            .is_err());
+        // short lut
+        let mut luts = full_luts();
+        luts.get_mut(&4).unwrap().pop();
+        assert!(GroupStore::from_layer_major(&planes, l, out, n_in, luts).is_err());
+        // missing lut
+        let mut luts = full_luts();
+        luts.remove(&5);
+        assert!(GroupStore::from_layer_major(&planes, l, out, n_in, luts).is_err());
+    }
+
+    /// Tier-sliced residency: a 4-bit slice serves 3–4 bits bit-identically
+    /// and refuses 5–6 bits with the typed residency error.
+    #[test]
+    fn slice_enforces_residency() {
         let s = toy_store();
-        assert!(s.validate().is_ok());
-
-        let mut truncated = toy_store();
-        truncated.planes.pop();
-        assert!(truncated.validate().is_err(), "short plane buffer accepted");
-
-        let mut ragged_in = toy_store();
-        ragged_in.in_dim = 12; // not a byte multiple
-        assert!(ragged_in.validate().is_err(), "in_dim % 8 != 0 accepted");
-
-        let mut bad_lut = toy_store();
-        bad_lut.luts.get_mut(&4).unwrap().pop();
-        assert!(bad_lut.validate().is_err(), "short lut accepted");
-
-        let mut missing_lut = toy_store();
-        missing_lut.luts.remove(&5);
-        assert!(missing_lut.validate().is_err(), "missing lut accepted");
+        let s4 = s.slice(4).unwrap();
+        assert_eq!(s4.max_bits(), 4);
+        for bits in [3u8, 4] {
+            assert_eq!(s.dequant(0, bits).unwrap().data,
+                       s4.dequant(0, bits).unwrap().data);
+        }
+        for bits in [5u8, 6] {
+            let err = s4.dequant(0, bits).unwrap_err();
+            assert!(err.to_string().contains("resident precision"), "{err}");
+        }
+        // refine beyond the slice is refused too
+        let mut codes = Codes::new();
+        s4.dequant_codes_into(0, 4, &mut codes).unwrap();
+        assert!(s4.refine_codes_into(0, &mut codes).is_err());
+        // a slice cannot widen
+        assert!(s4.slice(6).is_err());
+        assert!(s.slice(2).is_err());
+        assert!(s.slice(7).is_err());
+        // resident bytes shrink with the slice
+        assert!(s4.resident_plane_bytes() < s.resident_plane_bytes());
+        assert_eq!(s4.resident_lut_bytes(),
+                   (3..=4u8).map(|b| 2 * (1usize << b) * 4).sum::<usize>());
     }
 }

@@ -48,6 +48,12 @@ USAGE: dpllm <subcommand> [--flags]
   qos-sim    --model M [--requests N] [--budget B] [--util-max F]
   reassign   --model M --target T [--cap B]   (re-solve a static assignment
              from the Fisher sensitivities, Rust-side — no Python round trip)
+  pack       --model M [--out PATH]   (repack the legacy anyprec.npz into the
+             versioned anyprec.dpak container: 64-byte-aligned sections,
+             per-section + per-layer CRC digests, mmap zero-copy loads,
+             tier-sliced residency; serving prefers it automatically)
+  inspect    --file PATH | --model M   (verify every DPAK section + layer
+             digest and print the manifest summary as JSON)
   info       (artifact inventory)
 ";
 
@@ -65,6 +71,8 @@ pub fn run(args: &[String]) -> Result<()> {
         "eval-task" => eval_task(&rest),
         "qos-sim" => qos_sim(&rest),
         "reassign" => reassign(&rest),
+        "pack" => pack(&rest),
+        "inspect" => inspect(&rest),
         "info" => info(),
         other => bail!("unknown subcommand '{other}' (try 'help')"),
     }
@@ -335,6 +343,37 @@ fn reassign(args: &Args) -> Result<()> {
     for (i, chunk) in bits.chunks(7).enumerate() {
         println!("  block {i:>2}: {chunk:?}");
     }
+    Ok(())
+}
+
+/// `dpllm pack`: repack a model's legacy `anyprec.npz` into the DPAK
+/// container.  Loads the npz directly (NOT `ModelAssets::load`, which
+/// would prefer an existing `.dpak`) so repacking is idempotent.
+fn pack(args: &Args) -> Result<()> {
+    use crate::anyprec::{dpak, AnyPrecStore};
+    let model = args.get_or("model", "dpl-tiny");
+    let npz = art(&["models", &model, "anyprec.npz"]);
+    let out = args.get("out").map(String::from)
+        .unwrap_or_else(|| ModelAssets::dpak_path(&model));
+    let store = AnyPrecStore::load(&npz)?;
+    let meta = dpak::write(&store, &model, &out)?;
+    let bytes = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
+    println!("packed {npz} -> {out}");
+    println!("  model {} version {} max_bits {} ({:.1} MB)",
+             meta.model, meta.version, meta.max_bits, bytes as f64 / 1e6);
+    Ok(())
+}
+
+/// `dpllm inspect`: deep-verify a DPAK container (every section and
+/// per-layer digest) and print its manifest summary as JSON.
+fn inspect(args: &Args) -> Result<()> {
+    use crate::anyprec::dpak;
+    let path = match args.get("file") {
+        Some(p) => p.to_string(),
+        None => ModelAssets::dpak_path(&args.get_or("model", "dpl-tiny")),
+    };
+    let j = dpak::inspect(&path)?;
+    println!("{}", j.dump());
     Ok(())
 }
 

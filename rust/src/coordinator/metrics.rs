@@ -122,6 +122,9 @@ pub struct ReplicaStatus {
     pub active: usize,
     /// Replica-reported decode throughput EWMA (last heartbeat).
     pub tokens_per_s: f64,
+    /// Spawn→ready wall time from the replica's `Ready` event (0.0
+    /// until it has reported ready; refreshed after every respawn).
+    pub cold_start_ms: f64,
     pub steals_in: u64,
     pub steals_out: u64,
     pub respawns: u64,
@@ -144,6 +147,7 @@ pub fn replicas_json(rs: &[ReplicaStatus]) -> Json {
                     .set("inflight", r.inflight as i64)
                     .set("active", r.active as i64)
                     .set("tokens_per_s", r.tokens_per_s)
+                    .set("cold_start_ms", r.cold_start_ms)
                     .set("steals_in", r.steals_in as i64)
                     .set("steals_out", r.steals_out as i64)
                     .set("respawns", r.respawns as i64)
@@ -645,14 +649,14 @@ mod tests {
             ReplicaStatus {
                 id: 0, tier: "3.25,3.50".to_string(), premium: false,
                 alive: true, queue_depth: 3, inflight: 2, active: 2,
-                tokens_per_s: 120.5, steals_in: 0, steals_out: 4,
-                respawns: 0, done: 7,
+                tokens_per_s: 120.5, cold_start_ms: 850.0, steals_in: 0,
+                steals_out: 4, respawns: 0, done: 7,
             },
             ReplicaStatus {
                 id: 1, tier: "4.50,4.75".to_string(), premium: true,
                 alive: false, queue_depth: 0, inflight: 0, active: 0,
-                tokens_per_s: 0.0, steals_in: 4, steals_out: 0,
-                respawns: 1, done: 2,
+                tokens_per_s: 0.0, cold_start_ms: 0.0, steals_in: 4,
+                steals_out: 0, respawns: 1, done: 2,
             },
         ];
         let j = replicas_json(&rows);
@@ -660,6 +664,7 @@ mod tests {
         assert_eq!(arr.len(), 2);
         assert_eq!(arr[0].str_of("tier").unwrap(), "3.25,3.50");
         assert_eq!(arr[0].f64_of("queue_depth").unwrap(), 3.0);
+        assert_eq!(arr[0].f64_of("cold_start_ms").unwrap(), 850.0);
         assert_eq!(arr[0].f64_of("steals_out").unwrap(), 4.0);
         assert_eq!(arr[1].f64_of("respawns").unwrap(), 1.0);
         assert_eq!(arr[1].f64_of("id").unwrap(), 1.0);

@@ -284,6 +284,9 @@ struct ReplicaSlot {
     /// the wedge timer runs at `heartbeat_timeout` instead of
     /// `startup_timeout`.
     ready: bool,
+    /// Spawn→ready wall time reported by the worker's `Ready` event
+    /// (0.0 until it arrives; refreshed on every respawn).
+    cold_start_ms: f64,
     last_seen: Instant,
     health: ReplicaHealth,
     backlog: VecDeque<RoutedRequest>,
@@ -328,6 +331,7 @@ impl Router {
                     alive: true,
                     stopped: false,
                     ready: false,
+                    cold_start_ms: 0.0,
                     last_seen: now,
                     health: ReplicaHealth::default(),
                     backlog: VecDeque::new(),
@@ -473,7 +477,13 @@ impl Router {
                 self.replicas[i].last_seen = now;
                 self.replicas[i].ready = true;
                 match ev {
-                    ReplicaEvent::Ready => {}
+                    ReplicaEvent::Ready { cold_start_ms } => {
+                        self.replicas[i].cold_start_ms = cold_start_ms;
+                        global_tracer().record(EventKind::ColdStart {
+                            replica: i as u32,
+                            us: (cold_start_ms * 1e3) as u64,
+                        });
+                    }
                     ReplicaEvent::Heartbeat(h) => self.replicas[i].health = h,
                     ReplicaEvent::Done(o) => {
                         let rr = self.replicas[i].inflight.remove(&o.id);
@@ -706,6 +716,7 @@ impl Router {
                 inflight: r.inflight.len(),
                 active: r.health.active,
                 tokens_per_s: r.health.tokens_per_s,
+                cold_start_ms: r.cold_start_ms,
                 steals_in: r.steals_in,
                 steals_out: r.steals_out,
                 respawns: r.respawns,
@@ -1194,7 +1205,9 @@ mod tests {
             // "Loads" for 200 ms before Ready, then idles silently.
             let join = std::thread::spawn(move || {
                 std::thread::sleep(Duration::from_millis(200));
-                let _ = ev_tx.send(ReplicaEvent::Ready);
+                let _ = ev_tx.send(ReplicaEvent::Ready {
+                    cold_start_ms: 200.0,
+                });
                 loop {
                     match cmd_rx.recv() {
                         Ok(ReplicaCommand::Shutdown) | Err(_) => return,

@@ -273,6 +273,11 @@ pub struct ServingEngine {
     assets: Arc<ModelAssets>,
     manifest: Manifest,
     budget: u32,
+    /// Wall time [`ServingEngine::load_shared`] took to go from shared
+    /// assets to a servable adaptation set (session builds + TPOT
+    /// calibration) — the per-replica cold-start cost the fleet metrics
+    /// row and flight recorder surface.
+    pub cold_start_ms: f64,
 }
 
 impl ServingEngine {
@@ -291,8 +296,28 @@ impl ServingEngine {
     /// per-engine: PJRT buffers are per-client and `!Send`.
     pub fn load_shared(rt: &Arc<Runtime>, assets: Arc<ModelAssets>,
                        budget: u32, tags: &[&str]) -> Result<ServingEngine> {
+        let t0 = Instant::now();
         let manifest = Manifest::load()?;
         let tokenizer = Tokenizer::load(&art(&["data", "tokenizer.json"]))?;
+        // Resolve every tag's config first (cheap — no sessions, no
+        // device) to learn the highest bitwidth this adaptation set ever
+        // dequantizes, then serve from a tier-sliced store view: an
+        // economy-tier engine keeps only the planes it needs reachable.
+        // The container mapping stays shared across replicas either way
+        // (slicing clones Arcs; no weight bytes move).  A later
+        // `reconfigure` to a tag above the slice fails with the typed
+        // residency error — boot the replica with that tag in scope
+        // instead.
+        let mut needed = crate::anyprec::MIN_BITS;
+        for tag in tags {
+            let m = Method::Dpllm { tag: tag.to_string() };
+            needed = needed.max(engine_config_for(&assets, budget, &m)?.max_bits());
+        }
+        let assets = if needed < assets.store.max_bits() {
+            Arc::new(assets.sliced(needed)?)
+        } else {
+            assets
+        };
         let weights = DecodeSession::fresh_weight_cache();
         let mut sessions = BTreeMap::new();
         let mut targets = Vec::new();
@@ -341,6 +366,7 @@ impl ServingEngine {
             assets,
             manifest,
             budget,
+            cold_start_ms: t0.elapsed().as_secs_f64() * 1e3,
         })
     }
 
@@ -376,8 +402,26 @@ impl ServingEngine {
     /// bytes + KV pool bytes and budgets, one object (surfaced in
     /// `counters_json`, `GET /metrics` and the serve examples).
     pub fn memory_json(&self) -> Json {
-        memory_json(&self.weights.borrow().snapshot(),
-                    &self.kv_pool.borrow().stats())
+        let mut j = memory_json(&self.weights.borrow().snapshot(),
+                                &self.kv_pool.borrow().stats());
+        // Host-side packed-store residency: how the weight container got
+        // into memory (mmap vs copy) and how much of the precision ladder
+        // this engine keeps reachable.
+        let st = self.assets.store.stats();
+        let mut store = Json::obj();
+        store.set("mapped", st.mapped);
+        store.set("plane_bytes_mapped", st.plane_bytes_mapped as f64);
+        store.set("plane_bytes_copied", st.plane_bytes_copied as f64);
+        store.set("lut_bytes_mapped", st.lut_bytes_mapped as f64);
+        store.set("lut_bytes_copied", st.lut_bytes_copied as f64);
+        store.set("load_ms", st.load_ms);
+        store.set("resident_max_bits", self.assets.store.max_bits() as usize);
+        if let Some(meta) = self.assets.store.meta() {
+            store.set("model", meta.model.as_str());
+            store.set("version", meta.version.as_str());
+        }
+        j.set("store", store);
+        j
     }
 
     /// One serialized snapshot of every runtime counter family —

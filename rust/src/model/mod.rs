@@ -221,7 +221,9 @@ impl Manifest {
 /// Everything needed to instantiate a serving engine for one model.
 pub struct ModelAssets {
     pub cfg: ModelConfig,
-    pub nl: NonLinearParams,
+    /// Arc'd so tier-sliced views ([`ModelAssets::sliced`]) share the fp32
+    /// non-linear parameters instead of re-reading the checkpoint.
+    pub nl: Arc<NonLinearParams>,
     /// Shared with every [`crate::runtime::decode::DecodeSession`] built
     /// from these assets — precision rebinds re-dequantize from it long
     /// after the assets themselves are dropped.
@@ -229,15 +231,46 @@ pub struct ModelAssets {
 }
 
 impl ModelAssets {
+    /// Load a model's assets, preferring the packed `anyprec.dpak`
+    /// container (mmap, zero plane-byte copies, digest-verified) and
+    /// falling back to the legacy `anyprec.npz`.  DPAK loads pass the
+    /// version gate: a container packed for a different model is a typed
+    /// refusal ([`crate::anyprec::DpakError::VersionGate`]), not a serve
+    /// of foreign weights.
     pub fn load(name: &str) -> Result<ModelAssets> {
         let cfg = ModelConfig::load(name)?;
         let nl = NonLinearParams::load(name, &cfg)?;
-        let store = AnyPrecStore::load(&art(&["models", name, "anyprec.npz"]))?;
+        let dpak = art(&["models", name, "anyprec.dpak"]);
+        let store = if Path::new(&dpak).exists() {
+            let store = AnyPrecStore::load_dpak(&dpak)?;
+            let meta = store.meta().expect("dpak loads carry meta");
+            crate::anyprec::dpak::check_version_gate(meta, name, None)?;
+            store
+        } else {
+            AnyPrecStore::load(&art(&["models", name, "anyprec.npz"]))?
+        };
         if store.n_layers() != cfg.n_layers {
             bail!("anyprec store layers {} != config {}", store.n_layers(),
                   cfg.n_layers);
         }
-        Ok(ModelAssets { cfg, nl, store: Arc::new(store) })
+        Ok(ModelAssets { cfg, nl: Arc::new(nl), store: Arc::new(store) })
+    }
+
+    /// A tier-sliced view sharing this asset set's nl params and container
+    /// mapping, but holding only planes/LUTs ≤ `max_bits` reachable — what
+    /// an economy-tier replica boots from.  Cheap: Arc clones, no weight
+    /// bytes move.
+    pub fn sliced(&self, max_bits: u8) -> Result<ModelAssets> {
+        Ok(ModelAssets {
+            cfg: self.cfg.clone(),
+            nl: self.nl.clone(),
+            store: Arc::new(self.store.slice(max_bits)?),
+        })
+    }
+
+    /// Path a packed container for this model would live at.
+    pub fn dpak_path(name: &str) -> String {
+        art(&["models", name, "anyprec.dpak"])
     }
 }
 

@@ -91,6 +91,10 @@ pub enum EventKind {
     Drain { replica: u32, inflight: u32, backlog: u32 },
     /// The drained replica respawned.
     Respawn { replica: u32 },
+    /// A replica reported ready; `us` is its spawn→ready wall time
+    /// (runtime init + engine load + TPOT calibration), so drain→
+    /// respawn→cold-start spans are readable off the fleet track.
+    ColdStart { replica: u32, us: u64 },
 }
 
 impl EventKind {
@@ -114,6 +118,7 @@ impl EventKind {
             EventKind::Forward { .. } => "forward",
             EventKind::Drain { .. } => "drain",
             EventKind::Respawn { .. } => "respawn",
+            EventKind::ColdStart { .. } => "cold_start",
         }
     }
 
@@ -138,6 +143,7 @@ impl EventKind {
             EventKind::Forward { replica, .. } => (PID_FLEET, replica as u64),
             EventKind::Drain { replica, .. } => (PID_FLEET, replica as u64),
             EventKind::Respawn { replica } => (PID_FLEET, replica as u64),
+            EventKind::ColdStart { replica, .. } => (PID_FLEET, replica as u64),
         }
     }
 
@@ -215,6 +221,10 @@ impl EventKind {
             }
             EventKind::Respawn { replica } => {
                 a.set("replica", replica as i64);
+            }
+            EventKind::ColdStart { replica, us } => {
+                a.set("replica", replica as i64)
+                    .set("cold_start_ms", us as f64 / 1e3);
             }
         }
         a

@@ -93,8 +93,11 @@ pub enum ReplicaCommand {
 
 /// Replica → router.  Plain data only.
 pub enum ReplicaEvent {
-    /// Engine loaded; the replica is accepting work.
-    Ready,
+    /// Engine loaded; the replica is accepting work.  Carries the
+    /// spawn→ready wall time (runtime init + session builds + TPOT
+    /// calibration) so the router can surface per-replica cold-start
+    /// cost in `/metrics` and the flight recorder.
+    Ready { cold_start_ms: f64 },
     /// Periodic liveness + load signal.
     Heartbeat(ReplicaHealth),
     /// A request finished (terminal).
@@ -230,6 +233,7 @@ fn run_engine_replica(
     tx: Sender<ReplicaEvent>,
 ) {
     let mut guard = PanicGuard::new(tx.clone());
+    let t0 = Instant::now();
     let rt = match Runtime::new() {
         Ok(rt) => Arc::new(rt),
         Err(e) => {
@@ -259,7 +263,9 @@ fn run_engine_replica(
     let mut util = UtilizationSim::new(spec.id as u64 * 7919 + 13, 0.5);
     let mut hb = HeartbeatClock::new(spec.heartbeat_ms);
     let mut tokens_total = 0u64;
-    let _ = tx.send(ReplicaEvent::Ready);
+    let _ = tx.send(ReplicaEvent::Ready {
+        cold_start_ms: t0.elapsed().as_secs_f64() * 1e3,
+    });
     loop {
         // Ingest commands.  Block briefly only when fully idle, so an
         // idle replica still heartbeats instead of looking wedged.
@@ -494,7 +500,12 @@ pub mod sim {
         let mut hb = HeartbeatClock::new(spec.heartbeat_ms);
         let mut tokens_total = 0u64;
         let mut rejected_once = false;
-        let _ = tx.send(ReplicaEvent::Ready);
+        // Sim workers are ready the instant they spawn; report the
+        // simulated per-token cost as a stand-in cold-start so the
+        // router/metrics plumbing is exercised with a nonzero value.
+        let _ = tx.send(ReplicaEvent::Ready {
+            cold_start_ms: profile.token_us as f64 / 1e3,
+        });
         loop {
             let mut shutdown = false;
             loop {

@@ -125,7 +125,7 @@ impl AssignProblem {
 /// re-walking all planes per candidate — the 4-candidate sweep costs one
 /// full dequant plus three single-plane passes.
 pub fn problem_from_artifacts(model: &str) -> Result<AssignProblem> {
-    use crate::anyprec::GROUPS;
+    use crate::anyprec::{Codes, GROUPS};
     use crate::model::{art, ModelAssets};
     use crate::util::npz::load_npz;
 
@@ -134,7 +134,7 @@ pub fn problem_from_artifacts(model: &str) -> Result<AssignProblem> {
     let ckpt = load_npz(&art(&["models", model, "ckpt.npz"]))?;
     let mut omega = Vec::new();
     let mut m = Vec::new();
-    let mut codes: Vec<u8> = Vec::new();
+    let mut codes = Codes::new();
     let mut dq: Vec<f32> = Vec::new();
     for layer in 0..assets.cfg.n_layers {
         for g in GROUPS {
@@ -144,13 +144,12 @@ pub fn problem_from_artifacts(model: &str) -> Result<AssignProblem> {
             let n = store.out_dim * store.in_dim;
             let w_l = &w[layer * n..(layer + 1) * n];
             let f_l = &f[layer * n..(layer + 1) * n];
-            codes.resize(n, 0);
             dq.resize(n, 0.0);
             store.dequant_codes_into(layer, BITS[0], &mut codes)?;
             let mut row = [0f64; 4];
             for (bi, &b) in BITS.iter().enumerate() {
                 if b > BITS[0] {
-                    store.refine_codes_into(layer, b - 1, &mut codes)?;
+                    store.refine_codes_into(layer, &mut codes)?;
                 }
                 store.lut_map_into(layer, b, &codes, &mut dq)?;
                 row[bi] = w_l.iter().zip(&dq).zip(f_l)

@@ -58,6 +58,21 @@ pub struct EngineConfig {
 }
 
 impl EngineConfig {
+    /// Highest bitwidth any stack of this configuration dequantizes
+    /// (low/high candidates and prefill) — the precision residency this
+    /// config needs from the weight store.  A serving engine whose whole
+    /// adaptation set needs less than 6 bits can boot from a tier-sliced
+    /// store view and never touch the upper planes.
+    pub fn max_bits(&self) -> u8 {
+        self.wl_bits
+            .iter()
+            .chain(&self.wh_bits)
+            .chain(&self.prefill_bits)
+            .copied()
+            .max()
+            .unwrap_or(crate::anyprec::MAX_BITS)
+    }
+
     /// Build from a DP-LLM calibration config (dynamic selection active).
     pub fn from_dpllm(cfg: &ModelConfig, dp: &DpllmConfig,
                       maxprec: &[u8]) -> Result<EngineConfig> {

@@ -1,0 +1,109 @@
+//! CRC-32 (IEEE, reflected) — the integrity digest of the DPAK container
+//! and the member checksum of the hand-rolled zip writer in
+//! [`crate::util::npz`].
+//!
+//! Chosen over a cryptographic hash deliberately: the threat model is
+//! *corruption* (truncated copies, flipped bits on disk or in transit),
+//! not adversaries, and CRC-32 detects every single-bit error and every
+//! burst ≤ 32 bits.  The same polynomial is available as `zlib.crc32` on
+//! the Python side, so `python/compile/pack.py` and the Rust loader agree
+//! byte-for-byte without either side shipping a hash dependency.
+
+/// Table-driven CRC-32 with the reflected IEEE polynomial 0xEDB88320
+/// (the zlib/zip/PNG CRC).
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// Streaming CRC-32 state (for digesting large sections chunk-wise).
+#[derive(Debug, Clone, Copy)]
+pub struct Crc32(u32);
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32(0xFFFF_FFFF)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut c = self.0;
+        for &b in bytes {
+            c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.0 = c;
+    }
+
+    pub fn finish(self) -> u32 {
+        self.0 ^ 0xFFFF_FFFF
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Crc32 {
+        Crc32::new()
+    }
+}
+
+/// One-shot CRC-32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+/// The digest string format used in DPAK manifests: `crc32:xxxxxxxx`.
+pub fn digest_str(bytes: &[u8]) -> String {
+    format!("crc32:{:08x}", crc32(bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Known vectors — the same values `zlib.crc32` produces, pinning the
+    /// cross-language contract with `python/compile/pack.py`.
+    #[test]
+    fn known_vectors() {
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"),
+                   0x414F_A339);
+        assert_eq!(digest_str(b"123456789"), "crc32:cbf43926");
+    }
+
+    #[test]
+    fn streaming_matches_oneshot() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let mut c = Crc32::new();
+        for chunk in data.chunks(97) {
+            c.update(chunk);
+        }
+        assert_eq!(c.finish(), crc32(&data));
+    }
+
+    #[test]
+    fn single_bit_flip_detected() {
+        let data: Vec<u8> = (0..1024u32).map(|i| (i * 7) as u8).collect();
+        let base = crc32(&data);
+        for byte in [0usize, 511, 1023] {
+            for bit in 0..8 {
+                let mut flipped = data.clone();
+                flipped[byte] ^= 1 << bit;
+                assert_ne!(crc32(&flipped), base, "byte {byte} bit {bit}");
+            }
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! Read-only memory-mapped files for zero-copy artifact loading.
+//!
+//! The DPAK loader ([`crate::anyprec::dpak`]) maps the container once and
+//! hands every plane/LUT section out as a borrowed range of the mapping,
+//! so N replicas share one physical copy of the weight store
+//! (`Arc<Mmap>` refcount == number of live views).  The wrapper is
+//! deliberately minimal: read-only, whole-file, private mapping — no
+//! write-back, no partial maps, no unsafe surface beyond construction.
+//!
+//! On non-Unix targets (no `mmap(2)`) the same type degrades to an owned
+//! read of the file: callers still share one buffer via the `Arc`, they
+//! just lose the lazy paging ([`Mmap::is_mapped`] reports which mode is
+//! active; the [`crate::anyprec::LoadStats`] counters surface it).
+
+use std::fs::File;
+use std::ops::Deref;
+
+use anyhow::{Context, Result};
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(addr: *mut c_void, len: usize, prot: i32, flags: i32,
+                    fd: i32, offset: i64) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+enum Backing {
+    /// A live `mmap(2)` region (unmapped on drop).
+    #[cfg(unix)]
+    Map { ptr: *const u8, len: usize },
+    /// Fallback: the file read into memory (non-Unix, or zero-length
+    /// files, which `mmap` rejects with EINVAL).
+    Owned(Vec<u8>),
+}
+
+/// A read-only view of a whole file, memory-mapped where the platform
+/// allows it.
+pub struct Mmap {
+    backing: Backing,
+}
+
+// SAFETY: the mapping is PROT_READ + MAP_PRIVATE over a file we opened
+// read-only and never mutate through this handle; an immutable byte
+// region is safe to share and send across threads.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only (or read it, on platforms without `mmap`).
+    pub fn open(path: &str) -> Result<Mmap> {
+        let file = File::open(path).with_context(|| format!("opening {path}"))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat {path}"))?
+            .len() as usize;
+        Mmap::from_file(&file, len, path)
+    }
+
+    #[cfg(unix)]
+    fn from_file(file: &File, len: usize, path: &str) -> Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            return Ok(Mmap { backing: Backing::Owned(Vec::new()) });
+        }
+        // SAFETY: fd is a valid open file descriptor for the duration of
+        // the call; we request a fresh address (addr = null), a private
+        // read-only mapping, and check for MAP_FAILED before using it.
+        let ptr = unsafe {
+            sys::mmap(std::ptr::null_mut(), len, sys::PROT_READ,
+                      sys::MAP_PRIVATE, file.as_raw_fd(), 0)
+        };
+        if ptr as isize == -1 {
+            // mmap can legitimately fail (e.g. special filesystems);
+            // degrade to an owned read rather than erroring.
+            let data = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+            return Ok(Mmap { backing: Backing::Owned(data) });
+        }
+        Ok(Mmap { backing: Backing::Map { ptr: ptr as *const u8, len } })
+    }
+
+    #[cfg(not(unix))]
+    fn from_file(_file: &File, _len: usize, path: &str) -> Result<Mmap> {
+        let data = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+        Ok(Mmap { backing: Backing::Owned(data) })
+    }
+
+    /// `true` when backed by a live kernel mapping (zero-copy, lazily
+    /// paged); `false` on the owned-read fallback.
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Map { .. } => true,
+            Backing::Owned(_) => false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Map { len, .. } => *len,
+            Backing::Owned(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Deref for Mmap {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(unix)]
+            // SAFETY: ptr/len describe a live PROT_READ mapping owned by
+            // self; it stays valid until Drop, and Deref borrows tie the
+            // slice lifetime to self.
+            Backing::Map { ptr, len } => unsafe {
+                std::slice::from_raw_parts(*ptr, *len)
+            },
+            Backing::Owned(v) => v,
+        }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Backing::Map { ptr, len } = self.backing {
+            // SAFETY: unmapping the exact region this handle mapped;
+            // Deref borrows cannot outlive self.
+            unsafe {
+                sys::munmap(ptr as *mut std::ffi::c_void, len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn tmp(name: &str) -> String {
+        std::env::temp_dir().join(name).to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn maps_file_contents() {
+        let path = tmp("dpllm_mmap_basic.bin");
+        let data: Vec<u8> = (0..4096u32).map(|i| (i % 251) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        let map = Mmap::open(&path).unwrap();
+        assert_eq!(map.len(), data.len());
+        assert_eq!(&map[..], &data[..]);
+        #[cfg(unix)]
+        assert!(map.is_mapped());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_ok() {
+        let path = tmp("dpllm_mmap_empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        let map = Mmap::open(&path).unwrap();
+        assert!(map.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn arc_sharing_counts_views() {
+        let path = tmp("dpllm_mmap_arc.bin");
+        std::fs::write(&path, vec![7u8; 128]).unwrap();
+        let map = Arc::new(Mmap::open(&path).unwrap());
+        let views: Vec<Arc<Mmap>> = (0..4).map(|_| map.clone()).collect();
+        assert_eq!(Arc::strong_count(&map), 5);
+        for v in &views {
+            assert_eq!(v[0], 7);
+        }
+        drop(views);
+        assert_eq!(Arc::strong_count(&map), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(Mmap::open("/nonexistent/dpllm_nope.bin").is_err());
+    }
+}

@@ -3,7 +3,9 @@
 //! a micro-bench harness and a tiny logger.
 
 pub mod cli;
+pub mod digest;
 pub mod json;
+pub mod mmap;
 pub mod npz;
 pub mod rng;
 pub mod stats;

@@ -1,15 +1,25 @@
-//! npz / npy reading (and npy writing) for artifact tensors.
+//! npz / npy reading and writing for artifact tensors.
 //!
 //! The Python build pipeline stores checkpoints / quantized weights /
-//! estimator stacks as uncompressed-or-deflated `.npz` (a zip of `.npy`
-//! members).  This module parses the npy header dialect numpy actually
+//! estimator stacks as **uncompressed** `.npz` (a zip of stored `.npy`
+//! members — `np.savez`, not `savez_compressed`; `io_utils.save_npz`
+//! pins this).  This module parses the npy header dialect numpy actually
 //! emits (v1.0/2.0, C-order) for the dtypes the pipeline uses: f32, f64,
-//! i64, i32, u16, u8, bool.
+//! i64, i32, u16, u8, bool — and reads/writes the zip container itself
+//! with a minimal stored-only (method 0) implementation, so the crate
+//! carries no zip dependency.
+//!
+//! Malformed archives fail with a typed [`NpzError`] naming the member
+//! and the reason (unsupported compression method, truncated data, bad
+//! container structure) instead of a generic parse failure — fleet boot
+//! surfaces *which* artifact is bad and why.
 
 use std::collections::BTreeMap;
-use std::io::Read;
+use std::fmt;
 
 use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::digest::crc32;
 
 /// A loaded array: shape + flat data in one of the supported dtypes.
 #[derive(Debug, Clone)]
@@ -189,23 +199,271 @@ fn dict_field<'a>(header: &'a str, key: &str) -> Result<&'a str> {
     Ok(rest)
 }
 
-/// Read every member of an `.npz` (zip) file.
+/// Why an `.npz` container could not be read.  Carried inside the
+/// `anyhow` chain so callers (and tests) can `downcast_ref::<NpzError>()`
+/// to branch on the exact failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NpzError {
+    /// No end-of-central-directory record — not a zip file at all.
+    NotZip,
+    /// A member is stored with a compression method this reader does not
+    /// implement (the pipeline writes method 0 / stored only).
+    UnsupportedCompression { member: String, method: u16 },
+    /// A member's data runs past the end of the file.
+    TruncatedMember { member: String, need: usize, have: usize },
+    /// The container structure itself is cut short or inconsistent
+    /// (central directory / local header out of bounds, bad signature).
+    BadContainer { detail: String },
+}
+
+impl fmt::Display for NpzError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NpzError::NotZip => {
+                write!(f, "not a zip archive (no end-of-central-directory record)")
+            }
+            NpzError::UnsupportedCompression { member, method } => {
+                let name = match method {
+                    8 => " (deflate)",
+                    12 => " (bzip2)",
+                    14 => " (lzma)",
+                    93 => " (zstd)",
+                    _ => "",
+                };
+                write!(
+                    f,
+                    "member '{member}': unsupported zip compression method \
+                     {method}{name} — the pipeline writes stored (method 0) \
+                     npz; re-save without compression"
+                )
+            }
+            NpzError::TruncatedMember { member, need, have } => {
+                write!(f, "member '{member}': truncated — wants {need} data bytes, \
+                           file has {have} past its header")
+            }
+            NpzError::BadContainer { detail } => {
+                write!(f, "corrupt zip container: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for NpzError {}
+
+fn u16_at(bytes: &[u8], off: usize) -> u16 {
+    u16::from_le_bytes([bytes[off], bytes[off + 1]])
+}
+
+fn u32_at(bytes: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]])
+}
+
+const EOCD_SIG: u32 = 0x0605_4B50;
+const CDIR_SIG: u32 = 0x0201_4B50;
+const LOCAL_SIG: u32 = 0x0403_4B50;
+
+/// Parse a stored-only zip archive into `(member name, data range)` pairs.
+/// Central-directory sizes are authoritative (local headers may defer
+/// sizes to a data descriptor, which numpy's writer uses when streaming).
+fn zip_members(bytes: &[u8]) -> Result<Vec<(String, std::ops::Range<usize>)>, NpzError> {
+    // EOCD: scan backwards over the (≤ 64 KiB) comment space.
+    if bytes.len() < 22 {
+        return Err(NpzError::NotZip);
+    }
+    let scan_from = bytes.len().saturating_sub(22 + 0xFFFF);
+    let mut eocd = None;
+    for off in (scan_from..=bytes.len() - 22).rev() {
+        if u32_at(bytes, off) == EOCD_SIG {
+            eocd = Some(off);
+            break;
+        }
+    }
+    let eocd = eocd.ok_or(NpzError::NotZip)?;
+    let n_entries = u16_at(bytes, eocd + 10) as usize;
+    let cd_size = u32_at(bytes, eocd + 12) as usize;
+    let cd_off = u32_at(bytes, eocd + 16) as usize;
+    if n_entries == 0xFFFF || cd_off == 0xFFFF_FFFF {
+        return Err(NpzError::BadContainer { detail: "zip64 archives not supported".into() });
+    }
+    if cd_off.checked_add(cd_size).map(|end| end > bytes.len()).unwrap_or(true) {
+        return Err(NpzError::BadContainer {
+            detail: format!(
+                "central directory [{cd_off}, +{cd_size}) past end of file ({})",
+                bytes.len()
+            ),
+        });
+    }
+    let mut members = Vec::with_capacity(n_entries);
+    let mut off = cd_off;
+    for i in 0..n_entries {
+        if off + 46 > cd_off + cd_size || u32_at(bytes, off) != CDIR_SIG {
+            return Err(NpzError::BadContainer {
+                detail: format!("central directory entry {i} truncated or bad signature"),
+            });
+        }
+        let method = u16_at(bytes, off + 10);
+        let comp_size = u32_at(bytes, off + 20) as usize;
+        let uncomp_size = u32_at(bytes, off + 24) as usize;
+        let name_len = u16_at(bytes, off + 28) as usize;
+        let extra_len = u16_at(bytes, off + 30) as usize;
+        let comment_len = u16_at(bytes, off + 32) as usize;
+        let local_off = u32_at(bytes, off + 42) as usize;
+        if off + 46 + name_len > bytes.len() {
+            return Err(NpzError::BadContainer {
+                detail: format!("member name of entry {i} runs past end of file"),
+            });
+        }
+        let name = String::from_utf8_lossy(&bytes[off + 46..off + 46 + name_len]).into_owned();
+        if method != 0 {
+            return Err(NpzError::UnsupportedCompression { member: name, method });
+        }
+        if comp_size != uncomp_size {
+            return Err(NpzError::BadContainer {
+                detail: format!(
+                    "member '{name}': stored sizes disagree ({comp_size} != {uncomp_size})"
+                ),
+            });
+        }
+        // Local header gives the actual data offset (its name/extra
+        // fields may differ in length from the central directory's).
+        if local_off + 30 > bytes.len() || u32_at(bytes, local_off) != LOCAL_SIG {
+            return Err(NpzError::BadContainer {
+                detail: format!("member '{name}': local header at {local_off} invalid"),
+            });
+        }
+        let l_name = u16_at(bytes, local_off + 26) as usize;
+        let l_extra = u16_at(bytes, local_off + 28) as usize;
+        let data_off = local_off + 30 + l_name + l_extra;
+        if data_off + comp_size > bytes.len() {
+            return Err(NpzError::TruncatedMember {
+                member: name,
+                need: comp_size,
+                have: bytes.len().saturating_sub(data_off),
+            });
+        }
+        members.push((name, data_off..data_off + comp_size));
+        off += 46 + name_len + extra_len + comment_len;
+    }
+    Ok(members)
+}
+
+/// Read every member of an `.npz` (zip of `.npy`) file.
 pub fn load_npz(path: &str) -> Result<BTreeMap<String, NpyArray>> {
-    let f = std::fs::File::open(path).with_context(|| format!("opening {path}"))?;
-    let mut zip = zip::ZipArchive::new(f).with_context(|| format!("reading zip {path}"))?;
+    let bytes = std::fs::read(path).with_context(|| format!("opening {path}"))?;
+    let members = zip_members(&bytes)
+        .map_err(|e| anyhow!(e).context(format!("reading zip {path}")))?;
     let mut out = BTreeMap::new();
-    for i in 0..zip.len() {
-        let mut member = zip.by_index(i)?;
-        let name = member
-            .name()
-            .trim_end_matches(".npy")
-            .to_string();
-        let mut buf = Vec::with_capacity(member.size() as usize);
-        member.read_to_end(&mut buf)?;
-        let arr = parse_npy(&buf).with_context(|| format!("member '{name}' of {path}"))?;
+    for (full_name, range) in members {
+        let name = full_name.trim_end_matches(".npy").to_string();
+        let arr = parse_npy(&bytes[range])
+            .with_context(|| format!("member '{name}' of {path}"))?;
         out.insert(name, arr);
     }
     Ok(out)
+}
+
+/// Serialize one array into `.npy` bytes (the dtypes the pipeline packs).
+pub fn npy_bytes(shape: &[usize], data: &NpyData) -> Vec<u8> {
+    let (descr, payload): (&str, Vec<u8>) = match data {
+        NpyData::U8(v) => ("|u1", v.clone()),
+        NpyData::F32(v) => {
+            ("<f4", v.iter().flat_map(|x| x.to_le_bytes()).collect())
+        }
+        NpyData::F64(v) => {
+            ("<f8", v.iter().flat_map(|x| x.to_le_bytes()).collect())
+        }
+        NpyData::I64(v) => {
+            ("<i8", v.iter().flat_map(|x| x.to_le_bytes()).collect())
+        }
+        NpyData::I32(v) => {
+            ("<i4", v.iter().flat_map(|x| x.to_le_bytes()).collect())
+        }
+        NpyData::U16(v) => {
+            ("<u2", v.iter().flat_map(|x| x.to_le_bytes()).collect())
+        }
+        NpyData::Bool(v) => ("|b1", v.iter().map(|&b| b as u8).collect()),
+    };
+    let shape_s = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header =
+        format!("{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape_s}, }}");
+    let total = 10 + header.len() + 1;
+    let pad = (64 - total % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+    let mut bytes = Vec::with_capacity(10 + header.len() + payload.len());
+    bytes.extend_from_slice(b"\x93NUMPY\x01\x00");
+    bytes.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    bytes.extend_from_slice(header.as_bytes());
+    bytes.extend_from_slice(&payload);
+    bytes
+}
+
+/// Write a stored-only (method 0) `.npz`, byte-compatible with what
+/// `np.savez` emits — names gain the `.npy` suffix numpy uses.  Used by
+/// the differential round-trip tests and the cold-start bench to build
+/// legacy-path stores without Python in the loop.
+pub fn write_npz(path: &str, members: &[(&str, &[usize], NpyData)]) -> Result<()> {
+    let mut out: Vec<u8> = Vec::new();
+    let mut central: Vec<u8> = Vec::new();
+    let mut n = 0u16;
+    for (name, shape, data) in members {
+        let payload = npy_bytes(shape, data);
+        let full = format!("{name}.npy");
+        let crc = crc32(&payload);
+        let local_off = out.len() as u32;
+        let sz = payload.len() as u32;
+        // Local header: stored, no flags, zeroed DOS time.
+        out.extend_from_slice(&LOCAL_SIG.to_le_bytes());
+        out.extend_from_slice(&20u16.to_le_bytes()); // version needed
+        out.extend_from_slice(&0u16.to_le_bytes()); // flags
+        out.extend_from_slice(&0u16.to_le_bytes()); // method 0 = stored
+        out.extend_from_slice(&0u32.to_le_bytes()); // mod time+date
+        out.extend_from_slice(&crc.to_le_bytes());
+        out.extend_from_slice(&sz.to_le_bytes()); // compressed
+        out.extend_from_slice(&sz.to_le_bytes()); // uncompressed
+        out.extend_from_slice(&(full.len() as u16).to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes()); // extra len
+        out.extend_from_slice(full.as_bytes());
+        out.extend_from_slice(&payload);
+        // Central directory entry.
+        central.extend_from_slice(&CDIR_SIG.to_le_bytes());
+        central.extend_from_slice(&20u16.to_le_bytes()); // version made by
+        central.extend_from_slice(&20u16.to_le_bytes()); // version needed
+        central.extend_from_slice(&0u16.to_le_bytes()); // flags
+        central.extend_from_slice(&0u16.to_le_bytes()); // method
+        central.extend_from_slice(&0u32.to_le_bytes()); // mod time+date
+        central.extend_from_slice(&crc.to_le_bytes());
+        central.extend_from_slice(&sz.to_le_bytes());
+        central.extend_from_slice(&sz.to_le_bytes());
+        central.extend_from_slice(&(full.len() as u16).to_le_bytes());
+        central.extend_from_slice(&0u16.to_le_bytes()); // extra len
+        central.extend_from_slice(&0u16.to_le_bytes()); // comment len
+        central.extend_from_slice(&0u16.to_le_bytes()); // disk number
+        central.extend_from_slice(&0u16.to_le_bytes()); // internal attrs
+        central.extend_from_slice(&0u32.to_le_bytes()); // external attrs
+        central.extend_from_slice(&local_off.to_le_bytes());
+        central.extend_from_slice(full.as_bytes());
+        n += 1;
+    }
+    let cd_off = out.len() as u32;
+    let cd_size = central.len() as u32;
+    out.extend_from_slice(&central);
+    out.extend_from_slice(&EOCD_SIG.to_le_bytes());
+    out.extend_from_slice(&0u16.to_le_bytes()); // disk number
+    out.extend_from_slice(&0u16.to_le_bytes()); // cd start disk
+    out.extend_from_slice(&n.to_le_bytes()); // entries on disk
+    out.extend_from_slice(&n.to_le_bytes()); // entries total
+    out.extend_from_slice(&cd_size.to_le_bytes());
+    out.extend_from_slice(&cd_off.to_le_bytes());
+    out.extend_from_slice(&0u16.to_le_bytes()); // comment len
+    std::fs::write(path, out).with_context(|| format!("writing {path}"))
 }
 
 /// Write a single f32 `.npy` file (used by tests and debug dumps).
@@ -277,5 +535,121 @@ mod tests {
     #[test]
     fn rejects_non_npy() {
         assert!(parse_npy(b"hello world, not npy").is_err());
+    }
+
+    fn tmp(name: &str) -> String {
+        std::env::temp_dir().join(name).to_string_lossy().into_owned()
+    }
+
+    fn sample_npz(path: &str) {
+        let planes: Vec<u8> = (0..48u32).map(|i| (i * 3) as u8).collect();
+        let lut: Vec<f32> = (0..16).map(|i| i as f32 * 0.25).collect();
+        write_npz(path, &[
+            ("planes_wq", &[2, 24][..], NpyData::U8(planes)),
+            ("lut3_wq", &[2, 8][..], NpyData::F32(lut)),
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn npz_roundtrip_stored_zip() {
+        let path = tmp("dpllm_npz_rt.npz");
+        sample_npz(&path);
+        let arrays = load_npz(&path).unwrap();
+        assert_eq!(arrays.len(), 2);
+        let p = &arrays["planes_wq"];
+        assert_eq!(p.shape, vec![2, 24]);
+        assert_eq!(p.as_u8().unwrap()[47], (47 * 3u32) as u8);
+        let l = &arrays["lut3_wq"];
+        assert_eq!(l.as_f32().unwrap()[15], 3.75);
+        std::fs::remove_file(&path).ok();
+    }
+
+    fn npz_error_of(path: &str) -> NpzError {
+        let err = load_npz(path).unwrap_err();
+        err.downcast_ref::<NpzError>()
+            .unwrap_or_else(|| panic!("expected NpzError, got: {err:#}"))
+            .clone()
+    }
+
+    /// A deflated member must name the member and the method — not fail
+    /// with a generic parse error.  Hand-built single-member archive with
+    /// method 8 in both headers.
+    #[test]
+    fn typed_error_on_compressed_member() {
+        let path = tmp("dpllm_npz_deflate.npz");
+        sample_npz(&path);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Patch method fields (offset 8 in local header at 0; offset 10 in
+        // the first central entry) from 0 to 8.
+        let cd = bytes.len() - 22;
+        let cd_off = u32_at(&bytes, cd + 16) as usize;
+        bytes[8] = 8; // local header method (first member starts at 0)
+        bytes[cd_off + 10] = 8; // central directory method
+        std::fs::write(&path, &bytes).unwrap();
+        match npz_error_of(&path) {
+            NpzError::UnsupportedCompression { member, method: 8 } => {
+                assert_eq!(member, "planes_wq.npy");
+            }
+            other => panic!("wrong error: {other}"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Truncating a member's data (while keeping the central directory
+    /// intact) must report the member and the byte shortfall.
+    #[test]
+    fn typed_error_on_truncated_member() {
+        let path = tmp("dpllm_npz_trunc.npz");
+        // Archive with the big member LAST so cutting its tail leaves the
+        // EOCD findable — emulate by rebuilding: write full file, then
+        // splice out bytes from the middle of the last member's data and
+        // shrink nothing else.  Simplest robust corruption: lie in the
+        // central directory that the member is bigger than the file.
+        sample_npz(&path);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let cd = bytes.len() - 22;
+        let cd_off = u32_at(&bytes, cd + 16) as usize;
+        // Inflate the first member's sizes to 16 MiB in the central dir.
+        let huge = (16u32 << 20).to_le_bytes();
+        bytes[cd_off + 20..cd_off + 24].copy_from_slice(&huge);
+        bytes[cd_off + 24..cd_off + 28].copy_from_slice(&huge);
+        std::fs::write(&path, &bytes).unwrap();
+        match npz_error_of(&path) {
+            NpzError::TruncatedMember { member, need, have } => {
+                assert_eq!(member, "planes_wq.npy");
+                assert_eq!(need, 16 << 20);
+                assert!(have < need);
+            }
+            other => panic!("wrong error: {other}"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn typed_error_on_non_zip() {
+        let path = tmp("dpllm_npz_notzip.npz");
+        std::fs::write(&path, b"definitely not a zip archive").unwrap();
+        assert_eq!(npz_error_of(&path), NpzError::NotZip);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Chopping the file mid-central-directory is a container-level error
+    /// (the EOCD points past the end).
+    #[test]
+    fn typed_error_on_truncated_container() {
+        let path = tmp("dpllm_npz_cut.npz");
+        sample_npz(&path);
+        let bytes = std::fs::read(&path).unwrap();
+        let cd = bytes.len() - 22;
+        // Keep the EOCD but drop 8 bytes of central directory before it.
+        let mut cut = bytes[..cd - 8].to_vec();
+        cut.extend_from_slice(&bytes[cd..]);
+        std::fs::write(&path, &cut).unwrap();
+        match npz_error_of(&path) {
+            NpzError::BadContainer { .. } => {}
+            other => panic!("wrong error: {other}"),
+        }
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -142,16 +142,20 @@ fn anyprec_kernel_matches_rust_dequant() {
             .unwrap();
         let exe = rt.load(&entry).unwrap();
         // layer 0 planes as [6, out, in/8] u8 literal + lut + x
+        // (the store is plane-major; reassemble this layer's plane stack)
         let (out_d, in_d) = (store.out_dim, store.in_dim);
         let bytes_in = in_d / 8;
-        let layer_planes = &store.planes[..6 * out_d * bytes_in];
+        let mut layer_planes = Vec::with_capacity(6 * out_d * bytes_in);
+        for p in 0..6 {
+            layer_planes.extend_from_slice(store.plane_layer(p, 0).unwrap());
+        }
         let planes_lit = xla::Literal::create_from_shape_and_untyped_data(
             xla::ElementType::U8,
             &[6, out_d, bytes_in],
-            layer_planes,
+            &layer_planes,
         )
         .unwrap();
-        let lut = &store.luts[&bits][..out_d * (1 << bits)];
+        let lut = &store.lut(bits).unwrap()[..out_d * (1 << bits)];
         let lut_lit = xla::Literal::vec1(lut)
             .reshape(&[out_d as i64, 1i64 << bits])
             .unwrap();
